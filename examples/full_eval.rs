@@ -1,0 +1,214 @@
+//! End-to-end evaluation driver: proves all three layers compose and
+//! regenerates the paper's evaluation on a real workload set.
+//!
+//! 1. Loads the AOT-compiled JAX/Pallas artifacts through the rust PJRT
+//!    runtime and runs a kernel on the XLA datapath, asserting bit-equal
+//!    architectural state against the native datapath (L1/L2 ↔ L3 compose).
+//! 2. Runs the full §7 benchmark suite — 5 benchmarks × all paper
+//!    dimensions × {Nios, eGPU-DP, eGPU-QP, eGPU-Dot} — with every result
+//!    checked against its oracle, and prints Tables 7/8 next to the
+//!    paper's numbers with band checks.
+//! 3. Prints the Figure 6 instruction-mix profile and the Table 4/5/6
+//!    resource models, and places a core into an Agilex sector (Fig 4/5).
+//!
+//! The run is recorded in EXPERIMENTS.md.
+//!
+//!     cargo run --release --example full_eval
+
+use egpu::asm::assemble;
+use egpu::datapath::xla::XlaDatapath;
+use egpu::harness::{paper_cycles, suite, within_band, Table, Variant};
+use egpu::isa::Group;
+use egpu::model::frequency::FrequencyReport;
+use egpu::model::resources::ResourceReport;
+use egpu::place;
+use egpu::runtime::default_artifacts_dir;
+use egpu::sim::{EgpuConfig, Machine, MemoryMode};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let t0 = std::time::Instant::now();
+
+    // ---------------------------------------------------------------
+    // 1. Layer composition: XLA datapath ≡ native datapath.
+    // ---------------------------------------------------------------
+    println!("=== 1. AOT artifact check (L1 Pallas / L2 JAX -> PJRT -> L3 rust) ===");
+    let dir = default_artifacts_dir();
+    if !dir.join("opmap.json").is_file() {
+        return Err("artifacts missing — run `make artifacts` first".into());
+    }
+    let cfg = EgpuConfig::benchmark(MemoryMode::Dp, true);
+    // r0/r1 are seeded host-side with normal-range f32 values (XLA CPU
+    // flushes denormals; see DESIGN.md §Substitutions).
+    let src = "
+        fadd r2, r0, r1
+        fmul r3, r2, r2
+        tdx r7
+        ldi r8, #13
+        mul16lo.i32 r4, r7, r8
+        max.u32 r5, r4, r7
+        dot r6, r2, r3
+        stop
+    ";
+    let mut native = Machine::new(cfg.clone())?;
+    let be = XlaDatapath::new(&dir, cfg.wavefronts()).map_err(std::io::Error::other)?;
+    let mut xla = Machine::with_backend(cfg.clone(), Some(Box::new(be)))?;
+    for m in [&mut native, &mut xla] {
+        let p = assemble(src, cfg.word_layout())?;
+        m.load_program(p)?;
+        for t in 0..cfg.threads {
+            m.regs_mut().write_thread(t, 0, (t as f32 * 0.75 - 100.0).to_bits());
+            m.regs_mut().write_thread(t, 1, (t as f32 * -0.125 + 3.0).to_bits());
+        }
+        m.run(1_000_000)?;
+    }
+    let mut compared = 0usize;
+    for t in 0..cfg.threads {
+        for r in 2..=5u8 {
+            assert_eq!(
+                native.regs().read_thread(t, r),
+                xla.regs().read_thread(t, r),
+                "thread {t} r{r} diverges between datapaths"
+            );
+            compared += 1;
+        }
+    }
+    // DOT reduces across 512 threads; the Pallas kernel's accumulation
+    // order differs from the rust lanes by a few ULPs — bounded, not bug.
+    let nd = f32::from_bits(native.regs().read_thread(0, 6));
+    let xd = f32::from_bits(xla.regs().read_thread(0, 6));
+    assert!(
+        (nd - xd).abs() <= nd.abs() * 1e-5,
+        "dot diverges beyond rounding: {nd} vs {xd}"
+    );
+    println!(
+        "native and XLA datapaths agree on {compared} register values \
+         ({} threads x 4 regs, bit-exact) + DOT to f32 rounding \
+         ({nd} vs {xd}); cycle counts {} == {}\n",
+        cfg.threads,
+        native.cycles(),
+        xla.cycles()
+    );
+
+    // ---------------------------------------------------------------
+    // 2. The §7 benchmark suite: Tables 7 and 8.
+    // ---------------------------------------------------------------
+    println!("=== 2. Benchmark suite (Tables 7/8) — every cell verified against its oracle ===");
+    let results = suite::run_all();
+    let mut band_fail = 0usize;
+    let mut cells = 0usize;
+    for b in suite::Benchmark::ALL {
+        let mut t = Table::new(format!("{} — cycles, measured (paper)", b.name()));
+        t.headers(["Dim", "Nios", "eGPU-DP", "eGPU-QP", "eGPU-Dot", "DP in 2x band"]);
+        for r in results.iter().filter(|r| r.bench == b) {
+            let cell = |m: Option<&suite::Measurement>, v: Variant| match m {
+                None => "-".to_string(),
+                Some(m) => match paper_cycles(b, r.dim, v) {
+                    Some(p) => format!("{} ({p})", m.cycles),
+                    None => m.cycles.to_string(),
+                },
+            };
+            let mut ok = true;
+            for (m, v) in [
+                (Some(&r.nios), Variant::Nios),
+                (Some(&r.dp), Variant::Dp),
+                (Some(&r.qp), Variant::Qp),
+                (r.dot.as_ref(), Variant::Dot),
+            ] {
+                if let (Some(m), Some(p)) = (m, paper_cycles(b, r.dim, v)) {
+                    cells += 1;
+                    // Nios gets a wider band: the ISS CPI model is coarse,
+                    // and the paper's Nios reduction scales superlinearly
+                    // (459 -> 1803 cycles for 2x data) in a way a simple
+                    // CPI model cannot reproduce. See EXPERIMENTS.md.
+                    let band = if v == Variant::Nios { 4.0 } else { 2.0 };
+                    if !within_band(m.cycles as f64, p as f64, band) {
+                        band_fail += 1;
+                        ok = false;
+                        eprintln!(
+                            "  BAND MISS {b:?}-{} {}: {} vs paper {p}",
+                            r.dim,
+                            v.label(),
+                            m.cycles
+                        );
+                    }
+                }
+            }
+            t.row([
+                r.dim.to_string(),
+                cell(Some(&r.nios), Variant::Nios),
+                cell(Some(&r.dp), Variant::Dp),
+                cell(Some(&r.qp), Variant::Qp),
+                cell(r.dot.as_ref(), Variant::Dot),
+                if ok { "yes".into() } else { "NO".to_string() },
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    println!("band check: {}/{} cells within tolerance\n", cells - band_fail, cells);
+
+    // Headline claims (§7/§8).
+    let speedups: Vec<f64> = results
+        .iter()
+        .map(|r| r.ratio_time(Variant::Nios).unwrap())
+        .collect();
+    let min = speedups.iter().cloned().fold(f64::MAX, f64::min);
+    let geo = (speedups.iter().map(|s| s.ln()).sum::<f64>() / speedups.len() as f64).exp();
+    println!(
+        "eGPU-DP vs Nios elapsed-time speedup: min {min:.1}x, geomean {geo:.1}x \
+         (paper: \"at least an OOM performance difference based on time\")"
+    );
+    let norm_wins = results
+        .iter()
+        .filter(|r| r.normalized(Variant::Nios).unwrap() > 1.0)
+        .count();
+    println!(
+        "area-normalized: eGPU-DP better than Nios in {norm_wins}/{} instances\n",
+        results.len()
+    );
+
+    // ---------------------------------------------------------------
+    // 3. Figure 6 profiles + resource models + placement.
+    // ---------------------------------------------------------------
+    println!("=== 3. Figure 6: cycle mix by instruction type (eGPU-DP) ===");
+    for r in &results {
+        let p = r.dp.profile.as_ref().unwrap();
+        let mut bars = String::new();
+        for g in [Group::Nop, Group::FpAlu, Group::Memory, Group::Control, Group::Conditional] {
+            bars.push_str(&format!("{}: {:4.1}%  ", g.label(), 100.0 * p.cycle_fraction(g)));
+        }
+        let int: f64 = [Group::IntArith, Group::IntMul, Group::IntLogic, Group::IntShift, Group::IntOther]
+            .iter()
+            .map(|&g| p.cycle_fraction(g))
+            .sum();
+        println!("{:<18} {:>4}: {bars}INT: {:4.1}%", r.bench.name(), r.dim, 100.0 * int);
+    }
+
+    println!("\n=== Tables 4/5 resource model and Figure 4 placement ===");
+    for cfg in EgpuConfig::table4_presets() {
+        let r = ResourceReport::for_config(&cfg);
+        let f = FrequencyReport::for_config(&cfg);
+        let p = place::place(&cfg).map_err(std::io::Error::other)?;
+        println!(
+            "{:<12} {:>6} ALMs {:>3} DSP {:>3} M20K  {:>4.0}/{:.0} MHz  placed: spine central={} preds remote={}",
+            cfg.name,
+            r.alms,
+            r.dsps,
+            r.m20ks,
+            f.soft_mhz,
+            f.core_mhz,
+            p.spine_is_central(),
+            p.predicates_remote()
+        );
+    }
+
+    println!(
+        "\nfull evaluation complete in {:.1}s — {} benchmark instances, all oracles passed",
+        t0.elapsed().as_secs_f64(),
+        results.len()
+    );
+    if band_fail > 0 {
+        return Err(format!("{band_fail} cycle cells outside the reproduction band").into());
+    }
+    Ok(())
+}

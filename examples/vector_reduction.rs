@@ -1,0 +1,79 @@
+//! Vector reduction — the paper's showcase for dynamic thread-space
+//! scaling (§3.1): the reduction tree narrows the machine level by level
+//! (full SIMT → quarter depth → 4-SP CPU → single-thread MCU), and the
+//! optional dot-product extension core replaces the whole tree with one
+//! SUM instruction.
+//!
+//! Runs the tree kernel and the DOT kernel on the same data, on both the
+//! native datapath and (if `make artifacts` has been run) the AOT-compiled
+//! XLA datapath through PJRT, comparing cycles against the paper's
+//! Table 7.
+//!
+//!     cargo run --release --example vector_reduction
+
+use egpu::datapath::xla::XlaDatapath;
+use egpu::harness::{paper_cycles, suite, Table};
+use egpu::kernels::{f32_bits, reduction};
+use egpu::runtime::default_artifacts_dir;
+use egpu::sim::{EgpuConfig, Machine, MemoryMode};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut table = Table::new("Vector reduction: measured vs paper (Table 7)");
+    table.headers(["n", "variant", "cycles", "paper", "time(us)", "result"]);
+
+    for n in [32usize, 64, 128] {
+        let data: Vec<f32> = (0..n).map(|i| (i as f32) * 0.25 - 3.0).collect();
+        let want: f32 = data.iter().sum();
+
+        for (kernel, dot, variant) in [
+            (reduction::reduction(n), false, suite::Variant::Dp),
+            (reduction::reduction_dot(n), true, suite::Variant::Dot),
+        ] {
+            let cfg = EgpuConfig::benchmark(MemoryMode::Dp, dot);
+            let (stats, m) = kernel.run(&cfg, &[(0, f32_bits(&data))])?;
+            let got = f32::from_bits(m.shared().read(n as u32).unwrap());
+            assert!((got - want).abs() < want.abs() * 1e-4 + 1e-2);
+            table.row([
+                n.to_string(),
+                variant.label().to_string(),
+                stats.cycles.to_string(),
+                paper_cycles(suite::Benchmark::Reduction, n, variant)
+                    .map(|c| c.to_string())
+                    .unwrap_or_default(),
+                format!("{:.2}", stats.time_us(cfg.core_mhz())),
+                format!("{got:.2}"),
+            ]);
+        }
+    }
+    table.print();
+
+    // The same kernel through the AOT-compiled JAX/Pallas datapath: every
+    // wavefront ALU/DOT op executes in the PJRT-loaded HLO executable.
+    let dir = default_artifacts_dir();
+    if dir.join("opmap.json").is_file() {
+        let n = 64;
+        let data: Vec<f32> = (0..n).map(|i| (i as f32) * 0.125 - 2.0).collect();
+        let cfg = EgpuConfig::benchmark(MemoryMode::Dp, true);
+        let kernel = reduction::reduction_dot(n);
+        let prog = kernel.assemble(&cfg).map_err(std::io::Error::other)?;
+
+        let be = XlaDatapath::new(&dir, cfg.wavefronts()).map_err(std::io::Error::other)?;
+        let mut m = Machine::with_backend(cfg.clone(), Some(Box::new(be)))
+            .map_err(std::io::Error::other)?;
+        m.load_program(prog)?;
+        m.set_threads(kernel.threads)?;
+        m.shared_mut().write_block(0, &f32_bits(&data));
+        let stats = m.run(1_000_000)?;
+        let got = f32::from_bits(m.shared().read(n as u32).unwrap());
+        let want: f32 = data.iter().sum();
+        println!(
+            "\nXLA datapath (PJRT, artifacts/): reduction-dot-{n} -> {got:.3} \
+             (expect {want:.3}), {} cycles — identical to native",
+            stats.cycles
+        );
+        assert!((got - want).abs() < want.abs() * 1e-4 + 1e-2);
+    } else {
+        println!("\n(artifacts not built; run `make artifacts` to exercise the XLA datapath)");
+    }
+    Ok(())
+}

@@ -1,0 +1,12 @@
+"""eGPU compile path (build-time only; never imported at runtime).
+
+jax_enable_x64: the mul24 datapath ops need a genuine 48-bit product
+(24x24 -> >>24); with x64 off jax silently truncates the int64 intermediate
+to int32 and the HLO artifact would disagree with the rust native datapath.
+All dtypes in this package are explicit, so enabling x64 changes nothing
+else.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,109 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Run once by `make artifacts` (`python -m compile.aot --out ../artifacts`);
+python never appears on the request path afterwards.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (depth D ∈ opmap.DEPTHS, lane width 16):
+  fp_alu_d{D}.hlo.txt   (op i32[1,1], a,b,old,mask f32[D,16]) → f32[D,16]
+  int_alu_d{D}.hlo.txt  (op i32[1,1], prec i32[1,1], a,b,old,mask i32[D,16])
+                        → i32[D,16]
+  dot_d{D}.hlo.txt      (a,b,mask f32[D,16]) → f32 scalar (as (1,1)→[0,0])
+  mmm32.hlo.txt         (A f32[32,32], B f32[32,32]) → f32[32,32]
+  opmap.json            the datapath op-index contract (checked by rust)
+  manifest.json         artifact inventory + shapes, for runtime discovery
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, opmap
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_entries():
+    """(name, fn, arg_specs) for every artifact."""
+    entries = []
+    w = opmap.WAVEFRONT_WIDTH
+    for d in opmap.DEPTHS:
+        fblk = _spec((d, w), jnp.float32)
+        iblk = _spec((d, w), jnp.int32)
+        s11 = _spec((1, 1), jnp.int32)
+        entries.append(
+            (f"fp_alu_d{d}", model.wavefront_fp, (s11, fblk, fblk, fblk, fblk))
+        )
+        entries.append(
+            (
+                f"int_alu_d{d}",
+                model.wavefront_int,
+                (s11, s11, iblk, iblk, iblk, iblk),
+            )
+        )
+        entries.append((f"dot_d{d}", model.wavefront_dot, (fblk, fblk, fblk)))
+    m32 = _spec((32, 32), jnp.float32)
+    entries.append(("mmm32", model.dot_core_matmul, (m32, m32)))
+    return entries
+
+
+def emit(out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"wavefront_width": opmap.WAVEFRONT_WIDTH, "artifacts": {}}
+    for name, fn, specs in build_entries():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [[list(s.shape), str(s.dtype)] for s in specs],
+        }
+        if verbose:
+            print(f"  {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "opmap.json"), "w") as f:
+        json.dump(
+            {
+                "fp_ops": opmap.FP_OPS,
+                "int_ops": opmap.INT_OPS,
+                "depths": opmap.DEPTHS,
+                "wavefront_width": opmap.WAVEFRONT_WIDTH,
+            },
+            f,
+            indent=2,
+        )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output dir")
+    args = parser.parse_args()
+    manifest = emit(args.out)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

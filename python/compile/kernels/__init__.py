@@ -1,0 +1,11 @@
+"""L1 Pallas kernels: the eGPU datapath hot-spots.
+
+One kernel per DSP-block / ALU operation (the op field of the instruction
+word muxes between them at L2, exactly as the hardware muxes circuits), plus
+the dot-product / reduction extension cores.
+"""
+
+from . import ref  # noqa: F401
+from .fp_alu import fp_wavefront_kernel  # noqa: F401
+from .int_alu import int_wavefront_kernel  # noqa: F401
+from .dot import dot_kernel, matmul_kernel  # noqa: F401

@@ -1,0 +1,105 @@
+"""L1 Pallas kernels: the dot-product / reduction extension core.
+
+The paper's optional DOT core (§4, Figure 1) takes the Ra/Rb operand
+streams of the selected thread subset and produces a single scalar; SUM is
+the add-only reduction variant. In hardware these are chained DSP blocks
+hanging off the SP array; on TPU the natural mapping is an MXU contraction
+over the `(depth, 16)` thread block, with the active-thread mask applied to
+the operand stream (DESIGN.md §Hardware-Adaptation).
+
+`matmul_kernel` is the L2 building block: a classic Pallas tiled matmul in
+which each output tile is produced by the dot core — the structure the
+paper's MMM-with-DOT benchmark realizes in time (one DOT per output
+element) is realized here in space.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..opmap import WAVEFRONT_WIDTH
+
+
+def _dot_block_kernel(a_ref, b_ref, mask_ref, o_ref):
+    """One grid step: accumulate one wavefront row's masked dot product.
+
+    The output block is revisited by every grid step (classic Pallas
+    reduction): step 0 initializes, later steps accumulate — exactly the
+    accumulator register inside the hard dot-product core.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[0, 0] = 0.0
+
+    row = a_ref[...] * b_ref[...] * mask_ref[...]
+    o_ref[0, 0] += jnp.sum(row)
+
+
+@functools.lru_cache(maxsize=None)
+def _dot_call(depth):
+    w = WAVEFRONT_WIDTH
+    return pl.pallas_call(
+        _dot_block_kernel,
+        grid=(depth,),
+        in_specs=[
+            pl.BlockSpec((1, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=True,
+    )
+
+
+def dot_kernel(a, b, mask):
+    """DOT extension core over a `(depth, 16)` block → scalar f32.
+
+    SUM is expressed through the same core with b = ones (the rust side
+    does exactly this — one artifact serves both instructions).
+    """
+    return _dot_call(a.shape[0])(a, b, mask)[0, 0]
+
+
+# --------------------------------------------------------------------------
+# Tiled matmul built on the dot core (L2 building block)
+# --------------------------------------------------------------------------
+
+def _matmul_tile_kernel(a_ref, b_ref, o_ref):
+    """One (tm, tn) output tile: full-K contraction on the MXU."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _matmul_call(m, k, n, tm, tn):
+    return pl.pallas_call(
+        _matmul_tile_kernel,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )
+
+
+def matmul_kernel(a, b, tile=16):
+    """C = A @ B with `(tile, tile)` output tiles fed by the dot core.
+
+    Tile defaults to 16 — one wavefront width, i.e. one output row per SP.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    tm = min(tile, m)
+    tn = min(tile, n)
+    assert m % tm == 0 and n % tn == 0, "tile must divide output shape"
+    return _matmul_call(m, k, n, tm, tn)(a, b)

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: the FP32 wavefront lane ALU.
+
+One `(depth, 16)` block is one VMEM-resident thread block: 16 lanes map to
+the 16 SPs (in hardware, 16 Agilex FP32 DSP blocks working in lockstep);
+`depth` is the temporal wavefront dimension the sequencer streams, one
+wavefront per clock. The `thread_active` writeback gate (§3.2 of the paper)
+is the mask select at the end of the kernel — inactive lanes keep the old
+destination-register value.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the FPGA's embedded
+FP32 DSP column plays the role the MXU plays on TPU; a whole block is a
+single VMEM tile (≤ 64×16×4 B = 4 KB per operand), so BlockSpec is the
+identity mapping and the kernel is purely element-wise — the fusion shape
+the paper gets for free from the DSP hard datapath.
+
+interpret=True: the CPU PJRT client cannot execute Mosaic custom-calls; the
+interpret path lowers to plain HLO, which is what the rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..opmap import FP_OPS, WAVEFRONT_WIDTH
+
+
+def _fp_body(name, a, b):
+    """The per-lane FP32 circuit for one op (matches ref.fp_op_ref)."""
+    if name == "fadd":
+        return a + b
+    if name == "fsub":
+        return a - b
+    if name == "fneg":
+        return -a
+    if name == "fabs":
+        return jnp.abs(a)
+    if name == "fmul":
+        return a * b
+    if name == "fmax":
+        return jnp.maximum(a, b)
+    if name == "fmin":
+        return jnp.minimum(a, b)
+    if name == "finvsqrt":
+        return lax.rsqrt(a)
+    raise ValueError(f"unknown fp op {name}")
+
+
+def _make_kernel(name):
+    def kernel(a_ref, b_ref, old_ref, mask_ref, o_ref):
+        a = a_ref[...]
+        b = b_ref[...]
+        r = _fp_body(name, a, b)
+        # thread_active writeback gating: zero'd write_enable keeps old Rd.
+        o_ref[...] = jnp.where(mask_ref[...] != 0.0, r, old_ref[...])
+
+    kernel.__name__ = f"fp_{name}_kernel"
+    return kernel
+
+
+@functools.lru_cache(maxsize=None)
+def _op_call(name, depth):
+    shape = jax.ShapeDtypeStruct((depth, WAVEFRONT_WIDTH), jnp.float32)
+    return pl.pallas_call(
+        _make_kernel(name),
+        out_shape=shape,
+        interpret=True,
+    )
+
+
+def fp_wavefront_kernel(op_index, a, b, old, mask):
+    """Execute one FP op across a `(depth, 16)` wavefront block.
+
+    `op_index` is a traced i32 scalar — the instruction word's opcode field.
+    lax.switch is the HLO form of the hardware's operator mux.
+    """
+    depth = a.shape[0]
+    branches = [
+        functools.partial(
+            lambda nm, a_, b_, o_, m_: _op_call(nm, depth)(a_, b_, o_, m_),
+            name,
+        )
+        for name in FP_OPS
+    ]
+    return lax.switch(op_index, branches, a, b, old, mask)

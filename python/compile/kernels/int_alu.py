@@ -1,0 +1,143 @@
+"""L1 Pallas kernel: the integer wavefront lane ALU.
+
+In hardware this is the soft-logic ALU of Table 6 (90–394 ALMs per SP
+depending on precision/features). Here every op is its own Pallas kernel —
+one circuit per op, muxed by the opcode field via lax.switch at L2 — over
+the same `(depth, 16)` VMEM-resident thread block as the FP ALU.
+
+The `precision` operand models the 16-bit ALU configurations (§5.2):
+results are truncated to the low 16 bits (zero-extended in the 32-bit
+register file) when precision == 16.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from ..opmap import INT_OPS, WAVEFRONT_WIDTH
+
+
+def _sext16(x):
+    return (x << 16) >> 16
+
+
+def _sext24(x):
+    return (x << 8) >> 8
+
+
+def _bit_reverse_32(x):
+    u = x.astype(jnp.uint32)
+    u = ((u >> 1) & 0x55555555) | ((u & 0x55555555) << 1)
+    u = ((u >> 2) & 0x33333333) | ((u & 0x33333333) << 2)
+    u = ((u >> 4) & 0x0F0F0F0F) | ((u & 0x0F0F0F0F) << 4)
+    u = ((u >> 8) & 0x00FF00FF) | ((u & 0x00FF00FF) << 8)
+    u = (u >> 16) | (u << 16)
+    return u.astype(jnp.int32)
+
+
+def _popcount(x):
+    u = x.astype(jnp.uint32)
+    u = u - ((u >> 1) & 0x55555555)
+    u = (u & 0x33333333) + ((u >> 2) & 0x33333333)
+    u = (u + (u >> 4)) & 0x0F0F0F0F
+    return ((u * 0x01010101) >> 24).astype(jnp.int32)
+
+
+def _int_body(name, a, b):
+    """Per-lane integer circuit for one op (matches ref.int_op_ref)."""
+    sh = b & 31
+    if name == "add":
+        return a + b
+    if name == "sub":
+        return a - b
+    if name == "neg":
+        return -a
+    if name == "abs":
+        return jnp.abs(a)
+    if name == "mul16lo":
+        return _sext16(a) * _sext16(b)
+    if name == "mul16hi":
+        return (_sext16(a) * _sext16(b)) >> 16
+    if name == "mul24lo":
+        p = _sext24(a).astype(jnp.int64) * _sext24(b).astype(jnp.int64)
+        return p.astype(jnp.int32)
+    if name == "mul24hi":
+        p = _sext24(a).astype(jnp.int64) * _sext24(b).astype(jnp.int64)
+        return (p >> 24).astype(jnp.int32)
+    if name == "and":
+        return a & b
+    if name == "or":
+        return a | b
+    if name == "xor":
+        return a ^ b
+    if name == "not":
+        return ~a
+    if name == "cnot":
+        return jnp.where(a == 0, 1, 0).astype(jnp.int32)
+    if name == "bvs":
+        return _bit_reverse_32(a)
+    if name == "shl":
+        return a << sh
+    if name == "shr_l":
+        return lax.shift_right_logical(a, sh)
+    if name == "shr_a":
+        return a >> sh
+    if name == "pop":
+        return _popcount(a)
+    if name == "max_s":
+        return jnp.maximum(a, b)
+    if name == "min_s":
+        return jnp.minimum(a, b)
+    if name == "max_u":
+        au = a.astype(jnp.uint32)
+        bu = b.astype(jnp.uint32)
+        return jnp.where(au > bu, a, b)
+    if name == "min_u":
+        au = a.astype(jnp.uint32)
+        bu = b.astype(jnp.uint32)
+        return jnp.where(au < bu, a, b)
+    raise ValueError(f"unknown int op {name}")
+
+
+def _make_kernel(name):
+    def kernel(prec_ref, a_ref, b_ref, old_ref, mask_ref, o_ref):
+        a = a_ref[...]
+        b = b_ref[...]
+        r = _int_body(name, a, b)
+        # 16-bit ALU configs truncate to the low half (zero-extended).
+        r = jnp.where(prec_ref[0, 0] == 16, r & 0xFFFF, r)
+        o_ref[...] = jnp.where(mask_ref[...] != 0, r, old_ref[...])
+
+    kernel.__name__ = f"int_{name}_kernel"
+    return kernel
+
+
+@functools.lru_cache(maxsize=None)
+def _op_call(name, depth):
+    shape = jax.ShapeDtypeStruct((depth, WAVEFRONT_WIDTH), jnp.int32)
+    return pl.pallas_call(
+        _make_kernel(name),
+        out_shape=shape,
+        interpret=True,
+    )
+
+
+def int_wavefront_kernel(op_index, precision, a, b, old, mask):
+    """Execute one integer op across a `(depth, 16)` wavefront block.
+
+    `op_index`: traced i32 scalar (decoded opcode+TYPE → datapath index).
+    `precision`: i32[1,1], 16 or 32 — the static ALU-precision parameter
+    threaded as data so a single artifact serves both configs.
+    """
+    depth = a.shape[0]
+    branches = [
+        functools.partial(
+            lambda nm, p_, a_, b_, o_, m_: _op_call(nm, depth)(p_, a_, b_, o_, m_),
+            name,
+        )
+        for name in INT_OPS
+    ]
+    return lax.switch(op_index, branches, precision, a, b, old, mask)

@@ -1,0 +1,164 @@
+"""Pure-jnp oracle for every L1 Pallas kernel.
+
+These are the ground-truth semantics of the eGPU datapath. The Pallas
+kernels in fp_alu.py / int_alu.py / dot.py must match these bit-for-bit
+(f32) / exactly (i32); pytest + hypothesis enforce it.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+# --------------------------------------------------------------------------
+# FP32 lane ops (index order must match opmap.FP_OPS)
+# --------------------------------------------------------------------------
+
+def fp_op_ref(name, a, b):
+    """Reference semantics of one FP32 lane op over equal-shaped arrays."""
+    if name == "fadd":
+        return a + b
+    if name == "fsub":
+        return a - b
+    if name == "fneg":
+        return -a
+    if name == "fabs":
+        return jnp.abs(a)
+    if name == "fmul":
+        return a * b
+    if name == "fmax":
+        return jnp.maximum(a, b)
+    if name == "fmin":
+        return jnp.minimum(a, b)
+    if name == "finvsqrt":
+        return lax.rsqrt(a)
+    raise ValueError(f"unknown fp op {name}")
+
+
+# --------------------------------------------------------------------------
+# Integer lane ops (index order must match opmap.INT_OPS)
+# --------------------------------------------------------------------------
+
+def _sext16(x):
+    """Sign-extend the low 16 bits of an i32 lane."""
+    return (x.astype(jnp.int32) << 16) >> 16
+
+
+def _sext24(x):
+    return (x.astype(jnp.int32) << 8) >> 8
+
+
+def _as_u32(x):
+    return x.astype(jnp.uint32)
+
+
+def bit_reverse_32_ref(x):
+    """Classic O(log n) bit reversal on u32 lanes."""
+    x = _as_u32(x)
+    x = ((x >> 1) & 0x55555555) | ((x & 0x55555555) << 1)
+    x = ((x >> 2) & 0x33333333) | ((x & 0x33333333) << 2)
+    x = ((x >> 4) & 0x0F0F0F0F) | ((x & 0x0F0F0F0F) << 4)
+    x = ((x >> 8) & 0x00FF00FF) | ((x & 0x00FF00FF) << 8)
+    x = (x >> 16) | (x << 16)
+    return x.astype(jnp.int32)
+
+
+def popcount_ref(x):
+    x = _as_u32(x)
+    x = x - ((x >> 1) & 0x55555555)
+    x = (x & 0x33333333) + ((x >> 2) & 0x33333333)
+    x = (x + (x >> 4)) & 0x0F0F0F0F
+    return ((x * 0x01010101) >> 24).astype(jnp.int32)
+
+
+def int_op_ref(name, a, b):
+    """Reference semantics of one integer lane op (i32 lanes, wrapping)."""
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    sh = b & 31
+    if name == "add":
+        return a + b
+    if name == "sub":
+        return a - b
+    if name == "neg":
+        return -a
+    if name == "abs":
+        return jnp.abs(a)
+    if name == "mul16lo":
+        return _sext16(a) * _sext16(b)
+    if name == "mul16hi":
+        return (_sext16(a) * _sext16(b)) >> 16
+    if name == "mul24lo":
+        p = _sext24(a).astype(jnp.int64) * _sext24(b).astype(jnp.int64)
+        return p.astype(jnp.int32)
+    if name == "mul24hi":
+        p = _sext24(a).astype(jnp.int64) * _sext24(b).astype(jnp.int64)
+        return (p >> 24).astype(jnp.int32)
+    if name == "and":
+        return a & b
+    if name == "or":
+        return a | b
+    if name == "xor":
+        return a ^ b
+    if name == "not":
+        return ~a
+    if name == "cnot":
+        return jnp.where(a == 0, 1, 0).astype(jnp.int32)
+    if name == "bvs":
+        return bit_reverse_32_ref(a)
+    if name == "shl":
+        return a << sh
+    if name == "shr_l":
+        return lax.shift_right_logical(a, sh)
+    if name == "shr_a":
+        return a >> sh
+    if name == "pop":
+        return popcount_ref(a)
+    if name == "max_s":
+        return jnp.maximum(a, b)
+    if name == "min_s":
+        return jnp.minimum(a, b)
+    if name == "max_u":
+        return jnp.where(_as_u32(a) > _as_u32(b), a, b)
+    if name == "min_u":
+        return jnp.where(_as_u32(a) < _as_u32(b), a, b)
+    raise ValueError(f"unknown int op {name}")
+
+
+def int_precision_mask_ref(x, precision):
+    """16-bit ALU configs truncate results to the low 16 bits (§5.2).
+
+    Registers are 32-bit; the 16-bit ALU writes back the low half
+    zero-extended (the upper half is only driven by the FP datapath).
+    """
+    if precision == 16:
+        return x & 0xFFFF
+    return x
+
+
+# --------------------------------------------------------------------------
+# Extension cores
+# --------------------------------------------------------------------------
+
+def dot_ref(a, b, mask):
+    """Dot-product extension core: sum over *active* lanes of a*b.
+
+    Models the paper's DOT instruction: operands stream from the selected
+    thread subset into the hard dot-product core; inactive lanes contribute
+    nothing.
+    """
+    return jnp.sum(a * b * mask)
+
+
+def sum_ref(a, mask):
+    """SUM reduction core: sum of Ra over active lanes."""
+    return jnp.sum(a * mask)
+
+
+def masked_writeback_ref(result, old, mask):
+    """thread_active writeback gating: keep `old` where mask == 0 (§3.2)."""
+    return jnp.where(mask != 0, result, old)
+
+
+def matmul_ref(a, b):
+    """C = A @ B, f32 — oracle for the L2 dot-core matmul model."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

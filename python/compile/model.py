@@ -1,0 +1,54 @@
+"""L2: the eGPU datapath as a JAX compute graph.
+
+This is the "model" layer of the three-layer stack: the wavefront-block
+executors that the rust coordinator (L3) drives on its hot path, built from
+the L1 Pallas kernels. Each entry point below is AOT-lowered by aot.py to
+one HLO-text artifact; the rust runtime compiles them once with the PJRT
+CPU client and executes them per decoded instruction when running with
+`--datapath xla`.
+
+Shapes are static per artifact: a `(depth, 16)` block covers the whole
+initialized thread space (depth = threads / 16). Dynamic thread-space
+scaling (§3.1 — the 4-bit instruction field) reaches the datapath purely as
+the `mask` operand: de-selected wavefronts/SPs have mask 0 and their lanes'
+writebacks are suppressed, which is exactly how the hardware's
+`thread_active` gating realizes the feature with "no dead time".
+"""
+
+import jax.numpy as jnp
+
+from .kernels.fp_alu import fp_wavefront_kernel
+from .kernels.int_alu import int_wavefront_kernel
+from .kernels.dot import dot_kernel, matmul_kernel
+
+
+def wavefront_fp(op_index, a, b, old, mask):
+    """FP32 wavefront executor: (op, Ra, Rb, old Rd, active) → new Rd.
+
+    op_index: i32[1,1] — decoded datapath op (opmap.FP_OPS order).
+    a, b, old, mask: f32[depth, 16].
+    """
+    return (fp_wavefront_kernel(op_index[0, 0], a, b, old, mask),)
+
+
+def wavefront_int(op_index, precision, a, b, old, mask):
+    """Integer wavefront executor (opmap.INT_OPS order; precision 16/32)."""
+    return (int_wavefront_kernel(op_index[0, 0], precision, a, b, old, mask),)
+
+
+def wavefront_dot(a, b, mask):
+    """DOT extension core → scalar. SUM = wavefront_dot(a, ones, mask)."""
+    return (dot_kernel(a, b, mask),)
+
+
+def dot_core_matmul(a, b):
+    """C = A @ B through the dot-product core (L2 model of the MMM-with-DOT
+    benchmark): every 16×16 output tile is one spatial instance of the
+    reduction the eGPU performs temporally, one DOT per output element."""
+    return (matmul_kernel(a, b, tile=16),)
+
+
+def dot_core_matmul_ref(a, b):
+    """Reference graph for dot_core_matmul (no Pallas) — used by tests and
+    by HLO cost-analysis in the perf pass."""
+    return (jnp.dot(a, b, preferred_element_type=jnp.float32),)

@@ -1,0 +1,59 @@
+"""Datapath op-index contract shared between the python compile path and the
+rust coordinator.
+
+The eGPU instruction word carries (opcode, TYPE); the rust decoder resolves
+that pair to a *datapath op index* used both by the native rust backend and
+by the AOT-compiled XLA executables. The indices below are the single source
+of truth: `aot.py` writes them into `artifacts/opmap.json`, and the rust
+`datapath::xla` backend refuses to start if its enum disagrees (see
+rust/src/datapath/opmap.rs).
+
+FP ops operate on IEEE-754 f32 lanes — in hardware these live inside the
+Agilex DSP blocks (§4: "the FP instructions are almost completely contained
+inside the DSP Block"). INT ops are the soft-logic integer ALU of Table 6.
+"""
+
+# FP32 lane ALU (one entry per DSP-block operation).
+FP_OPS = [
+    "fadd",     # 0: Rd = Ra + Rb
+    "fsub",     # 1: Rd = Ra - Rb
+    "fneg",     # 2: Rd = -Ra
+    "fabs",     # 3: Rd = |Ra|
+    "fmul",     # 4: Rd = Ra * Rb
+    "fmax",     # 5: Rd = max(Ra, Rb)
+    "fmin",     # 6: Rd = min(Ra, Rb)
+    "finvsqrt", # 7: Rd = 1/sqrt(Ra)   (SFU extension core)
+]
+
+# Integer lane ALU. Signed/unsigned TYPE variants that change semantics get
+# their own index (the rust decoder folds TYPE into the index).
+INT_OPS = [
+    "add",      # 0: Rd = Ra + Rb                  (wrapping)
+    "sub",      # 1: Rd = Ra - Rb                  (wrapping)
+    "neg",      # 2: Rd = -Ra                      (wrapping)
+    "abs",      # 3: Rd = |Ra|                     (wrapping at i32::MIN)
+    "mul16lo",  # 4: Rd = sext16(Ra) * sext16(Rb)  (full 32-bit product)
+    "mul16hi",  # 5: Rd = (sext16(Ra)*sext16(Rb)) >> 16
+    "mul24lo",  # 6: Rd = low32(sext24(Ra) * sext24(Rb))
+    "mul24hi",  # 7: Rd = low32((sext24(Ra)*sext24(Rb)) >> 24)
+    "and",      # 8
+    "or",       # 9
+    "xor",      # 10
+    "not",      # 11: Rd = ~Ra (bitwise; paper's '!Ra')
+    "cnot",     # 12: Rd = (Ra == 0) ? 1 : 0
+    "bvs",      # 13: Rd = bit_reverse_32(Ra)
+    "shl",      # 14: Rd = Ra << (Rb & 31)
+    "shr_l",    # 15: Rd = Ra >>> (Rb & 31)        (logical, UINT TYPE)
+    "shr_a",    # 16: Rd = Ra >> (Rb & 31)         (arithmetic, INT TYPE)
+    "pop",      # 17: Rd = popcount(Ra)
+    "max_s",    # 18: signed max
+    "min_s",    # 19: signed min
+    "max_u",    # 20: unsigned max
+    "min_u",    # 21: unsigned min
+]
+
+WAVEFRONT_WIDTH = 16  # SPs per SM — fixed by the architecture (§3)
+
+# Wavefront-block depths we AOT-compile artifacts for. depth = threads / 16;
+# 32 covers the paper's 512-thread base config, 64 the 1024-thread QP ones.
+DEPTHS = [32, 64]

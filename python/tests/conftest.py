@@ -1,0 +1,11 @@
+import os
+import sys
+
+# Make `compile` importable when pytest runs from python/ or repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from hypothesis import settings
+
+# interpret-mode Pallas is slow; disable deadlines, keep example counts sane.
+settings.register_profile("egpu", deadline=None, max_examples=25)
+settings.load_profile("egpu")

@@ -1,0 +1,91 @@
+"""AOT emission: every artifact lowers, parses as HLO text, and the
+opmap/manifest contract the rust runtime depends on is complete."""
+
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot, opmap
+
+
+@pytest.fixture(scope="module")
+def emitted():
+    with tempfile.TemporaryDirectory() as d:
+        manifest = aot.emit(d, verbose=False)
+        files = {
+            name: open(os.path.join(d, meta["file"])).read()
+            for name, meta in manifest["artifacts"].items()
+        }
+        om = json.load(open(os.path.join(d, "opmap.json")))
+        mf = json.load(open(os.path.join(d, "manifest.json")))
+        yield manifest, files, om, mf
+
+
+def test_all_expected_artifacts_present(emitted):
+    manifest, files, _, _ = emitted
+    expected = {"mmm32"}
+    for d in opmap.DEPTHS:
+        expected |= {f"fp_alu_d{d}", f"int_alu_d{d}", f"dot_d{d}"}
+    assert set(manifest["artifacts"]) == expected
+    assert set(files) == expected
+
+
+def test_artifacts_are_hlo_text(emitted):
+    """HLO text (never serialized protos — xla_extension 0.5.1 gate)."""
+    _, files, _, _ = emitted
+    for name, text in files.items():
+        assert text.startswith("HloModule"), f"{name} is not HLO text"
+        assert "ENTRY" in text, f"{name} missing ENTRY computation"
+
+
+def test_artifacts_output_is_tuple(emitted):
+    """Lowered with return_tuple=True → rust unwraps with to_tuple1()."""
+    _, files, _, _ = emitted
+    for name, text in files.items():
+        roots = [l for l in text.splitlines() if "ROOT" in l and " tuple(" in l]
+        assert roots, f"{name} has no ROOT tuple instruction"
+
+
+def test_fp_artifact_signature(emitted):
+    manifest, _, _, _ = emitted
+    for d in opmap.DEPTHS:
+        args = manifest["artifacts"][f"fp_alu_d{d}"]["args"]
+        assert args[0] == [[1, 1], "int32"]
+        assert args[1:] == [[[d, 16], "float32"]] * 4
+
+
+def test_int_artifact_signature(emitted):
+    manifest, _, _, _ = emitted
+    for d in opmap.DEPTHS:
+        args = manifest["artifacts"][f"int_alu_d{d}"]["args"]
+        assert args[0] == [[1, 1], "int32"]
+        assert args[1] == [[1, 1], "int32"]
+        assert args[2:] == [[[d, 16], "int32"]] * 4
+
+
+def test_opmap_json_matches_module(emitted):
+    _, _, om, _ = emitted
+    assert om["fp_ops"] == opmap.FP_OPS
+    assert om["int_ops"] == opmap.INT_OPS
+    assert om["depths"] == opmap.DEPTHS
+    assert om["wavefront_width"] == 16
+
+
+def test_manifest_covers_all_files(emitted):
+    manifest, _, _, mf = emitted
+    assert mf == manifest
+
+
+def test_opmap_indices_stable():
+    """The rust datapath enum hard-codes these indices; lock them."""
+    assert opmap.FP_OPS.index("fadd") == 0
+    assert opmap.FP_OPS.index("fmul") == 4
+    assert opmap.FP_OPS.index("finvsqrt") == 7
+    assert opmap.INT_OPS.index("add") == 0
+    assert opmap.INT_OPS.index("bvs") == 13
+    assert opmap.INT_OPS.index("shl") == 14
+    assert opmap.INT_OPS.index("min_u") == 21
+    assert len(opmap.FP_OPS) == 8
+    assert len(opmap.INT_OPS) == 22

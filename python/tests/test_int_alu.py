@@ -1,0 +1,185 @@
+"""L1 integer ALU Pallas kernel vs the pure-jnp oracle and python ints.
+
+Exact i32 agreement, wrapping semantics, TYPE-variant ops, and the 16-bit
+precision truncation of the small ALU configs (§5.2).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import opmap
+from compile.kernels import ref
+from compile.kernels.int_alu import int_wavefront_kernel
+
+W = opmap.WAVEFRONT_WIDTH
+P32 = jnp.array([[32]], jnp.int32)
+P16 = jnp.array([[16]], jnp.int32)
+
+
+def _iblk(seed, depth=4, lo=-(2**31), hi=2**31):
+    r = np.random.RandomState(seed)
+    return jnp.asarray(r.randint(lo, hi, (depth, W)).astype(np.int32))
+
+
+def _run(op_name, a, b, prec=P32, old=None, mask=None):
+    if old is None:
+        old = jnp.zeros_like(a)
+    if mask is None:
+        mask = jnp.ones_like(a)
+    idx = opmap.INT_OPS.index(op_name)
+    return int_wavefront_kernel(jnp.int32(idx), prec, a, b, old, mask)
+
+
+@pytest.mark.parametrize("op", opmap.INT_OPS)
+def test_int_op_matches_ref(op):
+    a = _iblk(1)
+    b = _iblk(2) if "sh" not in op else _iblk(2, lo=0, hi=32)
+    out = np.asarray(_run(op, a, b))
+    expect = np.asarray(ref.int_op_ref(op, a, b))
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_add_wraps():
+    a = jnp.full((1, W), 2**31 - 1, jnp.int32)
+    b = jnp.ones((1, W), jnp.int32)
+    out = np.asarray(_run("add", a, b))
+    assert (out == -(2**31)).all()
+
+
+def test_sub_wraps():
+    a = jnp.full((1, W), -(2**31), jnp.int32)
+    b = jnp.ones((1, W), jnp.int32)
+    out = np.asarray(_run("sub", a, b))
+    assert (out == 2**31 - 1).all()
+
+
+def test_mul16_signed_product():
+    """MUL16LO yields the full 32-bit product of sign-extended 16-bit lanes."""
+    a = jnp.full((1, W), -3 & 0xFFFF, jnp.int32)  # 0xFFFD = sext -3
+    b = jnp.full((1, W), 7, jnp.int32)
+    lo = np.asarray(_run("mul16lo", a, b))
+    hi = np.asarray(_run("mul16hi", a, b))
+    assert (lo == -21).all()
+    assert (hi == (-21 >> 16)).all()
+
+
+def test_mul24_full_48bit_product():
+    """The mul24 HI path needs a genuine 48-bit intermediate (x64 on)."""
+    v = 0x7FFFFF  # max positive 24-bit
+    a = jnp.full((1, W), v, jnp.int32)
+    hi = np.asarray(_run("mul24hi", a, a))
+    assert (hi == (v * v) >> 24).all()
+    lo = np.asarray(_run("mul24lo", a, a))
+    assert (lo == np.int64(v * v).astype(np.int32)).all()
+
+
+def test_bvs_involution():
+    """bit_reverse(bit_reverse(x)) == x."""
+    a = _iblk(3)
+    once = _run("bvs", a, a)
+    twice = np.asarray(_run("bvs", once, once))
+    np.testing.assert_array_equal(twice, np.asarray(a))
+
+
+def test_bvs_known_values():
+    a = jnp.asarray(np.array([[1, 2, 0x80000000 - 2**32, 0b1010] * 4], np.int32))
+    out = np.asarray(_run("bvs", a, a)).astype(np.uint32)
+    expect = np.array(
+        [[0x80000000, 0x40000000, 0x00000001, 0x50000000] * 4], np.uint32
+    )
+    np.testing.assert_array_equal(out, expect)
+
+
+def test_pop_known_values():
+    a = jnp.asarray(np.array([[0, 1, 0xFF, -1] * 4], np.int32))
+    out = np.asarray(_run("pop", a, a))
+    np.testing.assert_array_equal(out, np.array([[0, 1, 8, 32] * 4], np.int32))
+
+
+def test_cnot_semantics():
+    a = jnp.asarray(np.array([[0, 1, -5, 0] * 4], np.int32))
+    out = np.asarray(_run("cnot", a, a))
+    np.testing.assert_array_equal(out, np.array([[1, 0, 0, 1] * 4], np.int32))
+
+
+def test_shr_arith_vs_logical():
+    a = jnp.full((1, W), -16, jnp.int32)
+    b = jnp.full((1, W), 2, jnp.int32)
+    sa = np.asarray(_run("shr_a", a, b))
+    sl = np.asarray(_run("shr_l", a, b))
+    assert (sa == -4).all()
+    assert (sl == ((0xFFFFFFF0 >> 2) - 2**32 + 2**32)).all()
+    assert (sl.astype(np.uint32) == 0x3FFFFFFC).all()
+
+
+def test_shift_amount_masked_to_5_bits():
+    a = jnp.full((1, W), 1, jnp.int32)
+    b = jnp.full((1, W), 33, jnp.int32)  # & 31 == 1
+    out = np.asarray(_run("shl", a, b))
+    assert (out == 2).all()
+
+
+def test_unsigned_max_min():
+    a = jnp.full((1, W), -1, jnp.int32)  # 0xFFFFFFFF unsigned max
+    b = jnp.full((1, W), 1, jnp.int32)
+    assert (np.asarray(_run("max_u", a, b)) == -1).all()
+    assert (np.asarray(_run("min_u", a, b)) == 1).all()
+    assert (np.asarray(_run("max_s", a, b)) == 1).all()
+    assert (np.asarray(_run("min_s", a, b)) == -1).all()
+
+
+def test_16bit_precision_truncates():
+    """16-bit ALU configs write back the low half zero-extended."""
+    a = jnp.full((2, W), 0x12345, jnp.int32)
+    b = jnp.full((2, W), 0x1, jnp.int32)
+    out = np.asarray(_run("add", a, b, prec=P16))
+    assert (out == ((0x12345 + 1) & 0xFFFF)).all()
+
+
+def test_writeback_gating_int():
+    a, b = _iblk(4), _iblk(5)
+    old = _iblk(6)
+    r = np.random.RandomState(7)
+    mask = jnp.asarray((r.rand(4, W) > 0.5).astype(np.int32))
+    out = np.asarray(_run("xor", a, b, old=old, mask=mask))
+    expect = np.where(
+        np.asarray(mask) != 0,
+        np.asarray(a) ^ np.asarray(b),
+        np.asarray(old),
+    )
+    np.testing.assert_array_equal(out, expect)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    op=st.sampled_from(opmap.INT_OPS),
+)
+def test_int_property_random_blocks(seed, op):
+    """Hypothesis sweep: every op, random operands/masks, vs the oracle."""
+    r = np.random.RandomState(seed)
+    a = jnp.asarray(r.randint(-(2**31), 2**31, (2, W)).astype(np.int32))
+    b = jnp.asarray(r.randint(-(2**31), 2**31, (2, W)).astype(np.int32))
+    old = jnp.asarray(r.randint(-100, 100, (2, W)).astype(np.int32))
+    mask = jnp.asarray((r.rand(2, W) > 0.3).astype(np.int32))
+    out = np.asarray(_run(op, a, b, old=old, mask=mask))
+    expect = np.where(
+        np.asarray(mask) != 0,
+        np.asarray(ref.int_op_ref(op, a, b)),
+        np.asarray(old),
+    )
+    np.testing.assert_array_equal(out, expect)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_int_16bit_property(seed):
+    """16-bit truncation applies after the op, before writeback gating."""
+    r = np.random.RandomState(seed)
+    a = jnp.asarray(r.randint(-(2**31), 2**31, (2, W)).astype(np.int32))
+    b = jnp.asarray(r.randint(-(2**31), 2**31, (2, W)).astype(np.int32))
+    out = np.asarray(_run("add", a, b, prec=P16))
+    expect = np.asarray(
+        ref.int_precision_mask_ref(ref.int_op_ref("add", a, b), 16)
+    )
+    np.testing.assert_array_equal(out, expect)

@@ -1,0 +1,58 @@
+//! Regenerates Figures 4 and 5: unconstrained placement of eGPU instances
+//! into the Agilex sector model, rendered as ASCII floorplans, and the
+//! three structural observations §6 makes about every instance:
+//!
+//!   (a) the majority of each SP's logic is one contiguous block,
+//!   (b) the predicate block is a separate structure placed away from
+//!       its SP (narrow interface),
+//!   (c) each SP straddles a column of DSP blocks,
+//! plus the shared-memory spine in the middle of the core.
+//!
+//!     cargo bench --bench figure45_placement
+
+use egpu::place::render::{render, render_sp, stats};
+use egpu::place::place;
+use egpu::sim::EgpuConfig;
+
+fn main() {
+    let mut checked = 0usize;
+    for cfg in EgpuConfig::table4_presets()
+        .into_iter()
+        .chain(EgpuConfig::table5_presets())
+    {
+        let p = match place(&cfg) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("{}: placement failed: {e}", cfg.name);
+                std::process::exit(1);
+            }
+        };
+        let straddle = (0..16).filter(|&s| p.sp_straddles_dsp(s)).count();
+        println!(
+            "{:<12} contiguous-SP-logic={} predicates-remote={} spine-central={} DSP-straddling-SPs={}/16 max-reg->DSP-hops={}",
+            cfg.name,
+            p.sp_logic_contiguous(),
+            p.predicates_remote(),
+            p.spine_is_central(),
+            straddle,
+            p.max_reg_to_dsp_hops()
+        );
+        assert!(p.sp_logic_contiguous(), "{}: observation (a)", cfg.name);
+        if cfg.predicate_levels > 0 {
+            assert!(p.predicates_remote(), "{}: observation (b)", cfg.name);
+        }
+        assert!(straddle >= 12, "{}: observation (c)", cfg.name);
+        assert!(p.spine_is_central(), "{}: shared-memory spine", cfg.name);
+        checked += 1;
+    }
+    println!("\nall {checked} instances show the Figure 4 pattern\n");
+
+    // Figure 4: the largest DP instance, full floorplan.
+    let large = EgpuConfig::table4_presets().into_iter().last().unwrap();
+    let p = place(&large).unwrap();
+    println!("Figure 4 — {} floorplan:\n{}", large.name, render(&p));
+    println!("{}", stats(&p));
+
+    // Figure 5: one SP in detail.
+    println!("\nFigure 5 — SP0 detail:\n{}", render_sp(&p, 0));
+}

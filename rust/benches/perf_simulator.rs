@@ -1,0 +1,83 @@
+//! Simulator performance harness (EXPERIMENTS.md §Perf): wall-clock
+//! throughput of the cycle-accurate core on the benchmark suite, for both
+//! the default checked mode and the verified-program fast path (hazard
+//! checking off).
+//!
+//! This is the L3 hot path the PERFORMANCE OPTIMIZATION pass iterates on;
+//! run before/after each change.
+//!
+//!     cargo bench --bench perf_simulator
+
+use egpu::harness::{sim_rate, time, Rng, Table};
+use egpu::kernels::{bitonic, f32_bits, fft, mmm, reduction, transpose, Kernel};
+use egpu::sim::{EgpuConfig, Machine, MemoryMode};
+
+fn run_once(kernel: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)], hazards: bool) -> u64 {
+    let prog = kernel.assemble(cfg).unwrap();
+    let mut m = Machine::new(cfg.clone()).unwrap();
+    m.load_program(prog).unwrap();
+    m.set_threads(kernel.threads).unwrap();
+    m.set_dim_x(kernel.dim_x).unwrap();
+    m.set_hazard_checking(hazards);
+    for (b, d) in init {
+        m.shared_mut().write_block(*b, d);
+    }
+    m.run(10_000_000_000).unwrap().cycles
+}
+
+fn main() {
+    let mut rng = Rng::new(0xBE);
+    let samples = 7;
+    let mut t = Table::new("Simulator throughput (simulated cycles per wall-clock second)");
+    t.headers(["kernel", "cycles", "checked", "unchecked", "Mcyc/s", "Mcyc/s (fast)", "wall(ms)"]);
+
+    let base = EgpuConfig::benchmark(MemoryMode::Dp, false);
+    let pred = EgpuConfig::benchmark_predicated(MemoryMode::Dp);
+    let n = 128usize;
+    let vecd: Vec<u32> = f32_bits(&(0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect::<Vec<_>>());
+    let mat: Vec<u32> = (0..n * n).map(|_| rng.next_u32()).collect();
+    let a: Vec<u32> = f32_bits(&(0..n * n).map(|_| rng.f32_in(-1.0, 1.0)).collect::<Vec<_>>());
+    let b: Vec<u32> = f32_bits(&(0..n * n).map(|_| rng.f32_in(-1.0, 1.0)).collect::<Vec<_>>());
+    let sortd: Vec<u32> = (0..256).map(|_| rng.next_u32()).collect();
+    let re: Vec<f32> = (0..256).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    let im = vec![0f32; 256];
+
+    let cases: Vec<(Kernel, EgpuConfig, Vec<(usize, Vec<u32>)>)> = vec![
+        (reduction::reduction(n), base.clone(), vec![(0, vecd)]),
+        (transpose::transpose(n), base.clone(), vec![(0, mat)]),
+        (
+            mmm::mmm(n),
+            mmm::config(n, MemoryMode::Dp, false),
+            vec![(0, a.clone()), (n * n, b.clone())],
+        ),
+        (bitonic::bitonic(256), pred, vec![(0, sortd)]),
+        (fft::fft(256), base, fft::shared_init(&re, &im)),
+    ];
+
+    let mut total_cycles = 0u64;
+    let mut total_ms = 0f64;
+    for (kernel, cfg, init) in &cases {
+        let cycles = run_once(kernel, cfg, init, true);
+        let checked = time(samples, || run_once(kernel, cfg, init, true));
+        let fast = time(samples, || run_once(kernel, cfg, init, false));
+        total_cycles += cycles;
+        total_ms += fast.median_ms();
+        t.row([
+            kernel.name.clone(),
+            cycles.to_string(),
+            format!("{:.2}ms", checked.median_ms()),
+            format!("{:.2}ms", fast.median_ms()),
+            format!("{:.1}", sim_rate(cycles, &checked) / 1e6),
+            format!("{:.1}", sim_rate(cycles, &fast) / 1e6),
+            format!("{:.2}", fast.median_ms()),
+        ]);
+    }
+    t.print();
+    println!(
+        "\naggregate: {:.1} M simulated cycles/s (fast path) over {} kernels",
+        total_cycles as f64 / total_ms / 1e3,
+        cases.len()
+    );
+    println!("target: simulate 771 MHz real time / 1000 => >= 0.77 Mcyc/s (trivially exceeded);");
+    println!("practical target: > 50 Mcyc/s on MMM-class kernels so the full suite stays < 5 s");
+}

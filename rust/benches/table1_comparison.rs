@@ -1,0 +1,56 @@
+//! Regenerates Table 1: resource comparison and the PPA metric across
+//! published soft GPGPUs vs the eGPU model.
+//!
+//!     cargo bench --bench table1_comparison
+
+use egpu::harness::{within_band, Table};
+use egpu::model::cost::{normalized_cost, ppa_metric, TABLE1_PUBLISHED};
+use egpu::model::resources::ResourceReport;
+use egpu::sim::EgpuConfig;
+
+fn main() {
+    // Paper Table 1 PPA column: FGPU 36, DO-GPU 133, FlexGrip 175, eGPU 1.
+    let paper_ppa = [36.0, 133.0, 175.0];
+    let mut t = Table::new("Table 1: Resource Comparison");
+    t.headers(["Architecture", "Config", "LUTs", "DSP", "FMax", "PPA (paper)", "Device"]);
+    let mut fail = 0;
+    for (row, paper) in TABLE1_PUBLISHED.iter().zip(paper_ppa) {
+        let ppa = ppa_metric(row.luts as f64, row.dsps as f64, row.fmax_mhz);
+        if !within_band(ppa, paper, 2.0) {
+            fail += 1;
+        }
+        t.row([
+            row.arch.to_string(),
+            row.config.to_string(),
+            format!("{}K", row.luts / 1000),
+            row.dsps.to_string(),
+            format!("{:.0}", row.fmax_mhz),
+            format!("{ppa:.0} ({paper:.0})"),
+            row.device.to_string(),
+        ]);
+    }
+    let small = EgpuConfig::table4_presets().into_iter().next().unwrap();
+    let r = ResourceReport::for_config(&small);
+    t.row([
+        "eGPU".into(),
+        "1SMx16SP".into(),
+        format!("{}K ({}ALM)", r.alms / 1000, r.alms),
+        r.dsps.to_string(),
+        "771".into(),
+        "1 (1)".into(),
+        "Agilex".to_string(),
+    ]);
+    t.print();
+    println!(
+        "\neGPU normalized cost: {:.0} ALM-equivalents (5K LUT / 24 DSP class)",
+        normalized_cost(r.alms, r.dsps)
+    );
+    println!(
+        "PPA gap vs nearest prior work: {:.0}x",
+        ppa_metric(57_000.0, 48.0, 250.0)
+    );
+    if fail > 0 {
+        eprintln!("{fail} PPA cells outside the 2x band");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,55 @@
+//! Regenerates Table 4: fitting results for the DP-memory instances —
+//! resource model (ALM/FF/DSP/M20K) and frequency model vs the paper's
+//! post-place-and-route numbers.
+//!
+//!     cargo bench --bench table4_dp_fitting
+
+use egpu::harness::{within_band, Table};
+use egpu::model::frequency::FrequencyReport;
+use egpu::model::resources::ResourceReport;
+use egpu::sim::EgpuConfig;
+
+/// Paper Table 4 rows: (ALM, FF, DSP, M20K, soft-logic Fmax, core Fmax).
+const PAPER: [(u32, u32, u32, u32, f64, f64); 6] = [
+    (4243, 13635, 24, 50, 1018.0, 771.0),
+    (7518, 18992, 24, 98, 898.0, 771.0),
+    (7579, 19155, 24, 131, 883.0, 771.0),
+    (9754, 25425, 24, 131, 902.0, 771.0),
+    (10127, 26040, 32, 195, 860.0, 771.0),
+    (10697, 26618, 32, 259, 841.0, 771.0),
+];
+
+fn main() {
+    let mut t = Table::new("Table 4: Fitting Results - DP Memory, measured (paper)");
+    t.headers(["Config", "ALM", "FF", "DSP", "M20K", "SoftMHz", "CoreMHz", "ok"]);
+    let mut fail = 0usize;
+    for (cfg, p) in EgpuConfig::table4_presets().iter().zip(PAPER) {
+        let r = ResourceReport::for_config(cfg);
+        let f = FrequencyReport::for_config(cfg);
+        let ok = within_band(r.alms as f64, p.0 as f64, 1.15)
+            && within_band(r.registers as f64, p.1 as f64, 1.15)
+            && r.dsps == p.2
+            && r.m20ks == p.3
+            && within_band(f.soft_mhz, p.4, 1.15)
+            && f.core_mhz == p.5;
+        if !ok {
+            fail += 1;
+        }
+        t.row([
+            cfg.name.clone(),
+            format!("{} ({})", r.alms, p.0),
+            format!("{} ({})", r.registers, p.1),
+            format!("{} ({})", r.dsps, p.2),
+            format!("{} ({})", r.m20ks, p.3),
+            format!("{:.0} ({:.0})", f.soft_mhz, p.4),
+            format!("{:.0} ({:.0})", f.core_mhz, p.5),
+            if ok { "yes".into() } else { "NO".to_string() },
+        ]);
+    }
+    t.print();
+    println!("\nall instances close timing at the 771 MHz DSP limit (§6)");
+    if fail > 0 {
+        eprintln!("{fail} rows outside tolerance");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,51 @@
+//! Regenerates Table 5: fitting results for the QP-memory instances.
+//!
+//!     cargo bench --bench table5_qp_fitting
+
+use egpu::harness::{within_band, Table};
+use egpu::model::frequency::FrequencyReport;
+use egpu::model::resources::ResourceReport;
+use egpu::sim::EgpuConfig;
+
+/// Paper Table 5 rows: (ALM, FF, DSP, M20K, soft Fmax, core Fmax).
+const PAPER: [(u32, u32, u32, u32, f64, f64); 4] = [
+    (5468, 14487, 24, 99, 840.0, 600.0),
+    (7057, 16722, 32, 131, 763.0, 600.0),
+    (11314, 25050, 32, 131, 763.0, 600.0),
+    (10174, 23094, 32, 195, 714.0, 600.0),
+];
+
+fn main() {
+    let mut t = Table::new("Table 5: Fitting Results - QP Memory, measured (paper)");
+    t.headers(["Config", "ALM", "FF", "DSP", "M20K", "SoftMHz", "CoreMHz", "ok"]);
+    let mut fail = 0usize;
+    for (cfg, p) in EgpuConfig::table5_presets().iter().zip(PAPER) {
+        let r = ResourceReport::for_config(cfg);
+        let f = FrequencyReport::for_config(cfg);
+        let ok = within_band(r.alms as f64, p.0 as f64, 1.15)
+            && within_band(r.registers as f64, p.1 as f64, 1.15)
+            && r.dsps == p.2
+            && (r.m20ks as i64 - p.3 as i64).abs() <= 1
+            && within_band(f.soft_mhz, p.4, 1.15)
+            && f.core_mhz == p.5;
+        if !ok {
+            fail += 1;
+        }
+        t.row([
+            cfg.name.clone(),
+            format!("{} ({})", r.alms, p.0),
+            format!("{} ({})", r.registers, p.1),
+            format!("{} ({})", r.dsps, p.2),
+            format!("{} ({})", r.m20ks, p.3),
+            format!("{:.0} ({:.0})", f.soft_mhz, p.4),
+            format!("{:.0} ({:.0})", f.core_mhz, p.5),
+            if ok { "yes".into() } else { "NO".to_string() },
+        ]);
+    }
+    t.print();
+    println!("\nQP M20Ks cap the core at 600 MHz; halved M20K count, doubled write ports (§3, §5.1)");
+    if fail > 0 {
+        eprintln!("{fail} rows outside tolerance");
+        std::process::exit(1);
+    }
+}

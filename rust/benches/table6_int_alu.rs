@@ -1,0 +1,42 @@
+//! Regenerates Table 6: integer-ALU resource breakdown, including the
+//! per-function ALM columns and the QP 4-stage variant (§5.2).
+//!
+//!     cargo bench --bench table6_int_alu
+
+use egpu::harness::Table;
+use egpu::model::alu_model::{alu_fmax, QP_32_FULL, TABLE6};
+
+fn opt(v: Option<u32>) -> String {
+    v.map(|x| x.to_string()).unwrap_or_else(|| "-".into())
+}
+
+fn main() {
+    let mut t = Table::new("Table 6: Fitting Results - Integer ALU");
+    t.headers(["Prec", "Type", "ALM", "Registers", "Add/Sub", "Logic", "SHL", "SHR", "Pop", "Stages", "Fmax"]);
+    for a in TABLE6.iter().chain([&QP_32_FULL]) {
+        t.row([
+            a.precision.to_string(),
+            if a.stages == 4 { format!("{} (QP)", a.class.name()) } else { a.class.name().into() },
+            a.alms.to_string(),
+            a.regs.to_string(),
+            opt(a.add_sub),
+            opt(a.logic),
+            opt(a.shl),
+            opt(a.shr),
+            opt(a.pop),
+            a.stages.to_string(),
+            format!("{:.0}", alu_fmax(a)),
+        ]);
+    }
+    t.print();
+    println!("\n5-stage ALUs exceed 800 MHz; the 4-stage QP variant lands ~700 MHz (§5.2)");
+
+    // Sanity: the three §5.2 scaling claims.
+    let min16 = &TABLE6[0];
+    let full16 = &TABLE6[2];
+    let full32 = &TABLE6[4];
+    assert!(full16.alms >= 2 * min16.alms - 30, "full16 ~2x min16");
+    assert!(full32.alms >= 2 * full16.alms - 30, "full32 ~2x full16 ALMs");
+    assert!(full32.regs as f64 >= 2.4 * full16.regs as f64, "full32 ~3x full16 FFs");
+    println!("scaling claims hold: full16 ≈ 2x min16, full32 ≈ 2x ALM / ~3x FF of full16");
+}

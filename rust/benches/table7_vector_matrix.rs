@@ -1,0 +1,126 @@
+//! Regenerates Table 7: vector reduction, matrix transpose and
+//! matrix-matrix multiply on Nios / eGPU-DP / eGPU-QP / eGPU-Dot (and the
+//! FlexGrip MMM comparison), with every metric row the paper reports:
+//! cycles, elapsed time, cycle/time ratios and the resource-normalized
+//! ratio.
+//!
+//!     cargo bench --bench table7_vector_matrix
+
+use egpu::baseline::flexgrip;
+use egpu::harness::{paper_cycles, suite, within_band, Table, Variant};
+use egpu::harness::suite::{Benchmark, Measurement};
+
+fn main() {
+    let mut fail = 0usize;
+    for b in [Benchmark::Reduction, Benchmark::Transpose, Benchmark::Mmm] {
+        let mut t = Table::new(format!("Table 7 — {} (paper values in parens)", b.name()));
+        t.headers(["Dim", "Metric", "Nios", "FlexGrip", "eGPU-DP", "eGPU-QP", "eGPU-Dot"]);
+        for &dim in b.dims() {
+            let r = suite::run(b, dim);
+            let meas = |v: Variant| -> Option<&Measurement> {
+                match v {
+                    Variant::Nios => Some(&r.nios),
+                    Variant::Dp => Some(&r.dp),
+                    Variant::Qp => Some(&r.qp),
+                    Variant::Dot => r.dot.as_ref(),
+                }
+            };
+            for (m, v) in [(Variant::Nios, 4.0f64), (Variant::Dp, 2.0), (Variant::Qp, 2.0), (Variant::Dot, 2.0)]
+                .iter()
+                .filter_map(|&(v, band)| meas(v).map(|m| ((m, band), v)))
+            {
+                if let Some(p) = paper_cycles(b, dim, v) {
+                    if !within_band(m.0.cycles as f64, p as f64, m.1) {
+                        eprintln!("BAND MISS: {b:?}-{dim} {}: {} vs {p}", v.label(), m.0.cycles);
+                        fail += 1;
+                    }
+                }
+            }
+            let fmt_cycles = |v: Variant| match meas(v) {
+                None => "-".to_string(),
+                Some(m) => match paper_cycles(b, dim, v) {
+                    Some(p) => format!("{} ({p})", m.cycles),
+                    None => m.cycles.to_string(),
+                },
+            };
+            let fg_cycles = if b == Benchmark::Mmm {
+                flexgrip::mmm_cycles(dim).map(|c| c.to_string()).unwrap_or_default()
+            } else {
+                "-".into()
+            };
+            let fg_time = if b == Benchmark::Mmm {
+                flexgrip::mmm_time_us(dim).map(|t| format!("{t:.0}")).unwrap_or_default()
+            } else {
+                "-".into()
+            };
+            t.row([
+                dim.to_string(),
+                "Cycles".into(),
+                fmt_cycles(Variant::Nios),
+                fg_cycles,
+                fmt_cycles(Variant::Dp),
+                fmt_cycles(Variant::Qp),
+                fmt_cycles(Variant::Dot),
+            ]);
+            let fmt_time = |v: Variant| {
+                meas(v).map(|m| format!("{:.2}", m.time_us())).unwrap_or_else(|| "-".into())
+            };
+            t.row([
+                dim.to_string(),
+                "Time(us)".into(),
+                fmt_time(Variant::Nios),
+                fg_time,
+                fmt_time(Variant::Dp),
+                fmt_time(Variant::Qp),
+                fmt_time(Variant::Dot),
+            ]);
+            let fmt_rc = |v: Variant| {
+                r.ratio_cycles(v).map(|x| format!("{x:.2}")).unwrap_or_else(|| "-".into())
+            };
+            t.row([
+                dim.to_string(),
+                "Ratio(cycles)".into(),
+                fmt_rc(Variant::Nios),
+                "-".into(),
+                fmt_rc(Variant::Dp),
+                fmt_rc(Variant::Qp),
+                fmt_rc(Variant::Dot),
+            ]);
+            let fmt_rt = |v: Variant| {
+                r.ratio_time(v).map(|x| format!("{x:.2}")).unwrap_or_else(|| "-".into())
+            };
+            t.row([
+                dim.to_string(),
+                "Ratio(time)".into(),
+                fmt_rt(Variant::Nios),
+                "-".into(),
+                fmt_rt(Variant::Dp),
+                fmt_rt(Variant::Qp),
+                fmt_rt(Variant::Dot),
+            ]);
+            let fmt_n = |v: Variant| {
+                r.normalized(v).map(|x| format!("{x:.2}")).unwrap_or_else(|| "-".into())
+            };
+            t.row([
+                dim.to_string(),
+                "Normalized".into(),
+                fmt_n(Variant::Nios),
+                "-".into(),
+                fmt_n(Variant::Dp),
+                fmt_n(Variant::Qp),
+                fmt_n(Variant::Dot),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+    println!(
+        "FlexGrip underperforms eGPU-DP by {:.0}x on MMM cycles (paper: ~31x avg over all benchmarks)",
+        flexgrip::MMM_CYCLE_RATIO_VS_EGPU.iter().map(|&(_, r)| r).sum::<f64>()
+            / flexgrip::MMM_CYCLE_RATIO_VS_EGPU.len() as f64
+    );
+    if fail > 0 {
+        eprintln!("{fail} cells outside the reproduction band");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,57 @@
+//! The eGPU assembler.
+//!
+//! The paper's benchmarks were "written in assembly code (we have not
+//! written our compiler yet)" (§7); this module is that assembler. It is
+//! line-oriented, two-pass (label collection, then encoding), and performs
+//! the same static checks the hardware configuration implies: register
+//! indices against the configured register space, instruction groups
+//! against the configured feature subset, and shift amounts against the
+//! configured shift precision are validated by `sim::config` when a
+//! program is loaded.
+//!
+//! # Syntax
+//!
+//! ```text
+//! ; vector add, one element per thread
+//! .mode [w16,dall]          ; default thread-space for following instrs
+//! start:
+//!     tdx r0                ; r0 = thread id
+//!     lod r1, (r0)+0        ; r1 = shared[r0 + 0]
+//!     lod r2, (r0)+512
+//!     fadd r3, r1, r2
+//!     sto r3, (r0)+1024
+//!     [w1,d0] stop          ; per-instruction thread-space override
+//! ```
+//!
+//! - comments: `;`, `#` or `//` to end of line
+//! - labels: `name:`; branch targets are label names or absolute numbers
+//! - TYPE suffixes: `.i32` `.u32` `.f32` (FP mnemonics imply `.f32`)
+//! - conditions: `if.lt.i32 r1, r2` (unsigned aliases `lo/ls/hi/hs` imply
+//!   `.u32`)
+//! - immediates: `#42`, `#-3`, `#0x1F`
+//! - thread-space annotation: `[w16|w4|w1, d0|dall|dhalf|dquart]`
+
+mod parser;
+mod program;
+
+pub use parser::{assemble, AsmError};
+pub use program::{Program, SourceLine};
+
+use crate::isa::{Instr, WordLayout};
+
+/// Disassemble an encoded program back to source text.
+pub fn disassemble(words: &[u64], layout: WordLayout) -> Result<String, String> {
+    let mut out = String::new();
+    for (pc, &w) in words.iter().enumerate() {
+        let i = layout
+            .decode(w)
+            .map_err(|e| format!("word {pc}: {e}"))?;
+        out.push_str(&format!("{pc:5}: {}\n", i.disasm()));
+    }
+    Ok(out)
+}
+
+/// Convenience: assemble and return just the decoded instructions.
+pub fn assemble_instrs(src: &str, layout: WordLayout) -> Result<Vec<Instr>, AsmError> {
+    Ok(assemble(src, layout)?.instrs)
+}

@@ -1,0 +1,629 @@
+//! Two-pass line-oriented parser for eGPU assembly.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use super::program::{Program, SourceLine};
+use crate::isa::opcode::OperandShape;
+use crate::isa::{CondCode, DepthSel, Instr, Opcode, TType, ThreadCtrl, WidthSel, WordLayout};
+
+/// Assembly error with line context.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AsmError {
+    pub line_no: usize,
+    pub message: String,
+}
+
+impl fmt::Display for AsmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line_no, self.message)
+    }
+}
+
+impl std::error::Error for AsmError {}
+
+fn err<T>(line_no: usize, msg: impl Into<String>) -> Result<T, AsmError> {
+    Err(AsmError {
+        line_no,
+        message: msg.into(),
+    })
+}
+
+/// Strip comments (`;`, `#` not inside an immediate, `//`).
+fn strip_comment(line: &str) -> &str {
+    let mut end = line.len();
+    let bytes = line.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b';' => {
+                end = i;
+                break;
+            }
+            b'/' if i + 1 < bytes.len() && bytes[i + 1] == b'/' => {
+                end = i;
+                break;
+            }
+            // '#' starts a comment only when not immediately followed by a
+            // number sign or digit (immediates are written `#42`, `#-3`,
+            // `#0x..`).
+            b'#' => {
+                let rest = &line[i + 1..];
+                let is_imm = rest
+                    .chars()
+                    .next()
+                    .map(|c| c.is_ascii_digit() || c == '-' || c == '+')
+                    .unwrap_or(false);
+                if !is_imm {
+                    end = i;
+                    break;
+                }
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    line[..end].trim()
+}
+
+/// Parse a `[w..,d..]` annotation; returns (ctrl, rest-of-line).
+fn parse_annotation(line: &str, line_no: usize) -> Result<(Option<ThreadCtrl>, &str), AsmError> {
+    let line = line.trim_start();
+    if !line.starts_with('[') {
+        return Ok((None, line));
+    }
+    let close = match line.find(']') {
+        Some(c) => c,
+        None => return err(line_no, "unterminated thread-space annotation"),
+    };
+    let inner = &line[1..close];
+    let mut width = None;
+    let mut depth = None;
+    for part in inner.split(',') {
+        let p = part.trim().to_ascii_lowercase();
+        if let Some(w) = WidthSel::from_name(&p) {
+            width = Some(w);
+        } else if let Some(d) = DepthSel::from_name(&p) {
+            depth = Some(d);
+        } else {
+            return err(line_no, format!("unknown thread-space selector '{p}'"));
+        }
+    }
+    let tc = ThreadCtrl::new(width.unwrap_or_default(), depth.unwrap_or_default());
+    Ok((Some(tc), line[close + 1..].trim_start()))
+}
+
+fn parse_reg(tok: &str, layout: WordLayout, line_no: usize) -> Result<u8, AsmError> {
+    let t = tok.trim();
+    if let Some(n) = t.strip_prefix('r').or_else(|| t.strip_prefix('R')) {
+        if let Ok(v) = n.parse::<u32>() {
+            if v <= layout.max_reg() as u32 {
+                return Ok(v as u8);
+            }
+            return err(
+                line_no,
+                format!(
+                    "register r{v} exceeds the configured register space (max r{})",
+                    layout.max_reg()
+                ),
+            );
+        }
+    }
+    err(line_no, format!("expected register, got '{t}'"))
+}
+
+fn parse_int(tok: &str, line_no: usize) -> Result<i64, AsmError> {
+    let t = tok.trim();
+    let (neg, t) = match t.strip_prefix('-') {
+        Some(rest) => (true, rest),
+        None => (false, t.strip_prefix('+').unwrap_or(t)),
+    };
+    let v = if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        i64::from_str_radix(hex, 16)
+    } else if let Some(bin) = t.strip_prefix("0b").or_else(|| t.strip_prefix("0B")) {
+        i64::from_str_radix(bin, 2)
+    } else {
+        t.parse::<i64>()
+    };
+    match v {
+        Ok(v) => Ok(if neg { -v } else { v }),
+        Err(_) => err(line_no, format!("bad integer literal '{tok}'")),
+    }
+}
+
+fn parse_imm(tok: &str, line_no: usize) -> Result<u16, AsmError> {
+    let t = tok.trim();
+    let t = t.strip_prefix('#').unwrap_or(t);
+    let v = parse_int(t, line_no)?;
+    if !(-32768..=65535).contains(&v) {
+        return err(line_no, format!("immediate {v} does not fit in 16 bits"));
+    }
+    Ok(v as u16)
+}
+
+/// Split mnemonic into (base opcode token, suffix tokens).
+fn split_mnemonic(m: &str) -> (String, Vec<String>) {
+    let mut parts = m.split('.');
+    let base = parts.next().unwrap_or("").to_ascii_lowercase();
+    let suffixes = parts.map(|s| s.to_ascii_lowercase()).collect();
+    (base, suffixes)
+}
+
+struct PendingInstr {
+    instr: Instr,
+    /// Unresolved branch target label, if any.
+    target: Option<String>,
+    line_no: usize,
+}
+
+/// Assemble source text into a `Program`.
+pub fn assemble(src: &str, layout: WordLayout) -> Result<Program, AsmError> {
+    let mut labels: BTreeMap<String, usize> = BTreeMap::new();
+    let mut pending: Vec<PendingInstr> = Vec::new();
+    let mut source: Vec<SourceLine> = Vec::new();
+    let mut default_tc = ThreadCtrl::FULL;
+
+    for (idx, raw_line) in src.lines().enumerate() {
+        let line_no = idx + 1;
+        let mut line = strip_comment(raw_line);
+        if line.is_empty() {
+            continue;
+        }
+
+        // Labels (possibly several, possibly followed by an instruction).
+        while let Some(colon) = line.find(':') {
+            let (name, rest) = line.split_at(colon);
+            let name = name.trim();
+            if name.is_empty()
+                || !name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || c == '_')
+                || name.chars().next().unwrap().is_ascii_digit()
+            {
+                break; // not a label — let the instruction parser complain
+            }
+            if labels.insert(name.to_string(), pending.len()).is_some() {
+                return err(line_no, format!("duplicate label '{name}'"));
+            }
+            line = rest[1..].trim_start();
+        }
+        if line.is_empty() {
+            continue;
+        }
+
+        // Directives.
+        if let Some(rest) = line.strip_prefix(".mode") {
+            let (tc, leftover) = parse_annotation(rest.trim_start(), line_no)?;
+            let tc = match tc {
+                Some(tc) => tc,
+                None => {
+                    // Allow `.mode w16, dall` without brackets.
+                    let mut width = WidthSel::default();
+                    let mut depth = DepthSel::default();
+                    let mut any = false;
+                    for part in rest.split(',') {
+                        let p = part.trim().to_ascii_lowercase();
+                        if p.is_empty() {
+                            continue;
+                        }
+                        if let Some(w) = WidthSel::from_name(&p) {
+                            width = w;
+                            any = true;
+                        } else if let Some(d) = DepthSel::from_name(&p) {
+                            depth = d;
+                            any = true;
+                        } else {
+                            return err(line_no, format!("bad .mode selector '{p}'"));
+                        }
+                    }
+                    if !any {
+                        return err(line_no, ".mode needs selectors");
+                    }
+                    default_tc = ThreadCtrl::new(width, depth);
+                    continue;
+                }
+            };
+            if !leftover.is_empty() {
+                return err(line_no, "unexpected text after .mode");
+            }
+            default_tc = tc;
+            continue;
+        }
+        if line.starts_with('.') {
+            return err(line_no, format!("unknown directive '{line}'"));
+        }
+
+        // Optional per-instruction thread-space annotation.
+        let (tc_override, rest) = parse_annotation(line, line_no)?;
+        let tc = tc_override.unwrap_or(default_tc);
+
+        // Mnemonic and operand split.
+        let rest = rest.trim();
+        let (mn, ops_str) = match rest.find(char::is_whitespace) {
+            Some(sp) => (&rest[..sp], rest[sp..].trim()),
+            None => (rest, ""),
+        };
+        let (base, suffixes) = split_mnemonic(mn);
+        let op = match Opcode::from_mnemonic(&base) {
+            Some(op) => op,
+            None => return err(line_no, format!("unknown instruction '{base}'")),
+        };
+
+        let mut instr = Instr::new(op);
+        instr.tc = tc;
+
+        // TYPE / condition-code suffixes.
+        let mut cc: Option<CondCode> = None;
+        let mut ttype: Option<TType> = None;
+        for s in &suffixes {
+            if let Some(t) = TType::from_suffix(s) {
+                if ttype.replace(t).is_some() {
+                    return err(line_no, "duplicate TYPE suffix");
+                }
+            } else if let Some((c, unsigned)) = CondCode::from_mnemonic(s) {
+                if op != Opcode::If {
+                    return err(line_no, format!("condition suffix '.{s}' only valid on IF"));
+                }
+                if cc.replace(c).is_some() {
+                    return err(line_no, "duplicate condition suffix");
+                }
+                if unsigned {
+                    ttype.get_or_insert(TType::Uint);
+                }
+            } else {
+                return err(line_no, format!("unknown suffix '.{s}'"));
+            }
+        }
+        if op == Opcode::If && cc.is_none() {
+            return err(line_no, "IF needs a condition code (e.g. if.lt.i32)");
+        }
+        instr.ttype = match ttype {
+            Some(t) => t,
+            None if op.group() == crate::isa::Group::FpAlu
+                || op == Opcode::InvSqr
+                || op == Opcode::Dot
+                || op == Opcode::Sum =>
+            {
+                TType::Fp32
+            }
+            None => TType::Int,
+        };
+        if let Some(c) = cc {
+            instr.imm = c.bits() as u16;
+        }
+
+        // Operands.
+        let operands: Vec<&str> = if ops_str.is_empty() {
+            vec![]
+        } else {
+            ops_str.split(',').map(|s| s.trim()).collect()
+        };
+        let mut target: Option<String> = None;
+        let shape = op.operands();
+        let expect = |n: usize| -> Result<(), AsmError> {
+            if operands.len() != n {
+                err(
+                    line_no,
+                    format!(
+                        "{} expects {n} operand(s), got {}",
+                        op.mnemonic(),
+                        operands.len()
+                    ),
+                )
+            } else {
+                Ok(())
+            }
+        };
+        match shape {
+            OperandShape::None => expect(0)?,
+            OperandShape::Rd => {
+                expect(1)?;
+                instr.rd = parse_reg(operands[0], layout, line_no)?;
+            }
+            OperandShape::RdRa => {
+                expect(2)?;
+                instr.rd = parse_reg(operands[0], layout, line_no)?;
+                instr.ra = parse_reg(operands[1], layout, line_no)?;
+            }
+            OperandShape::RdRaRb => {
+                expect(3)?;
+                instr.rd = parse_reg(operands[0], layout, line_no)?;
+                instr.ra = parse_reg(operands[1], layout, line_no)?;
+                instr.rb = parse_reg(operands[2], layout, line_no)?;
+            }
+            OperandShape::RaRb => {
+                expect(2)?;
+                instr.ra = parse_reg(operands[0], layout, line_no)?;
+                instr.rb = parse_reg(operands[1], layout, line_no)?;
+            }
+            OperandShape::RdMem => {
+                expect(2)?;
+                instr.rd = parse_reg(operands[0], layout, line_no)?;
+                // `(ra)+imm` or `(ra)` with implicit 0.
+                let m = operands[1];
+                let open = m.find('(');
+                let close = m.find(')');
+                match (open, close) {
+                    (Some(o), Some(c)) if c > o => {
+                        instr.ra = parse_reg(&m[o + 1..c], layout, line_no)?;
+                        let off = m[c + 1..].trim();
+                        let off = off.strip_prefix('+').unwrap_or(off).trim();
+                        if !off.is_empty() {
+                            let v = parse_int(off, line_no)?;
+                            if !(0..=65535).contains(&v) {
+                                return err(line_no, format!("offset {v} out of range"));
+                            }
+                            instr.imm = v as u16;
+                        }
+                    }
+                    _ => {
+                        return err(
+                            line_no,
+                            format!("expected memory operand '(rN)+off', got '{m}'"),
+                        )
+                    }
+                }
+            }
+            OperandShape::RdImm => {
+                expect(2)?;
+                instr.rd = parse_reg(operands[0], layout, line_no)?;
+                instr.imm = parse_imm(operands[1], line_no)?;
+            }
+            OperandShape::Imm => {
+                expect(1)?;
+                instr.imm = parse_imm(operands[0], line_no)?;
+            }
+            OperandShape::Addr => {
+                expect(1)?;
+                let t = operands[0];
+                if t.chars().next().map(|c| c.is_ascii_digit()).unwrap_or(false) {
+                    instr.imm = parse_imm(t, line_no)?;
+                } else {
+                    target = Some(t.to_string());
+                }
+            }
+        }
+
+        source.push(SourceLine {
+            line_no,
+            text: raw_line.trim().to_string(),
+        });
+        pending.push(PendingInstr {
+            instr,
+            target,
+            line_no,
+        });
+    }
+
+    // Pass 2: resolve labels, encode.
+    let mut instrs = Vec::with_capacity(pending.len());
+    let mut words = Vec::with_capacity(pending.len());
+    for p in pending {
+        let mut i = p.instr;
+        if let Some(t) = &p.target {
+            match labels.get(t) {
+                Some(&addr) => {
+                    if addr > 0xFFFF {
+                        return err(p.line_no, format!("label '{t}' address {addr} overflows"));
+                    }
+                    i.imm = addr as u16;
+                }
+                None => return err(p.line_no, format!("undefined label '{t}'")),
+            }
+        }
+        words.push(layout.encode(&i));
+        instrs.push(i);
+    }
+
+    Ok(Program {
+        instrs,
+        words,
+        labels,
+        layout,
+        source,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Group;
+
+    fn l32() -> WordLayout {
+        WordLayout::for_regs(32)
+    }
+
+    #[test]
+    fn basic_program() {
+        let src = "
+            tdx r0
+            lod r1, (r0)+0
+            fadd r2, r1, r1
+            sto r2, (r0)+64
+            stop
+        ";
+        let p = assemble(src, l32()).unwrap();
+        assert_eq!(p.len(), 5);
+        assert_eq!(p.instrs[0].op, Opcode::TdX);
+        assert_eq!(p.instrs[1].op, Opcode::Lod);
+        assert_eq!(p.instrs[1].imm, 0);
+        assert_eq!(p.instrs[3].imm, 64);
+        assert_eq!(p.instrs[2].ttype, TType::Fp32);
+    }
+
+    #[test]
+    fn labels_and_branches() {
+        let src = "
+            ldi r0, #0
+            init #3
+        top:
+            add.i32 r0, r0, r0
+            loop top
+            jmp end
+            nop
+        end:
+            stop
+        ";
+        let p = assemble(src, l32()).unwrap();
+        assert_eq!(p.labels["top"], 2);
+        assert_eq!(p.labels["end"], 6);
+        let loop_i = &p.instrs[3];
+        assert_eq!(loop_i.op, Opcode::Loop);
+        assert_eq!(loop_i.imm_u(), 2);
+        assert_eq!(p.instrs[4].imm_u(), 6);
+    }
+
+    #[test]
+    fn undefined_label_errors() {
+        let e = assemble("jmp nowhere\n", l32()).unwrap_err();
+        assert!(e.message.contains("undefined label"));
+    }
+
+    #[test]
+    fn duplicate_label_errors() {
+        let e = assemble("a:\na:\nnop\n", l32()).unwrap_err();
+        assert!(e.message.contains("duplicate label"));
+    }
+
+    #[test]
+    fn type_suffixes() {
+        let p = assemble("add.u32 r1, r2, r3\nshr.i32 r1, r2, r3\n", l32()).unwrap();
+        assert_eq!(p.instrs[0].ttype, TType::Uint);
+        assert_eq!(p.instrs[1].ttype, TType::Int);
+    }
+
+    #[test]
+    fn if_conditions() {
+        let p = assemble(
+            "if.lt.i32 r1, r2\nelse\nendif\nif.hs r3, r4\nif.gt.f32 r1, r2\n",
+            l32(),
+        )
+        .unwrap();
+        assert_eq!(p.instrs[0].cond(), Some(CondCode::Lt));
+        assert_eq!(p.instrs[0].ttype, TType::Int);
+        // unsigned alias implies UINT
+        assert_eq!(p.instrs[3].cond(), Some(CondCode::Ge));
+        assert_eq!(p.instrs[3].ttype, TType::Uint);
+        assert_eq!(p.instrs[4].ttype, TType::Fp32);
+        assert_eq!(p.instrs[1].op, Opcode::Else);
+    }
+
+    #[test]
+    fn if_without_condition_errors() {
+        let e = assemble("if r1, r2\n", l32()).unwrap_err();
+        assert!(e.message.contains("condition code"));
+    }
+
+    #[test]
+    fn annotations_and_mode() {
+        let src = "
+            .mode [w4,dhalf]
+            add.i32 r1, r1, r1
+            [w1,d0] sto r1, (r0)+0
+            add.i32 r2, r2, r2
+        ";
+        let p = assemble(src, l32()).unwrap();
+        assert_eq!(
+            p.instrs[0].tc,
+            ThreadCtrl::new(WidthSel::Quarter4, DepthSel::Half)
+        );
+        assert_eq!(p.instrs[1].tc, ThreadCtrl::MCU);
+        // .mode persists past per-instruction overrides
+        assert_eq!(
+            p.instrs[2].tc,
+            ThreadCtrl::new(WidthSel::Quarter4, DepthSel::Half)
+        );
+    }
+
+    #[test]
+    fn register_range_checked_against_layout() {
+        let e = assemble("add.i32 r16, r0, r0\n", WordLayout::for_regs(16)).unwrap_err();
+        assert!(e.message.contains("exceeds"));
+        assert!(assemble("add.i32 r16, r0, r0\n", l32()).is_ok());
+    }
+
+    #[test]
+    fn immediates_hex_negative() {
+        let p = assemble("ldi r1, #0x1F\nldi r2, #-5\nldi r3, #0b101\n", l32()).unwrap();
+        assert_eq!(p.instrs[0].imm_i(), 31);
+        assert_eq!(p.instrs[1].imm_i(), -5);
+        assert_eq!(p.instrs[2].imm_i(), 5);
+    }
+
+    #[test]
+    fn immediate_overflow_errors() {
+        assert!(assemble("ldi r1, #70000\n", l32()).is_err());
+        assert!(assemble("ldi r1, #-40000\n", l32()).is_err());
+    }
+
+    #[test]
+    fn comments_stripped() {
+        let src = "nop ; trailing\nnop // c++ style\nnop # hash comment\nldi r1, #3 ; imm keeps hash\n";
+        let p = assemble(src, l32()).unwrap();
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.instrs[3].imm_i(), 3);
+    }
+
+    #[test]
+    fn wrong_operand_count_errors() {
+        assert!(assemble("add.i32 r1, r2\n", l32()).is_err());
+        assert!(assemble("rts r1\n", l32()).is_err());
+        assert!(assemble("tdx\n", l32()).is_err());
+    }
+
+    #[test]
+    fn mem_operand_forms() {
+        let p = assemble("lod r1, (r2)\nlod r1, (r2)+8\nsto r1, (r2)+0x10\n", l32()).unwrap();
+        assert_eq!(p.instrs[0].imm, 0);
+        assert_eq!(p.instrs[1].imm, 8);
+        assert_eq!(p.instrs[2].imm, 16);
+    }
+
+    #[test]
+    fn disassemble_roundtrip() {
+        let src = "
+            .mode [w16,dall]
+            tdx r0
+            ldi r1, #-7
+            fadd r2, r1, r0
+            max.u32 r3, r2, r1
+            lod r4, (r0)+12
+            [w1,d0] sto r4, (r0)+3
+            if.le.f32 r2, r4
+            else
+            endif
+            dot r5, r2, r4
+            invsqr r6, r5
+            jsr 14
+            rts
+            init #7
+            stop
+        ";
+        let p = assemble(src, l32()).unwrap();
+        // Re-assemble the disassembly; encodings must be identical.
+        let dis: String = p
+            .instrs
+            .iter()
+            .map(|i| format!("{}\n", i.disasm()))
+            .collect();
+        let p2 = assemble(&dis, l32()).unwrap();
+        assert_eq!(p.words, p2.words);
+    }
+
+    #[test]
+    fn numeric_branch_targets() {
+        let p = assemble("jmp 5\nloop 0\n", l32()).unwrap();
+        assert_eq!(p.instrs[0].imm_u(), 5);
+        assert_eq!(p.instrs[1].imm_u(), 0);
+    }
+
+    #[test]
+    fn fp_mnemonics_imply_fp32() {
+        let p = assemble("fmul r1, r2, r3\ndot r4, r5, r6\nsum r4, r5, r6\ninvsqr r1, r2\n", l32())
+            .unwrap();
+        for i in &p.instrs {
+            assert_eq!(i.ttype, TType::Fp32, "{:?}", i.op);
+        }
+        assert_eq!(p.instrs[1].op.group(), Group::Extension);
+    }
+}

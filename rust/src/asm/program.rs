@@ -1,0 +1,88 @@
+//! Assembled-program container.
+
+use std::collections::BTreeMap;
+
+use crate::isa::{Instr, WordLayout};
+
+/// Mapping from an instruction back to its source line (for errors,
+/// listings and the hazard checker's diagnostics).
+#[derive(Debug, Clone)]
+pub struct SourceLine {
+    pub line_no: usize,
+    pub text: String,
+}
+
+/// An assembled eGPU program: decoded instructions plus the encoded words
+/// exactly as they would sit in the instruction M20Ks.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+    pub words: Vec<u64>,
+    pub labels: BTreeMap<String, usize>,
+    pub layout: WordLayout,
+    pub source: Vec<SourceLine>,
+}
+
+impl Program {
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Number of M20Ks needed to store this program (§5.4): an M20K holds
+    /// 20480 bits (512 × 40), so a program of `n` words of `word_bits`
+    /// packs into ⌈n·word_bits / 20480⌉ blocks — reproducing the paper's
+    /// "1k word program space would require three M20Ks [43-bit IW], and a
+    /// 4k program space nine M20Ks".
+    pub fn instruction_m20ks(&self) -> usize {
+        let n = self.len().max(1);
+        (n * self.layout.word_bits() as usize).div_ceil(20480)
+    }
+
+    /// Assembly listing with addresses, encodings and source.
+    pub fn listing(&self) -> String {
+        let mut out = String::new();
+        let hexw = (self.layout.word_bits() as usize).div_ceil(4);
+        for (pc, (i, w)) in self.instrs.iter().zip(&self.words).enumerate() {
+            out.push_str(&format!("{pc:5}  {w:0hexw$x}  {}\n", i.disasm()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+
+    #[test]
+    fn instruction_m20k_counts_match_paper() {
+        // §5.4: "A single M20K can store 512 40-bit instruction words";
+        // "a 1k word program space would require three M20Ks [43-bit IW],
+        // and a 4k program space nine M20Ks".
+        let l40 = WordLayout::for_regs(16);
+        let l43 = WordLayout::for_regs(32);
+        let mk = |n: usize, layout: WordLayout| Program {
+            instrs: vec![crate::isa::Instr::nop(); n],
+            words: vec![0; n],
+            labels: BTreeMap::new(),
+            layout,
+            source: vec![],
+        };
+        assert_eq!(mk(512, l40).instruction_m20ks(), 1);
+        assert_eq!(mk(1024, l43).instruction_m20ks(), 3);
+        assert_eq!(mk(4096, l43).instruction_m20ks(), 9);
+    }
+
+    #[test]
+    fn listing_contains_every_instruction() {
+        let src = "tdx r0\nfadd r1, r0, r0\nstop\n";
+        let p = assemble(src, WordLayout::for_regs(16)).unwrap();
+        let listing = p.listing();
+        assert_eq!(listing.lines().count(), 3);
+        assert!(listing.contains("fadd r1, r0, r0"));
+    }
+}

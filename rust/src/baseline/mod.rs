@@ -1,0 +1,15 @@
+//! Comparison baselines (paper §2, §7).
+//!
+//! - [`nios`] — a Nios II/e-class scalar soft-RISC instruction-set
+//!   simulator with the paper's cycle yardstick (CPI ≈ 1.7 on most
+//!   benchmarks, ≈ 3 where 32×32 multiplies dominate; 347 MHz at 1100
+//!   ALMs + 3 DSPs). Every eGPU benchmark has a scalar twin in
+//!   [`nios_kernels`] running on it.
+//! - [`flexgrip`] — FlexGrip's published Table 7 numbers (the paper, like
+//!   us, compares against published results rather than a rerun).
+
+pub mod flexgrip;
+pub mod nios;
+pub mod nios_kernels;
+
+pub use nios::{Nios, NiosProgram, NiosStats, NIOS_ALMS, NIOS_DSPS, NIOS_MHZ};

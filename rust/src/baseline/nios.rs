@@ -1,0 +1,407 @@
+//! Nios II/e-class scalar RISC ISS (paper §7's comparison processor).
+//!
+//! The paper uses Nios II/e as the yardstick: a mature, economy soft RISC
+//! — unpipelined, one ALU, data in a word-addressed local memory. We
+//! implement a minimal scalar RISC VM with a per-class cycle model
+//! matching the paper's measured efficiency: "Most of the benchmarks
+//! retired an instruction every 1.7 clock cycles, except for the
+//! matrix-matrix multiplies and FFT, which required about 3 clocks,
+//! because of the way that 32×32 multipliers were implemented." The FP32
+//! arithmetic is replaced by INT32 exactly as the paper did for its Nios
+//! runs.
+
+/// Nios II/e resource cost (§7): 1100 ALMs + 3 DSPs → normalized 1400.
+pub const NIOS_ALMS: u32 = 1100;
+pub const NIOS_DSPS: u32 = 3;
+/// Closed timing at 347 MHz (§7).
+pub const NIOS_MHZ: f64 = 347.0;
+
+/// Register names are plain indices 0..32; r0 is general-purpose here.
+pub type Reg = u8;
+
+/// The scalar instruction set (enough for the five benchmarks).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NInstr {
+    /// rd ← imm
+    Ldi(Reg, i32),
+    /// rd ← ra op rb
+    Add(Reg, Reg, Reg),
+    Sub(Reg, Reg, Reg),
+    Mul(Reg, Reg, Reg),
+    And(Reg, Reg, Reg),
+    Or(Reg, Reg, Reg),
+    Xor(Reg, Reg, Reg),
+    Shl(Reg, Reg, Reg),
+    Shr(Reg, Reg, Reg),
+    Sar(Reg, Reg, Reg),
+    /// rd ← ra + imm
+    AddI(Reg, Reg, i32),
+    /// rd ← ra * imm
+    MulI(Reg, Reg, i32),
+    /// rd ← mem[ra + off]
+    Ld(Reg, Reg, i32),
+    /// mem[ra + off] ← rs
+    St(Reg, Reg, i32),
+    /// conditional branches (target = absolute instruction index)
+    Beq(Reg, Reg, usize),
+    Bne(Reg, Reg, usize),
+    Blt(Reg, Reg, usize),
+    Bge(Reg, Reg, usize),
+    Jmp(usize),
+    Halt,
+}
+
+/// Per-class cycle costs for the II/e-style core. ALU/branch-not-taken are
+/// multi-cycle on the real II/e; these constants are calibrated so the
+/// benchmark mixes land at the paper's CPI ≈ 1.7 (≈ 3 with multiplies).
+const CYC_ALU: u64 = 1;
+const CYC_MUL: u64 = 9; // serialized 32×32 multiply (§7: "about 3 clocks"
+                        // CPI over the whole mix)
+const CYC_MEM: u64 = 3;
+const CYC_BRANCH: u64 = 2;
+const CYC_BRANCH_TAKEN: u64 = 3;
+
+/// An assembled scalar program.
+#[derive(Debug, Clone, Default)]
+pub struct NiosProgram {
+    pub instrs: Vec<NInstr>,
+}
+
+#[derive(Debug, Clone)]
+pub struct NiosStats {
+    pub cycles: u64,
+    pub instructions: u64,
+}
+
+impl NiosStats {
+    pub fn cpi(&self) -> f64 {
+        self.cycles as f64 / self.instructions.max(1) as f64
+    }
+
+    pub fn time_us(&self) -> f64 {
+        self.cycles as f64 / NIOS_MHZ
+    }
+}
+
+/// The scalar machine: 32 registers + word-addressed local memory.
+pub struct Nios {
+    pub regs: [i32; 32],
+    pub mem: Vec<i32>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NiosError(pub String);
+
+impl std::fmt::Display for NiosError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "nios: {}", self.0)
+    }
+}
+
+impl std::error::Error for NiosError {}
+
+impl Nios {
+    pub fn new(mem_words: usize) -> Nios {
+        Nios {
+            regs: [0; 32],
+            mem: vec![0; mem_words],
+        }
+    }
+
+    fn addr(&self, base: Reg, off: i32) -> Result<usize, NiosError> {
+        let a = self.regs[base as usize].wrapping_add(off);
+        if a < 0 || a as usize >= self.mem.len() {
+            return Err(NiosError(format!("address {a} outside local memory")));
+        }
+        Ok(a as usize)
+    }
+
+    /// Run to HALT; returns the cycle/instruction counts.
+    pub fn run(&mut self, prog: &NiosProgram, max_cycles: u64) -> Result<NiosStats, NiosError> {
+        let mut pc = 0usize;
+        let mut cycles = 0u64;
+        let mut instrs = 0u64;
+        loop {
+            let i = *prog
+                .instrs
+                .get(pc)
+                .ok_or_else(|| NiosError(format!("pc {pc} out of program")))?;
+            instrs += 1;
+            let r = &mut self.regs;
+            match i {
+                NInstr::Ldi(d, v) => {
+                    r[d as usize] = v;
+                    cycles += CYC_ALU;
+                    pc += 1;
+                }
+                NInstr::Add(d, a, b) => {
+                    r[d as usize] = r[a as usize].wrapping_add(r[b as usize]);
+                    cycles += CYC_ALU;
+                    pc += 1;
+                }
+                NInstr::Sub(d, a, b) => {
+                    r[d as usize] = r[a as usize].wrapping_sub(r[b as usize]);
+                    cycles += CYC_ALU;
+                    pc += 1;
+                }
+                NInstr::Mul(d, a, b) => {
+                    r[d as usize] = r[a as usize].wrapping_mul(r[b as usize]);
+                    cycles += CYC_MUL;
+                    pc += 1;
+                }
+                NInstr::And(d, a, b) => {
+                    r[d as usize] = r[a as usize] & r[b as usize];
+                    cycles += CYC_ALU;
+                    pc += 1;
+                }
+                NInstr::Or(d, a, b) => {
+                    r[d as usize] = r[a as usize] | r[b as usize];
+                    cycles += CYC_ALU;
+                    pc += 1;
+                }
+                NInstr::Xor(d, a, b) => {
+                    r[d as usize] = r[a as usize] ^ r[b as usize];
+                    cycles += CYC_ALU;
+                    pc += 1;
+                }
+                NInstr::Shl(d, a, b) => {
+                    r[d as usize] = r[a as usize].wrapping_shl(r[b as usize] as u32 & 31);
+                    cycles += CYC_ALU;
+                    pc += 1;
+                }
+                NInstr::Shr(d, a, b) => {
+                    r[d as usize] =
+                        ((r[a as usize] as u32).wrapping_shr(r[b as usize] as u32 & 31)) as i32;
+                    cycles += CYC_ALU;
+                    pc += 1;
+                }
+                NInstr::Sar(d, a, b) => {
+                    r[d as usize] = r[a as usize].wrapping_shr(r[b as usize] as u32 & 31);
+                    cycles += CYC_ALU;
+                    pc += 1;
+                }
+                NInstr::AddI(d, a, v) => {
+                    r[d as usize] = r[a as usize].wrapping_add(v);
+                    cycles += CYC_ALU;
+                    pc += 1;
+                }
+                NInstr::MulI(d, a, v) => {
+                    r[d as usize] = r[a as usize].wrapping_mul(v);
+                    cycles += CYC_MUL;
+                    pc += 1;
+                }
+                NInstr::Ld(d, a, off) => {
+                    let ad = self.addr(a, off)?;
+                    self.regs[d as usize] = self.mem[ad];
+                    cycles += CYC_MEM;
+                    pc += 1;
+                }
+                NInstr::St(s, a, off) => {
+                    let ad = self.addr(a, off)?;
+                    self.mem[ad] = self.regs[s as usize];
+                    cycles += CYC_MEM;
+                    pc += 1;
+                }
+                NInstr::Beq(a, b, t) => {
+                    if r[a as usize] == r[b as usize] {
+                        pc = t;
+                        cycles += CYC_BRANCH_TAKEN;
+                    } else {
+                        pc += 1;
+                        cycles += CYC_BRANCH;
+                    }
+                }
+                NInstr::Bne(a, b, t) => {
+                    if r[a as usize] != r[b as usize] {
+                        pc = t;
+                        cycles += CYC_BRANCH_TAKEN;
+                    } else {
+                        pc += 1;
+                        cycles += CYC_BRANCH;
+                    }
+                }
+                NInstr::Blt(a, b, t) => {
+                    if r[a as usize] < r[b as usize] {
+                        pc = t;
+                        cycles += CYC_BRANCH_TAKEN;
+                    } else {
+                        pc += 1;
+                        cycles += CYC_BRANCH;
+                    }
+                }
+                NInstr::Bge(a, b, t) => {
+                    if r[a as usize] >= r[b as usize] {
+                        pc = t;
+                        cycles += CYC_BRANCH_TAKEN;
+                    } else {
+                        pc += 1;
+                        cycles += CYC_BRANCH;
+                    }
+                }
+                NInstr::Jmp(t) => {
+                    pc = t;
+                    cycles += CYC_BRANCH_TAKEN;
+                }
+                NInstr::Halt => {
+                    return Ok(NiosStats {
+                        cycles,
+                        instructions: instrs,
+                    })
+                }
+            }
+            if cycles > max_cycles {
+                return Err(NiosError(format!("cycle limit {max_cycles} exceeded")));
+            }
+        }
+    }
+}
+
+/// Program builder with forward-label support.
+#[derive(Default)]
+pub struct NiosAsm {
+    instrs: Vec<NInstr>,
+    fixups: Vec<(usize, String)>,
+    labels: std::collections::BTreeMap<String, usize>,
+}
+
+impl NiosAsm {
+    pub fn new() -> NiosAsm {
+        NiosAsm::default()
+    }
+
+    pub fn emit(&mut self, i: NInstr) -> &mut Self {
+        self.instrs.push(i);
+        self
+    }
+
+    pub fn label(&mut self, name: &str) -> &mut Self {
+        assert!(
+            self.labels
+                .insert(name.to_string(), self.instrs.len())
+                .is_none(),
+            "duplicate label {name}"
+        );
+        self
+    }
+
+    /// Emit a branch to a (possibly forward) label.
+    pub fn branch(&mut self, make: impl Fn(usize) -> NInstr, target: &str) -> &mut Self {
+        self.fixups.push((self.instrs.len(), target.to_string()));
+        self.instrs.push(make(usize::MAX));
+        self
+    }
+
+    pub fn finish(mut self) -> NiosProgram {
+        for (at, label) in &self.fixups {
+            let t = *self.labels.get(label).unwrap_or_else(|| {
+                panic!("undefined label {label}");
+            });
+            self.instrs[*at] = match self.instrs[*at] {
+                NInstr::Beq(a, b, _) => NInstr::Beq(a, b, t),
+                NInstr::Bne(a, b, _) => NInstr::Bne(a, b, t),
+                NInstr::Blt(a, b, _) => NInstr::Blt(a, b, t),
+                NInstr::Bge(a, b, _) => NInstr::Bge(a, b, t),
+                NInstr::Jmp(_) => NInstr::Jmp(t),
+                other => panic!("fixup on non-branch {other:?}"),
+            };
+        }
+        NiosProgram {
+            instrs: self.instrs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use NInstr::*;
+
+    #[test]
+    fn arithmetic_and_memory() {
+        let mut a = NiosAsm::new();
+        a.emit(Ldi(1, 6))
+            .emit(Ldi(2, 7))
+            .emit(Mul(3, 1, 2))
+            .emit(St(3, 0, 5))
+            .emit(Ld(4, 0, 5))
+            .emit(Halt);
+        let mut m = Nios::new(16);
+        let s = m.run(&a.finish(), 1000).unwrap();
+        assert_eq!(m.regs[4], 42);
+        assert_eq!(m.mem[5], 42);
+        assert_eq!(s.instructions, 6);
+    }
+
+    #[test]
+    fn loop_with_labels() {
+        // sum 1..=10
+        let mut a = NiosAsm::new();
+        a.emit(Ldi(1, 0)) // acc
+            .emit(Ldi(2, 1)) // i
+            .emit(Ldi(3, 11)) // bound
+            .label("top")
+            .emit(Add(1, 1, 2))
+            .emit(AddI(2, 2, 1))
+            .branch(|t| Blt(2, 3, t), "top")
+            .emit(Halt);
+        let mut m = Nios::new(4);
+        m.run(&a.finish(), 10_000).unwrap();
+        assert_eq!(m.regs[1], 55);
+    }
+
+    #[test]
+    fn forward_branch() {
+        let mut a = NiosAsm::new();
+        a.emit(Ldi(1, 1))
+            .branch(|t| Bne(1, 0, t), "skip")
+            .emit(Ldi(2, 99)) // skipped
+            .label("skip")
+            .emit(Ldi(3, 7))
+            .emit(Halt);
+        let mut m = Nios::new(4);
+        m.run(&a.finish(), 1000).unwrap();
+        assert_eq!(m.regs[2], 0);
+        assert_eq!(m.regs[3], 7);
+    }
+
+    #[test]
+    fn cycle_model_classes() {
+        let mut a = NiosAsm::new();
+        a.emit(Ldi(1, 1)).emit(Mul(2, 1, 1)).emit(Ld(3, 0, 0)).emit(Halt);
+        let mut m = Nios::new(4);
+        let s = m.run(&a.finish(), 1000).unwrap();
+        assert_eq!(s.cycles, CYC_ALU + CYC_MUL + CYC_MEM);
+    }
+
+    #[test]
+    fn memory_fault() {
+        let mut a = NiosAsm::new();
+        a.emit(Ld(1, 0, 100)).emit(Halt);
+        let mut m = Nios::new(4);
+        assert!(m.run(&a.finish(), 1000).is_err());
+    }
+
+    #[test]
+    fn shift_semantics() {
+        let mut a = NiosAsm::new();
+        a.emit(Ldi(1, -16))
+            .emit(Ldi(2, 2))
+            .emit(Shr(3, 1, 2))
+            .emit(Sar(4, 1, 2))
+            .emit(Shl(5, 2, 2))
+            .emit(Halt);
+        let mut m = Nios::new(4);
+        m.run(&a.finish(), 1000).unwrap();
+        assert_eq!(m.regs[3] as u32, 0x3FFFFFFC);
+        assert_eq!(m.regs[4], -4);
+        assert_eq!(m.regs[5], 8);
+    }
+
+    #[test]
+    fn cycle_limit() {
+        let mut a = NiosAsm::new();
+        a.label("x").branch(|t| NInstr::Jmp(t), "x");
+        let mut m = Nios::new(4);
+        assert!(m.run(&a.finish(), 100).is_err());
+    }
+}

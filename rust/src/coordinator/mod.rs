@@ -1,0 +1,434 @@
+//! Multi-core job dispatch and the external 32-bit data bus.
+//!
+//! The eGPU "has a single local data memory ... the loading and unloading
+//! of which has to be managed externally" (§2), over a 32-bit bus whose
+//! cost the paper quantifies: "we also ran all of our benchmarks taking
+//! into account the time to load and unload the data over the 32-bit wide
+//! data bus. The performance impact was only 4.7%, averaged over all
+//! benchmarks" (§7). And "the eGPU only uses 1%-2% of a current mid-range
+//! device ... even if multiple cores are required" (§8).
+//!
+//! This module is that external manager: a [`Coordinator`] owning N eGPU
+//! cores, dispatching queued [`Job`]s to the earliest-free core, and
+//! serializing shared-memory load/unload DMA over one [`DataBus`]. Chained
+//! jobs (`keep_data`) skip the bus entirely — the paper's "multiple
+//! algorithms to the same data" mode.
+
+use crate::kernels::Kernel;
+use crate::sim::config::EgpuConfig;
+use crate::sim::{Machine, RunStats, SimError};
+
+/// The external 32-bit data bus: one 32-bit word per bus cycle, clocked at
+/// the core frequency (§7 measures load/unload at the core clock).
+#[derive(Debug, Clone, Copy)]
+pub struct DataBus {
+    pub mhz: f64,
+}
+
+impl DataBus {
+    pub fn new(mhz: f64) -> DataBus {
+        DataBus { mhz }
+    }
+
+    /// Cycles to move `words` 32-bit words.
+    pub fn transfer_cycles(&self, words: usize) -> u64 {
+        words as u64
+    }
+}
+
+/// One unit of work: a kernel plus its data movement.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub kernel: Kernel,
+    /// Blocks DMA'd into shared memory before the run.
+    pub loads: Vec<(usize, Vec<u32>)>,
+    /// `(base, len)` blocks DMA'd out after the run.
+    pub unloads: Vec<(usize, usize)>,
+    /// Chain onto the previous job's shared memory: skip the load DMA and
+    /// do not clear shared memory (§7: "there is no loading and unloading
+    /// of data between different algorithms").
+    pub keep_data: bool,
+}
+
+impl Job {
+    pub fn new(kernel: Kernel) -> Job {
+        Job {
+            kernel,
+            loads: Vec::new(),
+            unloads: Vec::new(),
+            keep_data: false,
+        }
+    }
+
+    pub fn load(mut self, base: usize, data: Vec<u32>) -> Job {
+        self.loads.push((base, data));
+        self
+    }
+
+    pub fn unload(mut self, base: usize, len: usize) -> Job {
+        self.unloads.push((base, len));
+        self
+    }
+
+    pub fn chained(mut self) -> Job {
+        self.keep_data = true;
+        self
+    }
+
+    fn load_words(&self) -> usize {
+        if self.keep_data {
+            0
+        } else {
+            self.loads.iter().map(|(_, d)| d.len()).sum()
+        }
+    }
+
+    fn unload_words(&self) -> usize {
+        self.unloads.iter().map(|&(_, l)| l).sum()
+    }
+}
+
+/// Completed-job record with its timeline on the shared bus + core.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub name: String,
+    pub core: usize,
+    /// Kernel cycles (the paper's core-performance metric).
+    pub compute_cycles: u64,
+    /// Bus cycles spent on load + unload DMA.
+    pub bus_cycles: u64,
+    /// Timeline: job start (bus acquisition) and end (unload complete).
+    pub start: u64,
+    pub end: u64,
+    pub stats: RunStats,
+    /// Unloaded blocks, in `unloads` order.
+    pub outputs: Vec<Vec<u32>>,
+}
+
+impl JobResult {
+    /// Fraction of end-to-end time spent on the bus (§7's 4.7% claim).
+    pub fn bus_overhead(&self) -> f64 {
+        self.bus_cycles as f64 / (self.bus_cycles + self.compute_cycles) as f64
+    }
+}
+
+/// Busy-interval calendar for the shared bus: reservations are placed in
+/// the first gap large enough, never earlier than requested.
+#[derive(Debug, Clone, Default)]
+struct BusCalendar {
+    /// Sorted, disjoint `(start, end)` reservations.
+    busy: Vec<(u64, u64)>,
+}
+
+impl BusCalendar {
+    /// Reserve `duration` cycles starting no earlier than `earliest`;
+    /// returns the granted start cycle.
+    fn reserve(&mut self, earliest: u64, duration: u64) -> u64 {
+        if duration == 0 {
+            return earliest;
+        }
+        let mut start = earliest;
+        let mut at = 0usize;
+        for (i, &(b, e)) in self.busy.iter().enumerate() {
+            if start + duration <= b {
+                at = i;
+                break;
+            }
+            start = start.max(e);
+            at = i + 1;
+        }
+        self.busy.insert(at, (start, start + duration));
+        // Merge adjacent intervals to keep the calendar small.
+        let mut merged: Vec<(u64, u64)> = Vec::with_capacity(self.busy.len());
+        for &(b, e) in &self.busy {
+            match merged.last_mut() {
+                Some(last) if b <= last.1 => last.1 = last.1.max(e),
+                _ => merged.push((b, e)),
+            }
+        }
+        self.busy = merged;
+        start
+    }
+}
+
+/// N-core dispatcher with a single shared data bus.
+pub struct Coordinator {
+    cfg: EgpuConfig,
+    bus: DataBus,
+    cores: Vec<Machine>,
+    /// Cycle at which each core finishes its current work.
+    core_free: Vec<u64>,
+    /// Shared-bus reservation calendar.
+    bus_cal: BusCalendar,
+    queue: Vec<Job>,
+}
+
+impl Coordinator {
+    pub fn new(cfg: EgpuConfig, num_cores: usize) -> Result<Coordinator, SimError> {
+        assert!(num_cores >= 1);
+        let cores = (0..num_cores)
+            .map(|_| Machine::new(cfg.clone()))
+            .collect::<Result<Vec<_>, _>>()?;
+        Ok(Coordinator {
+            bus: DataBus::new(cfg.core_mhz()),
+            core_free: vec![0; num_cores],
+            bus_cal: BusCalendar::default(),
+            queue: Vec::new(),
+            cfg,
+            cores,
+        })
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.cores.len()
+    }
+
+    pub fn config(&self) -> &EgpuConfig {
+        &self.cfg
+    }
+
+    /// Queue a job (FIFO dispatch order).
+    pub fn submit(&mut self, job: Job) {
+        self.queue.push(job);
+    }
+
+    /// Dispatch every queued job: earliest-free-core policy, bus DMA
+    /// serialized across cores, compute overlapped. Chained jobs must run
+    /// on the core holding their data, so they go to the same core as the
+    /// previous job.
+    pub fn run_all(&mut self) -> Result<Vec<JobResult>, SimError> {
+        let mut results = Vec::with_capacity(self.queue.len());
+        let jobs = std::mem::take(&mut self.queue);
+        let mut last_core = 0usize;
+        for job in jobs {
+            let core = if job.keep_data {
+                last_core
+            } else {
+                (0..self.cores.len())
+                    .min_by_key(|&c| self.core_free[c])
+                    .unwrap()
+            };
+            last_core = core;
+            let r = self.run_on(core, job)?;
+            results.push(r);
+        }
+        Ok(results)
+    }
+
+    fn run_on(&mut self, core: usize, job: Job) -> Result<JobResult, SimError> {
+        let prog = job
+            .kernel
+            .assemble(&self.cfg)
+            .map_err(|msg| SimError { pc: 0, message: msg })?;
+        let m = &mut self.cores[core];
+
+        // Bus phase 1: load DMA (a reservation on the shared bus).
+        let load_cycles = self.bus.transfer_cycles(job.load_words());
+        let start = self.bus_cal.reserve(self.core_free[core], load_cycles);
+        let compute_start = start + load_cycles;
+
+        if !job.keep_data {
+            m.shared_mut().fill(0);
+        }
+        m.load_program(prog)?;
+        m.set_threads(job.kernel.threads)?;
+        m.set_dim_x(job.kernel.dim_x)?;
+        if !job.keep_data {
+            for (base, data) in &job.loads {
+                m.shared_mut().write_block(*base, data);
+            }
+        }
+        let stats = m.run(10_000_000_000)?;
+
+        // Bus phase 2: unload DMA.
+        let unload_cycles = self.bus.transfer_cycles(job.unload_words());
+        let compute_end = compute_start + stats.cycles;
+        let unload_start = self.bus_cal.reserve(compute_end, unload_cycles);
+        let end = unload_start + unload_cycles;
+        self.core_free[core] = end;
+
+        let outputs = job
+            .unloads
+            .iter()
+            .map(|&(base, len)| m.shared().read_block(base, len).to_vec())
+            .collect();
+        Ok(JobResult {
+            name: job.kernel.name.clone(),
+            core,
+            compute_cycles: stats.cycles,
+            bus_cycles: load_cycles + unload_cycles,
+            start,
+            end,
+            stats,
+            outputs,
+        })
+    }
+
+    /// Completion cycle of the last finishing core.
+    pub fn makespan(&self) -> u64 {
+        self.core_free.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Makespan in microseconds at the configured core clock.
+    pub fn makespan_us(&self) -> f64 {
+        self.makespan() as f64 / self.cfg.core_mhz()
+    }
+}
+
+/// Unweighted mean of per-job bus overheads.
+pub fn average_bus_overhead(results: &[JobResult]) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results.iter().map(JobResult::bus_overhead).sum::<f64>() / results.len() as f64
+}
+
+/// Time-weighted bus overhead: total bus cycles over total end-to-end
+/// cycles. This is the §7 metric — "the performance impact was only 4.7%,
+/// averaged over all benchmarks" — where long-running kernels (MMM)
+/// dominate the aggregate and amortize their data movement.
+pub fn aggregate_bus_overhead(results: &[JobResult]) -> f64 {
+    let bus: u64 = results.iter().map(|r| r.bus_cycles).sum();
+    let compute: u64 = results.iter().map(|r| r.compute_cycles).sum();
+    if bus + compute == 0 {
+        return 0.0;
+    }
+    bus as f64 / (bus + compute) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{f32_bits, reduction};
+    use crate::sim::config::MemoryMode;
+
+    fn job(n: usize) -> Job {
+        let data: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+        Job::new(reduction::reduction(n))
+            .load(0, f32_bits(&data))
+            .unload(n, 1)
+    }
+
+    fn cfg() -> EgpuConfig {
+        EgpuConfig::benchmark(MemoryMode::Dp, false)
+    }
+
+    #[test]
+    fn single_core_runs_jobs() {
+        let mut c = Coordinator::new(cfg(), 1).unwrap();
+        c.submit(job(32));
+        c.submit(job(64));
+        let rs = c.run_all().unwrap();
+        assert_eq!(rs.len(), 2);
+        for (r, n) in rs.iter().zip([32usize, 64]) {
+            let got = f32::from_bits(r.outputs[0][0]);
+            let want: f32 = (0..n).map(|i| i as f32 * 0.25).sum();
+            assert!((got - want).abs() < 1e-2, "{}: {got} vs {want}", r.name);
+            assert_eq!(r.core, 0);
+        }
+        // FIFO on one core: the second job starts after the first ends.
+        assert!(rs[1].start >= rs[0].end);
+    }
+
+    #[test]
+    fn multi_core_overlaps_compute() {
+        // Bus-bound jobs (reduction: ~129 bus vs ~287 compute cycles)
+        // overlap partially; the serialized bus bounds the speedup.
+        let mut one = Coordinator::new(cfg(), 1).unwrap();
+        let mut four = Coordinator::new(cfg(), 4).unwrap();
+        for c in [&mut one, &mut four] {
+            for _ in 0..4 {
+                c.submit(job(128));
+            }
+            c.run_all().unwrap();
+        }
+        assert!(
+            four.makespan() < one.makespan(),
+            "4 cores {} vs 1 core {}",
+            four.makespan(),
+            one.makespan()
+        );
+        assert!(four.makespan() > one.makespan() / 4);
+    }
+
+    #[test]
+    fn compute_heavy_jobs_scale_nearly_linearly() {
+        use crate::kernels::fft;
+        let n = 128;
+        let re: Vec<f32> = (0..n).map(|i| (i as f32 * 0.1).sin()).collect();
+        let im = vec![0f32; n];
+        let mk_job = || {
+            let mut j = Job::new(fft::fft(n)).unload(0, 2 * n);
+            for (base, data) in fft::shared_init(&re, &im) {
+                j = j.load(base, data);
+            }
+            j
+        };
+        let mut one = Coordinator::new(cfg(), 1).unwrap();
+        let mut four = Coordinator::new(cfg(), 4).unwrap();
+        for c in [&mut one, &mut four] {
+            for _ in 0..4 {
+                c.submit(mk_job());
+            }
+            c.run_all().unwrap();
+        }
+        // FFT-128: ~3.5k compute vs ~0.7k bus cycles → near-4x overlap.
+        assert!(
+            four.makespan() * 2 < one.makespan(),
+            "4 cores {} vs 1 core {}",
+            four.makespan(),
+            one.makespan()
+        );
+    }
+
+    #[test]
+    fn chained_jobs_skip_bus_and_stay_on_core() {
+        // Transpose reads [0, n²) without mutating it, so a chained
+        // second transpose sees the data the first job loaded.
+        use crate::kernels::transpose;
+        let n = 32;
+        let data: Vec<u32> = (0..(n * n) as u32).collect();
+        let mut c = Coordinator::new(cfg(), 4).unwrap();
+        c.submit(Job::new(transpose::transpose(n)).load(0, data.clone()));
+        c.submit(Job::new(transpose::transpose(n)).unload(n * n, n * n).chained());
+        let rs = c.run_all().unwrap();
+        assert_eq!(rs[0].core, rs[1].core, "chained job must stay on core");
+        assert_eq!(rs[1].bus_cycles, (n * n) as u64, "only the unload DMA");
+        assert_eq!(rs[1].outputs[0], transpose::oracle(&data, n));
+    }
+
+    #[test]
+    fn bus_overhead_small_for_compute_heavy_jobs() {
+        let mut c = Coordinator::new(cfg(), 1).unwrap();
+        c.submit(job(128));
+        let rs = c.run_all().unwrap();
+        // 129 bus words vs ~230 compute cycles: meaningful but bounded.
+        let o = rs[0].bus_overhead();
+        assert!((0.01..0.6).contains(&o), "overhead {o}");
+    }
+
+    #[test]
+    fn fresh_jobs_clear_shared_memory() {
+        let n = 32;
+        let mut c = Coordinator::new(cfg(), 1).unwrap();
+        c.submit(job(n));
+        // Second job loads zeros; result must be 0, not stale data.
+        c.submit(
+            Job::new(reduction::reduction(n))
+                .load(0, vec![0u32; n])
+                .unload(n, 1),
+        );
+        let rs = c.run_all().unwrap();
+        assert_eq!(f32::from_bits(rs[1].outputs[0][0]), 0.0);
+    }
+
+    #[test]
+    fn makespan_tracks_cycles() {
+        let mut c = Coordinator::new(cfg(), 2).unwrap();
+        assert_eq!(c.makespan(), 0);
+        c.submit(job(32));
+        c.run_all().unwrap();
+        assert!(c.makespan() > 0);
+        assert!(c.makespan_us() > 0.0);
+    }
+}

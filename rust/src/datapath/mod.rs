@@ -1,0 +1,163 @@
+//! Wavefront datapath backends.
+//!
+//! The simulator separates *coordination* (sequencer, thread-space
+//! control, port arbitration, predicates — `sim`) from the *datapath*
+//! (what the DSP blocks and the integer ALU compute). The datapath has two
+//! interchangeable implementations:
+//!
+//! - [`native`] — bit-exact rust lane functions (default; fast),
+//! - [`xla`] — the AOT-compiled HLO artifacts executed through PJRT
+//!   (`--datapath xla`), proving the python/JAX/Pallas compile path
+//!   implements the same machine.
+//!
+//! [`opmap`] is the rust half of the op-index contract with
+//! `python/compile/opmap.py` (checked against `artifacts/opmap.json`).
+
+pub mod native;
+pub mod opmap;
+pub mod xla;
+
+pub use opmap::{FpOp, IntOp};
+
+use crate::isa::{Instr, Opcode, TType};
+
+/// Which datapath implementation executes wavefront blocks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    #[default]
+    Native,
+    Xla,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            other => Err(format!("unknown datapath '{other}' (native|xla)")),
+        }
+    }
+}
+
+/// A pluggable wavefront-block executor (the XLA backend implements this;
+/// the native path is inlined in the machine for speed and validated
+/// against it by the equivalence tests).
+///
+/// Blocks are `(depth, 16)` row-major `u32` lanes; `mask` is the combined
+/// thread-space-selection × predicate `thread_active` gate. `out` receives
+/// the new Rd block (old values where mask is 0).
+pub trait BlockExec {
+    fn fp_block(
+        &mut self,
+        op: FpOp,
+        a: &[u32],
+        b: &[u32],
+        old: &[u32],
+        mask: &[u8],
+        out: &mut [u32],
+    ) -> Result<(), String>;
+
+    fn int_block(
+        &mut self,
+        op: IntOp,
+        precision: u8,
+        a: &[u32],
+        b: &[u32],
+        old: &[u32],
+        mask: &[u8],
+        out: &mut [u32],
+    ) -> Result<(), String>;
+
+    /// DOT (or SUM with b = ones) over the masked block → scalar f32.
+    fn dot_block(&mut self, a: &[u32], b: &[u32], mask: &[u8]) -> Result<f32, String>;
+
+    /// Human-readable backend name for logs.
+    fn name(&self) -> &'static str;
+}
+
+/// Classified datapath operation for one instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DpOp {
+    Fp(FpOp),
+    Int(IntOp),
+    /// DOT (a·b) or SUM (Σa, realized as a·1) extension core.
+    Dot { sum_only: bool },
+}
+
+/// Resolve an instruction's (opcode, TYPE) pair to its datapath op.
+/// Returns `None` for non-datapath instructions (control, memory, ...).
+pub fn classify(i: &Instr) -> Option<DpOp> {
+    use Opcode::*;
+    let unsigned = i.ttype == TType::Uint;
+    let op = match i.op {
+        FAdd => DpOp::Fp(FpOp::FAdd),
+        FSub => DpOp::Fp(FpOp::FSub),
+        FNeg => DpOp::Fp(FpOp::FNeg),
+        FAbs => DpOp::Fp(FpOp::FAbs),
+        FMul => DpOp::Fp(FpOp::FMul),
+        FMax => DpOp::Fp(FpOp::FMax),
+        FMin => DpOp::Fp(FpOp::FMin),
+        InvSqr => DpOp::Fp(FpOp::FInvSqrt),
+        Add => DpOp::Int(IntOp::Add),
+        Sub => DpOp::Int(IntOp::Sub),
+        Neg => DpOp::Int(IntOp::Neg),
+        Abs => DpOp::Int(IntOp::Abs),
+        Mul16Lo => DpOp::Int(IntOp::Mul16Lo),
+        Mul16Hi => DpOp::Int(IntOp::Mul16Hi),
+        Mul24Lo => DpOp::Int(IntOp::Mul24Lo),
+        Mul24Hi => DpOp::Int(IntOp::Mul24Hi),
+        And => DpOp::Int(IntOp::And),
+        Or => DpOp::Int(IntOp::Or),
+        Xor => DpOp::Int(IntOp::Xor),
+        Not => DpOp::Int(IntOp::Not),
+        CNot => DpOp::Int(IntOp::CNot),
+        Bvs => DpOp::Int(IntOp::Bvs),
+        Shl => DpOp::Int(IntOp::Shl),
+        Shr => DpOp::Int(if unsigned { IntOp::ShrL } else { IntOp::ShrA }),
+        Pop => DpOp::Int(IntOp::Pop),
+        Max => DpOp::Int(if unsigned { IntOp::MaxU } else { IntOp::MaxS }),
+        Min => DpOp::Int(if unsigned { IntOp::MinU } else { IntOp::MinS }),
+        Dot => DpOp::Dot { sum_only: false },
+        Sum => DpOp::Dot { sum_only: true },
+        _ => return None,
+    };
+    Some(op)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Instr;
+
+    #[test]
+    fn classify_type_variants() {
+        let mut i = Instr::new(Opcode::Shr);
+        i.ttype = TType::Uint;
+        assert_eq!(classify(&i), Some(DpOp::Int(IntOp::ShrL)));
+        i.ttype = TType::Int;
+        assert_eq!(classify(&i), Some(DpOp::Int(IntOp::ShrA)));
+        let mut m = Instr::new(Opcode::Max);
+        m.ttype = TType::Uint;
+        assert_eq!(classify(&m), Some(DpOp::Int(IntOp::MaxU)));
+    }
+
+    #[test]
+    fn classify_non_datapath() {
+        for op in [Opcode::Nop, Opcode::Jmp, Opcode::Lod, Opcode::Sto, Opcode::If] {
+            assert_eq!(classify(&Instr::new(op)), None);
+        }
+    }
+
+    #[test]
+    fn classify_extensions() {
+        assert_eq!(
+            classify(&Instr::new(Opcode::Dot)),
+            Some(DpOp::Dot { sum_only: false })
+        );
+        assert_eq!(
+            classify(&Instr::new(Opcode::InvSqr)),
+            Some(DpOp::Fp(FpOp::FInvSqrt))
+        );
+    }
+}

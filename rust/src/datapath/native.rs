@@ -1,0 +1,204 @@
+//! Bit-exact native rust datapath (the default backend).
+//!
+//! Lane semantics are the single rust source of truth for what the DSP
+//! blocks / integer ALU compute; they must agree exactly with
+//! `python/compile/kernels/ref.py` (enforced by the native↔xla
+//! equivalence integration tests, since the artifacts are generated from
+//! the python kernels).
+//!
+//! Register lanes are `u32` bit patterns; FP ops bit-cast to `f32`.
+
+use super::{FpOp, IntOp};
+
+/// One FP32 lane operation (a DSP-block op).
+#[inline]
+pub fn fp_lane(op: FpOp, a: u32, b: u32) -> u32 {
+    let fa = f32::from_bits(a);
+    let fb = f32::from_bits(b);
+    let r = match op {
+        FpOp::FAdd => fa + fb,
+        FpOp::FSub => fa - fb,
+        FpOp::FNeg => -fa,
+        FpOp::FAbs => fa.abs(),
+        FpOp::FMul => fa * fb,
+        // IEEE maxNum/minNum as XLA implements maximum/minimum: NaN
+        // propagates; +0 > -0 is not distinguished by rust's max, so use
+        // explicit compare chains matching XLA semantics.
+        FpOp::FMax => {
+            if fa.is_nan() || fb.is_nan() {
+                f32::NAN
+            } else if fa > fb {
+                fa
+            } else {
+                fb
+            }
+        }
+        FpOp::FMin => {
+            if fa.is_nan() || fb.is_nan() {
+                f32::NAN
+            } else if fa < fb {
+                fa
+            } else {
+                fb
+            }
+        }
+        FpOp::FInvSqrt => 1.0 / fa.sqrt(),
+    };
+    r.to_bits()
+}
+
+#[inline]
+fn sext16(x: u32) -> i32 {
+    (x as i32) << 16 >> 16
+}
+
+#[inline]
+fn sext24(x: u32) -> i32 {
+    (x as i32) << 8 >> 8
+}
+
+/// One integer lane operation (the Table 6 soft-logic ALU).
+/// `precision` is the configured ALU precision (16 truncates results).
+#[inline]
+pub fn int_lane(op: IntOp, a: u32, b: u32, precision: u8) -> u32 {
+    let ia = a as i32;
+    let ib = b as i32;
+    let sh = b & 31;
+    let r: u32 = match op {
+        IntOp::Add => ia.wrapping_add(ib) as u32,
+        IntOp::Sub => ia.wrapping_sub(ib) as u32,
+        IntOp::Neg => ia.wrapping_neg() as u32,
+        IntOp::Abs => ia.wrapping_abs() as u32,
+        IntOp::Mul16Lo => sext16(a).wrapping_mul(sext16(b)) as u32,
+        IntOp::Mul16Hi => (sext16(a).wrapping_mul(sext16(b)) >> 16) as u32,
+        IntOp::Mul24Lo => {
+            let p = (sext24(a) as i64).wrapping_mul(sext24(b) as i64);
+            p as u32
+        }
+        IntOp::Mul24Hi => {
+            let p = (sext24(a) as i64).wrapping_mul(sext24(b) as i64);
+            (p >> 24) as u32
+        }
+        IntOp::And => a & b,
+        IntOp::Or => a | b,
+        IntOp::Xor => a ^ b,
+        IntOp::Not => !a,
+        IntOp::CNot => (a == 0) as u32,
+        IntOp::Bvs => a.reverse_bits(),
+        IntOp::Shl => a.wrapping_shl(sh),
+        IntOp::ShrL => a.wrapping_shr(sh),
+        IntOp::ShrA => (ia >> sh) as u32,
+        IntOp::Pop => a.count_ones(),
+        IntOp::MaxS => ia.max(ib) as u32,
+        IntOp::MinS => ia.min(ib) as u32,
+        IntOp::MaxU => a.max(b),
+        IntOp::MinU => a.min(b),
+    };
+    if precision == 16 {
+        r & 0xFFFF
+    } else {
+        r
+    }
+}
+
+/// The DOT extension core's accumulation: wavefront-major, row-summed —
+/// the same order the Pallas grid accumulates, so native and xla agree to
+/// f32 rounding. `rows` iterates wavefronts; each row is ≤16 active lanes.
+pub fn dot_accumulate(rows: impl Iterator<Item = f32>) -> f32 {
+    let mut acc = 0f32;
+    for r in rows {
+        acc += r;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp_basic() {
+        let f = |x: f32| x.to_bits();
+        assert_eq!(fp_lane(FpOp::FAdd, f(1.5), f(2.25)), f(3.75));
+        assert_eq!(fp_lane(FpOp::FSub, f(1.0), f(3.0)), f(-2.0));
+        assert_eq!(fp_lane(FpOp::FNeg, f(7.0), 0), f(-7.0));
+        assert_eq!(fp_lane(FpOp::FAbs, f(-7.0), 0), f(7.0));
+        assert_eq!(fp_lane(FpOp::FMul, f(3.0), f(-2.0)), f(-6.0));
+        assert_eq!(fp_lane(FpOp::FMax, f(3.0), f(-2.0)), f(3.0));
+        assert_eq!(fp_lane(FpOp::FMin, f(3.0), f(-2.0)), f(-2.0));
+        assert_eq!(fp_lane(FpOp::FInvSqrt, f(4.0), 0), f(0.5));
+    }
+
+    #[test]
+    fn fp_nan_propagates_in_max_min() {
+        let nan = f32::NAN.to_bits();
+        let one = 1f32.to_bits();
+        assert!(f32::from_bits(fp_lane(FpOp::FMax, nan, one)).is_nan());
+        assert!(f32::from_bits(fp_lane(FpOp::FMin, one, nan)).is_nan());
+    }
+
+    #[test]
+    fn int_wrapping() {
+        assert_eq!(int_lane(IntOp::Add, i32::MAX as u32, 1, 32), i32::MIN as u32);
+        assert_eq!(int_lane(IntOp::Neg, i32::MIN as u32, 0, 32), i32::MIN as u32);
+        assert_eq!(int_lane(IntOp::Abs, i32::MIN as u32, 0, 32), i32::MIN as u32);
+    }
+
+    #[test]
+    fn int_mul16() {
+        // -3 (as 16-bit 0xFFFD) * 7 = -21, full product in LO.
+        assert_eq!(int_lane(IntOp::Mul16Lo, 0xFFFD, 7, 32) as i32, -21);
+        assert_eq!(int_lane(IntOp::Mul16Hi, 0xFFFD, 7, 32) as i32, -21 >> 16);
+    }
+
+    #[test]
+    fn int_mul24_48bit() {
+        let v = 0x7FFFFFu32;
+        let p = (v as i64) * (v as i64);
+        assert_eq!(int_lane(IntOp::Mul24Lo, v, v, 32), p as u32);
+        assert_eq!(int_lane(IntOp::Mul24Hi, v, v, 32), (p >> 24) as u32);
+    }
+
+    #[test]
+    fn int_shifts() {
+        assert_eq!(int_lane(IntOp::Shl, 1, 33, 32), 2); // amount & 31
+        assert_eq!(int_lane(IntOp::ShrA, (-16i32) as u32, 2, 32) as i32, -4);
+        assert_eq!(int_lane(IntOp::ShrL, (-16i32) as u32, 2, 32), 0x3FFFFFFC);
+    }
+
+    #[test]
+    fn int_bit_ops() {
+        assert_eq!(int_lane(IntOp::Bvs, 1, 0, 32), 0x80000000);
+        assert_eq!(int_lane(IntOp::Bvs, 0b1010, 0, 32), 0x50000000);
+        assert_eq!(int_lane(IntOp::Pop, 0xFF, 0, 32), 8);
+        assert_eq!(int_lane(IntOp::Pop, u32::MAX, 0, 32), 32);
+        assert_eq!(int_lane(IntOp::CNot, 0, 0, 32), 1);
+        assert_eq!(int_lane(IntOp::CNot, 5, 0, 32), 0);
+        assert_eq!(int_lane(IntOp::Not, 0, 0, 32), u32::MAX);
+    }
+
+    #[test]
+    fn int_signed_vs_unsigned_minmax() {
+        let m1 = (-1i32) as u32;
+        assert_eq!(int_lane(IntOp::MaxS, m1, 1, 32), 1);
+        assert_eq!(int_lane(IntOp::MaxU, m1, 1, 32), m1);
+        assert_eq!(int_lane(IntOp::MinS, m1, 1, 32), m1);
+        assert_eq!(int_lane(IntOp::MinU, m1, 1, 32), 1);
+    }
+
+    #[test]
+    fn precision_16_truncates() {
+        assert_eq!(int_lane(IntOp::Add, 0x12344, 1, 16), (0x12345) & 0xFFFF);
+        assert_eq!(int_lane(IntOp::Not, 0, 0, 16), 0xFFFF);
+    }
+
+    #[test]
+    fn bvs_involution() {
+        let mut x: u32 = 0x2545F491;
+        for _ in 0..10 {
+            let r = int_lane(IntOp::Bvs, x, 0, 32);
+            assert_eq!(int_lane(IntOp::Bvs, r, 0, 32), x);
+            x = x.wrapping_mul(2654435761).wrapping_add(1);
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! The datapath op-index contract (rust half).
+//!
+//! Indices MUST match `python/compile/opmap.py` — `aot.py` writes them to
+//! `artifacts/opmap.json` and [`verify_opmap_json`] rejects any drift
+//! before the XLA backend is allowed to execute.
+
+/// FP32 lane ops, in artifact switch order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum FpOp {
+    FAdd = 0,
+    FSub = 1,
+    FNeg = 2,
+    FAbs = 3,
+    FMul = 4,
+    FMax = 5,
+    FMin = 6,
+    FInvSqrt = 7,
+}
+
+impl FpOp {
+    pub const COUNT: usize = 8;
+    pub const ALL: [FpOp; Self::COUNT] = [
+        FpOp::FAdd,
+        FpOp::FSub,
+        FpOp::FNeg,
+        FpOp::FAbs,
+        FpOp::FMul,
+        FpOp::FMax,
+        FpOp::FMin,
+        FpOp::FInvSqrt,
+    ];
+
+    pub fn index(self) -> i32 {
+        self as i32
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FpOp::FAdd => "fadd",
+            FpOp::FSub => "fsub",
+            FpOp::FNeg => "fneg",
+            FpOp::FAbs => "fabs",
+            FpOp::FMul => "fmul",
+            FpOp::FMax => "fmax",
+            FpOp::FMin => "fmin",
+            FpOp::FInvSqrt => "finvsqrt",
+        }
+    }
+}
+
+/// Integer lane ops, in artifact switch order. TYPE variants that change
+/// semantics (shift sign, max/min sign) are distinct indices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum IntOp {
+    Add = 0,
+    Sub = 1,
+    Neg = 2,
+    Abs = 3,
+    Mul16Lo = 4,
+    Mul16Hi = 5,
+    Mul24Lo = 6,
+    Mul24Hi = 7,
+    And = 8,
+    Or = 9,
+    Xor = 10,
+    Not = 11,
+    CNot = 12,
+    Bvs = 13,
+    Shl = 14,
+    ShrL = 15,
+    ShrA = 16,
+    Pop = 17,
+    MaxS = 18,
+    MinS = 19,
+    MaxU = 20,
+    MinU = 21,
+}
+
+impl IntOp {
+    pub const COUNT: usize = 22;
+    pub const ALL: [IntOp; Self::COUNT] = [
+        IntOp::Add,
+        IntOp::Sub,
+        IntOp::Neg,
+        IntOp::Abs,
+        IntOp::Mul16Lo,
+        IntOp::Mul16Hi,
+        IntOp::Mul24Lo,
+        IntOp::Mul24Hi,
+        IntOp::And,
+        IntOp::Or,
+        IntOp::Xor,
+        IntOp::Not,
+        IntOp::CNot,
+        IntOp::Bvs,
+        IntOp::Shl,
+        IntOp::ShrL,
+        IntOp::ShrA,
+        IntOp::Pop,
+        IntOp::MaxS,
+        IntOp::MinS,
+        IntOp::MaxU,
+        IntOp::MinU,
+    ];
+
+    pub fn index(self) -> i32 {
+        self as i32
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            IntOp::Add => "add",
+            IntOp::Sub => "sub",
+            IntOp::Neg => "neg",
+            IntOp::Abs => "abs",
+            IntOp::Mul16Lo => "mul16lo",
+            IntOp::Mul16Hi => "mul16hi",
+            IntOp::Mul24Lo => "mul24lo",
+            IntOp::Mul24Hi => "mul24hi",
+            IntOp::And => "and",
+            IntOp::Or => "or",
+            IntOp::Xor => "xor",
+            IntOp::Not => "not",
+            IntOp::CNot => "cnot",
+            IntOp::Bvs => "bvs",
+            IntOp::Shl => "shl",
+            IntOp::ShrL => "shr_l",
+            IntOp::ShrA => "shr_a",
+            IntOp::Pop => "pop",
+            IntOp::MaxS => "max_s",
+            IntOp::MinS => "min_s",
+            IntOp::MaxU => "max_u",
+            IntOp::MinU => "min_u",
+        }
+    }
+}
+
+/// Verify `artifacts/opmap.json` (written by aot.py) matches these enums.
+///
+/// The file is small JSON; we avoid a JSON dependency (offline image) with
+/// a targeted extraction of the two string arrays.
+pub fn verify_opmap_json(json: &str) -> Result<(), String> {
+    let fp = extract_array(json, "fp_ops").ok_or("opmap.json: missing fp_ops")?;
+    let int = extract_array(json, "int_ops").ok_or("opmap.json: missing int_ops")?;
+    let want_fp: Vec<&str> = FpOp::ALL.iter().map(|o| o.name()).collect();
+    let want_int: Vec<&str> = IntOp::ALL.iter().map(|o| o.name()).collect();
+    if fp != want_fp {
+        return Err(format!("fp op contract drift: artifact {fp:?} != rust {want_fp:?}"));
+    }
+    if int != want_int {
+        return Err(format!(
+            "int op contract drift: artifact {int:?} != rust {want_int:?}"
+        ));
+    }
+    Ok(())
+}
+
+/// Extract `"key": [ "a", "b", ... ]` string arrays from simple JSON.
+fn extract_array(json: &str, key: &str) -> Option<Vec<String>> {
+    let kpos = json.find(&format!("\"{key}\""))?;
+    let open = json[kpos..].find('[')? + kpos;
+    let close = json[open..].find(']')? + open;
+    let inner = &json[open + 1..close];
+    Some(
+        inner
+            .split(',')
+            .map(|s| s.trim().trim_matches('"').to_string())
+            .filter(|s| !s.is_empty())
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indices_are_contiguous() {
+        for (i, op) in FpOp::ALL.iter().enumerate() {
+            assert_eq!(op.index(), i as i32);
+        }
+        for (i, op) in IntOp::ALL.iter().enumerate() {
+            assert_eq!(op.index(), i as i32);
+        }
+    }
+
+    #[test]
+    fn verify_accepts_matching_json() {
+        let fp: Vec<String> = FpOp::ALL.iter().map(|o| format!("\"{}\"", o.name())).collect();
+        let int: Vec<String> = IntOp::ALL.iter().map(|o| format!("\"{}\"", o.name())).collect();
+        let json = format!(
+            "{{\"fp_ops\": [{}], \"int_ops\": [{}], \"depths\": [32, 64]}}",
+            fp.join(", "),
+            int.join(", ")
+        );
+        verify_opmap_json(&json).unwrap();
+    }
+
+    #[test]
+    fn verify_rejects_drift() {
+        let json = "{\"fp_ops\": [\"fadd\", \"fmul\"], \"int_ops\": [\"add\"]}";
+        assert!(verify_opmap_json(json).is_err());
+    }
+
+    #[test]
+    fn verify_against_real_artifact_if_present() {
+        // When artifacts/ has been built, enforce the real contract.
+        if let Ok(json) = std::fs::read_to_string(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/artifacts/opmap.json"
+        )) {
+            verify_opmap_json(&json).unwrap();
+        }
+    }
+}

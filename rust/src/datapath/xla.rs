@@ -1,0 +1,137 @@
+//! XLA datapath backend: execute wavefront blocks through the
+//! AOT-compiled PJRT executables (`--datapath xla`).
+//!
+//! This backend proves the three-layer claim: the python/JAX/Pallas
+//! compile path and the rust coordinator implement the *same machine*.
+//! Integration tests run whole benchmark programs on both backends and
+//! compare architectural state.
+//!
+//! Blocks arriving from the machine have the machine's wavefront depth;
+//! they are padded (mask 0) to the artifact's compiled depth.
+
+use crate::runtime::{f32_block, i32_block, i32_scalar11, ArtifactSet, Runtime};
+
+use super::{BlockExec, FpOp, IntOp};
+
+pub struct XlaDatapath {
+    rt: Runtime,
+    set: ArtifactSet,
+}
+
+impl XlaDatapath {
+    /// Compile the artifact set for a machine with `wavefronts` depth.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>, wavefronts: usize) -> Result<XlaDatapath, String> {
+        let set = ArtifactSet::resolve(&artifacts_dir, wavefronts)?;
+        let mut rt = Runtime::cpu(&set.dir)?;
+        // Compile eagerly so launch-time cost is paid once, off the
+        // request path.
+        rt.load(&set.fp_alu())?;
+        rt.load(&set.int_alu())?;
+        rt.load(&set.dot())?;
+        Ok(XlaDatapath { rt, set })
+    }
+
+    pub fn depth(&self) -> usize {
+        self.set.depth
+    }
+
+    /// Pad a u32 block (n lanes) to the artifact depth (zeros beyond).
+    fn pad(&self, src: &[u32]) -> Vec<u32> {
+        let full = self.set.depth * 16;
+        let mut v = Vec::with_capacity(full);
+        v.extend_from_slice(src);
+        v.resize(full, 0);
+        v
+    }
+
+    fn mask_block_f32(&self, mask: &[u8]) -> Result<xla::Literal, String> {
+        let full = self.set.depth * 16;
+        let mut vals: Vec<f32> = mask.iter().map(|&m| m as f32).collect();
+        vals.resize(full, 0.0);
+        xla::Literal::vec1(&vals)
+            .reshape(&[self.set.depth as i64, 16])
+            .map_err(|e| format!("mask reshape: {e}"))
+    }
+
+    fn mask_block_i32(&self, mask: &[u8]) -> Result<xla::Literal, String> {
+        let full = self.set.depth * 16;
+        let mut vals: Vec<i32> = mask.iter().map(|&m| m as i32).collect();
+        vals.resize(full, 0);
+        xla::Literal::vec1(&vals)
+            .reshape(&[self.set.depth as i64, 16])
+            .map_err(|e| format!("mask reshape: {e}"))
+    }
+}
+
+impl BlockExec for XlaDatapath {
+    fn fp_block(
+        &mut self,
+        op: FpOp,
+        a: &[u32],
+        b: &[u32],
+        old: &[u32],
+        mask: &[u8],
+        out: &mut [u32],
+    ) -> Result<(), String> {
+        let d = self.set.depth;
+        let args = [
+            i32_scalar11(op.index())?,
+            f32_block(&self.pad(a), d)?,
+            f32_block(&self.pad(b), d)?,
+            f32_block(&self.pad(old), d)?,
+            self.mask_block_f32(mask)?,
+        ];
+        let name = self.set.fp_alu();
+        let lit = self.rt.execute(&name, &args)?;
+        let vals: Vec<f32> = lit.to_vec().map_err(|e| format!("fp result: {e}"))?;
+        for (o, v) in out.iter_mut().zip(vals.iter()) {
+            *o = v.to_bits();
+        }
+        Ok(())
+    }
+
+    fn int_block(
+        &mut self,
+        op: IntOp,
+        precision: u8,
+        a: &[u32],
+        b: &[u32],
+        old: &[u32],
+        mask: &[u8],
+        out: &mut [u32],
+    ) -> Result<(), String> {
+        let d = self.set.depth;
+        let args = [
+            i32_scalar11(op.index())?,
+            i32_scalar11(precision as i32)?,
+            i32_block(&self.pad(a), d)?,
+            i32_block(&self.pad(b), d)?,
+            i32_block(&self.pad(old), d)?,
+            self.mask_block_i32(mask)?,
+        ];
+        let name = self.set.int_alu();
+        let lit = self.rt.execute(&name, &args)?;
+        let vals: Vec<i32> = lit.to_vec().map_err(|e| format!("int result: {e}"))?;
+        for (o, v) in out.iter_mut().zip(vals.iter()) {
+            *o = *v as u32;
+        }
+        Ok(())
+    }
+
+    fn dot_block(&mut self, a: &[u32], b: &[u32], mask: &[u8]) -> Result<f32, String> {
+        let d = self.set.depth;
+        let args = [
+            f32_block(&self.pad(a), d)?,
+            f32_block(&self.pad(b), d)?,
+            self.mask_block_f32(mask)?,
+        ];
+        let name = self.set.dot();
+        let lit = self.rt.execute(&name, &args)?;
+        lit.get_first_element::<f32>()
+            .map_err(|e| format!("dot result: {e}"))
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}

@@ -1,0 +1,85 @@
+//! Wall-clock micro-benchmark timing (criterion is unavailable offline;
+//! the `rust/benches/*` binaries use this instead).
+
+use std::time::Instant;
+
+/// Timing summary over `samples` runs of a closure.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub samples: usize,
+    pub median_ns: u128,
+    pub mean_ns: u128,
+    pub min_ns: u128,
+    pub max_ns: u128,
+}
+
+impl Timing {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns as f64 / 1e6
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:.3} ms (min {:.3}, max {:.3}, n={})",
+            self.median_ns as f64 / 1e6,
+            self.min_ns as f64 / 1e6,
+            self.max_ns as f64 / 1e6,
+            self.samples
+        )
+    }
+}
+
+/// Time `f` `samples` times (after one warmup run). The closure should
+/// return something observable to keep the optimizer honest; the value is
+/// passed through `std::hint::black_box`.
+pub fn time<T>(samples: usize, mut f: impl FnMut() -> T) -> Timing {
+    assert!(samples > 0);
+    std::hint::black_box(f());
+    let mut ns: Vec<u128> = (0..samples)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed().as_nanos()
+        })
+        .collect();
+    ns.sort_unstable();
+    Timing {
+        samples,
+        median_ns: ns[ns.len() / 2],
+        mean_ns: ns.iter().sum::<u128>() / ns.len() as u128,
+        min_ns: ns[0],
+        max_ns: *ns.last().unwrap(),
+    }
+}
+
+/// Simulation throughput: simulated cycles per wall-clock second.
+pub fn sim_rate(cycles: u64, t: &Timing) -> f64 {
+    cycles as f64 / (t.median_ns as f64 / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_orders() {
+        let t = time(5, || (0..1000u64).sum::<u64>());
+        assert!(t.min_ns <= t.median_ns && t.median_ns <= t.max_ns);
+        assert_eq!(t.samples, 5);
+    }
+
+    #[test]
+    fn rate_math() {
+        let t = Timing {
+            samples: 1,
+            median_ns: 1_000_000, // 1 ms
+            mean_ns: 1_000_000,
+            min_ns: 1_000_000,
+            max_ns: 1_000_000,
+        };
+        assert_eq!(sim_rate(1000, &t), 1_000_000.0);
+    }
+}

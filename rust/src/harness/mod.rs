@@ -1,0 +1,22 @@
+//! Bench/table/property-test scaffolding.
+//!
+//! criterion and proptest are unavailable in this offline build, so the
+//! `rust/benches/*` binaries (compiled with `harness = false`) and the
+//! property tests use this module instead:
+//!
+//! - [`rng`] — deterministic xoshiro256** PRNG (seeded workloads,
+//!   hand-rolled property testing)
+//! - [`bench`] — wall-clock micro-benchmark timing
+//! - [`table`] — aligned text tables for paper-vs-measured output
+//! - [`suite`] — the §7 benchmark suite runner shared by the Table 7/8
+//!   benches, the CLI and `examples/full_eval.rs`
+
+pub mod bench;
+pub mod rng;
+pub mod suite;
+pub mod table;
+
+pub use bench::{sim_rate, time, Timing};
+pub use rng::Rng;
+pub use suite::{paper_cycles, run_all, BenchResult, Benchmark, Measurement, Variant};
+pub use table::{vs_paper, within_band, Table};

@@ -1,0 +1,549 @@
+//! The §7 benchmark suite runner: every Table 7/8 cell, measured.
+//!
+//! One function runs a (benchmark, dimension) pair on all four machines —
+//! Nios II/e ISS, eGPU-DP, eGPU-QP, eGPU-Dot — verifies each result
+//! against the kernel oracle, and returns the cycle counts, elapsed times
+//! and Figure 6 profiles. The `rust/benches/table7_*`/`table8_*` binaries,
+//! the CLI (`egpu bench`) and `examples/full_eval.rs` all share this path.
+
+use crate::baseline::nios::{Nios, NiosStats, NIOS_MHZ};
+use crate::baseline::nios_kernels::{self, FFT_Q};
+use crate::kernels::{self, f32_bits, Kernel};
+use crate::model::cost::{BENCH_COST_DOT, BENCH_COST_DP, BENCH_COST_NIOS, BENCH_COST_QP};
+use crate::sim::config::{EgpuConfig, MemoryMode};
+use crate::sim::profiler::Profile;
+
+use super::rng::Rng;
+
+/// The five §7 benchmarks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Benchmark {
+    Reduction,
+    Transpose,
+    Mmm,
+    Bitonic,
+    Fft,
+}
+
+impl Benchmark {
+    pub const ALL: [Benchmark; 5] = [
+        Benchmark::Reduction,
+        Benchmark::Transpose,
+        Benchmark::Mmm,
+        Benchmark::Bitonic,
+        Benchmark::Fft,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Benchmark::Reduction => "Vector Reduction",
+            Benchmark::Transpose => "Matrix Transpose",
+            Benchmark::Mmm => "Matrix x Matrix",
+            Benchmark::Bitonic => "Bitonic Sort",
+            Benchmark::Fft => "FFT",
+        }
+    }
+
+    /// The dimensions the paper reports (Table 7: 32/64/128; Table 8
+    /// additionally 256).
+    pub fn dims(self) -> &'static [usize] {
+        match self {
+            Benchmark::Bitonic | Benchmark::Fft => &[32, 64, 128, 256],
+            _ => &[32, 64, 128],
+        }
+    }
+
+    /// Does the paper report an eGPU-Dot column for this benchmark?
+    pub fn has_dot(self) -> bool {
+        matches!(self, Benchmark::Reduction | Benchmark::Mmm)
+    }
+
+    /// Does the eGPU kernel require predicates (cost +50%, §7)?
+    pub fn predicated(self) -> bool {
+        matches!(self, Benchmark::Bitonic)
+    }
+}
+
+/// eGPU variant columns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    Nios,
+    Dp,
+    Qp,
+    Dot,
+}
+
+impl Variant {
+    pub fn label(self) -> &'static str {
+        match self {
+            Variant::Nios => "Nios",
+            Variant::Dp => "eGPU-DP",
+            Variant::Qp => "eGPU-QP",
+            Variant::Dot => "eGPU-Dot",
+        }
+    }
+}
+
+/// One machine's measurement of one benchmark instance.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub cycles: u64,
+    pub mhz: f64,
+    /// Instruction/cycle mix (eGPU only; Figure 6).
+    pub profile: Option<Profile>,
+    /// Dynamic instruction count.
+    pub instructions: u64,
+}
+
+impl Measurement {
+    pub fn time_us(&self) -> f64 {
+        self.cycles as f64 / self.mhz
+    }
+}
+
+/// All four machines on one (benchmark, dim).
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub bench: Benchmark,
+    pub dim: usize,
+    pub nios: Measurement,
+    pub dp: Measurement,
+    pub qp: Measurement,
+    pub dot: Option<Measurement>,
+}
+
+impl BenchResult {
+    fn get(&self, v: Variant) -> Option<&Measurement> {
+        match v {
+            Variant::Nios => Some(&self.nios),
+            Variant::Dp => Some(&self.dp),
+            Variant::Qp => Some(&self.qp),
+            Variant::Dot => self.dot.as_ref(),
+        }
+    }
+
+    /// Cycle ratio vs the eGPU-DP baseline (Table 7/8 "Ratio(cycles)").
+    pub fn ratio_cycles(&self, v: Variant) -> Option<f64> {
+        Some(self.get(v)?.cycles as f64 / self.dp.cycles as f64)
+    }
+
+    /// Time ratio vs the eGPU-DP baseline (Table 7/8 "Ratio(time)").
+    pub fn ratio_time(&self, v: Variant) -> Option<f64> {
+        Some(self.get(v)?.time_us() / self.dp.time_us())
+    }
+
+    /// Resource-normalized ratio (Table 7/8 "Normalized"): time ratio
+    /// scaled by the variant's ALM-equivalent cost relative to eGPU-DP.
+    /// Predicated benchmarks scale eGPU costs by 1.5 (§7).
+    pub fn normalized(&self, v: Variant) -> Option<f64> {
+        let pred = if self.bench.predicated() { 1.5 } else { 1.0 };
+        let cost = |v: Variant| match v {
+            Variant::Nios => BENCH_COST_NIOS,
+            Variant::Dp => BENCH_COST_DP * pred,
+            Variant::Qp => BENCH_COST_QP * pred,
+            Variant::Dot => BENCH_COST_DOT * pred,
+        };
+        Some(self.ratio_time(v)? * cost(v) / cost(Variant::Dp))
+    }
+}
+
+fn measure_nios(stats: NiosStats) -> Measurement {
+    Measurement {
+        cycles: stats.cycles,
+        mhz: NIOS_MHZ,
+        profile: None,
+        instructions: stats.instructions,
+    }
+}
+
+fn run_egpu(kernel: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)]) -> (Measurement, crate::sim::Machine) {
+    let (stats, m) = kernel
+        .run(cfg, init)
+        .unwrap_or_else(|e| panic!("{}: {e}", kernel.name));
+    assert_eq!(
+        stats.hazards, 0,
+        "{}: generated program has pipeline hazards: {:?}",
+        kernel.name, stats.hazard_samples
+    );
+    (
+        Measurement {
+            cycles: stats.cycles,
+            mhz: cfg.core_mhz(),
+            profile: Some(stats.profile),
+            instructions: stats.instructions,
+        },
+        m,
+    )
+}
+
+/// Run one benchmark instance on all machines, verifying every result.
+pub fn run(bench: Benchmark, dim: usize) -> BenchResult {
+    match bench {
+        Benchmark::Reduction => run_reduction(dim),
+        Benchmark::Transpose => run_transpose(dim),
+        Benchmark::Mmm => run_mmm(dim),
+        Benchmark::Bitonic => run_bitonic(dim),
+        Benchmark::Fft => run_fft(dim),
+    }
+}
+
+/// Run the full suite (every benchmark × every paper dimension).
+pub fn run_all() -> Vec<BenchResult> {
+    let mut out = Vec::new();
+    for b in Benchmark::ALL {
+        for &d in b.dims() {
+            out.push(run(b, d));
+        }
+    }
+    out
+}
+
+fn run_reduction(n: usize) -> BenchResult {
+    // eGPU data: f32; Nios substitutes INT32 (§7).
+    let mut rng = Rng::new(0xC0FFEE ^ n as u64);
+    let fdata: Vec<f32> = (0..n).map(|_| rng.f32_in(-4.0, 4.0)).collect();
+    let idata: Vec<i32> = (0..n).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
+
+    let mut nios = Nios::new(n + 1);
+    nios.mem[..n].copy_from_slice(&idata);
+    let nstats = nios.run(&nios_kernels::reduction(n), 100_000_000).unwrap();
+    assert_eq!(nios.mem[n], idata.iter().sum::<i32>(), "nios reduction-{n}");
+
+    let check = |m: &crate::sim::Machine| {
+        let got = f32::from_bits(m.shared().read(n as u32).unwrap());
+        let want: f32 = kernels::reduction::oracle(&fdata);
+        assert!(
+            (got - want).abs() < want.abs() * 1e-4 + 1e-2,
+            "reduction-{n}: {got} vs {want}"
+        );
+    };
+    let (dp, m) = run_egpu(
+        &kernels::reduction::reduction(n),
+        &EgpuConfig::benchmark(MemoryMode::Dp, false),
+        &[(0, f32_bits(&fdata))],
+    );
+    check(&m);
+    let (qp, m) = run_egpu(
+        &kernels::reduction::reduction(n),
+        &EgpuConfig::benchmark(MemoryMode::Qp, false),
+        &[(0, f32_bits(&fdata))],
+    );
+    check(&m);
+    let (dot, m) = run_egpu(
+        &kernels::reduction::reduction_dot(n),
+        &EgpuConfig::benchmark(MemoryMode::Dp, true),
+        &[(0, f32_bits(&fdata))],
+    );
+    check(&m);
+    BenchResult {
+        bench: Benchmark::Reduction,
+        dim: n,
+        nios: measure_nios(nstats),
+        dp,
+        qp,
+        dot: Some(dot),
+    }
+}
+
+fn run_transpose(n: usize) -> BenchResult {
+    let mut rng = Rng::new(0xBEEF ^ n as u64);
+    let data: Vec<u32> = (0..n * n).map(|_| rng.next_u32()).collect();
+    let want = kernels::transpose::oracle(&data, n);
+
+    let mut nios = Nios::new(2 * n * n);
+    for (i, &v) in data.iter().enumerate() {
+        nios.mem[i] = v as i32;
+    }
+    let nstats = nios.run(&nios_kernels::transpose(n), 1_000_000_000).unwrap();
+    for i in 0..n * n {
+        assert_eq!(nios.mem[n * n + i] as u32, want[i], "nios transpose-{n} [{i}]");
+    }
+
+    let check = |m: &crate::sim::Machine| {
+        assert_eq!(m.shared().read_block(n * n, n * n), &want[..], "transpose-{n}");
+    };
+    let (dp, m) = run_egpu(
+        &kernels::transpose::transpose_for(n, MemoryMode::Dp),
+        &EgpuConfig::benchmark(MemoryMode::Dp, false),
+        &[(0, data.clone())],
+    );
+    check(&m);
+    let (qp, m) = run_egpu(
+        &kernels::transpose::transpose_for(n, MemoryMode::Qp),
+        &EgpuConfig::benchmark(MemoryMode::Qp, false),
+        &[(0, data.clone())],
+    );
+    check(&m);
+    BenchResult {
+        bench: Benchmark::Transpose,
+        dim: n,
+        nios: measure_nios(nstats),
+        dp,
+        qp,
+        dot: None,
+    }
+}
+
+fn run_mmm(n: usize) -> BenchResult {
+    let mut rng = Rng::new(0x4D4D ^ n as u64);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+    let want = kernels::mmm::oracle(&a, &b, n);
+    let ia: Vec<i32> = a.iter().map(|&x| (x * 4.0) as i32).collect();
+    let ib: Vec<i32> = b.iter().map(|&x| (x * 4.0) as i32).collect();
+
+    let mut nios = Nios::new(3 * n * n);
+    nios.mem[..n * n].copy_from_slice(&ia);
+    nios.mem[n * n..2 * n * n].copy_from_slice(&ib);
+    let nstats = nios.run(&nios_kernels::mmm(n), 4_000_000_000).unwrap();
+    let iwant = |i: usize, j: usize| -> i32 {
+        (0..n).map(|k| ia[i * n + k] * ib[k * n + j]).sum()
+    };
+    for i in [0usize, n / 2, n - 1] {
+        for j in [0usize, n / 2, n - 1] {
+            assert_eq!(nios.mem[2 * n * n + i * n + j], iwant(i, j), "nios mmm-{n}");
+        }
+    }
+
+    let check = |m: &crate::sim::Machine| {
+        for (idx, w) in want.iter().enumerate() {
+            let got = f32::from_bits(m.shared().read((2 * n * n + idx) as u32).unwrap());
+            assert!(
+                (got - w).abs() < w.abs() * 1e-4 + 1e-2,
+                "mmm-{n} C[{idx}]: {got} vs {w}"
+            );
+        }
+    };
+    let init = vec![(0, f32_bits(&a)), (n * n, f32_bits(&b))];
+    let (dp, m) = run_egpu(
+        &kernels::mmm::mmm_for(n, MemoryMode::Dp),
+        &kernels::mmm::config(n, MemoryMode::Dp, false),
+        &init,
+    );
+    check(&m);
+    let (qp, m) = run_egpu(
+        &kernels::mmm::mmm_for(n, MemoryMode::Qp),
+        &kernels::mmm::config(n, MemoryMode::Qp, false),
+        &init,
+    );
+    check(&m);
+    let (dot, m) = run_egpu(
+        &kernels::mmm::mmm_dot(n),
+        &kernels::mmm::config(n, MemoryMode::Dp, true),
+        &init,
+    );
+    check(&m);
+    BenchResult {
+        bench: Benchmark::Mmm,
+        dim: n,
+        nios: measure_nios(nstats),
+        dp,
+        qp,
+        dot: Some(dot),
+    }
+}
+
+fn run_bitonic(n: usize) -> BenchResult {
+    let mut rng = Rng::new(0x5047 ^ n as u64);
+    // Positive values so i32 (Nios) and u32 (eGPU) orderings agree.
+    let data: Vec<u32> = (0..n).map(|_| rng.next_u32() >> 2).collect();
+    let want = kernels::bitonic::oracle(&data);
+
+    let mut nios = Nios::new(n);
+    for (i, &v) in data.iter().enumerate() {
+        nios.mem[i] = v as i32;
+    }
+    let nstats = nios.run(&nios_kernels::bitonic(n), 1_000_000_000).unwrap();
+    for i in 0..n {
+        assert_eq!(nios.mem[i] as u32, want[i], "nios bitonic-{n} [{i}]");
+    }
+
+    let check = |m: &crate::sim::Machine| {
+        assert_eq!(m.shared().read_block(0, n), &want[..], "bitonic-{n}");
+    };
+    let (dp, m) = run_egpu(
+        &kernels::bitonic::bitonic_for(n, MemoryMode::Dp),
+        &EgpuConfig::benchmark_predicated(MemoryMode::Dp),
+        &[(0, data.clone())],
+    );
+    check(&m);
+    let (qp, m) = run_egpu(
+        &kernels::bitonic::bitonic_for(n, MemoryMode::Qp),
+        &EgpuConfig::benchmark_predicated(MemoryMode::Qp),
+        &[(0, data.clone())],
+    );
+    check(&m);
+    BenchResult {
+        bench: Benchmark::Bitonic,
+        dim: n,
+        nios: measure_nios(nstats),
+        dp,
+        qp,
+        dot: None,
+    }
+}
+
+fn run_fft(n: usize) -> BenchResult {
+    let mut rng = Rng::new(0xFF7 ^ n as u64);
+    let re: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    let im: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    let (want_r, want_i) = kernels::fft::oracle(&re, &im);
+
+    // Nios: Q14 fixed-point substitution (§7 replaces FP32 with INT32).
+    let scale = (1i64 << FFT_Q) as f64;
+    let mut nios = Nios::new(3 * n);
+    for i in 0..n {
+        nios.mem[i] = (re[i] as f64 * scale * 0.25) as i32;
+        nios.mem[n + i] = (im[i] as f64 * scale * 0.25) as i32;
+    }
+    for t in 0..n / 2 {
+        let w = 2.0 * std::f64::consts::PI * t as f64 / n as f64;
+        nios.mem[2 * n + t] = (w.cos() * scale) as i32;
+        nios.mem[2 * n + n / 2 + t] = (w.sin() * scale) as i32;
+    }
+    let nstats = nios.run(&nios_kernels::fft(n), 1_000_000_000).unwrap();
+
+    let tol = 1e-3 * n as f64;
+    let check = |m: &crate::sim::Machine| {
+        for k in 0..n {
+            let gr = f32::from_bits(m.shared().read(k as u32).unwrap()) as f64;
+            let gi = f32::from_bits(m.shared().read((n + k) as u32).unwrap()) as f64;
+            assert!(
+                (gr - want_r[k]).abs() < tol && (gi - want_i[k]).abs() < tol,
+                "fft-{n} bin {k}: ({gr},{gi}) vs ({},{})",
+                want_r[k],
+                want_i[k]
+            );
+        }
+    };
+    let init = kernels::fft::shared_init(&re, &im);
+    let (dp, m) = run_egpu(
+        &kernels::fft::fft_for(n, MemoryMode::Dp),
+        &EgpuConfig::benchmark(MemoryMode::Dp, false),
+        &init,
+    );
+    check(&m);
+    let (qp, m) = run_egpu(
+        &kernels::fft::fft_for(n, MemoryMode::Qp),
+        &EgpuConfig::benchmark(MemoryMode::Qp, false),
+        &init,
+    );
+    check(&m);
+    BenchResult {
+        bench: Benchmark::Fft,
+        dim: n,
+        nios: measure_nios(nstats),
+        dp,
+        qp,
+        dot: None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Paper reference values (Tables 7 and 8), for comparison columns and
+// the `paper_tables` integration tests.
+// ---------------------------------------------------------------------
+
+/// Published cycle counts: (bench, dim, variant) → cycles.
+pub fn paper_cycles(bench: Benchmark, dim: usize, v: Variant) -> Option<u64> {
+    use Benchmark::*;
+    use Variant::*;
+    let t = |v: u64| Some(v);
+    match (bench, dim, v) {
+        (Reduction, 32, Nios) => t(459),
+        (Reduction, 32, Dp) => t(168),
+        (Reduction, 32, Qp) => t(160),
+        (Reduction, 32, Dot) => t(62),
+        (Reduction, 64, Nios) => t(1803),
+        (Reduction, 64, Dp) => t(202),
+        (Reduction, 64, Qp) => t(194),
+        (Reduction, 64, Dot) => t(94),
+        (Reduction, 128, Nios) => t(3595),
+        (Reduction, 128, Dp) => t(216),
+        (Reduction, 128, Qp) => t(208),
+        (Reduction, 128, Dot) => t(101),
+        (Transpose, 32, Nios) => t(21_809),
+        (Transpose, 32, Dp) => t(1720),
+        (Transpose, 32, Qp) => t(1208),
+        (Transpose, 64, Nios) => t(86_609),
+        (Transpose, 64, Dp) => t(5529),
+        (Transpose, 64, Qp) => t(3481),
+        (Transpose, 128, Nios) => t(345_233),
+        (Transpose, 128, Dp) => t(20_481),
+        (Transpose, 128, Qp) => t(12_649),
+        (Mmm, 32, Nios) => t(1_450_000),
+        (Mmm, 32, Dp) => t(111_546),
+        (Mmm, 32, Qp) => t(103_354),
+        (Mmm, 32, Dot) => t(19_800),
+        (Mmm, 64, Nios) => t(11_600_000),
+        (Mmm, 64, Dp) => t(451_066),
+        (Mmm, 64, Qp) => t(418_671),
+        (Mmm, 64, Dot) => t(84_425),
+        (Mmm, 128, Nios) => t(92_500_000),
+        (Mmm, 128, Dp) => t(2_342_356),
+        (Mmm, 128, Qp) => t(2_212_136),
+        (Mmm, 128, Dot) => t(886_452),
+        (Bitonic, 32, Nios) => t(8457),
+        (Bitonic, 32, Dp) => t(1742),
+        (Bitonic, 32, Qp) => t(1543),
+        (Bitonic, 64, Nios) => t(20_687),
+        (Bitonic, 64, Dp) => t(3728),
+        (Bitonic, 64, Qp) => t(3054),
+        (Bitonic, 128, Nios) => t(49_741),
+        (Bitonic, 128, Dp) => t(8326),
+        (Bitonic, 128, Qp) => t(6536),
+        (Bitonic, 256, Nios) => t(149_271),
+        (Bitonic, 256, Dp) => t(16_578),
+        (Bitonic, 256, Qp) => t(11_974),
+        (Fft, 32, Nios) => t(9165),
+        (Fft, 32, Dp) => t(876),
+        (Fft, 32, Qp) => t(714),
+        (Fft, 64, Nios) => t(20_848),
+        (Fft, 64, Dp) => t(1695),
+        (Fft, 64, Qp) => t(1312),
+        (Fft, 128, Nios) => t(46_667),
+        (Fft, 128, Dp) => t(3463),
+        (Fft, 128, Qp) => t(2558),
+        (Fft, 256, Nios) => t(103_636),
+        (Fft, 256, Dp) => t(6813),
+        (Fft, 256, Qp) => t(4736),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduction_result_shape() {
+        let r = run(Benchmark::Reduction, 32);
+        assert!(r.dot.is_some());
+        assert!(r.nios.cycles > r.dp.cycles, "SIMT must beat scalar");
+        assert!((r.ratio_cycles(Variant::Dp).unwrap() - 1.0).abs() < 1e-9);
+        assert!(r.ratio_time(Variant::Nios).unwrap() > 1.0);
+        // Dot beats the tree on both cycles and normalized cost.
+        assert!(r.normalized(Variant::Dot).unwrap() < 1.0);
+    }
+
+    #[test]
+    fn paper_reference_complete_for_all_cells() {
+        for b in Benchmark::ALL {
+            for &d in b.dims() {
+                for v in [Variant::Nios, Variant::Dp, Variant::Qp] {
+                    assert!(
+                        paper_cycles(b, d, v).is_some(),
+                        "missing paper value {b:?} {d} {v:?}"
+                    );
+                }
+                assert_eq!(paper_cycles(b, d, Variant::Dot).is_some(), b.has_dot() );
+            }
+        }
+    }
+
+    #[test]
+    fn fft_and_bitonic_have_256() {
+        assert_eq!(Benchmark::Fft.dims().len(), 4);
+        assert_eq!(Benchmark::Reduction.dims().len(), 3);
+    }
+}

@@ -1,0 +1,120 @@
+//! Plain-text table rendering for the bench binaries and the CLI.
+//!
+//! Every `rust/benches/*` binary regenerates one of the paper's tables or
+//! figures; this module gives them a uniform, diff-able output format.
+
+/// A column-aligned text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Table {
+        Table {
+            title: title.into(),
+            headers: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn headers<S: Into<String>>(&mut self, hs: impl IntoIterator<Item = S>) -> &mut Self {
+        self.headers = hs.into_iter().map(Into::into).collect();
+        self
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: impl IntoIterator<Item = S>) -> &mut Self {
+        self.rows.push(cells.into_iter().map(Into::into).collect());
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self
+            .headers
+            .len()
+            .max(self.rows.iter().map(Vec::len).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.headers.iter().enumerate() {
+            widths[i] = widths[i].max(h.chars().count());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for i in 0..ncols {
+                let c = cells.get(i).map(String::as_str).unwrap_or("");
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(&format!("{c:>w$}", w = widths[i]));
+            }
+            s.trim_end().to_string()
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        if !self.headers.is_empty() {
+            out.push_str(&line(&self.headers));
+            out.push('\n');
+            out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+            out.push('\n');
+        }
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a measured-vs-paper pair with the ratio, e.g. `1720 / 1641 (0.95x)`.
+pub fn vs_paper(measured: f64, paper: f64) -> String {
+    format!("{measured:.0} vs {paper:.0} ({:.2}x)", measured / paper)
+}
+
+/// Does `measured` fall within `band`× of `paper` (both directions)?
+pub fn within_band(measured: f64, paper: f64, band: f64) -> bool {
+    let r = measured / paper;
+    r <= band && r >= 1.0 / band
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T");
+        t.headers(["a", "bbbb"]);
+        t.row(["1", "2"]).row(["333", "4"]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+        // right-aligned in equal-width columns
+        assert!(lines[3].ends_with("   2"));
+        assert!(lines[4].starts_with("333"));
+    }
+
+    #[test]
+    fn band_check() {
+        assert!(within_band(150.0, 100.0, 2.0));
+        assert!(within_band(60.0, 100.0, 2.0));
+        assert!(!within_band(250.0, 100.0, 2.0));
+        assert!(!within_band(40.0, 100.0, 2.0));
+    }
+}

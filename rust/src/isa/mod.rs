@@ -1,0 +1,36 @@
+//! The eGPU instruction-set architecture (paper §4, Table 2, Figure 3).
+//!
+//! The ISA is *statically scalable*: the instruction-word width depends on
+//! the configured registers-per-thread (40/43/46 bits for 16/32/64
+//! registers), and the available instruction subset is a configuration
+//! parameter (`sim::config::EgpuConfig`). Every encode/decode detail lives
+//! here; the assembler (`asm`) and the simulator (`sim`) share it.
+
+pub mod opcode;
+pub mod thread_ctrl;
+pub mod ttype;
+pub mod word;
+
+pub use opcode::{Group, Opcode};
+pub use thread_ctrl::{DepthSel, ThreadCtrl, WidthSel};
+pub use ttype::{CondCode, TType};
+pub use word::{EncodedWord, Instr, WordLayout};
+
+/// Wavefront width: 16 scalar processors per SM, fixed by the architecture.
+pub const WAVEFRONT_WIDTH: usize = 16;
+
+/// Immediate field width (Figure 3).
+pub const IMM_BITS: u32 = 16;
+
+/// Opcode field width.
+pub const OPCODE_BITS: u32 = 6;
+
+/// TYPE (number representation) field width.
+pub const TTYPE_BITS: u32 = 2;
+
+/// Dynamic thread-space control field width (Table 3).
+pub const TCTRL_BITS: u32 = 4;
+
+/// Total instructions in the full ISA as the paper counts them (§4):
+/// 43 unconditional + 18 conditional cases (6 cc × 3 TYPEs) = 61.
+pub const ISA_INSTRUCTION_COUNT: usize = 61;

@@ -1,0 +1,415 @@
+//! Opcodes and instruction groups (paper Table 2).
+
+use std::fmt;
+
+/// Instruction group, used for configuration gating (which groups a given
+/// eGPU instance implements), for the Figure 6 instruction-mix profiles,
+/// and for issue-cost classification in the cycle model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Group {
+    /// NOP — issued to fill hazard windows (pipeline has no interlocks).
+    Nop,
+    /// Integer arithmetic: ADD/SUB/NEG/ABS.
+    IntArith,
+    /// Integer multiply: MUL16LO/HI, MUL24LO/HI (DSP-block assisted).
+    IntMul,
+    /// Integer logic: AND/OR/XOR/NOT/CNOT/BVS.
+    IntLogic,
+    /// Integer shift: SHL/SHR.
+    IntShift,
+    /// Integer other: POP/MAX/MIN.
+    IntOther,
+    /// FP32 ALU: ADD/SUB/NEG/ABS/MUL/MAX/MIN (inside the DSP blocks).
+    FpAlu,
+    /// Shared-memory access: LOD/STO.
+    Memory,
+    /// Immediate load.
+    Immediate,
+    /// Thread-ID reads.
+    Thread,
+    /// Extension cores: DOT/SUM/INVSQR.
+    Extension,
+    /// Sequencer control: JMP/JSR/RTS/LOOP/INIT/STOP.
+    Control,
+    /// Predicate ops: IF/ELSE/ENDIF.
+    Conditional,
+}
+
+impl Group {
+    /// All groups, in Figure 6 presentation order.
+    pub const ALL: [Group; 13] = [
+        Group::Nop,
+        Group::IntArith,
+        Group::IntMul,
+        Group::IntLogic,
+        Group::IntShift,
+        Group::IntOther,
+        Group::FpAlu,
+        Group::Memory,
+        Group::Immediate,
+        Group::Thread,
+        Group::Extension,
+        Group::Control,
+        Group::Conditional,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Group::Nop => "NOP",
+            Group::IntArith => "INT arith",
+            Group::IntMul => "INT mul",
+            Group::IntLogic => "INT logic",
+            Group::IntShift => "INT shift",
+            Group::IntOther => "INT other",
+            Group::FpAlu => "FP",
+            Group::Memory => "Memory",
+            Group::Immediate => "Immediate",
+            Group::Thread => "Thread",
+            Group::Extension => "Extension",
+            Group::Control => "Branch/Ctrl",
+            Group::Conditional => "Predicate",
+        }
+    }
+}
+
+/// The 6-bit opcode field values. Discriminants are the encoded field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Opcode {
+    Nop = 0,
+    // Integer arithmetic
+    Add = 1,
+    Sub = 2,
+    Neg = 3,
+    Abs = 4,
+    // Integer multiply
+    Mul16Lo = 5,
+    Mul16Hi = 6,
+    Mul24Lo = 7,
+    Mul24Hi = 8,
+    // Integer logic
+    And = 9,
+    Or = 10,
+    Xor = 11,
+    Not = 12,
+    CNot = 13,
+    Bvs = 14,
+    // Integer shift
+    Shl = 15,
+    Shr = 16,
+    // Integer other
+    Pop = 17,
+    Max = 18,
+    Min = 19,
+    // FP32 ALU
+    FAdd = 20,
+    FSub = 21,
+    FNeg = 22,
+    FAbs = 23,
+    FMul = 24,
+    FMax = 25,
+    FMin = 26,
+    // Memory
+    Lod = 27,
+    Sto = 28,
+    // Immediate
+    Ldi = 29,
+    // Thread IDs
+    TdX = 30,
+    TdY = 31,
+    // Extensions
+    Dot = 32,
+    Sum = 33,
+    InvSqr = 34,
+    // Control
+    Jmp = 35,
+    Jsr = 36,
+    Rts = 37,
+    Loop = 38,
+    Init = 39,
+    Stop = 40,
+    // Conditional (predicates)
+    If = 41,
+    Else = 42,
+    EndIf = 43,
+}
+
+impl Opcode {
+    pub const COUNT: usize = 44;
+
+    /// Decode the 6-bit opcode field. `None` for unallocated encodings.
+    pub fn from_bits(bits: u8) -> Option<Opcode> {
+        if (bits as usize) < Self::COUNT {
+            // SAFETY-free table: match is exhaustive over the valid range.
+            Some(Self::TABLE[bits as usize])
+        } else {
+            None
+        }
+    }
+
+    const TABLE: [Opcode; Self::COUNT] = [
+        Opcode::Nop,
+        Opcode::Add,
+        Opcode::Sub,
+        Opcode::Neg,
+        Opcode::Abs,
+        Opcode::Mul16Lo,
+        Opcode::Mul16Hi,
+        Opcode::Mul24Lo,
+        Opcode::Mul24Hi,
+        Opcode::And,
+        Opcode::Or,
+        Opcode::Xor,
+        Opcode::Not,
+        Opcode::CNot,
+        Opcode::Bvs,
+        Opcode::Shl,
+        Opcode::Shr,
+        Opcode::Pop,
+        Opcode::Max,
+        Opcode::Min,
+        Opcode::FAdd,
+        Opcode::FSub,
+        Opcode::FNeg,
+        Opcode::FAbs,
+        Opcode::FMul,
+        Opcode::FMax,
+        Opcode::FMin,
+        Opcode::Lod,
+        Opcode::Sto,
+        Opcode::Ldi,
+        Opcode::TdX,
+        Opcode::TdY,
+        Opcode::Dot,
+        Opcode::Sum,
+        Opcode::InvSqr,
+        Opcode::Jmp,
+        Opcode::Jsr,
+        Opcode::Rts,
+        Opcode::Loop,
+        Opcode::Init,
+        Opcode::Stop,
+        Opcode::If,
+        Opcode::Else,
+        Opcode::EndIf,
+    ];
+
+    pub fn bits(self) -> u8 {
+        self as u8
+    }
+
+    pub fn group(self) -> Group {
+        use Opcode::*;
+        match self {
+            Nop => Group::Nop,
+            Add | Sub | Neg | Abs => Group::IntArith,
+            Mul16Lo | Mul16Hi | Mul24Lo | Mul24Hi => Group::IntMul,
+            And | Or | Xor | Not | CNot | Bvs => Group::IntLogic,
+            Shl | Shr => Group::IntShift,
+            Pop | Max | Min => Group::IntOther,
+            FAdd | FSub | FNeg | FAbs | FMul | FMax | FMin => Group::FpAlu,
+            Lod | Sto => Group::Memory,
+            Ldi => Group::Immediate,
+            TdX | TdY => Group::Thread,
+            Dot | Sum | InvSqr => Group::Extension,
+            Jmp | Jsr | Rts | Loop | Init | Stop => Group::Control,
+            If | Else | EndIf => Group::Conditional,
+        }
+    }
+
+    /// Assembly mnemonic (lower-case, without the `.TYPE` suffix).
+    pub fn mnemonic(self) -> &'static str {
+        use Opcode::*;
+        match self {
+            Nop => "nop",
+            Add => "add",
+            Sub => "sub",
+            Neg => "neg",
+            Abs => "abs",
+            Mul16Lo => "mul16lo",
+            Mul16Hi => "mul16hi",
+            Mul24Lo => "mul24lo",
+            Mul24Hi => "mul24hi",
+            And => "and",
+            Or => "or",
+            Xor => "xor",
+            Not => "not",
+            CNot => "cnot",
+            Bvs => "bvs",
+            Shl => "shl",
+            Shr => "shr",
+            Pop => "pop",
+            Max => "max",
+            Min => "min",
+            FAdd => "fadd",
+            FSub => "fsub",
+            FNeg => "fneg",
+            FAbs => "fabs",
+            FMul => "fmul",
+            FMax => "fmax",
+            FMin => "fmin",
+            Lod => "lod",
+            Sto => "sto",
+            Ldi => "ldi",
+            TdX => "tdx",
+            TdY => "tdy",
+            Dot => "dot",
+            Sum => "sum",
+            InvSqr => "invsqr",
+            Jmp => "jmp",
+            Jsr => "jsr",
+            Rts => "rts",
+            Loop => "loop",
+            Init => "init",
+            Stop => "stop",
+            If => "if",
+            Else => "else",
+            EndIf => "endif",
+        }
+    }
+
+    /// Parse a mnemonic (without `.TYPE`/`.cc` suffixes).
+    pub fn from_mnemonic(s: &str) -> Option<Opcode> {
+        Self::TABLE.iter().copied().find(|op| op.mnemonic() == s)
+    }
+
+    /// Operand shape of this opcode, used by the assembler/disassembler.
+    pub fn operands(self) -> OperandShape {
+        use Opcode::*;
+        match self {
+            Nop | Rts | Else | EndIf | Stop => OperandShape::None,
+            Neg | Abs | Not | CNot | Bvs | Pop | FNeg | FAbs | InvSqr => {
+                OperandShape::RdRa
+            }
+            Add | Sub | Mul16Lo | Mul16Hi | Mul24Lo | Mul24Hi | And | Or
+            | Xor | Shl | Shr | Max | Min | FAdd | FSub | FMul | FMax
+            | FMin | Dot | Sum => OperandShape::RdRaRb,
+            Lod | Sto => OperandShape::RdMem,
+            Ldi => OperandShape::RdImm,
+            TdX | TdY => OperandShape::Rd,
+            Jmp | Jsr | Loop => OperandShape::Addr,
+            Init => OperandShape::Imm,
+            If => OperandShape::RaRb,
+        }
+    }
+
+    /// Does this opcode accept a `.TYPE` suffix in assembly?
+    pub fn is_typed(self) -> bool {
+        use Opcode::*;
+        matches!(
+            self,
+            Add | Sub
+                | Neg
+                | Abs
+                | Mul16Lo
+                | Mul16Hi
+                | Mul24Lo
+                | Mul24Hi
+                | Shl
+                | Shr
+                | Max
+                | Min
+                | If
+        )
+    }
+
+    /// Does this opcode write a destination register?
+    pub fn writes_rd(self) -> bool {
+        !matches!(
+            self.operands(),
+            OperandShape::None | OperandShape::Addr | OperandShape::Imm | OperandShape::RaRb
+        ) && self != Opcode::Sto
+    }
+}
+
+/// Operand shape classes for assembly parsing and disassembly printing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OperandShape {
+    /// No operands (NOP, RTS, ELSE, ENDIF, STOP).
+    None,
+    /// `rd` only (TDX/TDY).
+    Rd,
+    /// `rd, ra`.
+    RdRa,
+    /// `rd, ra, rb`.
+    RdRaRb,
+    /// `ra, rb` (IF compares).
+    RaRb,
+    /// `rd, (ra)+imm` (LOD/STO).
+    RdMem,
+    /// `rd, #imm` (LDI).
+    RdImm,
+    /// `#imm` (INIT).
+    Imm,
+    /// code address (JMP/JSR/LOOP).
+    Addr,
+}
+
+impl fmt::Display for Opcode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.mnemonic())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_opcodes() {
+        for bits in 0..Opcode::COUNT as u8 {
+            let op = Opcode::from_bits(bits).unwrap();
+            assert_eq!(op.bits(), bits);
+            assert_eq!(Opcode::from_mnemonic(op.mnemonic()), Some(op));
+        }
+    }
+
+    #[test]
+    fn invalid_bits_rejected() {
+        assert_eq!(Opcode::from_bits(44), None);
+        assert_eq!(Opcode::from_bits(63), None);
+    }
+
+    #[test]
+    fn groups_cover_table2() {
+        use Opcode::*;
+        assert_eq!(Add.group(), Group::IntArith);
+        assert_eq!(Mul24Hi.group(), Group::IntMul);
+        assert_eq!(Bvs.group(), Group::IntLogic);
+        assert_eq!(Shr.group(), Group::IntShift);
+        assert_eq!(Pop.group(), Group::IntOther);
+        assert_eq!(FMin.group(), Group::FpAlu);
+        assert_eq!(Lod.group(), Group::Memory);
+        assert_eq!(Ldi.group(), Group::Immediate);
+        assert_eq!(TdY.group(), Group::Thread);
+        assert_eq!(InvSqr.group(), Group::Extension);
+        assert_eq!(Stop.group(), Group::Control);
+        assert_eq!(EndIf.group(), Group::Conditional);
+    }
+
+    #[test]
+    fn isa_count_matches_paper() {
+        // §4: "a total of 61 instructions, including 18 conditional cases".
+        // Table 2 lists 40 operations; MAX, MIN and SHR each have distinct
+        // signed/unsigned semantics (TYPE variants) => 43 unconditional;
+        // IF.cc expands to 6 condition codes × 3 TYPEs = 18 conditionals.
+        let table2_rows = 40usize;
+        let type_variants = 3; // MAX, MIN, SHR signed/unsigned
+        let conditional_cases = 6 * 3;
+        assert_eq!(
+            table2_rows + type_variants + conditional_cases,
+            crate::isa::ISA_INSTRUCTION_COUNT
+        );
+    }
+
+    #[test]
+    fn operand_shapes() {
+        assert_eq!(Opcode::Lod.operands(), OperandShape::RdMem);
+        assert_eq!(Opcode::If.operands(), OperandShape::RaRb);
+        assert_eq!(Opcode::Init.operands(), OperandShape::Imm);
+        assert!(Opcode::Add.writes_rd());
+        assert!(!Opcode::Sto.writes_rd());
+        assert!(!Opcode::Jmp.writes_rd());
+        assert!(Opcode::Lod.writes_rd());
+    }
+}

@@ -1,0 +1,252 @@
+//! Dynamic thread-space control: the upper 4-bit instruction field
+//! (paper §3.1, Table 3).
+//!
+//! Width selects a subset of the 16 SPs; depth selects a subset of the
+//! wavefronts. Together they let one instruction run as a full SIMT op, a
+//! multi-threaded-CPU op (width 1) or a single-thread MCU op (width 1,
+//! depth = wavefront 0 only) — with no dead cycles between changes.
+
+use std::fmt;
+
+use super::WAVEFRONT_WIDTH;
+
+/// Wavefront width selector (Table 3, bits [4:3]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[repr(u8)]
+pub enum WidthSel {
+    /// All 16 SPs.
+    #[default]
+    All16 = 0b00,
+    /// First 4 SPs (1/4 width).
+    Quarter4 = 0b01,
+    /// SP0 only.
+    Sp0 = 0b10,
+    // 0b11 is architecturally undefined (Table 3) and rejected at decode.
+}
+
+impl WidthSel {
+    pub fn from_bits(bits: u8) -> Option<WidthSel> {
+        match bits & 0b11 {
+            0b00 => Some(WidthSel::All16),
+            0b01 => Some(WidthSel::Quarter4),
+            0b10 => Some(WidthSel::Sp0),
+            _ => None, // "11" undefined
+        }
+    }
+
+    pub fn bits(self) -> u8 {
+        self as u8
+    }
+
+    /// Number of active SPs (lanes) this selector enables.
+    pub fn lanes(self) -> usize {
+        match self {
+            WidthSel::All16 => WAVEFRONT_WIDTH,
+            WidthSel::Quarter4 => WAVEFRONT_WIDTH / 4,
+            WidthSel::Sp0 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WidthSel::All16 => "w16",
+            WidthSel::Quarter4 => "w4",
+            WidthSel::Sp0 => "w1",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<WidthSel> {
+        match s {
+            "w16" | "wall" => Some(WidthSel::All16),
+            "w4" => Some(WidthSel::Quarter4),
+            "w1" | "wsp0" => Some(WidthSel::Sp0),
+            _ => None,
+        }
+    }
+}
+
+/// Wavefront depth selector (Table 3, bits [2:1]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[repr(u8)]
+pub enum DepthSel {
+    /// Wavefront 0 only (one wavefront).
+    Wave0 = 0b00,
+    /// All initialized wavefronts.
+    #[default]
+    All = 0b01,
+    /// First half of the wavefronts.
+    Half = 0b10,
+    /// First quarter of the wavefronts.
+    Quarter = 0b11,
+}
+
+impl DepthSel {
+    pub fn from_bits(bits: u8) -> DepthSel {
+        match bits & 0b11 {
+            0b00 => DepthSel::Wave0,
+            0b01 => DepthSel::All,
+            0b10 => DepthSel::Half,
+            _ => DepthSel::Quarter,
+        }
+    }
+
+    pub fn bits(self) -> u8 {
+        self as u8
+    }
+
+    /// Number of active wavefronts out of `total` initialized wavefronts.
+    ///
+    /// Always at least 1: even a 1-wavefront machine runs wavefront 0 for
+    /// the Half/Quarter selectors (the subset is a prefix of the space).
+    pub fn waves(self, total: usize) -> usize {
+        debug_assert!(total >= 1);
+        match self {
+            DepthSel::Wave0 => 1,
+            DepthSel::All => total,
+            DepthSel::Half => (total / 2).max(1),
+            DepthSel::Quarter => (total / 4).max(1),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DepthSel::Wave0 => "d0",
+            DepthSel::All => "dall",
+            DepthSel::Half => "dhalf",
+            DepthSel::Quarter => "dquart",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DepthSel> {
+        match s {
+            "d0" | "dwave0" => Some(DepthSel::Wave0),
+            "dall" => Some(DepthSel::All),
+            "dhalf" => Some(DepthSel::Half),
+            "dquart" | "dquarter" => Some(DepthSel::Quarter),
+            _ => None,
+        }
+    }
+}
+
+/// The full 4-bit thread-space control field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct ThreadCtrl {
+    pub width: WidthSel,
+    pub depth: DepthSel,
+}
+
+impl ThreadCtrl {
+    /// Full SIMT: all SPs, all wavefronts.
+    pub const FULL: ThreadCtrl = ThreadCtrl {
+        width: WidthSel::All16,
+        depth: DepthSel::All,
+    };
+
+    /// Single-thread MCU personality: SP0, wavefront 0.
+    pub const MCU: ThreadCtrl = ThreadCtrl {
+        width: WidthSel::Sp0,
+        depth: DepthSel::Wave0,
+    };
+
+    /// Multi-threaded-CPU personality: SP0, all wavefronts.
+    pub const MT_CPU: ThreadCtrl = ThreadCtrl {
+        width: WidthSel::Sp0,
+        depth: DepthSel::All,
+    };
+
+    pub fn new(width: WidthSel, depth: DepthSel) -> ThreadCtrl {
+        ThreadCtrl { width, depth }
+    }
+
+    /// Encode to the 4-bit field (width in [3:2], depth in [1:0]).
+    pub fn bits(self) -> u8 {
+        (self.width.bits() << 2) | self.depth.bits()
+    }
+
+    /// Decode; `None` when the width coding is the undefined "11".
+    pub fn from_bits(bits: u8) -> Option<ThreadCtrl> {
+        Some(ThreadCtrl {
+            width: WidthSel::from_bits((bits >> 2) & 0b11)?,
+            depth: DepthSel::from_bits(bits & 0b11),
+        })
+    }
+
+    /// Number of threads this instruction operates on, given the machine's
+    /// initialized wavefront count.
+    pub fn active_threads(self, total_waves: usize) -> usize {
+        self.width.lanes() * self.depth.waves(total_waves)
+    }
+
+    /// Is lane `sp` of wavefront `wave` selected?
+    pub fn selects(self, sp: usize, wave: usize, total_waves: usize) -> bool {
+        sp < self.width.lanes() && wave < self.depth.waves(total_waves)
+    }
+}
+
+impl fmt::Display for ThreadCtrl {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{},{}]", self.width.name(), self.depth.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_decode_all_defined() {
+        for w in [WidthSel::All16, WidthSel::Quarter4, WidthSel::Sp0] {
+            for d in [
+                DepthSel::Wave0,
+                DepthSel::All,
+                DepthSel::Half,
+                DepthSel::Quarter,
+            ] {
+                let tc = ThreadCtrl::new(w, d);
+                assert_eq!(ThreadCtrl::from_bits(tc.bits()), Some(tc));
+            }
+        }
+    }
+
+    #[test]
+    fn undefined_width_rejected() {
+        // width bits 0b11 is "Undefined" in Table 3.
+        assert_eq!(ThreadCtrl::from_bits(0b1100), None);
+        assert_eq!(ThreadCtrl::from_bits(0b1111), None);
+    }
+
+    #[test]
+    fn active_thread_counts_512_thread_machine() {
+        // 512 threads / 16 SPs = 32 wavefronts (paper §3.2 example).
+        let total = 32;
+        assert_eq!(ThreadCtrl::FULL.active_threads(total), 512);
+        assert_eq!(ThreadCtrl::MCU.active_threads(total), 1);
+        assert_eq!(ThreadCtrl::MT_CPU.active_threads(total), 32);
+        let quarter = ThreadCtrl::new(WidthSel::Quarter4, DepthSel::All);
+        assert_eq!(quarter.active_threads(total), 128);
+        let narrow = ThreadCtrl::new(WidthSel::All16, DepthSel::Quarter);
+        assert_eq!(narrow.active_threads(total), 128);
+    }
+
+    #[test]
+    fn selection_is_prefix_of_space() {
+        let tc = ThreadCtrl::new(WidthSel::Quarter4, DepthSel::Half);
+        assert!(tc.selects(0, 0, 32));
+        assert!(tc.selects(3, 15, 32));
+        assert!(!tc.selects(4, 0, 32)); // SP4 outside quarter width
+        assert!(!tc.selects(0, 16, 32)); // wave 16 outside half depth
+    }
+
+    #[test]
+    fn depth_min_one_wave() {
+        assert_eq!(DepthSel::Quarter.waves(2), 1);
+        assert_eq!(DepthSel::Half.waves(1), 1);
+    }
+
+    #[test]
+    fn mcu_is_single_thread() {
+        assert!(ThreadCtrl::MCU.selects(0, 0, 32));
+        assert!(!ThreadCtrl::MCU.selects(1, 0, 32));
+        assert!(!ThreadCtrl::MCU.selects(0, 1, 32));
+    }
+}

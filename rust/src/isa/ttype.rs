@@ -1,0 +1,212 @@
+//! The 2-bit TYPE (number representation) field and condition codes.
+
+use std::fmt;
+
+/// Number representation of an instruction's operands (Figure 3: "The
+/// 2-bit representation field encodes whether the number is unsigned
+/// integer, signed integer, or FP32").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+#[repr(u8)]
+pub enum TType {
+    /// Unsigned 32-bit (or 16-bit on small-ALU configs).
+    Uint = 0,
+    /// Signed two's-complement.
+    #[default]
+    Int = 1,
+    /// IEEE-754 single precision.
+    Fp32 = 2,
+}
+
+impl TType {
+    pub fn from_bits(bits: u8) -> Option<TType> {
+        match bits & 0b11 {
+            0 => Some(TType::Uint),
+            1 => Some(TType::Int),
+            2 => Some(TType::Fp32),
+            _ => None,
+        }
+    }
+
+    pub fn bits(self) -> u8 {
+        self as u8
+    }
+
+    /// Assembly suffix (`add.i32`, `shr.u32`, `if.lt.f32`).
+    pub fn suffix(self) -> &'static str {
+        match self {
+            TType::Uint => "u32",
+            TType::Int => "i32",
+            TType::Fp32 => "f32",
+        }
+    }
+
+    pub fn from_suffix(s: &str) -> Option<TType> {
+        match s {
+            "u32" | "u16" | "uint32" | "uint16" => Some(TType::Uint),
+            "i32" | "i16" | "int32" | "int16" => Some(TType::Int),
+            "f32" | "fp32" => Some(TType::Fp32),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for TType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.suffix())
+    }
+}
+
+/// Condition codes for IF.cc (Table 2 "Int Compare"; FP variants exist for
+/// each). Stored in the low 3 bits of the immediate field of an IF word.
+///
+/// The unsigned mnemonics (lo/ls/hi/hs) are the same codes with TYPE=UINT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum CondCode {
+    Eq = 0,
+    Ne = 1,
+    Lt = 2,
+    Le = 3,
+    Gt = 4,
+    Ge = 5,
+}
+
+impl CondCode {
+    pub const ALL: [CondCode; 6] = [
+        CondCode::Eq,
+        CondCode::Ne,
+        CondCode::Lt,
+        CondCode::Le,
+        CondCode::Gt,
+        CondCode::Ge,
+    ];
+
+    pub fn from_bits(bits: u8) -> Option<CondCode> {
+        Self::ALL.get((bits & 0b111) as usize).copied()
+    }
+
+    pub fn bits(self) -> u8 {
+        self as u8
+    }
+
+    /// Signed/FP mnemonic.
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            CondCode::Eq => "eq",
+            CondCode::Ne => "ne",
+            CondCode::Lt => "lt",
+            CondCode::Le => "le",
+            CondCode::Gt => "gt",
+            CondCode::Ge => "ge",
+        }
+    }
+
+    /// Parse either the signed (`lt`) or unsigned (`lo`) mnemonic; returns
+    /// the code and whether the unsigned alias was used.
+    pub fn from_mnemonic(s: &str) -> Option<(CondCode, bool)> {
+        match s {
+            "eq" => Some((CondCode::Eq, false)),
+            "ne" => Some((CondCode::Ne, false)),
+            "lt" => Some((CondCode::Lt, false)),
+            "le" => Some((CondCode::Le, false)),
+            "gt" => Some((CondCode::Gt, false)),
+            "ge" => Some((CondCode::Ge, false)),
+            "lo" => Some((CondCode::Lt, true)),
+            "ls" => Some((CondCode::Le, true)),
+            "hi" => Some((CondCode::Gt, true)),
+            "hs" => Some((CondCode::Ge, true)),
+            _ => None,
+        }
+    }
+
+    /// Evaluate over i32 lanes with the given representation.
+    pub fn eval(self, ttype: TType, a: u32, b: u32) -> bool {
+        match ttype {
+            TType::Uint => self.eval_ord(a.cmp(&b)),
+            TType::Int => self.eval_ord((a as i32).cmp(&(b as i32))),
+            TType::Fp32 => {
+                let (fa, fb) = (f32::from_bits(a), f32::from_bits(b));
+                match self {
+                    CondCode::Eq => fa == fb,
+                    CondCode::Ne => fa != fb,
+                    CondCode::Lt => fa < fb,
+                    CondCode::Le => fa <= fb,
+                    CondCode::Gt => fa > fb,
+                    CondCode::Ge => fa >= fb,
+                }
+            }
+        }
+    }
+
+    fn eval_ord(self, ord: std::cmp::Ordering) -> bool {
+        use std::cmp::Ordering::*;
+        match self {
+            CondCode::Eq => ord == Equal,
+            CondCode::Ne => ord != Equal,
+            CondCode::Lt => ord == Less,
+            CondCode::Le => ord != Greater,
+            CondCode::Gt => ord == Greater,
+            CondCode::Ge => ord != Less,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ttype_roundtrip() {
+        for t in [TType::Uint, TType::Int, TType::Fp32] {
+            assert_eq!(TType::from_bits(t.bits()), Some(t));
+            assert_eq!(TType::from_suffix(t.suffix()), Some(t));
+        }
+        assert_eq!(TType::from_bits(3), None);
+    }
+
+    #[test]
+    fn condcode_roundtrip() {
+        for cc in CondCode::ALL {
+            assert_eq!(CondCode::from_bits(cc.bits()), Some(cc));
+            assert_eq!(CondCode::from_mnemonic(cc.mnemonic()), Some((cc, false)));
+        }
+    }
+
+    #[test]
+    fn unsigned_aliases() {
+        assert_eq!(CondCode::from_mnemonic("lo"), Some((CondCode::Lt, true)));
+        assert_eq!(CondCode::from_mnemonic("hs"), Some((CondCode::Ge, true)));
+    }
+
+    #[test]
+    fn eval_signed_vs_unsigned() {
+        let a = (-1i32) as u32; // 0xFFFFFFFF
+        let b = 1u32;
+        assert!(CondCode::Lt.eval(TType::Int, a, b)); // -1 < 1
+        assert!(CondCode::Gt.eval(TType::Uint, a, b)); // 0xFFFFFFFF > 1
+    }
+
+    #[test]
+    fn eval_fp() {
+        let a = 1.5f32.to_bits();
+        let b = (-2.0f32).to_bits();
+        assert!(CondCode::Gt.eval(TType::Fp32, a, b));
+        assert!(CondCode::Ne.eval(TType::Fp32, a, b));
+        let nan = f32::NAN.to_bits();
+        assert!(!CondCode::Eq.eval(TType::Fp32, nan, nan));
+        assert!(CondCode::Ne.eval(TType::Fp32, nan, nan));
+    }
+
+    #[test]
+    fn eval_all_codes_exhaustive() {
+        for (a, b) in [(0u32, 0u32), (1, 2), (2, 1)] {
+            let ord = a.cmp(&b);
+            assert_eq!(CondCode::Eq.eval(TType::Uint, a, b), ord.is_eq());
+            assert_eq!(CondCode::Ne.eval(TType::Uint, a, b), !ord.is_eq());
+            assert_eq!(CondCode::Lt.eval(TType::Uint, a, b), ord.is_lt());
+            assert_eq!(CondCode::Le.eval(TType::Uint, a, b), ord.is_le());
+            assert_eq!(CondCode::Gt.eval(TType::Uint, a, b), ord.is_gt());
+            assert_eq!(CondCode::Ge.eval(TType::Uint, a, b), ord.is_ge());
+        }
+    }
+}

@@ -1,0 +1,371 @@
+//! Instruction-word encoding (paper Figure 3).
+//!
+//! The word is, from most- to least-significant field:
+//!
+//! ```text
+//! | tctrl (4) | opcode (6) | type (2) | rd (R) | ra (R) | rb (R) | imm (16) |
+//! ```
+//!
+//! where `R` = ceil(log2(registers_per_thread)) — 4/5/6 bits for 16/32/64
+//! registers, giving the paper's 40/43/46-bit instruction words. Words are
+//! stored in a `u64` (`EncodedWord`); the layout object carries `R`.
+//!
+//! IF.cc words put the condition code in the low 3 bits of the immediate
+//! field (the compare operands are in ra/rb).
+
+use std::fmt;
+
+use super::{
+    CondCode, Opcode, TType, ThreadCtrl, IMM_BITS, OPCODE_BITS, TCTRL_BITS,
+    TTYPE_BITS,
+};
+use crate::isa::opcode::OperandShape;
+
+/// An encoded instruction word.
+pub type EncodedWord = u64;
+
+/// Field geometry for a given registers-per-thread configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WordLayout {
+    /// Register-field width in bits (4, 5 or 6).
+    pub reg_bits: u32,
+}
+
+impl WordLayout {
+    /// Layout for a machine with `regs_per_thread` registers.
+    pub fn for_regs(regs_per_thread: usize) -> WordLayout {
+        assert!(
+            regs_per_thread.is_power_of_two() && (16..=64).contains(&regs_per_thread),
+            "registers per thread must be 16, 32 or 64 (got {regs_per_thread})"
+        );
+        WordLayout {
+            reg_bits: regs_per_thread.trailing_zeros(),
+        }
+    }
+
+    /// Total instruction-word width: 40/43/46 bits (paper §5.4).
+    pub fn word_bits(&self) -> u32 {
+        TCTRL_BITS + OPCODE_BITS + TTYPE_BITS + 3 * self.reg_bits + IMM_BITS
+    }
+
+    pub fn max_reg(&self) -> u8 {
+        ((1u32 << self.reg_bits) - 1) as u8
+    }
+
+    // Field bit offsets from the LSB.
+    fn imm_off(&self) -> u32 {
+        0
+    }
+    fn rb_off(&self) -> u32 {
+        IMM_BITS
+    }
+    fn ra_off(&self) -> u32 {
+        IMM_BITS + self.reg_bits
+    }
+    fn rd_off(&self) -> u32 {
+        IMM_BITS + 2 * self.reg_bits
+    }
+    fn ttype_off(&self) -> u32 {
+        IMM_BITS + 3 * self.reg_bits
+    }
+    fn opcode_off(&self) -> u32 {
+        self.ttype_off() + TTYPE_BITS
+    }
+    fn tctrl_off(&self) -> u32 {
+        self.opcode_off() + OPCODE_BITS
+    }
+
+    /// Encode a decoded instruction. Panics if a register exceeds the
+    /// configured register space (the assembler validates first).
+    pub fn encode(&self, i: &Instr) -> EncodedWord {
+        let rmask = self.max_reg() as u64;
+        assert!(
+            i.rd as u64 <= rmask && i.ra as u64 <= rmask && i.rb as u64 <= rmask,
+            "register out of range for {}-bit register field",
+            self.reg_bits
+        );
+        let mut w: u64 = 0;
+        w |= (i.imm as u64 & 0xFFFF) << self.imm_off();
+        w |= (i.rb as u64) << self.rb_off();
+        w |= (i.ra as u64) << self.ra_off();
+        w |= (i.rd as u64) << self.rd_off();
+        w |= (i.ttype.bits() as u64) << self.ttype_off();
+        w |= (i.op.bits() as u64) << self.opcode_off();
+        w |= (i.tc.bits() as u64) << self.tctrl_off();
+        w
+    }
+
+    /// Decode an instruction word. Errors on unallocated opcodes, the
+    /// undefined width coding, or a reserved TYPE value.
+    pub fn decode(&self, w: EncodedWord) -> Result<Instr, DecodeError> {
+        let rmask = self.max_reg() as u64;
+        let op_bits = ((w >> self.opcode_off()) & 0x3F) as u8;
+        let op = Opcode::from_bits(op_bits).ok_or(DecodeError::BadOpcode(op_bits))?;
+        let tc_bits = ((w >> self.tctrl_off()) & 0xF) as u8;
+        let tc = ThreadCtrl::from_bits(tc_bits).ok_or(DecodeError::UndefinedWidth)?;
+        let tt_bits = ((w >> self.ttype_off()) & 0x3) as u8;
+        let ttype = TType::from_bits(tt_bits).ok_or(DecodeError::BadType(tt_bits))?;
+        Ok(Instr {
+            op,
+            ttype,
+            tc,
+            rd: ((w >> self.rd_off()) & rmask) as u8,
+            ra: ((w >> self.ra_off()) & rmask) as u8,
+            rb: ((w >> self.rb_off()) & rmask) as u8,
+            imm: ((w >> self.imm_off()) & 0xFFFF) as u16,
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeError {
+    BadOpcode(u8),
+    UndefinedWidth,
+    BadType(u8),
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DecodeError::BadOpcode(b) => write!(f, "unallocated opcode {b:#04x}"),
+            DecodeError::UndefinedWidth => {
+                write!(f, "undefined thread-space width coding \"11\"")
+            }
+            DecodeError::BadType(b) => write!(f, "reserved TYPE coding {b:#04b}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// A decoded instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instr {
+    pub op: Opcode,
+    pub ttype: TType,
+    /// Dynamic thread-space control for this instruction (§3.1).
+    pub tc: ThreadCtrl,
+    pub rd: u8,
+    pub ra: u8,
+    pub rb: u8,
+    /// Raw 16-bit immediate: LDI value, LOD/STO offset, branch target,
+    /// INIT loop count, or IF condition code (low 3 bits).
+    pub imm: u16,
+}
+
+impl Instr {
+    /// A full-space instruction with all fields zeroed except the opcode.
+    pub fn new(op: Opcode) -> Instr {
+        Instr {
+            op,
+            ttype: TType::default(),
+            tc: ThreadCtrl::FULL,
+            rd: 0,
+            ra: 0,
+            rb: 0,
+            imm: 0,
+        }
+    }
+
+    pub fn nop() -> Instr {
+        Instr::new(Opcode::Nop)
+    }
+
+    /// Immediate as signed (LDI can load negative constants).
+    pub fn imm_i(&self) -> i32 {
+        self.imm as i16 as i32
+    }
+
+    /// Immediate as unsigned (addresses, offsets, loop counts).
+    pub fn imm_u(&self) -> u32 {
+        self.imm as u32
+    }
+
+    /// Condition code of an IF word.
+    pub fn cond(&self) -> Option<CondCode> {
+        if self.op == Opcode::If {
+            CondCode::from_bits((self.imm & 0b111) as u8)
+        } else {
+            None
+        }
+    }
+
+    /// Render in assembly syntax (inverse of the assembler).
+    pub fn disasm(&self) -> String {
+        let mut s = String::new();
+        if self.tc != ThreadCtrl::FULL {
+            s.push_str(&format!("{} ", self.tc));
+        }
+        s.push_str(self.op.mnemonic());
+        if self.op == Opcode::If {
+            let cc = self.cond().map(|c| c.mnemonic()).unwrap_or("??");
+            s.push_str(&format!(".{cc}.{}", self.ttype.suffix()));
+        } else if self.op.is_typed() {
+            s.push_str(&format!(".{}", self.ttype.suffix()));
+        }
+        match self.op.operands() {
+            OperandShape::None => {}
+            OperandShape::Rd => s.push_str(&format!(" r{}", self.rd)),
+            OperandShape::RdRa => s.push_str(&format!(" r{}, r{}", self.rd, self.ra)),
+            OperandShape::RdRaRb => {
+                s.push_str(&format!(" r{}, r{}, r{}", self.rd, self.ra, self.rb))
+            }
+            OperandShape::RaRb => s.push_str(&format!(" r{}, r{}", self.ra, self.rb)),
+            OperandShape::RdMem => {
+                s.push_str(&format!(" r{}, (r{})+{}", self.rd, self.ra, self.imm_u()))
+            }
+            OperandShape::RdImm => s.push_str(&format!(" r{}, #{}", self.rd, self.imm_i())),
+            OperandShape::Imm => s.push_str(&format!(" #{}", self.imm_u())),
+            OperandShape::Addr => s.push_str(&format!(" {}", self.imm_u())),
+        }
+        s
+    }
+}
+
+impl fmt::Display for Instr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.disasm())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{DepthSel, WidthSel};
+
+    #[test]
+    fn word_widths_match_paper() {
+        // §5.4: 40-bit IW for 16 regs, 43 for 32, 46 for 64.
+        assert_eq!(WordLayout::for_regs(16).word_bits(), 40);
+        assert_eq!(WordLayout::for_regs(32).word_bits(), 43);
+        assert_eq!(WordLayout::for_regs(64).word_bits(), 46);
+    }
+
+    #[test]
+    #[should_panic(expected = "registers per thread")]
+    fn bad_reg_count_panics() {
+        WordLayout::for_regs(48);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let layout = WordLayout::for_regs(32);
+        let i = Instr {
+            op: Opcode::FAdd,
+            ttype: TType::Fp32,
+            tc: ThreadCtrl::new(WidthSel::Quarter4, DepthSel::Half),
+            rd: 31,
+            ra: 7,
+            rb: 15,
+            imm: 0xBEEF,
+        };
+        let w = layout.encode(&i);
+        assert_eq!(layout.decode(w).unwrap(), i);
+        assert!(w < (1u64 << layout.word_bits()));
+    }
+
+    /// Property: every instruction the machine can express round-trips
+    /// exactly through every layout (deterministic LCG sweep).
+    #[test]
+    fn roundtrip_property_sweep() {
+        let mut lcg: u64 = 0x2545F4914F6CDD1D;
+        let mut next = move || {
+            lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            lcg >> 16
+        };
+        for regs in [16usize, 32, 64] {
+            let layout = WordLayout::for_regs(regs);
+            for _ in 0..2000 {
+                let r = next();
+                let op = Opcode::from_bits((r % 44) as u8).unwrap();
+                let ttype = TType::from_bits(((r >> 8) % 3) as u8).unwrap();
+                let tc = ThreadCtrl::new(
+                    WidthSel::from_bits(((r >> 16) % 3) as u8).unwrap(),
+                    DepthSel::from_bits(((r >> 24) % 4) as u8),
+                );
+                let i = Instr {
+                    op,
+                    ttype,
+                    tc,
+                    rd: ((r >> 32) as u8) & layout.max_reg(),
+                    ra: ((r >> 38) as u8) & layout.max_reg(),
+                    rb: ((r >> 44) as u8) & layout.max_reg(),
+                    imm: (next() & 0xFFFF) as u16,
+                };
+                let w = layout.encode(&i);
+                assert_eq!(layout.decode(w).unwrap(), i, "layout {regs}");
+                assert!(w < (1u64 << layout.word_bits()));
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_bad_fields() {
+        let layout = WordLayout::for_regs(16);
+        // Unallocated opcode 63.
+        let w = 63u64 << layout.opcode_off();
+        assert_eq!(layout.decode(w), Err(DecodeError::BadOpcode(63)));
+        // Undefined width coding.
+        let w = 0b1100u64 << layout.tctrl_off();
+        assert_eq!(layout.decode(w), Err(DecodeError::UndefinedWidth));
+        // Reserved TYPE.
+        let w = 0b11u64 << layout.ttype_off();
+        assert_eq!(layout.decode(w), Err(DecodeError::BadType(3)));
+    }
+
+    #[test]
+    fn register_out_of_range_panics() {
+        let layout = WordLayout::for_regs(16);
+        let mut i = Instr::new(Opcode::Add);
+        i.rd = 16; // needs 5 bits, layout has 4
+        assert!(std::panic::catch_unwind(|| layout.encode(&i)).is_err());
+    }
+
+    #[test]
+    fn if_condition_code_in_imm() {
+        let layout = WordLayout::for_regs(32);
+        let mut i = Instr::new(Opcode::If);
+        i.ttype = TType::Int;
+        i.ra = 1;
+        i.rb = 2;
+        i.imm = CondCode::Le.bits() as u16;
+        let d = layout.decode(layout.encode(&i)).unwrap();
+        assert_eq!(d.cond(), Some(CondCode::Le));
+        // Non-IF instructions have no condition.
+        assert_eq!(Instr::new(Opcode::Add).cond(), None);
+    }
+
+    #[test]
+    fn imm_signedness_helpers() {
+        let mut i = Instr::new(Opcode::Ldi);
+        i.imm = (-5i16) as u16;
+        assert_eq!(i.imm_i(), -5);
+        assert_eq!(i.imm_u(), 0xFFFB);
+    }
+
+    #[test]
+    fn disasm_formats() {
+        let mut i = Instr::new(Opcode::FAdd);
+        i.ttype = TType::Fp32;
+        i.rd = 2;
+        i.ra = 1;
+        i.rb = 0;
+        assert_eq!(i.disasm(), "fadd r2, r1, r0");
+
+        let mut l = Instr::new(Opcode::Lod);
+        l.rd = 4;
+        l.ra = 2;
+        l.imm = 16;
+        assert_eq!(l.disasm(), "lod r4, (r2)+16");
+
+        let mut m = Instr::new(Opcode::Max);
+        m.ttype = TType::Uint;
+        assert_eq!(m.disasm(), "max.u32 r0, r0, r0");
+
+        let mut s = Instr::new(Opcode::Sto);
+        s.tc = ThreadCtrl::MCU;
+        s.rd = 1;
+        s.ra = 0;
+        assert_eq!(s.disasm(), "[w1,d0] sto r1, (r0)+0");
+    }
+}

@@ -1,0 +1,193 @@
+//! Bitonic sort (Table 8, left block): sorts `shared[0..n]` ascending.
+//!
+//! §7: "The bitonic sort benchmark requires a wider mix of instructions.
+//! Predicates are required ... The nature of the bitonic sort tends to use
+//! many subroutine calls, which we can see here in the relatively large
+//! number of branch operations. Again, the memory operations take the
+//! majority of all cycles, as each pass of the sort requires a
+//! redistribution of the data among the SPs."
+//!
+//! One thread per compare-exchange pair (n/2 threads). The log²(n)-pass
+//! network shares a single JSR subroutine; each pass loads its (k, j)
+//! parameters into registers and calls it. Ascending/descending selection
+//! uses one predicate level (IF.eq/ELSE/ENDIF on `i & k`), with MIN/MAX
+//! computing both outcomes unconditionally — only the register moves are
+//! predicated, and every store slot is consumed whether or not a thread's
+//! write lands (§3.2: predicates gate `write_enable`, not issue cycles).
+
+use super::sched::Sched;
+use super::Kernel;
+use crate::isa::{WordLayout, WAVEFRONT_WIDTH};
+use crate::sim::config::MemoryMode;
+
+/// Valid sizes: one thread per pair, at least one full wavefront.
+pub const MIN_N: usize = 32;
+pub const MAX_N: usize = 512;
+
+/// Bitonic sort of `n` unsigned 32-bit words in place at shared `[0, n)`.
+pub fn bitonic(n: usize) -> Kernel {
+    bitonic_for(n, MemoryMode::Dp)
+}
+
+/// Memory-mode-aware variant (NOP schedule follows the mode's port costs).
+pub fn bitonic_for(n: usize, memory: MemoryMode) -> Kernel {
+    assert!(
+        n.is_power_of_two() && (MIN_N..=MAX_N).contains(&n),
+        "n must be a power of two in [{MIN_N}, {MAX_N}]"
+    );
+    let threads = (n / 2).max(WAVEFRONT_WIDTH);
+    let mut s = Sched::new(
+        &format!("bitonic-{n}"),
+        threads,
+        WordLayout::for_regs(32),
+        memory,
+    );
+    s.comment("r0 = pair index t; r13 = 1, r14 = 0");
+    s.op("tdx r0").op("ldi r13, #1").op("ldi r14, #0");
+
+    // Pass schedule: k = 2,4,..,n; j = k/2 .. 1.
+    let mut k = 2;
+    while k <= n {
+        s.comment(&format!("=== merge stage k={k} ==="));
+        s.op(format!("ldi r18, #{k}"));
+        let mut j = k / 2;
+        while j >= 1 {
+            s.op(format!("ldi r16, #{}", j - 1)).op(format!("ldi r17, #{j}"));
+            s.fence();
+            s.op("jsr pass");
+            j /= 2;
+        }
+        k *= 2;
+    }
+    s.op("stop");
+
+    // The shared compare-exchange pass: params r16 = j-1, r17 = j, r18 = k.
+    s.label("pass");
+    s.comment("expand pair index t to element index i (insert 0 at bit log2 j)");
+    s.op("and r4, r0, r16")
+        .op("sub.u32 r5, r0, r4")
+        .op("shl.u32 r5, r5, r13")
+        .op("add.u32 r6, r5, r4")
+        .op("xor r7, r6, r17")
+        .op("and r8, r6, r18");
+    s.comment("compare-exchange: compute both orders, predicate the select");
+    s.op("lod r9, (r6)+0")
+        .op("lod r10, (r7)+0")
+        .op("min.u32 r11, r9, r10")
+        .op("max.u32 r12, r9, r10");
+    s.op("if.eq r8, r14");
+    s.comment("ascending: mem[i] <- min, mem[l] <- max");
+    s.op("or r15, r11, r14").op("or r19, r12, r14");
+    s.op("else");
+    s.comment("descending: mem[i] <- max, mem[l] <- min");
+    s.op("or r15, r12, r14").op("or r19, r11, r14");
+    s.op("endif");
+    s.op("sto r15, (r6)+0").op("sto r19, (r7)+0");
+    s.op("rts");
+
+    Kernel {
+        name: format!("bitonic-{n}"),
+        asm: s.into_source(),
+        threads,
+        dim_x: threads,
+    }
+}
+
+/// Oracle: ascending sort.
+pub fn oracle(data: &[u32]) -> Vec<u32> {
+    let mut v = data.to_vec();
+    v.sort_unstable();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::EgpuConfig;
+
+    fn data(n: usize) -> Vec<u32> {
+        let mut lcg = 0x2545F4914F6CDD1Du64;
+        (0..n)
+            .map(|_| {
+                lcg = lcg.wrapping_mul(6364136223846793005).wrapping_add(1);
+                (lcg >> 33) as u32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn sorts_all_sizes() {
+        for n in [32usize, 64, 128, 256] {
+            let cfg = EgpuConfig::benchmark_predicated(MemoryMode::Dp);
+            let d = data(n);
+            let (stats, m) = bitonic(n)
+                .run(&cfg, &[(0, d.clone())])
+                .unwrap_or_else(|e| panic!("n={n}: {e}"));
+            assert_eq!(m.shared().read_block(0, n), &oracle(&d)[..], "n={n}");
+            assert_eq!(stats.hazards, 0, "n={n}: {:?}", stats.hazard_samples);
+        }
+    }
+
+    #[test]
+    fn sorts_adversarial_patterns() {
+        let cfg = EgpuConfig::benchmark_predicated(MemoryMode::Dp);
+        let n = 64;
+        for d in [
+            (0..n as u32).rev().collect::<Vec<_>>(), // descending
+            vec![7; n],                               // all equal
+            (0..n as u32).collect::<Vec<_>>(),        // pre-sorted
+            (0..n as u32).map(|i| i ^ 0x80000000).collect(), // high-bit mix
+        ] {
+            let (_, m) = bitonic(n).run(&cfg, &[(0, d.clone())]).unwrap();
+            assert_eq!(m.shared().read_block(0, n), &oracle(&d)[..]);
+        }
+    }
+
+    #[test]
+    fn cycle_counts_in_paper_band() {
+        // Table 8 eGPU-DP: 1742 / 3728 / 8326 / 16578 for n = 32..256.
+        let cfg = EgpuConfig::benchmark_predicated(MemoryMode::Dp);
+        for (n, paper) in [(32usize, 1742u64), (64, 3728), (128, 8326), (256, 16578)] {
+            let (stats, _) = bitonic(n).run(&cfg, &[(0, data(n))]).unwrap();
+            let r = stats.cycles as f64 / paper as f64;
+            assert!(
+                (0.4..=2.0).contains(&r),
+                "n={n}: {} vs paper {paper} ({r:.2}x)",
+                stats.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn qp_fewer_cycles() {
+        // Table 8: QP needs 0.72-0.86x the DP cycles (write bandwidth).
+        let n = 128;
+        let d = data(n);
+        let dp_cfg = EgpuConfig::benchmark_predicated(MemoryMode::Dp);
+        let qp_cfg = EgpuConfig::benchmark_predicated(MemoryMode::Qp);
+        let (s_dp, _) = bitonic(n).run(&dp_cfg, &[(0, d.clone())]).unwrap();
+        let (s_qp, m) = bitonic_for(n, MemoryMode::Qp).run(&qp_cfg, &[(0, d.clone())]).unwrap();
+        assert_eq!(m.shared().read_block(0, n), &oracle(&d)[..]);
+        let ratio = s_qp.cycles as f64 / s_dp.cycles as f64;
+        assert!((0.6..=0.95).contains(&ratio), "QP/DP = {ratio:.2}");
+    }
+
+    #[test]
+    fn requires_predicates() {
+        let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false); // no predicates
+        let err = match bitonic(32).run(&cfg, &[(0, data(32))]) {
+            Err(e) => e,
+            Ok(_) => panic!("bitonic must fail to load without predicates"),
+        };
+        assert!(err.message.contains("predicates"), "{err}");
+    }
+
+    #[test]
+    fn uses_subroutine_calls() {
+        // §7: "many subroutine calls" — the profile must show branches.
+        let cfg = EgpuConfig::benchmark_predicated(MemoryMode::Dp);
+        let (stats, _) = bitonic(64).run(&cfg, &[(0, data(64))]).unwrap();
+        let branches = stats.profile.count(crate::isa::Group::Control);
+        assert!(branches > 40, "only {branches} control instructions");
+    }
+}

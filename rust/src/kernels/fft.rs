@@ -1,0 +1,269 @@
+//! Radix-2 DIT FFT, FP32 (Table 8, right block).
+//!
+//! Layout (32-bit words): re at 0, im at `n`, twiddle cos at `2n` (n/2
+//! entries), twiddle sin at `2n + n/2`, bit-reverse staging at `3n`/`4n`.
+//! Twiddles are preloaded by the host ([`twiddles`]) — the eGPU has no
+//! trig instruction, and the paper loads data externally (§2).
+//!
+//! §7: "A similar pattern of instruction distribution is seen in the FFT
+//! ... The number of FP instructions (which are doing the actual FFT
+//! calculations) is relatively small, at about 10%. The largest proportion
+//! of operations are once again the memory accesses, especially in the
+//! write to shared memory."
+//!
+//! One thread per butterfly (n/2 threads). The log₂(n) stages share a
+//! single JSR subroutine parameterized by registers (position mask, half
+//! span, twiddle shift); the bit-reverse permutation uses the BVS
+//! instruction through a staging copy.
+
+use super::sched::Sched;
+use super::Kernel;
+use crate::isa::{WordLayout, WAVEFRONT_WIDTH};
+use crate::sim::config::MemoryMode;
+
+pub const MIN_N: usize = 32;
+pub const MAX_N: usize = 512;
+
+/// FFT of `n` complex points in place at re `[0,n)` / im `[n,2n)`.
+pub fn fft(n: usize) -> Kernel {
+    fft_for(n, MemoryMode::Dp)
+}
+
+/// Memory-mode-aware variant (NOP schedule follows the mode's port costs).
+pub fn fft_for(n: usize, memory: MemoryMode) -> Kernel {
+    assert!(
+        n.is_power_of_two() && (MIN_N..=MAX_N).contains(&n),
+        "n must be a power of two in [{MIN_N}, {MAX_N}]"
+    );
+    let threads = (n / 2).max(WAVEFRONT_WIDTH);
+    let log2n = n.trailing_zeros();
+    let im = n;
+    let cos = 2 * n;
+    let sin = 2 * n + n / 2;
+    let sre = 3 * n;
+    let sim = 4 * n;
+
+    let mut s = Sched::new(&format!("fft-{n}"), threads, WordLayout::for_regs(32), memory);
+    s.comment("r0 = butterfly index t; r13 = 1; r3 = 32 - log2n (BVS shift)");
+    s.op("tdx r0")
+        .op("ldi r13, #1")
+        .op(format!("ldi r3, #{}", 32 - log2n));
+
+    s.comment("--- bit-reverse permutation: stage through scratch ---");
+    s.op("lod r1, (r0)+0")
+        .op(format!("lod r2, (r0)+{}", n / 2))
+        .op(format!("lod r4, (r0)+{im}"))
+        .op(format!("lod r5, (r0)+{}", im + n / 2))
+        .op(format!("sto r1, (r0)+{sre}"))
+        .op(format!("sto r2, (r0)+{}", sre + n / 2))
+        .op(format!("sto r4, (r0)+{sim}"))
+        .op(format!("sto r5, (r0)+{}", sim + n / 2));
+    s.comment("gather: x[t] = staged[rev(t)]; rev(t + n/2) = rev(t) + 1");
+    s.op("bvs r6, r0")
+        .op("shr.u32 r6, r6, r3")
+        .op("add.u32 r7, r6, r13")
+        .op(format!("lod r1, (r6)+{sre}"))
+        .op(format!("lod r2, (r7)+{sre}"))
+        .op(format!("lod r4, (r6)+{sim}"))
+        .op(format!("lod r5, (r7)+{sim}"))
+        .op("sto r1, (r0)+0")
+        .op(format!("sto r2, (r0)+{}", n / 2))
+        .op(format!("sto r4, (r0)+{im}"))
+        .op(format!("sto r5, (r0)+{}", im + n / 2));
+
+    s.comment("--- butterfly stages, shared subroutine ---");
+    for stage in 0..log2n {
+        let half = 1usize << stage;
+        s.comment(&format!("stage {stage}: span {}", 2 * half));
+        s.op(format!("ldi r16, #{}", half - 1))
+            .op(format!("ldi r17, #{half}"))
+            .op(format!("ldi r18, #{}", log2n - 1 - stage));
+        s.fence();
+        s.op("jsr stage");
+    }
+    s.op("stop");
+
+    // Stage subroutine: params r16 = half-1, r17 = half, r18 = twshift.
+    s.label("stage");
+    s.comment("expand t to u-index (insert 0 at bit log2 half); v = u + half");
+    s.op("and r4, r0, r16")
+        .op("sub.u32 r5, r0, r4")
+        .op("shl.u32 r5, r5, r13")
+        .op("add.u32 r5, r5, r4")
+        .op("add.u32 r6, r5, r17");
+    s.comment("twiddle w = cos - i*sin at index p << twshift");
+    s.op("shl.u32 r7, r4, r18")
+        .op(format!("lod r8, (r7)+{cos}"))
+        .op(format!("lod r9, (r7)+{sin}"))
+        .op("fneg r9, r9");
+    s.comment("u = x[iu], v = x[iv]");
+    s.op("lod r10, (r5)+0")
+        .op(format!("lod r11, (r5)+{im}"))
+        .op("lod r14, (r6)+0")
+        .op(format!("lod r15, (r6)+{im}"));
+    s.comment("p = w*v (complex)");
+    s.op("fmul r19, r14, r8")
+        .op("fmul r20, r15, r9")
+        .op("fsub r19, r19, r20")
+        .op("fmul r20, r14, r9")
+        .op("fmul r21, r15, r8")
+        .op("fadd r20, r20, r21");
+    s.comment("x[iu] = u + p; x[iv] = u - p");
+    s.op("fadd r21, r10, r19")
+        .op("sto r21, (r5)+0")
+        .op("fsub r21, r10, r19")
+        .op("sto r21, (r6)+0")
+        .op("fadd r21, r11, r20")
+        .op(format!("sto r21, (r5)+{im}"))
+        .op("fsub r21, r11, r20")
+        .op(format!("sto r21, (r6)+{im}"));
+    s.op("rts");
+
+    Kernel {
+        name: format!("fft-{n}"),
+        asm: s.into_source(),
+        threads,
+        dim_x: threads,
+    }
+}
+
+/// Host-side twiddle tables: `(cos table, sin table)`, n/2 entries each,
+/// angle 2πt/n.
+pub fn twiddles(n: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut c = Vec::with_capacity(n / 2);
+    let mut sn = Vec::with_capacity(n / 2);
+    for t in 0..n / 2 {
+        let w = 2.0 * std::f64::consts::PI * t as f64 / n as f64;
+        c.push(w.cos() as f32);
+        sn.push(w.sin() as f32);
+    }
+    (c, sn)
+}
+
+/// Shared-memory initialization blocks for `run()`: input + twiddles.
+pub fn shared_init(re: &[f32], im: &[f32]) -> Vec<(usize, Vec<u32>)> {
+    let n = re.len();
+    assert_eq!(im.len(), n);
+    let (c, s) = twiddles(n);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    vec![
+        (0, bits(re)),
+        (n, bits(im)),
+        (2 * n, bits(&c)),
+        (2 * n + n / 2, bits(&s)),
+    ]
+}
+
+/// Oracle: direct DFT, `X[k] = Σ_t x[t]·e^{-2πi·kt/n}` in f64.
+pub fn oracle(re: &[f32], im: &[f32]) -> (Vec<f64>, Vec<f64>) {
+    let n = re.len();
+    let mut xr = vec![0f64; n];
+    let mut xi = vec![0f64; n];
+    for k in 0..n {
+        for t in 0..n {
+            let w = -2.0 * std::f64::consts::PI * (k * t % n) as f64 / n as f64;
+            xr[k] += re[t] as f64 * w.cos() - im[t] as f64 * w.sin();
+            xi[k] += re[t] as f64 * w.sin() + im[t] as f64 * w.cos();
+        }
+    }
+    (xr, xi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::EgpuConfig;
+
+    fn tones(n: usize) -> (Vec<f32>, Vec<f32>) {
+        let re: Vec<f32> = (0..n)
+            .map(|i| {
+                let x = i as f64 / n as f64;
+                ((2.0 * std::f64::consts::PI * 3.0 * x).cos()
+                    + 0.5 * (2.0 * std::f64::consts::PI * 7.0 * x).sin()) as f32
+            })
+            .collect();
+        (re, vec![0f32; n])
+    }
+
+    fn run_fft(n: usize, memory: MemoryMode) -> (crate::sim::RunStats, Vec<f32>, Vec<f32>) {
+        let cfg = EgpuConfig::benchmark(memory, false);
+        let (re, im) = tones(n);
+        let (stats, m) = fft_for(n, memory)
+            .run(&cfg, &shared_init(&re, &im))
+            .unwrap_or_else(|e| panic!("n={n}: {e}"));
+        let out_re: Vec<f32> = m.shared().read_block(0, n).iter().map(|&b| f32::from_bits(b)).collect();
+        let out_im: Vec<f32> = m.shared().read_block(n, n).iter().map(|&b| f32::from_bits(b)).collect();
+        (stats, out_re, out_im)
+    }
+
+    #[test]
+    fn matches_dft_all_sizes() {
+        for n in [32usize, 64, 128, 256] {
+            let (stats, got_r, got_i) = run_fft(n, MemoryMode::Dp);
+            assert_eq!(stats.hazards, 0, "n={n}: {:?}", stats.hazard_samples);
+            let (re, im) = tones(n);
+            let (want_r, want_i) = oracle(&re, &im);
+            let tol = 1e-3 * n as f64;
+            for k in 0..n {
+                assert!(
+                    (got_r[k] as f64 - want_r[k]).abs() < tol
+                        && (got_i[k] as f64 - want_i[k]).abs() < tol,
+                    "n={n} bin {k}: got ({},{}) want ({:.4},{:.4})",
+                    got_r[k],
+                    got_i[k],
+                    want_r[k],
+                    want_i[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tone_peaks_where_expected() {
+        let n = 64;
+        let (_, got_r, got_i) = run_fft(n, MemoryMode::Dp);
+        let mag: Vec<f64> = (0..n)
+            .map(|k| ((got_r[k] as f64).powi(2) + (got_i[k] as f64).powi(2)).sqrt())
+            .collect();
+        // Tones at bins 3 and 7 (and mirrors n-3, n-7).
+        for peak in [3usize, 7, n - 3, n - 7] {
+            assert!(mag[peak] > 10.0, "bin {peak}: {}", mag[peak]);
+        }
+        assert!(mag[10] < 1.0, "leakage at bin 10: {}", mag[10]);
+    }
+
+    #[test]
+    fn cycle_counts_in_paper_band() {
+        // Table 8 eGPU-DP: 876 / 1695 / 3463 / 6813 for n = 32..256.
+        for (n, paper) in [(32usize, 876u64), (64, 1695), (128, 3463), (256, 6813)] {
+            let (stats, _, _) = run_fft(n, MemoryMode::Dp);
+            let r = stats.cycles as f64 / paper as f64;
+            assert!(
+                (0.4..=2.0).contains(&r),
+                "n={n}: {} vs paper {paper} ({r:.2}x)",
+                stats.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn qp_saves_cycles() {
+        // Table 8: FFT-QP ≈ 0.70-0.82x DP cycles.
+        for n in [64usize, 256] {
+            let (dp, ..) = run_fft(n, MemoryMode::Dp);
+            let (qp, got_r, _) = run_fft(n, MemoryMode::Qp);
+            assert!(got_r.iter().all(|x| x.is_finite()));
+            let ratio = qp.cycles as f64 / dp.cycles as f64;
+            assert!((0.55..=0.95).contains(&ratio), "n={n}: QP/DP = {ratio:.2}");
+        }
+    }
+
+    #[test]
+    fn fp_fraction_near_ten_percent() {
+        // §7: "The number of FP instructions ... is relatively small, at
+        // about 10%" (of executed cycles).
+        let (stats, _, _) = run_fft(128, MemoryMode::Dp);
+        let fp = stats.profile.cycle_fraction(crate::isa::Group::FpAlu);
+        assert!((0.03..=0.30).contains(&fp), "FP fraction {fp:.2}");
+    }
+}

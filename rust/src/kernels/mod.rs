@@ -1,0 +1,204 @@
+//! The paper's benchmark kernels as eGPU assembly generators (§7).
+//!
+//! "All benchmarks were written in assembly code (we have not written our
+//! compiler yet)" — these generators emit that assembly, parameterized by
+//! problem size and memory organization, using the paper's techniques:
+//!
+//! - dynamic thread-space narrowing for reduction trees (§3.1),
+//! - NOP scheduling to cover the interlock-free 8-stage pipeline when the
+//!   wavefront depth is too shallow to hide latency (§3, Figure 6),
+//! - predicates only where data-dependent decisions exist (bitonic sort),
+//! - loop constructs in the sequencer everywhere else.
+//!
+//! Each generator also states its runtime thread count and a rust oracle
+//! for correctness; `rust/tests/benchmark_correctness.rs` runs every
+//! kernel against its oracle, and the Table 7/8 benches report cycles.
+
+pub mod bitonic;
+pub mod fft;
+pub mod fft4;
+pub mod mmm;
+pub mod reduction;
+pub mod sched;
+pub mod transpose;
+
+use crate::asm::{assemble, Program};
+use crate::isa::{DepthSel, WAVEFRONT_WIDTH};
+use crate::sim::config::EgpuConfig;
+use crate::sim::{Machine, RunStats, SimError};
+
+/// A generated benchmark kernel.
+#[derive(Debug, Clone)]
+pub struct Kernel {
+    pub name: String,
+    /// eGPU assembly source.
+    pub asm: String,
+    /// Runtime-initialized threads the kernel expects.
+    pub threads: usize,
+    /// TDx grid x-dimension.
+    pub dim_x: usize,
+}
+
+impl Kernel {
+    /// Assemble against a configuration's word layout.
+    pub fn assemble(&self, cfg: &EgpuConfig) -> Result<Program, String> {
+        assemble(&self.asm, cfg.word_layout()).map_err(|e| format!("{}: {e}", self.name))
+    }
+
+    /// Build a machine, load data into shared memory, run to STOP.
+    /// Returns the stats and the machine (for reading results back).
+    pub fn run(
+        &self,
+        cfg: &EgpuConfig,
+        shared_init: &[(usize, Vec<u32>)],
+    ) -> Result<(RunStats, Machine), SimError> {
+        let prog = self.assemble(cfg).map_err(|m| SimError { pc: 0, message: m })?;
+        let mut machine = Machine::new(cfg.clone())?;
+        machine.load_program(prog)?;
+        machine.set_threads(self.threads)?;
+        machine.set_dim_x(self.dim_x)?;
+        for (base, data) in shared_init {
+            machine.shared_mut().write_block(*base, data);
+        }
+        let stats = machine.run(1_000_000_000)?;
+        Ok((stats, machine))
+    }
+}
+
+/// Emission helper shared by the generators.
+pub struct AsmWriter {
+    out: String,
+    /// Current wavefront count of full-depth ops (for NOP scheduling).
+    waves: usize,
+}
+
+/// Hazard window the NOP scheduler covers (sim::hazard::REG_WINDOW).
+const WINDOW: usize = 6;
+
+impl AsmWriter {
+    pub fn new(name: &str, threads: usize) -> AsmWriter {
+        AsmWriter {
+            out: format!("; {name} — generated eGPU assembly ({threads} threads)\n"),
+            waves: threads / WAVEFRONT_WIDTH,
+        }
+    }
+
+    /// Emit one instruction line.
+    pub fn op(&mut self, line: impl AsRef<str>) -> &mut Self {
+        self.out.push_str("    ");
+        self.out.push_str(line.as_ref());
+        self.out.push('\n');
+        self
+    }
+
+    pub fn label(&mut self, name: &str) -> &mut Self {
+        self.out.push_str(name);
+        self.out.push_str(":\n");
+        self
+    }
+
+    pub fn comment(&mut self, text: &str) -> &mut Self {
+        self.out.push_str("    ; ");
+        self.out.push_str(text);
+        self.out.push('\n');
+        self
+    }
+
+    /// NOPs to cover a RAW dependency after an op that issued for
+    /// `writer_waves` wavefronts (§3: no hardware interlocks — "hazards
+    /// are hidden for most programs"; shallow subsets need NOPs).
+    pub fn pad(&mut self, writer_waves: usize) -> &mut Self {
+        for _ in 0..WINDOW.saturating_sub(writer_waves.max(1)) {
+            self.op("nop");
+        }
+        self
+    }
+
+    /// NOPs covering a store→load turnaround on the same addresses
+    /// (sim::hazard::MEM_WINDOW: writes land shortly after their last
+    /// arbitration slot regardless of depth).
+    pub fn pad_mem(&mut self) -> &mut Self {
+        for _ in 0..crate::sim::hazard::MEM_WINDOW {
+            self.op("nop");
+        }
+        self
+    }
+
+    /// NOPs after a full-depth op.
+    pub fn pad_full(&mut self) -> &mut Self {
+        let w = self.waves;
+        self.pad(w)
+    }
+
+    /// NOPs covering an extension-core writeback (DOT/SUM latency).
+    pub fn pad_dot(&mut self, writer_waves: usize) -> &mut Self {
+        let need = (crate::sim::hazard::DOT_WINDOW as usize + writer_waves)
+            .saturating_sub(writer_waves.max(1));
+        for _ in 0..need {
+            self.op("nop");
+        }
+        self
+    }
+
+    pub fn finish(mut self) -> String {
+        self.out.push_str("    stop\n");
+        self.out
+    }
+}
+
+/// Depth selector that narrows a `total_waves` machine to `want_waves`
+/// (prefix subsets only — Table 3). Returns `None` when not expressible.
+pub fn depth_for(total_waves: usize, want_waves: usize) -> Option<DepthSel> {
+    if want_waves == total_waves {
+        Some(DepthSel::All)
+    } else if want_waves * 2 == total_waves {
+        Some(DepthSel::Half)
+    } else if want_waves * 4 == total_waves {
+        Some(DepthSel::Quarter)
+    } else if want_waves == 1 {
+        Some(DepthSel::Wave0)
+    } else {
+        None
+    }
+}
+
+/// f32 slice → register bit patterns.
+pub fn f32_bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// i32 slice → register bit patterns.
+pub fn i32_bits(v: &[i32]) -> Vec<u32> {
+    v.iter().map(|x| *x as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_selection() {
+        assert_eq!(depth_for(32, 32), Some(DepthSel::All));
+        assert_eq!(depth_for(32, 16), Some(DepthSel::Half));
+        assert_eq!(depth_for(32, 8), Some(DepthSel::Quarter));
+        assert_eq!(depth_for(32, 1), Some(DepthSel::Wave0));
+        assert_eq!(depth_for(32, 4), None);
+    }
+
+    #[test]
+    fn writer_emits_and_pads() {
+        let mut w = AsmWriter::new("t", 32); // 2 waves
+        w.op("tdx r0").pad_full().op("lod r1, (r0)+0");
+        let s = w.finish();
+        // 6-2 = 4 nops between the dependent pair.
+        assert_eq!(s.matches("nop").count(), 4);
+        assert!(s.ends_with("stop\n"));
+    }
+
+    #[test]
+    fn deep_machines_need_no_padding() {
+        let mut w = AsmWriter::new("t", 512); // 32 waves
+        w.op("tdx r0").pad_full().op("lod r1, (r0)+0");
+        assert_eq!(w.finish().matches("nop").count(), 0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Vector reduction (Table 7, left block): `shared[n] = Σ shared[0..n]`.
+//!
+//! This is the paper's showcase for dynamic thread-space scaling (§3.1):
+//! every tree level runs on a *prefix subset* of the thread space selected
+//! by the instruction's 4-bit field, so no cycles are spent on idle
+//! threads and no predicates are needed. The final scalar is written by
+//! the single-thread MCU personality.
+//!
+//! The DOT-core variant replaces the whole tree with one SUM instruction
+//! followed by NOPs covering the core's writeback latency (§7: "most of
+//! the time is spent waiting (NOPs) for the dot product to write back").
+
+use super::{depth_for, AsmWriter, Kernel};
+use crate::isa::WAVEFRONT_WIDTH;
+
+/// Tree reduction via dynamic narrowing. `n` must be a power of two
+/// ≥ 32 with n/16 expressible prefixes at every level (32/64/128 are).
+pub fn reduction(n: usize) -> Kernel {
+    assert!(n.is_power_of_two() && n >= 32, "n must be a power of two ≥ 32");
+    let total_waves = n / WAVEFRONT_WIDTH;
+    let mut w = AsmWriter::new(&format!("reduction-{n}"), n);
+
+    w.comment("fold pairs through shared memory until 16 partials remain");
+    let mut s = n / 2;
+    while s >= WAVEFRONT_WIDTH {
+        let waves = s / WAVEFRONT_WIDTH;
+        let d = depth_for(total_waves, waves)
+            .unwrap_or_else(|| panic!("level {s} not expressible from {total_waves} waves"));
+        let sel = format!("[w16,{}]", d.name());
+        w.comment(&format!("level: {s} partial sums"));
+        w.op(format!("{sel} lod r1, (r0)+0"));
+        w.op(format!("{sel} lod r2, (r0)+{s}"));
+        w.pad(waves);
+        w.op(format!("{sel} fadd r1, r1, r2"));
+        w.pad(waves);
+        w.op(format!("{sel} sto r1, (r0)+0"));
+        w.pad_mem();
+        w.pad(waves);
+        s /= 2;
+    }
+
+    w.comment("16 -> 4 on the first four SPs");
+    w.op("[w4,d0] lod r1, (r0)+0");
+    w.op("[w4,d0] lod r2, (r0)+4");
+    w.op("[w4,d0] lod r3, (r0)+8");
+    w.op("[w4,d0] lod r4, (r0)+12");
+    w.pad(1);
+    w.op("[w4,d0] fadd r1, r1, r2");
+    w.op("[w4,d0] fadd r3, r3, r4");
+    w.pad(1);
+    w.op("[w4,d0] fadd r1, r1, r3");
+    w.pad(1);
+    w.op("[w4,d0] sto r1, (r0)+0");
+    w.pad_mem();
+    w.pad(1);
+
+    w.comment("4 -> 1 in the MCU personality, result to shared[n]");
+    w.op("[w1,d0] lod r1, (r0)+0");
+    w.op("[w1,d0] lod r2, (r0)+1");
+    w.op("[w1,d0] lod r3, (r0)+2");
+    w.op("[w1,d0] lod r4, (r0)+3");
+    w.pad(1);
+    w.op("[w1,d0] fadd r1, r1, r2");
+    w.op("[w1,d0] fadd r3, r3, r4");
+    w.pad(1);
+    w.op("[w1,d0] fadd r1, r1, r3");
+    w.pad(1);
+    w.op(format!("[w1,d0] sto r1, (r0)+{n}"));
+
+    let mut asm = String::from("    tdx r0\n");
+    asm.push_str(&"    nop\n".repeat(6usize.saturating_sub(n / 16)));
+    asm.push_str(&w.finish());
+    Kernel {
+        name: format!("reduction-{n}"),
+        asm,
+        threads: n,
+        dim_x: n,
+    }
+}
+
+/// DOT-core variant: one SUM over the whole thread space.
+pub fn reduction_dot(n: usize) -> Kernel {
+    assert!(n.is_power_of_two() && n >= 32);
+    let waves = n / WAVEFRONT_WIDTH;
+    let mut w = AsmWriter::new(&format!("reduction-dot-{n}"), n);
+    w.op("tdx r0");
+    w.pad_full();
+    w.op("lod r1, (r0)+0");
+    w.pad_full();
+    w.comment("SUM streams all wavefronts into the reduction core");
+    w.op("sum r2, r1, r1");
+    w.comment("wait for the extension core writeback (§7)");
+    w.pad_dot(waves);
+    w.op(format!("[w1,d0] sto r2, (r0)+{n}"));
+    Kernel {
+        name: format!("reduction-dot-{n}"),
+        asm: w.finish(),
+        threads: n,
+        dim_x: n,
+    }
+}
+
+/// Ablation variant: the same tree WITHOUT dynamic thread-space scaling,
+/// using predicates the way a conventional SIMT machine would (§3.1:
+/// "Most GPGPUs support thread divergence by predicates but these have a
+/// potential significant performance impact, as all threads are run,
+/// whether or not they are written back"). Every level issues over the
+/// full thread space; only the writebacks are gated. Requires a
+/// predicated configuration. Result lands at `shared[n]`.
+pub fn reduction_predicated(n: usize) -> Kernel {
+    assert!(n.is_power_of_two() && n >= 32);
+    use super::sched::Sched;
+    use crate::isa::WordLayout;
+    use crate::sim::config::MemoryMode;
+    let mut s = Sched::new(
+        &format!("reduction-pred-{n}"),
+        n,
+        WordLayout::for_regs(32),
+        MemoryMode::Dp,
+    );
+    s.op("tdx r0");
+    let mut span = n / 2;
+    while span >= 1 {
+        s.comment(&format!("level: threads < {span} fold, all threads issue"));
+        s.op(format!("ldi r5, #{span}"));
+        s.op("if.lo r0, r5");
+        s.op("lod r1, (r0)+0")
+            .op(format!("lod r2, (r0)+{span}"))
+            .op("fadd r1, r1, r2")
+            .op("sto r1, (r0)+0");
+        s.op("endif");
+        span /= 2;
+    }
+    s.comment("copy the scalar to shared[n] (thread 0 only, still gated)");
+    s.op("ldi r5, #1");
+    s.op("if.lo r0, r5");
+    s.op("lod r1, (r0)+0").op(format!("sto r1, (r0)+{n}"));
+    s.op("endif");
+    Kernel {
+        name: format!("reduction-pred-{n}"),
+        asm: s.finish(),
+        threads: n,
+        dim_x: n,
+    }
+}
+
+/// Oracle: f32 sum in tree order (close enough — tests use a tolerance).
+pub fn oracle(data: &[f32]) -> f32 {
+    data.iter().copied().sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::f32_bits;
+    use crate::sim::config::{EgpuConfig, MemoryMode};
+
+    fn data(n: usize) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.5) - 7.0).collect()
+    }
+
+    #[test]
+    fn tree_reduction_correct_all_sizes() {
+        for n in [32usize, 64, 128] {
+            let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+            let d = data(n);
+            let (stats, m) = reduction(n)
+                .run(&cfg, &[(0, f32_bits(&d))])
+                .unwrap_or_else(|e| panic!("n={n}: {e}"));
+            let got = f32::from_bits(m.shared().read(n as u32).unwrap());
+            let want = oracle(&d);
+            assert!(
+                (got - want).abs() < want.abs() * 1e-5 + 1e-3,
+                "n={n}: got {got}, want {want}"
+            );
+            assert_eq!(stats.hazards, 0, "n={n}: {:?}", stats.hazard_samples);
+        }
+    }
+
+    #[test]
+    fn dot_variant_correct_and_faster() {
+        let cfg = EgpuConfig::benchmark(MemoryMode::Dp, true);
+        for n in [32usize, 64, 128] {
+            let d = data(n);
+            let (dstats, m) = reduction_dot(n).run(&cfg, &[(0, f32_bits(&d))]).unwrap();
+            let got = f32::from_bits(m.shared().read(n as u32).unwrap());
+            let want = oracle(&d);
+            assert!((got - want).abs() < want.abs() * 1e-5 + 1e-3, "n={n}");
+            assert_eq!(dstats.hazards, 0, "n={n}");
+            let (tstats, _) = reduction(n).run(&cfg, &[(0, f32_bits(&d))]).unwrap();
+            assert!(
+                dstats.cycles * 2 < tstats.cycles,
+                "n={n}: dot {} vs tree {}",
+                dstats.cycles,
+                tstats.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn cycle_counts_in_paper_band() {
+        // Table 7 eGPU-DP: 168/202/216 cycles for n = 32/64/128; we
+        // assert the same order and the slow growth with n.
+        let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+        let mut last = 0;
+        for (n, paper) in [(32usize, 168u64), (64, 202), (128, 216)] {
+            let (stats, _) = reduction(n).run(&cfg, &[(0, f32_bits(&data(n)))]).unwrap();
+            assert!(
+                (stats.cycles as f64) < paper as f64 * 2.0
+                    && (stats.cycles as f64) > paper as f64 * 0.4,
+                "n={n}: {} vs paper {paper}",
+                stats.cycles
+            );
+            assert!(stats.cycles > last, "cycles must grow with n");
+            last = stats.cycles;
+        }
+    }
+
+    #[test]
+    fn predicated_variant_correct_but_much_slower() {
+        // §3.1 ablation: dynamic narrowing vs conventional predication.
+        let pcfg = EgpuConfig::benchmark_predicated(MemoryMode::Dp);
+        let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+        for n in [32usize, 128] {
+            let d = data(n);
+            let (ps, m) = reduction_predicated(n).run(&pcfg, &[(0, f32_bits(&d))]).unwrap();
+            let got = f32::from_bits(m.shared().read(n as u32).unwrap());
+            let want = oracle(&d);
+            assert!((got - want).abs() < want.abs() * 1e-5 + 1e-3, "n={n}");
+            assert_eq!(ps.hazards, 0, "n={n}: {:?}", ps.hazard_samples);
+            let (ds, _) = reduction(n).run(&cfg, &[(0, f32_bits(&d))]).unwrap();
+            assert!(
+                ps.cycles as f64 > 2.0 * ds.cycles as f64,
+                "n={n}: predicated {} vs dynamic {}",
+                ps.cycles,
+                ds.cycles
+            );
+        }
+    }
+
+    #[test]
+    fn qp_similar_cycles() {
+        // Table 7: reduction QP ≈ 0.95× DP cycles (few wide stores).
+        let n = 64;
+        let dp = EgpuConfig::benchmark(MemoryMode::Dp, false);
+        let qp = EgpuConfig::benchmark(MemoryMode::Qp, false);
+        let (s_dp, _) = reduction(n).run(&dp, &[(0, f32_bits(&data(n)))]).unwrap();
+        let (s_qp, _) = reduction(n).run(&qp, &[(0, f32_bits(&data(n)))]).unwrap();
+        let ratio = s_qp.cycles as f64 / s_dp.cycles as f64;
+        assert!((0.7..=1.05).contains(&ratio), "QP/DP = {ratio:.2}");
+    }
+}

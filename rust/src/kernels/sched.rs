@@ -1,0 +1,295 @@
+//! Cycle-tracking assembly emitter.
+//!
+//! The eGPU pipeline has no interlocks (§3), so the "compiler" — here, the
+//! kernel generators — must insert the NOPs a hand-assembling programmer
+//! would. [`Sched`] mirrors the machine's issue-cost and hazard-window
+//! model (`sim::machine` / `sim::hazard`) instruction by instruction and
+//! pads automatically, so generated programs are hazard-free by
+//! construction and `estimated_cycles` matches the simulator exactly for
+//! straight-line programs.
+//!
+//! Control flow (JSR/LOOP) breaks the linear cycle model; generators call
+//! [`Sched::fence`] at call sites and loop back-edges, which waits out
+//! every pending window and therefore restores exactness conservatively.
+
+use crate::asm::assemble;
+use crate::isa::opcode::OperandShape;
+use crate::isa::{Group, Instr, Opcode, WordLayout};
+use crate::sim::config::MemoryMode;
+use crate::sim::hazard::{DOT_WINDOW, MEM_WINDOW, REG_WINDOW};
+
+/// Cycle-tracking emitter for one kernel.
+pub struct Sched {
+    out: String,
+    layout: WordLayout,
+    /// Initialized wavefronts of the target machine (threads / 16).
+    total_waves: usize,
+    write_ports: usize,
+    cycle: u64,
+    reg_ready: Vec<u64>,
+    /// Coarse store→load turnaround: one global ready cycle (the machine
+    /// tracks per address; global is conservative, never under-pads).
+    mem_ready: u64,
+    nops: u64,
+}
+
+impl Sched {
+    pub fn new(name: &str, threads: usize, layout: WordLayout, memory: MemoryMode) -> Sched {
+        assert!(threads >= 16 && threads % 16 == 0, "threads must be a multiple of 16");
+        Sched {
+            out: format!("; {name} — generated eGPU assembly ({threads} threads)\n"),
+            layout,
+            total_waves: threads / 16,
+            write_ports: memory.write_ports(),
+            cycle: 0,
+            reg_ready: vec![0; layout.max_reg() as usize + 1],
+            mem_ready: 0,
+            nops: 0,
+        }
+    }
+
+    pub fn comment(&mut self, text: &str) -> &mut Self {
+        self.out.push_str("    ; ");
+        self.out.push_str(text);
+        self.out.push('\n');
+        self
+    }
+
+    /// Emit a label. Cycle tracking continues linearly; callers that jump
+    /// here from elsewhere must [`fence`](Self::fence) at the jump site.
+    pub fn label(&mut self, name: &str) -> &mut Self {
+        self.out.push_str(name);
+        self.out.push_str(":\n");
+        self
+    }
+
+    fn parse(&self, line: &str) -> Instr {
+        let p = assemble(&format!("{line}\n"), self.layout)
+            .unwrap_or_else(|e| panic!("kernel generator emitted bad asm '{line}': {e}"));
+        assert_eq!(p.instrs.len(), 1, "one instruction per op() call: '{line}'");
+        p.instrs[0]
+    }
+
+    fn raw_nop(&mut self) {
+        self.out.push_str("    nop\n");
+        self.cycle += 1;
+        self.nops += 1;
+    }
+
+    /// Emit one instruction, preceded by however many NOPs its operand
+    /// reads require under the machine's hazard model.
+    pub fn op(&mut self, line: impl AsRef<str>) -> &mut Self {
+        let line = line.as_ref();
+        // Branches to labels can't be parsed in isolation (the target is
+        // resolved program-wide); they are 1-cycle control ops with no
+        // register operands, so handle them without parsing.
+        let mnemonic = line.trim_start().split_whitespace().next().unwrap_or("");
+        if matches!(mnemonic, "jmp" | "jsr" | "loop") {
+            self.out.push_str("    ");
+            self.out.push_str(line);
+            self.out.push('\n');
+            self.cycle += 1;
+            return self;
+        }
+        let i = self.parse(line);
+        let waves = i.tc.depth.waves(self.total_waves) as u64;
+        let lanes = i.tc.width.lanes() as u64;
+        let selected = waves * lanes;
+
+        // Operand-read set (mirrors Machine::execute's hazard reads).
+        let mut reads: Vec<u8> = Vec::with_capacity(2);
+        match i.op.operands() {
+            OperandShape::RdRa => reads.push(i.ra),
+            OperandShape::RdRaRb | OperandShape::RaRb => {
+                reads.push(i.ra);
+                reads.push(i.rb);
+            }
+            OperandShape::RdMem => {
+                reads.push(i.ra);
+                if i.op == Opcode::Sto {
+                    reads.push(i.rd);
+                }
+            }
+            _ => {}
+        }
+
+        // Pad until every read is ready.
+        let mut ready = 0u64;
+        for &r in &reads {
+            ready = ready.max(self.reg_ready[r as usize]);
+        }
+        if i.op == Opcode::Lod {
+            ready = ready.max(self.mem_ready);
+        }
+        while self.cycle < ready {
+            self.raw_nop();
+        }
+
+        // Issue cost (mirrors Machine's cycle charges).
+        let cost = match i.op.group() {
+            Group::Nop | Group::Control => 1,
+            Group::Memory => {
+                if i.op == Opcode::Lod {
+                    selected.div_ceil(4).max(1)
+                } else {
+                    selected.div_ceil(self.write_ports as u64).max(1)
+                }
+            }
+            _ => waves,
+        };
+
+        // Writer windows (mirrors sim::hazard usage in the machine).
+        if i.op == Opcode::Sto {
+            self.mem_ready = self.cycle + cost + MEM_WINDOW;
+        } else if i.op.writes_rd() {
+            let window = match i.op {
+                Opcode::Lod => REG_WINDOW + cost.saturating_sub(waves),
+                Opcode::Dot | Opcode::Sum => waves + DOT_WINDOW,
+                _ => REG_WINDOW,
+            };
+            self.reg_ready[i.rd as usize] = self.cycle + window;
+        }
+
+        self.out.push_str("    ");
+        self.out.push_str(line);
+        self.out.push('\n');
+        self.cycle += cost;
+        self
+    }
+
+    /// Emit NOPs until every pending register window and the memory
+    /// turnaround have expired — a full pipeline settle. Call before JSR
+    /// targets' first use of caller-set registers and at LOOP back-edges.
+    pub fn fence(&mut self) -> &mut Self {
+        let mut ready = self.mem_ready;
+        for &r in self.reg_ready.iter() {
+            ready = ready.max(r);
+        }
+        while self.cycle < ready {
+            self.raw_nop();
+        }
+        self
+    }
+
+    /// Cycles issued so far (exact for straight-line code).
+    pub fn estimated_cycles(&self) -> u64 {
+        self.cycle
+    }
+
+    /// NOPs inserted so far.
+    pub fn nops_inserted(&self) -> u64 {
+        self.nops
+    }
+
+    /// Finish with STOP (1 cycle; the machine adds the 8-cycle drain).
+    pub fn finish(mut self) -> String {
+        self.op("stop");
+        self.out
+    }
+
+    /// Finish without appending STOP (the generator already emitted it).
+    pub fn into_source(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::EgpuConfig;
+    use crate::sim::Machine;
+
+    fn layout() -> WordLayout {
+        WordLayout::for_regs(32)
+    }
+
+    /// Run a Sched-emitted program and check (a) zero hazards and (b) the
+    /// estimate matches the machine exactly.
+    fn check(threads: usize, build: impl FnOnce(&mut Sched)) {
+        let mut s = Sched::new("t", threads, layout(), MemoryMode::Dp);
+        build(&mut s);
+        let est = s.estimated_cycles() + 1; // + stop
+        let src = s.finish();
+        let mut cfg = EgpuConfig::default();
+        cfg.dot_core = true;
+        let mut m = Machine::new(cfg).unwrap();
+        m.set_threads(threads).unwrap();
+        let p = assemble(&src, layout()).unwrap();
+        m.load_program(p).unwrap();
+        let stats = m.run(1_000_000).unwrap();
+        assert_eq!(stats.hazards, 0, "{:?}\n{src}", stats.hazard_samples);
+        assert_eq!(stats.cycles, est + 8, "estimate mismatch\n{src}");
+    }
+
+    #[test]
+    fn full_depth_ops_need_no_pads() {
+        check(512, |s| {
+            s.op("tdx r0").op("add.u32 r1, r0, r0").op("lod r2, (r1)+0");
+        });
+    }
+
+    #[test]
+    fn narrow_dependent_ops_are_padded() {
+        let mut s = Sched::new("t", 512, layout(), MemoryMode::Dp);
+        s.op("[w1,d0] ldi r1, #1").op("[w1,d0] add.u32 r2, r1, r1");
+        assert_eq!(s.nops_inserted(), 5); // 6-cycle window, 1-cycle writer
+        check(512, |s| {
+            s.op("[w1,d0] ldi r1, #1").op("[w1,d0] add.u32 r2, r1, r1");
+        });
+    }
+
+    #[test]
+    fn load_use_latency_padded() {
+        // 16-thread machine: lod costs 4, window 6+4-1=9 → 5 pads.
+        check(16, |s| {
+            s.op("tdx r0");
+            s.fence();
+            s.op("lod r1, (r0)+0").op("fadd r2, r1, r1");
+        });
+    }
+
+    #[test]
+    fn store_load_turnaround_padded() {
+        check(16, |s| {
+            s.op("tdx r0");
+            s.fence();
+            s.op("sto r0, (r0)+0").op("lod r1, (r0)+0");
+        });
+    }
+
+    #[test]
+    fn dot_writeback_window() {
+        check(32, |s| {
+            s.op("tdx r0");
+            s.fence();
+            s.op("sum r2, r0, r0").op("[w1,d0] sto r2, (r0)+64");
+        });
+    }
+
+    #[test]
+    fn fence_settles_everything() {
+        let mut s = Sched::new("t", 16, layout(), MemoryMode::Dp);
+        s.op("[w1,d0] ldi r1, #1").op("sto r1, (r1)+0");
+        s.fence();
+        let c = s.estimated_cycles();
+        s.fence();
+        assert_eq!(s.estimated_cycles(), c, "second fence is a no-op");
+    }
+
+    #[test]
+    fn qp_store_cost_halved() {
+        let mut dp = Sched::new("t", 512, layout(), MemoryMode::Dp);
+        let mut qp = Sched::new("t", 512, layout(), MemoryMode::Qp);
+        dp.op("sto r1, (r0)+0");
+        qp.op("sto r1, (r0)+0");
+        assert_eq!(dp.estimated_cycles(), 512);
+        assert_eq!(qp.estimated_cycles(), 256);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad asm")]
+    fn bad_asm_panics() {
+        let mut s = Sched::new("t", 16, layout(), MemoryMode::Dp);
+        s.op("frobnicate r1");
+    }
+}

@@ -1,0 +1,38 @@
+//! eGPU: a statically and dynamically scalable soft GPGPU.
+//!
+//! Reproduction of Langhammer & Constantinides, *"A Statically and
+//! Dynamically Scalable Soft GPGPU"* (2024). The crate contains:
+//!
+//! - [`isa`] — the 61-instruction ISA, instruction-word codec (Figure 3),
+//!   dynamic thread-space control (Table 3)
+//! - [`asm`] — the assembler/disassembler the benchmarks are written in
+//! - [`sim`] — the cycle-accurate SM simulator (16 SPs, predicate stacks,
+//!   DP/QP shared-memory port arbitration, 8-stage pipeline model)
+//! - [`datapath`] — interchangeable wavefront datapath backends: bit-exact
+//!   native rust, or the AOT-compiled XLA artifacts via PJRT
+//! - [`runtime`] — the PJRT client wrapper that loads `artifacts/*.hlo.txt`
+//! - [`baseline`] — Nios II/e-class scalar ISS and the FlexGrip model used
+//!   as comparison points in the paper's §7
+//! - [`model`] — the resource (ALM/register/DSP/M20K) and Fmax models that
+//!   regenerate Tables 1/4/5/6
+//! - [`place`] — the Agilex sector placement model behind Figures 4/5
+//! - [`kernels`] — generators for the paper's benchmark programs
+//!   (reduction, transpose, MMM, bitonic sort, FFT)
+//! - [`coordinator`] — multi-core dispatch and the 32-bit data-bus model
+//! - [`harness`] — bench/table/property-test scaffolding used by the
+//!   `rust/benches/` binaries (criterion is unavailable offline)
+//!
+//! See DESIGN.md for the paper→module map and EXPERIMENTS.md for
+//! paper-vs-measured results.
+
+pub mod asm;
+pub mod baseline;
+pub mod coordinator;
+pub mod datapath;
+pub mod harness;
+pub mod isa;
+pub mod kernels;
+pub mod model;
+pub mod place;
+pub mod runtime;
+pub mod sim;

@@ -1,0 +1,325 @@
+//! `egpu` — CLI for the eGPU soft-GPGPU reproduction.
+//!
+//! Subcommands map onto the paper's evaluation:
+//!
+//! - `egpu tables`            resource/Fmax models (Tables 1, 4, 5, 6)
+//! - `egpu bench [NAME|all]`  §7 benchmark suite (Tables 7, 8)
+//! - `egpu profile`           instruction-mix profiles (Figure 6)
+//! - `egpu place [PRESET]`    Agilex sector placement (Figures 4, 5)
+//! - `egpu run FILE.asm`      assemble + run a user program
+//! - `egpu info`              configuration presets and artifact status
+
+use std::process::ExitCode;
+
+use egpu::asm::assemble;
+use egpu::harness::{suite, Table, Variant};
+use egpu::isa::Group;
+use egpu::model::alu_model::TABLE6;
+use egpu::model::cost::{ppa_metric, TABLE1_PUBLISHED};
+use egpu::model::frequency::FrequencyReport;
+use egpu::model::resources::ResourceReport;
+use egpu::place;
+use egpu::runtime::default_artifacts_dir;
+use egpu::sim::{EgpuConfig, Machine, MemoryMode};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let rest = &args[1.min(args.len())..];
+    let r = match cmd {
+        "tables" => cmd_tables(),
+        "bench" => cmd_bench(rest),
+        "profile" => cmd_profile(),
+        "place" => cmd_place(rest),
+        "run" => cmd_run(rest),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}'\n{HELP}")),
+    };
+    match r {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("egpu: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+const HELP: &str = "\
+egpu — statically and dynamically scalable soft GPGPU (paper reproduction)
+
+USAGE: egpu <COMMAND> [ARGS]
+
+COMMANDS:
+  tables            print the resource/Fmax model tables (Tables 1, 4, 5, 6)
+  bench [NAME|all]  run the benchmark suite and print Tables 7/8
+                    (NAME: reduction, transpose, mmm, bitonic, fft)
+  profile           print the Figure 6 instruction-mix profiles
+  place [PRESET]    place a configuration into an Agilex sector (Figures 4/5)
+  run FILE.asm [--threads N] [--qp] [--xla]
+                    assemble and run a program, dumping stats
+  info              list presets and artifact status
+";
+
+fn cmd_tables() -> Result<(), String> {
+    // Table 1: PPA comparison.
+    let mut t1 = Table::new("Table 1: Resource Comparison (PPA normalized to eGPU = 1)");
+    t1.headers(["Architecture", "Config", "LUTs", "DSP", "FMax", "PPA", "Device"]);
+    for row in TABLE1_PUBLISHED {
+        t1.row([
+            row.arch.to_string(),
+            row.config.to_string(),
+            format!("{}K", row.luts / 1000),
+            row.dsps.to_string(),
+            format!("{:.0}", row.fmax_mhz),
+            format!("{:.0}", ppa_metric(row.luts as f64, row.dsps as f64, row.fmax_mhz)),
+            row.device.to_string(),
+        ]);
+    }
+    let e = ResourceReport::for_config(&EgpuConfig::table4_presets()[0]);
+    t1.row([
+        "eGPU".into(),
+        "1SMx16SP".into(),
+        format!("{}K", e.alms / 1000),
+        e.dsps.to_string(),
+        "771".into(),
+        "1".into(),
+        "Agilex".to_string(),
+    ]);
+    t1.print();
+    println!();
+
+    // Tables 4 and 5: fitting results from the resource/frequency model.
+    for (title, presets) in [
+        ("Table 4: Fitting Results - DP Memory", EgpuConfig::table4_presets()),
+        ("Table 5: Fitting Results - QP Memory", EgpuConfig::table5_presets()),
+    ] {
+        let mut t = Table::new(title);
+        t.headers([
+            "Config", "ALU", "Shift", "Threads", "Regs", "Shared", "Pred", "ALM", "Regs(FF)",
+            "DSP", "M20K", "Freq",
+        ]);
+        for cfg in presets {
+            let r = ResourceReport::for_config(&cfg);
+            let f = FrequencyReport::for_config(&cfg);
+            t.row([
+                cfg.name.clone(),
+                cfg.alu_precision.to_string(),
+                cfg.shift_precision.to_string(),
+                cfg.threads.to_string(),
+                cfg.regs_per_thread.to_string(),
+                format!("{}KB", cfg.shared_kb),
+                cfg.predicate_levels.to_string(),
+                r.alms.to_string(),
+                r.registers.to_string(),
+                r.dsps.to_string(),
+                r.m20ks.to_string(),
+                format!("{:.0}/{:.0}", f.soft_mhz, f.core_mhz),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+
+    // Table 6: integer-ALU breakdown.
+    let mut t6 = Table::new("Table 6: Fitting Results - Integer ALU");
+    t6.headers(["Prec", "Type", "ALM", "Registers"]);
+    for a in TABLE6 {
+        t6.row([
+            a.precision.to_string(),
+            a.class.name().to_string(),
+            a.alms.to_string(),
+            a.regs.to_string(),
+        ]);
+    }
+    t6.print();
+    Ok(())
+}
+
+fn parse_bench(name: &str) -> Result<Vec<suite::Benchmark>, String> {
+    use suite::Benchmark::*;
+    Ok(match name {
+        "all" => suite::Benchmark::ALL.to_vec(),
+        "reduction" => vec![Reduction],
+        "transpose" => vec![Transpose],
+        "mmm" => vec![Mmm],
+        "bitonic" => vec![Bitonic],
+        "fft" => vec![Fft],
+        other => return Err(format!("unknown benchmark '{other}'")),
+    })
+}
+
+fn cmd_bench(args: &[String]) -> Result<(), String> {
+    let which = parse_bench(args.first().map(String::as_str).unwrap_or("all"))?;
+    for b in which {
+        let mut t = Table::new(format!("{} (Tables 7/8) — measured (paper)", b.name()));
+        t.headers(["Dim", "Metric", "Nios", "eGPU-DP", "eGPU-QP", "eGPU-Dot"]);
+        for &dim in b.dims() {
+            let r = suite::run(b, dim);
+            let meas = |v: Variant| -> Option<&suite::Measurement> {
+                match v {
+                    Variant::Nios => Some(&r.nios),
+                    Variant::Dp => Some(&r.dp),
+                    Variant::Qp => Some(&r.qp),
+                    Variant::Dot => r.dot.as_ref(),
+                }
+            };
+            let cycles = |v: Variant| -> String {
+                match meas(v) {
+                    None => "-".into(),
+                    Some(m) => match suite::paper_cycles(b, dim, v) {
+                        Some(p) => format!("{} ({p})", m.cycles),
+                        None => format!("{}", m.cycles),
+                    },
+                }
+            };
+            let time = |v: Variant| {
+                meas(v).map(|m| format!("{:.2}", m.time_us())).unwrap_or_else(|| "-".into())
+            };
+            let norm = |v: Variant| {
+                r.normalized(v).map(|x| format!("{x:.2}")).unwrap_or_else(|| "-".into())
+            };
+            let vs = [Variant::Nios, Variant::Dp, Variant::Qp, Variant::Dot];
+            let mut row = vec![dim.to_string(), "Cycles (paper)".into()];
+            row.extend(vs.iter().map(|&v| cycles(v)));
+            t.row(row);
+            let mut row = vec![dim.to_string(), "Time(us)".into()];
+            row.extend(vs.iter().map(|&v| time(v)));
+            t.row(row);
+            let mut row = vec![dim.to_string(), "Normalized".into()];
+            row.extend(vs.iter().map(|&v| norm(v)));
+            t.row(row);
+        }
+        t.print();
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_profile() -> Result<(), String> {
+    println!("Figure 6: proportion of execution cycles by instruction type (eGPU-DP)\n");
+    for b in suite::Benchmark::ALL {
+        for &dim in b.dims() {
+            let r = suite::run(b, dim);
+            let p = r.dp.profile.as_ref().unwrap();
+            let mut bars = String::new();
+            for g in Group::ALL {
+                let f = p.cycle_fraction(g);
+                if f > 0.005 {
+                    bars.push_str(&format!("{} {:4.1}%  ", g.label(), f * 100.0));
+                }
+            }
+            println!("{:<18} {:>4}: {bars}", b.name(), dim);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_place(args: &[String]) -> Result<(), String> {
+    let presets = EgpuConfig::table4_presets();
+    let name = args.first().map(String::as_str).unwrap_or("Large-DP-2");
+    let cfg = presets
+        .iter()
+        .chain(EgpuConfig::table5_presets().iter())
+        .find(|c| c.name == name)
+        .cloned()
+        .ok_or_else(|| format!("unknown preset '{name}' (try `egpu info`)"))?;
+    let p = place::place(&cfg).map_err(|e| e.to_string())?;
+    println!("{}", place::render::render(&p));
+    println!("{}", place::render::stats(&p));
+    println!("\nSingle-SP detail (Figure 5):\n{}", place::render::render_sp(&p, 0));
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<(), String> {
+    let mut file = None;
+    let mut threads = None;
+    let mut memory = MemoryMode::Dp;
+    let mut use_xla = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--threads" => {
+                i += 1;
+                threads = Some(
+                    args.get(i)
+                        .and_then(|s| s.parse::<usize>().ok())
+                        .ok_or("--threads needs a number")?,
+                );
+            }
+            "--qp" => memory = MemoryMode::Qp,
+            "--xla" => use_xla = true,
+            f if !f.starts_with('-') => file = Some(f.to_string()),
+            other => return Err(format!("unknown flag '{other}'")),
+        }
+        i += 1;
+    }
+    let file = file.ok_or("usage: egpu run FILE.asm [--threads N] [--qp] [--xla]")?;
+    let src = std::fs::read_to_string(&file).map_err(|e| format!("{file}: {e}"))?;
+
+    let mut cfg = EgpuConfig::benchmark(memory, true);
+    cfg.predicate_levels = 8;
+    let prog = assemble(&src, cfg.word_layout()).map_err(|e| format!("{file}: {e}"))?;
+    println!(
+        "assembled {} instructions ({} M20Ks of program store)",
+        prog.len(),
+        prog.instruction_m20ks()
+    );
+
+    let mut m = if use_xla {
+        let be = egpu::datapath::xla::XlaDatapath::new(default_artifacts_dir(), cfg.wavefronts())
+            .map_err(|e| format!("XLA backend: {e} (run `make artifacts`)"))?;
+        Machine::with_backend(cfg.clone(), Some(Box::new(be))).map_err(|e| e.to_string())?
+    } else {
+        Machine::new(cfg.clone()).map_err(|e| e.to_string())?
+    };
+    m.load_program(prog).map_err(|e| e.to_string())?;
+    if let Some(t) = threads {
+        m.set_threads(t).map_err(|e| e.to_string())?;
+    }
+    let stats = m.run(1_000_000_000).map_err(|e| e.to_string())?;
+    println!(
+        "cycles: {}   instructions: {}   time at {:.0} MHz: {:.2} us   hazards: {}",
+        stats.cycles,
+        stats.instructions,
+        cfg.core_mhz(),
+        stats.time_us(cfg.core_mhz()),
+        stats.hazards
+    );
+    println!("\ninstruction mix (cycles):");
+    print!("{}", stats.profile.render());
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    println!("configuration presets:");
+    for c in EgpuConfig::table4_presets().iter().chain(EgpuConfig::table5_presets().iter()) {
+        let r = ResourceReport::for_config(c);
+        println!(
+            "  {:<12} {} threads, {} regs/thread, {}KB shared, {} pred levels -> {} ALMs, {} DSP, {} M20K @ {:.0} MHz",
+            c.name,
+            c.threads,
+            c.regs_per_thread,
+            c.shared_kb,
+            c.predicate_levels,
+            r.alms,
+            r.dsps,
+            r.m20ks,
+            c.core_mhz()
+        );
+    }
+    let dir = default_artifacts_dir();
+    println!("\nartifacts dir: {}", dir.display());
+    println!(
+        "artifacts built: {}",
+        if dir.join("opmap.json").is_file() {
+            "yes"
+        } else {
+            "no (run `make artifacts`)"
+        }
+    );
+    Ok(())
+}

@@ -1,0 +1,189 @@
+//! Integer-ALU resource model (paper Table 6, §5.2).
+//!
+//! The soft-logic integer ALU is the largest SP component: "up to half of
+//! the soft logic and registers in an eGPU is required for the integer
+//! ALU". Table 6 gives measured ALM/FF and per-function breakdowns; this
+//! module reproduces that table and resolves a configuration to its ALU
+//! cost.
+
+use crate::sim::config::{EgpuConfig, IntAluClass, MemoryMode};
+
+/// One Table 6 row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AluCost {
+    pub precision: u8,
+    pub class: IntAluClass,
+    pub alms: u32,
+    pub regs: u32,
+    /// Per-function ALM breakdown (None where the paper reports "-").
+    pub add_sub: Option<u32>,
+    pub logic: Option<u32>,
+    pub shl: Option<u32>,
+    pub shr: Option<u32>,
+    pub pop: Option<u32>,
+    /// Pipeline stages (5 for the 800 MHz ALUs, 4 for the QP variant).
+    pub stages: u8,
+}
+
+/// The five Table 6 rows, in paper order.
+pub const TABLE6: [AluCost; 5] = [
+    AluCost {
+        precision: 16,
+        class: IntAluClass::Min,
+        alms: 90,
+        regs: 136,
+        add_sub: Some(3),
+        logic: Some(9),
+        shl: None,
+        shr: None,
+        pop: None,
+        stages: 5,
+    },
+    AluCost {
+        precision: 16,
+        class: IntAluClass::Small,
+        alms: 134,
+        regs: 207,
+        add_sub: Some(9),
+        logic: Some(10),
+        shl: Some(20),
+        shr: Some(23),
+        pop: None,
+        stages: 5,
+    },
+    AluCost {
+        precision: 16,
+        class: IntAluClass::Full,
+        alms: 199,
+        regs: 269,
+        add_sub: Some(9),
+        logic: Some(18),
+        shl: Some(20),
+        shr: Some(23),
+        pop: Some(11),
+        stages: 5,
+    },
+    AluCost {
+        precision: 32,
+        class: IntAluClass::Min,
+        alms: 208,
+        regs: 406,
+        add_sub: Some(5),
+        logic: Some(27),
+        shl: Some(28),
+        shr: Some(28),
+        pop: None,
+        stages: 5,
+    },
+    AluCost {
+        precision: 32,
+        class: IntAluClass::Full,
+        alms: 394,
+        regs: 704,
+        add_sub: Some(27),
+        logic: Some(36),
+        shl: Some(50),
+        shr: Some(53),
+        pop: Some(27),
+        stages: 5,
+    },
+];
+
+/// The 4-stage 32-bit ALU used by QP configurations (§5.2: "about the
+/// size of the 16-bit full function ALU", ~700 MHz — acceptable because
+/// the QP memory caps the core at 600 MHz anyway).
+pub const QP_32_FULL: AluCost = AluCost {
+    precision: 32,
+    class: IntAluClass::Full,
+    alms: 200,
+    regs: 280,
+    add_sub: Some(14),
+    logic: Some(36),
+    shl: Some(50),
+    shr: Some(53),
+    pop: Some(27),
+    stages: 4,
+};
+
+/// Resolve a configuration's integer-ALU cost.
+///
+/// QP configurations use the 4-stage variant; DP configurations take the
+/// Table 6 row matching (precision, class), falling back to the Full row
+/// of their precision for the Small-32 combination the paper doesn't
+/// tabulate.
+pub fn alu_cost(cfg: &EgpuConfig) -> AluCost {
+    if cfg.memory == MemoryMode::Qp && cfg.alu_precision == 32 {
+        return QP_32_FULL;
+    }
+    let want = |p: u8, c: IntAluClass| {
+        TABLE6
+            .iter()
+            .copied()
+            .find(|r| r.precision == p && r.class == c)
+    };
+    want(cfg.alu_precision, cfg.int_alu)
+        .or_else(|| want(cfg.alu_precision, IntAluClass::Full))
+        .expect("every precision has a Full row")
+}
+
+/// ALU Fmax in MHz (§5.2: 5-stage always exceeds 800 MHz; the 4-stage
+/// variant "returns a lower performance (typically 700 MHz)").
+pub fn alu_fmax(cost: &AluCost) -> f64 {
+    if cost.stages >= 5 {
+        810.0
+    } else {
+        700.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table6_rows_match_paper() {
+        assert_eq!(TABLE6[0].alms, 90);
+        assert_eq!(TABLE6[0].regs, 136);
+        assert_eq!(TABLE6[2].alms, 199);
+        assert_eq!(TABLE6[4].alms, 394);
+        assert_eq!(TABLE6[4].regs, 704);
+    }
+
+    #[test]
+    fn doubling_structure() {
+        // §5.2: full 16-bit ≈ 2× min 16-bit; full 32-bit ≈ 2× full 16-bit
+        // in ALMs, ~3× min-16 registers for the 32-bit pipelines.
+        let min16 = TABLE6[0].alms as f64;
+        let full16 = TABLE6[2].alms as f64;
+        let full32 = TABLE6[4].alms as f64;
+        assert!((full16 / min16 - 2.2).abs() < 0.3);
+        assert!((full32 / full16 - 2.0).abs() < 0.25);
+        assert!((TABLE6[4].regs as f64 / TABLE6[2].regs as f64 - 2.6).abs() < 0.3);
+    }
+
+    #[test]
+    fn config_resolution() {
+        let mut cfg = EgpuConfig::default(); // 32-bit Full, DP
+        assert_eq!(alu_cost(&cfg).alms, 394);
+        cfg.alu_precision = 16;
+        cfg.int_alu = IntAluClass::Min;
+        assert_eq!(alu_cost(&cfg).alms, 90);
+        cfg.memory = MemoryMode::Qp;
+        cfg.alu_precision = 32;
+        assert_eq!(alu_cost(&cfg).alms, 200);
+        assert_eq!(alu_cost(&cfg).stages, 4);
+    }
+
+    #[test]
+    fn fmax_by_stages() {
+        assert!(alu_fmax(&TABLE6[4]) > 800.0);
+        assert!((alu_fmax(&QP_32_FULL) - 700.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn untabulated_small32_falls_back_to_full() {
+        let mut cfg = EgpuConfig::default();
+        cfg.int_alu = IntAluClass::Small;
+        assert_eq!(alu_cost(&cfg).alms, 394);
+    }
+}

@@ -1,0 +1,147 @@
+//! Normalized cost and the Table 1 PPA comparison (paper §2, §7).
+//!
+//! §7: "we normalize the performance (time) by the resource cost, which we
+//! calculated on the basis of ALMs and DSP Blocks. We estimate that the
+//! effective cost of a DSP block is 100 ALMs" (≈650-ALM soft FP32
+//! multiply-add, +50% DSP overhead, ÷10 hard/soft scaling).
+
+use crate::sim::config::EgpuConfig;
+
+use super::resources::ResourceReport;
+
+/// Effective ALM cost of one DSP block (§7 derivation).
+pub const DSP_ALM_EQUIVALENT: f64 = 100.0;
+
+/// Normalized resource cost in ALM-equivalents.
+pub fn normalized_cost(alms: u32, dsps: u32) -> f64 {
+    alms as f64 + dsps as f64 * DSP_ALM_EQUIVALENT
+}
+
+/// The paper's *reported* normalized costs for the §7 benchmark variants
+/// ("equivalent cost of 7400, 8400, and 9000 ALMs for the eGPU-DP,
+/// eGPU-QP, and eGPU-Dot variants") and Nios (1400, 347 MHz). The
+/// Table 7/8 "Normalized" rows are computed with these, exactly as the
+/// paper does; `config_cost` is the model-derived alternative.
+pub const BENCH_COST_DP: f64 = 7400.0;
+pub const BENCH_COST_QP: f64 = 8400.0;
+pub const BENCH_COST_DOT: f64 = 9000.0;
+pub const BENCH_COST_NIOS: f64 = 1400.0;
+
+/// Normalized cost of a configuration.
+pub fn config_cost(cfg: &EgpuConfig) -> f64 {
+    let r = ResourceReport::for_config(cfg);
+    normalized_cost(r.alms, r.dsps)
+}
+
+/// The Table 1 power-performance-area metric, normalized so the eGPU row
+/// is 1: cost / Fmax relative to the eGPU's cost / Fmax. Lower is better.
+pub fn ppa_metric(luts: f64, dsps: f64, fmax_mhz: f64) -> f64 {
+    let egpu = EGPU_TABLE1;
+    let rel_cost = normalized_cost(luts as u32, dsps as u32)
+        / normalized_cost(egpu.luts as u32, egpu.dsps as u32);
+    let rel_speed = egpu.fmax_mhz / fmax_mhz;
+    rel_cost * rel_speed
+}
+
+/// One Table 1 comparison row.
+#[derive(Debug, Clone, Copy)]
+pub struct Table1Row {
+    pub arch: &'static str,
+    pub config: &'static str,
+    pub luts: u32,
+    pub dsps: u32,
+    pub fmax_mhz: f64,
+    pub device: &'static str,
+}
+
+/// Published datapoints the paper compares against (Table 1).
+pub const TABLE1_PUBLISHED: [Table1Row; 3] = [
+    Table1Row {
+        arch: "FGPU",
+        config: "2CUx8PE",
+        luts: 57_000,
+        dsps: 48,
+        fmax_mhz: 250.0,
+        device: "Zynq-7000",
+    },
+    Table1Row {
+        arch: "DO-GPU",
+        config: "4CUx8PE",
+        luts: 360_000,
+        dsps: 1344,
+        fmax_mhz: 208.0,
+        device: "Stratix 10",
+    },
+    Table1Row {
+        arch: "FlexGrip",
+        config: "1SMx16PE",
+        luts: 114_000,
+        dsps: 300,
+        fmax_mhz: 100.0,
+        device: "Virtex-6",
+    },
+];
+
+/// The paper's eGPU Table 1 row (small DP instance).
+pub const EGPU_TABLE1: Table1Row = Table1Row {
+    arch: "eGPU",
+    config: "1SMx16SP",
+    luts: 5_000,
+    dsps: 24,
+    fmax_mhz: 771.0,
+    device: "Agilex",
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::MemoryMode;
+
+    #[test]
+    fn dsp_equivalent_is_100_alms() {
+        assert_eq!(normalized_cost(1000, 3), 1300.0);
+    }
+
+    #[test]
+    fn nios_cost_matches_paper() {
+        // §7: Nios "consumed 1100 ALMs (plus 3 DSP Blocks, giving a
+        // normalized cost of 1400)".
+        assert_eq!(normalized_cost(1100, 3), 1400.0);
+    }
+
+    #[test]
+    fn benchmark_configs_cost_5_to_6x_nios() {
+        // §7: "eGPU is 5× to 6× larger than Nios" — with the reported
+        // costs exactly; the model-derived cost stays the same order.
+        assert!((BENCH_COST_DP / BENCH_COST_NIOS - 5.3).abs() < 0.1);
+        assert!((BENCH_COST_DOT / BENCH_COST_NIOS - 6.4).abs() < 0.1);
+        let nios = BENCH_COST_NIOS;
+        let dp = config_cost(&EgpuConfig::benchmark(MemoryMode::Dp, false));
+        let dot = config_cost(&EgpuConfig::benchmark(MemoryMode::Dp, true));
+        assert!(
+            (4.0..=9.0).contains(&(dp / nios)),
+            "model DP/Nios = {:.1}",
+            dp / nios
+        );
+        assert!(dot > dp, "dot core must add cost");
+    }
+
+    #[test]
+    fn ppa_orders_of_magnitude() {
+        // Table 1: eGPU PPA = 1; others 36–175 (one to two OOM worse).
+        let egpu = ppa_metric(
+            EGPU_TABLE1.luts as f64,
+            EGPU_TABLE1.dsps as f64,
+            EGPU_TABLE1.fmax_mhz,
+        );
+        assert!((egpu - 1.0).abs() < 1e-9);
+        for row in TABLE1_PUBLISHED {
+            let p = ppa_metric(row.luts as f64, row.dsps as f64, row.fmax_mhz);
+            assert!(
+                (20.0..=250.0).contains(&p),
+                "{}: PPA {p:.0} not 1-2 OOM worse",
+                row.arch
+            );
+        }
+    }
+}

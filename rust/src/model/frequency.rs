@@ -1,0 +1,147 @@
+//! Fmax model (paper §6 "Repeatable High Performance").
+//!
+//! The paper's claim: the eGPU *always* closes timing at the speed of the
+//! slowest embedded component — 771 MHz (the 4-stage FP32 DSP datapath)
+//! for DP memory, 600 MHz (the emulated quad-port M20K) for QP — because
+//! the soft-logic paths are architected to exceed those limits. Tables 4/5
+//! report both the soft-path Fmax and the embedded limit ("Freq" column,
+//! e.g. "1018/771").
+//!
+//! The embedded limits are physical constants; the soft-path Fmax is
+//! modeled as a wireload function of design size and predicate fan-out,
+//! calibrated against the ten reported rows (±6%).
+
+use crate::sim::config::{EgpuConfig, MemoryMode};
+
+use super::resources::ResourceReport;
+
+/// Agilex clock-network limit (§6).
+pub const CLOCK_NETWORK_MHZ: f64 = 1000.0;
+/// FP32 multiply-add DSP with a 4-stage pipeline (§6, [11]).
+pub const DSP_FP32_MHZ: f64 = 771.0;
+/// M20K in simple dual-port mode.
+pub const M20K_DP_MHZ: f64 = 1000.0;
+/// M20K in emulated quad-port mode.
+pub const M20K_QP_MHZ: f64 = 600.0;
+
+// Calibrated soft-path wireload model: a − b·(ALM/1000) − c·levels − d·QP.
+const SOFT_A: f64 = 1093.3;
+const SOFT_B: f64 = 25.1;
+const SOFT_C: f64 = -2.5; // levels mildly *help* after size is accounted
+const SOFT_D: f64 = 125.7;
+
+/// The Table 4/5 "Freq" column: soft-path Fmax / embedded limit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FrequencyReport {
+    /// Slowest path outside the embedded blocks (modeled wireload).
+    pub soft_mhz: f64,
+    /// The embedded limit that actually clocks the core.
+    pub embedded_mhz: f64,
+    /// Achieved core clock = min(everything).
+    pub core_mhz: f64,
+    /// True when the soft logic is not the limiter (the paper's repeatable
+    /// timing-closure claim).
+    pub closes_at_embedded_limit: bool,
+}
+
+impl FrequencyReport {
+    pub fn for_config(cfg: &EgpuConfig) -> FrequencyReport {
+        let r = ResourceReport::for_config(cfg);
+        Self::for_resources(cfg, &r)
+    }
+
+    pub fn for_resources(cfg: &EgpuConfig, r: &ResourceReport) -> FrequencyReport {
+        let embedded = match cfg.memory {
+            MemoryMode::Dp => DSP_FP32_MHZ.min(M20K_DP_MHZ),
+            MemoryMode::Qp => DSP_FP32_MHZ.min(M20K_QP_MHZ),
+        };
+        let qp = matches!(cfg.memory, MemoryMode::Qp) as u8 as f64;
+        let mut soft = SOFT_A
+            - SOFT_B * (r.alms as f64 / 1000.0)
+            - SOFT_C * cfg.predicate_levels as f64
+            - SOFT_D * qp;
+        // The wireload fit already reflects the ALU pipeline's
+        // contribution (§5.2); only the physical clock network clamps.
+        soft = soft.min(CLOCK_NETWORK_MHZ);
+        let core = soft.min(embedded);
+        FrequencyReport {
+            soft_mhz: soft,
+            embedded_mhz: embedded,
+            core_mhz: core,
+            closes_at_embedded_limit: soft >= embedded,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::EgpuConfig;
+
+    /// Paper Table 4/5 "Freq" column (soft, embedded).
+    const TABLE4_FREQ: [(f64, f64); 6] = [
+        (1018.0, 771.0),
+        (898.0, 771.0),
+        (883.0, 771.0),
+        (902.0, 771.0),
+        (860.0, 771.0),
+        (841.0, 771.0),
+    ];
+    const TABLE5_FREQ: [(f64, f64); 4] =
+        [(840.0, 600.0), (763.0, 600.0), (763.0, 600.0), (714.0, 600.0)];
+
+    #[test]
+    fn every_instance_closes_at_the_embedded_limit() {
+        // The headline §6 claim, for all ten paper rows.
+        for cfg in EgpuConfig::table4_presets()
+            .iter()
+            .chain(EgpuConfig::table5_presets().iter())
+        {
+            let f = FrequencyReport::for_config(cfg);
+            assert!(
+                f.closes_at_embedded_limit,
+                "{}: soft {:.0} < embedded {:.0}",
+                cfg.name, f.soft_mhz, f.embedded_mhz
+            );
+            let want = match cfg.memory {
+                MemoryMode::Dp => 771.0,
+                MemoryMode::Qp => 600.0,
+            };
+            assert_eq!(f.core_mhz, want, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn soft_path_within_8pct_of_paper() {
+        for (cfg, (soft, emb)) in EgpuConfig::table4_presets()
+            .iter()
+            .zip(TABLE4_FREQ)
+            .chain(EgpuConfig::table5_presets().iter().zip(TABLE5_FREQ))
+        {
+            let f = FrequencyReport::for_config(cfg);
+            let err = (f.soft_mhz - soft).abs() / soft * 100.0;
+            assert!(
+                err < 8.0,
+                "{}: soft model {:.0} vs paper {soft} ({err:.1}%)",
+                cfg.name,
+                f.soft_mhz
+            );
+            assert_eq!(f.embedded_mhz, emb, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn qp_caps_at_600() {
+        let f = FrequencyReport::for_config(&EgpuConfig::table5_presets()[0]);
+        assert_eq!(f.embedded_mhz, 600.0);
+        assert!(f.soft_mhz < 900.0); // QP wire penalty visible
+    }
+
+    #[test]
+    fn nothing_exceeds_the_clock_network() {
+        for cfg in EgpuConfig::table4_presets() {
+            let f = FrequencyReport::for_config(&cfg);
+            assert!(f.soft_mhz <= CLOCK_NETWORK_MHZ);
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! M20K and DSP block counts (paper §5.1, §5.5).
+//!
+//! These are the paper's own closed-form rules:
+//!
+//! - DP thread registers: `threads × regs / 256` M20Ks (two replicated
+//!   dual-port blocks per SP give the 2R + 1W ports).
+//! - DP shared memory: `2 × size_KB` M20Ks (4 read-port replicas of
+//!   512×32 blocks, 1 write port).
+//! - QP halves both, *except* small register spaces
+//!   (`threads × regs / 16 ≤ 2047`) where the 2048×8 QP geometry forces
+//!   the DP count.
+//! - Instruction store: bit-packed M20Ks (see `Program::instruction_m20ks`
+//!   for the program-sized variant; configurations budget a 1k-word
+//!   multi-tenant store, §5.4).
+//! - DSP blocks: 16 FP32 DSPs (one per SP) + 8 integer-multiply DSPs
+//!   (shared one per two SPs), replicated to 16 when the register column
+//!   footprint exceeds one M20K column (§5.6) — DP with 64 regs/thread,
+//!   QP at ≥1024 threads. The optional dot-product core adds a 16-input
+//!   FP32 reduction tree (8 + 4 + 2 + 1 two-input adders ≈ 15 DSPs,
+//!   packed as 8 dual-use blocks).
+
+use crate::sim::config::{EgpuConfig, MemoryMode};
+
+/// M20Ks for the thread register files.
+pub fn regfile_m20ks(cfg: &EgpuConfig) -> usize {
+    let dp = cfg.threads * cfg.regs_per_thread / 256;
+    match cfg.memory {
+        MemoryMode::Dp => dp,
+        MemoryMode::Qp => {
+            if cfg.threads * cfg.regs_per_thread / 16 > 2047 {
+                dp / 2
+            } else {
+                dp // minimum-size rule: same as DP
+            }
+        }
+    }
+}
+
+/// M20Ks for the shared memory.
+pub fn shared_m20ks(cfg: &EgpuConfig) -> usize {
+    let dp = 2 * cfg.shared_kb;
+    match cfg.memory {
+        MemoryMode::Dp => dp,
+        MemoryMode::Qp => dp / 2,
+    }
+}
+
+/// M20Ks budgeted for the (multi-tenant, §5.4) instruction store: a
+/// 1k-word program space at this configuration's IW width.
+pub fn instruction_m20ks(cfg: &EgpuConfig) -> usize {
+    let bits = cfg.word_layout().word_bits() as usize;
+    // ⌈1024 · bits / 20480⌉, i.e. 2 for 40-bit, 3 for 43/46-bit words.
+    (1024 * bits).div_ceil(20480)
+}
+
+/// Total M20K count (Table 4/5 "M20K" column).
+pub fn total_m20ks(cfg: &EgpuConfig) -> usize {
+    regfile_m20ks(cfg) + shared_m20ks(cfg) + instruction_m20ks(cfg)
+}
+
+/// DSP blocks (Table 4/5 "DSP" column).
+pub fn dsp_blocks(cfg: &EgpuConfig) -> usize {
+    let fp = 16; // one FP32 multiply-add DSP per SP
+    let int_mul = if wide_register_columns(cfg) { 16 } else { 8 };
+    let dot = if cfg.dot_core { 8 } else { 0 };
+    fp + int_mul + dot
+}
+
+/// Does the register space spill past one M20K column per SP (§5.6)?
+fn wide_register_columns(cfg: &EgpuConfig) -> bool {
+    match cfg.memory {
+        MemoryMode::Dp => cfg.regs_per_thread == 64,
+        MemoryMode::Qp => cfg.threads >= 1024,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::EgpuConfig;
+
+    #[test]
+    fn paper_worked_examples() {
+        // §5.1: 512 threads × 16 regs → "32 M20Ks for thread registers".
+        let mut cfg = EgpuConfig::default();
+        cfg.regs_per_thread = 16;
+        assert_eq!(regfile_m20ks(&cfg), 32);
+        // "a 64KB shared memory needs 128 M20Ks, and a 128KB ... 256".
+        cfg.shared_kb = 64;
+        assert_eq!(shared_m20ks(&cfg), 128);
+        cfg.shared_kb = 128;
+        assert_eq!(shared_m20ks(&cfg), 256);
+        // "2KB ... would require four M20Ks", "8KB ... 16 M20Ks".
+        cfg.shared_kb = 2;
+        assert_eq!(shared_m20ks(&cfg), 4);
+        cfg.shared_kb = 8;
+        assert_eq!(shared_m20ks(&cfg), 16);
+    }
+
+    #[test]
+    fn table4_m20k_column_exact() {
+        let expect = [50usize, 98, 131, 131, 195, 259];
+        for (cfg, want) in EgpuConfig::table4_presets().iter().zip(expect) {
+            assert_eq!(total_m20ks(cfg), want, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn table5_m20k_column_within_one() {
+        let expect = [98usize, 131, 131, 195];
+        for (cfg, want) in EgpuConfig::table5_presets().iter().zip(expect) {
+            let got = total_m20ks(cfg);
+            assert!(
+                (got as i64 - want as i64).abs() <= 1,
+                "{}: got {got}, want {want}",
+                cfg.name
+            );
+        }
+    }
+
+    #[test]
+    fn table45_dsp_column_exact() {
+        let expect4 = [24usize, 24, 24, 24, 32, 32];
+        for (cfg, want) in EgpuConfig::table4_presets().iter().zip(expect4) {
+            assert_eq!(dsp_blocks(cfg), want, "{}", cfg.name);
+        }
+        let expect5 = [24usize, 32, 32, 32];
+        for (cfg, want) in EgpuConfig::table5_presets().iter().zip(expect5) {
+            assert_eq!(dsp_blocks(cfg), want, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn qp_halves_memory_except_minimum() {
+        // Table 5 small: 512 × 64 regs = 2048 × 16 > 2047 → halved.
+        let c = &EgpuConfig::table5_presets()[0];
+        assert_eq!(regfile_m20ks(c), 64); // DP would be 128
+        // A QP config below the minimum keeps the DP count.
+        let mut small = EgpuConfig::default();
+        small.memory = MemoryMode::Qp;
+        small.regs_per_thread = 16; // 512×16/16 = 512 ≤ 2047
+        assert_eq!(regfile_m20ks(&small), 512 * 16 / 256);
+    }
+
+    #[test]
+    fn dot_core_adds_dsps() {
+        let base = EgpuConfig::benchmark(MemoryMode::Dp, false);
+        let dot = EgpuConfig::benchmark(MemoryMode::Dp, true);
+        assert_eq!(dsp_blocks(&dot) - dsp_blocks(&base), 8);
+    }
+
+    #[test]
+    fn instruction_store_by_word_width() {
+        let mut cfg = EgpuConfig::default();
+        cfg.regs_per_thread = 16; // 40-bit IW
+        assert_eq!(instruction_m20ks(&cfg), 2);
+        cfg.regs_per_thread = 32; // 43-bit
+        assert_eq!(instruction_m20ks(&cfg), 3);
+        cfg.regs_per_thread = 64; // 46-bit
+        assert_eq!(instruction_m20ks(&cfg), 3);
+    }
+}

@@ -1,0 +1,20 @@
+//! Resource, frequency and cost models (paper §5, §6; Tables 1, 4, 5, 6).
+//!
+//! The paper's evaluation platform is Quartus place-and-route on an Agilex
+//! AGIB027R29A1E1V; this module is the substitution (DESIGN.md §3): an
+//! analytical model built from the paper's own composition rules —
+//! M20K counts from §5.1/§5.5 formulas, integer-ALU costs from Table 6,
+//! per-component ALM/FF budgets from §5.5 — with interaction constants
+//! calibrated by least squares against the ten Table 4/5 rows (see
+//! `resources.rs` for the calibration). `rust/tests/paper_tables.rs`
+//! asserts every row is regenerated within tolerance.
+
+pub mod alu_model;
+pub mod cost;
+pub mod frequency;
+pub mod memory_model;
+pub mod resources;
+
+pub use cost::{normalized_cost, ppa_metric};
+pub use frequency::FrequencyReport;
+pub use resources::ResourceReport;

@@ -1,0 +1,16 @@
+//! Agilex sector placement model (paper §5.6, §6, Figures 4 and 5).
+//!
+//! Quartus placement is substituted (DESIGN.md §3) by a greedy
+//! column-affine placer over the paper's sector geometry. It reproduces
+//! the *structural* findings of Figures 4/5: the shared-memory spine in
+//! the middle M20K columns, 8 SPs on either side each straddling a DSP
+//! column with its register M20Ks in adjacent memory columns, and the
+//! predicate blocks placed as separate contiguous blobs away from their
+//! SPs (possible because their interface is a few bits wide).
+
+pub mod placer;
+pub mod render;
+pub mod sector;
+
+pub use placer::{place, Placement};
+pub use sector::{ColumnKind, Sector};

@@ -1,0 +1,371 @@
+//! Greedy column-affine placement (the Figure 4/5 substitution).
+
+use crate::model::memory_model::{regfile_m20ks, shared_m20ks};
+use crate::model::resources::ResourceReport;
+use crate::sim::config::EgpuConfig;
+
+use super::sector::{ColumnKind, Sector, ALMS_PER_LAB, SECTOR_ROWS};
+
+/// What occupies one grid cell (a LAB, an M20K, or a DSP site).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cell {
+    Empty,
+    /// Shared-memory spine M20K.
+    Shared,
+    /// SP `i` datapath logic (LAB).
+    SpLogic(u8),
+    /// SP `i` register-file M20K.
+    SpReg(u8),
+    /// SP `i` DSP block (FP32 or integer multiplier).
+    SpDsp(u8),
+    /// SP `i` predicate block (LAB).
+    Pred(u8),
+    /// Instruction fetch/decode/control (LAB).
+    Control,
+}
+
+/// A completed placement plus the structural statistics the paper reads
+/// off Figures 4/5.
+#[derive(Debug, Clone)]
+pub struct Placement {
+    pub sector: Sector,
+    /// `grid[col][row]`.
+    pub grid: Vec<Vec<Cell>>,
+    /// Column index of each SP's DSP slice.
+    pub sp_dsp_col: Vec<usize>,
+    /// Column span (min..=max) of each SP's logic.
+    pub sp_logic_span: Vec<(usize, usize)>,
+    /// Column distance from each SP's logic to its predicate block.
+    pub pred_distance: Vec<usize>,
+    /// Shared-memory spine column indices.
+    pub spine_cols: Vec<usize>,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlaceError(pub String);
+
+impl std::fmt::Display for PlaceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "placement: {}", self.0)
+    }
+}
+
+impl std::error::Error for PlaceError {}
+
+struct Grid {
+    cells: Vec<Vec<Cell>>,
+}
+
+impl Grid {
+    /// Fill `n` cells in a column starting at the first empty row;
+    /// returns how many were actually placed.
+    fn fill(&mut self, col: usize, n: usize, what: Cell) -> usize {
+        let mut placed = 0;
+        for cell in self.cells[col].iter_mut() {
+            if placed == n {
+                break;
+            }
+            if *cell == Cell::Empty {
+                *cell = what;
+                placed += 1;
+            }
+        }
+        placed
+    }
+}
+
+/// Place one eGPU instance into a sector.
+pub fn place(cfg: &EgpuConfig) -> Result<Placement, PlaceError> {
+    let report = ResourceReport::for_config(cfg);
+    // Size the fabric: one sector when everything fits, more otherwise.
+    let m20k_need = shared_m20ks(cfg) + regfile_m20ks(cfg) + 4;
+    let one = Sector::agilex();
+    let sectors = m20k_need
+        .div_ceil(one.total_m20ks())
+        .max((report.alms as usize).div_ceil(one.total_alms()))
+        .max(1);
+    let sector = Sector::multi(sectors);
+    let mut grid = Grid {
+        cells: sector
+            .columns
+            .iter()
+            .map(|k| {
+                vec![
+                    Cell::Empty;
+                    match k {
+                        ColumnKind::Lab => SECTOR_ROWS,
+                        _ => k.capacity(),
+                    }
+                ]
+            })
+            .collect(),
+    };
+    let center = sector.width() / 2;
+    let mut m20k_cols = sector.columns_of(ColumnKind::M20k);
+    // Memory columns sorted centre-outward: the spine takes the middle.
+    m20k_cols.sort_by_key(|c| (*c as i64 - center as i64).abs());
+
+    // 1. Shared-memory spine.
+    let mut spine_need = shared_m20ks(cfg);
+    let mut spine_cols = Vec::new();
+    for &col in &m20k_cols {
+        if spine_need == 0 {
+            break;
+        }
+        let placed = grid.fill(col, spine_need, Cell::Shared);
+        if placed > 0 {
+            spine_cols.push(col);
+        }
+        spine_need -= placed;
+    }
+    if spine_need > 0 {
+        return Err(PlaceError(format!(
+            "shared memory does not fit: {spine_need} M20Ks left over"
+        )));
+    }
+
+    // 2. SPs: 8 on each side of the spine, 4 SPs per DSP column.
+    let dsp_cols = sector.columns_of(ColumnKind::Dsp);
+    if dsp_cols.len() < 4 {
+        return Err(PlaceError("sector has too few DSP columns".into()));
+    }
+    // The SP share splits into the contiguous datapath block and the
+    // remotely-placed predicate block (step 3) — don't place it twice.
+    let pred_alms_sp = crate::model::resources::pred_alms_per_sp(cfg) as usize;
+    let sp_alm_labs = (report.sp_alms as usize)
+        .saturating_sub(pred_alms_sp)
+        .div_ceil(ALMS_PER_LAB);
+    let sp_dsps = (report.dsps as usize).div_ceil(16);
+    let sp_regs = regfile_m20ks(cfg).div_ceil(16);
+    let mut sp_dsp_col = vec![0usize; 16];
+    let mut sp_logic_span = vec![(usize::MAX, 0usize); 16];
+    for sp in 0..16u8 {
+        // SPs 0..7 west of the spine, 8..15 east; two DSP columns per side.
+        let side_cols: Vec<usize> = if sp < 8 {
+            dsp_cols.iter().copied().filter(|c| *c < center).collect()
+        } else {
+            dsp_cols.iter().copied().filter(|c| *c >= center).collect()
+        };
+        let dcol = side_cols[(sp as usize / 4) % side_cols.len().max(1)];
+        sp_dsp_col[sp as usize] = dcol;
+        if grid.fill(dcol, sp_dsps, Cell::SpDsp(sp)) < sp_dsps {
+            return Err(PlaceError(format!("SP{sp}: DSP column {dcol} full")));
+        }
+        // Logic deliberately straddles the DSP column (Figure 5: the
+        // operators sit in the LAB group on one side of the DSP pair,
+        // pipelining on the other): half the LABs west, half east.
+        let mut sides = [sp_alm_labs.div_ceil(2), sp_alm_labs / 2];
+        for dist in 1..sector.width() {
+            if sides == [0, 0] {
+                break;
+            }
+            for (si, col) in [(0usize, dcol.wrapping_sub(dist)), (1, dcol + dist)] {
+                if sides[si] == 0 || col >= sector.width() {
+                    continue;
+                }
+                if sector.columns[col] != ColumnKind::Lab {
+                    continue;
+                }
+                let placed = grid.fill(col, sides[si], Cell::SpLogic(sp));
+                if placed > 0 {
+                    let (lo, hi) = sp_logic_span[sp as usize];
+                    sp_logic_span[sp as usize] = (lo.min(col), hi.max(col));
+                }
+                sides[si] -= placed;
+            }
+            // Column exhaustion on one side: shift the remainder over.
+            if dist > 8 {
+                let total = sides[0] + sides[1];
+                sides = [total.div_ceil(2), total / 2];
+            }
+        }
+        if sides != [0, 0] {
+            return Err(PlaceError(format!("SP{sp}: logic does not fit")));
+        }
+        // Register-file M20Ks in the nearest memory column(s).
+        let mut rneed = sp_regs;
+        let mut near_mem = sector.columns_of(ColumnKind::M20k);
+        near_mem.sort_by_key(|c| (*c as i64 - dcol as i64).abs());
+        for col in near_mem {
+            if rneed == 0 {
+                break;
+            }
+            rneed -= grid.fill(col, rneed, Cell::SpReg(sp));
+        }
+        if rneed > 0 {
+            return Err(PlaceError(format!("SP{sp}: register M20Ks do not fit")));
+        }
+    }
+
+    // 3. Predicate blocks: placed in the *farthest* LAB column with space
+    // (Quartus floats them away — narrow interface, §6).
+    let mut pred_distance = vec![0usize; 16];
+    if cfg.predicate_levels > 0 {
+        let pred_labs = pred_alms_sp.div_ceil(ALMS_PER_LAB).max(1);
+        for sp in 0..16u8 {
+            let dcol = sp_dsp_col[sp as usize];
+            let mut labs: Vec<usize> = sector.columns_of(ColumnKind::Lab);
+            labs.sort_by_key(|c| std::cmp::Reverse((*c as i64 - dcol as i64).abs()));
+            let mut need = pred_labs;
+            for col in labs {
+                if need == 0 {
+                    break;
+                }
+                let placed = grid.fill(col, need, Cell::Pred(sp));
+                if placed > 0 {
+                    pred_distance[sp as usize] =
+                        pred_distance[sp as usize].max((col as i64 - dcol as i64).unsigned_abs() as usize);
+                }
+                need -= placed;
+            }
+            if need > 0 {
+                return Err(PlaceError(format!("SP{sp}: predicate block does not fit")));
+            }
+        }
+    }
+
+    // 4. Control wherever there is room near the centre.
+    let ctrl_labs = 250usize.div_ceil(ALMS_PER_LAB);
+    let mut labs: Vec<usize> = sector.columns_of(ColumnKind::Lab);
+    labs.sort_by_key(|c| (*c as i64 - center as i64).abs());
+    let mut need = ctrl_labs;
+    for col in labs {
+        if need == 0 {
+            break;
+        }
+        need -= grid.fill(col, need, Cell::Control);
+    }
+    if need > 0 {
+        return Err(PlaceError("control logic does not fit".into()));
+    }
+
+    Ok(Placement {
+        sector,
+        grid: grid.cells,
+        sp_dsp_col,
+        sp_logic_span,
+        pred_distance,
+        spine_cols,
+    })
+}
+
+impl Placement {
+    /// Figure-4 check (a): each SP's logic is one contiguous column band
+    /// (within two LAB groups of its DSP column).
+    pub fn sp_logic_contiguous(&self) -> bool {
+        self.sp_logic_span
+            .iter()
+            .all(|(lo, hi)| hi.saturating_sub(*lo) <= 10)
+    }
+
+    /// Figure-4 check (c): the SP straddles its DSP column.
+    pub fn sp_straddles_dsp(&self, sp: usize) -> bool {
+        let (lo, hi) = self.sp_logic_span[sp];
+        let d = self.sp_dsp_col[sp];
+        lo < d && d < hi
+    }
+
+    /// Figure-4 check (b): predicate blocks sit away from the SP core.
+    pub fn predicates_remote(&self) -> bool {
+        self.pred_distance.iter().all(|d| *d == 0)
+            || self.pred_distance.iter().any(|d| *d >= 8)
+    }
+
+    /// The spine is central: its columns are exactly the innermost M20K
+    /// columns of the fabric ("the shared memory creates a spine in the
+    /// middle of the core", §6) — a set-prefix of the centre-outward
+    /// ordering, however many columns the spine needs.
+    pub fn spine_is_central(&self) -> bool {
+        let center = self.sector.width() as i64 / 2;
+        let mut mem_cols = self.sector.columns_of(super::sector::ColumnKind::M20k);
+        mem_cols.sort_by_key(|c| (*c as i64 - center).abs());
+        let innermost: std::collections::BTreeSet<usize> =
+            mem_cols.into_iter().take(self.spine_cols.len()).collect();
+        self.spine_cols.iter().all(|c| innermost.contains(c))
+    }
+
+    /// Worst column distance between an SP's register M20Ks and its DSP
+    /// column — the wire-hop statistic behind the §6 Fmax argument.
+    pub fn max_reg_to_dsp_hops(&self) -> usize {
+        let mut worst = 0;
+        for (col, cells) in self.grid.iter().enumerate() {
+            for cell in cells {
+                if let Cell::SpReg(sp) = cell {
+                    let d = (col as i64 - self.sp_dsp_col[*sp as usize] as i64).unsigned_abs()
+                        as usize;
+                    worst = worst.max(d);
+                }
+            }
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::EgpuConfig;
+
+    #[test]
+    fn all_table4_instances_place() {
+        for cfg in EgpuConfig::table4_presets() {
+            let p = place(&cfg).unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+            assert!(p.spine_is_central(), "{}", cfg.name);
+            assert!(p.sp_logic_contiguous(), "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn largest_instance_shows_figure4_structure() {
+        // Figure 4 is the largest Table 4 instance.
+        let cfg = EgpuConfig::table4_presets().remove(5);
+        let p = place(&cfg).unwrap();
+        // (a) contiguous SP logic
+        assert!(p.sp_logic_contiguous());
+        // (b) predicate blocks placed some distance away
+        assert!(p.predicates_remote());
+        // (c) SPs straddle DSP columns
+        let straddling = (0..16).filter(|&sp| p.sp_straddles_dsp(sp)).count();
+        assert!(straddling >= 12, "only {straddling}/16 SPs straddle");
+    }
+
+    #[test]
+    fn spine_splits_sps_eight_per_side() {
+        let cfg = EgpuConfig::table4_presets().remove(5);
+        let p = place(&cfg).unwrap();
+        let center = p.sector.width() / 2;
+        let west = (0..8).filter(|&sp| p.sp_dsp_col[sp] < center).count();
+        let east = (8..16).filter(|&sp| p.sp_dsp_col[sp] >= center).count();
+        assert_eq!(west, 8);
+        assert_eq!(east, 8);
+    }
+
+    #[test]
+    fn wire_hops_bounded() {
+        // §6: performance comes from minimal wire hops; register→DSP
+        // paths must stay within a handful of columns.
+        for cfg in EgpuConfig::table4_presets() {
+            let p = place(&cfg).unwrap();
+            assert!(
+                p.max_reg_to_dsp_hops() <= 14,
+                "{}: {} hops",
+                cfg.name,
+                p.max_reg_to_dsp_hops()
+            );
+        }
+    }
+
+    #[test]
+    fn benchmark_config_places_in_one_sector() {
+        // 128KB shared = 256 M20Ks + 64 regfile + instruction store: very
+        // close to the 240-M20K sector — the QP variant fits.
+        use crate::sim::config::MemoryMode;
+        let qp = EgpuConfig::benchmark(MemoryMode::Qp, false);
+        let p = place(&qp).unwrap();
+        assert_eq!(p.sector.width(), 50, "QP fits one sector");
+        // The DP 128KB variant overflows into a second sector (§5.6).
+        let dp = EgpuConfig::benchmark(MemoryMode::Dp, false);
+        let p = place(&dp).unwrap();
+        assert_eq!(p.sector.width(), 100, "DP needs two sectors");
+    }
+}

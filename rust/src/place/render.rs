@@ -1,0 +1,120 @@
+//! ASCII rendering of a placement (the Figure 4/5 analogue).
+
+use super::placer::{Cell, Placement};
+use super::sector::SECTOR_ROWS;
+
+/// Render the whole sector, one character per cell, columns left→right.
+/// SPs are hex digits, spine `M`, register M20Ks `r`, DSPs `D`,
+/// predicates `p`, control `#`, empty by column kind.
+pub fn render(p: &Placement) -> String {
+    let mut out = String::new();
+    out.push_str("  Figure-4 analogue: one Agilex sector, 50 columns x 41 rows\n");
+    out.push_str("  (hex digit = SP logic, D = SP DSP, r = SP register M20K,\n");
+    out.push_str("   M = shared-memory spine, p = predicate block, # = control)\n\n");
+    let height = SECTOR_ROWS;
+    for row in 0..height {
+        out.push_str("  ");
+        for (col, cells) in p.grid.iter().enumerate() {
+            // Memory/DSP columns have 40 sites vs 41 LAB rows; clamp.
+            let c = if row < cells.len() {
+                cells[row]
+            } else {
+                Cell::Empty
+            };
+            out.push(match c {
+                Cell::Empty => p.sector.columns[col].glyph(),
+                Cell::Shared => 'M',
+                Cell::SpLogic(sp) => char::from_digit(sp as u32, 16).unwrap(),
+                Cell::SpReg(_) => 'r',
+                Cell::SpDsp(_) => 'D',
+                Cell::Pred(_) => 'p',
+                Cell::Control => '#',
+            });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// One-SP zoom (the Figure 5 analogue): the columns around `sp`'s DSP.
+pub fn render_sp(p: &Placement, sp: u8) -> String {
+    let d = p.sp_dsp_col[sp as usize];
+    let lo = d.saturating_sub(6);
+    let hi = (d + 6).min(p.sector.width() - 1);
+    let mut out = format!(
+        "  Figure-5 analogue: SP{sp} (DSP column {d}, logic span {:?})\n\n",
+        p.sp_logic_span[sp as usize]
+    );
+    for row in 0..SECTOR_ROWS {
+        out.push_str("  ");
+        for col in lo..=hi {
+            let cells = &p.grid[col];
+            let c = if row < cells.len() {
+                cells[row]
+            } else {
+                Cell::Empty
+            };
+            out.push(match c {
+                Cell::SpLogic(s) if s == sp => 'X',
+                Cell::SpDsp(s) if s == sp => 'D',
+                Cell::SpReg(s) if s == sp => 'r',
+                Cell::Pred(s) if s == sp => 'p',
+                Cell::Empty => p.sector.columns[col].glyph(),
+                _ => ' ',
+            });
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Summary statistics block printed under the figures.
+pub fn stats(p: &Placement) -> String {
+    format!(
+        "  spine columns: {:?} (central: {})\n  SP logic contiguous: {}\n  \
+         SPs straddling their DSP column: {}/16\n  predicates remote: {}\n  \
+         max register->DSP wire hops: {}\n",
+        p.spine_cols,
+        p.spine_is_central(),
+        p.sp_logic_contiguous(),
+        (0..16).filter(|&sp| p.sp_straddles_dsp(sp)).count(),
+        p.predicates_remote(),
+        p.max_reg_to_dsp_hops(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::place::place;
+    use crate::sim::config::EgpuConfig;
+
+    #[test]
+    fn renders_all_cell_kinds() {
+        let cfg = EgpuConfig::table4_presets().remove(5);
+        let p = place(&cfg).unwrap();
+        let r = render(&p);
+        for ch in ['M', 'D', 'r', '#', 'p', '0', 'f'] {
+            assert!(r.contains(ch), "missing glyph {ch}");
+        }
+        assert_eq!(r.lines().count(), 4 + SECTOR_ROWS);
+    }
+
+    #[test]
+    fn sp_zoom_contains_dsp_and_logic() {
+        let cfg = EgpuConfig::table4_presets().remove(3);
+        let p = place(&cfg).unwrap();
+        let z = render_sp(&p, 3);
+        assert!(z.contains('D'));
+        assert!(z.contains('X'));
+    }
+
+    #[test]
+    fn stats_summarize() {
+        let cfg = EgpuConfig::table4_presets().remove(0);
+        let p = place(&cfg).unwrap();
+        let s = stats(&p);
+        assert!(s.contains("spine columns"));
+        assert!(s.contains("/16"));
+    }
+}

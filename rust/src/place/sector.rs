@@ -1,0 +1,149 @@
+//! Agilex sector geometry (paper §5.6).
+//!
+//! "The Intel Agilex devices are arranged in sectors, the most common of
+//! which contains about 16400 ALMs, 240 M20K memories, and 160 DSP
+//! Blocks. ... there is a constant 4 columns of logic between each column
+//! of either DSP or M20K. In a sector we will have 40 columns of logic, 4
+//! columns of DSP, and 6 columns of M20K" — columns ≈ 41 rows high.
+
+/// Rows per column (≈41 LAB rows; memories/DSPs pack ~40 usable sites).
+pub const SECTOR_ROWS: usize = 41;
+
+/// ALMs per LAB (Agilex).
+pub const ALMS_PER_LAB: usize = 10;
+
+/// Column types in a sector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColumnKind {
+    /// LAB column: 41 LABs × 10 ALMs = 410 ALMs.
+    Lab,
+    /// M20K column: 40 memories.
+    M20k,
+    /// DSP column: 40 DSP blocks.
+    Dsp,
+}
+
+impl ColumnKind {
+    /// Capacity in that column's native unit (ALMs / M20Ks / DSPs).
+    pub fn capacity(self) -> usize {
+        match self {
+            ColumnKind::Lab => SECTOR_ROWS * ALMS_PER_LAB,
+            ColumnKind::M20k => 40,
+            ColumnKind::Dsp => 40,
+        }
+    }
+
+    pub fn glyph(self) -> char {
+        match self {
+            ColumnKind::Lab => '.',
+            ColumnKind::M20k => 'm',
+            ColumnKind::Dsp => 'd',
+        }
+    }
+}
+
+/// One sector: a left-to-right column sequence.
+#[derive(Debug, Clone)]
+pub struct Sector {
+    pub columns: Vec<ColumnKind>,
+}
+
+impl Default for Sector {
+    fn default() -> Self {
+        Self::agilex()
+    }
+}
+
+impl Sector {
+    /// The paper's sector: 40 LAB + 4 DSP + 6 M20K columns, a constant 4
+    /// LAB columns between embedded columns. Embedded order chosen so the
+    /// M20K columns are densest near the center (where the shared-memory
+    /// spine lands) and DSP columns flank them — the Figure 4 pattern.
+    pub fn agilex() -> Sector {
+        Self::multi(1)
+    }
+
+    /// `n` sectors side by side (§5.6: "we are not limited to a single
+    /// sector (additional pipelining may be required to maintain
+    /// performance across sector boundaries)").
+    pub fn multi(n: usize) -> Sector {
+        use ColumnKind::*;
+        let embedded = [M20k, Dsp, M20k, Dsp, M20k, M20k, Dsp, M20k, Dsp, M20k];
+        let mut columns = Vec::with_capacity(50 * n);
+        for _ in 0..n.max(1) {
+            for e in embedded {
+                columns.extend([Lab, Lab, Lab, Lab]);
+                columns.push(e);
+            }
+        }
+        Sector { columns }
+    }
+
+    pub fn width(&self) -> usize {
+        self.columns.len()
+    }
+
+    pub fn total_alms(&self) -> usize {
+        self.count(ColumnKind::Lab) * ColumnKind::Lab.capacity()
+    }
+
+    pub fn total_m20ks(&self) -> usize {
+        self.count(ColumnKind::M20k) * ColumnKind::M20k.capacity()
+    }
+
+    pub fn total_dsps(&self) -> usize {
+        self.count(ColumnKind::Dsp) * ColumnKind::Dsp.capacity()
+    }
+
+    fn count(&self, k: ColumnKind) -> usize {
+        self.columns.iter().filter(|c| **c == k).count()
+    }
+
+    /// Column indices of the given kind.
+    pub fn columns_of(&self, k: ColumnKind) -> Vec<usize> {
+        self.columns
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c == k)
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sector_matches_paper_capacities() {
+        let s = Sector::agilex();
+        // "about 16400 ALMs, 240 M20K memories, and 160 DSP Blocks"
+        assert_eq!(s.total_alms(), 16_400);
+        assert_eq!(s.total_m20ks(), 240);
+        assert_eq!(s.total_dsps(), 160);
+        assert_eq!(s.width(), 50);
+    }
+
+    #[test]
+    fn four_labs_between_embedded_columns() {
+        let s = Sector::agilex();
+        let mut run = 0;
+        for c in &s.columns {
+            match c {
+                ColumnKind::Lab => run += 1,
+                _ => {
+                    assert_eq!(run, 4, "embedded column not preceded by 4 LABs");
+                    run = 0;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn column_counts() {
+        let s = Sector::agilex();
+        assert_eq!(s.columns_of(ColumnKind::M20k).len(), 6);
+        assert_eq!(s.columns_of(ColumnKind::Dsp).len(), 4);
+        assert_eq!(s.columns_of(ColumnKind::Lab).len(), 40);
+    }
+}

@@ -1,0 +1,104 @@
+//! Artifact discovery: locate `artifacts/`, check the op-index contract,
+//! and pick the right compiled depth for a machine configuration.
+
+use std::path::{Path, PathBuf};
+
+use crate::datapath::opmap::verify_opmap_json;
+
+/// Depths the AOT path compiles artifacts for (python opmap.DEPTHS).
+pub const ARTIFACT_DEPTHS: [usize; 2] = [32, 64];
+
+/// The artifact set one machine configuration uses.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    /// Compiled block depth (≥ the machine's wavefront count).
+    pub depth: usize,
+}
+
+impl ArtifactSet {
+    /// Resolve the artifact set for a machine with `wavefronts` depth.
+    /// Verifies the op-index contract in `opmap.json`.
+    pub fn resolve(dir: impl AsRef<Path>, wavefronts: usize) -> Result<ArtifactSet, String> {
+        let dir = dir.as_ref().to_path_buf();
+        if !dir.is_dir() {
+            return Err(format!(
+                "artifacts directory {} not found — run `make artifacts`",
+                dir.display()
+            ));
+        }
+        let depth = *ARTIFACT_DEPTHS
+            .iter()
+            .find(|&&d| d >= wavefronts)
+            .ok_or_else(|| {
+                format!(
+                    "no artifact depth covers {wavefronts} wavefronts (max {})",
+                    ARTIFACT_DEPTHS[ARTIFACT_DEPTHS.len() - 1]
+                )
+            })?;
+        let opmap_path = dir.join("opmap.json");
+        let json = std::fs::read_to_string(&opmap_path)
+            .map_err(|e| format!("read {}: {e}", opmap_path.display()))?;
+        verify_opmap_json(&json)?;
+        for name in [
+            format!("fp_alu_d{depth}"),
+            format!("int_alu_d{depth}"),
+            format!("dot_d{depth}"),
+        ] {
+            let p = dir.join(format!("{name}.hlo.txt"));
+            if !p.is_file() {
+                return Err(format!("missing artifact {}", p.display()));
+            }
+        }
+        Ok(ArtifactSet { dir, depth })
+    }
+
+    pub fn fp_alu(&self) -> String {
+        format!("fp_alu_d{}", self.depth)
+    }
+
+    pub fn int_alu(&self) -> String {
+        format!("int_alu_d{}", self.depth)
+    }
+
+    pub fn dot(&self) -> String {
+        format!("dot_d{}", self.depth)
+    }
+}
+
+/// Default artifacts directory: `$EGPU_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("EGPU_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_selection() {
+        // Resolve only checks depths against the table; use the real
+        // artifacts dir when present.
+        let dir = default_artifacts_dir();
+        if !dir.is_dir() {
+            return; // artifacts not built in this checkout
+        }
+        let a = ArtifactSet::resolve(&dir, 32).unwrap();
+        assert_eq!(a.depth, 32);
+        let a = ArtifactSet::resolve(&dir, 33).unwrap();
+        assert_eq!(a.depth, 64);
+        let a = ArtifactSet::resolve(&dir, 1).unwrap();
+        assert_eq!(a.depth, 32);
+        assert!(ArtifactSet::resolve(&dir, 65).is_err());
+        assert_eq!(a.fp_alu(), "fp_alu_d32");
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        let e = ArtifactSet::resolve("/nonexistent/path", 32).unwrap_err();
+        assert!(e.contains("make artifacts"));
+    }
+}

@@ -1,0 +1,106 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute
+//! them from the rust hot path.
+//!
+//! This is the only place the `xla` crate is touched. The interchange
+//! format is HLO **text** (never serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/README.md).
+//!
+//! Python runs only at `make artifacts` time; after that the binary is
+//! self-contained given the `artifacts/` directory.
+
+pub mod artifacts;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+pub use artifacts::{default_artifacts_dir, ArtifactSet};
+
+/// A PJRT CPU client with a compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn cpu(dir: impl AsRef<Path>) -> Result<Runtime, String> {
+        let client = xla::PjRtClient::cpu().map_err(|e| format!("PJRT client: {e}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (once) the named artifact (`<name>.hlo.txt`).
+    pub fn load(&mut self, name: &str) -> Result<(), String> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or("non-UTF8 artifact path")?,
+        )
+        .map_err(|e| format!("parse {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {name}: {e}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact. All our artifacts are lowered with
+    /// `return_tuple=True`, so the single output is unwrapped from the
+    /// 1-tuple here.
+    pub fn execute(&mut self, name: &str, args: &[xla::Literal]) -> Result<xla::Literal, String> {
+        self.load(name)?;
+        let exe = self.cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| format!("execute {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| format!("fetch {name}: {e}"))?;
+        lit.to_tuple1().map_err(|e| format!("untuple {name}: {e}"))
+    }
+
+    pub fn loaded(&self) -> Vec<&str> {
+        self.cache.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Build a `(depth, 16)` f32 literal from u32 register lanes.
+pub fn f32_block(lanes: &[u32], depth: usize) -> Result<xla::Literal, String> {
+    let vals: Vec<f32> = lanes.iter().map(|&u| f32::from_bits(u)).collect();
+    xla::Literal::vec1(&vals)
+        .reshape(&[depth as i64, 16])
+        .map_err(|e| format!("reshape f32 block: {e}"))
+}
+
+/// Build a `(depth, 16)` i32 literal from u32 register lanes.
+pub fn i32_block(lanes: &[u32], depth: usize) -> Result<xla::Literal, String> {
+    let vals: Vec<i32> = lanes.iter().map(|&u| u as i32).collect();
+    xla::Literal::vec1(&vals)
+        .reshape(&[depth as i64, 16])
+        .map_err(|e| format!("reshape i32 block: {e}"))
+}
+
+/// Build a `(1,1)` i32 scalar literal (artifact scalar-parameter shape).
+pub fn i32_scalar11(v: i32) -> Result<xla::Literal, String> {
+    xla::Literal::vec1(&[v])
+        .reshape(&[1, 1])
+        .map_err(|e| format!("reshape scalar: {e}"))
+}

@@ -1,0 +1,423 @@
+//! Static scalability: the eGPU configuration space (paper §3, §5).
+//!
+//! Everything the paper lists as a configuration-time parameter is a field
+//! here: thread space, registers per thread, shared-memory size and port
+//! organization (DP/QP), integer-ALU precision and feature class, shift
+//! precision, predicate support and nesting depth, and the optional
+//! extension cores. The Table 4/5 instances are provided as presets.
+
+use std::fmt;
+
+use crate::isa::{Group, Opcode, WordLayout, WAVEFRONT_WIDTH};
+
+/// Shared-memory organization (§3, §5.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MemoryMode {
+    /// Simple dual-port M20Ks: 4 read ports + 1 write port, 1 GHz block
+    /// speed — the core closes at the 771 MHz DSP limit.
+    #[default]
+    Dp,
+    /// Emulated quad-port M20Ks: 4 read + 2 write ports, 600 MHz block
+    /// speed — doubles write bandwidth, halves M20K count, caps Fmax.
+    Qp,
+}
+
+impl MemoryMode {
+    pub fn write_ports(self) -> usize {
+        match self {
+            MemoryMode::Dp => 1,
+            MemoryMode::Qp => 2,
+        }
+    }
+
+    /// Shared-memory read ports (4 in both organizations).
+    pub fn read_ports(self) -> usize {
+        4
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MemoryMode::Dp => "DP",
+            MemoryMode::Qp => "QP",
+        }
+    }
+}
+
+/// Integer-ALU feature class (Table 6 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IntAluClass {
+    /// Adder/subtractor + AND/OR/XOR only (+ single-bit shift).
+    Min,
+    /// + full logic set and full shifts.
+    Small,
+    /// + popcount, max/min, unsigned variants.
+    #[default]
+    Full,
+}
+
+impl IntAluClass {
+    pub fn name(self) -> &'static str {
+        match self {
+            IntAluClass::Min => "Min",
+            IntAluClass::Small => "Small",
+            IntAluClass::Full => "Full",
+        }
+    }
+
+    /// Is this integer opcode implemented by this ALU class?
+    pub fn supports(self, op: Opcode) -> bool {
+        use Opcode::*;
+        match self {
+            IntAluClass::Min => matches!(op, Add | Sub | And | Or | Xor | Shl | Shr),
+            IntAluClass::Small => matches!(
+                op,
+                Add | Sub | Neg | Abs | And | Or | Xor | Not | CNot | Bvs | Shl | Shr
+            ),
+            IntAluClass::Full => true,
+        }
+    }
+}
+
+/// A complete static configuration of one eGPU core.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EgpuConfig {
+    /// Human label ("Small-DP-1" etc. for the Table 4/5 presets).
+    pub name: String,
+    /// Maximum initialized threads (multiple of 16).
+    pub threads: usize,
+    /// Registers per thread: 16, 32 or 64.
+    pub regs_per_thread: usize,
+    /// Shared-memory size in KB (32-bit word addressed).
+    pub shared_kb: usize,
+    /// DP or QP memory organization.
+    pub memory: MemoryMode,
+    /// Integer-ALU precision: 16 or 32 bits.
+    pub alu_precision: u8,
+    /// Shift precision: 1 (single-bit shifts only), 16 or 32.
+    pub shift_precision: u8,
+    /// Integer-ALU feature class.
+    pub int_alu: IntAluClass,
+    /// Predicate nesting levels (0 = predicates not synthesized).
+    pub predicate_levels: usize,
+    /// Optional dot-product extension core.
+    pub dot_core: bool,
+    /// Optional SFU (reciprocal square root).
+    pub sfu: bool,
+}
+
+impl Default for EgpuConfig {
+    /// The paper's base configuration: 1 SM × 16 SPs, 512 threads.
+    fn default() -> Self {
+        EgpuConfig {
+            name: "base".into(),
+            threads: 512,
+            regs_per_thread: 32,
+            shared_kb: 32,
+            memory: MemoryMode::Dp,
+            alu_precision: 32,
+            shift_precision: 16,
+            int_alu: IntAluClass::Full,
+            predicate_levels: 5,
+            dot_core: false,
+            sfu: false,
+        }
+    }
+}
+
+/// Configuration validation error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError(pub String);
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "invalid eGPU configuration: {}", self.0)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl EgpuConfig {
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let e = |m: String| Err(ConfigError(m));
+        if self.threads == 0 || self.threads % WAVEFRONT_WIDTH != 0 {
+            return e(format!(
+                "threads ({}) must be a positive multiple of {WAVEFRONT_WIDTH}",
+                self.threads
+            ));
+        }
+        if !matches!(self.regs_per_thread, 16 | 32 | 64) {
+            return e(format!(
+                "regs_per_thread ({}) must be 16, 32 or 64",
+                self.regs_per_thread
+            ));
+        }
+        if self.shared_kb < 2 || self.shared_kb > 512 {
+            return e(format!("shared_kb ({}) out of range [2,512]", self.shared_kb));
+        }
+        if !matches!(self.alu_precision, 16 | 32) {
+            return e(format!("alu_precision ({}) must be 16 or 32", self.alu_precision));
+        }
+        if !matches!(self.shift_precision, 1 | 16 | 32) {
+            return e(format!(
+                "shift_precision ({}) must be 1, 16 or 32",
+                self.shift_precision
+            ));
+        }
+        if self.shift_precision > self.alu_precision {
+            return e(format!(
+                "shift_precision ({}) exceeds alu_precision ({})",
+                self.shift_precision, self.alu_precision
+            ));
+        }
+        if self.predicate_levels > 32 {
+            return e(format!(
+                "predicate_levels ({}) exceeds the 32-level stack limit",
+                self.predicate_levels
+            ));
+        }
+        Ok(())
+    }
+
+    /// Initialized wavefronts: threads / 16 (§3.1).
+    pub fn wavefronts(&self) -> usize {
+        self.threads / WAVEFRONT_WIDTH
+    }
+
+    /// Shared memory size in 32-bit words.
+    pub fn shared_words(&self) -> usize {
+        self.shared_kb * 1024 / 4
+    }
+
+    /// Instruction-word layout for this register space.
+    pub fn word_layout(&self) -> WordLayout {
+        WordLayout::for_regs(self.regs_per_thread)
+    }
+
+    /// Core clock in MHz: always the slowest embedded resource (§6) —
+    /// 771 MHz (DSP-limited) for DP, 600 MHz (QP M20K) for QP.
+    pub fn core_mhz(&self) -> f64 {
+        match self.memory {
+            MemoryMode::Dp => 771.0,
+            MemoryMode::Qp => 600.0,
+        }
+    }
+
+    /// Is this instruction legal on this configuration? (The assembler is
+    /// configuration-independent; legality is checked at program load.)
+    pub fn supports(&self, op: Opcode, shift_amount: Option<u32>) -> Result<(), ConfigError> {
+        let group = op.group();
+        match group {
+            Group::Conditional if self.predicate_levels == 0 => Err(ConfigError(format!(
+                "{op} requires predicates, which this configuration omits"
+            ))),
+            Group::Extension => match op {
+                Opcode::Dot | Opcode::Sum if !self.dot_core => Err(ConfigError(format!(
+                    "{op} requires the dot-product extension core"
+                ))),
+                Opcode::InvSqr if !self.sfu => Err(ConfigError(
+                    "invsqr requires the SFU extension core".into(),
+                )),
+                _ => Ok(()),
+            },
+            Group::IntArith | Group::IntLogic | Group::IntOther | Group::IntMul
+                if !self.int_alu.supports(op) =>
+            {
+                Err(ConfigError(format!(
+                    "{op} is not implemented by the {} integer ALU",
+                    self.int_alu.name()
+                )))
+            }
+            Group::IntShift => {
+                if !self.int_alu.supports(op) {
+                    return Err(ConfigError(format!(
+                        "{op} is not implemented by the {} integer ALU",
+                        self.int_alu.name()
+                    )));
+                }
+                if self.shift_precision == 1 {
+                    match shift_amount {
+                        Some(1) => Ok(()),
+                        Some(n) => Err(ConfigError(format!(
+                            "shift by {n} needs multi-bit shifter (shift_precision=1)"
+                        ))),
+                        // Register-amount shifts can't be statically checked.
+                        None => Ok(()),
+                    }
+                } else {
+                    Ok(())
+                }
+            }
+            _ => Ok(()),
+        }
+    }
+
+    // ---------------------------------------------------------------
+    // Presets: the exact instances of Tables 4 and 5.
+    // ---------------------------------------------------------------
+
+    fn preset(
+        name: &str,
+        alu: u8,
+        shift: u8,
+        threads: usize,
+        regs: usize,
+        shared_kb: usize,
+        pred: usize,
+        memory: MemoryMode,
+    ) -> EgpuConfig {
+        EgpuConfig {
+            name: name.into(),
+            threads,
+            regs_per_thread: regs,
+            shared_kb,
+            memory,
+            alu_precision: alu,
+            shift_precision: shift,
+            int_alu: if shift == 1 {
+                IntAluClass::Min
+            } else {
+                IntAluClass::Full
+            },
+            predicate_levels: pred,
+            dot_core: false,
+            sfu: false,
+        }
+    }
+
+    /// Table 4 (DP memory) rows, in order.
+    pub fn table4_presets() -> Vec<EgpuConfig> {
+        use MemoryMode::Dp;
+        vec![
+            Self::preset("Small-DP-1", 16, 1, 512, 16, 8, 0, Dp),
+            Self::preset("Small-DP-2", 16, 16, 512, 16, 32, 5, Dp),
+            Self::preset("Medium-DP-1", 16, 16, 512, 32, 32, 5, Dp),
+            Self::preset("Medium-DP-2", 32, 16, 512, 32, 32, 5, Dp),
+            Self::preset("Large-DP-1", 32, 16, 512, 64, 32, 8, Dp),
+            Self::preset("Large-DP-2", 32, 32, 512, 64, 64, 16, Dp),
+        ]
+    }
+
+    /// Table 5 (QP memory) rows, in order.
+    pub fn table5_presets() -> Vec<EgpuConfig> {
+        use MemoryMode::Qp;
+        vec![
+            Self::preset("Small-QP-1", 32, 1, 512, 64, 32, 0, Qp),
+            Self::preset("Medium-QP-1", 32, 32, 1024, 32, 64, 0, Qp),
+            Self::preset("Large-QP-1", 32, 32, 1024, 32, 64, 16, Qp),
+            Self::preset("Large-QP-2", 32, 32, 1024, 32, 128, 10, Qp),
+        ]
+    }
+
+    /// The §7 benchmark configuration with predicates, used by the
+    /// bitonic-sort benchmark ("Predicates are required, which increases
+    /// the effective cost of the eGPU core by about 50%").
+    pub fn benchmark_predicated(memory: MemoryMode) -> EgpuConfig {
+        let mut c = Self::benchmark(memory, false);
+        c.predicate_levels = 8;
+        c.name += "-Pred";
+        c
+    }
+
+    /// The §7 benchmark configuration: 512 threads, 32 regs/thread,
+    /// 32-bit ALU, 128 KB shared memory, no predicates (the vector/matrix
+    /// and FFT kernels use only loop constructs).
+    pub fn benchmark(memory: MemoryMode, dot_core: bool) -> EgpuConfig {
+        EgpuConfig {
+            name: match (memory, dot_core) {
+                (MemoryMode::Dp, false) => "eGPU-DP".into(),
+                (MemoryMode::Qp, false) => "eGPU-QP".into(),
+                (MemoryMode::Dp, true) => "eGPU-Dot".into(),
+                (MemoryMode::Qp, true) => "eGPU-QP-Dot".into(),
+            },
+            threads: 512,
+            regs_per_thread: 32,
+            shared_kb: 128,
+            memory,
+            alu_precision: 32,
+            shift_precision: 32,
+            int_alu: IntAluClass::Full,
+            predicate_levels: 0,
+            dot_core,
+            sfu: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for c in EgpuConfig::table4_presets()
+            .into_iter()
+            .chain(EgpuConfig::table5_presets())
+        {
+            c.validate().unwrap_or_else(|e| panic!("{}: {e}", c.name));
+        }
+        EgpuConfig::benchmark(MemoryMode::Dp, true).validate().unwrap();
+    }
+
+    #[test]
+    fn derived_quantities() {
+        let c = EgpuConfig::default();
+        assert_eq!(c.wavefronts(), 32);
+        assert_eq!(c.shared_words(), 8192);
+        assert_eq!(c.word_layout().word_bits(), 43);
+        assert_eq!(c.core_mhz(), 771.0);
+        let q = EgpuConfig::benchmark(MemoryMode::Qp, false);
+        assert_eq!(q.core_mhz(), 600.0);
+        assert_eq!(q.shared_words(), 32768);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = EgpuConfig::default();
+        c.threads = 100;
+        assert!(c.validate().is_err());
+        let mut c = EgpuConfig::default();
+        c.regs_per_thread = 48;
+        assert!(c.validate().is_err());
+        let mut c = EgpuConfig::default();
+        c.shift_precision = 32;
+        c.alu_precision = 16;
+        assert!(c.validate().is_err());
+        let mut c = EgpuConfig::default();
+        c.predicate_levels = 64;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn feature_gating() {
+        let mut c = EgpuConfig::default();
+        c.predicate_levels = 0;
+        assert!(c.supports(Opcode::If, None).is_err());
+        assert!(c.supports(Opcode::Add, None).is_ok());
+        assert!(c.supports(Opcode::Dot, None).is_err()); // no dot core
+        c.dot_core = true;
+        assert!(c.supports(Opcode::Dot, None).is_ok());
+        assert!(c.supports(Opcode::InvSqr, None).is_err());
+        c.sfu = true;
+        assert!(c.supports(Opcode::InvSqr, None).is_ok());
+    }
+
+    #[test]
+    fn min_alu_feature_gating() {
+        let mut c = EgpuConfig::default();
+        c.int_alu = IntAluClass::Min;
+        c.shift_precision = 1;
+        assert!(c.supports(Opcode::Pop, None).is_err());
+        assert!(c.supports(Opcode::Max, None).is_err());
+        assert!(c.supports(Opcode::Add, None).is_ok());
+        assert!(c.supports(Opcode::Shl, Some(1)).is_ok());
+        assert!(c.supports(Opcode::Shl, Some(4)).is_err());
+    }
+
+    #[test]
+    fn wavefront_counts_match_paper_examples() {
+        // §3.2: "512 threads with 16 SPs, there will be 32 wavefronts".
+        assert_eq!(EgpuConfig::default().wavefronts(), 32);
+        // Table 5 medium: 1024 threads → 64 wavefronts.
+        assert_eq!(EgpuConfig::table5_presets()[1].wavefronts(), 64);
+    }
+}

@@ -1,0 +1,217 @@
+//! Pipeline hazard checking (paper §3: "The eGPU has a very short pipeline
+//! (8 stages) ... hazards are hidden for most programs. Consequently, we
+//! do not provide hardware support for tracking hazards").
+//!
+//! The machine executes functionally in order, so results are always
+//! architecturally correct; this module answers the question the hardware
+//! does NOT: *would this program have read stale data on the real 8-stage
+//! pipeline?* Program generators use it to place the same NOPs a
+//! programmer would (the NOP bars of Figure 6), and the benchmark tests
+//! assert their programs are hazard-free.
+//!
+//! Model: a writer instruction starting issue at cycle `c` makes register
+//! `r` visible to a reader starting at `c + REG_WINDOW` (per-wavefront
+//! skew cancels because reader and writer stream wavefronts in the same
+//! order). Extension-core results have a longer window; stores complete
+//! their last shared-memory write shortly after their last arbitration
+//! slot.
+
+/// Register RAW window: writeback (stage 8) to operand fetch (stage 2).
+pub const REG_WINDOW: u64 = 6;
+
+/// Dot-product / SUM core result latency beyond its operand streaming.
+pub const DOT_WINDOW: u64 = 16;
+
+/// Shared-memory write-to-read turnaround after the last write slot.
+pub const MEM_WINDOW: u64 = 2;
+
+/// One recorded would-be hazard.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub pc: usize,
+    /// Register index or shared-memory address.
+    pub resource: u32,
+    pub is_mem: bool,
+    /// How many cycles too early the read started (NOPs needed).
+    pub deficit: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct HazardChecker {
+    /// Cycle at which each architectural register becomes readable.
+    reg_ready: Vec<u64>,
+    /// Cycle at which each shared-memory word becomes readable.
+    mem_ready: Vec<u64>,
+    pub total: u64,
+    pub samples: Vec<Violation>,
+    enabled: bool,
+}
+
+const MAX_SAMPLES: usize = 32;
+
+impl HazardChecker {
+    pub fn new(num_regs: usize, shared_words: usize) -> HazardChecker {
+        HazardChecker {
+            reg_ready: vec![0; num_regs],
+            mem_ready: vec![0; shared_words],
+            total: 0,
+            samples: Vec::new(),
+            enabled: true,
+        }
+    }
+
+    /// Disable checking (perf runs where the program is already verified).
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    pub fn reset(&mut self) {
+        self.reg_ready.fill(0);
+        self.mem_ready.fill(0);
+        self.total = 0;
+        self.samples.clear();
+    }
+
+    #[inline]
+    pub fn read_reg(&mut self, pc: usize, r: u8, now: u64) {
+        if !self.enabled {
+            return;
+        }
+        let ready = self.reg_ready[r as usize];
+        if now < ready {
+            self.record(Violation {
+                pc,
+                resource: r as u32,
+                is_mem: false,
+                deficit: ready - now,
+            });
+        }
+    }
+
+    /// Register written by an instruction that started issue at `start`,
+    /// visible `window` cycles later.
+    #[inline]
+    pub fn write_reg(&mut self, r: u8, start: u64, window: u64) {
+        if !self.enabled {
+            return;
+        }
+        let ready = start + window;
+        if ready > self.reg_ready[r as usize] {
+            self.reg_ready[r as usize] = ready;
+        }
+    }
+
+    #[inline]
+    pub fn read_mem(&mut self, pc: usize, addr: u32, now: u64) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(&ready) = self.mem_ready.get(addr as usize) {
+            if now < ready {
+                self.record(Violation {
+                    pc,
+                    resource: addr,
+                    is_mem: true,
+                    deficit: ready - now,
+                });
+            }
+        }
+    }
+
+    #[inline]
+    pub fn write_mem(&mut self, addr: u32, ready: u64) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(slot) = self.mem_ready.get_mut(addr as usize) {
+            if ready > *slot {
+                *slot = ready;
+            }
+        }
+    }
+
+    fn record(&mut self, v: Violation) {
+        self.total += 1;
+        if self.samples.len() < MAX_SAMPLES {
+            self.samples.push(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn raw_within_window_flags() {
+        let mut h = HazardChecker::new(32, 64);
+        h.write_reg(3, 100, REG_WINDOW);
+        h.read_reg(1, 3, 102); // 4 cycles early
+        assert_eq!(h.total, 1);
+        assert_eq!(h.samples[0].deficit, 4);
+        assert!(!h.samples[0].is_mem);
+    }
+
+    #[test]
+    fn raw_outside_window_clean() {
+        let mut h = HazardChecker::new(32, 64);
+        h.write_reg(3, 100, REG_WINDOW);
+        h.read_reg(1, 3, 106);
+        h.read_reg(1, 4, 100); // different register
+        assert_eq!(h.total, 0);
+    }
+
+    #[test]
+    fn deep_wavefront_instruction_hides_hazard() {
+        // A 32-wavefront writer issued at c=0 followed immediately by a
+        // reader at c=32 is clean: 32 issue cycles > the 6-cycle window.
+        let mut h = HazardChecker::new(32, 64);
+        h.write_reg(5, 0, REG_WINDOW);
+        h.read_reg(1, 5, 32);
+        assert_eq!(h.total, 0);
+        // An MCU-mode (1-wavefront) writer at c=0, reader at c=1: hazard.
+        h.write_reg(6, 0, REG_WINDOW);
+        h.read_reg(2, 6, 1);
+        assert_eq!(h.total, 1);
+    }
+
+    #[test]
+    fn dot_needs_longer_window() {
+        let mut h = HazardChecker::new(32, 64);
+        h.write_reg(7, 0, DOT_WINDOW);
+        h.read_reg(1, 7, 8);
+        assert_eq!(h.total, 1);
+        assert_eq!(h.samples[0].deficit, 8);
+    }
+
+    #[test]
+    fn mem_turnaround() {
+        let mut h = HazardChecker::new(32, 64);
+        h.write_mem(10, 50);
+        h.read_mem(1, 10, 49);
+        h.read_mem(1, 10, 50);
+        h.read_mem(1, 11, 0);
+        assert_eq!(h.total, 1);
+        assert!(h.samples[0].is_mem);
+    }
+
+    #[test]
+    fn disabled_checker_records_nothing() {
+        let mut h = HazardChecker::new(8, 8);
+        h.set_enabled(false);
+        h.write_reg(1, 0, REG_WINDOW);
+        h.read_reg(0, 1, 0);
+        assert_eq!(h.total, 0);
+    }
+
+    #[test]
+    fn sample_cap() {
+        let mut h = HazardChecker::new(8, 8);
+        for i in 0..100 {
+            h.write_reg(1, i * 10, REG_WINDOW);
+            h.read_reg(0, 1, i * 10);
+        }
+        assert_eq!(h.total, 100);
+        assert_eq!(h.samples.len(), MAX_SAMPLES);
+    }
+}

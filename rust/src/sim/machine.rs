@@ -1,0 +1,1033 @@
+//! The streaming multiprocessor: fetch → decode → issue loop with the
+//! paper's cycle model (§6 of DESIGN.md).
+//!
+//! One `Machine` is one eGPU core: 16 SPs, the configured thread space,
+//! shared memory, optional predicate blocks and extension cores. The
+//! *coordination* (sequencer, thread-space subsetting, port arbitration,
+//! predicates, cycle accounting) is here; the *datapath* is either inlined
+//! native lane functions or a pluggable [`BlockExec`] backend driving the
+//! AOT-compiled XLA artifacts.
+
+use crate::asm::Program;
+use crate::datapath::{classify, native, BlockExec, DpOp};
+use crate::isa::{Group, Instr, Opcode, WAVEFRONT_WIDTH};
+
+use super::config::EgpuConfig;
+use super::hazard::{HazardChecker, DOT_WINDOW, MEM_WINDOW, REG_WINDOW};
+use super::predicate::PredicateFile;
+use super::profiler::Profile;
+use super::regfile::RegFile;
+use super::sequencer::Sequencer;
+use super::shared_mem::SharedMem;
+
+/// Pipeline depth (§3: "a very short pipeline (8 stages)"); charged as the
+/// drain cost of STOP.
+pub const PIPELINE_DEPTH: u64 = 8;
+
+/// Simulation error, annotated with the faulting PC.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimError {
+    pub pc: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pc {}: {}", self.pc, self.message)
+    }
+}
+
+impl std::error::Error for SimError {}
+
+fn serr<T>(pc: usize, msg: impl Into<String>) -> Result<T, SimError> {
+    Err(SimError {
+        pc,
+        message: msg.into(),
+    })
+}
+
+/// Result of a completed run.
+#[derive(Debug, Clone)]
+pub struct RunStats {
+    /// Core clock cycles consumed (the paper's benchmark metric).
+    pub cycles: u64,
+    /// Dynamic instruction count.
+    pub instructions: u64,
+    /// Instruction-mix profile (Figure 6).
+    pub profile: Profile,
+    /// Would-be pipeline hazards (0 for correctly NOP-scheduled programs).
+    pub hazards: u64,
+    /// First few hazard records for diagnostics.
+    pub hazard_samples: Vec<super::hazard::Violation>,
+}
+
+impl RunStats {
+    /// Elapsed time in microseconds at the configuration's core clock.
+    pub fn time_us(&self, mhz: f64) -> f64 {
+        self.cycles as f64 / mhz
+    }
+}
+
+enum Exec {
+    /// Inlined bit-exact rust lanes (default).
+    Native,
+    /// Pluggable block executor (XLA artifacts through PJRT).
+    Block(Box<dyn BlockExec>),
+}
+
+/// One eGPU core.
+pub struct Machine {
+    pub cfg: EgpuConfig,
+    prog: Option<Program>,
+    seq: Sequencer,
+    regs: RegFile,
+    shared: SharedMem,
+    preds: PredicateFile,
+    profile: Profile,
+    hazards: HazardChecker,
+    cycles: u64,
+    retired: u64,
+    /// Runtime-initialized threads (≤ cfg.threads; §3.2 "if the run time
+    /// configuration of threads is less than this, there is no issue").
+    rt_threads: usize,
+    /// TDx/TDy grid x-dimension: TDx = tid % dim_x, TDy = tid / dim_x.
+    dim_x: usize,
+    /// Instruction trace to stderr (EGPU_TRACE env var, read once — an
+    /// env lookup per instruction would dominate the fetch loop).
+    trace: bool,
+    exec: Exec,
+    // Scratch blocks for the block-executor path (reused, not realloc'd).
+    scr_a: Vec<u32>,
+    scr_b: Vec<u32>,
+    scr_old: Vec<u32>,
+    scr_out: Vec<u32>,
+    scr_mask: Vec<u8>,
+}
+
+impl Machine {
+    /// New machine with the native datapath.
+    pub fn new(cfg: EgpuConfig) -> Result<Machine, SimError> {
+        Self::with_backend(cfg, None)
+    }
+
+    /// New machine with an explicit block executor (e.g. the XLA backend).
+    pub fn with_backend(
+        cfg: EgpuConfig,
+        backend: Option<Box<dyn BlockExec>>,
+    ) -> Result<Machine, SimError> {
+        cfg.validate().map_err(|e| SimError {
+            pc: 0,
+            message: e.to_string(),
+        })?;
+        let threads = cfg.threads;
+        Ok(Machine {
+            regs: RegFile::new(threads, cfg.regs_per_thread),
+            shared: SharedMem::new(cfg.shared_words(), cfg.memory),
+            preds: PredicateFile::new(threads, cfg.predicate_levels),
+            hazards: HazardChecker::new(cfg.regs_per_thread, cfg.shared_words()),
+            profile: Profile::new(),
+            seq: Sequencer::new(),
+            prog: None,
+            cycles: 0,
+            retired: 0,
+            rt_threads: threads,
+            dim_x: threads,
+            trace: std::env::var_os("EGPU_TRACE").is_some(),
+            exec: match backend {
+                Some(b) => Exec::Block(b),
+                None => Exec::Native,
+            },
+            scr_a: Vec::new(),
+            scr_b: Vec::new(),
+            scr_old: Vec::new(),
+            scr_out: Vec::new(),
+            scr_mask: Vec::new(),
+            cfg,
+        })
+    }
+
+    /// Load (and statically validate) a program.
+    pub fn load_program(&mut self, prog: Program) -> Result<(), SimError> {
+        if prog.layout != self.cfg.word_layout() {
+            return serr(
+                0,
+                format!(
+                    "program assembled for a {}-bit IW, machine uses {} bits",
+                    prog.layout.word_bits(),
+                    self.cfg.word_layout().word_bits()
+                ),
+            );
+        }
+        for (pc, i) in prog.instrs.iter().enumerate() {
+            self.cfg
+                .supports(i.op, None)
+                .map_err(|e| SimError {
+                    pc,
+                    message: e.to_string(),
+                })?;
+            if matches!(i.op, Opcode::Jmp | Opcode::Jsr | Opcode::Loop)
+                && i.imm_u() as usize >= prog.instrs.len()
+            {
+                return serr(pc, format!("branch target {} out of range", i.imm_u()));
+            }
+        }
+        self.prog = Some(prog);
+        self.reset();
+        Ok(())
+    }
+
+    /// Reset architectural state (program and shared memory are kept).
+    pub fn reset(&mut self) {
+        self.seq.reset();
+        self.regs.reset();
+        self.preds.reset();
+        self.hazards.reset();
+        self.profile = Profile::new();
+        self.cycles = 0;
+        self.retired = 0;
+    }
+
+    /// Set the runtime thread count (≤ configured maximum).
+    pub fn set_threads(&mut self, threads: usize) -> Result<(), SimError> {
+        if threads == 0 || threads % WAVEFRONT_WIDTH != 0 || threads > self.cfg.threads {
+            return serr(
+                0,
+                format!(
+                    "runtime threads {} must be a multiple of 16 in [16, {}]",
+                    threads, self.cfg.threads
+                ),
+            );
+        }
+        self.rt_threads = threads;
+        Ok(())
+    }
+
+    /// Set the TDx/TDy grid x-dimension.
+    pub fn set_dim_x(&mut self, dim_x: usize) -> Result<(), SimError> {
+        if dim_x == 0 {
+            return serr(0, "dim_x must be positive");
+        }
+        self.dim_x = dim_x;
+        Ok(())
+    }
+
+    /// Disable hazard tracking (verified programs on perf runs).
+    pub fn set_hazard_checking(&mut self, on: bool) {
+        self.hazards.set_enabled(on);
+    }
+
+    pub fn shared(&self) -> &SharedMem {
+        &self.shared
+    }
+
+    pub fn shared_mut(&mut self) -> &mut SharedMem {
+        &mut self.shared
+    }
+
+    pub fn regs(&self) -> &RegFile {
+        &self.regs
+    }
+
+    /// Host-side register seeding (tests and examples).
+    pub fn regs_mut(&mut self) -> &mut RegFile {
+        &mut self.regs
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    fn rt_waves(&self) -> usize {
+        self.rt_threads / WAVEFRONT_WIDTH
+    }
+
+    /// Combined thread-space × predicate gate for (wave, sp).
+    #[inline]
+    fn thread_active(&self, wave: usize, sp: usize) -> bool {
+        !self.preds.configured() || self.preds.active(wave * WAVEFRONT_WIDTH + sp)
+    }
+
+    /// Run to STOP (or error). `max_cycles` bounds runaway programs.
+    pub fn run(&mut self, max_cycles: u64) -> Result<RunStats, SimError> {
+        let prog_len = match &self.prog {
+            Some(p) => p.instrs.len(),
+            None => return serr(0, "no program loaded"),
+        };
+        while !self.seq.stopped {
+            let pc = self.seq.pc;
+            if pc >= prog_len {
+                return serr(pc, "execution fell off the end of the program");
+            }
+            // Fetch (instructions are pre-decoded at assembly; the encoded
+            // words are what the M20Ks hold, `Program` keeps both).
+            let i = self.prog.as_ref().unwrap().instrs[pc];
+            if self.trace {
+                eprintln!("pc={} op={:?} tc={} imm={}", pc, i.op, i.tc, i.imm_u());
+            }
+            self.execute(pc, &i)?;
+            self.retired += 1;
+            if self.cycles > max_cycles {
+                return serr(pc, format!("cycle limit {max_cycles} exceeded"));
+            }
+        }
+        // STOP drains the pipeline.
+        self.cycles += PIPELINE_DEPTH;
+        Ok(RunStats {
+            cycles: self.cycles,
+            instructions: self.retired,
+            profile: self.profile.clone(),
+            hazards: self.hazards.total,
+            hazard_samples: self.hazards.samples.clone(),
+        })
+    }
+
+    fn execute(&mut self, pc: usize, i: &Instr) -> Result<(), SimError> {
+        use Opcode::*;
+        match i.op {
+            Nop => {
+                self.cycles += 1;
+                self.profile.record(Group::Nop, 1);
+                self.seq.step();
+            }
+            Jmp => {
+                self.cycles += 1;
+                self.profile.record(Group::Control, 1);
+                self.seq.jmp(i.imm_u() as usize);
+            }
+            Jsr => {
+                self.cycles += 1;
+                self.profile.record(Group::Control, 1);
+                self.seq
+                    .jsr(i.imm_u() as usize)
+                    .map_err(|e| SimError {
+                        pc,
+                        message: e.to_string(),
+                    })?;
+            }
+            Rts => {
+                self.cycles += 1;
+                self.profile.record(Group::Control, 1);
+                self.seq.rts().map_err(|e| SimError {
+                    pc,
+                    message: e.to_string(),
+                })?;
+            }
+            Loop => {
+                self.cycles += 1;
+                self.profile.record(Group::Control, 1);
+                self.seq
+                    .loop_dec(i.imm_u() as usize)
+                    .map_err(|e| SimError {
+                        pc,
+                        message: e.to_string(),
+                    })?;
+            }
+            Init => {
+                self.cycles += 1;
+                self.profile.record(Group::Control, 1);
+                self.seq.init(i.imm_u()).map_err(|e| SimError {
+                    pc,
+                    message: e.to_string(),
+                })?;
+                self.seq.step();
+            }
+            Stop => {
+                self.cycles += 1;
+                self.profile.record(Group::Control, 1);
+                self.seq.stop();
+            }
+            Ldi | TdX | TdY => {
+                self.exec_scalar_gen(pc, i);
+                self.seq.step();
+            }
+            Lod => {
+                self.exec_load(pc, i)?;
+                self.seq.step();
+            }
+            Sto => {
+                self.exec_store(pc, i)?;
+                self.seq.step();
+            }
+            If | Else | EndIf => {
+                self.exec_pred(pc, i)?;
+                self.seq.step();
+            }
+            Dot | Sum => {
+                self.exec_dot(pc, i)?;
+                self.seq.step();
+            }
+            _ => {
+                self.exec_alu(pc, i)?;
+                self.seq.step();
+            }
+        }
+        Ok(())
+    }
+
+    /// LDI / TDX / TDY: per-thread generated values, one wavefront/cycle.
+    fn exec_scalar_gen(&mut self, _pc: usize, i: &Instr) {
+        let waves = i.tc.depth.waves(self.rt_waves());
+        let lanes = i.tc.width.lanes();
+        let start = self.cycles;
+        for w in 0..waves {
+            for sp in 0..lanes {
+                if !self.thread_active(w, sp) {
+                    continue;
+                }
+                let tid = w * WAVEFRONT_WIDTH + sp;
+                let v = match i.op {
+                    Opcode::Ldi => i.imm_i() as u32,
+                    Opcode::TdX => (tid % self.dim_x) as u32,
+                    Opcode::TdY => (tid / self.dim_x) as u32,
+                    _ => unreachable!(),
+                };
+                self.regs.write(w, sp, i.rd, v);
+            }
+        }
+        self.hazards.write_reg(i.rd, start, REG_WINDOW);
+        self.cycles += waves as u64;
+        self.profile.record(i.op.group(), waves as u64);
+    }
+
+    /// FP/INT wavefront ALU ops and INVSQR: one wavefront per cycle.
+    fn exec_alu(&mut self, pc: usize, i: &Instr) -> Result<(), SimError> {
+        let dp = match classify(i) {
+            Some(dp) => dp,
+            None => return serr(pc, format!("{} is not executable", i.op)),
+        };
+        let waves = i.tc.depth.waves(self.rt_waves());
+        let lanes = i.tc.width.lanes();
+        let start = self.cycles;
+        let uses_rb = !matches!(
+            i.op.operands(),
+            crate::isa::opcode::OperandShape::RdRa
+        );
+        self.hazards.read_reg(pc, i.ra, start);
+        if uses_rb {
+            self.hazards.read_reg(pc, i.rb, start);
+        }
+
+        match (&mut self.exec, dp) {
+            (Exec::Native, DpOp::Fp(op)) => {
+                // Predicate gate hoisted; row iteration avoids per-lane
+                // index math + bounds checks (EXPERIMENTS.md §Perf).
+                let preds_on = self.preds.configured();
+                let preds = &self.preds;
+                self.regs.lane_apply(
+                    waves,
+                    lanes,
+                    i.rd,
+                    i.ra,
+                    i.rb,
+                    |t| !preds_on || preds.active(t),
+                    |a, b| native::fp_lane(op, a, b),
+                );
+            }
+            (Exec::Native, DpOp::Int(op)) => {
+                let prec = self.cfg.alu_precision;
+                let preds_on = self.preds.configured();
+                let preds = &self.preds;
+                self.regs.lane_apply(
+                    waves,
+                    lanes,
+                    i.rd,
+                    i.ra,
+                    i.rb,
+                    |t| !preds_on || preds.active(t),
+                    |a, b| native::int_lane(op, a, b, prec),
+                );
+            }
+            (Exec::Block(_), DpOp::Fp(_)) | (Exec::Block(_), DpOp::Int(_)) => {
+                self.exec_alu_block(pc, i, dp, waves, lanes)?;
+            }
+            (_, DpOp::Dot { .. }) => unreachable!("dot handled in exec_dot"),
+        }
+
+        self.hazards.write_reg(i.rd, start, REG_WINDOW);
+        self.cycles += waves as u64;
+        self.profile.record(i.op.group(), waves as u64);
+        Ok(())
+    }
+
+    /// Block-executor path: gather → one artifact call → scatter.
+    fn exec_alu_block(
+        &mut self,
+        pc: usize,
+        i: &Instr,
+        dp: DpOp,
+        waves: usize,
+        lanes: usize,
+    ) -> Result<(), SimError> {
+        let depth = self.rt_waves();
+        let n = depth * WAVEFRONT_WIDTH;
+        self.scr_a.resize(n, 0);
+        self.scr_b.resize(n, 0);
+        self.scr_old.resize(n, 0);
+        self.scr_out.resize(n, 0);
+        self.scr_mask.resize(n, 0);
+        for w in 0..depth {
+            for sp in 0..WAVEFRONT_WIDTH {
+                let idx = w * WAVEFRONT_WIDTH + sp;
+                self.scr_a[idx] = self.regs.read(w, sp, i.ra);
+                self.scr_b[idx] = self.regs.read(w, sp, i.rb);
+                self.scr_old[idx] = self.regs.read(w, sp, i.rd);
+                self.scr_mask[idx] =
+                    (w < waves && sp < lanes && self.thread_active(w, sp)) as u8;
+            }
+        }
+        let be = match &mut self.exec {
+            Exec::Block(b) => b,
+            Exec::Native => unreachable!(),
+        };
+        let r = match dp {
+            DpOp::Fp(op) => be.fp_block(
+                op,
+                &self.scr_a,
+                &self.scr_b,
+                &self.scr_old,
+                &self.scr_mask,
+                &mut self.scr_out,
+            ),
+            DpOp::Int(op) => be.int_block(
+                op,
+                self.cfg.alu_precision,
+                &self.scr_a,
+                &self.scr_b,
+                &self.scr_old,
+                &self.scr_mask,
+                &mut self.scr_out,
+            ),
+            DpOp::Dot { .. } => unreachable!(),
+        };
+        r.map_err(|m| SimError {
+            pc,
+            message: format!("datapath backend: {m}"),
+        })?;
+        for w in 0..depth {
+            for sp in 0..WAVEFRONT_WIDTH {
+                let idx = w * WAVEFRONT_WIDTH + sp;
+                if self.scr_mask[idx] != 0 {
+                    self.regs.write(w, sp, i.rd, self.scr_out[idx]);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// LOD: 4 lanes per cycle through the shared-memory read ports.
+    fn exec_load(&mut self, pc: usize, i: &Instr) -> Result<(), SimError> {
+        let waves = i.tc.depth.waves(self.rt_waves());
+        let lanes = i.tc.width.lanes();
+        let start = self.cycles;
+        self.hazards.read_reg(pc, i.ra, start);
+        let selected = waves * lanes;
+        let charge = self.shared.load_cycles(selected);
+        let (ra, rd, imm) = (i.ra as usize, i.rd as usize, i.imm_u());
+        let preds_on = self.preds.configured();
+        let preds = &self.preds;
+        let shared = &self.shared;
+        let hazards = &mut self.hazards;
+        self.regs
+            .lane_rows_mut(waves, lanes, |t, row| {
+                let addr = row[ra].wrapping_add(imm);
+                // The port slot is consumed regardless of the predicate;
+                // only the register writeback is gated.
+                hazards.read_mem(pc, addr, start);
+                if preds_on && !preds.active(t) {
+                    return Ok(());
+                }
+                row[rd] = shared.read(addr)?;
+                Ok(())
+            })
+            .map_err(|f| SimError {
+                pc,
+                message: f.to_string(),
+            })?;
+        // rd streams back over `charge` slots; see hazard.rs for the skew
+        // argument behind the window.
+        self.hazards
+            .write_reg(i.rd, start, REG_WINDOW + charge.saturating_sub(waves as u64));
+        self.cycles += charge;
+        self.profile.record(Group::Memory, charge);
+        Ok(())
+    }
+
+    /// STO: 1 (DP) or 2 (QP) lanes per cycle through the write ports.
+    fn exec_store(&mut self, pc: usize, i: &Instr) -> Result<(), SimError> {
+        let waves = i.tc.depth.waves(self.rt_waves());
+        let lanes = i.tc.width.lanes();
+        let start = self.cycles;
+        self.hazards.read_reg(pc, i.ra, start);
+        self.hazards.read_reg(pc, i.rd, start);
+        let selected = waves * lanes;
+        let charge = self.shared.store_cycles(selected);
+        for w in 0..waves {
+            for sp in 0..lanes {
+                if !self.thread_active(w, sp) {
+                    continue; // write_enable gated by thread_active (§3.2)
+                }
+                let addr = self
+                    .regs
+                    .read(w, sp, i.ra)
+                    .wrapping_add(i.imm_u());
+                let v = self.regs.read(w, sp, i.rd);
+                self.shared.write(addr, v).map_err(|f| SimError {
+                    pc,
+                    message: f.to_string(),
+                })?;
+                self.hazards.write_mem(addr, start + charge + MEM_WINDOW);
+            }
+        }
+        self.cycles += charge;
+        self.profile.record(Group::Memory, charge);
+        Ok(())
+    }
+
+    /// DOT / SUM extension core: operands stream one wavefront per cycle,
+    /// the scalar result writes back to thread 0 after the core latency.
+    fn exec_dot(&mut self, pc: usize, i: &Instr) -> Result<(), SimError> {
+        let sum_only = i.op == Opcode::Sum;
+        let waves = i.tc.depth.waves(self.rt_waves());
+        let lanes = i.tc.width.lanes();
+        let start = self.cycles;
+        self.hazards.read_reg(pc, i.ra, start);
+        if !sum_only {
+            self.hazards.read_reg(pc, i.rb, start);
+        }
+
+        let result = match &mut self.exec {
+            Exec::Native => {
+                // Wavefront-major accumulation, matching the Pallas grid.
+                let mut acc = 0f32;
+                for w in 0..waves {
+                    let mut row = 0f32;
+                    for sp in 0..lanes {
+                        if !self.thread_active(w, sp) {
+                            continue;
+                        }
+                        let a = f32::from_bits(self.regs.read(w, sp, i.ra));
+                        let b = if sum_only {
+                            1.0
+                        } else {
+                            f32::from_bits(self.regs.read(w, sp, i.rb))
+                        };
+                        row += a * b;
+                    }
+                    acc += row;
+                }
+                acc
+            }
+            Exec::Block(_) => {
+                let depth = self.rt_waves();
+                let n = depth * WAVEFRONT_WIDTH;
+                self.scr_a.resize(n, 0);
+                self.scr_b.resize(n, 0);
+                self.scr_mask.resize(n, 0);
+                for w in 0..depth {
+                    for sp in 0..WAVEFRONT_WIDTH {
+                        let idx = w * WAVEFRONT_WIDTH + sp;
+                        self.scr_a[idx] = self.regs.read(w, sp, i.ra);
+                        self.scr_b[idx] = if sum_only {
+                            1f32.to_bits()
+                        } else {
+                            self.regs.read(w, sp, i.rb)
+                        };
+                        self.scr_mask[idx] =
+                            (w < waves && sp < lanes && self.thread_active(w, sp)) as u8;
+                    }
+                }
+                let be = match &mut self.exec {
+                    Exec::Block(b) => b,
+                    _ => unreachable!(),
+                };
+                be.dot_block(&self.scr_a, &self.scr_b, &self.scr_mask)
+                    .map_err(|m| SimError {
+                        pc,
+                        message: format!("datapath backend: {m}"),
+                    })?
+            }
+        };
+
+        // Result lands in the leftmost SP (§3.1): thread 0's rd.
+        if self.thread_active(0, 0) {
+            self.regs.write(0, 0, i.rd, result.to_bits());
+        }
+        self.hazards
+            .write_reg(i.rd, start, waves as u64 + DOT_WINDOW);
+        self.cycles += waves as u64;
+        self.profile.record(Group::Extension, waves as u64);
+        Ok(())
+    }
+
+    /// IF/ELSE/ENDIF: per-thread predicate-stack updates, one wavefront
+    /// per cycle (§3.2).
+    fn exec_pred(&mut self, pc: usize, i: &Instr) -> Result<(), SimError> {
+        let waves = i.tc.depth.waves(self.rt_waves());
+        let lanes = i.tc.width.lanes();
+        let start = self.cycles;
+        if i.op == Opcode::If {
+            self.hazards.read_reg(pc, i.ra, start);
+            self.hazards.read_reg(pc, i.rb, start);
+        }
+        for w in 0..waves {
+            for sp in 0..lanes {
+                let t = w * WAVEFRONT_WIDTH + sp;
+                let r = match i.op {
+                    Opcode::If => {
+                        let cc = i.cond().ok_or_else(|| SimError {
+                            pc,
+                            message: "IF without condition code".into(),
+                        })?;
+                        let a = self.regs.read(w, sp, i.ra);
+                        let b = self.regs.read(w, sp, i.rb);
+                        self.preds.push(t, cc.eval(i.ttype, a, b))
+                    }
+                    Opcode::Else => self.preds.invert_top(t),
+                    Opcode::EndIf => self.preds.pop(t),
+                    _ => unreachable!(),
+                };
+                r.map_err(|e| SimError {
+                    pc,
+                    message: e.to_string(),
+                })?;
+            }
+        }
+        self.cycles += waves as u64;
+        self.profile.record(Group::Conditional, waves as u64);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::sim::config::MemoryMode;
+
+    fn machine() -> Machine {
+        let mut cfg = EgpuConfig::default();
+        cfg.dot_core = true;
+        cfg.sfu = true;
+        Machine::new(cfg).unwrap()
+    }
+
+    fn run_src(m: &mut Machine, src: &str) -> RunStats {
+        let p = assemble(src, m.cfg.word_layout()).unwrap();
+        m.load_program(p).unwrap();
+        m.run(10_000_000).unwrap()
+    }
+
+    #[test]
+    fn tdx_and_alu_over_full_space() {
+        let mut m = machine();
+        let stats = run_src(
+            &mut m,
+            "
+            tdx r0
+            add.i32 r1, r0, r0
+            stop
+            ",
+        );
+        // 512 threads = 32 wavefronts per op + stop + drain.
+        assert_eq!(stats.cycles, 32 + 32 + 1 + 8);
+        for t in [0usize, 1, 17, 511] {
+            assert_eq!(m.regs().read_thread(t, 0), t as u32);
+            assert_eq!(m.regs().read_thread(t, 1), (2 * t) as u32);
+        }
+    }
+
+    #[test]
+    fn dynamic_narrowing_cycle_counts() {
+        let mut m = machine();
+        let stats = run_src(
+            &mut m,
+            "
+            [w16,dall]  add.i32 r1, r0, r0   ; 32 cycles
+            [w16,dhalf] add.i32 r1, r0, r0   ; 16
+            [w16,dquart] add.i32 r1, r0, r0  ; 8
+            [w4,d0]     add.i32 r1, r0, r0   ; 1
+            [w1,d0]     add.i32 r1, r0, r0   ; 1 (MCU)
+            stop
+            ",
+        );
+        assert_eq!(stats.cycles, 32 + 16 + 8 + 1 + 1 + 1 + 8);
+    }
+
+    #[test]
+    fn narrowed_op_only_touches_selected_threads() {
+        let mut m = machine();
+        run_src(
+            &mut m,
+            "
+            ldi r1, #7
+            [w4,d0] ldi r1, #9
+            stop
+            ",
+        );
+        assert_eq!(m.regs().read_thread(0, 1), 9);
+        assert_eq!(m.regs().read_thread(3, 1), 9);
+        assert_eq!(m.regs().read_thread(4, 1), 7); // SP4: outside w4
+        assert_eq!(m.regs().read_thread(16, 1), 7); // wave 1: outside d0
+    }
+
+    #[test]
+    fn load_store_roundtrip_and_cycles() {
+        let mut m = machine();
+        for a in 0..512u32 {
+            m.shared_mut().write(a, a * 3).unwrap();
+        }
+        let stats = run_src(
+            &mut m,
+            "
+            tdx r0
+            lod r1, (r0)+0
+            sto r1, (r0)+512
+            stop
+            ",
+        );
+        for a in 0..512u32 {
+            assert_eq!(m.shared().read(512 + a).unwrap(), a * 3);
+        }
+        // tdx 32 + load 512/4 + store 512/1 + stop 1 + drain 8.
+        assert_eq!(stats.cycles, 32 + 128 + 512 + 1 + 8);
+        assert_eq!(stats.hazards, 0, "{:?}", stats.hazard_samples);
+    }
+
+    #[test]
+    fn qp_store_is_twice_as_fast() {
+        let mut dp = Machine::new(EgpuConfig::benchmark(MemoryMode::Dp, false)).unwrap();
+        let mut qp = Machine::new(EgpuConfig::benchmark(MemoryMode::Qp, false)).unwrap();
+        let src = "tdx r0\nsto r0, (r0)+0\nstop\n";
+        let s_dp = run_src(&mut dp, src);
+        let s_qp = run_src(&mut qp, src);
+        assert_eq!(s_dp.cycles - s_qp.cycles, 256); // 512 vs 256 write slots
+    }
+
+    #[test]
+    fn fp_math() {
+        let mut m = machine();
+        run_src(
+            &mut m,
+            "
+            tdx r0
+            ldi r1, #3
+            nop
+            nop
+            nop
+            nop
+            nop
+            nop
+            ; int→fp is host-side: build 2.0f and 0.5f via bit patterns
+            ldi r2, #0x4000          ; high half of 2.0f
+            shl.u32 r2, r2, r3       ; r3 = 0 → shift 0 (placeholder)
+            stop
+            ",
+        );
+        // direct register math check through the datapath instead:
+        let mut m = machine();
+        let two = 2.0f32.to_bits();
+        for t in 0..512 {
+            m.regs.write_thread(t, 1, two);
+            m.regs.write_thread(t, 2, 0.5f32.to_bits());
+        }
+        let p = assemble(
+            "fmul r3, r1, r2\nfadd r4, r3, r1\ninvsqr r5, r1\nstop\n",
+            m.cfg.word_layout(),
+        )
+        .unwrap();
+        m.load_program(p).unwrap();
+        // load_program resets registers — re-seed.
+        for t in 0..512 {
+            m.regs.write_thread(t, 1, two);
+            m.regs.write_thread(t, 2, 0.5f32.to_bits());
+        }
+        m.run(1_000_000).unwrap();
+        assert_eq!(f32::from_bits(m.regs().read_thread(10, 3)), 1.0);
+        assert_eq!(f32::from_bits(m.regs().read_thread(10, 4)), 3.0);
+        assert_eq!(
+            f32::from_bits(m.regs().read_thread(10, 5)),
+            1.0 / 2.0f32.sqrt()
+        );
+    }
+
+    #[test]
+    fn predicated_store_gated() {
+        let mut m = machine();
+        let stats = run_src(
+            &mut m,
+            "
+            tdx r0
+            ldi r1, #8
+            nop
+            nop
+            nop
+            nop
+            nop
+            nop
+            if.lt.i32 r0, r1     ; threads 0..7 active
+            ldi r2, #1
+            else
+            ldi r2, #2
+            endif
+            stop
+            ",
+        );
+        assert_eq!(m.regs().read_thread(3, 2), 1);
+        assert_eq!(m.regs().read_thread(9, 2), 2);
+        assert_eq!(m.regs().read_thread(500, 2), 2);
+        assert_eq!(stats.hazards, 0, "{:?}", stats.hazard_samples);
+    }
+
+    #[test]
+    fn dot_product_reduces_to_thread0() {
+        let mut m = machine();
+        let p = assemble("dot r3, r1, r2\nstop\n", m.cfg.word_layout()).unwrap();
+        m.load_program(p).unwrap();
+        for t in 0..512 {
+            m.regs.write_thread(t, 1, 2.0f32.to_bits());
+            m.regs.write_thread(t, 2, 0.25f32.to_bits());
+        }
+        m.run(1_000).unwrap();
+        assert_eq!(f32::from_bits(m.regs().read_thread(0, 3)), 256.0);
+        // Other threads' r3 untouched.
+        assert_eq!(m.regs().read_thread(1, 3), 0);
+    }
+
+    #[test]
+    fn sum_reduces_ra_only() {
+        let mut m = machine();
+        let p = assemble("[w16,d0] sum r3, r1, r2\nstop\n", m.cfg.word_layout()).unwrap();
+        m.load_program(p).unwrap();
+        for sp in 0..16 {
+            m.regs.write(0, sp, 1, (sp as f32).to_bits());
+            m.regs.write(0, sp, 2, 99.0f32.to_bits()); // must be ignored
+        }
+        m.run(1_000).unwrap();
+        assert_eq!(f32::from_bits(m.regs().read(0, 0, 3)), 120.0);
+    }
+
+    #[test]
+    fn loop_and_branch_flow() {
+        let mut m = machine();
+        let stats = run_src(
+            &mut m,
+            "
+            ldi r1, #0
+            init #5
+            nop
+            nop
+            nop
+            nop
+            nop
+            nop
+        body:
+            [w1,d0] add.i32 r1, r1, r2
+            nop
+            nop
+            nop
+            nop
+            nop
+            loop body
+            stop
+            ",
+        );
+        // body executed 5 times (r2 is 0 so r1 stays 0 — flow test only).
+        assert!(stats.instructions > 30);
+        assert_eq!(stats.hazards, 0, "{:?}", stats.hazard_samples);
+    }
+
+    #[test]
+    fn hazard_detected_for_back_to_back_mcu_ops() {
+        let mut m = machine();
+        let stats = run_src(
+            &mut m,
+            "
+            [w1,d0] ldi r1, #1
+            [w1,d0] add.i32 r2, r1, r1   ; reads r1 one cycle later: hazard
+            stop
+            ",
+        );
+        assert!(stats.hazards > 0);
+        assert_eq!(stats.hazard_samples[0].resource, 1);
+    }
+
+    #[test]
+    fn full_width_ops_hide_hazards() {
+        let mut m = machine();
+        let stats = run_src(
+            &mut m,
+            "
+            ldi r1, #1
+            add.i32 r2, r1, r1   ; 32 issue cycles apart: clean
+            stop
+            ",
+        );
+        assert_eq!(stats.hazards, 0);
+    }
+
+    #[test]
+    fn runtime_thread_narrowing() {
+        let mut m = machine();
+        m.set_threads(128).unwrap(); // 8 wavefronts
+        let p = assemble("add.i32 r1, r0, r0\nstop\n", m.cfg.word_layout()).unwrap();
+        // set_threads survives load_program (reset keeps rt config).
+        m.load_program(p).unwrap();
+        let stats = m.run(1_000).unwrap();
+        assert_eq!(stats.cycles, 8 + 1 + 8);
+        assert!(m.set_threads(1024).is_err());
+        assert!(m.set_threads(100).is_err());
+    }
+
+    #[test]
+    fn dim_x_controls_tdy() {
+        let mut m = machine();
+        m.set_dim_x(32).unwrap();
+        let p = assemble("tdx r0\ntdy r1\nstop\n", m.cfg.word_layout()).unwrap();
+        m.load_program(p).unwrap();
+        m.run(1_000).unwrap();
+        assert_eq!(m.regs().read_thread(37, 0), 5); // 37 % 32
+        assert_eq!(m.regs().read_thread(37, 1), 1); // 37 / 32
+    }
+
+    #[test]
+    fn oob_memory_faults() {
+        let mut m = machine();
+        let p = assemble("ldi r0, #-1\nnop\nnop\nnop\nnop\nnop\nnop\nlod r1, (r0)+0\nstop\n", m.cfg.word_layout())
+            .unwrap();
+        m.load_program(p).unwrap();
+        let e = m.run(100_000).unwrap_err();
+        assert!(e.message.contains("fault"), "{e}");
+    }
+
+    #[test]
+    fn unsupported_ops_rejected_at_load() {
+        let mut cfg = EgpuConfig::default();
+        cfg.dot_core = false;
+        let mut m = Machine::new(cfg).unwrap();
+        let p = assemble("dot r1, r2, r3\nstop\n", m.cfg.word_layout()).unwrap();
+        let e = m.load_program(p).unwrap_err();
+        assert!(e.message.contains("dot-product"));
+    }
+
+    #[test]
+    fn branch_target_validated_at_load() {
+        let mut m = machine();
+        let p = assemble("jmp 40\nstop\n", m.cfg.word_layout()).unwrap();
+        assert!(m.load_program(p).is_err());
+    }
+
+    #[test]
+    fn stop_drains_pipeline() {
+        let mut m = machine();
+        let stats = run_src(&mut m, "stop\n");
+        assert_eq!(stats.cycles, 1 + PIPELINE_DEPTH);
+    }
+
+    #[test]
+    fn cycle_limit_guards_runaway() {
+        let mut m = machine();
+        let p = assemble("top: jmp top\n", m.cfg.word_layout()).unwrap();
+        m.load_program(p).unwrap();
+        assert!(m.run(100).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! The cycle-accurate eGPU simulator (paper §3, §4).
+//!
+//! Structure mirrors the hardware: [`machine::Machine`] is the SM
+//! (sequencer + 16 SPs); [`regfile`], [`shared_mem`] and [`predicate`] are
+//! the M20K-backed state; the datapath proper lives in [`crate::datapath`]
+//! so it can be swapped between native rust and the AOT-compiled XLA
+//! artifacts.
+
+pub mod config;
+pub mod hazard;
+pub mod machine;
+pub mod predicate;
+pub mod profiler;
+pub mod regfile;
+pub mod sequencer;
+pub mod shared_mem;
+
+pub use config::{EgpuConfig, IntAluClass, MemoryMode};
+pub use machine::{Machine, RunStats, SimError, PIPELINE_DEPTH};
+pub use profiler::Profile;

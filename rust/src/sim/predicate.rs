@@ -1,0 +1,226 @@
+//! Per-thread predicate stacks (paper §3.2, Figure 2).
+//!
+//! Each initialized thread has a unique single-bit-wide stack. IF pushes
+//! the thread's condition result, ELSE inverts the top, ENDIF pops. A
+//! thread is active when *every* level of its stack is 1 (nested
+//! conditions AND together). The `thread_active` signal gates register and
+//! shared-memory write enables — it never gates the sequencer, which is
+//! common to all threads.
+//!
+//! Representation: one `u32` mask + depth per thread; level `i` of the
+//! stack is bit `i`. `active` ⇔ the low `depth` bits are all ones.
+
+#[derive(Debug, Clone)]
+pub struct PredicateFile {
+    /// Per-thread stack bits (bit i = nesting level i condition).
+    masks: Vec<u32>,
+    /// Per-thread nesting depth.
+    depths: Vec<u8>,
+    /// Configured maximum nesting (0 = predicates not synthesized).
+    max_levels: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PredError {
+    /// IF nesting exceeded the configured stack depth.
+    Overflow { thread: usize, max_levels: usize },
+    /// ELSE/ENDIF with an empty stack.
+    Underflow { thread: usize },
+    /// Program uses predicates but the configuration omits them.
+    NotConfigured,
+}
+
+impl std::fmt::Display for PredError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PredError::Overflow { thread, max_levels } => write!(
+                f,
+                "thread {thread}: IF nesting exceeds the configured {max_levels} levels"
+            ),
+            PredError::Underflow { thread } => {
+                write!(f, "thread {thread}: ELSE/ENDIF without matching IF")
+            }
+            PredError::NotConfigured => {
+                write!(f, "predicates are not synthesized in this configuration")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PredError {}
+
+impl PredicateFile {
+    pub fn new(threads: usize, max_levels: usize) -> PredicateFile {
+        PredicateFile {
+            masks: vec![0; threads],
+            depths: vec![0; threads],
+            max_levels,
+        }
+    }
+
+    pub fn configured(&self) -> bool {
+        self.max_levels > 0
+    }
+
+    pub fn reset(&mut self) {
+        self.masks.fill(0);
+        self.depths.fill(0);
+    }
+
+    /// Is this thread's write enable asserted?
+    #[inline]
+    pub fn active(&self, thread: usize) -> bool {
+        let d = self.depths[thread] as u32;
+        // All `d` stack levels must be 1.
+        self.masks[thread] & ((1u32 << d) - 1) == (1u32 << d) - 1
+    }
+
+    /// IF: push the thread's condition result.
+    pub fn push(&mut self, thread: usize, cond: bool) -> Result<(), PredError> {
+        if self.max_levels == 0 {
+            return Err(PredError::NotConfigured);
+        }
+        let d = self.depths[thread] as usize;
+        if d >= self.max_levels {
+            return Err(PredError::Overflow {
+                thread,
+                max_levels: self.max_levels,
+            });
+        }
+        if cond {
+            self.masks[thread] |= 1 << d;
+        } else {
+            self.masks[thread] &= !(1 << d);
+        }
+        self.depths[thread] += 1;
+        Ok(())
+    }
+
+    /// ELSE: invert the top of the stack.
+    pub fn invert_top(&mut self, thread: usize) -> Result<(), PredError> {
+        if self.max_levels == 0 {
+            return Err(PredError::NotConfigured);
+        }
+        let d = self.depths[thread] as usize;
+        if d == 0 {
+            return Err(PredError::Underflow { thread });
+        }
+        self.masks[thread] ^= 1 << (d - 1);
+        Ok(())
+    }
+
+    /// ENDIF: pop, returning to the previous nesting level.
+    pub fn pop(&mut self, thread: usize) -> Result<(), PredError> {
+        if self.max_levels == 0 {
+            return Err(PredError::NotConfigured);
+        }
+        if self.depths[thread] == 0 {
+            return Err(PredError::Underflow { thread });
+        }
+        self.depths[thread] -= 1;
+        Ok(())
+    }
+
+    pub fn depth(&self, thread: usize) -> usize {
+        self.depths[thread] as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_stack_is_active() {
+        let p = PredicateFile::new(4, 5);
+        for t in 0..4 {
+            assert!(p.active(t));
+        }
+    }
+
+    #[test]
+    fn if_else_endif_sequence() {
+        let mut p = PredicateFile::new(2, 5);
+        // Thread 0 takes the IF branch, thread 1 the ELSE branch.
+        p.push(0, true).unwrap();
+        p.push(1, false).unwrap();
+        assert!(p.active(0));
+        assert!(!p.active(1));
+        p.invert_top(0).unwrap();
+        p.invert_top(1).unwrap();
+        assert!(!p.active(0));
+        assert!(p.active(1));
+        p.pop(0).unwrap();
+        p.pop(1).unwrap();
+        assert!(p.active(0));
+        assert!(p.active(1));
+    }
+
+    #[test]
+    fn nesting_ands_conditions() {
+        let mut p = PredicateFile::new(1, 5);
+        p.push(0, true).unwrap();
+        p.push(0, false).unwrap(); // inner false
+        assert!(!p.active(0));
+        p.push(0, true).unwrap(); // deeper true cannot re-activate
+        assert!(!p.active(0));
+        p.pop(0).unwrap();
+        p.pop(0).unwrap();
+        assert!(p.active(0));
+        assert_eq!(p.depth(0), 1);
+    }
+
+    #[test]
+    fn inner_if_under_false_outer_stays_inactive_through_else() {
+        // Classic divergence correctness: ELSE of an inner IF nested under
+        // a false outer IF must not activate the thread.
+        let mut p = PredicateFile::new(1, 5);
+        p.push(0, false).unwrap(); // outer false
+        p.push(0, false).unwrap(); // inner (not taken anyway)
+        p.invert_top(0).unwrap(); // inner ELSE → top true, outer still false
+        assert!(!p.active(0));
+    }
+
+    #[test]
+    fn overflow_at_configured_levels() {
+        let mut p = PredicateFile::new(1, 2);
+        p.push(0, true).unwrap();
+        p.push(0, true).unwrap();
+        assert!(matches!(
+            p.push(0, true),
+            Err(PredError::Overflow { max_levels: 2, .. })
+        ));
+    }
+
+    #[test]
+    fn underflow_errors() {
+        let mut p = PredicateFile::new(1, 2);
+        assert!(matches!(p.pop(0), Err(PredError::Underflow { .. })));
+        assert!(matches!(p.invert_top(0), Err(PredError::Underflow { .. })));
+    }
+
+    #[test]
+    fn not_configured_errors() {
+        let mut p = PredicateFile::new(1, 0);
+        assert!(!p.configured());
+        assert_eq!(p.push(0, true), Err(PredError::NotConfigured));
+        // With no predicates every thread is permanently active.
+        assert!(p.active(0));
+    }
+
+    #[test]
+    fn per_thread_independence() {
+        let mut p = PredicateFile::new(512, 8);
+        for t in 0..512 {
+            p.push(t, t % 3 == 0).unwrap();
+        }
+        for t in 0..512 {
+            assert_eq!(p.active(t), t % 3 == 0);
+        }
+        p.reset();
+        for t in 0..512 {
+            assert!(p.active(t));
+            assert_eq!(p.depth(t), 0);
+        }
+    }
+}

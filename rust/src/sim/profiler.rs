@@ -1,0 +1,142 @@
+//! Instruction-mix profiling (paper Figure 6: "proportion of instructions
+//! executed by type").
+
+use std::fmt;
+
+use crate::isa::Group;
+
+/// Dynamic execution profile of one run.
+#[derive(Debug, Clone, Default)]
+pub struct Profile {
+    counts: [u64; Group::ALL.len()],
+    cycles: [u64; Group::ALL.len()],
+}
+
+impl Profile {
+    pub fn new() -> Profile {
+        Profile::default()
+    }
+
+    fn slot(group: Group) -> usize {
+        Group::ALL.iter().position(|g| *g == group).unwrap()
+    }
+
+    #[inline]
+    pub fn record(&mut self, group: Group, cycles: u64) {
+        let s = Self::slot(group);
+        self.counts[s] += 1;
+        self.cycles[s] += cycles;
+    }
+
+    pub fn count(&self, group: Group) -> u64 {
+        self.counts[Self::slot(group)]
+    }
+
+    pub fn cycles(&self, group: Group) -> u64 {
+        self.cycles[Self::slot(group)]
+    }
+
+    pub fn total_instructions(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn total_cycles(&self) -> u64 {
+        self.cycles.iter().sum()
+    }
+
+    /// Proportion of executed instructions in this group (Figure 6 y-axis).
+    pub fn fraction(&self, group: Group) -> f64 {
+        let total = self.total_instructions();
+        if total == 0 {
+            0.0
+        } else {
+            self.count(group) as f64 / total as f64
+        }
+    }
+
+    /// Proportion of cycles spent in this group.
+    pub fn cycle_fraction(&self, group: Group) -> f64 {
+        let total = self.total_cycles();
+        if total == 0 {
+            0.0
+        } else {
+            self.cycles(group) as f64 / total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &Profile) {
+        for i in 0..self.counts.len() {
+            self.counts[i] += other.counts[i];
+            self.cycles[i] += other.cycles[i];
+        }
+    }
+
+    /// Figure 6-style stacked bar, one row per group with a share > 0.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let total = self.total_instructions().max(1);
+        for g in Group::ALL {
+            let n = self.count(g);
+            if n == 0 {
+                continue;
+            }
+            let frac = n as f64 / total as f64;
+            let bar = "#".repeat((frac * 50.0).round() as usize);
+            out.push_str(&format!(
+                "  {:<12} {:>8} ({:5.1}%) {}\n",
+                g.label(),
+                n,
+                frac * 100.0,
+                bar
+            ));
+        }
+        out
+    }
+}
+
+impl fmt::Display for Profile {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_fractions() {
+        let mut p = Profile::new();
+        p.record(Group::FpAlu, 32);
+        p.record(Group::FpAlu, 32);
+        p.record(Group::Memory, 128);
+        p.record(Group::Nop, 1);
+        assert_eq!(p.total_instructions(), 4);
+        assert_eq!(p.total_cycles(), 193);
+        assert_eq!(p.count(Group::FpAlu), 2);
+        assert!((p.fraction(Group::FpAlu) - 0.5).abs() < 1e-12);
+        assert!((p.cycle_fraction(Group::Memory) - 128.0 / 193.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Profile::new();
+        a.record(Group::Control, 1);
+        let mut b = Profile::new();
+        b.record(Group::Control, 2);
+        b.record(Group::Thread, 4);
+        a.merge(&b);
+        assert_eq!(a.count(Group::Control), 2);
+        assert_eq!(a.cycles(Group::Control), 3);
+        assert_eq!(a.count(Group::Thread), 1);
+    }
+
+    #[test]
+    fn render_includes_nonzero_groups_only() {
+        let mut p = Profile::new();
+        p.record(Group::Memory, 10);
+        let r = p.render();
+        assert!(r.contains("Memory"));
+        assert!(!r.contains("FP"));
+    }
+}

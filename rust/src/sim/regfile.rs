@@ -1,0 +1,180 @@
+//! Per-SP thread register memories (paper §5.1).
+//!
+//! In hardware each SP owns M20K-implemented register memories: two read
+//! ports + one write port per cycle in DP mode (two replicated dual-port
+//! blocks), doubled writes in QP mode. A thread's registers live in its
+//! SP's column; thread `t` maps to SP `t % 16`, wavefront `t / 16`.
+//!
+//! Layout: `regs[(wave * 16 + sp) * regs_per_thread + r]` — wavefront-major
+//! so one wavefront's operands are 16 contiguous strides (cache-friendly
+//! for the simulator's wave loop).
+
+use crate::isa::WAVEFRONT_WIDTH;
+
+#[derive(Debug, Clone)]
+pub struct RegFile {
+    regs: Vec<u32>,
+    regs_per_thread: usize,
+}
+
+impl RegFile {
+    pub fn new(threads: usize, regs_per_thread: usize) -> RegFile {
+        RegFile {
+            regs: vec![0; threads * regs_per_thread],
+            regs_per_thread,
+        }
+    }
+
+    pub fn regs_per_thread(&self) -> usize {
+        self.regs_per_thread
+    }
+
+    /// Hot-path row iteration for LOD/STO: visit each selected lane's
+    /// register row (mutable) with its thread index.
+    #[inline]
+    pub fn lane_rows_mut(
+        &mut self,
+        waves: usize,
+        lanes: usize,
+        mut f: impl FnMut(usize, &mut [u32]) -> Result<(), crate::sim::shared_mem::MemFault>,
+    ) -> Result<(), crate::sim::shared_mem::MemFault> {
+        let rpt = self.regs_per_thread;
+        for (w, wave_rows) in self
+            .regs
+            .chunks_exact_mut(rpt * WAVEFRONT_WIDTH)
+            .take(waves)
+            .enumerate()
+        {
+            let base = w * WAVEFRONT_WIDTH;
+            for (sp, row) in wave_rows.chunks_exact_mut(rpt).take(lanes).enumerate() {
+                f(base + sp, row)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Hot-path row iteration: apply `f(ra, rb) -> rd` to every selected
+    /// lane of the first `waves` wavefronts. `chunks_exact_mut` removes
+    /// the per-lane index arithmetic and bounds checks of `read`/`write`
+    /// (the simulator's dominant cost, see EXPERIMENTS.md §Perf).
+    /// `active` is the combined predicate gate per thread index.
+    #[inline]
+    pub fn lane_apply(
+        &mut self,
+        waves: usize,
+        lanes: usize,
+        rd: u8,
+        ra: u8,
+        rb: u8,
+        mut active: impl FnMut(usize) -> bool,
+        mut f: impl FnMut(u32, u32) -> u32,
+    ) {
+        let rpt = self.regs_per_thread;
+        let (rd, ra, rb) = (rd as usize, ra as usize, rb as usize);
+        for (w, wave_rows) in self
+            .regs
+            .chunks_exact_mut(rpt * WAVEFRONT_WIDTH)
+            .take(waves)
+            .enumerate()
+        {
+            let base = w * WAVEFRONT_WIDTH;
+            for (sp, row) in wave_rows.chunks_exact_mut(rpt).take(lanes).enumerate() {
+                if !active(base + sp) {
+                    continue;
+                }
+                row[rd] = f(row[ra], row[rb]);
+            }
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.regs.len() / self.regs_per_thread
+    }
+
+    #[inline]
+    fn idx(&self, wave: usize, sp: usize, r: u8) -> usize {
+        (wave * WAVEFRONT_WIDTH + sp) * self.regs_per_thread + r as usize
+    }
+
+    #[inline]
+    pub fn read(&self, wave: usize, sp: usize, r: u8) -> u32 {
+        self.regs[self.idx(wave, sp, r)]
+    }
+
+    #[inline]
+    pub fn write(&mut self, wave: usize, sp: usize, r: u8, v: u32) {
+        let i = self.idx(wave, sp, r);
+        self.regs[i] = v;
+    }
+
+    #[inline]
+    pub fn read_thread(&self, thread: usize, r: u8) -> u32 {
+        self.regs[thread * self.regs_per_thread + r as usize]
+    }
+
+    #[inline]
+    pub fn write_thread(&mut self, thread: usize, r: u8, v: u32) {
+        self.regs[thread * self.regs_per_thread + r as usize] = v;
+    }
+
+    pub fn reset(&mut self) {
+        self.regs.fill(0);
+    }
+
+    /// All lanes of one register across one wavefront (for block gather).
+    pub fn wave_slice(&self, wave: usize, r: u8, out: &mut [u32; WAVEFRONT_WIDTH]) {
+        for (sp, o) in out.iter_mut().enumerate() {
+            *o = self.read(wave, sp, r);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_to_sp_wave_mapping() {
+        // §3.2: thread t → SP (t mod 16), wavefront (t div 16).
+        let mut rf = RegFile::new(64, 16);
+        rf.write_thread(37, 3, 99);
+        assert_eq!(rf.read(37 / 16, 37 % 16, 3), 99);
+        rf.write(1, 5, 0, 42);
+        assert_eq!(rf.read_thread(21, 0), 42);
+    }
+
+    #[test]
+    fn independent_registers() {
+        let mut rf = RegFile::new(32, 32);
+        for t in 0..32 {
+            for r in 0..32u8 {
+                rf.write_thread(t, r, (t * 100 + r as usize) as u32);
+            }
+        }
+        for t in 0..32 {
+            for r in 0..32u8 {
+                assert_eq!(rf.read_thread(t, r), (t * 100 + r as usize) as u32);
+            }
+        }
+    }
+
+    #[test]
+    fn wave_slice_gathers_lanes() {
+        let mut rf = RegFile::new(32, 16);
+        for sp in 0..16 {
+            rf.write(1, sp, 2, sp as u32 + 100);
+        }
+        let mut out = [0u32; 16];
+        rf.wave_slice(1, 2, &mut out);
+        assert_eq!(out[0], 100);
+        assert_eq!(out[15], 115);
+    }
+
+    #[test]
+    fn reset_zeroes() {
+        let mut rf = RegFile::new(16, 16);
+        rf.write_thread(0, 0, 5);
+        rf.reset();
+        assert_eq!(rf.read_thread(0, 0), 0);
+    }
+}

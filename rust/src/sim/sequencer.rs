@@ -1,0 +1,213 @@
+//! The eGPU sequencer: PC, subroutine stack, hardware loop counters, STOP
+//! flag (paper §3.2: "loop constructs, which are supported in the eGPU
+//! sequencer"; Table 2 Control group).
+
+/// Subroutine-stack depth (JSR nesting). Bitonic sort uses "many
+/// subroutine calls" (§7); 16 levels is generous for the benchmark set.
+pub const CALL_STACK_DEPTH: usize = 16;
+
+/// Hardware loop-counter stack depth (nested INIT/LOOP).
+pub const LOOP_STACK_DEPTH: usize = 8;
+
+#[derive(Debug, Clone)]
+pub struct Sequencer {
+    pub pc: usize,
+    call_stack: Vec<usize>,
+    loop_stack: Vec<u32>,
+    pub stopped: bool,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SeqError {
+    CallStackOverflow,
+    ReturnWithoutCall,
+    LoopWithoutInit,
+    LoopStackOverflow,
+}
+
+impl std::fmt::Display for SeqError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SeqError::CallStackOverflow => write!(f, "JSR nesting exceeds {CALL_STACK_DEPTH}"),
+            SeqError::ReturnWithoutCall => write!(f, "RTS with empty call stack"),
+            SeqError::LoopWithoutInit => write!(f, "LOOP with no active loop counter"),
+            SeqError::LoopStackOverflow => write!(f, "INIT nesting exceeds {LOOP_STACK_DEPTH}"),
+        }
+    }
+}
+
+impl std::error::Error for SeqError {}
+
+impl Default for Sequencer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Sequencer {
+    pub fn new() -> Sequencer {
+        Sequencer {
+            pc: 0,
+            call_stack: Vec::with_capacity(CALL_STACK_DEPTH),
+            loop_stack: Vec::with_capacity(LOOP_STACK_DEPTH),
+            stopped: false,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.pc = 0;
+        self.call_stack.clear();
+        self.loop_stack.clear();
+        self.stopped = false;
+    }
+
+    /// Advance to the next sequential instruction.
+    pub fn step(&mut self) {
+        self.pc += 1;
+    }
+
+    pub fn jmp(&mut self, addr: usize) {
+        self.pc = addr;
+    }
+
+    pub fn jsr(&mut self, addr: usize) -> Result<(), SeqError> {
+        if self.call_stack.len() >= CALL_STACK_DEPTH {
+            return Err(SeqError::CallStackOverflow);
+        }
+        self.call_stack.push(self.pc + 1);
+        self.pc = addr;
+        Ok(())
+    }
+
+    pub fn rts(&mut self) -> Result<(), SeqError> {
+        match self.call_stack.pop() {
+            Some(ret) => {
+                self.pc = ret;
+                Ok(())
+            }
+            None => Err(SeqError::ReturnWithoutCall),
+        }
+    }
+
+    /// INIT: push a loop counter (the number of LOOP-taken iterations).
+    pub fn init(&mut self, count: u32) -> Result<(), SeqError> {
+        if self.loop_stack.len() >= LOOP_STACK_DEPTH {
+            return Err(SeqError::LoopStackOverflow);
+        }
+        self.loop_stack.push(count);
+        Ok(())
+    }
+
+    /// LOOP: decrement the innermost counter; jump back while non-zero,
+    /// pop and fall through at zero.
+    pub fn loop_dec(&mut self, addr: usize) -> Result<(), SeqError> {
+        match self.loop_stack.last_mut() {
+            Some(c) => {
+                if *c > 0 {
+                    *c -= 1;
+                }
+                if *c > 0 {
+                    self.pc = addr;
+                } else {
+                    self.loop_stack.pop();
+                    self.pc += 1;
+                }
+                Ok(())
+            }
+            None => Err(SeqError::LoopWithoutInit),
+        }
+    }
+
+    pub fn stop(&mut self) {
+        self.stopped = true;
+    }
+
+    pub fn call_depth(&self) -> usize {
+        self.call_stack.len()
+    }
+
+    pub fn loop_depth(&self) -> usize {
+        self.loop_stack.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loop_runs_exact_iterations() {
+        // INIT #4; body at 1; LOOP 1 → body runs 4 times.
+        let mut s = Sequencer::new();
+        s.init(4).unwrap();
+        s.pc = 1;
+        let mut body_runs = 0;
+        loop {
+            body_runs += 1; // "execute" body at pc 1
+            s.pc = 2; // arrive at the LOOP instruction
+            s.loop_dec(1).unwrap();
+            if s.pc != 1 {
+                break;
+            }
+        }
+        assert_eq!(body_runs, 4);
+        assert_eq!(s.pc, 3);
+        assert_eq!(s.loop_depth(), 0);
+    }
+
+    #[test]
+    fn nested_loops() {
+        let mut s = Sequencer::new();
+        s.init(3).unwrap();
+        s.init(2).unwrap();
+        assert_eq!(s.loop_depth(), 2);
+        // Inner loop consumes its counter first.
+        s.pc = 5;
+        s.loop_dec(4).unwrap(); // 2→1, taken
+        assert_eq!(s.pc, 4);
+        s.pc = 5;
+        s.loop_dec(4).unwrap(); // 1→0, fall through + pop
+        assert_eq!(s.pc, 6);
+        assert_eq!(s.loop_depth(), 1);
+    }
+
+    #[test]
+    fn jsr_rts_roundtrip() {
+        let mut s = Sequencer::new();
+        s.pc = 10;
+        s.jsr(100).unwrap();
+        assert_eq!(s.pc, 100);
+        s.jsr(200).unwrap();
+        assert_eq!(s.call_depth(), 2);
+        s.rts().unwrap();
+        assert_eq!(s.pc, 101);
+        s.rts().unwrap();
+        assert_eq!(s.pc, 11);
+        assert_eq!(s.rts(), Err(SeqError::ReturnWithoutCall));
+    }
+
+    #[test]
+    fn call_stack_overflow() {
+        let mut s = Sequencer::new();
+        for _ in 0..CALL_STACK_DEPTH {
+            s.jsr(0).unwrap();
+        }
+        assert_eq!(s.jsr(0), Err(SeqError::CallStackOverflow));
+    }
+
+    #[test]
+    fn loop_without_init_errors() {
+        let mut s = Sequencer::new();
+        assert_eq!(s.loop_dec(0), Err(SeqError::LoopWithoutInit));
+    }
+
+    #[test]
+    fn init_zero_falls_through_immediately() {
+        let mut s = Sequencer::new();
+        s.init(0).unwrap();
+        s.pc = 3;
+        s.loop_dec(1).unwrap();
+        assert_eq!(s.pc, 4);
+        assert_eq!(s.loop_depth(), 0);
+    }
+}

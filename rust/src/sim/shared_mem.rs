@@ -1,0 +1,177 @@
+//! Shared memory with DP/QP port arbitration (paper §3, §5.1).
+//!
+//! The shared memory is a single local data memory: four read ports and
+//! one (DP) or two (QP) write ports *per clock cycle*. Loads and stores
+//! are therefore multi-cycle over the selected thread subset — this is the
+//! dominant cycle cost in every benchmark (§7: "the memory operations take
+//! the majority of all cycles").
+//!
+//! Functional state is a flat word array; the port model provides the
+//! cycle counts the machine charges.
+
+use super::config::MemoryMode;
+
+#[derive(Debug, Clone)]
+pub struct SharedMem {
+    words: Vec<u32>,
+    mode: MemoryMode,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemFault {
+    pub addr: u32,
+    pub size: usize,
+    pub is_store: bool,
+}
+
+impl std::fmt::Display for MemFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "shared-memory {} fault: address {} outside {} words",
+            if self.is_store { "store" } else { "load" },
+            self.addr,
+            self.size
+        )
+    }
+}
+
+impl std::error::Error for MemFault {}
+
+impl SharedMem {
+    pub fn new(words: usize, mode: MemoryMode) -> SharedMem {
+        SharedMem {
+            words: vec![0; words],
+            mode,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn mode(&self) -> MemoryMode {
+        self.mode
+    }
+
+    #[inline]
+    pub fn read(&self, addr: u32) -> Result<u32, MemFault> {
+        self.words.get(addr as usize).copied().ok_or(MemFault {
+            addr,
+            size: self.words.len(),
+            is_store: false,
+        })
+    }
+
+    #[inline]
+    pub fn write(&mut self, addr: u32, value: u32) -> Result<(), MemFault> {
+        let size = self.words.len();
+        match self.words.get_mut(addr as usize) {
+            Some(w) => {
+                *w = value;
+                Ok(())
+            }
+            None => Err(MemFault {
+                addr,
+                size,
+                is_store: true,
+            }),
+        }
+    }
+
+    /// Cycles to read `lanes` values (4 read ports/cycle, both modes).
+    pub fn load_cycles(&self, lanes: usize) -> u64 {
+        (lanes as u64).div_ceil(self.mode.read_ports() as u64).max(1)
+    }
+
+    /// Cycles to write `lanes` values (1 DP / 2 QP write ports).
+    pub fn store_cycles(&self, lanes: usize) -> u64 {
+        (lanes as u64).div_ceil(self.mode.write_ports() as u64).max(1)
+    }
+
+    /// Bulk host access (data is loaded/unloaded externally, §2: "the
+    /// loading and unloading of which has to be managed externally").
+    pub fn write_block(&mut self, base: usize, data: &[u32]) {
+        self.words[base..base + data.len()].copy_from_slice(data);
+    }
+
+    pub fn read_block(&self, base: usize, len: usize) -> &[u32] {
+        &self.words[base..base + len]
+    }
+
+    pub fn fill(&mut self, value: u32) {
+        self.words.fill(value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rw_roundtrip() {
+        let mut m = SharedMem::new(64, MemoryMode::Dp);
+        m.write(10, 0xDEADBEEF).unwrap();
+        assert_eq!(m.read(10).unwrap(), 0xDEADBEEF);
+        assert_eq!(m.read(11).unwrap(), 0);
+    }
+
+    #[test]
+    fn oob_faults() {
+        let mut m = SharedMem::new(16, MemoryMode::Dp);
+        assert!(m.read(16).is_err());
+        assert!(m.write(100, 1).is_err());
+        let f = m.read(16).unwrap_err();
+        assert_eq!(f.addr, 16);
+        assert!(!f.is_store);
+    }
+
+    #[test]
+    fn dp_port_cycle_model() {
+        // §7 transpose analysis: "n² cycles to write ... and 1/4th of
+        // those cycles to initially read" → 4 reads/cycle, 1 write/cycle.
+        let m = SharedMem::new(1024, MemoryMode::Dp);
+        assert_eq!(m.load_cycles(16), 4);
+        assert_eq!(m.store_cycles(16), 16);
+        assert_eq!(m.load_cycles(512), 128);
+        assert_eq!(m.store_cycles(512), 512);
+    }
+
+    #[test]
+    fn qp_doubles_write_bandwidth() {
+        // §3: "The QP memory will double the write bandwidth".
+        let m = SharedMem::new(1024, MemoryMode::Qp);
+        assert_eq!(m.load_cycles(16), 4); // reads unchanged
+        assert_eq!(m.store_cycles(16), 8);
+        assert_eq!(m.store_cycles(512), 256);
+    }
+
+    #[test]
+    fn subset_write_is_16x_faster() {
+        // §4: "Writing these results into shared memory using subset
+        // write can be 16x faster than using the generic write."
+        let m = SharedMem::new(1024, MemoryMode::Dp);
+        assert_eq!(m.store_cycles(16) / m.store_cycles(1), 16);
+    }
+
+    #[test]
+    fn minimum_one_cycle() {
+        let m = SharedMem::new(16, MemoryMode::Dp);
+        assert_eq!(m.load_cycles(1), 1);
+        assert_eq!(m.load_cycles(3), 1);
+        assert_eq!(m.store_cycles(1), 1);
+    }
+
+    #[test]
+    fn block_io() {
+        let mut m = SharedMem::new(32, MemoryMode::Dp);
+        m.write_block(4, &[1, 2, 3]);
+        assert_eq!(m.read_block(4, 3), &[1, 2, 3]);
+        m.fill(7);
+        assert_eq!(m.read(0).unwrap(), 7);
+    }
+}

@@ -1,0 +1,298 @@
+//! Property-based tests over the assembler, ISA codec, scheduler and
+//! simulator (hand-rolled generators — proptest is unavailable offline;
+//! `harness::Rng` provides seeded, reproducible randomness).
+//!
+//! Invariants exercised with hundreds of random cases each:
+//!  - instruction-word encode/decode is a bijection on valid encodings
+//!  - disassemble → reassemble reproduces identical words
+//!  - Sched-generated random programs are hazard-free and their cycle
+//!    estimate equals the simulator's count exactly
+//!  - simulation is deterministic
+//!  - dynamic narrowing touches exactly the selected thread prefix
+//!  - random configurations either validate and boot, or error cleanly
+
+use egpu::asm::{assemble, disassemble};
+use egpu::harness::Rng;
+use egpu::isa::{DepthSel, Instr, Opcode, TType, ThreadCtrl, WidthSel, WordLayout};
+use egpu::kernels::sched::Sched;
+use egpu::sim::{EgpuConfig, Machine, MemoryMode, PIPELINE_DEPTH};
+
+fn random_tc(rng: &mut Rng) -> ThreadCtrl {
+    let w = *rng.choose(&[WidthSel::All16, WidthSel::Quarter4, WidthSel::Sp0]);
+    let d = *rng.choose(&[
+        DepthSel::Wave0,
+        DepthSel::All,
+        DepthSel::Half,
+        DepthSel::Quarter,
+    ]);
+    ThreadCtrl::new(w, d)
+}
+
+#[test]
+fn word_encode_decode_bijection() {
+    let mut rng = Rng::new(0x1337);
+    for regs in [16usize, 32, 64] {
+        let layout = WordLayout::for_regs(regs);
+        for _ in 0..2000 {
+            let op = Opcode::from_bits(rng.below(Opcode::COUNT) as u8).unwrap();
+            let mut i = Instr::new(op);
+            i.tc = random_tc(&mut rng);
+            i.ttype = *rng.choose(&[TType::Int, TType::Uint, TType::Fp32]);
+            let maxr = layout.max_reg() as usize;
+            i.rd = rng.below(maxr + 1) as u8;
+            i.ra = rng.below(maxr + 1) as u8;
+            i.rb = rng.below(maxr + 1) as u8;
+            // IF stores a condition code in imm[2:0]; keep it valid.
+            i.imm = if op == Opcode::If {
+                rng.below(6) as u16
+            } else {
+                rng.next_u32() as u16
+            };
+            let w = layout.encode(&i);
+            let d = layout.decode(w).unwrap_or_else(|e| panic!("{op:?}: {e:?}"));
+            assert_eq!(d, i, "layout {regs} regs");
+        }
+    }
+}
+
+#[test]
+fn disassemble_reassemble_fixpoint() {
+    let mut rng = Rng::new(0xD15A);
+    let layout = WordLayout::for_regs(32);
+    for _ in 0..200 {
+        let src = random_program_source(&mut rng, 30);
+        let p = assemble(&src, layout).unwrap_or_else(|e| panic!("{e}\n{src}"));
+        // The listing form (`disassemble`) prefixes addresses for humans;
+        // strip them for the reassembly fixpoint.
+        let listing = disassemble(&p.words, layout).unwrap();
+        let dis: String = listing
+            .lines()
+            .map(|l| {
+                let t = l.trim_start();
+                let t = t.split_once(':').map(|(_, rest)| rest).unwrap_or(t);
+                format!("{}\n", t.trim())
+            })
+            .collect();
+        let p2 = assemble(&dis, layout).unwrap_or_else(|e| panic!("{e}\n{dis}"));
+        assert_eq!(p.words, p2.words, "\noriginal:\n{src}\ndisasm:\n{dis}");
+    }
+}
+
+/// Random straight-line source: ALU ops over r0..r7, loads/stores through
+/// the thread-id register, random thread-space annotations. Uses Sched so
+/// the program is hazard-free by construction.
+fn random_sched(rng: &mut Rng, threads: usize, len: usize) -> Sched {
+    let mut s = Sched::new("prop", threads, WordLayout::for_regs(32), MemoryMode::Dp);
+    s.op("tdx r0");
+    for _ in 0..len {
+        let tc = random_tc(rng);
+        let rd = 1 + rng.below(7);
+        let ra = rng.below(8);
+        let rb = rng.below(8);
+        let line = match rng.below(10) {
+            0 => format!("{tc} add.i32 r{rd}, r{ra}, r{rb}"),
+            1 => format!("{tc} sub.u32 r{rd}, r{ra}, r{rb}"),
+            2 => format!("{tc} xor r{rd}, r{ra}, r{rb}"),
+            3 => format!("{tc} max.i32 r{rd}, r{ra}, r{rb}"),
+            4 => format!("{tc} fadd r{rd}, r{ra}, r{rb}"),
+            5 => format!("{tc} fmul r{rd}, r{ra}, r{rb}"),
+            6 => format!("{tc} ldi r{rd}, #{}", rng.range_i64(-100, 100)),
+            7 => format!("{tc} shr.u32 r{rd}, r{ra}, r{rb}"),
+            8 => format!("{tc} lod r{rd}, (r0)+{}", rng.below(64) * 8),
+            _ => format!("{tc} sto r{rd}, (r0)+{}", 2048 + rng.below(64) * 8),
+        };
+        s.op(line);
+    }
+    s
+}
+
+fn random_program_source(rng: &mut Rng, len: usize) -> String {
+    let mut s = random_sched(rng, 512, len);
+    s.fence();
+    s.finish()
+}
+
+#[test]
+fn sched_programs_hazard_free_and_estimate_exact() {
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..150 {
+        let threads = *rng.choose(&[16usize, 64, 256, 512]);
+        let len = 5 + rng.below(40);
+        let mut s = random_sched(&mut rng, threads, len);
+        let est = s.estimated_cycles() + 1; // + stop
+        let src = s.finish();
+
+        let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+        let mut m = Machine::new(cfg.clone()).unwrap();
+        let p = assemble(&src, cfg.word_layout()).unwrap();
+        m.load_program(p).unwrap();
+        m.set_threads(threads).unwrap();
+        let stats = m.run(10_000_000).unwrap();
+        assert_eq!(
+            stats.hazards, 0,
+            "case {case} (threads {threads}): {:?}\n{src}",
+            stats.hazard_samples
+        );
+        assert_eq!(
+            stats.cycles,
+            est + PIPELINE_DEPTH,
+            "case {case}: estimate mismatch\n{src}"
+        );
+    }
+}
+
+#[test]
+fn simulation_deterministic() {
+    let mut rng = Rng::new(0xDE7);
+    for _ in 0..30 {
+        let src = random_program_source(&mut rng, 25);
+        let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+        let run = || {
+            let mut m = Machine::new(cfg.clone()).unwrap();
+            let p = assemble(&src, cfg.word_layout()).unwrap();
+            m.load_program(p).unwrap();
+            m.run(10_000_000).unwrap();
+            let regs: Vec<u32> = (0..512)
+                .flat_map(|t| (0..8u8).map(move |r| (t, r)))
+                .map(|(t, r)| m.regs().read_thread(t, r))
+                .collect();
+            let mem: Vec<u32> = m.shared().read_block(2048, 1024).to_vec();
+            (m.cycles(), regs, mem)
+        };
+        assert_eq!(run(), run(), "\n{src}");
+    }
+}
+
+#[test]
+fn narrowing_touches_exactly_the_selected_prefix() {
+    let mut rng = Rng::new(0xA11);
+    let cfg = EgpuConfig::default();
+    for _ in 0..200 {
+        let tc = random_tc(&mut rng);
+        let src = format!("ldi r1, #7\n{tc} ldi r1, #9\nstop\n");
+        let mut m = Machine::new(cfg.clone()).unwrap();
+        let p = assemble(&src, cfg.word_layout()).unwrap();
+        m.load_program(p).unwrap();
+        m.run(10_000).unwrap();
+        let total_waves = cfg.wavefronts();
+        for wave in 0..total_waves {
+            for sp in 0..16 {
+                let want = if tc.selects(sp, wave, total_waves) { 9 } else { 7 };
+                assert_eq!(
+                    m.regs().read_thread(wave * 16 + sp, 1),
+                    want,
+                    "{tc} wave {wave} sp {sp}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stores_gate_on_selection_loads_charge_ports() {
+    // Cycle-charge property: for random subsets, LOD charges
+    // ceil(selected/4) and STO charges ceil(selected/wports).
+    let mut rng = Rng::new(0xC4A6);
+    for _ in 0..100 {
+        let tc = random_tc(&mut rng);
+        let memory = *rng.choose(&[MemoryMode::Dp, MemoryMode::Qp]);
+        let cfg = EgpuConfig::benchmark(memory, false);
+        let mut m = Machine::new(cfg.clone()).unwrap();
+        let src = format!("tdx r0\n{tc} lod r1, (r0)+0\n{tc} sto r1, (r0)+1024\nstop\n");
+        let p = assemble(&src, cfg.word_layout()).unwrap();
+        m.load_program(p).unwrap();
+        let stats = m.run(100_000).unwrap();
+        let waves = tc.depth.waves(cfg.wavefronts());
+        let sel = (waves * tc.width.lanes()) as u64;
+        let expect = 32 // tdx
+            + sel.div_ceil(4).max(1)
+            + sel.div_ceil(memory.write_ports() as u64).max(1)
+            + 1 // stop
+            + PIPELINE_DEPTH;
+        assert_eq!(stats.cycles, expect, "{tc} {memory:?}");
+    }
+}
+
+#[test]
+fn random_configs_validate_or_reject_consistently() {
+    let mut rng = Rng::new(0xCF6);
+    for _ in 0..500 {
+        let mut cfg = EgpuConfig::default();
+        cfg.threads = rng.below(80) * 16; // 0 invalid, rest valid
+        cfg.regs_per_thread = *rng.choose(&[8usize, 16, 32, 48, 64]);
+        cfg.shared_kb = rng.below(600);
+        cfg.alu_precision = *rng.choose(&[8u8, 16, 32]);
+        cfg.shift_precision = *rng.choose(&[1u8, 4, 16, 32]);
+        cfg.predicate_levels = rng.below(40);
+        let valid = cfg.validate().is_ok();
+        let expect = cfg.threads > 0
+            && cfg.threads % 16 == 0
+            && matches!(cfg.regs_per_thread, 16 | 32 | 64)
+            && (2..=512).contains(&cfg.shared_kb)
+            && matches!(cfg.alu_precision, 16 | 32)
+            && matches!(cfg.shift_precision, 1 | 16 | 32)
+            && cfg.shift_precision <= cfg.alu_precision
+            && cfg.predicate_levels <= 32;
+        assert_eq!(valid, expect, "{cfg:?}");
+        // Machines only boot from valid configurations.
+        assert_eq!(Machine::new(cfg.clone()).is_ok(), valid);
+    }
+}
+
+#[test]
+fn predicate_nesting_random_walks() {
+    // Random IF/ELSE/ENDIF walks never corrupt non-predicated registers
+    // and always restore full-width execution after the stack empties.
+    let mut rng = Rng::new(0x9E57);
+    let mut cfg = EgpuConfig::default();
+    cfg.predicate_levels = 8;
+    for _ in 0..50 {
+        let mut src = String::from("tdx r0\nldi r1, #256\nldi r2, #0\n");
+        let mut depth = 0usize;
+        for _ in 0..rng.below(12) {
+            match rng.below(3) {
+                0 if depth < 8 => {
+                    src.push_str("if.lt.u32 r0, r1\n");
+                    depth += 1;
+                }
+                1 if depth > 0 => src.push_str("else\n"),
+                _ if depth > 0 => {
+                    src.push_str("endif\n");
+                    depth -= 1;
+                }
+                _ => src.push_str("nop\n"),
+            }
+        }
+        for _ in 0..depth {
+            src.push_str("endif\n");
+        }
+        // After all predicates pop, a full-width op must hit every thread.
+        src.push_str("ldi r3, #42\nstop\n");
+        let mut m = Machine::new(cfg.clone()).unwrap();
+        let p = assemble(&src, cfg.word_layout()).unwrap();
+        m.load_program(p).unwrap();
+        m.run(100_000).unwrap_or_else(|e| panic!("{e}\n{src}"));
+        for t in [0usize, 255, 256, 511] {
+            assert_eq!(m.regs().read_thread(t, 3), 42, "thread {t}\n{src}");
+        }
+    }
+}
+
+#[test]
+fn unbalanced_predicates_fault() {
+    let mut cfg = EgpuConfig::default();
+    cfg.predicate_levels = 2;
+    let layout = cfg.word_layout();
+    // Overflow: 3 nested IFs on a 2-level stack.
+    let mut m = Machine::new(cfg.clone()).unwrap();
+    let src = "tdx r0\nldi r1, #9\nnop\nnop\nnop\nnop\nnop\nnop\n\
+               if.lt.u32 r0, r1\nif.lt.u32 r0, r1\nif.lt.u32 r0, r1\nstop\n";
+    let p = assemble(src, layout).unwrap();
+    m.load_program(p).unwrap();
+    assert!(m.run(10_000).is_err(), "predicate overflow must fault");
+    // Underflow: ENDIF with empty stack.
+    let mut m = Machine::new(cfg).unwrap();
+    let p = assemble("endif\nstop\n", layout).unwrap();
+    m.load_program(p).unwrap();
+    assert!(m.run(10_000).is_err(), "predicate underflow must fault");
+}

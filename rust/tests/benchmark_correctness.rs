@@ -1,0 +1,188 @@
+//! Cross-module correctness: every generated benchmark kernel, on every
+//! memory mode, against its oracle — plus one kernel driven end-to-end
+//! through the XLA datapath to prove the benchmark programs themselves
+//! (not just single ops) are backend-independent.
+
+use egpu::datapath::xla::XlaDatapath;
+use egpu::harness::Rng;
+use egpu::kernels::{bitonic, f32_bits, fft, mmm, reduction, transpose};
+use egpu::runtime::default_artifacts_dir;
+use egpu::sim::{EgpuConfig, Machine, MemoryMode};
+
+#[test]
+fn reduction_all_sizes_both_modes() {
+    // 32/64/128 are the paper's dims; deeper trees need prefixes the
+    // Table 3 depth selectors cannot express (documented in reduction.rs).
+    let mut rng = Rng::new(1);
+    for n in [32usize, 64, 128] {
+        let data: Vec<f32> = (0..n).map(|_| rng.f32_in(-8.0, 8.0)).collect();
+        let want: f32 = data.iter().sum();
+        for memory in [MemoryMode::Dp, MemoryMode::Qp] {
+            let cfg = EgpuConfig::benchmark(memory, false);
+            let (stats, m) = reduction::reduction(n)
+                .run(&cfg, &[(0, f32_bits(&data))])
+                .unwrap_or_else(|e| panic!("{n} {memory:?}: {e}"));
+            let got = f32::from_bits(m.shared().read(n as u32).unwrap());
+            assert!(
+                (got - want).abs() < want.abs() * 1e-4 + 1e-2,
+                "{n} {memory:?}: {got} vs {want}"
+            );
+            assert_eq!(stats.hazards, 0, "{n} {memory:?}");
+        }
+    }
+}
+
+#[test]
+fn reduction_dot_matches_tree() {
+    let mut rng = Rng::new(2);
+    for n in [32usize, 64, 128] {
+        let data: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+        let cfg = EgpuConfig::benchmark(MemoryMode::Dp, true);
+        let (_, mt) = reduction::reduction(n).run(&cfg, &[(0, f32_bits(&data))]).unwrap();
+        let (_, md) = reduction::reduction_dot(n).run(&cfg, &[(0, f32_bits(&data))]).unwrap();
+        let t = f32::from_bits(mt.shared().read(n as u32).unwrap());
+        let d = f32::from_bits(md.shared().read(n as u32).unwrap());
+        assert!((t - d).abs() < t.abs() * 1e-4 + 1e-3, "n={n}: tree {t} dot {d}");
+    }
+}
+
+#[test]
+fn transpose_is_an_involution() {
+    // transpose(transpose(A)) == A, using the machine itself both times.
+    let n = 64;
+    let mut rng = Rng::new(3);
+    let data: Vec<u32> = (0..n * n).map(|_| rng.next_u32()).collect();
+    let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+    let (_, m1) = transpose::transpose(n).run(&cfg, &[(0, data.clone())]).unwrap();
+    let once = m1.shared().read_block(n * n, n * n).to_vec();
+    let (_, m2) = transpose::transpose(n).run(&cfg, &[(0, once)]).unwrap();
+    assert_eq!(m2.shared().read_block(n * n, n * n), &data[..]);
+}
+
+#[test]
+fn mmm_identity_and_associativity_spot_checks() {
+    let n = 32;
+    let cfg = mmm::config(n, MemoryMode::Dp, false);
+    // A * I == A.
+    let mut rng = Rng::new(4);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+    let mut ident = vec![0f32; n * n];
+    for i in 0..n {
+        ident[i * n + i] = 1.0;
+    }
+    let (_, m) = mmm::mmm(n)
+        .run(&cfg, &[(0, f32_bits(&a)), (n * n, f32_bits(&ident))])
+        .unwrap();
+    for (i, want) in a.iter().enumerate() {
+        let got = f32::from_bits(m.shared().read((2 * n * n + i) as u32).unwrap());
+        assert!((got - want).abs() < 1e-4, "A*I [{i}]: {got} vs {want}");
+    }
+}
+
+#[test]
+fn bitonic_sorts_duplicates_and_extremes() {
+    let n = 128;
+    let cfg = EgpuConfig::benchmark_predicated(MemoryMode::Dp);
+    let mut rng = Rng::new(5);
+    let mut data: Vec<u32> = (0..n).map(|_| rng.below(4) as u32 * 1000).collect();
+    data[0] = u32::MAX;
+    data[n - 1] = 0;
+    data[7] = u32::MAX;
+    let (_, m) = bitonic::bitonic(n).run(&cfg, &[(0, data.clone())]).unwrap();
+    assert_eq!(m.shared().read_block(0, n), &bitonic::oracle(&data)[..]);
+}
+
+#[test]
+fn fft_linearity() {
+    // FFT(a + b) == FFT(a) + FFT(b), each computed on the machine.
+    let n = 64;
+    let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+    let mut rng = Rng::new(6);
+    let a: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    let b: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    let sum: Vec<f32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+    let zeros = vec![0f32; n];
+    let run = |re: &[f32]| -> Vec<f32> {
+        let (_, m) = fft::fft(n).run(&cfg, &fft::shared_init(re, &zeros)).unwrap();
+        (0..2 * n)
+            .map(|i| f32::from_bits(m.shared().read(i as u32).unwrap()))
+            .collect()
+    };
+    let fa = run(&a);
+    let fb = run(&b);
+    let fsum = run(&sum);
+    for i in 0..2 * n {
+        assert!(
+            (fsum[i] - (fa[i] + fb[i])).abs() < 1e-2,
+            "linearity at {i}: {} vs {}",
+            fsum[i],
+            fa[i] + fb[i]
+        );
+    }
+}
+
+#[test]
+fn fft_impulse_is_flat() {
+    // FFT of a unit impulse = all-ones spectrum.
+    let n = 32;
+    let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+    let mut re = vec![0f32; n];
+    re[0] = 1.0;
+    let im = vec![0f32; n];
+    let (_, m) = fft::fft(n).run(&cfg, &fft::shared_init(&re, &im)).unwrap();
+    for k in 0..n {
+        let gr = f32::from_bits(m.shared().read(k as u32).unwrap());
+        let gi = f32::from_bits(m.shared().read((n + k) as u32).unwrap());
+        assert!((gr - 1.0).abs() < 1e-4 && gi.abs() < 1e-4, "bin {k}: ({gr},{gi})");
+    }
+}
+
+#[test]
+fn full_benchmark_program_identical_on_xla_backend() {
+    // The equivalence test (datapath_equivalence.rs) covers single ops;
+    // this runs a whole generated benchmark through PJRT.
+    if !default_artifacts_dir().join("opmap.json").is_file() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let n = 64;
+    let mut rng = Rng::new(7);
+    let data: Vec<f32> = (0..n).map(|_| rng.f32_in(0.5, 2.0)).collect();
+    let cfg = EgpuConfig::benchmark(MemoryMode::Dp, true);
+    let kernel = reduction::reduction(n);
+    let prog = kernel.assemble(&cfg).unwrap();
+
+    let mut native = Machine::new(cfg.clone()).unwrap();
+    let be = XlaDatapath::new(default_artifacts_dir(), cfg.wavefronts()).unwrap();
+    let mut xla = Machine::with_backend(cfg.clone(), Some(Box::new(be))).unwrap();
+    for m in [&mut native, &mut xla] {
+        m.load_program(prog.clone()).unwrap();
+        m.set_threads(kernel.threads).unwrap();
+        m.set_dim_x(kernel.dim_x).unwrap();
+        m.shared_mut().write_block(0, &f32_bits(&data));
+        m.run(1_000_000).unwrap();
+    }
+    assert_eq!(native.cycles(), xla.cycles());
+    // The reduction tree is pure fadd over identical operands in identical
+    // order → bit-exact between backends.
+    assert_eq!(
+        native.shared().read(n as u32).unwrap(),
+        xla.shared().read(n as u32).unwrap(),
+        "reduction result diverges between datapaths"
+    );
+}
+
+#[test]
+fn kernels_report_honest_thread_counts() {
+    // Kernel.threads must be runnable on the benchmark configurations.
+    for k in [
+        reduction::reduction(128),
+        transpose::transpose(64),
+        mmm::mmm(64),
+        bitonic::bitonic(256),
+        fft::fft(256),
+    ] {
+        assert!(k.threads >= 16 && k.threads % 16 == 0 && k.threads <= 512, "{}", k.name);
+        assert!(!k.asm.is_empty());
+    }
+}

@@ -1,0 +1,368 @@
+//! Paper-vs-model assertions for every table in the evaluation:
+//! Table 1 (PPA), Tables 4/5 (fitting results), Table 6 (integer ALU),
+//! Tables 7/8 (benchmark cycles, via the suite), and the §7 headline
+//! claims (OOM vs Nios, FlexGrip ~31x, QP trade-offs, dot-core gains,
+//! 4.7% bus overhead).
+
+use egpu::baseline::flexgrip;
+use egpu::baseline::nios::{NIOS_ALMS, NIOS_DSPS, NIOS_MHZ};
+use egpu::harness::{paper_cycles, suite, within_band, Variant};
+use egpu::model::alu_model::{alu_cost, TABLE6};
+use egpu::model::cost::{self, normalized_cost, ppa_metric, TABLE1_PUBLISHED};
+use egpu::model::frequency::FrequencyReport;
+use egpu::model::resources::ResourceReport;
+use egpu::sim::{EgpuConfig, IntAluClass, MemoryMode};
+
+// -------------------------------------------------------------------
+// Table 1
+// -------------------------------------------------------------------
+
+#[test]
+fn table1_ppa_orders_of_magnitude() {
+    // §2: "an power-performance-area (PPA) metric which is one or two
+    // orders of magnitude (OOM) smaller than some of the earlier soft
+    // GPGPUs". Paper's column: FGPU 36, DO-GPU 133, FlexGrip 175, eGPU 1.
+    let paper = [("FGPU", 36.0), ("DO-GPU", 133.0), ("FlexGrip", 175.0)];
+    for (row, (name, p)) in TABLE1_PUBLISHED.iter().zip(paper) {
+        assert_eq!(row.arch, name);
+        let m = ppa_metric(row.luts as f64, row.dsps as f64, row.fmax_mhz);
+        assert!(
+            within_band(m, p, 2.0),
+            "{name}: PPA {m:.0} vs paper {p} (cost-model difference too large)"
+        );
+        assert!(m > 10.0, "{name} must be at least an OOM worse than eGPU");
+    }
+}
+
+// -------------------------------------------------------------------
+// Tables 4 and 5
+// -------------------------------------------------------------------
+
+#[test]
+fn table4_resources_within_15_percent() {
+    // Paper Table 4 ALM/FF per row.
+    let paper: [(u32, u32, u32, u32); 6] = [
+        (4243, 13635, 24, 50),
+        (7518, 18992, 24, 98),
+        (7579, 19155, 24, 131),
+        (9754, 25425, 24, 131),
+        (10127, 26040, 32, 195),
+        (10697, 26618, 32, 259),
+    ];
+    for (cfg, (alm, ff, dsp, m20k)) in EgpuConfig::table4_presets().iter().zip(paper) {
+        let r = ResourceReport::for_config(cfg);
+        assert!(
+            within_band(r.alms as f64, alm as f64, 1.15),
+            "{}: ALM {} vs paper {alm}",
+            cfg.name,
+            r.alms
+        );
+        assert!(
+            within_band(r.registers as f64, ff as f64, 1.15),
+            "{}: FF {} vs paper {ff}",
+            cfg.name,
+            r.registers
+        );
+        assert_eq!(r.dsps, dsp, "{}: DSP", cfg.name);
+        assert_eq!(r.m20ks, m20k, "{}: M20K", cfg.name);
+    }
+}
+
+#[test]
+fn table5_resources_within_15_percent() {
+    let paper: [(u32, u32, u32, u32); 4] = [
+        (5468, 14487, 24, 99),
+        (7057, 16722, 32, 131),
+        (11314, 25050, 32, 131),
+        (10174, 23094, 32, 195),
+    ];
+    for (cfg, (alm, ff, dsp, m20k)) in EgpuConfig::table5_presets().iter().zip(paper) {
+        let r = ResourceReport::for_config(cfg);
+        assert!(
+            within_band(r.alms as f64, alm as f64, 1.15),
+            "{}: ALM {} vs paper {alm}",
+            cfg.name,
+            r.alms
+        );
+        assert!(
+            within_band(r.registers as f64, ff as f64, 1.15),
+            "{}: FF {} vs paper {ff}",
+            cfg.name,
+            r.registers
+        );
+        assert_eq!(r.dsps, dsp, "{}: DSP", cfg.name);
+        // Table 5 row 1 is 98 in the text's formula but 99 in the table;
+        // accept ±1 block.
+        assert!(
+            (r.m20ks as i64 - m20k as i64).abs() <= 1,
+            "{}: M20K {} vs paper {m20k}",
+            cfg.name,
+            r.m20ks
+        );
+    }
+}
+
+#[test]
+fn all_configs_close_at_embedded_limit() {
+    // §6: "a soft processor can consistently close timing at a level
+    // limited only by the embedded features" — every preset's soft logic
+    // beats the embedded Fmax, so the core closes at 771 (DP) / 600 (QP).
+    for cfg in EgpuConfig::table4_presets().iter().chain(EgpuConfig::table5_presets().iter()) {
+        let f = FrequencyReport::for_config(cfg);
+        assert!(f.closes_at_embedded_limit, "{}: soft {} < embedded {}", cfg.name, f.soft_mhz, f.embedded_mhz);
+        let want = if cfg.memory == MemoryMode::Dp { 771.0 } else { 600.0 };
+        assert_eq!(f.core_mhz, want, "{}", cfg.name);
+        assert!(f.soft_mhz > f.core_mhz, "{}", cfg.name);
+    }
+}
+
+// -------------------------------------------------------------------
+// Table 6
+// -------------------------------------------------------------------
+
+#[test]
+fn table6_matches_paper_exactly() {
+    let paper = [
+        (16u8, "Min", 90u32, 136u32),
+        (16, "Small", 134, 207),
+        (16, "Full", 199, 269),
+        (32, "Min", 208, 406),
+        (32, "Full", 394, 704),
+    ];
+    assert_eq!(TABLE6.len(), paper.len());
+    for (a, (prec, class, alm, ff)) in TABLE6.iter().zip(paper) {
+        assert_eq!(a.precision, prec);
+        assert_eq!(a.class.name(), class);
+        assert_eq!(a.alms, alm, "{prec}-bit {class}");
+        assert_eq!(a.regs, ff, "{prec}-bit {class}");
+    }
+}
+
+#[test]
+fn alu_cost_resolution() {
+    // §5.2 scaling claims: full 16-bit ≈ 2x min; 32-bit full ≈ 2x ALMs,
+    // ~3x registers vs 16-bit full.
+    let mut cfg = EgpuConfig::default();
+    cfg.alu_precision = 16;
+    cfg.int_alu = IntAluClass::Min;
+    cfg.shift_precision = 1;
+    let min16 = alu_cost(&cfg);
+    cfg.int_alu = IntAluClass::Full;
+    cfg.shift_precision = 16;
+    let full16 = alu_cost(&cfg);
+    cfg.alu_precision = 32;
+    cfg.shift_precision = 32;
+    let full32 = alu_cost(&cfg);
+    assert!(within_band(full16.alms as f64, 2.0 * min16.alms as f64, 1.25));
+    assert!(within_band(full32.alms as f64, 2.0 * full16.alms as f64, 1.25));
+    assert!(within_band(full32.regs as f64, 2.6 * full16.regs as f64, 1.25));
+}
+
+// -------------------------------------------------------------------
+// Tables 7 and 8 + §7 claims
+// -------------------------------------------------------------------
+
+#[test]
+fn tables7_and_8_cycles_within_band() {
+    for b in suite::Benchmark::ALL {
+        for &dim in b.dims() {
+            let r = suite::run(b, dim);
+            for (m, v) in [
+                (Some(&r.nios), Variant::Nios),
+                (Some(&r.dp), Variant::Dp),
+                (Some(&r.qp), Variant::Qp),
+                (r.dot.as_ref(), Variant::Dot),
+            ] {
+                let (Some(m), Some(p)) = (m, paper_cycles(b, dim, v)) else {
+                    continue;
+                };
+                // eGPU variants: 2x band. Nios: 4x (coarse CPI model; the
+                // paper's Nios reduction scales superlinearly with n).
+                let band = if v == Variant::Nios { 4.0 } else { 2.0 };
+                assert!(
+                    within_band(m.cycles as f64, p as f64, band),
+                    "{b:?}-{dim} {}: {} vs paper {p}",
+                    v.label(),
+                    m.cycles
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn egpu_beats_nios_by_an_oom_on_time() {
+    // §7: "we see at least an OOM performance difference based on time"
+    // for the larger benchmarks; small dims are allowed to be lower.
+    let mut oom = 0usize;
+    let mut total = 0usize;
+    for b in suite::Benchmark::ALL {
+        for &dim in b.dims() {
+            let r = suite::run(b, dim);
+            let ratio = r.ratio_time(Variant::Nios).unwrap();
+            assert!(ratio > 3.0, "{b:?}-{dim}: only {ratio:.1}x faster than Nios");
+            total += 1;
+            if ratio >= 10.0 {
+                oom += 1;
+            }
+        }
+    }
+    assert!(
+        oom * 2 >= total,
+        "OOM speedup in only {oom}/{total} instances"
+    );
+}
+
+#[test]
+fn normalized_efficiency_still_favors_egpu() {
+    // §7: "is still better on an area normalized basis" — Nios normalized
+    // > 1 in almost every instance.
+    let mut wins = 0usize;
+    let mut total = 0usize;
+    for b in suite::Benchmark::ALL {
+        for &dim in b.dims() {
+            let r = suite::run(b, dim);
+            total += 1;
+            if r.normalized(Variant::Nios).unwrap() > 1.0 {
+                wins += 1;
+            }
+        }
+    }
+    assert!(wins + 2 >= total, "eGPU area-normalized win in only {wins}/{total}");
+}
+
+#[test]
+fn dot_core_multiplies_the_advantage() {
+    // §8: "When we add the dot product core ... the advantage can
+    // increase again by several times."
+    for b in [suite::Benchmark::Reduction, suite::Benchmark::Mmm] {
+        for &dim in b.dims() {
+            let r = suite::run(b, dim);
+            let dot = r.ratio_cycles(Variant::Dot).unwrap();
+            assert!(dot < 0.55, "{b:?}-{dim}: dot/dp cycle ratio {dot:.2}");
+        }
+    }
+}
+
+#[test]
+fn qp_trades_frequency_for_write_bandwidth() {
+    // Table 7/8 pattern: QP needs fewer cycles on write-heavy kernels
+    // (transpose, bitonic, FFT) but similar on reduction; its *time* is
+    // usually no better because of the 600 vs 771 MHz clock.
+    for (b, dim) in [
+        (suite::Benchmark::Transpose, 64),
+        (suite::Benchmark::Bitonic, 128),
+        (suite::Benchmark::Fft, 128),
+    ] {
+        let r = suite::run(b, dim);
+        let rc = r.ratio_cycles(Variant::Qp).unwrap();
+        assert!(rc < 0.9, "{b:?}-{dim}: QP cycle ratio {rc:.2}");
+        let rt = r.ratio_time(Variant::Qp).unwrap();
+        assert!(rt > rc, "{b:?}-{dim}: clock penalty must show in time");
+    }
+    let red = suite::run(suite::Benchmark::Reduction, 64);
+    assert!(red.ratio_time(Variant::Qp).unwrap() > 1.0);
+}
+
+#[test]
+fn flexgrip_comparison_on_mmm() {
+    // §7: FlexGrip underperforms eGPU by ~31x averaged on cycles; the
+    // MMM rows give 19.2 / 36.8 / 188.3.
+    for (n, paper_ratio) in flexgrip::MMM_CYCLE_RATIO_VS_EGPU {
+        let r = suite::run(suite::Benchmark::Mmm, n);
+        let fg = flexgrip::mmm_cycles(n).unwrap();
+        let measured_ratio = fg as f64 / r.dp.cycles as f64;
+        assert!(
+            within_band(measured_ratio, paper_ratio, 2.0),
+            "MMM-{n}: FlexGrip/eGPU = {measured_ratio:.1} vs paper {paper_ratio}"
+        );
+    }
+}
+
+#[test]
+fn nios_cost_model_matches_paper() {
+    // §7: Nios IIe consumed 1100 ALMs + 3 DSP = normalized 1400 @347 MHz.
+    assert_eq!(normalized_cost(NIOS_ALMS, NIOS_DSPS), cost::BENCH_COST_NIOS);
+    assert_eq!(NIOS_MHZ, 347.0);
+    // Benchmark configuration costs: "7400, 8400, and 9000 ALMs for the
+    // eGPU-DP, eGPU-QP, and eGPU-Dot".
+    assert!(cost::BENCH_COST_DP < cost::BENCH_COST_QP);
+    assert!(cost::BENCH_COST_QP < cost::BENCH_COST_DOT);
+}
+
+#[test]
+fn bus_overhead_near_paper_average() {
+    // §7: "The performance impact was only 4.7%, averaged over all
+    // benchmarks" — replicated with the coordinator's 32-bit bus model
+    // over the full suite's data-movement footprints.
+    use egpu::coordinator::{aggregate_bus_overhead, Coordinator, Job};
+    use egpu::kernels::{bitonic, f32_bits, fft, mmm, reduction, transpose};
+
+    let mut jobs: Vec<(EgpuConfig, Job)> = Vec::new();
+    let base = EgpuConfig::benchmark(MemoryMode::Dp, false);
+    for n in [32usize, 64, 128] {
+        let v: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        jobs.push((
+            base.clone(),
+            Job::new(reduction::reduction(n)).load(0, f32_bits(&v)).unload(n, 1),
+        ));
+        let m: Vec<u32> = (0..(n * n) as u32).collect();
+        jobs.push((
+            base.clone(),
+            Job::new(transpose::transpose(n)).load(0, m.clone()).unload(n * n, n * n),
+        ));
+        jobs.push((
+            mmm::config(n, MemoryMode::Dp, false),
+            Job::new(mmm::mmm(n))
+                .load(0, f32_bits(&vec![1.0; n * n]))
+                .load(n * n, f32_bits(&vec![0.5; n * n]))
+                .unload(2 * n * n, n * n),
+        ));
+    }
+    for n in [32usize, 64, 128, 256] {
+        let v: Vec<u32> = (0..n as u32).rev().collect();
+        jobs.push((
+            EgpuConfig::benchmark_predicated(MemoryMode::Dp),
+            Job::new(bitonic::bitonic(n)).load(0, v).unload(0, n),
+        ));
+        let re: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).cos()).collect();
+        let im = vec![0f32; n];
+        let mut j = Job::new(fft::fft(n)).unload(0, 2 * n);
+        for (b, d) in fft::shared_init(&re, &im) {
+            j = j.load(b, d);
+        }
+        jobs.push((base.clone(), j));
+    }
+
+    let mut results = Vec::new();
+    for (cfg, job) in jobs {
+        let mut c = Coordinator::new(cfg, 1).unwrap();
+        c.submit(job);
+        results.extend(c.run_all().unwrap());
+    }
+    let avg = aggregate_bus_overhead(&results);
+    // Paper: 4.7% averaged over all benchmarks. The aggregate is
+    // time-weighted (MMM dominates and amortizes its DMA); accept 1%-10%.
+    assert!(
+        (0.01..=0.10).contains(&avg),
+        "aggregate bus overhead {:.1}% vs paper 4.7%",
+        avg * 100.0
+    );
+}
+
+#[test]
+fn predicates_cost_about_half_more_logic() {
+    // §5.3 / Table 4: predicate support "increasing the soft logic
+    // resources by about 50%" (Small-DP-1 vs Small-DP-2 also changes the
+    // ALU; compare a pure predicate toggle instead).
+    let mut without = EgpuConfig::table4_presets()[1].clone();
+    without.predicate_levels = 0;
+    let with = EgpuConfig::table4_presets()[1].clone();
+    let a = ResourceReport::for_config(&without).alms as f64;
+    let b = ResourceReport::for_config(&with).alms as f64;
+    assert!(
+        (1.25..=1.75).contains(&(b / a)),
+        "predicates scale ALMs by {:.2}",
+        b / a
+    );
+}
