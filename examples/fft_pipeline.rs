@@ -1,19 +1,19 @@
-//! FFT signal-processing pipeline on the multi-core coordinator.
+//! FFT signal-processing pipeline on a multi-core `GpuArray`.
 //!
 //! The paper motivates the eGPU with exactly this workload class: "many of
 //! the signal processing applications that we expect that the eGPU will be
 //! used for (such as FFTs and matrix decomposition)" (§3.2), managed by an
 //! external host over the 32-bit data bus (§2, §7).
 //!
-//! This example builds a 4-core eGPU array, streams a batch of frames
-//! through it (window → FFT → magnitude-peak readback), chains a second
-//! kernel onto resident data (the §7 "multiple algorithms to the same
-//! data" mode), and reports throughput, per-core utilization and the bus
-//! overhead against the paper's 4.7% average.
+//! This example builds a 4-core array, streams a batch of frames through
+//! it (one `Stream` per frame: window → FFT → magnitude-peak readback),
+//! chains a second kernel onto a stream's resident data (the §7 "multiple
+//! algorithms to the same data" mode), and reports throughput, per-core
+//! utilization and the bus overhead against the paper's 4.7% average.
 //!
 //!     cargo run --release --example fft_pipeline
 
-use egpu::coordinator::{average_bus_overhead, Coordinator, Job};
+use egpu::api::{average_bus_overhead, Gpu};
 use egpu::harness::Table;
 use egpu::kernels::fft;
 use egpu::sim::{EgpuConfig, MemoryMode};
@@ -25,10 +25,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
     println!(
         "{} eGPU cores ({}), {}-point FFT, {} frames",
-        cores,
-        cfg.name,
-        n,
-        frames
+        cores, cfg.name, n, frames
     );
 
     // Synthetic sensor frames: two tones + phase-shifting interference.
@@ -44,27 +41,28 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         (re, vec![0f32; n])
     };
 
-    let mut coord = Coordinator::new(cfg.clone(), cores)?;
+    let mut array = Gpu::builder().config(cfg.clone()).build_array(cores)?;
     for f in 0..frames {
         let (re, im) = frame(f);
-        let mut job = Job::new(fft::fft(n)).unload(0, 2 * n);
-        for (base, data) in fft::shared_init(&re, &im) {
-            job = job.load(base, data);
+        let stream = array.stream();
+        let mut launch = array.launch_on(&stream, fft::fft(n)).output(0, 2 * n);
+        for (base, words) in fft::shared_init(&re, &im) {
+            launch = launch.input_words(base, words);
         }
-        coord.submit(job);
+        launch.submit();
     }
-    let results = coord.run_all()?;
+    let reports = array.sync()?;
 
     // Verify each frame's spectrum against the DFT oracle and find peaks.
     let mut peaks = Vec::new();
-    for (f, r) in results.iter().enumerate() {
-        let out = &r.outputs[0];
+    for (f, r) in reports.iter().enumerate() {
+        let out = r.output_f32(0);
         let (re, im) = frame(f);
         let (wr, wi) = fft::oracle(&re, &im);
         let mut best = (0usize, 0f64);
         for k in 0..n / 2 {
-            let gr = f32::from_bits(out[k]) as f64;
-            let gi = f32::from_bits(out[n + k]) as f64;
+            let gr = out[k] as f64;
+            let gi = out[n + k] as f64;
             assert!(
                 (gr - wr[k]).abs() < 1e-3 * n as f64 && (gi - wi[k]).abs() < 1e-3 * n as f64,
                 "frame {f} bin {k} mismatch"
@@ -80,10 +78,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("all {frames} spectra match the DFT oracle; dominant bin = 17 in every frame");
 
     let mut t = Table::new("per-frame timeline (first 8)");
-    t.headers(["frame", "core", "start", "end", "compute", "bus", "bus %"]);
-    for (f, r) in results.iter().take(8).enumerate() {
+    t.headers(["frame", "stream", "core", "start", "end", "compute", "bus", "bus %"]);
+    for (f, r) in reports.iter().take(8).enumerate() {
         t.row([
             f.to_string(),
+            r.stream.map(|s| s.to_string()).unwrap_or_default(),
             r.core.to_string(),
             r.start.to_string(),
             r.end.to_string(),
@@ -94,34 +93,36 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     t.print();
 
-    let makespan = coord.makespan();
-    let total_compute: u64 = results.iter().map(|r| r.compute_cycles).sum();
+    let makespan = array.makespan();
+    let total_compute: u64 = reports.iter().map(|r| r.compute_cycles).sum();
     println!(
         "\nmakespan {} cycles = {:.1} us at {:.0} MHz  ({:.2} frames/ms)",
         makespan,
-        coord.makespan_us(),
+        array.makespan_us(),
         cfg.core_mhz(),
-        frames as f64 / (coord.makespan_us() / 1000.0)
+        frames as f64 / (array.makespan_us() / 1000.0)
     );
     println!(
         "core utilization {:.0}%   average bus overhead {:.1}% (paper §7: 4.7%)",
         100.0 * total_compute as f64 / (makespan * cores as u64) as f64,
-        100.0 * average_bus_overhead(&results)
+        100.0 * average_bus_overhead(&reports)
     );
 
-    // Chained mode: magnitude-squared via MMM-free path — re-run an FFT on
-    // the last core's resident spectrum (demonstrates keep_data chaining).
-    let mut chain = Coordinator::new(cfg, 1)?;
+    // Chained mode: a second FFT on the stream's resident spectrum —
+    // stream affinity keeps it on the core holding the data, and the
+    // input DMA is skipped entirely.
+    let mut chain = Gpu::builder().config(cfg).build_array(1)?;
+    let s = chain.stream();
     let (re, im) = frame(0);
-    let mut first = Job::new(fft::fft(n));
-    for (base, data) in fft::shared_init(&re, &im) {
-        first = first.load(base, data);
+    let mut first = chain.launch_on(&s, fft::fft(n));
+    for (base, words) in fft::shared_init(&re, &im) {
+        first = first.input_words(base, words);
     }
-    chain.submit(first);
-    chain.submit(Job::new(fft::fft(n)).unload(0, n).chained());
-    let rs = chain.run_all()?;
+    first.submit();
+    chain.launch_on(&s, fft::fft(n)).output(0, n).chained().submit();
+    let rs = chain.sync()?;
     println!(
-        "\nchained second kernel reused resident data: bus cycles {} -> {}",
+        "\nchained second kernel reused stream-resident data: bus cycles {} -> {}",
         rs[0].bus_cycles, rs[1].bus_cycles
     );
     assert!(rs[1].bus_cycles < rs[0].bus_cycles / 2);

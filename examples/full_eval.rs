@@ -15,15 +15,14 @@
 //!
 //!     cargo run --release --example full_eval
 
-use egpu::asm::assemble;
-use egpu::datapath::xla::XlaDatapath;
+use egpu::api::{Backend, Gpu};
 use egpu::harness::{paper_cycles, suite, within_band, Table, Variant};
 use egpu::isa::Group;
 use egpu::model::frequency::FrequencyReport;
 use egpu::model::resources::ResourceReport;
 use egpu::place;
 use egpu::runtime::default_artifacts_dir;
-use egpu::sim::{EgpuConfig, Machine, MemoryMode};
+use egpu::sim::{EgpuConfig, MemoryMode};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let t0 = std::time::Instant::now();
@@ -49,24 +48,34 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         dot r6, r2, r3
         stop
     ";
-    let mut native = Machine::new(cfg.clone())?;
-    let be = XlaDatapath::new(&dir, cfg.wavefronts()).map_err(std::io::Error::other)?;
-    let mut xla = Machine::with_backend(cfg.clone(), Some(Box::new(be)))?;
-    for m in [&mut native, &mut xla] {
-        let p = assemble(src, cfg.word_layout())?;
-        m.load_program(p)?;
-        for t in 0..cfg.threads {
-            m.regs_mut().write_thread(t, 0, (t as f32 * 0.75 - 100.0).to_bits());
-            m.regs_mut().write_thread(t, 1, (t as f32 * -0.125 + 3.0).to_bits());
-        }
-        m.run(1_000_000)?;
+    // The same device configuration on both datapaths: only the
+    // builder's backend differs.
+    let mut native = Gpu::new(&cfg)?;
+    let mut xla = Gpu::builder()
+        .config(cfg.clone())
+        .backend(Backend::Xla(dir.clone()))
+        .build()
+        .map_err(std::io::Error::other)?;
+    let threads = cfg.threads;
+    for g in [&mut native, &mut xla] {
+        // r0/r1 seeding happens post-load via the setup hook (program
+        // load resets architectural state).
+        g.launch_asm("compose-check", src)
+            .max_cycles(1_000_000)
+            .setup(move |m| {
+                for t in 0..threads {
+                    m.regs_mut().write_thread(t, 0, (t as f32 * 0.75 - 100.0).to_bits());
+                    m.regs_mut().write_thread(t, 1, (t as f32 * -0.125 + 3.0).to_bits());
+                }
+            })
+            .run()?;
     }
     let mut compared = 0usize;
     for t in 0..cfg.threads {
         for r in 2..=5u8 {
             assert_eq!(
-                native.regs().read_thread(t, r),
-                xla.regs().read_thread(t, r),
+                native.machine().regs().read_thread(t, r),
+                xla.machine().regs().read_thread(t, r),
                 "thread {t} r{r} diverges between datapaths"
             );
             compared += 1;
@@ -74,8 +83,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     // DOT reduces across 512 threads; the Pallas kernel's accumulation
     // order differs from the rust lanes by a few ULPs — bounded, not bug.
-    let nd = f32::from_bits(native.regs().read_thread(0, 6));
-    let xd = f32::from_bits(xla.regs().read_thread(0, 6));
+    let nd = f32::from_bits(native.machine().regs().read_thread(0, 6));
+    let xd = f32::from_bits(xla.machine().regs().read_thread(0, 6));
     assert!(
         (nd - xd).abs() <= nd.abs() * 1e-5,
         "dot diverges beyond rounding: {nd} vs {xd}"
@@ -85,8 +94,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          ({} threads x 4 regs, bit-exact) + DOT to f32 rounding \
          ({nd} vs {xd}); cycle counts {} == {}\n",
         cfg.threads,
-        native.cycles(),
-        xla.cycles()
+        native.machine().cycles(),
+        xla.machine().cycles()
     );
 
     // ---------------------------------------------------------------

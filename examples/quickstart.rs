@@ -1,31 +1,15 @@
-//! Quickstart: configure an eGPU, assemble a small program, run it, and
-//! inspect the result — the five-minute tour of the public API.
+//! Quickstart: build a `Gpu`, launch a kernel, read back typed buffers —
+//! the five-minute tour of the `egpu::api` runtime.
 //!
 //!     cargo run --release --example quickstart
 
-use egpu::asm::assemble;
-use egpu::sim::{EgpuConfig, Machine, MemoryMode};
+use egpu::api::Gpu;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    // 1. Static scalability: pick the configuration at "compile time"
-    //    (paper §3). This is the base machine: 512 threads on 16 SPs,
-    //    32 registers/thread, 32 KB shared memory, full 32-bit ALU.
-    let mut cfg = EgpuConfig::default();
-    cfg.memory = MemoryMode::Dp; // 4R/1W shared-memory ports, 771 MHz
-    println!(
-        "eGPU '{}': {} threads ({} wavefronts), {} regs/thread, {} KB shared @ {} MHz",
-        cfg.name,
-        cfg.threads,
-        cfg.wavefronts(),
-        cfg.regs_per_thread,
-        cfg.shared_kb,
-        cfg.core_mhz()
-    );
-
-    // 2. Write a kernel in eGPU assembly. This one squares each element
-    //    of a 512-word vector, then uses *dynamic* scalability (§3.1) to
-    //    collapse the machine to a single-thread MCU and write a flag —
-    //    no dead cycles between the personalities.
+    // Static scalability (§3) on the builder; dynamic scalability (§3.1)
+    // is in the kernel itself: square 512 elements SIMT-wide, then
+    // collapse to a single-thread MCU and write a done-flag.
+    let mut gpu = Gpu::builder().threads(512).shared_kb(32).build()?;
     let src = "
         tdx r0               ; r0 = thread id (one element per thread)
         lod r1, (r0)+0       ; x = shared[tid]
@@ -40,34 +24,29 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         [w1,d0] sto r3, (r3)+1023   ; done-flag at shared[1024]
         stop
     ";
-    let prog = assemble(src, cfg.word_layout())?;
-    println!("assembled {} instructions", prog.len());
 
-    // 3. Build the machine, load data, run.
-    let mut m = Machine::new(cfg.clone())?;
-    m.load_program(prog)?;
-    for i in 0..512u32 {
-        m.shared_mut().write(i, (i as f32 * 0.5).to_bits())?;
-    }
-    let stats = m.run(1_000_000)?;
+    // Typed device buffers; transfers are accounted on the 32-bit bus.
+    let xs: Vec<f32> = (0..512).map(|i| i as f32 * 0.5).collect();
+    let input = gpu.alloc_at::<f32>(0, 512)?;
+    let squares = gpu.alloc_at::<f32>(512, 512)?;
+    let flag = gpu.alloc_at::<u32>(1024, 1)?;
+    gpu.upload(&input, &xs)?;
 
-    // 4. Inspect results.
-    let x100 = f32::from_bits(m.shared().read(100).unwrap());
-    let y100 = f32::from_bits(m.shared().read(512 + 100).unwrap());
+    let report = gpu.launch_asm("square", src).run()?;
+
+    let ys = gpu.download(&squares)?;
+    assert_eq!(ys[100], xs[100] * xs[100]);
+    assert_eq!(gpu.download(&flag)?[0], 1);
     println!(
-        "shared[100] = {x100}, squared -> {y100} (expect {})",
-        x100 * x100
+        "'{}': squared 512 elements in {} cycles = {:.3} us at {} MHz \
+         ({} hazards, {:.1}% bus overhead)",
+        gpu.config().name,
+        report.compute_cycles,
+        report.time_us(gpu.config().core_mhz()),
+        gpu.config().core_mhz(),
+        report.stats.hazards,
+        100.0 * gpu.bus_overhead()
     );
-    assert_eq!(y100, x100 * x100);
-    assert_eq!(m.shared().read(1024).unwrap(), 1);
-
-    println!(
-        "ran in {} cycles = {:.3} us at {} MHz ({} would-be hazards)",
-        stats.cycles,
-        stats.time_us(cfg.core_mhz()),
-        cfg.core_mhz(),
-        stats.hazards
-    );
-    println!("\ninstruction mix:\n{}", stats.profile.render());
+    println!("\ninstruction mix:\n{}", report.stats.profile.render());
     Ok(())
 }

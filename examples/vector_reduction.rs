@@ -4,18 +4,18 @@
 //! optional dot-product extension core replaces the whole tree with one
 //! SUM instruction.
 //!
-//! Runs the tree kernel and the DOT kernel on the same data, on both the
-//! native datapath and (if `make artifacts` has been run) the AOT-compiled
-//! XLA datapath through PJRT, comparing cycles against the paper's
-//! Table 7.
+//! Runs the tree kernel and the DOT kernel on the same data through
+//! `Gpu::launch`, on both the native datapath and (if `make artifacts`
+//! has been run) the AOT-compiled XLA datapath through PJRT, comparing
+//! cycles against the paper's Table 7.
 //!
 //!     cargo run --release --example vector_reduction
 
-use egpu::datapath::xla::XlaDatapath;
+use egpu::api::{Backend, Gpu};
 use egpu::harness::{paper_cycles, suite, Table};
-use egpu::kernels::{f32_bits, reduction};
+use egpu::kernels::reduction;
 use egpu::runtime::default_artifacts_dir;
-use egpu::sim::{EgpuConfig, Machine, MemoryMode};
+use egpu::sim::{EgpuConfig, MemoryMode};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut table = Table::new("Vector reduction: measured vs paper (Table 7)");
@@ -30,17 +30,21 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             (reduction::reduction_dot(n), true, suite::Variant::Dot),
         ] {
             let cfg = EgpuConfig::benchmark(MemoryMode::Dp, dot);
-            let (stats, m) = kernel.run(&cfg, &[(0, f32_bits(&data))])?;
-            let got = f32::from_bits(m.shared().read(n as u32).unwrap());
+            let mut gpu = Gpu::new(&cfg)?;
+            let input = gpu.alloc_at::<f32>(0, n)?;
+            let sum = gpu.alloc_at::<f32>(n, 1)?;
+            gpu.upload(&input, &data)?;
+            let report = gpu.launch(&kernel).run()?;
+            let got = gpu.download(&sum)?[0];
             assert!((got - want).abs() < want.abs() * 1e-4 + 1e-2);
             table.row([
                 n.to_string(),
                 variant.label().to_string(),
-                stats.cycles.to_string(),
+                report.compute_cycles.to_string(),
                 paper_cycles(suite::Benchmark::Reduction, n, variant)
                     .map(|c| c.to_string())
                     .unwrap_or_default(),
-                format!("{:.2}", stats.time_us(cfg.core_mhz())),
+                format!("{:.2}", report.time_us(cfg.core_mhz())),
                 format!("{got:.2}"),
             ]);
         }
@@ -48,28 +52,28 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     table.print();
 
     // The same kernel through the AOT-compiled JAX/Pallas datapath: every
-    // wavefront ALU/DOT op executes in the PJRT-loaded HLO executable.
+    // wavefront ALU/DOT op executes in the PJRT-loaded HLO executable —
+    // the only change is the builder's backend.
     let dir = default_artifacts_dir();
     if dir.join("opmap.json").is_file() {
         let n = 64;
         let data: Vec<f32> = (0..n).map(|i| (i as f32) * 0.125 - 2.0).collect();
         let cfg = EgpuConfig::benchmark(MemoryMode::Dp, true);
-        let kernel = reduction::reduction_dot(n);
-        let prog = kernel.assemble(&cfg).map_err(std::io::Error::other)?;
-
-        let be = XlaDatapath::new(&dir, cfg.wavefronts()).map_err(std::io::Error::other)?;
-        let mut m = Machine::with_backend(cfg.clone(), Some(Box::new(be)))
+        let mut gpu = Gpu::builder()
+            .config(cfg)
+            .backend(Backend::Xla(dir))
+            .build()
             .map_err(std::io::Error::other)?;
-        m.load_program(prog)?;
-        m.set_threads(kernel.threads)?;
-        m.shared_mut().write_block(0, &f32_bits(&data));
-        let stats = m.run(1_000_000)?;
-        let got = f32::from_bits(m.shared().read(n as u32).unwrap());
+        let input = gpu.alloc_at::<f32>(0, n)?;
+        let sum = gpu.alloc_at::<f32>(n, 1)?;
+        gpu.upload(&input, &data)?;
+        let report = gpu.launch(&reduction::reduction_dot(n)).run()?;
+        let got = gpu.download(&sum)?[0];
         let want: f32 = data.iter().sum();
         println!(
             "\nXLA datapath (PJRT, artifacts/): reduction-dot-{n} -> {got:.3} \
              (expect {want:.3}), {} cycles — identical to native",
-            stats.cycles
+            report.compute_cycles
         );
         assert!((got - want).abs() < want.abs() * 1e-4 + 1e-2);
     } else {

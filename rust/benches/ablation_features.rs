@@ -11,8 +11,13 @@
 //!     cargo bench --bench ablation_features
 
 use egpu::harness::{Rng, Table};
-use egpu::kernels::{f32_bits, fft, fft4, mmm, reduction, transpose};
+use egpu::kernels::{f32_bits, fft, fft4, mmm, reduction, transpose, Kernel};
 use egpu::sim::{EgpuConfig, MemoryMode};
+
+/// Cycle count of one kernel (Kernel::run is the `Gpu::launch` shim).
+fn cycles(kernel: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)]) -> u64 {
+    kernel.run(cfg, init).unwrap().0.cycles
+}
 
 fn main() {
     let mut rng = Rng::new(0xAB1A);
@@ -26,16 +31,14 @@ fn main() {
         let d: Vec<f32> = (0..n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
         let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
         let pcfg = EgpuConfig::benchmark_predicated(MemoryMode::Dp);
-        let (dyn_s, _) = reduction::reduction(n).run(&cfg, &[(0, f32_bits(&d))]).unwrap();
-        let (pred_s, _) = reduction::reduction_predicated(n)
-            .run(&pcfg, &[(0, f32_bits(&d))])
-            .unwrap();
-        let penalty = pred_s.cycles as f64 / dyn_s.cycles as f64;
+        let dyn_c = cycles(&reduction::reduction(n), &cfg, &[(0, f32_bits(&d))]);
+        let pred_c = cycles(&reduction::reduction_predicated(n), &pcfg, &[(0, f32_bits(&d))]);
+        let penalty = pred_c as f64 / dyn_c as f64;
         assert!(penalty > 2.0, "n={n}: dynamic scaling must win big");
         t.row([
             n.to_string(),
-            dyn_s.cycles.to_string(),
-            pred_s.cycles.to_string(),
+            dyn_c.to_string(),
+            pred_c.to_string(),
             format!("{penalty:.1}x"),
         ]);
     }
@@ -50,13 +53,13 @@ fn main() {
     for n in [64usize, 128] {
         let d: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
         let cfg = EgpuConfig::benchmark(MemoryMode::Dp, true);
-        let (tree, _) = reduction::reduction(n).run(&cfg, &[(0, f32_bits(&d))]).unwrap();
-        let (dot, _) = reduction::reduction_dot(n).run(&cfg, &[(0, f32_bits(&d))]).unwrap();
+        let tree = cycles(&reduction::reduction(n), &cfg, &[(0, f32_bits(&d))]);
+        let dot = cycles(&reduction::reduction_dot(n), &cfg, &[(0, f32_bits(&d))]);
         t.row([
             format!("reduction-{n}"),
-            tree.cycles.to_string(),
-            dot.cycles.to_string(),
-            format!("{:.1}x", tree.cycles as f64 / dot.cycles as f64),
+            tree.to_string(),
+            dot.to_string(),
+            format!("{:.1}x", tree as f64 / dot as f64),
             "8".into(),
         ]);
     }
@@ -65,13 +68,13 @@ fn main() {
         let a: Vec<f32> = (0..n * n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
         let b: Vec<f32> = (0..n * n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
         let init = vec![(0, f32_bits(&a)), (n * n, f32_bits(&b))];
-        let (tree, _) = mmm::mmm(n).run(&mmm::config(n, MemoryMode::Dp, false), &init).unwrap();
-        let (dot, _) = mmm::mmm_dot(n).run(&mmm::config(n, MemoryMode::Dp, true), &init).unwrap();
+        let tree = cycles(&mmm::mmm(n), &mmm::config(n, MemoryMode::Dp, false), &init);
+        let dot = cycles(&mmm::mmm_dot(n), &mmm::config(n, MemoryMode::Dp, true), &init);
         t.row([
             format!("mmm-{n}"),
-            tree.cycles.to_string(),
-            dot.cycles.to_string(),
-            format!("{:.1}x", tree.cycles as f64 / dot.cycles as f64),
+            tree.to_string(),
+            dot.to_string(),
+            format!("{:.1}x", tree as f64 / dot as f64),
             "8".into(),
         ]);
     }

@@ -8,21 +8,21 @@
 //!
 //!     cargo bench --bench perf_simulator
 
+use egpu::api::Gpu;
 use egpu::harness::{sim_rate, time, Rng, Table};
 use egpu::kernels::{bitonic, f32_bits, fft, mmm, reduction, transpose, Kernel};
-use egpu::sim::{EgpuConfig, Machine, MemoryMode};
+use egpu::sim::{EgpuConfig, MemoryMode};
 
 fn run_once(kernel: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)], hazards: bool) -> u64 {
-    let prog = kernel.assemble(cfg).unwrap();
-    let mut m = Machine::new(cfg.clone()).unwrap();
-    m.load_program(prog).unwrap();
-    m.set_threads(kernel.threads).unwrap();
-    m.set_dim_x(kernel.dim_x).unwrap();
-    m.set_hazard_checking(hazards);
+    let mut gpu = Gpu::new(cfg).unwrap();
     for (b, d) in init {
-        m.shared_mut().write_block(*b, d);
+        gpu.write_words(*b, d).unwrap();
     }
-    m.run(10_000_000_000).unwrap().cycles
+    gpu.launch(kernel)
+        .hazard_checking(hazards)
+        .run()
+        .unwrap()
+        .compute_cycles
 }
 
 fn main() {

@@ -1,0 +1,124 @@
+//! Typed device buffers over the eGPU shared memory.
+//!
+//! The eGPU's single local data memory is 32-bit word addressed (§2); a
+//! [`Buffer<T>`] is a typed window onto a word range, and the host moves
+//! data through it with [`Gpu::upload`](super::Gpu::upload) /
+//! [`Gpu::download`](super::Gpu::download), which account every word on
+//! the external 32-bit bus. This subsumes the ad-hoc
+//! `f32_bits`/`i32_bits` + `write_block` host paths.
+
+use std::marker::PhantomData;
+
+/// A host-visible element type with a defined 32-bit device encoding.
+///
+/// The eGPU datapath is typeless at rest — registers and shared memory
+/// hold raw 32-bit words; FP32 and INT32 are interpretations chosen per
+/// instruction (§4). `DeviceRepr` fixes the host-side encoding.
+pub trait DeviceRepr: Copy {
+    /// Type label used in diagnostics.
+    const NAME: &'static str;
+
+    fn to_word(self) -> u32;
+    fn from_word(word: u32) -> Self;
+}
+
+impl DeviceRepr for f32 {
+    const NAME: &'static str = "f32";
+
+    fn to_word(self) -> u32 {
+        self.to_bits()
+    }
+
+    fn from_word(word: u32) -> f32 {
+        f32::from_bits(word)
+    }
+}
+
+impl DeviceRepr for i32 {
+    const NAME: &'static str = "i32";
+
+    fn to_word(self) -> u32 {
+        self as u32
+    }
+
+    fn from_word(word: u32) -> i32 {
+        word as i32
+    }
+}
+
+impl DeviceRepr for u32 {
+    const NAME: &'static str = "u32";
+
+    fn to_word(self) -> u32 {
+        self
+    }
+
+    fn from_word(word: u32) -> u32 {
+        word
+    }
+}
+
+/// A typed range of device shared memory: `len` elements of `T` starting
+/// at word address `base`. Buffers are plain handles — cheap to copy,
+/// created by [`Gpu::alloc`](super::Gpu::alloc) /
+/// [`Gpu::alloc_at`](super::Gpu::alloc_at), and only meaningful on the
+/// device that created them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Buffer<T: DeviceRepr> {
+    base: usize,
+    len: usize,
+    _elem: PhantomData<T>,
+}
+
+impl<T: DeviceRepr> Buffer<T> {
+    pub(crate) fn new(base: usize, len: usize) -> Buffer<T> {
+        Buffer {
+            base,
+            len,
+            _elem: PhantomData,
+        }
+    }
+
+    /// First word address of the buffer (kernels address this directly).
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Element (= word) count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// One-past-the-end word address.
+    pub fn end(&self) -> usize {
+        self.base + self.len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repr_roundtrips() {
+        assert_eq!(f32::from_word((-1.5f32).to_word()), -1.5);
+        assert_eq!(i32::from_word((-7i32).to_word()), -7);
+        assert_eq!(u32::from_word(0xDEADBEEFu32.to_word()), 0xDEADBEEF);
+        // f32 NaN payloads and signed zero survive the trip bit-exactly.
+        assert_eq!(f32::to_word(f32::from_word(0x7FC0_0001)), 0x7FC0_0001);
+        assert_eq!((-0.0f32).to_word(), 0x8000_0000);
+    }
+
+    #[test]
+    fn buffer_geometry() {
+        let b: Buffer<f32> = Buffer::new(64, 32);
+        assert_eq!(b.base(), 64);
+        assert_eq!(b.len(), 32);
+        assert_eq!(b.end(), 96);
+        assert!(!b.is_empty());
+    }
+}

@@ -1,0 +1,467 @@
+//! Single-core device handle: immediate-mode launches with uniform bus
+//! accounting.
+
+use crate::asm::{assemble, Program};
+use crate::coordinator::{bus_fraction, DataBus, JobResult, DEFAULT_CYCLE_BUDGET};
+use crate::kernels::Kernel;
+use crate::sim::config::EgpuConfig;
+use crate::sim::{Machine, RunStats};
+
+use super::buffer::{Buffer, DeviceRepr};
+use super::{ApiError, GpuBuilder};
+
+/// Direction of a host↔device transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BusDir {
+    HostToDevice,
+    DeviceToHost,
+}
+
+/// One transfer on the external 32-bit bus, on the device's serial
+/// timeline (uploads, kernel runs and downloads do not overlap on a
+/// single-core device: one host, one bus, one core).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BusEvent {
+    pub dir: BusDir,
+    /// First shared-memory word address touched.
+    pub base: usize,
+    /// Words moved (1 word per bus cycle, §7).
+    pub words: usize,
+    /// Start/end cycle on the device timeline.
+    pub start: u64,
+    pub end: u64,
+}
+
+/// A completed launch: the paper's core metric ([`RunStats::cycles`])
+/// plus the launch's place on the bus/compute timeline. The same record
+/// describes immediate launches on a [`Gpu`] and stream jobs on a
+/// [`GpuArray`](super::GpuArray).
+#[derive(Debug, Clone)]
+pub struct LaunchReport {
+    pub name: String,
+    /// Core the launch ran on (always 0 on a single-core [`Gpu`]).
+    pub core: usize,
+    /// Stream the launch was submitted on ([`GpuArray`] only).
+    pub stream: Option<u64>,
+    /// Kernel cycles (the paper's benchmark metric).
+    pub compute_cycles: u64,
+    /// Bus cycles attributed to this launch: on a [`Gpu`], all host
+    /// transfers since the previous launch; on a [`GpuArray`], the job's
+    /// load + unload DMA.
+    pub bus_cycles: u64,
+    /// Timeline interval on the device clock (bus acquisition → done).
+    pub start: u64,
+    pub end: u64,
+    /// Full run statistics (profile, hazards, instruction count).
+    pub stats: RunStats,
+    /// Unloaded output blocks, in submission order ([`GpuArray`] only;
+    /// a [`Gpu`] reads results back through typed buffers instead).
+    pub outputs: Vec<Vec<u32>>,
+}
+
+impl LaunchReport {
+    /// Fraction of end-to-end time spent on the bus (§7's 4.7% claim);
+    /// 0 when nothing moved and nothing ran.
+    pub fn bus_overhead(&self) -> f64 {
+        bus_fraction(self.bus_cycles, self.compute_cycles)
+    }
+
+    /// Compute time in microseconds at the given core clock.
+    pub fn time_us(&self, mhz: f64) -> f64 {
+        self.stats.time_us(mhz)
+    }
+
+    /// Output block `i` as raw words.
+    ///
+    /// # Panics
+    /// If the launch declared fewer than `i + 1` outputs — in
+    /// particular, immediate [`Gpu`] launches have none; read results
+    /// back with [`Gpu::download`] instead.
+    pub fn output_words(&self, i: usize) -> &[u32] {
+        self.outputs.get(i).unwrap_or_else(|| {
+            panic!(
+                "launch '{}' has {} output block(s), no index {i}; immediate \
+                 Gpu launches return results via typed buffers (Gpu::download)",
+                self.name,
+                self.outputs.len()
+            )
+        })
+    }
+
+    /// Output block `i` decoded as `f32` (panics like [`Self::output_words`]).
+    pub fn output_f32(&self, i: usize) -> Vec<f32> {
+        self.output_words(i).iter().map(|&w| f32::from_bits(w)).collect()
+    }
+
+    /// Output block `i` decoded as `i32` (panics like [`Self::output_words`]).
+    pub fn output_i32(&self, i: usize) -> Vec<i32> {
+        self.output_words(i).iter().map(|&w| w as i32).collect()
+    }
+}
+
+impl From<JobResult> for LaunchReport {
+    fn from(r: JobResult) -> LaunchReport {
+        LaunchReport {
+            name: r.name,
+            core: r.core,
+            stream: r.stream,
+            compute_cycles: r.compute_cycles,
+            bus_cycles: r.bus_cycles,
+            start: r.start,
+            end: r.end,
+            stats: r.stats,
+            outputs: r.outputs,
+        }
+    }
+}
+
+/// A single eGPU core with host-side buffer management and immediate
+/// (synchronous) launches. Built by [`GpuBuilder`]; for multi-core
+/// stream submission see [`GpuArray`](super::GpuArray).
+pub struct Gpu {
+    machine: Machine,
+    bus: DataBus,
+    /// Serial device timeline: advances over uploads, runs, downloads.
+    clock: u64,
+    total_compute: u64,
+    total_bus: u64,
+    /// Bus cycles since the last launch (attributed to the next report).
+    pending_bus: u64,
+    timeline: Vec<BusEvent>,
+    /// Bump allocator high-water mark over shared-memory words.
+    alloc_top: usize,
+}
+
+impl Gpu {
+    /// Start configuring a device (static-scalability knobs).
+    pub fn builder() -> GpuBuilder {
+        GpuBuilder::new()
+    }
+
+    /// Device with the given configuration on the native datapath.
+    pub fn new(cfg: &EgpuConfig) -> Result<Gpu, ApiError> {
+        Gpu::builder().config(cfg.clone()).build()
+    }
+
+    /// Wrap an already-constructed machine (e.g. one with a custom
+    /// [`BlockExec`](crate::datapath::BlockExec) backend).
+    pub fn from_machine(machine: Machine) -> Gpu {
+        let bus = DataBus::new(machine.cfg.core_mhz());
+        Gpu {
+            machine,
+            bus,
+            clock: 0,
+            total_compute: 0,
+            total_bus: 0,
+            pending_bus: 0,
+            timeline: Vec::new(),
+            alloc_top: 0,
+        }
+    }
+
+    pub fn config(&self) -> &EgpuConfig {
+        &self.machine.cfg
+    }
+
+    /// Escape hatch: the underlying machine (register/shared inspection).
+    pub fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    /// Escape hatch: mutable machine access (e.g. host-side register
+    /// seeding). Transfers made this way bypass bus accounting.
+    pub fn machine_mut(&mut self) -> &mut Machine {
+        &mut self.machine
+    }
+
+    /// Unwrap the device back into its machine (legacy interop).
+    pub fn into_machine(self) -> Machine {
+        self.machine
+    }
+
+    // -----------------------------------------------------------------
+    // Buffers.
+    // -----------------------------------------------------------------
+
+    /// Allocate `len` elements at the next free word address.
+    pub fn alloc<T: DeviceRepr>(&mut self, len: usize) -> Result<Buffer<T>, ApiError> {
+        let base = self.alloc_top;
+        self.alloc_at(base, len)
+    }
+
+    /// Allocate `len` elements at a fixed word address (the paper's
+    /// kernels address shared memory absolutely, e.g. the reduction
+    /// writes its sum at word `n`).
+    pub fn alloc_at<T: DeviceRepr>(
+        &mut self,
+        base: usize,
+        len: usize,
+    ) -> Result<Buffer<T>, ApiError> {
+        let words = self.machine.shared().len();
+        if base + len > words {
+            return Err(ApiError::OutOfMemory {
+                requested: base + len,
+                available: words,
+            });
+        }
+        self.alloc_top = self.alloc_top.max(base + len);
+        Ok(Buffer::new(base, len))
+    }
+
+    // -----------------------------------------------------------------
+    // Transfers (uniformly accounted on the 32-bit bus).
+    // -----------------------------------------------------------------
+
+    fn record_transfer(&mut self, dir: BusDir, base: usize, words: usize) {
+        let cycles = self.bus.transfer_cycles(words);
+        let start = self.clock;
+        self.clock += cycles;
+        self.total_bus += cycles;
+        self.pending_bus += cycles;
+        self.timeline.push(BusEvent {
+            dir,
+            base,
+            words,
+            start,
+            end: self.clock,
+        });
+    }
+
+    /// Upload typed host data into a buffer (length must match).
+    pub fn upload<T: DeviceRepr>(
+        &mut self,
+        buf: &Buffer<T>,
+        data: &[T],
+    ) -> Result<(), ApiError> {
+        if data.len() != buf.len() {
+            return Err(ApiError::SizeMismatch {
+                expected: buf.len(),
+                got: data.len(),
+            });
+        }
+        let words: Vec<u32> = data.iter().map(|&v| v.to_word()).collect();
+        self.write_words(buf.base(), &words)
+    }
+
+    /// Download a buffer's contents as typed host data.
+    pub fn download<T: DeviceRepr>(&mut self, buf: &Buffer<T>) -> Result<Vec<T>, ApiError> {
+        let words = self.read_words(buf.base(), buf.len())?;
+        Ok(words.into_iter().map(T::from_word).collect())
+    }
+
+    /// Upload raw words at a word address (untyped DMA).
+    pub fn write_words(&mut self, base: usize, words: &[u32]) -> Result<(), ApiError> {
+        let size = self.machine.shared().len();
+        if base + words.len() > size {
+            return Err(ApiError::OutOfMemory {
+                requested: base + words.len(),
+                available: size,
+            });
+        }
+        self.machine.shared_mut().write_block(base, words);
+        self.record_transfer(BusDir::HostToDevice, base, words.len());
+        Ok(())
+    }
+
+    /// Download raw words from a word address (untyped DMA).
+    pub fn read_words(&mut self, base: usize, len: usize) -> Result<Vec<u32>, ApiError> {
+        let size = self.machine.shared().len();
+        if base + len > size {
+            return Err(ApiError::OutOfMemory {
+                requested: base + len,
+                available: size,
+            });
+        }
+        let words = self.machine.shared().read_block(base, len).to_vec();
+        self.record_transfer(BusDir::DeviceToHost, base, len);
+        Ok(words)
+    }
+
+    /// Zero shared memory (host-side reset; not a bus transfer — the
+    /// coordinator's fresh-job clear has the same cost model).
+    pub fn clear_shared(&mut self) {
+        self.machine.shared_mut().fill(0);
+    }
+
+    // -----------------------------------------------------------------
+    // Launches.
+    // -----------------------------------------------------------------
+
+    fn launch_builder(&mut self, name: String, source: LaunchSource) -> LaunchBuilder<'_> {
+        LaunchBuilder {
+            name,
+            source,
+            threads: None,
+            dim_x: None,
+            max_cycles: DEFAULT_CYCLE_BUDGET,
+            hazard_checking: None,
+            setup: None,
+            gpu: self,
+        }
+    }
+
+    /// Launch a generated kernel: threads/dim_x default to the kernel's
+    /// declared values.
+    pub fn launch(&mut self, kernel: &Kernel) -> LaunchBuilder<'_> {
+        let mut b = self.launch_builder(
+            kernel.name.clone(),
+            LaunchSource::Asm(kernel.asm.clone()),
+        );
+        b.threads = Some(kernel.threads);
+        b.dim_x = Some(kernel.dim_x);
+        b
+    }
+
+    /// Launch eGPU assembly source. Threads/dim_x keep the machine's
+    /// current values unless set on the builder.
+    pub fn launch_asm(
+        &mut self,
+        name: impl Into<String>,
+        src: impl Into<String>,
+    ) -> LaunchBuilder<'_> {
+        self.launch_builder(name.into(), LaunchSource::Asm(src.into()))
+    }
+
+    /// Launch an already-assembled program.
+    pub fn launch_program(
+        &mut self,
+        name: impl Into<String>,
+        prog: Program,
+    ) -> LaunchBuilder<'_> {
+        self.launch_builder(name.into(), LaunchSource::Program(prog))
+    }
+
+    // -----------------------------------------------------------------
+    // Accounting.
+    // -----------------------------------------------------------------
+
+    /// Device timeline position (bus + compute cycles so far).
+    pub fn elapsed_cycles(&self) -> u64 {
+        self.clock
+    }
+
+    pub fn total_bus_cycles(&self) -> u64 {
+        self.total_bus
+    }
+
+    pub fn total_compute_cycles(&self) -> u64 {
+        self.total_compute
+    }
+
+    /// Lifetime bus overhead: bus / (bus + compute), 0 if idle.
+    pub fn bus_overhead(&self) -> f64 {
+        bus_fraction(self.total_bus, self.total_compute)
+    }
+
+    /// Every bus transfer so far, in device-timeline order.
+    pub fn timeline(&self) -> &[BusEvent] {
+        &self.timeline
+    }
+}
+
+enum LaunchSource {
+    Asm(String),
+    Program(Program),
+}
+
+/// Per-launch (dynamic-scalability) knobs: runtime thread subset, TDx
+/// grid shape, cycle budget, hazard checking. Created by
+/// [`Gpu::launch`]/[`Gpu::launch_asm`]/[`Gpu::launch_program`];
+/// consumed by [`LaunchBuilder::run`].
+pub struct LaunchBuilder<'g> {
+    gpu: &'g mut Gpu,
+    name: String,
+    source: LaunchSource,
+    threads: Option<usize>,
+    dim_x: Option<usize>,
+    max_cycles: u64,
+    hazard_checking: Option<bool>,
+    setup: Option<Box<dyn FnOnce(&mut Machine)>>,
+}
+
+impl LaunchBuilder<'_> {
+    /// Runtime thread count (§3.2: any multiple of 16 up to the
+    /// configured maximum — the dynamic thread-space knob).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// TDx grid x-dimension (TDx = tid % dim_x, TDy = tid / dim_x).
+    pub fn dim_x(mut self, dim_x: usize) -> Self {
+        self.dim_x = Some(dim_x);
+        self
+    }
+
+    /// Cycle budget (defaults to [`DEFAULT_CYCLE_BUDGET`]).
+    pub fn max_cycles(mut self, max_cycles: u64) -> Self {
+        self.max_cycles = max_cycles;
+        self
+    }
+
+    /// Toggle pipeline-hazard tracking (off = verified-program fast
+    /// path). Persists on the device until toggled again.
+    pub fn hazard_checking(mut self, on: bool) -> Self {
+        self.hazard_checking = Some(on);
+        self
+    }
+
+    /// Host-side machine setup run after program load (which resets
+    /// architectural state) and immediately before execution — e.g.
+    /// seeding thread registers. Outside bus accounting.
+    pub fn setup(mut self, f: impl FnOnce(&mut Machine) + 'static) -> Self {
+        self.setup = Some(Box::new(f));
+        self
+    }
+
+    /// Assemble (if needed), load, and run to STOP.
+    pub fn run(self) -> Result<LaunchReport, ApiError> {
+        let LaunchBuilder {
+            gpu,
+            name,
+            source,
+            threads,
+            dim_x,
+            max_cycles,
+            hazard_checking,
+            setup,
+        } = self;
+        let prog = match source {
+            LaunchSource::Program(p) => p,
+            LaunchSource::Asm(src) => assemble(&src, gpu.machine.cfg.word_layout())
+                .map_err(|e| ApiError::Assemble(format!("{name}: {e}")))?,
+        };
+        gpu.machine.load_program(prog)?;
+        if let Some(t) = threads {
+            gpu.machine.set_threads(t)?;
+        }
+        if let Some(d) = dim_x {
+            gpu.machine.set_dim_x(d)?;
+        }
+        if let Some(h) = hazard_checking {
+            gpu.machine.set_hazard_checking(h);
+        }
+        if let Some(f) = setup {
+            f(&mut gpu.machine);
+        }
+        let stats = gpu.machine.run(max_cycles)?;
+
+        let bus_cycles = std::mem::take(&mut gpu.pending_bus);
+        // Only transfers advance the clock between launches, so the
+        // attributed bus phase is exactly the last `bus_cycles` ticks.
+        let start = gpu.clock - bus_cycles;
+        gpu.clock += stats.cycles;
+        gpu.total_compute += stats.cycles;
+        Ok(LaunchReport {
+            name,
+            core: 0,
+            stream: None,
+            compute_cycles: stats.cycles,
+            bus_cycles,
+            start,
+            end: gpu.clock,
+            stats,
+            outputs: Vec::new(),
+        })
+    }
+}

@@ -1,0 +1,298 @@
+//! The unified eGPU runtime API: `Gpu` / `Stream` / `Launch`.
+//!
+//! The paper's two scalability axes map onto two moments in this API:
+//!
+//! - **Static scalability** (§3, §5) is everything chosen *before* the
+//!   device exists: thread space, registers per thread, shared-memory
+//!   size and DP/QP organization, integer-ALU class and precisions,
+//!   predicate depth, extension cores, and the datapath backend. All of
+//!   it lives on [`GpuBuilder`].
+//! - **Dynamic scalability** (§3.1) is everything chosen *per launch*:
+//!   the runtime thread count, the TDx grid shape, and the cycle budget.
+//!   All of it lives on [`LaunchBuilder`].
+//!
+//! In between sit typed device buffers ([`Buffer`]) whose host↔device
+//! transfers are uniformly accounted through the external 32-bit
+//! [`DataBus`](crate::coordinator::DataBus) model (§2, §7 — "the loading
+//! and unloading of which has to be managed externally"), and
+//! [`Stream`]s, which order multi-core work and give `keep_data`
+//! chaining a well-defined home (stream→core affinity) on a
+//! [`GpuArray`].
+//!
+//! # Single core, immediate mode
+//!
+//! ```no_run
+//! use egpu::api::Gpu;
+//! use egpu::kernels::reduction;
+//!
+//! # fn main() -> Result<(), egpu::api::ApiError> {
+//! let n = 64;
+//! let mut gpu = Gpu::builder().shared_kb(128).build()?;
+//! let input = gpu.alloc_at::<f32>(0, n)?;
+//! let sum = gpu.alloc_at::<f32>(n, 1)?;
+//! let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+//! gpu.upload(&input, &data)?;
+//! let report = gpu.launch(&reduction::reduction(n)).run()?;
+//! let result = gpu.download(&sum)?[0];
+//! println!("sum = {result} in {} cycles", report.compute_cycles);
+//! # Ok(()) }
+//! ```
+//!
+//! # Multi-core streams
+//!
+//! ```no_run
+//! use egpu::api::Gpu;
+//! use egpu::kernels::fft;
+//!
+//! # fn main() -> Result<(), egpu::api::ApiError> {
+//! let mut array = Gpu::builder().shared_kb(128).build_array(4)?;
+//! let s = array.stream();
+//! let (re, im) = (vec![0f32; 64], vec![0f32; 64]);
+//! let mut launch = array.launch_on(&s, fft::fft(64)).output(0, 128);
+//! for (base, words) in fft::shared_init(&re, &im) {
+//!     launch = launch.input_words(base, words);
+//! }
+//! launch.submit();
+//! let reports = array.sync()?;
+//! let spectrum = reports[0].output_f32(0);
+//! # let _ = spectrum; Ok(()) }
+//! ```
+//!
+//! The legacy surfaces remain as thin shims: `Kernel::run` is
+//! implemented on top of [`Gpu`], and [`GpuArray`] is a typed veneer
+//! over [`Coordinator`](crate::coordinator::Coordinator). Cycle counts
+//! and results through either path are bit-identical (asserted by
+//! `rust/tests/api_parity.rs`).
+
+mod buffer;
+mod gpu;
+mod stream;
+
+pub use buffer::{Buffer, DeviceRepr};
+pub use gpu::{BusDir, BusEvent, Gpu, LaunchBuilder, LaunchReport};
+pub use stream::{GpuArray, Stream, StreamLaunch};
+
+pub use crate::coordinator::DEFAULT_CYCLE_BUDGET;
+
+/// Unweighted mean of per-launch bus overheads (the [`LaunchReport`]
+/// counterpart of
+/// [`coordinator::average_bus_overhead`](crate::coordinator::average_bus_overhead)).
+pub fn average_bus_overhead(reports: &[LaunchReport]) -> f64 {
+    crate::coordinator::mean_overhead(reports.iter().map(LaunchReport::bus_overhead))
+}
+
+use std::fmt;
+use std::path::PathBuf;
+
+use crate::datapath::xla::XlaDatapath;
+use crate::sim::config::{ConfigError, EgpuConfig, IntAluClass, MemoryMode};
+use crate::sim::{Machine, SimError};
+
+/// Which datapath executes wavefront blocks (static-scalability knob:
+/// the machine is identical either way, proven by the equivalence tests).
+#[derive(Debug, Clone, Default)]
+pub enum Backend {
+    /// Bit-exact native rust lanes (default, fast).
+    #[default]
+    Native,
+    /// AOT-compiled XLA artifacts through PJRT, rooted at the given
+    /// artifacts directory (`make artifacts`).
+    Xla(PathBuf),
+}
+
+/// Unified error type for the runtime API.
+#[derive(Debug, Clone)]
+pub enum ApiError {
+    /// Invalid static configuration.
+    Config(ConfigError),
+    /// Simulation-layer error (load/run faults, annotated with the PC).
+    Sim(SimError),
+    /// Assembly of a kernel or source string failed.
+    Assemble(String),
+    /// Datapath backend could not be constructed.
+    Backend(String),
+    /// Device allocation exceeds shared memory.
+    OutOfMemory { requested: usize, available: usize },
+    /// Host slice length does not match the buffer length.
+    SizeMismatch { expected: usize, got: usize },
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ApiError::Config(e) => write!(f, "{e}"),
+            ApiError::Sim(e) => write!(f, "{e}"),
+            ApiError::Assemble(m) => write!(f, "assembly failed: {m}"),
+            ApiError::Backend(m) => write!(f, "datapath backend: {m}"),
+            ApiError::OutOfMemory {
+                requested,
+                available,
+            } => write!(
+                f,
+                "device allocation of {requested} words exceeds the {available} \
+                 shared-memory words available"
+            ),
+            ApiError::SizeMismatch { expected, got } => write!(
+                f,
+                "host data length {got} does not match buffer length {expected}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+impl From<ConfigError> for ApiError {
+    fn from(e: ConfigError) -> ApiError {
+        ApiError::Config(e)
+    }
+}
+
+impl From<SimError> for ApiError {
+    fn from(e: SimError) -> ApiError {
+        ApiError::Sim(e)
+    }
+}
+
+impl From<ApiError> for SimError {
+    /// Legacy shims (`Kernel::run`) surface API errors as `SimError`.
+    fn from(e: ApiError) -> SimError {
+        match e {
+            ApiError::Sim(s) => s,
+            other => SimError {
+                pc: 0,
+                message: other.to_string(),
+            },
+        }
+    }
+}
+
+/// Builder for [`Gpu`] devices and [`GpuArray`]s: every configuration-time
+/// parameter the paper lists (§3, §5), starting from the base machine
+/// (512 threads × 16 SPs, 32 regs/thread, 32 KB DP shared memory).
+#[derive(Debug, Clone, Default)]
+pub struct GpuBuilder {
+    cfg: EgpuConfig,
+    backend: Backend,
+}
+
+impl GpuBuilder {
+    pub fn new() -> GpuBuilder {
+        GpuBuilder::default()
+    }
+
+    /// Start from a complete configuration (e.g. a Table 4/5 preset or
+    /// `EgpuConfig::benchmark`).
+    pub fn config(mut self, cfg: EgpuConfig) -> GpuBuilder {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Human label for the configuration.
+    pub fn name(mut self, name: impl Into<String>) -> GpuBuilder {
+        self.cfg.name = name.into();
+        self
+    }
+
+    /// Maximum initialized threads (multiple of 16).
+    pub fn threads(mut self, threads: usize) -> GpuBuilder {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// Registers per thread: 16, 32 or 64.
+    pub fn regs_per_thread(mut self, regs: usize) -> GpuBuilder {
+        self.cfg.regs_per_thread = regs;
+        self
+    }
+
+    /// Shared-memory size in KB.
+    pub fn shared_kb(mut self, kb: usize) -> GpuBuilder {
+        self.cfg.shared_kb = kb;
+        self
+    }
+
+    /// DP or QP shared-memory organization.
+    pub fn memory(mut self, mode: MemoryMode) -> GpuBuilder {
+        self.cfg.memory = mode;
+        self
+    }
+
+    /// Integer-ALU precision: 16 or 32 bits.
+    pub fn alu_precision(mut self, bits: u8) -> GpuBuilder {
+        self.cfg.alu_precision = bits;
+        self
+    }
+
+    /// Shift precision: 1, 16 or 32.
+    pub fn shift_precision(mut self, bits: u8) -> GpuBuilder {
+        self.cfg.shift_precision = bits;
+        self
+    }
+
+    /// Integer-ALU feature class (Table 6).
+    pub fn int_alu(mut self, class: IntAluClass) -> GpuBuilder {
+        self.cfg.int_alu = class;
+        self
+    }
+
+    /// Predicate nesting levels (0 = predicates not synthesized).
+    pub fn predicate_levels(mut self, levels: usize) -> GpuBuilder {
+        self.cfg.predicate_levels = levels;
+        self
+    }
+
+    /// Dot-product extension core.
+    pub fn dot_core(mut self, on: bool) -> GpuBuilder {
+        self.cfg.dot_core = on;
+        self
+    }
+
+    /// SFU (reciprocal square root) extension core.
+    pub fn sfu(mut self, on: bool) -> GpuBuilder {
+        self.cfg.sfu = on;
+        self
+    }
+
+    /// Datapath backend (native rust lanes or the XLA artifacts).
+    pub fn backend(mut self, backend: Backend) -> GpuBuilder {
+        self.backend = backend;
+        self
+    }
+
+    /// The configuration as built so far.
+    pub fn as_config(&self) -> &EgpuConfig {
+        &self.cfg
+    }
+
+    fn build_machine(&self) -> Result<Machine, ApiError> {
+        match &self.backend {
+            Backend::Native => Machine::new(self.cfg.clone()).map_err(ApiError::Sim),
+            Backend::Xla(dir) => {
+                let be = XlaDatapath::new(dir, self.cfg.wavefronts())
+                    .map_err(ApiError::Backend)?;
+                Machine::with_backend(self.cfg.clone(), Some(Box::new(be)))
+                    .map_err(ApiError::Sim)
+            }
+        }
+    }
+
+    /// Build a single-core device handle.
+    pub fn build(self) -> Result<Gpu, ApiError> {
+        self.cfg.validate()?;
+        let machine = self.build_machine()?;
+        Ok(Gpu::from_machine(machine))
+    }
+
+    /// Build an `cores`-core array with stream-ordered submission.
+    /// Streams currently run on the native datapath only.
+    pub fn build_array(self, cores: usize) -> Result<GpuArray, ApiError> {
+        if !matches!(self.backend, Backend::Native) {
+            return Err(ApiError::Backend(
+                "GpuArray streams support the native datapath only".into(),
+            ));
+        }
+        self.cfg.validate()?;
+        GpuArray::new(self.cfg, cores)
+    }
+}

@@ -1,0 +1,161 @@
+//! Multi-core stream submission: ordered-per-stream launches over the
+//! [`Coordinator`] and its shared 32-bit data bus.
+//!
+//! A [`Stream`] is an ordered lane of work. Launches submitted on one
+//! stream execute in submission order on one core (stream→core
+//! affinity), so `chained` launches — the paper's §7 "multiple
+//! algorithms to the same data" mode — have a well-defined home: the
+//! core holding the stream's resident shared memory. Launches on
+//! different streams spread across cores and overlap, with load/unload
+//! DMA serialized on the single external bus.
+
+use crate::coordinator::{Coordinator, Job};
+use crate::kernels::Kernel;
+use crate::sim::config::EgpuConfig;
+
+use super::gpu::LaunchReport;
+use super::ApiError;
+
+/// An ordered submission lane on a [`GpuArray`]. Cheap handle; create
+/// with [`GpuArray::stream`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stream {
+    id: u64,
+}
+
+impl Stream {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+}
+
+/// An array of eGPU cores behind one data bus, with stream-ordered
+/// submission. Built by
+/// [`GpuBuilder::build_array`](super::GpuBuilder::build_array).
+pub struct GpuArray {
+    coord: Coordinator,
+    next_stream: u64,
+}
+
+impl GpuArray {
+    pub(crate) fn new(cfg: EgpuConfig, cores: usize) -> Result<GpuArray, ApiError> {
+        Ok(GpuArray {
+            coord: Coordinator::new(cfg, cores).map_err(ApiError::Sim)?,
+            next_stream: 0,
+        })
+    }
+
+    pub fn config(&self) -> &EgpuConfig {
+        self.coord.config()
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.coord.num_cores()
+    }
+
+    /// Open a new stream.
+    pub fn stream(&mut self) -> Stream {
+        let id = self.next_stream;
+        self.next_stream += 1;
+        Stream { id }
+    }
+
+    /// Build a launch on a stream (ordered after everything previously
+    /// submitted on that stream, on the stream's core).
+    pub fn launch_on(&mut self, stream: &Stream, kernel: Kernel) -> StreamLaunch<'_> {
+        StreamLaunch {
+            job: Job::new(kernel).on_stream(stream.id),
+            array: self,
+        }
+    }
+
+    /// Build an unordered launch (earliest-free-core placement).
+    pub fn launch(&mut self, kernel: Kernel) -> StreamLaunch<'_> {
+        StreamLaunch {
+            job: Job::new(kernel),
+            array: self,
+        }
+    }
+
+    /// Run every submitted launch to completion and return their
+    /// reports, in submission order.
+    pub fn sync(&mut self) -> Result<Vec<LaunchReport>, ApiError> {
+        let results = self.coord.run_all().map_err(ApiError::Sim)?;
+        Ok(results.into_iter().map(LaunchReport::from).collect())
+    }
+
+    /// Completion cycle of the last finishing core.
+    pub fn makespan(&self) -> u64 {
+        self.coord.makespan()
+    }
+
+    /// Makespan in microseconds at the configured core clock.
+    pub fn makespan_us(&self) -> f64 {
+        self.coord.makespan_us()
+    }
+
+    /// Escape hatch: the underlying coordinator.
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coord
+    }
+}
+
+/// A launch being assembled for stream submission: inputs are DMA'd in
+/// over the bus before the run, outputs DMA'd out after, both accounted
+/// per §7. Consumed by [`StreamLaunch::submit`].
+#[must_use = "a stream launch does nothing until .submit()"]
+pub struct StreamLaunch<'a> {
+    array: &'a mut GpuArray,
+    job: Job,
+}
+
+impl StreamLaunch<'_> {
+    /// DMA raw words into shared memory at `base` before the run.
+    pub fn input_words(mut self, base: usize, words: Vec<u32>) -> Self {
+        self.job = self.job.load(base, words);
+        self
+    }
+
+    /// DMA `f32` data into shared memory at `base` before the run.
+    pub fn input_f32(self, base: usize, data: &[f32]) -> Self {
+        self.input_words(base, data.iter().map(|v| v.to_bits()).collect())
+    }
+
+    /// DMA `i32` data into shared memory at `base` before the run.
+    pub fn input_i32(self, base: usize, data: &[i32]) -> Self {
+        self.input_words(base, data.iter().map(|&v| v as u32).collect())
+    }
+
+    /// DMA `len` words out from `base` after the run (retrieved from
+    /// [`LaunchReport::outputs`] in declaration order).
+    pub fn output(mut self, base: usize, len: usize) -> Self {
+        self.job = self.job.unload(base, len);
+        self
+    }
+
+    /// Chain onto the stream's resident data: skip the input DMA and do
+    /// not clear shared memory (§7: "there is no loading and unloading
+    /// of data between different algorithms").
+    ///
+    /// [`GpuArray::sync`] errors if the stream has no previous launch,
+    /// if other work has since displaced the stream's data from its
+    /// core, or if the launch also declares inputs (they would be
+    /// silently skipped).
+    pub fn chained(mut self) -> Self {
+        self.job = self.job.chained();
+        self
+    }
+
+    /// Cycle budget (defaults to
+    /// [`DEFAULT_CYCLE_BUDGET`](crate::coordinator::DEFAULT_CYCLE_BUDGET)).
+    pub fn max_cycles(mut self, max_cycles: u64) -> Self {
+        self.job = self.job.budget(max_cycles);
+        self
+    }
+
+    /// Queue the launch. Nothing executes until
+    /// [`GpuArray::sync`].
+    pub fn submit(self) {
+        self.array.coord.submit(self.job);
+    }
+}

@@ -14,9 +14,17 @@
 //! jobs (`keep_data`) skip the bus entirely — the paper's "multiple
 //! algorithms to the same data" mode.
 
+use std::collections::HashMap;
+
 use crate::kernels::Kernel;
 use crate::sim::config::EgpuConfig;
 use crate::sim::{Machine, RunStats, SimError};
+
+/// Default kernel cycle budget: bounds runaway programs without ever
+/// tripping on a real workload (the largest paper kernel, MMM-128, runs
+/// ~2.3M cycles). [`crate::api::LaunchBuilder::max_cycles`] and
+/// [`Job::budget`] override it.
+pub const DEFAULT_CYCLE_BUDGET: u64 = 10_000_000_000;
 
 /// The external 32-bit data bus: one 32-bit word per bus cycle, clocked at
 /// the core frequency (§7 measures load/unload at the core clock).
@@ -48,6 +56,13 @@ pub struct Job {
     /// do not clear shared memory (§7: "there is no loading and unloading
     /// of data between different algorithms").
     pub keep_data: bool,
+    /// Stream this job belongs to. Jobs on one stream execute in
+    /// submission order on one core (stream→core affinity), which is what
+    /// makes `keep_data` chaining well-defined; `None` uses the legacy
+    /// earliest-free-core placement.
+    pub stream: Option<u64>,
+    /// Cycle budget for the kernel run.
+    pub max_cycles: u64,
 }
 
 impl Job {
@@ -57,6 +72,8 @@ impl Job {
             loads: Vec::new(),
             unloads: Vec::new(),
             keep_data: false,
+            stream: None,
+            max_cycles: DEFAULT_CYCLE_BUDGET,
         }
     }
 
@@ -72,6 +89,18 @@ impl Job {
 
     pub fn chained(mut self) -> Job {
         self.keep_data = true;
+        self
+    }
+
+    /// Bind the job to a stream (ordered-per-stream, core affinity).
+    pub fn on_stream(mut self, stream: u64) -> Job {
+        self.stream = Some(stream);
+        self
+    }
+
+    /// Override the default kernel cycle budget.
+    pub fn budget(mut self, max_cycles: u64) -> Job {
+        self.max_cycles = max_cycles;
         self
     }
 
@@ -93,6 +122,8 @@ impl Job {
 pub struct JobResult {
     pub name: String,
     pub core: usize,
+    /// Stream the job was submitted on, if any.
+    pub stream: Option<u64>,
     /// Kernel cycles (the paper's core-performance metric).
     pub compute_cycles: u64,
     /// Bus cycles spent on load + unload DMA.
@@ -105,10 +136,21 @@ pub struct JobResult {
     pub outputs: Vec<Vec<u32>>,
 }
 
+/// Bus share of an end-to-end interval: `bus / (bus + compute)`, and 0
+/// (not NaN) when both terms are zero. The single definition behind
+/// [`JobResult::bus_overhead`] and the `api` accounting.
+pub fn bus_fraction(bus_cycles: u64, compute_cycles: u64) -> f64 {
+    let total = bus_cycles + compute_cycles;
+    if total == 0 {
+        return 0.0;
+    }
+    bus_cycles as f64 / total as f64
+}
+
 impl JobResult {
     /// Fraction of end-to-end time spent on the bus (§7's 4.7% claim).
     pub fn bus_overhead(&self) -> f64 {
-        self.bus_cycles as f64 / (self.bus_cycles + self.compute_cycles) as f64
+        bus_fraction(self.bus_cycles, self.compute_cycles)
     }
 }
 
@@ -161,6 +203,16 @@ pub struct Coordinator {
     /// Shared-bus reservation calendar.
     bus_cal: BusCalendar,
     queue: Vec<Job>,
+    /// Stream → core affinity (persists across `run_all` batches so a
+    /// stream's data stays resident where it was placed).
+    stream_core: HashMap<u64, usize>,
+    /// Stream whose data is currently resident on each core (the stream
+    /// of the last job dispatched there; `None` = an unordered job).
+    /// Chained jobs must find their own stream's data still resident.
+    core_resident: Vec<Option<u64>>,
+    /// Core of the most recently dispatched job (legacy `keep_data`
+    /// chaining for jobs without a stream).
+    last_core: Option<usize>,
 }
 
 impl Coordinator {
@@ -174,6 +226,9 @@ impl Coordinator {
             core_free: vec![0; num_cores],
             bus_cal: BusCalendar::default(),
             queue: Vec::new(),
+            stream_core: HashMap::new(),
+            core_resident: vec![None; num_cores],
+            last_core: None,
             cfg,
             cores,
         })
@@ -192,23 +247,130 @@ impl Coordinator {
         self.queue.push(job);
     }
 
-    /// Dispatch every queued job: earliest-free-core policy, bus DMA
-    /// serialized across cores, compute overlapped. Chained jobs must run
-    /// on the core holding their data, so they go to the same core as the
-    /// previous job.
+    /// Dispatch every queued job: bus DMA serialized across cores,
+    /// compute overlapped. Placement policy, in priority order:
+    ///
+    /// 1. A job on a stream that already owns a core goes to that core
+    ///    (stream affinity — this is what makes `keep_data` chaining
+    ///    well-defined). A *chained* stream job additionally requires its
+    ///    stream's data to still be resident there — if other work has
+    ///    since been placed on that core, dispatch errors rather than
+    ///    silently computing on someone else's data.
+    /// 2. A chained (`keep_data`) job without an affine core goes to the
+    ///    core of the previously dispatched job; if there is no previous
+    ///    job, that is an error (there is no resident data to chain onto
+    ///    — previously this silently chained onto core 0).
+    /// 3. Everything else goes to the earliest-free core.
+    ///
+    /// A chained job declaring input loads is an error: the loads would
+    /// be silently skipped.
     pub fn run_all(&mut self) -> Result<Vec<JobResult>, SimError> {
-        let mut results = Vec::with_capacity(self.queue.len());
         let jobs = std::mem::take(&mut self.queue);
-        let mut last_core = 0usize;
+        // Statically-checkable submission errors fail the whole batch
+        // up front, before any job executes or reserves bus time. Only
+        // data *eviction* (which depends on earliest-free placement of
+        // other jobs) must be detected during dispatch.
+        let mut known_streams: std::collections::HashSet<u64> =
+            self.stream_core.keys().copied().collect();
+        let mut any_prior = self.last_core.is_some();
+        for job in &jobs {
+            if job.keep_data {
+                if !job.loads.is_empty() {
+                    return Err(SimError {
+                        pc: 0,
+                        message: format!(
+                            "job '{}' chains (keep_data) but also declares input loads; \
+                             chained jobs reuse resident data and skip the load DMA",
+                            job.kernel.name
+                        ),
+                    });
+                }
+                match job.stream {
+                    Some(s) if !known_streams.contains(&s) => {
+                        return Err(SimError {
+                            pc: 0,
+                            message: format!(
+                                "job '{}' chains (keep_data) as the first job on \
+                                 stream {s}: no resident data to chain onto",
+                                job.kernel.name
+                            ),
+                        })
+                    }
+                    None if !any_prior => {
+                        return Err(SimError {
+                            pc: 0,
+                            message: format!(
+                                "job '{}' chains (keep_data) but no job has run \
+                                 yet: no resident data to chain onto",
+                                job.kernel.name
+                            ),
+                        })
+                    }
+                    _ => {}
+                }
+            }
+            if let Some(s) = job.stream {
+                known_streams.insert(s);
+            }
+            any_prior = true;
+        }
+        let mut results = Vec::with_capacity(jobs.len());
         for job in jobs {
-            let core = if job.keep_data {
-                last_core
-            } else {
-                (0..self.cores.len())
+            let affine = job.stream.and_then(|s| self.stream_core.get(&s).copied());
+            let core = match affine {
+                Some(c) => {
+                    // Chaining requires the stream's data to still be
+                    // resident: another stream (or an unordered job) may
+                    // have been placed on this core since and cleared it.
+                    if job.keep_data && self.core_resident[c] != job.stream {
+                        return Err(SimError {
+                            pc: 0,
+                            message: format!(
+                                "job '{}' chains (keep_data) on stream {}, but core {c} \
+                                 has since run other work: the stream's resident data \
+                                 is gone",
+                                job.kernel.name,
+                                job.stream.unwrap_or_default()
+                            ),
+                        });
+                    }
+                    c
+                }
+                // Backstop arms: the pre-validation above already rejects
+                // these; kept so a placement bug degrades to an error,
+                // not a silent wrong answer.
+                None if job.keep_data => match (job.stream, self.last_core) {
+                    (Some(s), _) => {
+                        return Err(SimError {
+                            pc: 0,
+                            message: format!(
+                                "job '{}' chains (keep_data) as the first job on \
+                                 stream {s}: no resident data to chain onto",
+                                job.kernel.name
+                            ),
+                        })
+                    }
+                    (None, Some(c)) => c,
+                    (None, None) => {
+                        return Err(SimError {
+                            pc: 0,
+                            message: format!(
+                                "job '{}' chains (keep_data) but no job has run \
+                                 yet: no resident data to chain onto",
+                                job.kernel.name
+                            ),
+                        })
+                    }
+                },
+                None => (0..self.cores.len())
                     .min_by_key(|&c| self.core_free[c])
-                    .unwrap()
+                    .unwrap(),
             };
-            last_core = core;
+            if let Some(s) = job.stream {
+                self.stream_core.insert(s, core);
+            }
+            self.last_core = Some(core);
+            self.core_resident[core] = job.stream;
             let r = self.run_on(core, job)?;
             results.push(r);
         }
@@ -238,7 +400,7 @@ impl Coordinator {
                 m.shared_mut().write_block(*base, data);
             }
         }
-        let stats = m.run(10_000_000_000)?;
+        let stats = m.run(job.max_cycles)?;
 
         // Bus phase 2: unload DMA.
         let unload_cycles = self.bus.transfer_cycles(job.unload_words());
@@ -255,6 +417,7 @@ impl Coordinator {
         Ok(JobResult {
             name: job.kernel.name.clone(),
             core,
+            stream: job.stream,
             compute_cycles: stats.cycles,
             bus_cycles: load_cycles + unload_cycles,
             start,
@@ -275,12 +438,24 @@ impl Coordinator {
     }
 }
 
+/// Mean of overhead fractions; 0 on an empty set. Shared by
+/// [`average_bus_overhead`] and [`crate::api::average_bus_overhead`].
+pub(crate) fn mean_overhead(overheads: impl Iterator<Item = f64>) -> f64 {
+    let (mut sum, mut n) = (0.0f64, 0usize);
+    for v in overheads {
+        sum += v;
+        n += 1;
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
 /// Unweighted mean of per-job bus overheads.
 pub fn average_bus_overhead(results: &[JobResult]) -> f64 {
-    if results.is_empty() {
-        return 0.0;
-    }
-    results.iter().map(JobResult::bus_overhead).sum::<f64>() / results.len() as f64
+    mean_overhead(results.iter().map(JobResult::bus_overhead))
 }
 
 /// Time-weighted bus overhead: total bus cycles over total end-to-end
@@ -430,5 +605,127 @@ mod tests {
         c.run_all().unwrap();
         assert!(c.makespan() > 0);
         assert!(c.makespan_us() > 0.0);
+    }
+
+    #[test]
+    fn bus_overhead_of_zero_cycle_job_is_zero_not_nan() {
+        // Regression: bus_cycles + compute_cycles == 0 divided by zero.
+        let r = JobResult {
+            name: "empty".into(),
+            core: 0,
+            stream: None,
+            compute_cycles: 0,
+            bus_cycles: 0,
+            start: 0,
+            end: 0,
+            stats: RunStats {
+                cycles: 0,
+                instructions: 0,
+                profile: crate::sim::Profile::new(),
+                hazards: 0,
+                hazard_samples: Vec::new(),
+            },
+            outputs: Vec::new(),
+        };
+        assert_eq!(r.bus_overhead(), 0.0);
+        assert_eq!(average_bus_overhead(&[r]), 0.0);
+    }
+
+    #[test]
+    fn first_chained_job_is_an_error_not_core0() {
+        // Regression: a first-submitted keep_data job used to silently
+        // chain onto core 0 with no resident data.
+        let mut c = Coordinator::new(cfg(), 2).unwrap();
+        c.submit(Job::new(reduction::reduction(32)).chained());
+        let err = c.run_all().unwrap_err();
+        assert!(err.message.contains("no resident data"), "{err}");
+        // The coordinator stays usable.
+        c.submit(job(32));
+        assert_eq!(c.run_all().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn first_chained_job_on_a_stream_is_an_error() {
+        let mut c = Coordinator::new(cfg(), 2).unwrap();
+        c.submit(job(32).on_stream(7));
+        c.run_all().unwrap();
+        // Stream 9 has never run: chaining onto it must fail even though
+        // stream 7 has resident data.
+        c.submit(Job::new(reduction::reduction(32)).on_stream(9).chained());
+        let err = c.run_all().unwrap_err();
+        assert!(err.message.contains("stream 9"), "{err}");
+    }
+
+    #[test]
+    fn stream_affinity_pins_jobs_to_one_core() {
+        let mut c = Coordinator::new(cfg(), 4).unwrap();
+        for _ in 0..3 {
+            c.submit(job(32).on_stream(1));
+        }
+        let rs = c.run_all().unwrap();
+        assert!(rs.iter().all(|r| r.core == rs[0].core), "stream hops cores");
+        assert!(rs.iter().all(|r| r.stream == Some(1)));
+        // Ordered per stream: each job starts at or after the previous end.
+        assert!(rs.windows(2).all(|w| w[1].start >= w[0].end));
+    }
+
+    #[test]
+    fn stream_affinity_survives_run_all_batches() {
+        let mut c = Coordinator::new(cfg(), 4).unwrap();
+        c.submit(job(32).on_stream(3));
+        let first = c.run_all().unwrap();
+        // A later batch chains onto the stream's resident data: same core,
+        // no load DMA.
+        use crate::kernels::transpose;
+        let n = 32;
+        let data: Vec<u32> = (0..(n * n) as u32).collect();
+        c.submit(Job::new(transpose::transpose(n)).load(0, data).on_stream(3));
+        c.submit(
+            Job::new(transpose::transpose(n))
+                .unload(n * n, n * n)
+                .on_stream(3)
+                .chained(),
+        );
+        let rs = c.run_all().unwrap();
+        assert_eq!(rs[0].core, first[0].core);
+        assert_eq!(rs[1].core, first[0].core);
+        assert_eq!(rs[1].bus_cycles, (n * n) as u64, "chained: unload DMA only");
+    }
+
+    #[test]
+    fn chained_job_errors_when_stream_data_evicted() {
+        // Streams outnumber cores: stream 2's fresh job lands on stream
+        // 0's core (earliest free) and clears it. Chaining on stream 0
+        // afterwards must error, not silently compute on stream 2's data.
+        let mut c = Coordinator::new(cfg(), 2).unwrap();
+        c.submit(job(32).on_stream(0));
+        c.submit(job(32).on_stream(1));
+        c.submit(job(32).on_stream(2));
+        let rs = c.run_all().unwrap();
+        assert_eq!(rs[0].core, rs[2].core, "stream 2 evicts stream 0");
+        c.submit(Job::new(reduction::reduction(32)).on_stream(0).chained());
+        let err = c.run_all().unwrap_err();
+        assert!(err.message.contains("resident data is gone"), "{err}");
+    }
+
+    #[test]
+    fn chained_job_with_input_loads_is_rejected_before_anything_runs() {
+        // The load DMA of a keep_data job would be silently skipped;
+        // declaring both fails the batch up front — the earlier valid
+        // job must not have half-executed.
+        let mut c = Coordinator::new(cfg(), 1).unwrap();
+        c.submit(job(32));
+        c.submit(job(32).chained());
+        let err = c.run_all().unwrap_err();
+        assert!(err.message.contains("input loads"), "{err}");
+        assert_eq!(c.makespan(), 0, "no job may execute on a rejected batch");
+    }
+
+    #[test]
+    fn job_budget_bounds_the_run() {
+        let mut c = Coordinator::new(cfg(), 1).unwrap();
+        c.submit(job(128).budget(10));
+        let err = c.run_all().unwrap_err();
+        assert!(err.message.contains("cycle limit"), "{err}");
     }
 }

@@ -157,6 +157,8 @@ fn measure_nios(stats: NiosStats) -> Measurement {
 }
 
 fn run_egpu(kernel: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)]) -> (Measurement, crate::sim::Machine) {
+    // Kernel::run is the api shim (Gpu::launch under the hood) that
+    // hands the machine back for the oracle checks below.
     let (stats, m) = kernel
         .run(cfg, init)
         .unwrap_or_else(|e| panic!("{}: {e}", kernel.name));

@@ -45,23 +45,24 @@ impl Kernel {
         assemble(&self.asm, cfg.word_layout()).map_err(|e| format!("{}: {e}", self.name))
     }
 
-    /// Build a machine, load data into shared memory, run to STOP.
+    /// Build a device, load data into shared memory, run to STOP.
     /// Returns the stats and the machine (for reading results back).
+    ///
+    /// Legacy shim over [`crate::api::Gpu`], kept because the bench and
+    /// oracle harnesses want the raw machine back. New code should use
+    /// [`crate::api::Gpu::launch`] directly; the two paths are
+    /// cycle- and bit-identical (`rust/tests/api_parity.rs`).
     pub fn run(
         &self,
         cfg: &EgpuConfig,
         shared_init: &[(usize, Vec<u32>)],
     ) -> Result<(RunStats, Machine), SimError> {
-        let prog = self.assemble(cfg).map_err(|m| SimError { pc: 0, message: m })?;
-        let mut machine = Machine::new(cfg.clone())?;
-        machine.load_program(prog)?;
-        machine.set_threads(self.threads)?;
-        machine.set_dim_x(self.dim_x)?;
+        let mut gpu = crate::api::Gpu::new(cfg)?;
         for (base, data) in shared_init {
-            machine.shared_mut().write_block(*base, data);
+            gpu.write_words(*base, data)?;
         }
-        let stats = machine.run(1_000_000_000)?;
-        Ok((stats, machine))
+        let report = gpu.launch(self).run()?;
+        Ok((report.stats, gpu.into_machine()))
     }
 }
 

@@ -3,6 +3,10 @@
 //! Reproduction of Langhammer & Constantinides, *"A Statically and
 //! Dynamically Scalable Soft GPGPU"* (2024). The crate contains:
 //!
+//! - [`api`] — the unified runtime API: [`api::GpuBuilder`] (static
+//!   scalability), [`api::Gpu`] + typed [`api::Buffer`]s with uniform
+//!   bus accounting, [`api::LaunchBuilder`] (dynamic scalability), and
+//!   [`api::Stream`]s over a multi-core [`api::GpuArray`] — start here
 //! - [`isa`] — the 61-instruction ISA, instruction-word codec (Figure 3),
 //!   dynamic thread-space control (Table 3)
 //! - [`asm`] — the assembler/disassembler the benchmarks are written in
@@ -25,6 +29,7 @@
 //! See DESIGN.md for the paper→module map and EXPERIMENTS.md for
 //! paper-vs-measured results.
 
+pub mod api;
 pub mod asm;
 pub mod baseline;
 pub mod coordinator;

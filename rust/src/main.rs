@@ -11,6 +11,7 @@
 
 use std::process::ExitCode;
 
+use egpu::api::{ApiError, Backend, Gpu, DEFAULT_CYCLE_BUDGET};
 use egpu::asm::assemble;
 use egpu::harness::{suite, Table, Variant};
 use egpu::isa::Group;
@@ -20,7 +21,7 @@ use egpu::model::frequency::FrequencyReport;
 use egpu::model::resources::ResourceReport;
 use egpu::place;
 use egpu::runtime::default_artifacts_dir;
-use egpu::sim::{EgpuConfig, Machine, MemoryMode};
+use egpu::sim::{EgpuConfig, MemoryMode};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -59,7 +60,7 @@ COMMANDS:
                     (NAME: reduction, transpose, mmm, bitonic, fft)
   profile           print the Figure 6 instruction-mix profiles
   place [PRESET]    place a configuration into an Agilex sector (Figures 4/5)
-  run FILE.asm [--threads N] [--qp] [--xla]
+  run FILE.asm [--threads N] [--qp] [--xla] [--max-cycles N]
                     assemble and run a program, dumping stats
   info              list presets and artifact status
 ";
@@ -239,6 +240,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let mut threads = None;
     let mut memory = MemoryMode::Dp;
     let mut use_xla = false;
+    let mut max_cycles = DEFAULT_CYCLE_BUDGET;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -250,6 +252,13 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                         .ok_or("--threads needs a number")?,
                 );
             }
+            "--max-cycles" => {
+                i += 1;
+                max_cycles = args
+                    .get(i)
+                    .and_then(|s| s.parse::<u64>().ok())
+                    .ok_or("--max-cycles needs a number")?;
+            }
             "--qp" => memory = MemoryMode::Qp,
             "--xla" => use_xla = true,
             f if !f.starts_with('-') => file = Some(f.to_string()),
@@ -257,7 +266,8 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         }
         i += 1;
     }
-    let file = file.ok_or("usage: egpu run FILE.asm [--threads N] [--qp] [--xla]")?;
+    let file =
+        file.ok_or("usage: egpu run FILE.asm [--threads N] [--qp] [--xla] [--max-cycles N]")?;
     let src = std::fs::read_to_string(&file).map_err(|e| format!("{file}: {e}"))?;
 
     let mut cfg = EgpuConfig::benchmark(memory, true);
@@ -269,18 +279,25 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         prog.instruction_m20ks()
     );
 
-    let mut m = if use_xla {
-        let be = egpu::datapath::xla::XlaDatapath::new(default_artifacts_dir(), cfg.wavefronts())
-            .map_err(|e| format!("XLA backend: {e} (run `make artifacts`)"))?;
-        Machine::with_backend(cfg.clone(), Some(Box::new(be))).map_err(|e| e.to_string())?
+    let backend = if use_xla {
+        Backend::Xla(default_artifacts_dir())
     } else {
-        Machine::new(cfg.clone()).map_err(|e| e.to_string())?
+        Backend::Native
     };
-    m.load_program(prog).map_err(|e| e.to_string())?;
+    let mut gpu = Gpu::builder()
+        .config(cfg.clone())
+        .backend(backend)
+        .build()
+        .map_err(|e| match e {
+            ApiError::Backend(_) => format!("{e} (run `make artifacts`)"),
+            other => other.to_string(),
+        })?;
+    let mut launch = gpu.launch_program(file.as_str(), prog).max_cycles(max_cycles);
     if let Some(t) = threads {
-        m.set_threads(t).map_err(|e| e.to_string())?;
+        launch = launch.threads(t);
     }
-    let stats = m.run(1_000_000_000).map_err(|e| e.to_string())?;
+    let report = launch.run().map_err(|e| e.to_string())?;
+    let stats = &report.stats;
     println!(
         "cycles: {}   instructions: {}   time at {:.0} MHz: {:.2} us   hazards: {}",
         stats.cycles,

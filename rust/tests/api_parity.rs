@@ -1,0 +1,286 @@
+//! The `egpu::api` redesign invariant: every kernel produces bit-identical
+//! outputs and identical cycle counts through `Gpu::launch` as through the
+//! legacy `Machine` dance (`new → load_program → set_threads → set_dim_x →
+//! run`), and the quickstart flow works end to end (assemble → launch →
+//! readback) on both paths.
+
+use egpu::api::{ApiError, Gpu, LaunchReport};
+use egpu::harness::Rng;
+use egpu::kernels::{bitonic, f32_bits, fft, mmm, reduction, transpose, Kernel};
+use egpu::sim::{EgpuConfig, Machine, MemoryMode, RunStats};
+
+/// The pre-redesign execution surface, verbatim.
+fn legacy_run(kernel: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)]) -> (RunStats, Machine) {
+    let prog = kernel.assemble(cfg).unwrap();
+    let mut m = Machine::new(cfg.clone()).unwrap();
+    m.load_program(prog).unwrap();
+    m.set_threads(kernel.threads).unwrap();
+    m.set_dim_x(kernel.dim_x).unwrap();
+    for (base, data) in init {
+        m.shared_mut().write_block(*base, data);
+    }
+    let stats = m.run(1_000_000_000).unwrap();
+    (stats, m)
+}
+
+/// The same work through the unified API.
+fn api_run(kernel: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)]) -> (LaunchReport, Machine) {
+    let mut gpu = Gpu::new(cfg).unwrap();
+    for (base, data) in init {
+        gpu.write_words(*base, data).unwrap();
+    }
+    let report = gpu.launch(kernel).run().unwrap();
+    (report, gpu.into_machine())
+}
+
+/// Assert full-machine parity: cycle count, instruction count, and the
+/// entire shared memory, bit for bit.
+fn assert_parity(kernel: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)]) {
+    let (stats, legacy) = legacy_run(kernel, cfg, init);
+    let (report, api) = api_run(kernel, cfg, init);
+    assert_eq!(
+        stats.cycles, report.compute_cycles,
+        "{}: cycle count diverges between legacy and api paths",
+        kernel.name
+    );
+    assert_eq!(
+        stats.instructions, report.stats.instructions,
+        "{}: instruction count diverges",
+        kernel.name
+    );
+    let words = cfg.shared_words();
+    assert_eq!(
+        legacy.shared().read_block(0, words),
+        api.shared().read_block(0, words),
+        "{}: shared memory diverges",
+        kernel.name
+    );
+}
+
+#[test]
+fn reduction_parity() {
+    let n = 64;
+    let mut rng = Rng::new(0xA11);
+    let data: Vec<f32> = (0..n).map(|_| rng.f32_in(-4.0, 4.0)).collect();
+    assert_parity(
+        &reduction::reduction(n),
+        &EgpuConfig::benchmark(MemoryMode::Dp, false),
+        &[(0, f32_bits(&data))],
+    );
+    assert_parity(
+        &reduction::reduction_dot(n),
+        &EgpuConfig::benchmark(MemoryMode::Dp, true),
+        &[(0, f32_bits(&data))],
+    );
+}
+
+#[test]
+fn transpose_parity() {
+    let n = 32;
+    let mut rng = Rng::new(0xA12);
+    let mat: Vec<u32> = (0..n * n).map(|_| rng.next_u32()).collect();
+    for mode in [MemoryMode::Dp, MemoryMode::Qp] {
+        assert_parity(
+            &transpose::transpose_for(n, mode),
+            &EgpuConfig::benchmark(mode, false),
+            &[(0, mat.clone())],
+        );
+    }
+}
+
+#[test]
+fn mmm_parity() {
+    let n = 32;
+    let mut rng = Rng::new(0xA13);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+    assert_parity(
+        &mmm::mmm_for(n, MemoryMode::Dp),
+        &mmm::config(n, MemoryMode::Dp, false),
+        &[(0, f32_bits(&a)), (n * n, f32_bits(&b))],
+    );
+}
+
+#[test]
+fn bitonic_parity() {
+    let n = 64;
+    let mut rng = Rng::new(0xA14);
+    let data: Vec<u32> = (0..n).map(|_| rng.next_u32() >> 2).collect();
+    assert_parity(
+        &bitonic::bitonic_for(n, MemoryMode::Dp),
+        &EgpuConfig::benchmark_predicated(MemoryMode::Dp),
+        &[(0, data)],
+    );
+}
+
+#[test]
+fn fft_parity() {
+    let n = 64;
+    let mut rng = Rng::new(0xA15);
+    let re: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    let im: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    assert_parity(
+        &fft::fft_for(n, MemoryMode::Dp),
+        &EgpuConfig::benchmark(MemoryMode::Dp, false),
+        &fft::shared_init(&re, &im),
+    );
+}
+
+#[test]
+fn stream_path_matches_immediate_path() {
+    // One job through a 1-core GpuArray produces the same compute cycles
+    // and outputs as the immediate Gpu path.
+    let n = 64;
+    let mut rng = Rng::new(0xA16);
+    let data: Vec<f32> = (0..n).map(|_| rng.f32_in(-4.0, 4.0)).collect();
+    let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+
+    let mut gpu = Gpu::new(&cfg).unwrap();
+    let input = gpu.alloc_at::<f32>(0, n).unwrap();
+    let sum = gpu.alloc_at::<f32>(n, 1).unwrap();
+    gpu.upload(&input, &data).unwrap();
+    let immediate = gpu.launch(&reduction::reduction(n)).run().unwrap();
+    let direct = gpu.download(&sum).unwrap()[0];
+
+    let mut array = Gpu::builder().config(cfg).build_array(1).unwrap();
+    let s = array.stream();
+    array
+        .launch_on(&s, reduction::reduction(n))
+        .input_f32(0, &data)
+        .output(n, 1)
+        .submit();
+    let reports = array.sync().unwrap();
+    assert_eq!(reports.len(), 1);
+    assert_eq!(reports[0].compute_cycles, immediate.compute_cycles);
+    assert_eq!(reports[0].output_f32(0)[0], direct);
+    assert_eq!(reports[0].stream, Some(s.id()));
+}
+
+#[test]
+fn quickstart_flow_end_to_end() {
+    // The quickstart example's flow (assemble → launch → readback) as an
+    // integration test, with parity against the legacy Machine path.
+    let src = "
+        tdx r0
+        lod r1, (r0)+0
+        fmul r2, r1, r1
+        sto r2, (r0)+512
+        [w1,d0] ldi r3, #1
+        nop
+        nop
+        nop
+        nop
+        nop
+        [w1,d0] sto r3, (r3)+1023
+        stop
+    ";
+    let xs: Vec<f32> = (0..512).map(|i| i as f32 * 0.5).collect();
+
+    // New API.
+    let mut gpu = Gpu::builder().threads(512).shared_kb(32).build().unwrap();
+    let input = gpu.alloc_at::<f32>(0, 512).unwrap();
+    let squares = gpu.alloc_at::<f32>(512, 512).unwrap();
+    let flag = gpu.alloc_at::<u32>(1024, 1).unwrap();
+    gpu.upload(&input, &xs).unwrap();
+    let report = gpu.launch_asm("square", src).run().unwrap();
+    let ys = gpu.download(&squares).unwrap();
+    for (x, y) in xs.iter().zip(&ys) {
+        assert_eq!(*y, x * x);
+    }
+    assert_eq!(gpu.download(&flag).unwrap()[0], 1);
+
+    // Legacy path: identical cycles and identical shared state.
+    let cfg = EgpuConfig::default();
+    let prog = egpu::asm::assemble(src, cfg.word_layout()).unwrap();
+    let mut m = Machine::new(cfg.clone()).unwrap();
+    m.load_program(prog).unwrap();
+    for (i, x) in xs.iter().enumerate() {
+        m.shared_mut().write(i as u32, x.to_bits()).unwrap();
+    }
+    let stats = m.run(1_000_000).unwrap();
+    assert_eq!(stats.cycles, report.compute_cycles);
+    let words = cfg.shared_words();
+    assert_eq!(
+        m.shared().read_block(0, words),
+        gpu.machine().shared().read_block(0, words)
+    );
+}
+
+#[test]
+fn bus_accounting_counts_every_word_once() {
+    let n = 128usize;
+    let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+    let mut gpu = Gpu::new(&cfg).unwrap();
+    let input = gpu.alloc_at::<f32>(0, n).unwrap();
+    let sum = gpu.alloc_at::<f32>(n, 1).unwrap();
+    let data: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+
+    gpu.upload(&input, &data).unwrap();
+    let report = gpu.launch(&reduction::reduction(n)).run().unwrap();
+    let _ = gpu.download(&sum).unwrap();
+
+    // 1 word per bus cycle (§7): n up, 1 down.
+    assert_eq!(report.bus_cycles, n as u64, "upload attributed to launch");
+    assert_eq!(gpu.total_bus_cycles(), n as u64 + 1);
+    assert_eq!(gpu.total_compute_cycles(), report.compute_cycles);
+    assert_eq!(
+        gpu.elapsed_cycles(),
+        n as u64 + 1 + report.compute_cycles,
+        "serial timeline: upload + compute + download"
+    );
+    assert_eq!(gpu.timeline().len(), 2);
+    assert_eq!(report.start, 0);
+    assert_eq!(report.end, n as u64 + report.compute_cycles);
+    let o = report.bus_overhead();
+    assert!(o > 0.0 && o < 1.0, "overhead {o}");
+}
+
+#[test]
+fn launch_budget_and_builder_validation() {
+    let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+    // Tiny cycle budget trips the limit.
+    let mut gpu = Gpu::new(&cfg).unwrap();
+    let data: Vec<f32> = (0..128).map(|i| i as f32).collect();
+    gpu.write_words(0, &f32_bits(&data)).unwrap();
+    let err = gpu
+        .launch(&reduction::reduction(128))
+        .max_cycles(10)
+        .run()
+        .unwrap_err();
+    assert!(matches!(err, ApiError::Sim(ref s) if s.message.contains("cycle limit")), "{err}");
+
+    // Invalid static configuration is rejected at build time.
+    assert!(Gpu::builder().threads(100).build().is_err());
+    assert!(Gpu::builder().regs_per_thread(48).build().is_err());
+}
+
+#[test]
+fn buffers_are_typed_and_bounds_checked() {
+    let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false); // 128 KB = 32768 words
+    let mut gpu = Gpu::new(&cfg).unwrap();
+
+    // Bump allocation walks forward; fixed allocation reserves through.
+    let a = gpu.alloc::<f32>(100).unwrap();
+    let b = gpu.alloc::<i32>(28).unwrap();
+    assert_eq!(a.base(), 0);
+    assert_eq!(b.base(), 100);
+
+    // Typed roundtrips are bit-exact.
+    let fs: Vec<f32> = (0..100).map(|i| i as f32 * -0.5).collect();
+    gpu.upload(&a, &fs).unwrap();
+    assert_eq!(gpu.download(&a).unwrap(), fs);
+    let is: Vec<i32> = (0..28).map(|i| -i).collect();
+    gpu.upload(&b, &is).unwrap();
+    assert_eq!(gpu.download(&b).unwrap(), is);
+
+    // Length and bounds errors.
+    assert!(matches!(
+        gpu.upload(&a, &fs[..50]).unwrap_err(),
+        ApiError::SizeMismatch { expected: 100, got: 50 }
+    ));
+    assert!(matches!(
+        gpu.alloc_at::<u32>(32768, 1).unwrap_err(),
+        ApiError::OutOfMemory { .. }
+    ));
+    assert!(gpu.write_words(32760, &[0; 16]).is_err());
+}

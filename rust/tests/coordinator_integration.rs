@@ -2,6 +2,7 @@
 //! and bus model, including failure injection and a mixed pipeline that
 //! chains algorithms over resident data (§7's primary usage mode).
 
+use egpu::api::Gpu;
 use egpu::coordinator::{average_bus_overhead, Coordinator, Job};
 use egpu::harness::Rng;
 use egpu::kernels::{bitonic, f32_bits, fft, reduction, transpose};
@@ -157,4 +158,108 @@ fn bus_contention_serializes_dma_but_not_compute() {
 #[test]
 fn average_overhead_of_empty_batch_is_zero() {
     assert_eq!(average_bus_overhead(&[]), 0.0);
+}
+
+// ---------------------------------------------------------------------
+// Stream-ordered submission through the `egpu::api` surface.
+// ---------------------------------------------------------------------
+
+#[test]
+fn two_streams_spread_across_cores_and_stay_ordered() {
+    let n = 64;
+    let mut rng = Rng::new(0x51);
+    let mut array = Gpu::builder().config(cfg()).build_array(2).unwrap();
+    let (s0, s1) = (array.stream(), array.stream());
+    let mut wants = Vec::new();
+    for (i, s) in [(0u64, s0), (1, s1), (2, s0), (3, s1)] {
+        let data: Vec<f32> = (0..n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+        wants.push((i, s, data.iter().sum::<f32>()));
+        array
+            .launch_on(&s, reduction::reduction(n))
+            .input_f32(0, &data)
+            .output(n, 1)
+            .submit();
+    }
+    let rs = array.sync().unwrap();
+    assert_eq!(rs.len(), 4);
+    // Each stream stays on one core, the two streams on different cores.
+    assert_eq!(rs[0].core, rs[2].core, "stream 0 affinity");
+    assert_eq!(rs[1].core, rs[3].core, "stream 1 affinity");
+    assert_ne!(rs[0].core, rs[1].core, "streams spread across free cores");
+    // Ordered per stream on the shared timeline.
+    assert!(rs[2].start >= rs[0].end);
+    assert!(rs[3].start >= rs[1].end);
+    // Every result matches its own input (no cross-stream contamination).
+    for (r, (_, s, want)) in rs.iter().zip(&wants) {
+        assert_eq!(r.stream, Some(s.id()));
+        let got = r.output_f32(0)[0];
+        assert!((got - want).abs() < want.abs() * 1e-4 + 1e-2, "{}", r.name);
+    }
+}
+
+#[test]
+fn chained_launch_on_stream_reuses_resident_data() {
+    // Transpose loads the matrix; a chained transpose on the same stream
+    // sees it without any input DMA — §7's "multiple algorithms to the
+    // same data", expressed as stream affinity instead of keep_data on
+    // an implicit last core.
+    let n = 32;
+    let data: Vec<u32> = (0..(n * n) as u32).collect();
+    let mut array = Gpu::builder().config(cfg()).build_array(4).unwrap();
+    let s = array.stream();
+    array
+        .launch_on(&s, transpose::transpose(n))
+        .input_words(0, data.clone())
+        .submit();
+    array
+        .launch_on(&s, transpose::transpose(n))
+        .output(n * n, n * n)
+        .chained()
+        .submit();
+    let rs = array.sync().unwrap();
+    assert_eq!(rs[0].core, rs[1].core, "chained launch must stay on the stream's core");
+    assert_eq!(rs[1].bus_cycles, (n * n) as u64, "only the output DMA");
+    assert_eq!(rs[1].output_words(0), transpose::oracle(&data, n));
+}
+
+#[test]
+fn chained_launch_on_fresh_stream_errors() {
+    // Regression for the silent chain-onto-core-0 bug: chaining with no
+    // resident data is a submission error, surfaced at sync.
+    let mut array = Gpu::builder().config(cfg()).build_array(2).unwrap();
+    let s = array.stream();
+    array
+        .launch_on(&s, reduction::reduction(32))
+        .chained()
+        .submit();
+    let err = array.sync().unwrap_err();
+    assert!(err.to_string().contains("no resident data"), "{err}");
+}
+
+#[test]
+fn mixed_stream_and_unordered_launches() {
+    // Unordered launches fill free cores around a pinned stream.
+    let n = 32;
+    let mut rng = Rng::new(0x52);
+    let mut array = Gpu::builder().config(cfg()).build_array(3).unwrap();
+    let s = array.stream();
+    let mut wants = Vec::new();
+    for i in 0..6 {
+        let data: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+        wants.push(data.iter().sum::<f32>());
+        let launch = if i % 2 == 0 {
+            array.launch_on(&s, reduction::reduction(n))
+        } else {
+            array.launch(reduction::reduction(n))
+        };
+        launch.input_f32(0, &data).output(n, 1).submit();
+    }
+    let rs = array.sync().unwrap();
+    let stream_cores: Vec<usize> =
+        rs.iter().filter(|r| r.stream.is_some()).map(|r| r.core).collect();
+    assert!(stream_cores.windows(2).all(|w| w[0] == w[1]), "stream hopped cores");
+    for (r, want) in rs.iter().zip(&wants) {
+        let got = r.output_f32(0)[0];
+        assert!((got - want).abs() < want.abs() * 1e-4 + 1e-2, "{}", r.name);
+    }
 }

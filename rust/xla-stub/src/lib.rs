@@ -1,0 +1,153 @@
+//! Offline stub of the xla-rs PJRT bindings.
+//!
+//! The eGPU crate's XLA datapath (`egpu::runtime`, `egpu::datapath::xla`)
+//! is written against the xla-rs API. That crate links the XLA
+//! `xla_extension` shared library, which cannot be fetched or built in
+//! this offline environment — so this stub provides the exact API surface
+//! the crate uses, with every runtime entry point returning a descriptive
+//! error instead of executing.
+//!
+//! Behavioral contract:
+//! - Pure host-side constructors ([`Literal::vec1`],
+//!   [`XlaComputation::from_proto`]) succeed.
+//! - Anything that would touch PJRT ([`PjRtClient::cpu`], compile,
+//!   execute, literal readback) fails with [`Error::Unavailable`].
+//!
+//! The `egpu` code paths that reach these entry points are all gated on
+//! the presence of the AOT `artifacts/` directory, so `cargo test` and
+//! the examples degrade gracefully. To enable the real backend, replace
+//! the `xla = { path = "xla-stub" }` dependency with xla-rs.
+
+use std::fmt;
+
+/// The single error the stub produces.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The real XLA/PJRT runtime is not linked into this build.
+    Unavailable,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "XLA/PJRT runtime not linked (offline build uses rust/xla-stub; \
+             depend on xla-rs to enable the XLA datapath)"
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side literal (tensor) handle. The stub carries no data: literals
+/// can be constructed (so pure helper code compiles and runs) but any
+/// readback fails with [`Error::Unavailable`].
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+
+    /// Copy the literal out to a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable)
+    }
+
+    /// Unwrap a 1-tuple literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+
+    /// First element of the flattened literal.
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// Parsed HLO module (text format).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident buffer returned by an execution.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug, Clone)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments; results are grouped per device.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable)
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client — always fails in the stub: there is no runtime.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("not linked"));
+    }
+
+    #[test]
+    fn literals_construct_but_do_not_read_back() {
+        let l = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(l.reshape(&[2, 1]).is_err());
+        assert!(l.to_vec::<f32>().is_err());
+    }
+}
