@@ -1,15 +1,21 @@
 //! Simulator performance harness (EXPERIMENTS.md §Perf): wall-clock
 //! throughput of the cycle-accurate core on the benchmark suite, for both
 //! the default checked mode and the verified-program fast path (hazard
-//! checking off).
+//! checking off), plus a multi-core scaling row (sequential vs parallel
+//! dispatch of a 4-core `GpuArray`).
 //!
 //! This is the L3 hot path the PERFORMANCE OPTIMIZATION pass iterates on;
-//! run before/after each change.
+//! run before/after each change. Besides the human-readable table it
+//! emits machine-readable `BENCH_simulator.json` into the working
+//! directory so the repo's perf trajectory can be tracked across PRs.
 //!
 //!     cargo bench --bench perf_simulator
+//!
+//! `EGPU_BENCH_SAMPLES` overrides the per-case sample count (CI smoke
+//! runs use 1).
 
 use egpu::api::Gpu;
-use egpu::harness::{sim_rate, time, Rng, Table};
+use egpu::harness::{sim_rate, time, Rng, Table, Timing};
 use egpu::kernels::{bitonic, f32_bits, fft, mmm, reduction, transpose, Kernel};
 use egpu::sim::{EgpuConfig, MemoryMode};
 
@@ -25,9 +31,57 @@ fn run_once(kernel: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)], hazar
         .compute_cycles
 }
 
+/// Wall-clock a 4-job FFT batch through a 4-core `GpuArray`, with the
+/// dispatch mode under test. Returns (makespan, timing).
+fn run_array(samples: usize, parallel: bool) -> (u64, Timing) {
+    let n = 256usize;
+    let mut rng = Rng::new(0xA44A);
+    let re: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    let im = vec![0f32; n];
+    let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+    let mut makespan = 0;
+    let t = time(samples, || {
+        let mut array = Gpu::builder().config(cfg.clone()).build_array(4).unwrap();
+        array.set_parallel(parallel);
+        for _ in 0..4 {
+            let s = array.stream();
+            let mut launch = array.launch_on(&s, fft::fft(n)).output(0, 2 * n);
+            for (base, words) in fft::shared_init(&re, &im) {
+                launch = launch.input_words(base, words);
+            }
+            launch.submit();
+        }
+        let reports = array.sync().unwrap();
+        makespan = array.makespan();
+        reports.len()
+    });
+    (makespan, t)
+}
+
+/// Minimal JSON string escaping (kernel names are plain ASCII, but stay
+/// correct anyway).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 fn main() {
+    let samples = std::env::var("EGPU_BENCH_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&s| s >= 1)
+        .unwrap_or(7);
     let mut rng = Rng::new(0xBE);
-    let samples = 7;
     let mut t = Table::new("Simulator throughput (simulated cycles per wall-clock second)");
     t.headers(["kernel", "cycles", "checked", "unchecked", "Mcyc/s", "Mcyc/s (fast)", "wall(ms)"]);
 
@@ -56,28 +110,72 @@ fn main() {
 
     let mut total_cycles = 0u64;
     let mut total_ms = 0f64;
+    let mut kernel_rows = Vec::new();
     for (kernel, cfg, init) in &cases {
         let cycles = run_once(kernel, cfg, init, true);
         let checked = time(samples, || run_once(kernel, cfg, init, true));
         let fast = time(samples, || run_once(kernel, cfg, init, false));
         total_cycles += cycles;
         total_ms += fast.median_ms();
+        let mcyc_checked = sim_rate(cycles, &checked) / 1e6;
+        let mcyc_fast = sim_rate(cycles, &fast) / 1e6;
         t.row([
             kernel.name.clone(),
             cycles.to_string(),
             format!("{:.2}ms", checked.median_ms()),
             format!("{:.2}ms", fast.median_ms()),
-            format!("{:.1}", sim_rate(cycles, &checked) / 1e6),
-            format!("{:.1}", sim_rate(cycles, &fast) / 1e6),
+            format!("{mcyc_checked:.1}"),
+            format!("{mcyc_fast:.1}"),
             format!("{:.2}", fast.median_ms()),
         ]);
+        kernel_rows.push(format!(
+            "    {{\"name\": {}, \"cycles\": {cycles}, \"checked_ms\": {:.4}, \
+             \"unchecked_ms\": {:.4}, \"mcyc_per_s_checked\": {mcyc_checked:.2}, \
+             \"mcyc_per_s_unchecked\": {mcyc_fast:.2}}}",
+            json_str(&kernel.name),
+            checked.median_ms(),
+            fast.median_ms(),
+        ));
     }
     t.print();
+    let aggregate = total_cycles as f64 / total_ms / 1e3;
     println!(
         "\naggregate: {:.1} M simulated cycles/s (fast path) over {} kernels",
-        total_cycles as f64 / total_ms / 1e3,
+        aggregate,
         cases.len()
+    );
+
+    // Multi-core scaling: the same 4-job batch through sequential and
+    // parallel dispatch — identical modeled timelines, different
+    // wall-clock.
+    let (seq_span, seq_t) = run_array(samples, false);
+    let (par_span, par_t) = run_array(samples, true);
+    assert_eq!(
+        seq_span, par_span,
+        "parallel dispatch must not change the modeled timeline"
+    );
+    let speedup = seq_t.median_ns as f64 / par_t.median_ns as f64;
+    println!(
+        "multi-core (4 cores, 4 FFT-256 jobs): sequential {:.2}ms, parallel {:.2}ms, \
+         {speedup:.2}x wall-clock",
+        seq_t.median_ms(),
+        par_t.median_ms()
     );
     println!("target: simulate 771 MHz real time / 1000 => >= 0.77 Mcyc/s (trivially exceeded);");
     println!("practical target: > 50 Mcyc/s on MMM-class kernels so the full suite stays < 5 s");
+
+    let json = format!(
+        "{{\n  \"samples\": {samples},\n  \"kernels\": [\n{}\n  ],\n  \
+         \"aggregate_mcyc_per_s_unchecked\": {aggregate:.2},\n  \
+         \"multi_core\": {{\"cores\": 4, \"jobs\": 4, \"kernel\": \"fft-256\", \
+         \"makespan_cycles\": {seq_span}, \"sequential_ms\": {:.4}, \
+         \"parallel_ms\": {:.4}, \"wall_clock_speedup\": {speedup:.3}}}\n}}\n",
+        kernel_rows.join(",\n"),
+        seq_t.median_ms(),
+        par_t.median_ms(),
+    );
+    match std::fs::write("BENCH_simulator.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_simulator.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_simulator.json: {e}"),
+    }
 }

@@ -159,10 +159,7 @@ impl From<ApiError> for SimError {
     fn from(e: ApiError) -> SimError {
         match e {
             ApiError::Sim(s) => s,
-            other => SimError {
-                pc: 0,
-                message: other.to_string(),
-            },
+            other => SimError::new(0, other.to_string()),
         }
     }
 }

@@ -60,6 +60,14 @@ impl GpuArray {
         Stream { id }
     }
 
+    /// Toggle parallel (worker-thread-per-core) dispatch for
+    /// [`GpuArray::sync`]. On by default; the sequential reference path
+    /// produces bit-identical reports and timelines — only wall-clock
+    /// time differs (`rust/tests/coordinator_integration.rs`).
+    pub fn set_parallel(&mut self, on: bool) {
+        self.coord.set_parallel(on);
+    }
+
     /// Build a launch on a stream (ordered after everything previously
     /// submitted on that stream, on the stream's core).
     pub fn launch_on(&mut self, stream: &Stream, kernel: Kernel) -> StreamLaunch<'_> {

@@ -415,12 +415,23 @@ pub fn assemble(src: &str, layout: WordLayout) -> Result<Program, AsmError> {
         instrs.push(i);
     }
 
+    // Pass 3: compile the decode-time issue plans (classification,
+    // operand shape, thread-space geometry, profiler slots) so the
+    // simulator's hot loop never re-derives them. Infallible on parser
+    // output — the condition-code and opcode checks above already ran —
+    // but mapped to a source line defensively.
+    let plans = crate::sim::plan::compile(&instrs).map_err(|e| AsmError {
+        line_no: source.get(e.pc).map(|s| s.line_no).unwrap_or(0),
+        message: e.message,
+    })?;
+
     Ok(Program {
         instrs,
         words,
         labels,
         layout,
         source,
+        plans,
     })
 }
 
@@ -608,6 +619,19 @@ mod tests {
             .collect();
         let p2 = assemble(&dis, l32()).unwrap();
         assert_eq!(p.words, p2.words);
+    }
+
+    #[test]
+    fn plans_compiled_at_assembly() {
+        use crate::sim::plan::PlanKind;
+        let p = assemble("tdx r0\nlod r1, (r0)+4\nif.lt.i32 r0, r1\nendif\nstop\n", l32())
+            .unwrap();
+        assert_eq!(p.plans.len(), p.instrs.len());
+        assert_eq!(p.plans[0].kind, PlanKind::TdX);
+        assert_eq!(p.plans[1].kind, PlanKind::Load);
+        assert_eq!(p.plans[1].imm, 4);
+        assert!(matches!(p.plans[2].kind, PlanKind::If { .. }));
+        assert_eq!(p.plans[4].kind, PlanKind::Stop);
     }
 
     #[test]

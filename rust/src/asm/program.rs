@@ -3,6 +3,7 @@
 use std::collections::BTreeMap;
 
 use crate::isa::{Instr, WordLayout};
+use crate::sim::plan::IssuePlan;
 
 /// Mapping from an instruction back to its source line (for errors,
 /// listings and the hazard checker's diagnostics).
@@ -13,7 +14,8 @@ pub struct SourceLine {
 }
 
 /// An assembled eGPU program: decoded instructions plus the encoded words
-/// exactly as they would sit in the instruction M20Ks.
+/// exactly as they would sit in the instruction M20Ks, plus the
+/// decode-time issue plans the simulator executes from.
 #[derive(Debug, Clone)]
 pub struct Program {
     pub instrs: Vec<Instr>,
@@ -21,6 +23,14 @@ pub struct Program {
     pub labels: BTreeMap<String, usize>,
     pub layout: WordLayout,
     pub source: Vec<SourceLine>,
+    /// Pre-compiled issue plans, one per instruction
+    /// ([`crate::sim::plan`]), produced at assembly — both an early
+    /// validation pass and an inspectable artifact. Because every field
+    /// here is public (and `instrs` may be edited in place),
+    /// `Machine::load_program` recompiles plans from `instrs` rather
+    /// than trusting these; hand-built programs may leave the vector
+    /// empty.
+    pub plans: Vec<IssuePlan>,
 }
 
 impl Program {
@@ -71,6 +81,7 @@ mod tests {
             labels: BTreeMap::new(),
             layout,
             source: vec![],
+            plans: vec![],
         };
         assert_eq!(mk(512, l40).instruction_m20ks(), 1);
         assert_eq!(mk(1024, l43).instruction_m20ks(), 3);

@@ -13,18 +13,41 @@
 //! serializing shared-memory load/unload DMA over one [`DataBus`]. Chained
 //! jobs (`keep_data`) skip the bus entirely — the paper's "multiple
 //! algorithms to the same data" mode.
+//!
+//! # Parallel dispatch
+//!
+//! On a multi-core coordinator the cores *simulate* in parallel: each core
+//! gets a worker thread (`std::thread::scope`) running its job sequence in
+//! dispatch order, while the *modeled* timeline — bus reservations, core
+//! free times, `JobResult` start/end — is replayed sequentially in
+//! submission order on the dispatching thread. The simulated-cycle
+//! accounting is therefore bit-identical to the sequential reference path
+//! (`set_parallel(false)`), which `rust/tests/coordinator_integration.rs`
+//! asserts; only wall-clock time changes. Placement of unordered jobs
+//! needs eventual core-free times, so the dispatcher only commits an
+//! earliest-free choice once it is provable from accounted jobs plus a
+//! lower bound on outstanding ones, waiting for workers otherwise.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Condvar, Mutex};
 
+use crate::asm::Program;
 use crate::kernels::Kernel;
 use crate::sim::config::EgpuConfig;
-use crate::sim::{Machine, RunStats, SimError};
+use crate::sim::{Machine, RunStats, SimError, PIPELINE_DEPTH};
 
 /// Default kernel cycle budget: bounds runaway programs without ever
 /// tripping on a real workload (the largest paper kernel, MMM-128, runs
 /// ~2.3M cycles). [`crate::api::LaunchBuilder::max_cycles`] and
 /// [`Job::budget`] override it.
 pub const DEFAULT_CYCLE_BUDGET: u64 = 10_000_000_000;
+
+/// Lower bound on any successful job's end-to-end cycles: even an empty
+/// program issues STOP (1 cycle) and drains the pipeline. Used to prove
+/// earliest-free placements before every outstanding job is accounted.
+const MIN_JOB_CYCLES: u64 = 1 + PIPELINE_DEPTH;
 
 /// The external 32-bit data bus: one 32-bit word per bus cycle, clocked at
 /// the core frequency (§7 measures load/unload at the core clock).
@@ -193,6 +216,285 @@ impl BusCalendar {
     }
 }
 
+/// Where a job goes, or a signal that the dispatcher must account more
+/// finished work before the earliest-free winner is provable.
+enum Placement {
+    Core(usize),
+    NeedAccounting,
+}
+
+/// Placement policy shared by the sequential and parallel paths, in
+/// priority order:
+///
+/// 1. A job on a stream that already owns a core goes to that core
+///    (stream affinity — this is what makes `keep_data` chaining
+///    well-defined). A *chained* stream job additionally requires its
+///    stream's data to still be resident there — if other work has since
+///    been placed on that core, dispatch errors rather than silently
+///    computing on someone else's data.
+/// 2. A chained (`keep_data`) job without an affine core goes to the core
+///    of the previously dispatched job; if there is no previous job, that
+///    is an error (there is no resident data to chain onto).
+/// 3. Everything else goes to the earliest-free core (first index on
+///    ties). With `pending` counts (parallel path), the choice is only
+///    committed once provable; `pending = None` means every core's free
+///    time is final.
+fn place_job(
+    job: &Job,
+    core_free: &[u64],
+    pending: Option<&[usize]>,
+    stream_core: &HashMap<u64, usize>,
+    core_resident: &[Option<u64>],
+    last_core: Option<usize>,
+) -> Result<Placement, SimError> {
+    let affine = job.stream.and_then(|s| stream_core.get(&s).copied());
+    match affine {
+        Some(c) => {
+            // Chaining requires the stream's data to still be resident:
+            // another stream (or an unordered job) may have been placed
+            // on this core since and cleared it.
+            if job.keep_data && core_resident[c] != job.stream {
+                return Err(SimError::new(
+                    0,
+                    format!(
+                        "job '{}' chains (keep_data) on stream {}, but core {c} \
+                         has since run other work: the stream's resident data \
+                         is gone",
+                        job.kernel.name,
+                        job.stream.unwrap_or_default()
+                    ),
+                ));
+            }
+            Ok(Placement::Core(c))
+        }
+        // Backstop arms: batch pre-validation already rejects these; kept
+        // so a placement bug degrades to an error, not a silent wrong
+        // answer.
+        None if job.keep_data => match (job.stream, last_core) {
+            (Some(s), _) => Err(SimError::new(
+                0,
+                format!(
+                    "job '{}' chains (keep_data) as the first job on \
+                     stream {s}: no resident data to chain onto",
+                    job.kernel.name
+                ),
+            )),
+            (None, Some(c)) => Ok(Placement::Core(c)),
+            (None, None) => Err(SimError::new(
+                0,
+                format!(
+                    "job '{}' chains (keep_data) but no job has run \
+                     yet: no resident data to chain onto",
+                    job.kernel.name
+                ),
+            )),
+        },
+        None => match pending {
+            None => {
+                let c = (0..core_free.len())
+                    .min_by_key(|&c| core_free[c])
+                    .expect("at least one core");
+                Ok(Placement::Core(c))
+            }
+            Some(pending) => Ok(provable_first_min(core_free, pending)
+                .map_or(Placement::NeedAccounting, Placement::Core)),
+        },
+    }
+}
+
+/// First index minimizing the *eventual* core-free time, or `None` while
+/// outstanding jobs make the winner unprovable. `core_free[c]` is exact
+/// when `pending[c] == 0`; otherwise each outstanding job adds at least
+/// [`MIN_JOB_CYCLES`], giving a lower bound. Tie-breaking matches
+/// `min_by_key`: the first index wins, so a pending core *before* the
+/// candidate must be provably greater, one *after* only provably
+/// not-smaller.
+fn provable_first_min(core_free: &[u64], pending: &[usize]) -> Option<usize> {
+    let mut best: Option<(usize, u64)> = None;
+    for (c, (&free, &p)) in core_free.iter().zip(pending).enumerate() {
+        let beats = match best {
+            None => true,
+            Some((_, v)) => free < v,
+        };
+        if p == 0 && beats {
+            best = Some((c, free));
+        }
+    }
+    let (ir, v) = best?;
+    for (c, (&free, &p)) in core_free.iter().zip(pending).enumerate() {
+        if p > 0 {
+            let lb = free + MIN_JOB_CYCLES * p as u64;
+            if (c < ir && lb <= v) || (c > ir && lb < v) {
+                return None;
+            }
+        }
+    }
+    Some(ir)
+}
+
+/// Run an already-assembled job on one core: the machine half of
+/// dispatch, shared verbatim by the sequential path and the parallel
+/// workers so per-core state evolution is identical in both.
+fn exec_assembled(
+    m: &mut Machine,
+    prog: Program,
+    job: &Job,
+) -> Result<(RunStats, Vec<Vec<u32>>), SimError> {
+    if !job.keep_data {
+        m.shared_mut().fill(0);
+    }
+    m.load_program(prog)?;
+    m.set_threads(job.kernel.threads)?;
+    m.set_dim_x(job.kernel.dim_x)?;
+    if !job.keep_data {
+        for (base, data) in &job.loads {
+            m.shared_mut().write_block(*base, data);
+        }
+    }
+    let stats = m.run(job.max_cycles)?;
+    let outputs = job
+        .unloads
+        .iter()
+        .map(|&(base, len)| m.shared().read_block(base, len).to_vec())
+        .collect();
+    Ok((stats, outputs))
+}
+
+/// Per-job dispatch record for the parallel path's accounting replay.
+struct DispatchMeta {
+    name: String,
+    stream: Option<u64>,
+    core: usize,
+    load_cycles: u64,
+    unload_cycles: u64,
+}
+
+/// Undo record for one job's dispatch-time bookkeeping. The parallel
+/// dispatcher runs ahead of accounting, so when job *f* fails, jobs
+/// dispatched after it must have their bookkeeping unwound — the
+/// sequential path never dispatched them, and a later batch must see
+/// identical stream affinity (`coordinator_integration.rs` pins the
+/// error-path parity down).
+struct BookUndo {
+    core: usize,
+    stream: Option<u64>,
+    /// Previous `stream_core` entry for `stream` (restored on unwind).
+    prev_affinity: Option<usize>,
+    prev_last: Option<usize>,
+}
+
+/// Unwind dispatch bookkeeping for `undo[from..]`, newest first.
+/// `stream_core`/`last_core` are restored exactly; `core_resident` is
+/// *poisoned* (set to `None`) instead of restored — the rolled-back
+/// job's worker may already have overwritten that core's shared
+/// memory, so a later chained job must fail loudly ("resident data is
+/// gone") rather than silently read clobbered data.
+fn rollback_dispatch(
+    stream_core: &mut HashMap<u64, usize>,
+    core_resident: &mut [Option<u64>],
+    last_core: &mut Option<usize>,
+    undo: &[BookUndo],
+    from: usize,
+) {
+    for u in undo[from.min(undo.len())..].iter().rev() {
+        if let Some(s) = u.stream {
+            match u.prev_affinity {
+                Some(c) => {
+                    stream_core.insert(s, c);
+                }
+                None => {
+                    stream_core.remove(&s);
+                }
+            }
+        }
+        core_resident[u.core] = None;
+        *last_core = u.prev_last;
+    }
+}
+
+/// What a worker hands back for one job.
+type JobOutcome = Result<(RunStats, Vec<Vec<u32>>), SimError>;
+
+/// Worker → dispatcher result slots, indexed by submission order.
+type OutcomeSlots = (Mutex<Vec<Option<JobOutcome>>>, Condvar);
+
+/// [`account_next`] plus error-path unwinding: when the job at the
+/// accounting cursor fails, its own bookkeeping stays (the sequential
+/// path applies bookkeeping before running a job) but every job
+/// dispatched after it is rolled back via [`rollback_dispatch`].
+#[allow(clippy::too_many_arguments)]
+fn account_next_unwinding(
+    slots: &OutcomeSlots,
+    metas: &[DispatchMeta],
+    acct: &mut usize,
+    pending: &mut [usize],
+    core_free: &mut [u64],
+    bus_cal: &mut BusCalendar,
+    out: &mut Vec<JobResult>,
+    stream_core: &mut HashMap<u64, usize>,
+    core_resident: &mut [Option<u64>],
+    last_core: &mut Option<usize>,
+    undo: &[BookUndo],
+) -> Result<(), SimError> {
+    match account_next(slots, metas, acct, pending, core_free, bus_cal, out) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            rollback_dispatch(stream_core, core_resident, last_core, undo, *acct + 1);
+            Err(e)
+        }
+    }
+}
+
+/// Account the next job in submission order: block until its worker
+/// outcome lands, then replay the bus/core timeline exactly as the
+/// sequential path would (load reservation, compute, unload reservation).
+/// On a job error the load reservation persists, matching the sequential
+/// path's early return.
+#[allow(clippy::too_many_arguments)]
+fn account_next(
+    slots: &OutcomeSlots,
+    metas: &[DispatchMeta],
+    acct: &mut usize,
+    pending: &mut [usize],
+    core_free: &mut [u64],
+    bus_cal: &mut BusCalendar,
+    out: &mut Vec<JobResult>,
+) -> Result<(), SimError> {
+    let idx = *acct;
+    assert!(idx < metas.len(), "accounting cursor past dispatched jobs");
+    let outcome = {
+        let (lock, cv) = slots;
+        let mut guard = lock.lock().unwrap();
+        loop {
+            if let Some(o) = guard[idx].take() {
+                break o;
+            }
+            guard = cv.wait(guard).unwrap();
+        }
+    };
+    let meta = &metas[idx];
+    let start = bus_cal.reserve(core_free[meta.core], meta.load_cycles);
+    let (stats, outputs) = outcome?;
+    let compute_end = start + meta.load_cycles + stats.cycles;
+    let unload_start = bus_cal.reserve(compute_end, meta.unload_cycles);
+    let end = unload_start + meta.unload_cycles;
+    core_free[meta.core] = end;
+    pending[meta.core] -= 1;
+    *acct += 1;
+    out.push(JobResult {
+        name: meta.name.clone(),
+        core: meta.core,
+        stream: meta.stream,
+        compute_cycles: stats.cycles,
+        bus_cycles: meta.load_cycles + meta.unload_cycles,
+        start,
+        end,
+        stats,
+        outputs,
+    });
+    Ok(())
+}
+
 /// N-core dispatcher with a single shared data bus.
 pub struct Coordinator {
     cfg: EgpuConfig,
@@ -213,6 +515,10 @@ pub struct Coordinator {
     /// Core of the most recently dispatched job (legacy `keep_data`
     /// chaining for jobs without a stream).
     last_core: Option<usize>,
+    /// Simulate cores on worker threads (multi-core batches only).
+    /// `false` forces the sequential reference path; both produce
+    /// bit-identical results and timelines.
+    parallel: bool,
 }
 
 impl Coordinator {
@@ -229,6 +535,7 @@ impl Coordinator {
             stream_core: HashMap::new(),
             core_resident: vec![None; num_cores],
             last_core: None,
+            parallel: true,
             cfg,
             cores,
         })
@@ -242,69 +549,62 @@ impl Coordinator {
         &self.cfg
     }
 
+    /// Toggle parallel (worker-thread) dispatch. Defaults to on; the
+    /// sequential path is kept as the timing reference
+    /// (`coordinator_integration.rs` asserts bit-identical results).
+    pub fn set_parallel(&mut self, on: bool) {
+        self.parallel = on;
+    }
+
+    pub fn parallel(&self) -> bool {
+        self.parallel
+    }
+
     /// Queue a job (FIFO dispatch order).
     pub fn submit(&mut self, job: Job) {
         self.queue.push(job);
     }
 
-    /// Dispatch every queued job: bus DMA serialized across cores,
-    /// compute overlapped. Placement policy, in priority order:
-    ///
-    /// 1. A job on a stream that already owns a core goes to that core
-    ///    (stream affinity — this is what makes `keep_data` chaining
-    ///    well-defined). A *chained* stream job additionally requires its
-    ///    stream's data to still be resident there — if other work has
-    ///    since been placed on that core, dispatch errors rather than
-    ///    silently computing on someone else's data.
-    /// 2. A chained (`keep_data`) job without an affine core goes to the
-    ///    core of the previously dispatched job; if there is no previous
-    ///    job, that is an error (there is no resident data to chain onto
-    ///    — previously this silently chained onto core 0).
-    /// 3. Everything else goes to the earliest-free core.
-    ///
-    /// A chained job declaring input loads is an error: the loads would
-    /// be silently skipped.
-    pub fn run_all(&mut self) -> Result<Vec<JobResult>, SimError> {
-        let jobs = std::mem::take(&mut self.queue);
-        // Statically-checkable submission errors fail the whole batch
-        // up front, before any job executes or reserves bus time. Only
-        // data *eviction* (which depends on earliest-free placement of
-        // other jobs) must be detected during dispatch.
+    /// Statically-checkable submission errors fail the whole batch up
+    /// front, before any job executes or reserves bus time. Only data
+    /// *eviction* (which depends on earliest-free placement of other
+    /// jobs) must be detected during dispatch.
+    fn prevalidate(&self, jobs: &[Job]) -> Result<(), SimError> {
         let mut known_streams: std::collections::HashSet<u64> =
             self.stream_core.keys().copied().collect();
         let mut any_prior = self.last_core.is_some();
-        for job in &jobs {
+        for job in jobs {
             if job.keep_data {
                 if !job.loads.is_empty() {
-                    return Err(SimError {
-                        pc: 0,
-                        message: format!(
+                    return Err(SimError::new(
+                        0,
+                        format!(
                             "job '{}' chains (keep_data) but also declares input loads; \
                              chained jobs reuse resident data and skip the load DMA",
                             job.kernel.name
                         ),
-                    });
+                    ));
                 }
                 match job.stream {
                     Some(s) if !known_streams.contains(&s) => {
-                        return Err(SimError {
-                            pc: 0,
-                            message: format!(
+                        return Err(SimError::new(
+                            0,
+                            format!(
                                 "job '{}' chains (keep_data) as the first job on \
                                  stream {s}: no resident data to chain onto",
                                 job.kernel.name
                             ),
-                        })
+                        ))
                     }
                     None if !any_prior => {
-                        return Err(SimError {
-                            pc: 0,
-                            message: format!(
+                        return Err(SimError::new(
+                            0,
+                            format!(
                                 "job '{}' chains (keep_data) but no job has run \
                                  yet: no resident data to chain onto",
                                 job.kernel.name
                             ),
-                        })
+                        ))
                     }
                     _ => {}
                 }
@@ -314,106 +614,230 @@ impl Coordinator {
             }
             any_prior = true;
         }
+        Ok(())
+    }
+
+    /// Dispatch every queued job: bus DMA serialized across cores,
+    /// compute overlapped in the simulated timeline — and, on a
+    /// multi-core coordinator, in wall-clock too (see the module docs;
+    /// results and cycle accounting are identical either way).
+    pub fn run_all(&mut self) -> Result<Vec<JobResult>, SimError> {
+        let jobs = std::mem::take(&mut self.queue);
+        self.prevalidate(&jobs)?;
+        if self.parallel && self.cores.len() > 1 && jobs.len() > 1 {
+            self.run_all_parallel(jobs)
+        } else {
+            self.run_all_sequential(jobs)
+        }
+    }
+
+    /// The sequential reference path: place → run → account, one job at
+    /// a time.
+    fn run_all_sequential(&mut self, jobs: Vec<Job>) -> Result<Vec<JobResult>, SimError> {
         let mut results = Vec::with_capacity(jobs.len());
         for job in jobs {
-            let affine = job.stream.and_then(|s| self.stream_core.get(&s).copied());
-            let core = match affine {
-                Some(c) => {
-                    // Chaining requires the stream's data to still be
-                    // resident: another stream (or an unordered job) may
-                    // have been placed on this core since and cleared it.
-                    if job.keep_data && self.core_resident[c] != job.stream {
-                        return Err(SimError {
-                            pc: 0,
-                            message: format!(
-                                "job '{}' chains (keep_data) on stream {}, but core {c} \
-                                 has since run other work: the stream's resident data \
-                                 is gone",
-                                job.kernel.name,
-                                job.stream.unwrap_or_default()
-                            ),
-                        });
-                    }
-                    c
-                }
-                // Backstop arms: the pre-validation above already rejects
-                // these; kept so a placement bug degrades to an error,
-                // not a silent wrong answer.
-                None if job.keep_data => match (job.stream, self.last_core) {
-                    (Some(s), _) => {
-                        return Err(SimError {
-                            pc: 0,
-                            message: format!(
-                                "job '{}' chains (keep_data) as the first job on \
-                                 stream {s}: no resident data to chain onto",
-                                job.kernel.name
-                            ),
-                        })
-                    }
-                    (None, Some(c)) => c,
-                    (None, None) => {
-                        return Err(SimError {
-                            pc: 0,
-                            message: format!(
-                                "job '{}' chains (keep_data) but no job has run \
-                                 yet: no resident data to chain onto",
-                                job.kernel.name
-                            ),
-                        })
-                    }
-                },
-                None => (0..self.cores.len())
-                    .min_by_key(|&c| self.core_free[c])
-                    .unwrap(),
+            let core = match place_job(
+                &job,
+                &self.core_free,
+                None,
+                &self.stream_core,
+                &self.core_resident,
+                self.last_core,
+            )? {
+                Placement::Core(c) => c,
+                Placement::NeedAccounting => unreachable!("sequential free times are final"),
             };
-            if let Some(s) = job.stream {
-                self.stream_core.insert(s, core);
-            }
-            self.last_core = Some(core);
-            self.core_resident[core] = job.stream;
+            self.note_dispatch(&job, core);
             let r = self.run_on(core, job)?;
             results.push(r);
         }
         Ok(results)
     }
 
+    /// Dispatch-time bookkeeping shared by both paths.
+    fn note_dispatch(&mut self, job: &Job, core: usize) {
+        if let Some(s) = job.stream {
+            self.stream_core.insert(s, core);
+        }
+        self.last_core = Some(core);
+        self.core_resident[core] = job.stream;
+    }
+
+    /// The parallel path: one worker thread per core runs that core's
+    /// job sequence; the dispatcher places jobs (waiting for accounting
+    /// only when an earliest-free choice is not yet provable) and replays
+    /// the timeline in submission order.
+    ///
+    /// Error semantics match the sequential path for everything the
+    /// coordinator exposes: the same first error is returned, no
+    /// `JobResult` past it is produced, each worker stops at its own
+    /// core's first failure, and dispatch bookkeeping for jobs after the
+    /// failing one is unwound ([`rollback_dispatch`]) so later batches
+    /// see the same stream affinities either way. The one deliberate
+    /// asymmetry: jobs already handed to *other* cores' workers may have
+    /// simulated before shutdown, so the unwound cores' residency is
+    /// poisoned — a later chained launch onto them errors loudly where
+    /// the sequential path would have found intact data.
+    fn run_all_parallel(&mut self, jobs: Vec<Job>) -> Result<Vec<JobResult>, SimError> {
+        let n = jobs.len();
+        let Coordinator {
+            cores,
+            core_free,
+            bus_cal,
+            stream_core,
+            core_resident,
+            last_core,
+            cfg,
+            bus,
+            ..
+        } = self;
+        let ncores = cores.len();
+        let slots: OutcomeSlots = (Mutex::new((0..n).map(|_| None).collect()), Condvar::new());
+        let slots = &slots;
+
+        std::thread::scope(|scope| {
+            let mut txs: Vec<Sender<(usize, Program, Job)>> = Vec::with_capacity(ncores);
+            for m in cores.iter_mut() {
+                let (tx, rx) = channel::<(usize, Program, Job)>();
+                txs.push(tx);
+                scope.spawn(move || {
+                    // A worker stops at its first failure: the sequential
+                    // path never runs anything after a failed job, so
+                    // later jobs queued to this core are skipped. Panics
+                    // become errors so the dispatcher can't deadlock.
+                    let mut dead = false;
+                    for (idx, prog, job) in rx {
+                        let outcome = if dead {
+                            Err(SimError::new(
+                                0,
+                                "skipped: an earlier job on this core failed",
+                            ))
+                        } else {
+                            catch_unwind(AssertUnwindSafe(|| exec_assembled(m, prog, &job)))
+                                .unwrap_or_else(|_| {
+                                    Err(SimError::new(
+                                        0,
+                                        format!("job '{}' panicked in its worker", job.kernel.name),
+                                    ))
+                                })
+                        };
+                        dead = dead || outcome.is_err();
+                        let (lock, cv) = slots;
+                        lock.lock().unwrap()[idx] = Some(outcome);
+                        cv.notify_all();
+                    }
+                });
+            }
+
+            let mut metas: Vec<DispatchMeta> = Vec::with_capacity(n);
+            let mut undo: Vec<BookUndo> = Vec::with_capacity(n);
+            let mut out: Vec<JobResult> = Vec::with_capacity(n);
+            let mut pending = vec![0usize; ncores];
+            let mut acct = 0usize;
+
+            let r = (|| -> Result<Vec<JobResult>, SimError> {
+                for (i, job) in jobs.into_iter().enumerate() {
+                    let core = loop {
+                        match place_job(
+                            &job,
+                            core_free,
+                            Some(pending.as_slice()),
+                            stream_core,
+                            core_resident,
+                            *last_core,
+                        ) {
+                            Ok(Placement::Core(c)) => break c,
+                            Ok(Placement::NeedAccounting) => account_next_unwinding(
+                                slots, &metas, &mut acct, &mut pending, core_free, bus_cal,
+                                &mut out, stream_core, core_resident, last_core, &undo,
+                            )?,
+                            Err(e) => {
+                                // Sequential parity: every job before this
+                                // dispatch error fully ran and was
+                                // accounted before the error surfaced.
+                                while acct < metas.len() {
+                                    account_next_unwinding(
+                                        slots, &metas, &mut acct, &mut pending, core_free,
+                                        bus_cal, &mut out, stream_core, core_resident,
+                                        last_core, &undo,
+                                    )?;
+                                }
+                                return Err(e);
+                            }
+                        }
+                    };
+                    undo.push(BookUndo {
+                        core,
+                        stream: job.stream,
+                        prev_affinity: job.stream.and_then(|s| stream_core.get(&s).copied()),
+                        prev_last: *last_core,
+                    });
+                    if let Some(s) = job.stream {
+                        stream_core.insert(s, core);
+                    }
+                    *last_core = Some(core);
+                    core_resident[core] = job.stream;
+                    let prog = match job.kernel.assemble(cfg) {
+                        Ok(p) => p,
+                        Err(msg) => {
+                            while acct < metas.len() {
+                                account_next_unwinding(
+                                    slots, &metas, &mut acct, &mut pending, core_free, bus_cal,
+                                    &mut out, stream_core, core_resident, last_core, &undo,
+                                )?;
+                            }
+                            return Err(SimError::new(0, msg));
+                        }
+                    };
+                    metas.push(DispatchMeta {
+                        name: job.kernel.name.clone(),
+                        stream: job.stream,
+                        core,
+                        load_cycles: bus.transfer_cycles(job.load_words()),
+                        unload_cycles: bus.transfer_cycles(job.unload_words()),
+                    });
+                    pending[core] += 1;
+                    // Worker threads outlive the dispatch loop (they exit
+                    // when `txs` drops), so a send can only fail if one
+                    // panicked straight through catch_unwind.
+                    txs[core]
+                        .send((i, prog, job))
+                        .expect("coordinator worker hung up");
+                }
+                while acct < metas.len() {
+                    account_next_unwinding(
+                        slots, &metas, &mut acct, &mut pending, core_free, bus_cal, &mut out,
+                        stream_core, core_resident, last_core, &undo,
+                    )?;
+                }
+                Ok(out)
+            })();
+            // Close the channels on every path so workers drain and the
+            // scope can join them.
+            drop(txs);
+            r
+        })
+    }
+
     fn run_on(&mut self, core: usize, job: Job) -> Result<JobResult, SimError> {
         let prog = job
             .kernel
             .assemble(&self.cfg)
-            .map_err(|msg| SimError { pc: 0, message: msg })?;
-        let m = &mut self.cores[core];
+            .map_err(|msg| SimError::new(0, msg))?;
 
         // Bus phase 1: load DMA (a reservation on the shared bus).
         let load_cycles = self.bus.transfer_cycles(job.load_words());
         let start = self.bus_cal.reserve(self.core_free[core], load_cycles);
-        let compute_start = start + load_cycles;
 
-        if !job.keep_data {
-            m.shared_mut().fill(0);
-        }
-        m.load_program(prog)?;
-        m.set_threads(job.kernel.threads)?;
-        m.set_dim_x(job.kernel.dim_x)?;
-        if !job.keep_data {
-            for (base, data) in &job.loads {
-                m.shared_mut().write_block(*base, data);
-            }
-        }
-        let stats = m.run(job.max_cycles)?;
+        let (stats, outputs) = exec_assembled(&mut self.cores[core], prog, &job)?;
 
         // Bus phase 2: unload DMA.
         let unload_cycles = self.bus.transfer_cycles(job.unload_words());
-        let compute_end = compute_start + stats.cycles;
+        let compute_end = start + load_cycles + stats.cycles;
         let unload_start = self.bus_cal.reserve(compute_end, unload_cycles);
         let end = unload_start + unload_cycles;
         self.core_free[core] = end;
 
-        let outputs = job
-            .unloads
-            .iter()
-            .map(|&(base, len)| m.shared().read_block(base, len).to_vec())
-            .collect();
         Ok(JobResult {
             name: job.kernel.name.clone(),
             core,
@@ -727,5 +1151,74 @@ mod tests {
         c.submit(job(128).budget(10));
         let err = c.run_all().unwrap_err();
         assert!(err.message.contains("cycle limit"), "{err}");
+        // The budget stop preserves the partial run statistics.
+        assert!(err.partial.is_some());
+    }
+
+    #[test]
+    fn sequential_toggle_matches_parallel() {
+        // Same batch through both dispatch paths: identical results.
+        let run = |parallel: bool| {
+            let mut c = Coordinator::new(cfg(), 3).unwrap();
+            c.set_parallel(parallel);
+            assert_eq!(c.parallel(), parallel);
+            for i in 0..6u64 {
+                c.submit(job(32 + 32 * (i as usize % 2)).on_stream(i % 3));
+            }
+            let rs = c.run_all().unwrap();
+            (rs, c.makespan())
+        };
+        let (seq, seq_span) = run(false);
+        let (par, par_span) = run(true);
+        assert_eq!(seq_span, par_span);
+        assert_eq!(seq.len(), par.len());
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.core, b.core);
+            assert_eq!(a.stream, b.stream);
+            assert_eq!(a.compute_cycles, b.compute_cycles);
+            assert_eq!(a.bus_cycles, b.bus_cycles);
+            assert_eq!((a.start, a.end), (b.start, b.end));
+            assert_eq!(a.outputs, b.outputs);
+        }
+    }
+
+    #[test]
+    fn failed_parallel_batch_unwinds_dispatch_bookkeeping() {
+        // J0 trips its cycle budget; the parallel dispatcher has already
+        // handed J1 (first job of a fresh stream) to another core by
+        // then. After the error, the coordinator's bookkeeping must look
+        // exactly like the sequential path's, which never dispatched J1:
+        // chaining onto J1's stream is a fresh-stream error either way.
+        for parallel in [false, true] {
+            let mut c = Coordinator::new(cfg(), 4).unwrap();
+            c.set_parallel(parallel);
+            c.submit(job(128).budget(10)); // cycle-limit failure
+            c.submit(job(32).on_stream(5)); // eagerly dispatched when parallel
+            let err = c.run_all().unwrap_err();
+            assert!(err.message.contains("cycle limit"), "{err}");
+            c.submit(Job::new(reduction::reduction(32)).on_stream(5).chained());
+            let err = c.run_all().unwrap_err();
+            assert!(
+                err.message.contains("stream 5"),
+                "parallel={parallel}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn provable_first_min_respects_tie_breaking() {
+        // All resolved: plain first-min.
+        assert_eq!(provable_first_min(&[5, 3, 3], &[0, 0, 0]), Some(1));
+        // Pending core 0 could finish anywhere ≥ 9 → core 1 (free=3) wins.
+        assert_eq!(provable_first_min(&[0, 3, 5], &[1, 0, 0]), Some(1));
+        // Pending core 0's bound (0+9=9) could tie with core 1's 9 and
+        // core 0 is first → unprovable.
+        assert_eq!(provable_first_min(&[0, 9, 50], &[1, 0, 0]), None);
+        // Pending core AFTER the candidate may tie (first-min wins)...
+        assert_eq!(provable_first_min(&[9, 50, 0], &[0, 0, 1]), Some(0));
+        // ...but one that could finish strictly earlier blocks the call.
+        assert_eq!(provable_first_min(&[10, 50, 0], &[0, 0, 1]), None);
+        // Nothing resolved → wait.
+        assert_eq!(provable_first_min(&[0, 0], &[1, 1]), None);
     }
 }

@@ -53,6 +53,27 @@ impl Group {
         Group::Conditional,
     ];
 
+    /// Position of this group in [`Group::ALL`] — the profiler's slot
+    /// order. O(1) so the per-instruction profile charge in the
+    /// simulator's hot loop never searches.
+    pub const fn index(self) -> usize {
+        match self {
+            Group::Nop => 0,
+            Group::IntArith => 1,
+            Group::IntMul => 2,
+            Group::IntLogic => 3,
+            Group::IntShift => 4,
+            Group::IntOther => 5,
+            Group::FpAlu => 6,
+            Group::Memory => 7,
+            Group::Immediate => 8,
+            Group::Thread => 9,
+            Group::Extension => 10,
+            Group::Control => 11,
+            Group::Conditional => 12,
+        }
+    }
+
     pub fn label(&self) -> &'static str {
         match self {
             Group::Nop => "NOP",
@@ -385,6 +406,13 @@ mod tests {
         assert_eq!(InvSqr.group(), Group::Extension);
         assert_eq!(Stop.group(), Group::Control);
         assert_eq!(EndIf.group(), Group::Conditional);
+    }
+
+    #[test]
+    fn group_index_matches_all_order() {
+        for (i, g) in Group::ALL.iter().enumerate() {
+            assert_eq!(g.index(), i, "{g:?}");
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@ use egpu::api::{ApiError, Backend, Gpu, DEFAULT_CYCLE_BUDGET};
 use egpu::asm::assemble;
 use egpu::harness::{suite, Table, Variant};
 use egpu::isa::Group;
+use egpu::kernels::Kernel;
 use egpu::model::alu_model::TABLE6;
 use egpu::model::cost::{ppa_metric, TABLE1_PUBLISHED};
 use egpu::model::frequency::FrequencyReport;
@@ -60,8 +61,10 @@ COMMANDS:
                     (NAME: reduction, transpose, mmm, bitonic, fft)
   profile           print the Figure 6 instruction-mix profiles
   place [PRESET]    place a configuration into an Agilex sector (Figures 4/5)
-  run FILE.asm [--threads N] [--qp] [--xla] [--max-cycles N]
-                    assemble and run a program, dumping stats
+  run FILE.asm [--threads N] [--qp] [--xla] [--max-cycles N] [--cores N]
+                    assemble and run a program, dumping stats;
+                    --cores N runs it on every core of an N-core GpuArray
+                    (one stream per core, parallel worker dispatch)
   info              list presets and artifact status
 ";
 
@@ -241,6 +244,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let mut memory = MemoryMode::Dp;
     let mut use_xla = false;
     let mut max_cycles = DEFAULT_CYCLE_BUDGET;
+    let mut cores = 1usize;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -259,6 +263,14 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
                     .and_then(|s| s.parse::<u64>().ok())
                     .ok_or("--max-cycles needs a number")?;
             }
+            "--cores" => {
+                i += 1;
+                cores = args
+                    .get(i)
+                    .and_then(|s| s.parse::<usize>().ok())
+                    .filter(|&c| c >= 1)
+                    .ok_or("--cores needs a positive number")?;
+            }
             "--qp" => memory = MemoryMode::Qp,
             "--xla" => use_xla = true,
             f if !f.starts_with('-') => file = Some(f.to_string()),
@@ -266,8 +278,9 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         }
         i += 1;
     }
-    let file =
-        file.ok_or("usage: egpu run FILE.asm [--threads N] [--qp] [--xla] [--max-cycles N]")?;
+    let file = file.ok_or(
+        "usage: egpu run FILE.asm [--threads N] [--qp] [--xla] [--max-cycles N] [--cores N]",
+    )?;
     let src = std::fs::read_to_string(&file).map_err(|e| format!("{file}: {e}"))?;
 
     let mut cfg = EgpuConfig::benchmark(memory, true);
@@ -284,6 +297,11 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     } else {
         Backend::Native
     };
+
+    if cores > 1 {
+        return run_multi_core(&file, &src, &cfg, backend, threads, max_cycles, cores);
+    }
+
     let mut gpu = Gpu::builder()
         .config(cfg.clone())
         .backend(backend)
@@ -296,7 +314,21 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     if let Some(t) = threads {
         launch = launch.threads(t);
     }
-    let report = launch.run().map_err(|e| e.to_string())?;
+    let report = match launch.run() {
+        Ok(r) => r,
+        // A cycle-limit stop keeps its progress: show it before failing.
+        Err(ApiError::Sim(s)) if s.partial.is_some() => {
+            let p = s.partial.as_deref().unwrap();
+            println!(
+                "stopped at the cycle budget: {} cycles, {} instructions, {} hazards",
+                p.cycles, p.instructions, p.hazards
+            );
+            println!("\ninstruction mix so far (cycles):");
+            print!("{}", p.profile.render());
+            return Err(format!("pc {}: {}", s.pc, s.message));
+        }
+        Err(e) => return Err(e.to_string()),
+    };
     let stats = &report.stats;
     println!(
         "cycles: {}   instructions: {}   time at {:.0} MHz: {:.2} us   hazards: {}",
@@ -308,6 +340,56 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     );
     println!("\ninstruction mix (cycles):");
     print!("{}", stats.profile.render());
+    Ok(())
+}
+
+/// `egpu run --cores N`: the same program on every core of an N-core
+/// `GpuArray`, one stream per core, dispatched on parallel workers.
+fn run_multi_core(
+    file: &str,
+    src: &str,
+    cfg: &EgpuConfig,
+    backend: Backend,
+    threads: Option<usize>,
+    max_cycles: u64,
+    cores: usize,
+) -> Result<(), String> {
+    let rt_threads = threads.unwrap_or(cfg.threads);
+    let kernel = Kernel {
+        name: file.to_string(),
+        asm: src.to_string(),
+        threads: rt_threads,
+        dim_x: rt_threads,
+    };
+    let mut array = Gpu::builder()
+        .config(cfg.clone())
+        .backend(backend)
+        .build_array(cores)
+        .map_err(|e| e.to_string())?;
+    let wall = std::time::Instant::now();
+    for _ in 0..cores {
+        let s = array.stream();
+        array
+            .launch_on(&s, kernel.clone())
+            .max_cycles(max_cycles)
+            .submit();
+    }
+    let reports = array.sync().map_err(|e| e.to_string())?;
+    let wall_ms = wall.elapsed().as_secs_f64() * 1e3;
+    for r in &reports {
+        println!(
+            "core {}: {} cycles   {} instructions   hazards: {}",
+            r.core, r.compute_cycles, r.stats.instructions, r.stats.hazards
+        );
+    }
+    println!(
+        "makespan: {} cycles ({:.2} us at {:.0} MHz)   wall-clock: {:.1} ms \
+         across {cores} worker threads (parallel dispatch)",
+        array.makespan(),
+        array.makespan_us(),
+        cfg.core_mhz(),
+        wall_ms
+    );
     Ok(())
 }
 

@@ -65,6 +65,13 @@ impl HazardChecker {
         self.enabled = on;
     }
 
+    /// Is checking on? Lets hot loops hoist the gate instead of paying a
+    /// call-and-branch per lane.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
     pub fn reset(&mut self) {
         self.reg_ready.fill(0);
         self.mem_ready.fill(0);

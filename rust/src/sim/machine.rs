@@ -7,13 +7,22 @@
 //! predicates, cycle accounting) is here; the *datapath* is either inlined
 //! native lane functions or a pluggable [`BlockExec`] backend driving the
 //! AOT-compiled XLA artifacts.
+//!
+//! Execution is plan-driven: every instruction is compiled once into an
+//! [`IssuePlan`] (see [`super::plan`]) so [`Machine::run`]'s hot loop is
+//! fetch-plan → execute-lanes → charge, with classification, operand
+//! shape, geometry and profiler-slot lookups all resolved ahead of time.
+//! [`Machine::run_reference`] retains the original per-instruction
+//! re-deriving interpreter as the differential-testing oracle
+//! (`rust/tests/asm_sim_properties.rs`).
 
 use crate::asm::Program;
 use crate::datapath::{classify, native, BlockExec, DpOp};
-use crate::isa::{Group, Instr, Opcode, WAVEFRONT_WIDTH};
+use crate::isa::{CondCode, DepthSel, Group, Instr, Opcode, TType, WAVEFRONT_WIDTH};
 
 use super::config::EgpuConfig;
 use super::hazard::{HazardChecker, DOT_WINDOW, MEM_WINDOW, REG_WINDOW};
+use super::plan::{self, IssuePlan, PlanKind};
 use super::predicate::PredicateFile;
 use super::profiler::Profile;
 use super::regfile::RegFile;
@@ -24,30 +33,52 @@ use super::shared_mem::SharedMem;
 /// drain cost of STOP.
 pub const PIPELINE_DEPTH: u64 = 8;
 
-/// Simulation error, annotated with the faulting PC.
+/// Simulation error, annotated with the faulting PC. Cycle-budget stops
+/// additionally carry the progress made before the budget ran out in
+/// [`SimError::partial`], so callers can surface cycles/profile/hazards
+/// instead of discarding them.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SimError {
     pub pc: usize,
     pub message: String,
+    /// Partial [`RunStats`] at the point of failure (present on
+    /// cycle-limit stops; the machine's architectural state is likewise
+    /// preserved and inspectable).
+    pub partial: Option<Box<RunStats>>,
+}
+
+impl SimError {
+    pub fn new(pc: usize, message: impl Into<String>) -> SimError {
+        SimError {
+            pc,
+            message: message.into(),
+            partial: None,
+        }
+    }
 }
 
 impl std::fmt::Display for SimError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "pc {}: {}", self.pc, self.message)
+        write!(f, "pc {}: {}", self.pc, self.message)?;
+        if let Some(p) = &self.partial {
+            write!(
+                f,
+                " (after {} cycles, {} instructions)",
+                p.cycles, p.instructions
+            )?;
+        }
+        Ok(())
     }
 }
 
 impl std::error::Error for SimError {}
 
 fn serr<T>(pc: usize, msg: impl Into<String>) -> Result<T, SimError> {
-    Err(SimError {
-        pc,
-        message: msg.into(),
-    })
+    Err(SimError::new(pc, msg))
 }
 
 /// Result of a completed run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct RunStats {
     /// Core clock cycles consumed (the paper's benchmark metric).
     pub cycles: u64,
@@ -71,14 +102,18 @@ impl RunStats {
 enum Exec {
     /// Inlined bit-exact rust lanes (default).
     Native,
-    /// Pluggable block executor (XLA artifacts through PJRT).
-    Block(Box<dyn BlockExec>),
+    /// Pluggable block executor (XLA artifacts through PJRT). `Send` so a
+    /// `Machine` can move to a coordinator worker thread.
+    Block(Box<dyn BlockExec + Send>),
 }
 
-/// One eGPU core.
+/// One eGPU core. `Send`: the multi-core coordinator hands each core to
+/// its own worker thread.
 pub struct Machine {
     pub cfg: EgpuConfig,
     prog: Option<Program>,
+    /// Decode-time issue plans, one per instruction of `prog`.
+    plans: Vec<IssuePlan>,
     seq: Sequencer,
     regs: RegFile,
     shared: SharedMem,
@@ -90,6 +125,9 @@ pub struct Machine {
     /// Runtime-initialized threads (≤ cfg.threads; §3.2 "if the run time
     /// configuration of threads is less than this, there is no issue").
     rt_threads: usize,
+    /// Wavefront count per depth selector, resolved against `rt_threads`
+    /// (indexed by `DepthSel::bits()`; rebuilt by `set_threads`).
+    wave_tab: [usize; 4],
     /// TDx/TDy grid x-dimension: TDx = tid % dim_x, TDy = tid / dim_x.
     dim_x: usize,
     /// Instruction trace to stderr (EGPU_TRACE env var, read once — an
@@ -104,6 +142,13 @@ pub struct Machine {
     scr_mask: Vec<u8>,
 }
 
+// The coordinator's parallel dispatch moves `&mut Machine` into scoped
+// worker threads; keep the auto-impl from silently regressing.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<Machine>();
+};
+
 impl Machine {
     /// New machine with the native datapath.
     pub fn new(cfg: EgpuConfig) -> Result<Machine, SimError> {
@@ -113,14 +158,12 @@ impl Machine {
     /// New machine with an explicit block executor (e.g. the XLA backend).
     pub fn with_backend(
         cfg: EgpuConfig,
-        backend: Option<Box<dyn BlockExec>>,
+        backend: Option<Box<dyn BlockExec + Send>>,
     ) -> Result<Machine, SimError> {
-        cfg.validate().map_err(|e| SimError {
-            pc: 0,
-            message: e.to_string(),
-        })?;
+        cfg.validate()
+            .map_err(|e| SimError::new(0, e.to_string()))?;
         let threads = cfg.threads;
-        Ok(Machine {
+        let mut m = Machine {
             regs: RegFile::new(threads, cfg.regs_per_thread),
             shared: SharedMem::new(cfg.shared_words(), cfg.memory),
             preds: PredicateFile::new(threads, cfg.predicate_levels),
@@ -128,9 +171,11 @@ impl Machine {
             profile: Profile::new(),
             seq: Sequencer::new(),
             prog: None,
+            plans: Vec::new(),
             cycles: 0,
             retired: 0,
             rt_threads: threads,
+            wave_tab: [1; 4],
             dim_x: threads,
             trace: std::env::var_os("EGPU_TRACE").is_some(),
             exec: match backend {
@@ -143,7 +188,9 @@ impl Machine {
             scr_out: Vec::new(),
             scr_mask: Vec::new(),
             cfg,
-        })
+        };
+        m.rebuild_wave_tab();
+        Ok(m)
     }
 
     /// Load (and statically validate) a program.
@@ -161,16 +208,21 @@ impl Machine {
         for (pc, i) in prog.instrs.iter().enumerate() {
             self.cfg
                 .supports(i.op, None)
-                .map_err(|e| SimError {
-                    pc,
-                    message: e.to_string(),
-                })?;
+                .map_err(|e| SimError::new(pc, e.to_string()))?;
             if matches!(i.op, Opcode::Jmp | Opcode::Jsr | Opcode::Loop)
                 && i.imm_u() as usize >= prog.instrs.len()
             {
                 return serr(pc, format!("branch target {} out of range", i.imm_u()));
             }
         }
+        // Plans are compiled at assembly (early validation, carried on
+        // `Program` for tooling), but the machine always recompiles from
+        // the instruction stream it is actually loading: every `Program`
+        // field is public, so an in-place edit to `instrs` must never
+        // leave execution running a stale plan. Compilation is a cheap
+        // O(n) decode pass, far off the hot path.
+        self.plans =
+            plan::compile(&prog.instrs).map_err(|e| SimError::new(e.pc, e.message))?;
         self.prog = Some(prog);
         self.reset();
         Ok(())
@@ -199,7 +251,17 @@ impl Machine {
             );
         }
         self.rt_threads = threads;
+        self.rebuild_wave_tab();
         Ok(())
+    }
+
+    /// Resolve each depth selector against the runtime wavefront count
+    /// (the one plan input that is per-launch, not per-program).
+    fn rebuild_wave_tab(&mut self) {
+        let total = self.rt_threads / WAVEFRONT_WIDTH;
+        for bits in 0..4u8 {
+            self.wave_tab[bits as usize] = DepthSel::from_bits(bits).waves(total);
+        }
     }
 
     /// Set the TDx/TDy grid x-dimension.
@@ -237,6 +299,18 @@ impl Machine {
         self.cycles
     }
 
+    /// The run statistics accumulated so far (valid mid-run and after a
+    /// cycle-limit stop; `run` returns the same snapshot on success).
+    pub fn stats_snapshot(&self) -> RunStats {
+        RunStats {
+            cycles: self.cycles,
+            instructions: self.retired,
+            profile: self.profile.clone(),
+            hazards: self.hazards.total,
+            hazard_samples: self.hazards.samples.clone(),
+        }
+    }
+
     fn rt_waves(&self) -> usize {
         self.rt_threads / WAVEFRONT_WIDTH
     }
@@ -247,8 +321,329 @@ impl Machine {
         !self.preds.configured() || self.preds.active(wave * WAVEFRONT_WIDTH + sp)
     }
 
-    /// Run to STOP (or error). `max_cycles` bounds runaway programs.
+    /// Budget-stop error carrying the progress made so far.
+    fn cycle_limit(&self, pc: usize, max_cycles: u64) -> SimError {
+        SimError {
+            pc,
+            message: format!("cycle limit {max_cycles} exceeded"),
+            partial: Some(Box::new(self.stats_snapshot())),
+        }
+    }
+
+    /// Run to STOP (or error) through the issue-plan hot loop.
+    /// `max_cycles` bounds runaway programs; the budget is enforced
+    /// *before* issue, and the error keeps the partial stats.
     pub fn run(&mut self, max_cycles: u64) -> Result<RunStats, SimError> {
+        if self.prog.is_none() {
+            return serr(0, "no program loaded");
+        }
+        let prog_len = self.plans.len();
+        while !self.seq.stopped {
+            let pc = self.seq.pc;
+            if pc >= prog_len {
+                return serr(pc, "execution fell off the end of the program");
+            }
+            if self.cycles >= max_cycles {
+                return Err(self.cycle_limit(pc, max_cycles));
+            }
+            let p = self.plans[pc];
+            if self.trace {
+                let i = self.prog.as_ref().unwrap().instrs[pc];
+                eprintln!("pc={} op={:?} tc={} imm={}", pc, i.op, i.tc, i.imm_u());
+            }
+            self.step_plan(pc, &p)?;
+            self.retired += 1;
+        }
+        // STOP drains the pipeline.
+        self.cycles += PIPELINE_DEPTH;
+        Ok(self.stats_snapshot())
+    }
+
+    #[inline]
+    fn step_plan(&mut self, pc: usize, p: &IssuePlan) -> Result<(), SimError> {
+        match p.kind {
+            PlanKind::Nop => {
+                self.cycles += 1;
+                self.profile.record_slot(p.slot as usize, 1);
+                self.seq.step();
+            }
+            PlanKind::Jmp => {
+                self.charge_control(p);
+                self.seq.jmp(p.imm as usize);
+            }
+            PlanKind::Jsr => {
+                self.charge_control(p);
+                self.seq
+                    .jsr(p.imm as usize)
+                    .map_err(|e| SimError::new(pc, e.to_string()))?;
+            }
+            PlanKind::Rts => {
+                self.charge_control(p);
+                self.seq
+                    .rts()
+                    .map_err(|e| SimError::new(pc, e.to_string()))?;
+            }
+            PlanKind::Loop => {
+                self.charge_control(p);
+                self.seq
+                    .loop_dec(p.imm as usize)
+                    .map_err(|e| SimError::new(pc, e.to_string()))?;
+            }
+            PlanKind::Init => {
+                self.charge_control(p);
+                self.seq
+                    .init(p.imm)
+                    .map_err(|e| SimError::new(pc, e.to_string()))?;
+                self.seq.step();
+            }
+            PlanKind::Stop => {
+                self.charge_control(p);
+                self.seq.stop();
+            }
+            PlanKind::Ldi => {
+                let v = p.imm;
+                self.plan_set(p, move |_| v);
+            }
+            PlanKind::TdX => {
+                let dx = self.dim_x;
+                self.plan_set(p, move |t| (t % dx) as u32);
+            }
+            PlanKind::TdY => {
+                let dx = self.dim_x;
+                self.plan_set(p, move |t| (t / dx) as u32);
+            }
+            PlanKind::Alu(dp) => self.plan_alu(pc, p, dp)?,
+            PlanKind::Load => self.plan_load(pc, p)?,
+            PlanKind::Store => self.plan_store(pc, p)?,
+            PlanKind::Dot { sum_only } => self.plan_dot(pc, p, sum_only)?,
+            PlanKind::If { cc, ttype } => self.plan_if(pc, p, cc, ttype)?,
+            PlanKind::Else | PlanKind::EndIf => self.plan_else_endif(pc, p)?,
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn charge_control(&mut self, p: &IssuePlan) {
+        self.cycles += 1;
+        self.profile.record_slot(p.slot as usize, 1);
+    }
+
+    /// LDI / TDX / TDY: per-thread generated values, one wavefront/cycle.
+    #[inline]
+    fn plan_set(&mut self, p: &IssuePlan, value: impl FnMut(usize) -> u32) {
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        let lanes = p.lanes as usize;
+        let start = self.cycles;
+        // Field-level borrow: the gate (self.preds) and the register rows
+        // (self.regs) are disjoint.
+        let preds = if self.preds.configured() { Some(&self.preds) } else { None };
+        self.regs.lane_set(waves, lanes, p.rd, preds, value);
+        self.hazards.write_reg(p.rd, start, REG_WINDOW);
+        self.cycles += waves as u64;
+        self.profile.record_slot(p.slot as usize, waves as u64);
+        self.seq.step();
+    }
+
+    /// FP/INT wavefront ALU ops and INVSQR: one wavefront per cycle.
+    fn plan_alu(&mut self, pc: usize, p: &IssuePlan, dp: DpOp) -> Result<(), SimError> {
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        let lanes = p.lanes as usize;
+        let start = self.cycles;
+        self.hazards.read_reg(pc, p.ra, start);
+        if p.uses_rb {
+            self.hazards.read_reg(pc, p.rb, start);
+        }
+        match (&mut self.exec, dp) {
+            (Exec::Native, DpOp::Fp(op)) => {
+                let preds = if self.preds.configured() { Some(&self.preds) } else { None };
+                self.regs
+                    .lane_apply(waves, lanes, p.rd, p.ra, p.rb, preds, |a, b| {
+                        native::fp_lane(op, a, b)
+                    });
+            }
+            (Exec::Native, DpOp::Int(op)) => {
+                let prec = self.cfg.alu_precision;
+                let preds = if self.preds.configured() { Some(&self.preds) } else { None };
+                self.regs
+                    .lane_apply(waves, lanes, p.rd, p.ra, p.rb, preds, |a, b| {
+                        native::int_lane(op, a, b, prec)
+                    });
+            }
+            (Exec::Block(_), DpOp::Fp(_)) | (Exec::Block(_), DpOp::Int(_)) => {
+                self.exec_alu_block(pc, p.rd, p.ra, p.rb, dp, waves, lanes)?;
+            }
+            (_, DpOp::Dot { .. }) => unreachable!("dot is PlanKind::Dot"),
+        }
+        self.hazards.write_reg(p.rd, start, REG_WINDOW);
+        self.cycles += waves as u64;
+        self.profile.record_slot(p.slot as usize, waves as u64);
+        self.seq.step();
+        Ok(())
+    }
+
+    /// LOD: 4 lanes per cycle through the shared-memory read ports.
+    fn plan_load(&mut self, pc: usize, p: &IssuePlan) -> Result<(), SimError> {
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        let lanes = p.lanes as usize;
+        let start = self.cycles;
+        self.hazards.read_reg(pc, p.ra, start);
+        let charge = self.shared.load_cycles(waves * lanes);
+        let (ra, rd, imm) = (p.ra as usize, p.rd as usize, p.imm);
+        let preds_on = self.preds.configured();
+        let check = self.hazards.enabled();
+        let preds = &self.preds;
+        let shared = &self.shared;
+        let hazards = &mut self.hazards;
+        let r: Result<(), super::shared_mem::MemFault> = if check {
+            self.regs.lane_rows_mut(waves, lanes, |t, row| {
+                let addr = row[ra].wrapping_add(imm);
+                // The port slot is consumed regardless of the predicate;
+                // only the register writeback is gated.
+                hazards.read_mem(pc, addr, start);
+                if preds_on && !preds.active(t) {
+                    return Ok(());
+                }
+                row[rd] = shared.read(addr)?;
+                Ok(())
+            })
+        } else {
+            self.regs.lane_rows_mut(waves, lanes, |t, row| {
+                let addr = row[ra].wrapping_add(imm);
+                if preds_on && !preds.active(t) {
+                    return Ok(());
+                }
+                row[rd] = shared.read(addr)?;
+                Ok(())
+            })
+        };
+        r.map_err(|f| SimError::new(pc, f.to_string()))?;
+        // rd streams back over `charge` slots; see hazard.rs for the skew
+        // argument behind the window.
+        self.hazards
+            .write_reg(p.rd, start, REG_WINDOW + charge.saturating_sub(waves as u64));
+        self.cycles += charge;
+        self.profile.record_slot(p.slot as usize, charge);
+        self.seq.step();
+        Ok(())
+    }
+
+    /// STO: 1 (DP) or 2 (QP) lanes per cycle through the write ports.
+    fn plan_store(&mut self, pc: usize, p: &IssuePlan) -> Result<(), SimError> {
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        let lanes = p.lanes as usize;
+        let start = self.cycles;
+        self.hazards.read_reg(pc, p.ra, start);
+        self.hazards.read_reg(pc, p.rd, start);
+        let charge = self.shared.store_cycles(waves * lanes);
+        let (ra, rd, imm) = (p.ra as usize, p.rd as usize, p.imm);
+        let preds_on = self.preds.configured();
+        let ready = start + charge + MEM_WINDOW;
+        let preds = &self.preds;
+        let shared = &mut self.shared;
+        let hazards = &mut self.hazards;
+        self.regs
+            .lane_rows(waves, lanes, |t, row| {
+                if preds_on && !preds.active(t) {
+                    return Ok(()); // write_enable gated by thread_active (§3.2)
+                }
+                let addr = row[ra].wrapping_add(imm);
+                shared.write(addr, row[rd])?;
+                hazards.write_mem(addr, ready);
+                Ok(())
+            })
+            .map_err(|f: super::shared_mem::MemFault| SimError::new(pc, f.to_string()))?;
+        self.cycles += charge;
+        self.profile.record_slot(p.slot as usize, charge);
+        self.seq.step();
+        Ok(())
+    }
+
+    /// DOT / SUM extension core: operands stream one wavefront per cycle,
+    /// the scalar result writes back to thread 0 after the core latency.
+    fn plan_dot(&mut self, pc: usize, p: &IssuePlan, sum_only: bool) -> Result<(), SimError> {
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        let lanes = p.lanes as usize;
+        let start = self.cycles;
+        self.hazards.read_reg(pc, p.ra, start);
+        if !sum_only {
+            self.hazards.read_reg(pc, p.rb, start);
+        }
+        let result = match &self.exec {
+            Exec::Native => self.exec_dot_native(p.ra, p.rb, sum_only, waves, lanes),
+            Exec::Block(_) => self.exec_dot_block(pc, p.ra, p.rb, sum_only, waves, lanes)?,
+        };
+        // Result lands in the leftmost SP (§3.1): thread 0's rd.
+        if self.thread_active(0, 0) {
+            self.regs.write(0, 0, p.rd, result.to_bits());
+        }
+        self.hazards
+            .write_reg(p.rd, start, waves as u64 + DOT_WINDOW);
+        self.cycles += waves as u64;
+        self.profile.record_slot(p.slot as usize, waves as u64);
+        self.seq.step();
+        Ok(())
+    }
+
+    /// IF: per-thread predicate push, one wavefront per cycle (§3.2).
+    fn plan_if(
+        &mut self,
+        pc: usize,
+        p: &IssuePlan,
+        cc: CondCode,
+        ttype: TType,
+    ) -> Result<(), SimError> {
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        let lanes = p.lanes as usize;
+        let start = self.cycles;
+        self.hazards.read_reg(pc, p.ra, start);
+        self.hazards.read_reg(pc, p.rb, start);
+        let (ra, rb) = (p.ra as usize, p.rb as usize);
+        let preds = &mut self.preds;
+        self.regs
+            .lane_rows(waves, lanes, |t, row| {
+                preds.push(t, cc.eval(ttype, row[ra], row[rb]))
+            })
+            .map_err(|e| SimError::new(pc, e.to_string()))?;
+        self.cycles += waves as u64;
+        self.profile.record_slot(p.slot as usize, waves as u64);
+        self.seq.step();
+        Ok(())
+    }
+
+    /// ELSE / ENDIF: per-thread predicate-stack updates.
+    fn plan_else_endif(&mut self, pc: usize, p: &IssuePlan) -> Result<(), SimError> {
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        let lanes = p.lanes as usize;
+        let invert = p.kind == PlanKind::Else;
+        for w in 0..waves {
+            let base = w * WAVEFRONT_WIDTH;
+            for sp in 0..lanes {
+                let r = if invert {
+                    self.preds.invert_top(base + sp)
+                } else {
+                    self.preds.pop(base + sp)
+                };
+                r.map_err(|e| SimError::new(pc, e.to_string()))?;
+            }
+        }
+        self.cycles += waves as u64;
+        self.profile.record_slot(p.slot as usize, waves as u64);
+        self.seq.step();
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // Reference interpreter: the original per-instruction re-deriving
+    // execution path (classification, operand shape, geometry and cycle
+    // charges all computed at issue time). Retained as the differential
+    // oracle for the plan compiler and the plan-driven hot loop.
+    // -----------------------------------------------------------------
+
+    /// Run to STOP (or error) through the reference interpreter. Same
+    /// budget and error semantics as [`Machine::run`]; the two must
+    /// produce bit-identical architectural state, cycle counts and
+    /// hazard totals on every program.
+    pub fn run_reference(&mut self, max_cycles: u64) -> Result<RunStats, SimError> {
         let prog_len = match &self.prog {
             Some(p) => p.instrs.len(),
             None => return serr(0, "no program loaded"),
@@ -258,30 +653,24 @@ impl Machine {
             if pc >= prog_len {
                 return serr(pc, "execution fell off the end of the program");
             }
+            if self.cycles >= max_cycles {
+                return Err(self.cycle_limit(pc, max_cycles));
+            }
             // Fetch (instructions are pre-decoded at assembly; the encoded
             // words are what the M20Ks hold, `Program` keeps both).
             let i = self.prog.as_ref().unwrap().instrs[pc];
             if self.trace {
                 eprintln!("pc={} op={:?} tc={} imm={}", pc, i.op, i.tc, i.imm_u());
             }
-            self.execute(pc, &i)?;
+            self.execute_reference(pc, &i)?;
             self.retired += 1;
-            if self.cycles > max_cycles {
-                return serr(pc, format!("cycle limit {max_cycles} exceeded"));
-            }
         }
         // STOP drains the pipeline.
         self.cycles += PIPELINE_DEPTH;
-        Ok(RunStats {
-            cycles: self.cycles,
-            instructions: self.retired,
-            profile: self.profile.clone(),
-            hazards: self.hazards.total,
-            hazard_samples: self.hazards.samples.clone(),
-        })
+        Ok(self.stats_snapshot())
     }
 
-    fn execute(&mut self, pc: usize, i: &Instr) -> Result<(), SimError> {
+    fn execute_reference(&mut self, pc: usize, i: &Instr) -> Result<(), SimError> {
         use Opcode::*;
         match i.op {
             Nop => {
@@ -299,36 +688,28 @@ impl Machine {
                 self.profile.record(Group::Control, 1);
                 self.seq
                     .jsr(i.imm_u() as usize)
-                    .map_err(|e| SimError {
-                        pc,
-                        message: e.to_string(),
-                    })?;
+                    .map_err(|e| SimError::new(pc, e.to_string()))?;
             }
             Rts => {
                 self.cycles += 1;
                 self.profile.record(Group::Control, 1);
-                self.seq.rts().map_err(|e| SimError {
-                    pc,
-                    message: e.to_string(),
-                })?;
+                self.seq
+                    .rts()
+                    .map_err(|e| SimError::new(pc, e.to_string()))?;
             }
             Loop => {
                 self.cycles += 1;
                 self.profile.record(Group::Control, 1);
                 self.seq
                     .loop_dec(i.imm_u() as usize)
-                    .map_err(|e| SimError {
-                        pc,
-                        message: e.to_string(),
-                    })?;
+                    .map_err(|e| SimError::new(pc, e.to_string()))?;
             }
             Init => {
                 self.cycles += 1;
                 self.profile.record(Group::Control, 1);
-                self.seq.init(i.imm_u()).map_err(|e| SimError {
-                    pc,
-                    message: e.to_string(),
-                })?;
+                self.seq
+                    .init(i.imm_u())
+                    .map_err(|e| SimError::new(pc, e.to_string()))?;
                 self.seq.step();
             }
             Stop => {
@@ -411,34 +792,20 @@ impl Machine {
             (Exec::Native, DpOp::Fp(op)) => {
                 // Predicate gate hoisted; row iteration avoids per-lane
                 // index math + bounds checks (EXPERIMENTS.md §Perf).
-                let preds_on = self.preds.configured();
-                let preds = &self.preds;
-                self.regs.lane_apply(
-                    waves,
-                    lanes,
-                    i.rd,
-                    i.ra,
-                    i.rb,
-                    |t| !preds_on || preds.active(t),
-                    |a, b| native::fp_lane(op, a, b),
-                );
+                let preds = if self.preds.configured() { Some(&self.preds) } else { None };
+                self.regs.lane_apply(waves, lanes, i.rd, i.ra, i.rb, preds, |a, b| {
+                    native::fp_lane(op, a, b)
+                });
             }
             (Exec::Native, DpOp::Int(op)) => {
                 let prec = self.cfg.alu_precision;
-                let preds_on = self.preds.configured();
-                let preds = &self.preds;
-                self.regs.lane_apply(
-                    waves,
-                    lanes,
-                    i.rd,
-                    i.ra,
-                    i.rb,
-                    |t| !preds_on || preds.active(t),
-                    |a, b| native::int_lane(op, a, b, prec),
-                );
+                let preds = if self.preds.configured() { Some(&self.preds) } else { None };
+                self.regs.lane_apply(waves, lanes, i.rd, i.ra, i.rb, preds, |a, b| {
+                    native::int_lane(op, a, b, prec)
+                });
             }
             (Exec::Block(_), DpOp::Fp(_)) | (Exec::Block(_), DpOp::Int(_)) => {
-                self.exec_alu_block(pc, i, dp, waves, lanes)?;
+                self.exec_alu_block(pc, i.rd, i.ra, i.rb, dp, waves, lanes)?;
             }
             (_, DpOp::Dot { .. }) => unreachable!("dot handled in exec_dot"),
         }
@@ -449,11 +816,15 @@ impl Machine {
         Ok(())
     }
 
-    /// Block-executor path: gather → one artifact call → scatter.
+    /// Block-executor path: gather → one artifact call → scatter. Shared
+    /// by the reference and plan-driven paths.
+    #[allow(clippy::too_many_arguments)]
     fn exec_alu_block(
         &mut self,
         pc: usize,
-        i: &Instr,
+        rd: u8,
+        ra: u8,
+        rb: u8,
         dp: DpOp,
         waves: usize,
         lanes: usize,
@@ -468,9 +839,9 @@ impl Machine {
         for w in 0..depth {
             for sp in 0..WAVEFRONT_WIDTH {
                 let idx = w * WAVEFRONT_WIDTH + sp;
-                self.scr_a[idx] = self.regs.read(w, sp, i.ra);
-                self.scr_b[idx] = self.regs.read(w, sp, i.rb);
-                self.scr_old[idx] = self.regs.read(w, sp, i.rd);
+                self.scr_a[idx] = self.regs.read(w, sp, ra);
+                self.scr_b[idx] = self.regs.read(w, sp, rb);
+                self.scr_old[idx] = self.regs.read(w, sp, rd);
                 self.scr_mask[idx] =
                     (w < waves && sp < lanes && self.thread_active(w, sp)) as u8;
             }
@@ -499,15 +870,12 @@ impl Machine {
             ),
             DpOp::Dot { .. } => unreachable!(),
         };
-        r.map_err(|m| SimError {
-            pc,
-            message: format!("datapath backend: {m}"),
-        })?;
+        r.map_err(|m| SimError::new(pc, format!("datapath backend: {m}")))?;
         for w in 0..depth {
             for sp in 0..WAVEFRONT_WIDTH {
                 let idx = w * WAVEFRONT_WIDTH + sp;
                 if self.scr_mask[idx] != 0 {
-                    self.regs.write(w, sp, i.rd, self.scr_out[idx]);
+                    self.regs.write(w, sp, rd, self.scr_out[idx]);
                 }
             }
         }
@@ -539,10 +907,7 @@ impl Machine {
                 row[rd] = shared.read(addr)?;
                 Ok(())
             })
-            .map_err(|f| SimError {
-                pc,
-                message: f.to_string(),
-            })?;
+            .map_err(|f: super::shared_mem::MemFault| SimError::new(pc, f.to_string()))?;
         // rd streams back over `charge` slots; see hazard.rs for the skew
         // argument behind the window.
         self.hazards
@@ -571,16 +936,75 @@ impl Machine {
                     .read(w, sp, i.ra)
                     .wrapping_add(i.imm_u());
                 let v = self.regs.read(w, sp, i.rd);
-                self.shared.write(addr, v).map_err(|f| SimError {
-                    pc,
-                    message: f.to_string(),
-                })?;
+                self.shared
+                    .write(addr, v)
+                    .map_err(|f| SimError::new(pc, f.to_string()))?;
                 self.hazards.write_mem(addr, start + charge + MEM_WINDOW);
             }
         }
         self.cycles += charge;
         self.profile.record(Group::Memory, charge);
         Ok(())
+    }
+
+    /// The DOT core's native accumulation: wavefront-major, row-summed
+    /// (matching the Pallas grid). Shared by both execution paths.
+    fn exec_dot_native(&self, ra: u8, rb: u8, sum_only: bool, waves: usize, lanes: usize) -> f32 {
+        let mut acc = 0f32;
+        for w in 0..waves {
+            let mut row = 0f32;
+            for sp in 0..lanes {
+                if !self.thread_active(w, sp) {
+                    continue;
+                }
+                let a = f32::from_bits(self.regs.read(w, sp, ra));
+                let b = if sum_only {
+                    1.0
+                } else {
+                    f32::from_bits(self.regs.read(w, sp, rb))
+                };
+                row += a * b;
+            }
+            acc += row;
+        }
+        acc
+    }
+
+    /// The DOT core through the block executor: gather → one artifact
+    /// call. Shared by both execution paths.
+    fn exec_dot_block(
+        &mut self,
+        pc: usize,
+        ra: u8,
+        rb: u8,
+        sum_only: bool,
+        waves: usize,
+        lanes: usize,
+    ) -> Result<f32, SimError> {
+        let depth = self.rt_waves();
+        let n = depth * WAVEFRONT_WIDTH;
+        self.scr_a.resize(n, 0);
+        self.scr_b.resize(n, 0);
+        self.scr_mask.resize(n, 0);
+        for w in 0..depth {
+            for sp in 0..WAVEFRONT_WIDTH {
+                let idx = w * WAVEFRONT_WIDTH + sp;
+                self.scr_a[idx] = self.regs.read(w, sp, ra);
+                self.scr_b[idx] = if sum_only {
+                    1f32.to_bits()
+                } else {
+                    self.regs.read(w, sp, rb)
+                };
+                self.scr_mask[idx] =
+                    (w < waves && sp < lanes && self.thread_active(w, sp)) as u8;
+            }
+        }
+        let be = match &mut self.exec {
+            Exec::Block(b) => b,
+            Exec::Native => unreachable!(),
+        };
+        be.dot_block(&self.scr_a, &self.scr_b, &self.scr_mask)
+            .map_err(|m| SimError::new(pc, format!("datapath backend: {m}")))
     }
 
     /// DOT / SUM extension core: operands stream one wavefront per cycle,
@@ -595,57 +1019,9 @@ impl Machine {
             self.hazards.read_reg(pc, i.rb, start);
         }
 
-        let result = match &mut self.exec {
-            Exec::Native => {
-                // Wavefront-major accumulation, matching the Pallas grid.
-                let mut acc = 0f32;
-                for w in 0..waves {
-                    let mut row = 0f32;
-                    for sp in 0..lanes {
-                        if !self.thread_active(w, sp) {
-                            continue;
-                        }
-                        let a = f32::from_bits(self.regs.read(w, sp, i.ra));
-                        let b = if sum_only {
-                            1.0
-                        } else {
-                            f32::from_bits(self.regs.read(w, sp, i.rb))
-                        };
-                        row += a * b;
-                    }
-                    acc += row;
-                }
-                acc
-            }
-            Exec::Block(_) => {
-                let depth = self.rt_waves();
-                let n = depth * WAVEFRONT_WIDTH;
-                self.scr_a.resize(n, 0);
-                self.scr_b.resize(n, 0);
-                self.scr_mask.resize(n, 0);
-                for w in 0..depth {
-                    for sp in 0..WAVEFRONT_WIDTH {
-                        let idx = w * WAVEFRONT_WIDTH + sp;
-                        self.scr_a[idx] = self.regs.read(w, sp, i.ra);
-                        self.scr_b[idx] = if sum_only {
-                            1f32.to_bits()
-                        } else {
-                            self.regs.read(w, sp, i.rb)
-                        };
-                        self.scr_mask[idx] =
-                            (w < waves && sp < lanes && self.thread_active(w, sp)) as u8;
-                    }
-                }
-                let be = match &mut self.exec {
-                    Exec::Block(b) => b,
-                    _ => unreachable!(),
-                };
-                be.dot_block(&self.scr_a, &self.scr_b, &self.scr_mask)
-                    .map_err(|m| SimError {
-                        pc,
-                        message: format!("datapath backend: {m}"),
-                    })?
-            }
+        let result = match &self.exec {
+            Exec::Native => self.exec_dot_native(i.ra, i.rb, sum_only, waves, lanes),
+            Exec::Block(_) => self.exec_dot_block(pc, i.ra, i.rb, sum_only, waves, lanes)?,
         };
 
         // Result lands in the leftmost SP (§3.1): thread 0's rd.
@@ -674,9 +1050,8 @@ impl Machine {
                 let t = w * WAVEFRONT_WIDTH + sp;
                 let r = match i.op {
                     Opcode::If => {
-                        let cc = i.cond().ok_or_else(|| SimError {
-                            pc,
-                            message: "IF without condition code".into(),
+                        let cc = i.cond().ok_or_else(|| {
+                            SimError::new(pc, "IF without condition code")
                         })?;
                         let a = self.regs.read(w, sp, i.ra);
                         let b = self.regs.read(w, sp, i.rb);
@@ -686,10 +1061,7 @@ impl Machine {
                     Opcode::EndIf => self.preds.pop(t),
                     _ => unreachable!(),
                 };
-                r.map_err(|e| SimError {
-                    pc,
-                    message: e.to_string(),
-                })?;
+                r.map_err(|e| SimError::new(pc, e.to_string()))?;
             }
         }
         self.cycles += waves as u64;
@@ -1029,5 +1401,79 @@ mod tests {
         let p = assemble("top: jmp top\n", m.cfg.word_layout()).unwrap();
         m.load_program(p).unwrap();
         assert!(m.run(100).is_err());
+    }
+
+    #[test]
+    fn cycle_limit_error_carries_partial_stats() {
+        let mut m = machine();
+        let p = assemble("top: jmp top\n", m.cfg.word_layout()).unwrap();
+        m.load_program(p).unwrap();
+        let e = m.run(100).unwrap_err();
+        assert!(e.message.contains("cycle limit"), "{e}");
+        let partial = e.partial.expect("budget stop keeps progress");
+        assert_eq!(partial.cycles, 100);
+        assert_eq!(partial.instructions, 100);
+        assert!(partial.profile.count(Group::Control) > 0);
+        // The machine's own counters agree with the snapshot.
+        assert_eq!(m.cycles(), 100);
+        assert_eq!(m.stats_snapshot(), *partial);
+        // Reference interpreter: identical budget behavior.
+        let mut r = machine();
+        let p = assemble("top: jmp top\n", r.cfg.word_layout()).unwrap();
+        r.load_program(p).unwrap();
+        let er = r.run_reference(100).unwrap_err();
+        assert_eq!(er.partial.as_deref().map(|s| s.cycles), Some(100));
+    }
+
+    #[test]
+    fn load_program_recompiles_plans_for_edited_instrs() {
+        // Every Program field is public; an in-place edit to `instrs`
+        // (stale `plans` still attached) must be what executes.
+        let mut m = machine();
+        let mut p = assemble("ldi r1, #7\nstop\n", m.cfg.word_layout()).unwrap();
+        p.instrs[0].imm = 9;
+        m.load_program(p).unwrap();
+        m.run(1_000).unwrap();
+        assert_eq!(m.regs().read_thread(0, 1), 9, "stale plan executed");
+    }
+
+    #[test]
+    fn reference_interpreter_matches_planned_loop() {
+        let src = "
+            tdx r0
+            ldi r1, #8
+            nop
+            nop
+            nop
+            nop
+            nop
+            nop
+            if.lt.i32 r0, r1
+            ldi r2, #1
+            else
+            ldi r2, #2
+            endif
+            [w16,dhalf] add.i32 r3, r0, r1
+            lod r4, (r0)+0
+            sto r4, (r0)+512
+            dot r5, r1, r1
+            stop
+        ";
+        let mut a = machine();
+        let sa = run_src(&mut a, src);
+        let mut b = machine();
+        let p = assemble(src, b.cfg.word_layout()).unwrap();
+        b.load_program(p).unwrap();
+        let sb = b.run_reference(10_000_000).unwrap();
+        assert_eq!(sa, sb);
+        for t in 0..512 {
+            for r in 0..6u8 {
+                assert_eq!(
+                    a.regs().read_thread(t, r),
+                    b.regs().read_thread(t, r),
+                    "thread {t} r{r}"
+                );
+            }
+        }
     }
 }

@@ -9,6 +9,7 @@
 pub mod config;
 pub mod hazard;
 pub mod machine;
+pub mod plan;
 pub mod predicate;
 pub mod profiler;
 pub mod regfile;
@@ -17,4 +18,5 @@ pub mod shared_mem;
 
 pub use config::{EgpuConfig, IntAluClass, MemoryMode};
 pub use machine::{Machine, RunStats, SimError, PIPELINE_DEPTH};
+pub use plan::{IssuePlan, PlanKind};
 pub use profiler::Profile;

@@ -1,0 +1,223 @@
+//! Decode-time issue plans.
+//!
+//! The eGPU pipeline does no per-cycle re-interpretation: an instruction's
+//! datapath routing, operand shape, thread-space geometry and port charges
+//! are all fixed by its encoding. The simulator mirrors that discipline by
+//! compiling every [`Instr`] into an [`IssuePlan`] once — at assembly (the
+//! plans travel with [`crate::asm::Program`]) or at program load — so the
+//! `Machine::run` hot loop is reduced to fetch-plan → execute-lanes →
+//! charge, with `classify()`, `Opcode::operands()`, condition-code
+//! decoding and group-slot lookups all hoisted out of the per-instruction
+//! path.
+//!
+//! The only run-time-dependent quantity is the wavefront count selected by
+//! the depth field (it depends on the runtime thread configuration,
+//! §3.2), so the plan stores the [`DepthSel`] and the machine resolves it
+//! through a 4-entry table rebuilt on `set_threads`.
+//!
+//! `Machine::run_reference` retains the original re-deriving interpreter;
+//! `rust/tests/asm_sim_properties.rs` proves the two produce bit-identical
+//! architectural state, cycle counts and hazard totals on randomized
+//! programs.
+
+use crate::datapath::{classify, DpOp};
+use crate::isa::opcode::OperandShape;
+use crate::isa::{CondCode, DepthSel, Instr, Opcode, TType};
+
+/// What the execute stage does for one instruction, with every decode
+/// decision already made.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PlanKind {
+    Nop,
+    /// Sequencer ops; the target/count is the plan's `imm`.
+    Jmp,
+    Jsr,
+    Rts,
+    Loop,
+    Init,
+    Stop,
+    /// Per-thread generated values (LDI immediate / thread IDs).
+    Ldi,
+    TdX,
+    TdY,
+    /// Wavefront ALU op, pre-classified to its datapath op
+    /// ([`DpOp::Fp`] or [`DpOp::Int`] only — DOT/SUM are [`PlanKind::Dot`]).
+    Alu(DpOp),
+    Load,
+    Store,
+    /// DOT (a·b) or SUM (Σa) extension core.
+    Dot { sum_only: bool },
+    /// Predicate push with the pre-decoded condition.
+    If { cc: CondCode, ttype: TType },
+    Else,
+    EndIf,
+}
+
+/// A pre-resolved execution plan for one instruction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IssuePlan {
+    pub kind: PlanKind,
+    /// Wave-depth selector; resolved against the runtime thread count
+    /// through the machine's wave table.
+    pub depth: DepthSel,
+    /// Lanes enabled by the width selector (1, 4 or 16).
+    pub lanes: u8,
+    /// Does this instruction read Rb? (operand shape, pre-resolved —
+    /// drives the hazard-checker's read set.)
+    pub uses_rb: bool,
+    pub rd: u8,
+    pub ra: u8,
+    pub rb: u8,
+    /// Pre-resolved immediate: sign-extended bits for LDI, zero-extended
+    /// raw value otherwise (addresses, offsets, loop counts).
+    pub imm: u32,
+    /// Profiler slot of the opcode's group ([`crate::isa::Group::index`]).
+    pub slot: u8,
+}
+
+/// Plan-compilation error, annotated with the instruction address.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanError {
+    pub pc: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "pc {}: {}", self.pc, self.message)
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// Compile one instruction. Fails only on encodings the assembler never
+/// emits (an IF word whose condition-code bits are unallocated).
+pub fn compile_one(i: &Instr) -> Result<IssuePlan, String> {
+    use Opcode::*;
+    let kind = match i.op {
+        Nop => PlanKind::Nop,
+        Jmp => PlanKind::Jmp,
+        Jsr => PlanKind::Jsr,
+        Rts => PlanKind::Rts,
+        Loop => PlanKind::Loop,
+        Init => PlanKind::Init,
+        Stop => PlanKind::Stop,
+        Ldi => PlanKind::Ldi,
+        TdX => PlanKind::TdX,
+        TdY => PlanKind::TdY,
+        Lod => PlanKind::Load,
+        Sto => PlanKind::Store,
+        Dot => PlanKind::Dot { sum_only: false },
+        Sum => PlanKind::Dot { sum_only: true },
+        If => PlanKind::If {
+            cc: i.cond().ok_or("IF without condition code")?,
+            ttype: i.ttype,
+        },
+        Else => PlanKind::Else,
+        EndIf => PlanKind::EndIf,
+        _ => match classify(i) {
+            Some(dp @ (DpOp::Fp(_) | DpOp::Int(_))) => PlanKind::Alu(dp),
+            _ => return Err(format!("{} is not executable", i.op)),
+        },
+    };
+    Ok(IssuePlan {
+        kind,
+        depth: i.tc.depth,
+        lanes: i.tc.width.lanes() as u8,
+        uses_rb: matches!(
+            i.op.operands(),
+            OperandShape::RdRaRb | OperandShape::RaRb
+        ),
+        rd: i.rd,
+        ra: i.ra,
+        rb: i.rb,
+        imm: if i.op == Ldi { i.imm_i() as u32 } else { i.imm_u() },
+        slot: i.op.group().index() as u8,
+    })
+}
+
+/// Compile a whole program's plans, one per instruction.
+pub fn compile(instrs: &[Instr]) -> Result<Vec<IssuePlan>, PlanError> {
+    instrs
+        .iter()
+        .enumerate()
+        .map(|(pc, i)| compile_one(i).map_err(|message| PlanError { pc, message }))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datapath::{FpOp, IntOp};
+    use crate::isa::{Group, ThreadCtrl, WidthSel};
+
+    #[test]
+    fn every_opcode_compiles() {
+        for bits in 0..Opcode::COUNT as u8 {
+            let op = Opcode::from_bits(bits).unwrap();
+            let mut i = Instr::new(op);
+            if op == Opcode::If {
+                i.imm = CondCode::Lt.bits() as u16;
+            }
+            let p = compile_one(&i).unwrap_or_else(|e| panic!("{op:?}: {e}"));
+            assert_eq!(p.slot as usize, op.group().index(), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn alu_classification_and_operand_shape() {
+        let mut i = Instr::new(Opcode::FAdd);
+        i.ttype = TType::Fp32;
+        let p = compile_one(&i).unwrap();
+        assert_eq!(p.kind, PlanKind::Alu(DpOp::Fp(FpOp::FAdd)));
+        assert!(p.uses_rb);
+
+        let mut s = Instr::new(Opcode::Shr);
+        s.ttype = TType::Uint;
+        let p = compile_one(&s).unwrap();
+        assert_eq!(p.kind, PlanKind::Alu(DpOp::Int(IntOp::ShrL)));
+
+        // Unary ops don't read Rb.
+        let p = compile_one(&Instr::new(Opcode::Neg)).unwrap();
+        assert!(!p.uses_rb);
+        let p = compile_one(&Instr::new(Opcode::InvSqr)).unwrap();
+        assert_eq!(p.kind, PlanKind::Alu(DpOp::Fp(FpOp::FInvSqrt)));
+        assert!(!p.uses_rb);
+    }
+
+    #[test]
+    fn geometry_and_immediates_pre_resolved() {
+        let mut i = Instr::new(Opcode::Ldi);
+        i.tc = ThreadCtrl::new(WidthSel::Quarter4, DepthSel::Half);
+        i.imm = (-5i16) as u16;
+        let p = compile_one(&i).unwrap();
+        assert_eq!(p.lanes, 4);
+        assert_eq!(p.depth, DepthSel::Half);
+        assert_eq!(p.imm, (-5i32) as u32, "LDI immediate sign-extends");
+
+        let mut j = Instr::new(Opcode::Jmp);
+        j.imm = 0xFFF0;
+        assert_eq!(compile_one(&j).unwrap().imm, 0xFFF0, "addresses zero-extend");
+    }
+
+    #[test]
+    fn if_without_condition_fails() {
+        let mut i = Instr::new(Opcode::If);
+        i.imm = 6; // unallocated cc bits
+        assert!(compile_one(&i).is_err());
+        assert!(compile(&[Instr::nop(), i]).unwrap_err().pc == 1);
+    }
+
+    #[test]
+    fn pred_and_control_kinds() {
+        assert_eq!(compile_one(&Instr::new(Opcode::Else)).unwrap().kind, PlanKind::Else);
+        assert_eq!(compile_one(&Instr::new(Opcode::Stop)).unwrap().kind, PlanKind::Stop);
+        assert_eq!(
+            compile_one(&Instr::new(Opcode::Sum)).unwrap().kind,
+            PlanKind::Dot { sum_only: true }
+        );
+        let p = compile_one(&Instr::new(Opcode::Lod)).unwrap();
+        assert_eq!(p.kind, PlanKind::Load);
+        assert_eq!(p.slot as usize, Group::Memory.index());
+    }
+}

@@ -6,7 +6,7 @@ use std::fmt;
 use crate::isa::Group;
 
 /// Dynamic execution profile of one run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Profile {
     counts: [u64; Group::ALL.len()],
     cycles: [u64; Group::ALL.len()],
@@ -18,14 +18,21 @@ impl Profile {
     }
 
     fn slot(group: Group) -> usize {
-        Group::ALL.iter().position(|g| *g == group).unwrap()
+        group.index()
     }
 
     #[inline]
     pub fn record(&mut self, group: Group, cycles: u64) {
-        let s = Self::slot(group);
-        self.counts[s] += 1;
-        self.cycles[s] += cycles;
+        self.record_slot(group.index(), cycles);
+    }
+
+    /// Charge a pre-resolved slot (see [`Group::index`]); the issue-plan
+    /// hot loop carries the slot so no group lookup happens per
+    /// instruction.
+    #[inline]
+    pub fn record_slot(&mut self, slot: usize, cycles: u64) {
+        self.counts[slot] += 1;
+        self.cycles[slot] += cycles;
     }
 
     pub fn count(&self, group: Group) -> u64 {

@@ -11,6 +11,8 @@
 
 use crate::isa::WAVEFRONT_WIDTH;
 
+use super::predicate::PredicateFile;
+
 #[derive(Debug, Clone)]
 pub struct RegFile {
     regs: Vec<u32>,
@@ -29,15 +31,15 @@ impl RegFile {
         self.regs_per_thread
     }
 
-    /// Hot-path row iteration for LOD/STO: visit each selected lane's
+    /// Hot-path row iteration for LOD: visit each selected lane's
     /// register row (mutable) with its thread index.
     #[inline]
-    pub fn lane_rows_mut(
+    pub fn lane_rows_mut<E>(
         &mut self,
         waves: usize,
         lanes: usize,
-        mut f: impl FnMut(usize, &mut [u32]) -> Result<(), crate::sim::shared_mem::MemFault>,
-    ) -> Result<(), crate::sim::shared_mem::MemFault> {
+        mut f: impl FnMut(usize, &mut [u32]) -> Result<(), E>,
+    ) -> Result<(), E> {
         let rpt = self.regs_per_thread;
         for (w, wave_rows) in self
             .regs
@@ -53,11 +55,36 @@ impl RegFile {
         Ok(())
     }
 
+    /// Read-only row iteration (STO, IF compares): visit each selected
+    /// lane's register row with its thread index.
+    #[inline]
+    pub fn lane_rows<E>(
+        &self,
+        waves: usize,
+        lanes: usize,
+        mut f: impl FnMut(usize, &[u32]) -> Result<(), E>,
+    ) -> Result<(), E> {
+        let rpt = self.regs_per_thread;
+        for (w, wave_rows) in self
+            .regs
+            .chunks_exact(rpt * WAVEFRONT_WIDTH)
+            .take(waves)
+            .enumerate()
+        {
+            let base = w * WAVEFRONT_WIDTH;
+            for (sp, row) in wave_rows.chunks_exact(rpt).take(lanes).enumerate() {
+                f(base + sp, row)?;
+            }
+        }
+        Ok(())
+    }
+
     /// Hot-path row iteration: apply `f(ra, rb) -> rd` to every selected
     /// lane of the first `waves` wavefronts. `chunks_exact_mut` removes
     /// the per-lane index arithmetic and bounds checks of `read`/`write`
     /// (the simulator's dominant cost, see EXPERIMENTS.md §Perf).
-    /// `active` is the combined predicate gate per thread index.
+    /// `preds` is the write-enable gate; `None` (predicates not
+    /// configured) selects an ungated inner loop with no per-lane branch.
     #[inline]
     pub fn lane_apply(
         &mut self,
@@ -66,23 +93,84 @@ impl RegFile {
         rd: u8,
         ra: u8,
         rb: u8,
-        mut active: impl FnMut(usize) -> bool,
+        preds: Option<&PredicateFile>,
         mut f: impl FnMut(u32, u32) -> u32,
     ) {
         let rpt = self.regs_per_thread;
         let (rd, ra, rb) = (rd as usize, ra as usize, rb as usize);
-        for (w, wave_rows) in self
-            .regs
-            .chunks_exact_mut(rpt * WAVEFRONT_WIDTH)
-            .take(waves)
-            .enumerate()
-        {
-            let base = w * WAVEFRONT_WIDTH;
-            for (sp, row) in wave_rows.chunks_exact_mut(rpt).take(lanes).enumerate() {
-                if !active(base + sp) {
-                    continue;
+        match preds {
+            None => {
+                for wave_rows in self
+                    .regs
+                    .chunks_exact_mut(rpt * WAVEFRONT_WIDTH)
+                    .take(waves)
+                {
+                    for row in wave_rows.chunks_exact_mut(rpt).take(lanes) {
+                        row[rd] = f(row[ra], row[rb]);
+                    }
                 }
-                row[rd] = f(row[ra], row[rb]);
+            }
+            Some(p) => {
+                for (w, wave_rows) in self
+                    .regs
+                    .chunks_exact_mut(rpt * WAVEFRONT_WIDTH)
+                    .take(waves)
+                    .enumerate()
+                {
+                    let base = w * WAVEFRONT_WIDTH;
+                    for (sp, row) in wave_rows.chunks_exact_mut(rpt).take(lanes).enumerate() {
+                        if !p.active(base + sp) {
+                            continue;
+                        }
+                        row[rd] = f(row[ra], row[rb]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Per-thread generated writes (LDI/TDX/TDY): `rd = value(thread)`
+    /// over the selected subset, gated by `preds` when configured.
+    #[inline]
+    pub fn lane_set(
+        &mut self,
+        waves: usize,
+        lanes: usize,
+        rd: u8,
+        preds: Option<&PredicateFile>,
+        mut value: impl FnMut(usize) -> u32,
+    ) {
+        let rpt = self.regs_per_thread;
+        let rd = rd as usize;
+        match preds {
+            None => {
+                for (w, wave_rows) in self
+                    .regs
+                    .chunks_exact_mut(rpt * WAVEFRONT_WIDTH)
+                    .take(waves)
+                    .enumerate()
+                {
+                    let base = w * WAVEFRONT_WIDTH;
+                    for (sp, row) in wave_rows.chunks_exact_mut(rpt).take(lanes).enumerate() {
+                        row[rd] = value(base + sp);
+                    }
+                }
+            }
+            Some(p) => {
+                for (w, wave_rows) in self
+                    .regs
+                    .chunks_exact_mut(rpt * WAVEFRONT_WIDTH)
+                    .take(waves)
+                    .enumerate()
+                {
+                    let base = w * WAVEFRONT_WIDTH;
+                    for (sp, row) in wave_rows.chunks_exact_mut(rpt).take(lanes).enumerate() {
+                        if !p.active(base + sp) {
+                            continue;
+                        }
+                        row[rd] = value(base + sp);
+                    }
+                }
             }
         }
     }
@@ -168,6 +256,50 @@ mod tests {
         rf.wave_slice(1, 2, &mut out);
         assert_eq!(out[0], 100);
         assert_eq!(out[15], 115);
+    }
+
+    #[test]
+    fn lane_apply_gates_on_predicates() {
+        let mut rf = RegFile::new(32, 16);
+        for t in 0..32 {
+            rf.write_thread(t, 1, t as u32);
+        }
+        let mut preds = PredicateFile::new(32, 4);
+        for t in 0..32 {
+            preds.push(t, t % 2 == 0).unwrap();
+        }
+        rf.lane_apply(2, 16, 2, 1, 1, Some(&preds), |a, b| a + b);
+        for t in 0..32 {
+            let want = if t % 2 == 0 { 2 * t as u32 } else { 0 };
+            assert_eq!(rf.read_thread(t, 2), want, "thread {t}");
+        }
+        // Ungated path touches every selected lane.
+        rf.lane_apply(1, 4, 3, 1, 1, None, |a, _| a);
+        assert_eq!(rf.read_thread(3, 3), 3);
+        assert_eq!(rf.read_thread(4, 3), 0); // SP4 outside w4
+    }
+
+    #[test]
+    fn lane_set_writes_generated_values() {
+        let mut rf = RegFile::new(32, 16);
+        rf.lane_set(2, 16, 5, None, |t| t as u32 * 10);
+        assert_eq!(rf.read_thread(0, 5), 0);
+        assert_eq!(rf.read_thread(31, 5), 310);
+    }
+
+    #[test]
+    fn lane_rows_reads_selected_prefix() {
+        let mut rf = RegFile::new(32, 16);
+        for t in 0..32 {
+            rf.write_thread(t, 0, t as u32);
+        }
+        let mut seen = Vec::new();
+        rf.lane_rows(1, 4, |t, row| -> Result<(), ()> {
+            seen.push((t, row[0]));
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(seen, vec![(0, 0), (1, 1), (2, 2), (3, 3)]);
     }
 
     #[test]

@@ -248,6 +248,17 @@ fn launch_budget_and_builder_validation() {
         .run()
         .unwrap_err();
     assert!(matches!(err, ApiError::Sim(ref s) if s.message.contains("cycle limit")), "{err}");
+    // The budget is enforced before issue and the error keeps the
+    // progress made: partial cycles/instructions/profile, not a discard.
+    match &err {
+        ApiError::Sim(s) => {
+            let partial = s.partial.as_ref().expect("cycle-limit error keeps partial stats");
+            assert!(partial.cycles >= 10, "budget was 10, got {}", partial.cycles);
+            assert!(partial.instructions > 0);
+            assert_eq!(partial.profile.total_instructions(), partial.instructions);
+        }
+        other => panic!("expected a sim error, got {other}"),
+    }
 
     // Invalid static configuration is rejected at build time.
     assert!(Gpu::builder().threads(100).build().is_err());

@@ -8,6 +8,10 @@
 //!  - Sched-generated random programs are hazard-free and their cycle
 //!    estimate equals the simulator's count exactly
 //!  - simulation is deterministic
+//!  - the issue-plan executor (`Machine::run`) and the retained
+//!    reference interpreter (`Machine::run_reference`) produce
+//!    bit-identical registers/shared memory, identical cycle counts and
+//!    identical hazard totals
 //!  - dynamic narrowing touches exactly the selected thread prefix
 //!  - random configurations either validate and boot, or error cleanly
 
@@ -15,7 +19,7 @@ use egpu::asm::{assemble, disassemble};
 use egpu::harness::Rng;
 use egpu::isa::{DepthSel, Instr, Opcode, TType, ThreadCtrl, WidthSel, WordLayout};
 use egpu::kernels::sched::Sched;
-use egpu::sim::{EgpuConfig, Machine, MemoryMode, PIPELINE_DEPTH};
+use egpu::sim::{EgpuConfig, Machine, MemoryMode, RunStats, PIPELINE_DEPTH};
 
 fn random_tc(rng: &mut Rng) -> ThreadCtrl {
     let w = *rng.choose(&[WidthSel::All16, WidthSel::Quarter4, WidthSel::Sp0]);
@@ -138,6 +142,119 @@ fn sched_programs_hazard_free_and_estimate_exact() {
             est + PIPELINE_DEPTH,
             "case {case}: estimate mismatch\n{src}"
         );
+    }
+}
+
+/// Architectural state + stats after a run, for cross-path comparison.
+fn machine_state(m: &Machine, stats: RunStats) -> (RunStats, Vec<u32>, Vec<u32>) {
+    let regs: Vec<u32> = (0..512)
+        .flat_map(|t| (0..8u8).map(move |r| (t, r)))
+        .map(|(t, r)| m.regs().read_thread(t, r))
+        .collect();
+    let mem: Vec<u32> = m.shared().read_block(0, 4096).to_vec();
+    (stats, regs, mem)
+}
+
+/// Random programs with predicates, narrowing, extension ops and
+/// unscheduled hazards (the hazard *totals* must match across executors,
+/// they need not be zero). Addresses stay within [0, 4096) so no run
+/// faults.
+fn random_mixed_source(rng: &mut Rng, len: usize) -> String {
+    let mut src = String::from("tdx r0\n");
+    let mut depth = 0usize;
+    for _ in 0..len {
+        let tc = random_tc(rng);
+        let rd = 1 + rng.below(7);
+        let ra = rng.below(8);
+        let rb = rng.below(8);
+        match rng.below(14) {
+            0 => src.push_str(&format!("{tc} add.i32 r{rd}, r{ra}, r{rb}\n")),
+            1 => src.push_str(&format!("{tc} fmul r{rd}, r{ra}, r{rb}\n")),
+            2 => src.push_str(&format!("{tc} max.u32 r{rd}, r{ra}, r{rb}\n")),
+            3 => src.push_str(&format!("{tc} shr.i32 r{rd}, r{ra}, r{rb}\n")),
+            4 => src.push_str(&format!("{tc} neg.i32 r{rd}, r{ra}\n")),
+            5 => src.push_str(&format!("{tc} ldi r{rd}, #{}\n", rng.range_i64(-512, 512))),
+            6 => src.push_str(&format!("{tc} lod r{rd}, (r0)+{}\n", rng.below(32) * 8)),
+            7 => src.push_str(&format!("{tc} sto r{rd}, (r0)+{}\n", 1024 + rng.below(32) * 8)),
+            8 => src.push_str(&format!("{tc} dot r{rd}, r{ra}, r{rb}\n")),
+            9 => src.push_str(&format!("{tc} sum r{rd}, r{ra}, r{rb}\n")),
+            10 => src.push_str(&format!("{tc} invsqr r{rd}, r{ra}\n")),
+            11 if depth < 5 => {
+                src.push_str(&format!("if.lt.u32 r{ra}, r{rb}\n"));
+                depth += 1;
+            }
+            12 if depth > 0 => src.push_str("else\n"),
+            13 if depth > 0 => {
+                src.push_str("endif\n");
+                depth -= 1;
+            }
+            _ => src.push_str("nop\n"),
+        }
+    }
+    for _ in 0..depth {
+        src.push_str("endif\n");
+    }
+    src.push_str("stop\n");
+    src
+}
+
+#[test]
+fn planned_executor_matches_reference_interpreter() {
+    // Tentpole invariant: compiling IssuePlans at decode time changes the
+    // simulator's speed, never its semantics. Compare the planned hot
+    // loop against the retained per-instruction interpreter on random
+    // programs — bit-identical registers and shared memory, identical
+    // cycle counts, identical hazard totals (and the whole profile).
+    let mut rng = Rng::new(0x91A7);
+    let mut cfg = EgpuConfig::default(); // 32 KB shared, predicates on
+    cfg.dot_core = true;
+    cfg.sfu = true;
+    for case in 0..80 {
+        let src = if case % 2 == 0 {
+            random_program_source(&mut rng, 25)
+        } else {
+            random_mixed_source(&mut rng, 30)
+        };
+        let prog = assemble(&src, cfg.word_layout()).unwrap_or_else(|e| panic!("{e}\n{src}"));
+
+        let mut planned = Machine::new(cfg.clone()).unwrap();
+        planned.load_program(prog.clone()).unwrap();
+        let sp = planned
+            .run(10_000_000)
+            .unwrap_or_else(|e| panic!("planned: {e}\n{src}"));
+
+        let mut reference = Machine::new(cfg.clone()).unwrap();
+        reference.load_program(prog).unwrap();
+        let sr = reference
+            .run_reference(10_000_000)
+            .unwrap_or_else(|e| panic!("reference: {e}\n{src}"));
+
+        assert_eq!(
+            machine_state(&planned, sp),
+            machine_state(&reference, sr),
+            "case {case}: planned and reference executors diverge\n{src}"
+        );
+    }
+}
+
+#[test]
+fn planned_executor_matches_reference_with_hazards_off() {
+    // The verified-program fast path skips hazard bookkeeping in both
+    // executors identically.
+    let mut rng = Rng::new(0x0FF);
+    let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+    for _ in 0..20 {
+        let src = random_program_source(&mut rng, 20);
+        let prog = assemble(&src, cfg.word_layout()).unwrap();
+        let mut planned = Machine::new(cfg.clone()).unwrap();
+        planned.load_program(prog.clone()).unwrap();
+        planned.set_hazard_checking(false);
+        let sp = planned.run(10_000_000).unwrap();
+        let mut reference = Machine::new(cfg.clone()).unwrap();
+        reference.load_program(prog).unwrap();
+        reference.set_hazard_checking(false);
+        let sr = reference.run_reference(10_000_000).unwrap();
+        assert_eq!(machine_state(&planned, sp), machine_state(&reference, sr), "{src}");
     }
 }
 

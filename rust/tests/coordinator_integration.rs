@@ -1,8 +1,10 @@
 //! Coordinator integration: real kernels through the multi-core dispatch
-//! and bus model, including failure injection and a mixed pipeline that
-//! chains algorithms over resident data (§7's primary usage mode).
+//! and bus model, including failure injection, a mixed pipeline that
+//! chains algorithms over resident data (§7's primary usage mode), and
+//! the parallel-dispatch determinism invariant (worker threads change
+//! wall-clock only, never the modeled timeline).
 
-use egpu::api::Gpu;
+use egpu::api::{Gpu, LaunchReport};
 use egpu::coordinator::{average_bus_overhead, Coordinator, Job};
 use egpu::harness::Rng;
 use egpu::kernels::{bitonic, f32_bits, fft, reduction, transpose};
@@ -234,6 +236,100 @@ fn chained_launch_on_fresh_stream_errors() {
         .submit();
     let err = array.sync().unwrap_err();
     assert!(err.to_string().contains("no resident data"), "{err}");
+}
+
+/// The ISSUE-2 determinism contract: interleaved jobs across ≥3 streams
+/// on a multi-core `GpuArray` produce identical `JobResult` order,
+/// outputs, and bus/compute timelines whether the cores simulate
+/// sequentially or on parallel worker threads.
+#[test]
+fn parallel_dispatch_is_bit_identical_to_sequential() {
+    let n = 32;
+    let run = |parallel: bool| -> (Vec<LaunchReport>, u64) {
+        let mut rng = Rng::new(0xD17E);
+        let mut array = Gpu::builder().config(cfg()).build_array(4).unwrap();
+        array.set_parallel(parallel);
+        let streams = [array.stream(), array.stream(), array.stream()];
+        // Interleave three streams: reductions on 1 and 2, a transpose +
+        // chained transpose (resident data, no input DMA) on 0.
+        let mat: Vec<u32> = (0..(n * n) as u32).collect();
+        array
+            .launch_on(&streams[0], transpose::transpose(n))
+            .input_words(0, mat)
+            .submit();
+        for round in 0..2 {
+            for s in [&streams[1], &streams[2]] {
+                let data: Vec<f32> = (0..n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+                array
+                    .launch_on(s, reduction::reduction(n))
+                    .input_f32(0, &data)
+                    .output(n, 1)
+                    .submit();
+            }
+            if round == 0 {
+                array
+                    .launch_on(&streams[0], transpose::transpose(n))
+                    .output(n * n, n * n)
+                    .chained()
+                    .submit();
+            }
+        }
+        // Plus an unordered launch exercising earliest-free placement.
+        let data: Vec<f32> = (0..n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+        array
+            .launch(reduction::reduction(n))
+            .input_f32(0, &data)
+            .output(n, 1)
+            .submit();
+        let rs = array.sync().unwrap();
+        (rs, array.makespan())
+    };
+
+    let (seq, seq_span) = run(false);
+    let (par, par_span) = run(true);
+    assert_eq!(seq_span, par_span, "makespan must not depend on dispatch mode");
+    assert_eq!(seq.len(), par.len());
+    for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+        assert_eq!(a.name, b.name, "job {i}: result order");
+        assert_eq!(a.core, b.core, "job {i} ({}): core placement", a.name);
+        assert_eq!(a.stream, b.stream, "job {i}");
+        assert_eq!(a.compute_cycles, b.compute_cycles, "job {i} ({})", a.name);
+        assert_eq!(a.bus_cycles, b.bus_cycles, "job {i} ({})", a.name);
+        assert_eq!(
+            (a.start, a.end),
+            (b.start, b.end),
+            "job {i} ({}): bus/compute timeline",
+            a.name
+        );
+        assert_eq!(a.outputs, b.outputs, "job {i} ({})", a.name);
+        assert_eq!(a.stats, b.stats, "job {i} ({}): full run stats", a.name);
+    }
+
+    // And against a single-core array (pure FIFO): the five reduction
+    // jobs produce the same outputs and per-job compute cycles — only
+    // the multi-core timeline overlap differs. (The chained transpose
+    // pair needs its stream's data resident, so it only exists in the
+    // multi-core mix.)
+    let mut rng = Rng::new(0xD17E);
+    let mut one = Gpu::builder().config(cfg()).build_array(1).unwrap();
+    let s = one.stream();
+    for _ in 0..5 {
+        let data: Vec<f32> = (0..n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+        one.launch_on(&s, reduction::reduction(n))
+            .input_f32(0, &data)
+            .output(n, 1)
+            .submit();
+    }
+    let rs1 = one.sync().unwrap();
+    let par_reductions: Vec<&LaunchReport> = par
+        .iter()
+        .filter(|r| r.name.starts_with("reduction"))
+        .collect();
+    assert_eq!(rs1.len(), par_reductions.len());
+    for (a, b) in rs1.iter().zip(&par_reductions) {
+        assert_eq!(a.compute_cycles, b.compute_cycles, "{}", a.name);
+        assert_eq!(a.outputs, b.outputs, "{}", a.name);
+    }
 }
 
 #[test]
