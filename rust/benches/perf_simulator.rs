@@ -16,7 +16,8 @@
 
 use egpu::api::Gpu;
 use egpu::harness::{sim_rate, time, Rng, Table, Timing};
-use egpu::kernels::{bitonic, f32_bits, fft, mmm, reduction, transpose, Kernel};
+use egpu::kc::SchedMode;
+use egpu::kernels::{bitonic, f32_bits, fft, fft4, mmm, reduction, transpose, Kernel};
 use egpu::sim::{EgpuConfig, MemoryMode};
 
 fn run_once(kernel: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)], hazards: bool) -> u64 {
@@ -145,6 +146,109 @@ fn main() {
         cases.len()
     );
 
+    // Static-schedule section: the kernel compiler's modeled-cycle win at
+    // shallow configurations (16-64 threads), where delay slots dominate.
+    // Every kernel is run in all three build modes — list-scheduled,
+    // linear (in-order padding, the legacy emitters' behavior) and fenced
+    // (schedule disabled) — through the same machine.
+    type BuildFn = Box<dyn Fn(SchedMode) -> Kernel>;
+    fn f32v(rng: &mut Rng, n: usize) -> Vec<u32> {
+        let v: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+        f32_bits(&v)
+    }
+    let sched_cases: Vec<(BuildFn, EgpuConfig, Vec<(usize, Vec<u32>)>)> = {
+        let mut rng = Rng::new(0x5C4ED);
+        let v32 = f32v(&mut rng, 32);
+        let m32: Vec<u32> = (0..32 * 32).map(|_| rng.next_u32()).collect();
+        let a32 = f32v(&mut rng, 32 * 32);
+        let b32 = f32v(&mut rng, 32 * 32);
+        let s64: Vec<u32> = (0..64).map(|_| rng.next_u32()).collect();
+        let re64: Vec<f32> = (0..64).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+        let im64 = vec![0f32; 64];
+        let base = EgpuConfig::benchmark(MemoryMode::Dp, false);
+        let pred = EgpuConfig::benchmark_predicated(MemoryMode::Dp);
+        vec![
+            (
+                Box::new(|m| reduction::reduction_mode(32, m)) as BuildFn,
+                base.clone(),
+                vec![(0, v32)],
+            ),
+            (
+                Box::new(|m| transpose::transpose_mode(32, MemoryMode::Dp, m)),
+                base.clone(),
+                vec![(0, m32)],
+            ),
+            (
+                Box::new(|m| mmm::mmm_mode(32, MemoryMode::Dp, m)),
+                mmm::config(32, MemoryMode::Dp, false),
+                vec![(0, a32), (32 * 32, b32)],
+            ),
+            (
+                Box::new(|m| bitonic::bitonic_mode(64, MemoryMode::Dp, m)),
+                pred,
+                vec![(0, s64)],
+            ),
+            (
+                Box::new(|m| fft::fft_mode(64, MemoryMode::Dp, m)),
+                base.clone(),
+                fft::shared_init(&re64, &im64),
+            ),
+            (
+                Box::new(|m| fft4::fft4_mode(64, MemoryMode::Dp, m)),
+                base,
+                fft4::shared_init(&re64, &im64),
+            ),
+        ]
+    };
+    let mut t2 = Table::new(
+        "Kernel compiler: modeled cycles at shallow dims (list vs padded vs fenced)",
+    );
+    t2.headers([
+        "kernel", "instrs", "NOPs pad", "NOPs list", "cyc fenced", "cyc pad", "cyc list",
+        "vs pad", "vs fenced",
+    ]);
+    let mut sched_rows = Vec::new();
+    for (build, cfg, init) in &sched_cases {
+        let list = build(SchedMode::List);
+        let linear = build(SchedMode::Linear);
+        let fenced = build(SchedMode::Fenced);
+        let cy_list = run_once(&list, cfg, init, true);
+        let cy_lin = run_once(&linear, cfg, init, true);
+        let cy_fen = run_once(&fenced, cfg, init, true);
+        let st = list.sched.as_ref().expect("compiled kernels carry stats");
+        let vs_lin = 100.0 * (1.0 - cy_list as f64 / cy_lin as f64);
+        let vs_fen = 100.0 * (1.0 - cy_list as f64 / cy_fen as f64);
+        t2.row([
+            list.name.clone(),
+            st.instructions.to_string(),
+            st.nops_linear.to_string(),
+            st.nops_scheduled.to_string(),
+            cy_fen.to_string(),
+            cy_lin.to_string(),
+            cy_list.to_string(),
+            format!("{vs_lin:.1}%"),
+            format!("{vs_fen:.1}%"),
+        ]);
+        sched_rows.push(format!(
+            "    {{\"name\": {}, \"instructions\": {}, \"nops_linear\": {}, \
+             \"nops_scheduled\": {}, \"cycles_fenced\": {cy_fen}, \
+             \"cycles_linear\": {cy_lin}, \"cycles_scheduled\": {cy_list}, \
+             \"reduction_vs_linear_pct\": {vs_lin:.2}, \
+             \"reduction_vs_fenced_pct\": {vs_fen:.2}}}",
+            json_str(&list.name),
+            st.instructions,
+            st.nops_linear,
+            st.nops_scheduled,
+        ));
+        assert!(
+            cy_list <= cy_lin && cy_lin <= cy_fen,
+            "{}: schedule modes must be ordered (list {cy_list}, pad {cy_lin}, fenced {cy_fen})",
+            list.name
+        );
+    }
+    t2.print();
+    println!();
+
     // Multi-core scaling: the same 4-job batch through sequential and
     // parallel dispatch — identical modeled timelines, different
     // wall-clock.
@@ -166,11 +270,13 @@ fn main() {
 
     let json = format!(
         "{{\n  \"samples\": {samples},\n  \"kernels\": [\n{}\n  ],\n  \
+         \"static_schedule\": [\n{}\n  ],\n  \
          \"aggregate_mcyc_per_s_unchecked\": {aggregate:.2},\n  \
          \"multi_core\": {{\"cores\": 4, \"jobs\": 4, \"kernel\": \"fft-256\", \
          \"makespan_cycles\": {seq_span}, \"sequential_ms\": {:.4}, \
          \"parallel_ms\": {:.4}, \"wall_clock_speedup\": {speedup:.3}}}\n}}\n",
         kernel_rows.join(",\n"),
+        sched_rows.join(",\n"),
         seq_t.median_ms(),
         par_t.median_ms(),
     );

@@ -301,12 +301,18 @@ impl Gpu {
     }
 
     /// Launch a generated kernel: threads/dim_x default to the kernel's
-    /// declared values.
+    /// declared values. Compiled kernels carry their lowered program
+    /// (issue plans attached) and skip the assembler entirely; the
+    /// listing is only re-assembled when the device's word layout differs
+    /// from the one the kernel was compiled for.
     pub fn launch(&mut self, kernel: &Kernel) -> LaunchBuilder<'_> {
-        let mut b = self.launch_builder(
-            kernel.name.clone(),
-            LaunchSource::Asm(kernel.asm.clone()),
-        );
+        let source = match &kernel.program {
+            Some(p) if p.layout == self.machine.cfg.word_layout() => {
+                LaunchSource::Program(p.clone())
+            }
+            _ => LaunchSource::Asm(kernel.asm.clone()),
+        };
+        let mut b = self.launch_builder(kernel.name.clone(), source);
         b.threads = Some(kernel.threads);
         b.dim_x = Some(kernel.dim_x);
         b

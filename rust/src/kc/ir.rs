@@ -1,0 +1,491 @@
+//! The kernel compiler's instruction IR: typed operations over virtual
+//! registers, emitted through [`KernelBuilder`].
+//!
+//! Values are SSA-ish: every operation returns a fresh [`V`]; the `_into`
+//! variants redefine an existing value, which is how predicated merges
+//! (both IF/ELSE arms writing the same destination) and loop-carried
+//! updates (`bcol += 1` at a LOOP back-edge) are expressed. Physical
+//! registers do not appear anywhere in the IR — the linear-scan allocator
+//! (`kc::regalloc`) assigns them after scheduling.
+//!
+//! The builder records a flat item stream (labels + instructions) in
+//! emission order. That order is the *semantic* order: the scheduler may
+//! only apply reorderings that provably preserve it under the machine's
+//! dependence rules (`kc::sched`).
+
+use crate::isa::opcode::OperandShape;
+use crate::isa::{CondCode, Opcode, TType, ThreadCtrl, WordLayout};
+use crate::sim::config::MemoryMode;
+
+/// A virtual register. Created (and only created) by builder emissions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct V(pub(crate) u32);
+
+/// One IR instruction: a decoded-instruction shape with virtual registers
+/// in the register fields.
+#[derive(Debug, Clone)]
+pub(crate) struct Node {
+    pub op: Opcode,
+    pub ttype: TType,
+    pub tc: ThreadCtrl,
+    /// Raw immediate (LDI value bits, memory offset, INIT count, IF
+    /// condition code). Branch targets live in `target` until lowering.
+    pub imm: u16,
+    /// Destination value (register-writing ops only).
+    pub def: Option<V>,
+    /// ra-field value.
+    pub ra: Option<V>,
+    /// rb-field value (encoding; SUM encodes rb = ra but reads only ra).
+    pub rb: Option<V>,
+    /// rd-field value when the field is a *read* (STO's store data).
+    pub rd_use: Option<V>,
+    /// Branch target label (JMP/JSR/LOOP).
+    pub target: Option<String>,
+    /// Comments attached above this instruction in the listing.
+    pub comments: Vec<String>,
+}
+
+impl Node {
+    /// The machine's hazard-checker read set for this instruction,
+    /// mirroring `Machine::step_plan` exactly: this is what the scheduler
+    /// pads against, so it must not drift from `sim::machine`.
+    pub fn hazard_uses(&self) -> Vec<V> {
+        match self.op.operands() {
+            OperandShape::RdRa => self.ra.into_iter().collect(),
+            OperandShape::RdRaRb => {
+                if self.op == Opcode::Sum {
+                    // plan_dot reads rb only when !sum_only.
+                    self.ra.into_iter().collect()
+                } else {
+                    self.ra.into_iter().chain(self.rb).collect()
+                }
+            }
+            OperandShape::RaRb => self.ra.into_iter().chain(self.rb).collect(),
+            OperandShape::RdMem => {
+                // LOD reads ra; STO reads ra and the rd (data) field.
+                self.ra.into_iter().chain(self.rd_use).collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+
+    /// Every value referenced (for liveness), defs included.
+    pub fn all_values(&self) -> Vec<V> {
+        self.def
+            .into_iter()
+            .chain(self.ra)
+            .chain(self.rb)
+            .chain(self.rd_use)
+            .collect()
+    }
+
+    /// Chain terminators: control transfers after which linear cycle
+    /// tracking cannot continue (STOP included — nothing follows it).
+    pub fn is_terminator(&self) -> bool {
+        matches!(
+            self.op,
+            Opcode::Jmp | Opcode::Jsr | Opcode::Rts | Opcode::Loop | Opcode::Stop
+        )
+    }
+
+    /// Predicate barriers: scheduling may not move instructions across
+    /// IF/ELSE/ENDIF (the write-enable gate changes), but hazard timing
+    /// carries straight through them.
+    pub fn is_barrier(&self) -> bool {
+        matches!(self.op, Opcode::If | Opcode::Else | Opcode::EndIf)
+    }
+}
+
+/// Flat builder output: labels interleaved with instructions.
+#[derive(Debug, Clone)]
+pub(crate) enum Item {
+    Label(String),
+    Node(Node),
+}
+
+/// Emission front-end for one kernel. See the module docs of [`crate::kc`]
+/// for the pipeline this feeds.
+pub struct KernelBuilder {
+    pub(crate) name: String,
+    pub(crate) threads: usize,
+    pub(crate) layout: WordLayout,
+    pub(crate) memory: MemoryMode,
+    pub(crate) items: Vec<Item>,
+    pub(crate) nvals: u32,
+    tc: ThreadCtrl,
+    pending_comments: Vec<String>,
+}
+
+impl KernelBuilder {
+    pub fn new(
+        name: &str,
+        threads: usize,
+        layout: WordLayout,
+        memory: MemoryMode,
+    ) -> KernelBuilder {
+        assert!(
+            threads >= 16 && threads % 16 == 0,
+            "threads must be a positive multiple of 16"
+        );
+        KernelBuilder {
+            name: name.to_string(),
+            threads,
+            layout,
+            memory,
+            items: Vec::new(),
+            nvals: 0,
+            tc: ThreadCtrl::FULL,
+            pending_comments: Vec::new(),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Sticky thread-space selector for subsequent instructions (like the
+    /// assembler's `.mode` directive).
+    pub fn space(&mut self, tc: ThreadCtrl) -> &mut Self {
+        self.tc = tc;
+        self
+    }
+
+    /// Back to the full thread space.
+    pub fn full(&mut self) -> &mut Self {
+        self.space(ThreadCtrl::FULL)
+    }
+
+    /// Attach a comment above the next emitted instruction.
+    pub fn comment(&mut self, text: &str) -> &mut Self {
+        self.pending_comments.push(text.to_string());
+        self
+    }
+
+    pub fn label(&mut self, name: &str) -> &mut Self {
+        self.items.push(Item::Label(name.to_string()));
+        self
+    }
+
+    fn fresh(&mut self) -> V {
+        let v = V(self.nvals);
+        self.nvals += 1;
+        v
+    }
+
+    fn blank(&mut self, op: Opcode, ttype: TType) -> Node {
+        Node {
+            op,
+            ttype,
+            tc: self.tc,
+            imm: 0,
+            def: None,
+            ra: None,
+            rb: None,
+            rd_use: None,
+            target: None,
+            comments: std::mem::take(&mut self.pending_comments),
+        }
+    }
+
+    fn push(&mut self, node: Node) {
+        self.items.push(Item::Node(node));
+    }
+
+    // -----------------------------------------------------------------
+    // Value producers.
+    // -----------------------------------------------------------------
+
+    pub fn tdx(&mut self) -> V {
+        let d = self.fresh();
+        let mut n = self.blank(Opcode::TdX, TType::Int);
+        n.def = Some(d);
+        self.push(n);
+        d
+    }
+
+    pub fn tdy(&mut self) -> V {
+        let d = self.fresh();
+        let mut n = self.blank(Opcode::TdY, TType::Int);
+        n.def = Some(d);
+        self.push(n);
+        d
+    }
+
+    /// Load an immediate; the hardware sign-extends i16, so any value in
+    /// [-32768, 65535] round-trips through the 16-bit field.
+    pub fn ldi(&mut self, imm: i64) -> V {
+        let d = self.fresh();
+        self.ldi_into(d, imm);
+        d
+    }
+
+    /// Load an immediate into the value held in `slot`, creating it on
+    /// first use — the subroutine-parameter idiom: one value, redefined
+    /// at every call site, read inside the callee.
+    pub fn ldi_reuse(&mut self, slot: &mut Option<V>, imm: i64) -> V {
+        match *slot {
+            Some(v) => {
+                self.ldi_into(v, imm);
+                v
+            }
+            None => {
+                let v = self.ldi(imm);
+                *slot = Some(v);
+                v
+            }
+        }
+    }
+
+    pub fn ldi_into(&mut self, dst: V, imm: i64) {
+        assert!(
+            (-32768..=65535).contains(&imm),
+            "ldi immediate {imm} does not fit in 16 bits"
+        );
+        let mut n = self.blank(Opcode::Ldi, TType::Int);
+        n.def = Some(dst);
+        n.imm = imm as u16;
+        self.push(n);
+    }
+
+    /// Unary ALU op (`NEG`/`ABS`/`NOT`/`CNOT`/`BVS`/`POP`/`FNEG`/`FABS`/
+    /// `INVSQR`).
+    pub fn op1(&mut self, op: Opcode, ttype: TType, a: V) -> V {
+        let d = self.fresh();
+        self.op1_into(d, op, ttype, a);
+        d
+    }
+
+    pub fn op1_into(&mut self, dst: V, op: Opcode, ttype: TType, a: V) {
+        debug_assert_eq!(op.operands(), OperandShape::RdRa, "{op} is not unary");
+        let mut n = self.blank(op, ttype);
+        n.def = Some(dst);
+        n.ra = Some(a);
+        self.push(n);
+    }
+
+    /// Binary ALU op.
+    pub fn op2(&mut self, op: Opcode, ttype: TType, a: V, b: V) -> V {
+        let d = self.fresh();
+        self.op2_into(d, op, ttype, a, b);
+        d
+    }
+
+    pub fn op2_into(&mut self, dst: V, op: Opcode, ttype: TType, a: V, b: V) {
+        debug_assert_eq!(op.operands(), OperandShape::RdRaRb, "{op} is not binary");
+        debug_assert!(
+            !matches!(op, Opcode::Dot | Opcode::Sum),
+            "use dot()/sum() for extension-core ops"
+        );
+        let mut n = self.blank(op, ttype);
+        n.def = Some(dst);
+        n.ra = Some(a);
+        n.rb = Some(b);
+        self.push(n);
+    }
+
+    // Convenience wrappers matching the benchmark kernels' idiom. The
+    // TYPE choices reproduce what the assembler would infer from the
+    // original hand-written sources, so the pretty-printed listing
+    // reassembles to the identical program.
+
+    pub fn add_u(&mut self, a: V, b: V) -> V {
+        self.op2(Opcode::Add, TType::Uint, a, b)
+    }
+
+    pub fn add_u_into(&mut self, dst: V, a: V, b: V) {
+        self.op2_into(dst, Opcode::Add, TType::Uint, a, b)
+    }
+
+    pub fn sub_u(&mut self, a: V, b: V) -> V {
+        self.op2(Opcode::Sub, TType::Uint, a, b)
+    }
+
+    pub fn sub_u_into(&mut self, dst: V, a: V, b: V) {
+        self.op2_into(dst, Opcode::Sub, TType::Uint, a, b)
+    }
+
+    pub fn shl_u(&mut self, a: V, b: V) -> V {
+        self.op2(Opcode::Shl, TType::Uint, a, b)
+    }
+
+    pub fn shr_u(&mut self, a: V, b: V) -> V {
+        self.op2(Opcode::Shr, TType::Uint, a, b)
+    }
+
+    pub fn min_u(&mut self, a: V, b: V) -> V {
+        self.op2(Opcode::Min, TType::Uint, a, b)
+    }
+
+    pub fn max_u(&mut self, a: V, b: V) -> V {
+        self.op2(Opcode::Max, TType::Uint, a, b)
+    }
+
+    /// Untyped logic ops carry the assembler's default `.i32`.
+    pub fn and_i(&mut self, a: V, b: V) -> V {
+        self.op2(Opcode::And, TType::Int, a, b)
+    }
+
+    pub fn or_i(&mut self, a: V, b: V) -> V {
+        self.op2(Opcode::Or, TType::Int, a, b)
+    }
+
+    pub fn or_i_into(&mut self, dst: V, a: V, b: V) {
+        self.op2_into(dst, Opcode::Or, TType::Int, a, b)
+    }
+
+    pub fn xor_i(&mut self, a: V, b: V) -> V {
+        self.op2(Opcode::Xor, TType::Int, a, b)
+    }
+
+    pub fn bvs(&mut self, a: V) -> V {
+        self.op1(Opcode::Bvs, TType::Int, a)
+    }
+
+    pub fn fadd(&mut self, a: V, b: V) -> V {
+        self.op2(Opcode::FAdd, TType::Fp32, a, b)
+    }
+
+    pub fn fsub(&mut self, a: V, b: V) -> V {
+        self.op2(Opcode::FSub, TType::Fp32, a, b)
+    }
+
+    pub fn fmul(&mut self, a: V, b: V) -> V {
+        self.op2(Opcode::FMul, TType::Fp32, a, b)
+    }
+
+    pub fn fneg(&mut self, a: V) -> V {
+        self.op1(Opcode::FNeg, TType::Fp32, a)
+    }
+
+    // -----------------------------------------------------------------
+    // Memory.
+    // -----------------------------------------------------------------
+
+    pub fn lod(&mut self, addr: V, offset: usize) -> V {
+        let d = self.fresh();
+        self.lod_into(d, addr, offset);
+        d
+    }
+
+    pub fn lod_into(&mut self, dst: V, addr: V, offset: usize) {
+        assert!(offset <= 0xFFFF, "memory offset {offset} out of range");
+        let mut n = self.blank(Opcode::Lod, TType::Int);
+        n.def = Some(dst);
+        n.ra = Some(addr);
+        n.imm = offset as u16;
+        self.push(n);
+    }
+
+    pub fn sto(&mut self, value: V, addr: V, offset: usize) {
+        assert!(offset <= 0xFFFF, "memory offset {offset} out of range");
+        let mut n = self.blank(Opcode::Sto, TType::Int);
+        n.rd_use = Some(value);
+        n.ra = Some(addr);
+        n.imm = offset as u16;
+        self.push(n);
+    }
+
+    // -----------------------------------------------------------------
+    // Extension cores.
+    // -----------------------------------------------------------------
+
+    pub fn dot(&mut self, a: V, b: V) -> V {
+        let d = self.fresh();
+        let mut n = self.blank(Opcode::Dot, TType::Fp32);
+        n.def = Some(d);
+        n.ra = Some(a);
+        n.rb = Some(b);
+        self.push(n);
+        d
+    }
+
+    /// SUM streams only ra; rb is encoded as ra (the kernels' idiom).
+    pub fn sum(&mut self, a: V) -> V {
+        let d = self.fresh();
+        let mut n = self.blank(Opcode::Sum, TType::Fp32);
+        n.def = Some(d);
+        n.ra = Some(a);
+        n.rb = Some(a);
+        self.push(n);
+        d
+    }
+
+    // -----------------------------------------------------------------
+    // Predicates.
+    // -----------------------------------------------------------------
+
+    pub fn if_cc(&mut self, cc: CondCode, ttype: TType, a: V, b: V) -> &mut Self {
+        let mut n = self.blank(Opcode::If, ttype);
+        n.ra = Some(a);
+        n.rb = Some(b);
+        n.imm = cc.bits() as u16;
+        self.push(n);
+        self
+    }
+
+    pub fn else_(&mut self) -> &mut Self {
+        let n = self.blank(Opcode::Else, TType::Int);
+        self.push(n);
+        self
+    }
+
+    pub fn endif(&mut self) -> &mut Self {
+        let n = self.blank(Opcode::EndIf, TType::Int);
+        self.push(n);
+        self
+    }
+
+    // -----------------------------------------------------------------
+    // Control flow.
+    // -----------------------------------------------------------------
+
+    pub fn init(&mut self, count: usize) -> &mut Self {
+        assert!(count <= 0xFFFF, "loop count {count} out of range");
+        let mut n = self.blank(Opcode::Init, TType::Int);
+        n.imm = count as u16;
+        self.push(n);
+        self
+    }
+
+    fn branch(&mut self, op: Opcode, target: &str) {
+        let mut n = self.blank(op, TType::Int);
+        // Control transfers always issue over the sequencer, not a
+        // thread subset; keep the encoding canonical.
+        n.tc = ThreadCtrl::FULL;
+        n.target = Some(target.to_string());
+        self.push(n);
+    }
+
+    pub fn jmp(&mut self, target: &str) -> &mut Self {
+        self.branch(Opcode::Jmp, target);
+        self
+    }
+
+    pub fn jsr(&mut self, target: &str) -> &mut Self {
+        self.branch(Opcode::Jsr, target);
+        self
+    }
+
+    pub fn loop_(&mut self, target: &str) -> &mut Self {
+        self.branch(Opcode::Loop, target);
+        self
+    }
+
+    pub fn rts(&mut self) -> &mut Self {
+        let mut n = self.blank(Opcode::Rts, TType::Int);
+        n.tc = ThreadCtrl::FULL;
+        self.push(n);
+        self
+    }
+
+    pub fn stop(&mut self) -> &mut Self {
+        let mut n = self.blank(Opcode::Stop, TType::Int);
+        n.tc = ThreadCtrl::FULL;
+        self.push(n);
+        self
+    }
+}

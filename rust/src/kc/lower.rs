@@ -1,0 +1,126 @@
+//! Lowering: scheduled IR + register assignment → [`crate::asm::Program`]
+//! directly (decoded instructions, encoded words, labels, issue plans) —
+//! no string round-trip — plus a faithful assembly pretty-printer for
+//! debugging and the CLI.
+//!
+//! Faithful means: reassembling the printed text reproduces the lowered
+//! program word for word (`rust/tests/kc_schedule.rs` pins this), so the
+//! legacy `Kernel::assemble`-from-text path and the direct program path
+//! stay bit-identical.
+
+use std::collections::BTreeMap;
+
+use crate::asm::{Program, SourceLine};
+use crate::isa::{Instr, WordLayout};
+use crate::sim::plan;
+
+use super::sched::{Flat, Layout, Slot};
+
+pub(crate) fn lower(
+    name: &str,
+    threads: usize,
+    flat: &Flat,
+    layout: &Layout,
+    assignment: &[u8],
+    word_layout: WordLayout,
+) -> Result<(Program, String), String> {
+    // Instruction addresses: labels occupy no address.
+    let mut labels: BTreeMap<String, usize> = BTreeMap::new();
+    let mut addr = 0usize;
+    for slot in &layout.slots {
+        match *slot {
+            Slot::Label(l) => {
+                if labels.insert(flat.labels[l].clone(), addr).is_some() {
+                    return Err(format!("duplicate label '{}'", flat.labels[l]));
+                }
+            }
+            Slot::Node(_) | Slot::Pad => addr += 1,
+        }
+    }
+
+    let mut instrs = Vec::with_capacity(addr);
+    let mut words = Vec::with_capacity(addr);
+    let mut source = Vec::with_capacity(addr);
+    let mut asm = format!("; {name} — kc-scheduled eGPU assembly ({threads} threads)\n");
+    fn put_line(asm: &mut String, text: &str, line_no: &mut usize) {
+        asm.push_str(text);
+        asm.push('\n');
+        *line_no += 1;
+    }
+    let mut line_no = 2usize; // line 1 is the header comment
+
+    let reg = |v: super::ir::V| assignment[v.0 as usize];
+    for slot in &layout.slots {
+        match *slot {
+            Slot::Label(l) => {
+                put_line(&mut asm, &format!("{}:", flat.labels[l]), &mut line_no);
+            }
+            Slot::Pad => {
+                let i = Instr::nop();
+                source.push(SourceLine {
+                    line_no,
+                    text: "nop".to_string(),
+                });
+                put_line(&mut asm, "    nop", &mut line_no);
+                words.push(word_layout.encode(&i));
+                instrs.push(i);
+            }
+            Slot::Node(ni) => {
+                let n = &flat.nodes[ni];
+                for c in &n.comments {
+                    put_line(&mut asm, &format!("    ; {c}"), &mut line_no);
+                }
+                let mut i = Instr::new(n.op);
+                i.ttype = n.ttype;
+                i.tc = n.tc;
+                i.imm = n.imm;
+                if let Some(d) = n.def {
+                    i.rd = reg(d);
+                }
+                if let Some(v) = n.rd_use {
+                    i.rd = reg(v);
+                }
+                if let Some(a) = n.ra {
+                    i.ra = reg(a);
+                }
+                if let Some(b) = n.rb {
+                    i.rb = reg(b);
+                }
+                let text = if let Some(t) = &n.target {
+                    let target = *labels
+                        .get(t)
+                        .ok_or_else(|| format!("undefined label '{t}'"))?;
+                    if target > 0xFFFF {
+                        return Err(format!("label '{t}' address {target} overflows"));
+                    }
+                    i.imm = target as u16;
+                    // Print the symbolic name; it reassembles to the same
+                    // address because the line structure is preserved.
+                    format!("{} {t}", n.op.mnemonic())
+                } else {
+                    i.disasm()
+                };
+                source.push(SourceLine {
+                    line_no,
+                    text: text.clone(),
+                });
+                put_line(&mut asm, &format!("    {text}"), &mut line_no);
+                words.push(word_layout.encode(&i));
+                instrs.push(i);
+            }
+        }
+    }
+
+    let plans = plan::compile(&instrs).map_err(|e| format!("plan at pc {}: {}", e.pc, e.message))?;
+    Ok((
+        Program {
+            instrs,
+            words,
+            labels,
+            layout: word_layout,
+            source,
+            plans,
+        },
+        asm,
+    ))
+}

@@ -1,0 +1,397 @@
+//! `kc` — the kernel compiler.
+//!
+//! The paper wrote its benchmarks by hand: "All benchmarks were written in
+//! assembly code (we have not written our compiler yet)" (§7), and on a
+//! statically scheduled, interlock-free pipeline the compiler *is* the
+//! performance story — every RAW/memory/extension-core delay slot that
+//! isn't filled with useful work becomes a NOP. This module is that
+//! compiler layer:
+//!
+//! 1. **IR** ([`ir::KernelBuilder`], [`V`]) — typed instructions over
+//!    virtual registers, with labels, hardware loops, subroutines and
+//!    predicates. `_into` redefinitions express predicated merges and
+//!    loop-carried updates.
+//! 2. **Dependence graph + schedule** (`sched`) — dependences and
+//!    latencies derive from the *one* authoritative hazard model
+//!    (`sim::hazard` windows + the issue charges of `Machine::step_plan`).
+//!    A list scheduler moves independent instructions into the delay slots
+//!    and pads only residual slack; per chain it never emits more cycles
+//!    than the in-order padded form.
+//! 3. **Register allocation** (`regalloc`) — linear scan onto the
+//!    configured `WordLayout`, with one assignment shared by every
+//!    schedule mode so scheduled and fenced builds are register-identical.
+//! 4. **Lowering** (`lower`) — directly to [`crate::asm::Program`] (words
+//!    encoded, labels resolved, issue plans attached); the pretty-printed
+//!    listing is kept only for humans and reassembles to the identical
+//!    program.
+//!
+//! Three build modes pin correctness the way PR 2's issue-plan engine was
+//! pinned: [`SchedMode::Fenced`] (full pipeline settle before every
+//! instruction — the schedule-disabled oracle), [`SchedMode::Linear`]
+//! (original order, minimal padding — the legacy `kernels::Sched`
+//! behavior), and [`SchedMode::List`]. For every kernel the scheduled and
+//! fenced builds must produce bit-identical registers and shared memory
+//! through `Machine::run`, with zero hazards and `List ≤ Linear ≤ Fenced`
+//! cycles (`rust/tests/kc_schedule.rs`).
+
+pub mod ir;
+mod lower;
+mod regalloc;
+mod sched;
+
+pub use ir::{KernelBuilder, V};
+
+use crate::asm::Program;
+
+/// Which schedule a build emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedMode {
+    /// List-scheduled: independent instructions fill the delay slots.
+    List,
+    /// Original order with minimal RAW/memory padding (what the legacy
+    /// string emitter produced).
+    Linear,
+    /// Original order with a full pipeline settle before every
+    /// instruction — the schedule-disabled correctness oracle.
+    Fenced,
+}
+
+impl SchedMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedMode::List => "list",
+            SchedMode::Linear => "linear",
+            SchedMode::Fenced => "fenced",
+        }
+    }
+}
+
+/// Static schedule statistics for one compiled kernel. All three modes are
+/// measured on every build (the layouts are needed for register allocation
+/// anyway), so the delay-slot win is always reportable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScheduleStats {
+    /// The mode the emitted program uses.
+    pub mode: SchedMode,
+    /// Real (non-NOP) instructions.
+    pub instructions: usize,
+    pub nops_scheduled: usize,
+    pub nops_linear: usize,
+    pub nops_fenced: usize,
+    /// Straight-line cycle estimates (loop bodies counted once); dynamic
+    /// modeled cycles come from running the program.
+    pub static_cycles_scheduled: u64,
+    pub static_cycles_linear: u64,
+    pub static_cycles_fenced: u64,
+}
+
+impl ScheduleStats {
+    /// NOPs eliminated by list scheduling relative to in-order padding.
+    pub fn nops_filled(&self) -> usize {
+        self.nops_linear.saturating_sub(self.nops_scheduled)
+    }
+
+    /// Static-cycle reduction of the list schedule vs in-order padding,
+    /// as a fraction of the padded cycles.
+    pub fn static_reduction_vs_linear(&self) -> f64 {
+        if self.static_cycles_linear == 0 {
+            return 0.0;
+        }
+        1.0 - self.static_cycles_scheduled as f64 / self.static_cycles_linear as f64
+    }
+}
+
+/// A compiled kernel: the program (plans attached), its listing, and the
+/// schedule statistics.
+#[derive(Debug, Clone)]
+pub struct Compiled {
+    pub program: Program,
+    pub asm: String,
+    pub stats: ScheduleStats,
+}
+
+/// Compilation error (register pressure, label resolution).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KcError(pub String);
+
+impl std::fmt::Display for KcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "kernel compiler: {}", self.0)
+    }
+}
+
+impl std::error::Error for KcError {}
+
+impl KernelBuilder {
+    /// Schedule, allocate and lower the kernel in the requested mode.
+    pub fn finish(self, mode: SchedMode) -> Result<Compiled, KcError> {
+        let flat = sched::flatten(&self);
+        let model = sched::CostModel::new(self.threads, self.memory);
+        let lay_list = sched::schedule(&flat, &model, SchedMode::List);
+        let lay_linear = sched::schedule(&flat, &model, SchedMode::Linear);
+        let lay_fenced = sched::schedule(&flat, &model, SchedMode::Fenced);
+        // One register assignment valid across all three layouts: the
+        // List/Linear/Fenced builds of a kernel differ only in NOPs and
+        // instruction order, never in register names — which is what lets
+        // the correctness harness compare their register files bit for
+        // bit.
+        let assignment = regalloc::allocate(
+            &flat,
+            &[&lay_list, &lay_linear, &lay_fenced],
+            &model,
+            self.layout.max_reg(),
+        )
+        .map_err(KcError)?;
+        let chosen = match mode {
+            SchedMode::List => &lay_list,
+            SchedMode::Linear => &lay_linear,
+            SchedMode::Fenced => &lay_fenced,
+        };
+        let (program, asm) =
+            lower::lower(&self.name, self.threads, &flat, chosen, &assignment, self.layout)
+                .map_err(KcError)?;
+        let stats = ScheduleStats {
+            mode,
+            instructions: flat.nodes.len(),
+            nops_scheduled: lay_list.nops,
+            nops_linear: lay_linear.nops,
+            nops_fenced: lay_fenced.nops,
+            static_cycles_scheduled: lay_list.end_cycle,
+            static_cycles_linear: lay_linear.end_cycle,
+            static_cycles_fenced: lay_fenced.end_cycle,
+        };
+        Ok(Compiled { program, asm, stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asm::assemble;
+    use crate::isa::{DepthSel, ThreadCtrl, WidthSel, WordLayout};
+    use crate::sim::config::{EgpuConfig, MemoryMode};
+    use crate::sim::hazard::REG_WINDOW;
+    use crate::sim::Machine;
+
+    fn layout() -> WordLayout {
+        WordLayout::for_regs(32)
+    }
+
+    fn run(c: &Compiled, threads: usize) -> crate::sim::RunStats {
+        let mut cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+        cfg.dot_core = true;
+        let mut m = Machine::new(cfg).unwrap();
+        m.set_threads(threads).unwrap();
+        m.load_program(c.program.clone()).unwrap();
+        m.run(1_000_000).unwrap()
+    }
+
+    /// A shallow (1-wave) dependent chain next to independent work: list
+    /// scheduling must fill the delay slots the linear form pads.
+    fn chain_with_filler(mode: SchedMode) -> Compiled {
+        let mut b = KernelBuilder::new("t", 16, layout(), MemoryMode::Dp);
+        let x = b.ldi(1);
+        let y = b.op2(crate::isa::Opcode::Add, crate::isa::TType::Uint, x, x);
+        let z = b.add_u(y, y);
+        let w = b.add_u(z, z);
+        // Independent work the scheduler can move into the slots.
+        let a = b.ldi(10);
+        let bb = b.ldi(11);
+        let c = b.ldi(12);
+        let d = b.add_u(a, bb);
+        let e = b.add_u(c, d);
+        let f = b.add_u(w, e);
+        let base = b.ldi(64);
+        b.sto(f, base, 0);
+        b.stop();
+        b.finish(mode).unwrap()
+    }
+
+    #[test]
+    fn list_fills_delay_slots_of_a_shallow_chain() {
+        let list = chain_with_filler(SchedMode::List);
+        let linear = chain_with_filler(SchedMode::Linear);
+        let fenced = chain_with_filler(SchedMode::Fenced);
+        assert!(
+            list.stats.nops_scheduled < list.stats.nops_linear,
+            "list {} vs linear {} NOPs",
+            list.stats.nops_scheduled,
+            list.stats.nops_linear
+        );
+        assert!(list.stats.static_cycles_scheduled <= list.stats.static_cycles_linear);
+        assert!(list.stats.static_cycles_linear <= list.stats.static_cycles_fenced);
+        // Dynamic check: all three run hazard-free, same shared result,
+        // ordered cycles.
+        let (sl, sn, sf) = (run(&list, 16), run(&linear, 16), run(&fenced, 16));
+        assert_eq!(sl.hazards, 0, "{}", list.asm);
+        assert_eq!(sn.hazards, 0);
+        assert_eq!(sf.hazards, 0);
+        assert!(sl.cycles <= sn.cycles && sn.cycles <= sf.cycles);
+    }
+
+    #[test]
+    fn deep_machines_need_no_padding() {
+        let mut b = KernelBuilder::new("t", 512, layout(), MemoryMode::Dp);
+        let t = b.tdx();
+        let x = b.lod(t, 0);
+        let y = b.fadd(x, x);
+        b.sto(y, t, 2048);
+        b.stop();
+        let c = b.finish(SchedMode::List).unwrap();
+        assert_eq!(c.stats.nops_scheduled, 0, "{}", c.asm);
+        assert_eq!(run(&c, 512).hazards, 0);
+    }
+
+    #[test]
+    fn narrowed_ops_are_padded_exactly() {
+        // [w1,d0] writer feeding a [w1,d0] reader: 6-cycle window, 1-cycle
+        // writer => 5 pads in the linear form, and the machine agrees.
+        let mut b = KernelBuilder::new("t", 512, layout(), MemoryMode::Dp);
+        b.space(ThreadCtrl::MCU);
+        let x = b.ldi(1);
+        let y = b.add_u(x, x);
+        let base = b.ldi(64);
+        b.sto(y, base, 0);
+        b.stop();
+        let c = b.finish(SchedMode::Linear).unwrap();
+        assert_eq!(c.stats.nops_linear as u64, REG_WINDOW - 1 + (REG_WINDOW - 1));
+        assert_eq!(run(&c, 512).hazards, 0);
+    }
+
+    #[test]
+    fn store_load_turnaround_and_loops_settle() {
+        // A hardware loop whose body stores then reloads the same address:
+        // the back-edge settle keeps every iteration hazard-free.
+        let mut b = KernelBuilder::new("t", 16, layout(), MemoryMode::Dp);
+        let t = b.tdx();
+        let acc = b.ldi(0);
+        b.init(4);
+        b.label("body");
+        b.sto(acc, t, 128);
+        let r = b.lod(t, 128);
+        b.add_u_into(acc, r, r);
+        b.loop_("body");
+        b.sto(acc, t, 256);
+        b.stop();
+        let c = b.finish(SchedMode::List).unwrap();
+        let stats = run(&c, 16);
+        assert_eq!(stats.hazards, 0, "{:?}\n{}", stats.hazard_samples, c.asm);
+    }
+
+    #[test]
+    fn predicate_barriers_are_not_crossed() {
+        // The ELSE arm's redefinition must stay in its arm; both arms
+        // write the same destination register.
+        let mut b = KernelBuilder::new("t", 32, layout(), MemoryMode::Dp);
+        let t = b.tdx();
+        let lim = b.ldi(16);
+        b.if_cc(crate::isa::CondCode::Lt, crate::isa::TType::Uint, t, lim);
+        let m = b.or_i(t, lim);
+        b.else_();
+        b.or_i_into(m, lim, lim);
+        b.endif();
+        b.sto(m, t, 64);
+        b.stop();
+        let c = b.finish(SchedMode::List).unwrap();
+        let p = &c.program;
+        // if ... else ... endif must appear in order in the lowered code.
+        let pos = |op: crate::isa::Opcode| {
+            p.instrs.iter().position(|i| i.op == op).unwrap()
+        };
+        let (i_if, i_else, i_end) = (
+            pos(crate::isa::Opcode::If),
+            pos(crate::isa::Opcode::Else),
+            pos(crate::isa::Opcode::EndIf),
+        );
+        assert!(i_if < i_else && i_else < i_end);
+        // Both Or instructions write the same physical register, one per arm.
+        let ors: Vec<usize> = p
+            .instrs
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.op == crate::isa::Opcode::Or)
+            .map(|(k, _)| k)
+            .collect();
+        assert_eq!(ors.len(), 2);
+        assert_eq!(p.instrs[ors[0]].rd, p.instrs[ors[1]].rd);
+        assert!(i_if < ors[0] && ors[0] < i_else);
+        assert!(i_else < ors[1] && ors[1] < i_end);
+    }
+
+    #[test]
+    fn listing_reassembles_to_the_lowered_program() {
+        let c = chain_with_filler(SchedMode::List);
+        let p2 = assemble(&c.asm, layout()).unwrap();
+        assert_eq!(c.program.instrs, p2.instrs, "\n{}", c.asm);
+        assert_eq!(c.program.words, p2.words);
+    }
+
+    #[test]
+    fn register_pressure_overflows_cleanly() {
+        // 40 simultaneously-live values cannot fit 16 registers.
+        let mut b = KernelBuilder::new("t", 16, WordLayout::for_regs(16), MemoryMode::Dp);
+        let vs: Vec<_> = (0..40).map(|i| b.ldi(i)).collect();
+        let mut acc = vs[0];
+        for &v in &vs[1..] {
+            acc = b.add_u(acc, v);
+        }
+        let base = b.ldi(64);
+        b.sto(acc, base, 0);
+        b.stop();
+        assert!(b.finish(SchedMode::List).is_err());
+    }
+
+    #[test]
+    fn subroutine_values_survive_the_call() {
+        // A caller value used after the call must not share a register
+        // with callee temps (the call-span rule).
+        let mut b = KernelBuilder::new("t", 16, layout(), MemoryMode::Dp);
+        let t = b.tdx();
+        let keep = b.ldi(7);
+        b.jsr("sub");
+        let s = b.add_u(keep, t);
+        b.sto(s, t, 300);
+        b.stop();
+        b.label("sub");
+        // Callee temps that would otherwise be free to reuse keep's slot.
+        let a = b.ldi(1);
+        let bb = b.ldi(2);
+        let cc = b.add_u(a, bb);
+        b.sto(cc, t, 400);
+        b.rts();
+        let c = b.finish(SchedMode::List).unwrap();
+        let stats = run(&c, 16);
+        assert_eq!(stats.hazards, 0);
+        // Thread 0 register holding s = 7 + 0.
+        let mut cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+        cfg.dot_core = true;
+        let mut m = Machine::new(cfg).unwrap();
+        m.set_threads(16).unwrap();
+        m.load_program(c.program.clone()).unwrap();
+        m.run(1_000_000).unwrap();
+        assert_eq!(m.shared().read(300).unwrap(), 7);
+        assert_eq!(m.shared().read(400).unwrap(), 3);
+    }
+
+    #[test]
+    fn narrow_selector_geometry_matches_machine_costs() {
+        // Cost model vs machine: a [w4,dhalf] load on 512 threads charges
+        // ceil(16*4... waves=16, lanes=4 => sel 64 => 16 cycles.
+        let mut b = KernelBuilder::new("t", 512, layout(), MemoryMode::Dp);
+        b.space(ThreadCtrl::new(WidthSel::Quarter4, DepthSel::Half));
+        let t = b.tdx();
+        let x = b.lod(t, 0);
+        b.sto(x, t, 1024);
+        b.full();
+        b.stop();
+        let c = b.finish(SchedMode::Linear).unwrap();
+        let stats = run(&c, 512);
+        assert_eq!(stats.hazards, 0);
+        // static estimate must match the machine exactly for straight-line
+        // programs: tdx(16) + lod(16) + pads + sto(64) + stop(1) + drain(8).
+        assert_eq!(
+            stats.cycles,
+            c.stats.static_cycles_linear + crate::sim::PIPELINE_DEPTH
+        );
+    }
+}

@@ -1,0 +1,224 @@
+//! Linear-scan register allocation onto the configured `WordLayout`
+//! register space.
+//!
+//! One assignment must be valid for *every* layout the compiler can emit
+//! (list-scheduled, linear, fenced) so that the scheduled and the
+//! schedule-disabled builds of a kernel are register-identical — that is
+//! what lets the correctness tests compare the two runs' full register
+//! files bit for bit. Live intervals are therefore computed per layout and
+//! two values conflict if their intervals overlap in *any* of them.
+//!
+//! Interval construction is conservative in three ways beyond plain
+//! first-ref/last-ref spans:
+//!
+//! - **Writer windows**: a value's interval extends past its last def
+//!   until the def's hazard window has expired on that layout's timeline.
+//!   The machine's `reg_ready` is per *physical* register and monotone, so
+//!   reusing a register whose previous occupant's writeback is still in
+//!   flight would manufacture a hazard the scheduler never modeled.
+//! - **Back-edges**: a value that is *live into* a LOOP body from the
+//!   previous iteration (its first reference inside `[header, branch]` is
+//!   a read, or a predicated — non-killing — write) is extended to the
+//!   branch. Values the body redefines before reading stay local, which is
+//!   what keeps loop-body temporaries reusable.
+//! - **Calls**: any interval spanning a JSR (or a forward JMP) is extended
+//!   to the end of the program — the callee (or the code jumped over)
+//!   executes *inside* the caller's live range even though it sits
+//!   elsewhere in the address space.
+
+use super::sched::{CostModel, Flat, Layout, Slot};
+use crate::isa::Opcode;
+
+/// Inclusive slot-position interval; `end == slots.len()` marks a value
+/// pinned live to the end of the program.
+#[derive(Debug, Clone, Copy)]
+struct Interval {
+    start: usize,
+    end: usize,
+    used: bool,
+}
+
+/// First thing a loop body does to a value: read it (live into the body
+/// across the back edge) or overwrite it unconditionally (body-local).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Fate {
+    LiveIn,
+    Killed,
+}
+
+fn intervals(flat: &Flat, layout: &Layout, model: &CostModel) -> Vec<Interval> {
+    let nv = flat.nvals as usize;
+    let mut iv = vec![
+        Interval {
+            start: usize::MAX,
+            end: 0,
+            used: false
+        };
+        nv
+    ];
+    // Plain reference spans.
+    for (pos, slot) in layout.slots.iter().enumerate() {
+        if let Slot::Node(i) = *slot {
+            for v in flat.nodes[i].all_values() {
+                let e = &mut iv[v.0 as usize];
+                e.start = e.start.min(pos);
+                e.end = e.end.max(pos);
+                e.used = true;
+            }
+        }
+    }
+    // Writer-window extension: busy until the first position whose issue
+    // start is at or past the window expiry.
+    for (pos, slot) in layout.slots.iter().enumerate() {
+        if let Slot::Node(i) = *slot {
+            let n = &flat.nodes[i];
+            if let Some(d) = n.def {
+                let expiry = layout.starts[pos] + model.def_window(n);
+                let q = layout.starts.partition_point(|&s| s < expiry);
+                let e = &mut iv[d.0 as usize];
+                e.end = e.end.max(q.saturating_sub(1));
+            }
+        }
+    }
+    // Classify branches: back edges (target before branch) vs call-like
+    // transfers (JSR anywhere, forward JMP).
+    let mut call_positions = Vec::new();
+    let mut back_edges = Vec::new();
+    for (pos, slot) in layout.slots.iter().enumerate() {
+        if let Slot::Node(i) = *slot {
+            let n = &flat.nodes[i];
+            if matches!(n.op, Opcode::Jsr | Opcode::Jmp | Opcode::Loop) {
+                let target_pos = n.target.as_ref().and_then(|t| {
+                    flat.labels
+                        .iter()
+                        .position(|l| l == t)
+                        .map(|l| layout.label_pos[l])
+                });
+                match target_pos {
+                    Some(q) if q < pos && n.op != Opcode::Jsr => back_edges.push((q, pos)),
+                    _ => call_positions.push(pos),
+                }
+            }
+        }
+    }
+    // Back-edge extension: values live into the body survive the branch.
+    for &(header, branch) in &back_edges {
+        let mut fate: Vec<Option<Fate>> = vec![None; nv];
+        let mut pred_depth = 0usize;
+        for slot in &layout.slots[header..=branch] {
+            let Slot::Node(i) = *slot else { continue };
+            let n = &flat.nodes[i];
+            match n.op {
+                Opcode::If => pred_depth += 1,
+                Opcode::EndIf => pred_depth = pred_depth.saturating_sub(1),
+                _ => {}
+            }
+            // Reads first (an `x = f(x, ...)` update reads the inflowing
+            // value), then the write.
+            for v in n.ra.into_iter().chain(n.rb).chain(n.rd_use) {
+                fate[v.0 as usize].get_or_insert(Fate::LiveIn);
+            }
+            if let Some(d) = n.def {
+                // A predicated write keeps the old value for masked-off
+                // threads — it does not kill.
+                let f = if pred_depth == 0 { Fate::Killed } else { Fate::LiveIn };
+                fate[d.0 as usize].get_or_insert(f);
+            }
+        }
+        for (v, f) in fate.iter().enumerate() {
+            if *f == Some(Fate::LiveIn) {
+                // The inflowing value must survive the whole body; if its
+                // only def sits *after* the use (pure wrap-around), the
+                // occupied range also reaches back to the header.
+                iv[v].end = iv[v].end.max(branch);
+                iv[v].start = iv[v].start.min(header);
+            }
+        }
+    }
+    // Call spans: live across a JSR (or a JMP, conservatively) means live
+    // to the end — other code runs temporally inside the range.
+    let end_of_program = layout.slots.len();
+    for e in iv.iter_mut().filter(|e| e.used) {
+        if call_positions.iter().any(|&p| e.start <= p && p <= e.end) {
+            e.end = end_of_program;
+        }
+    }
+    iv
+}
+
+/// `Some(true)` = a wholly before b, `Some(false)` = wholly after,
+/// `None` = overlap.
+fn relation(a: Interval, b: Interval) -> Option<bool> {
+    if a.end < b.start {
+        Some(true)
+    } else if b.end < a.start {
+        Some(false)
+    } else {
+        None
+    }
+}
+
+/// Assign every value a physical register in `0..=max_reg`, such that two
+/// values share one only when their intervals are disjoint in *every*
+/// layout **and in the same order**. Order consistency matters beyond
+/// plain non-interference: the machine's final register file is part of
+/// the scheduled-vs-fenced bit-identity contract, and if reordering
+/// swapped which sharer wrote a register last, the two builds would end
+/// with different (dead but visible) register contents. Values are
+/// visited in order of first position in the primary (scheduled) layout —
+/// a classic linear scan with a cross-layout conflict test.
+pub(crate) fn allocate(
+    flat: &Flat,
+    layouts: &[&Layout],
+    model: &CostModel,
+    max_reg: u8,
+) -> Result<Vec<u8>, String> {
+    let nv = flat.nvals as usize;
+    let ivs: Vec<Vec<Interval>> = layouts.iter().map(|l| intervals(flat, l, model)).collect();
+
+    let mut order: Vec<usize> = (0..nv).collect();
+    order.sort_by_key(|&v| (ivs[0][v].start, v));
+
+    let conflicts = |a: usize, b: usize| {
+        let mut dir: Option<bool> = None;
+        for iv in &ivs {
+            if !(iv[a].used && iv[b].used) {
+                continue;
+            }
+            match relation(iv[a], iv[b]) {
+                None => return true,
+                Some(d) => {
+                    if *dir.get_or_insert(d) != d {
+                        return true;
+                    }
+                }
+            }
+        }
+        false
+    };
+
+    let mut assignment = vec![0u8; nv];
+    let mut by_reg: Vec<Vec<usize>> = vec![Vec::new(); max_reg as usize + 1];
+    for &v in &order {
+        if !ivs[0][v].used {
+            continue; // never emitted; any register (0) is fine
+        }
+        let mut placed = false;
+        for (r, occupants) in by_reg.iter_mut().enumerate() {
+            if occupants.iter().all(|&u| !conflicts(v, u)) {
+                assignment[v] = r as u8;
+                occupants.push(v);
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            return Err(format!(
+                "register pressure exceeds the {}-register space ({} live values)",
+                max_reg as usize + 1,
+                nv
+            ));
+        }
+    }
+    Ok(assignment)
+}

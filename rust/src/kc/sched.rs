@@ -1,0 +1,561 @@
+//! Hazard-derived dependence graph + the list scheduler.
+//!
+//! There is exactly one hazard model in the repo — `sim::hazard`'s windows
+//! plus the issue charges `Machine::step_plan` applies — and this module
+//! consumes it instead of mirroring it: [`CostModel`] computes the same
+//! per-instruction charge the machine will, and the same writer-visibility
+//! windows (`REG_WINDOW`, `DOT_WINDOW`, `MEM_WINDOW`, the LOD streaming
+//! extension `REG_WINDOW + charge - waves`, the DOT/SUM writeback
+//! `waves + DOT_WINDOW`).
+//!
+//! Scheduling is chain-structured. A *chain* is a run of instructions
+//! between control boundaries (labels, JMP/JSR/RTS/LOOP/STOP); within a
+//! chain, predicate ops (IF/ELSE/ENDIF) split *segments* that may not
+//! exchange instructions (the write-enable gate differs across them) but
+//! share hazard timing. Every chain begins with a clean pipeline — the
+//! scheduler settles (pads) before every control transfer and before
+//! fall-through into a label, which is what makes the per-chain analysis
+//! globally sound: every dynamic path into a chain has all windows
+//! expired. This is the structural form of the `Sched::fence` discipline
+//! (and of the control-flow auto-fence fix in `kernels::sched`).
+//!
+//! Three strategies produce a [`Layout`] from the same IR:
+//!
+//! - **Fenced** — original order, full pipeline settle before every
+//!   instruction. The schedule-disabled oracle: trivially hazard-free and
+//!   the slowest correct program.
+//! - **Linear** — original order, minimal RAW/memory padding. Exactly what
+//!   the legacy `kernels::Sched` emitter produced: "padding the delay
+//!   slots".
+//! - **List** — per segment, a priority list schedule that moves
+//!   independent instructions *into* the delay slots and pads only the
+//!   residual slack. Per chain the result is compared against Linear and
+//!   the better one kept, so List ≤ Linear ≤ Fenced in cycles by
+//!   construction.
+
+use crate::isa::{Opcode, ThreadCtrl, WAVEFRONT_WIDTH};
+use crate::sim::config::MemoryMode;
+use crate::sim::hazard::{DOT_WINDOW, MEM_WINDOW, REG_WINDOW};
+
+use super::ir::{Item, KernelBuilder, Node};
+use super::SchedMode;
+
+/// Flattened builder output: nodes and labels with a stable order.
+pub(crate) struct Flat {
+    pub nodes: Vec<Node>,
+    pub labels: Vec<String>,
+    pub order: Vec<Slot>,
+    pub nvals: u32,
+}
+
+/// One emitted position: a real instruction, an inserted NOP, or a label
+/// (labels occupy no instruction address but do occupy a slot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Slot {
+    Node(usize),
+    Pad,
+    Label(usize),
+}
+
+/// A fully scheduled instruction stream with its cycle timeline.
+pub(crate) struct Layout {
+    pub slots: Vec<Slot>,
+    /// Issue-start cycle of each slot (straight-line model; labels carry
+    /// the cycle at which they are reached).
+    pub starts: Vec<u64>,
+    /// Straight-line cycle estimate (loop bodies counted once).
+    pub end_cycle: u64,
+    pub nops: usize,
+    /// Slot position of each label (for back-edge classification).
+    pub label_pos: Vec<usize>,
+}
+
+pub(crate) fn flatten(b: &KernelBuilder) -> Flat {
+    let mut nodes = Vec::new();
+    let mut labels = Vec::new();
+    let mut order = Vec::new();
+    for item in &b.items {
+        match item {
+            Item::Label(name) => {
+                order.push(Slot::Label(labels.len()));
+                labels.push(name.clone());
+            }
+            Item::Node(n) => {
+                order.push(Slot::Node(nodes.len()));
+                nodes.push(n.clone());
+            }
+        }
+    }
+    Flat {
+        nodes,
+        labels,
+        order,
+        nvals: b.nvals,
+    }
+}
+
+/// The machine's issue-cost and hazard-window model, parameterized the way
+/// a `Machine` instance is (runtime thread count, memory organization).
+/// The port-charge formulas are *shared* with the machine
+/// ([`MemoryMode::load_cycles`]/[`MemoryMode::store_cycles`], which
+/// `SharedMem` delegates to), not copied.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct CostModel {
+    total_waves: usize,
+    memory: MemoryMode,
+}
+
+impl CostModel {
+    pub fn new(threads: usize, memory: MemoryMode) -> CostModel {
+        CostModel {
+            total_waves: threads / WAVEFRONT_WIDTH,
+            memory,
+        }
+    }
+
+    fn geometry(&self, tc: ThreadCtrl) -> (u64, u64) {
+        let waves = tc.depth.waves(self.total_waves) as u64;
+        let sel = waves * tc.width.lanes() as u64;
+        (waves, sel)
+    }
+
+    /// Cycles `Machine::step_plan` charges for this instruction.
+    pub fn cost(&self, n: &Node) -> u64 {
+        use crate::isa::Group;
+        let (waves, sel) = self.geometry(n.tc);
+        match n.op.group() {
+            Group::Nop | Group::Control => 1,
+            Group::Memory => {
+                if n.op == Opcode::Lod {
+                    self.memory.load_cycles(sel as usize)
+                } else {
+                    self.memory.store_cycles(sel as usize)
+                }
+            }
+            _ => waves,
+        }
+    }
+
+    /// Writer-visibility window for this instruction's register result
+    /// (cycles from issue start until a reader may start).
+    pub fn def_window(&self, n: &Node) -> u64 {
+        let (waves, _) = self.geometry(n.tc);
+        match n.op {
+            Opcode::Lod => REG_WINDOW + self.cost(n).saturating_sub(waves),
+            Opcode::Dot | Opcode::Sum => waves + DOT_WINDOW,
+            _ => REG_WINDOW,
+        }
+    }
+
+    /// Cycle at which memory written by this store becomes readable,
+    /// relative to the store's issue start.
+    pub fn store_latency(&self, n: &Node) -> u64 {
+        self.cost(n) + MEM_WINDOW
+    }
+}
+
+/// Per-chain pipeline state (clean at every chain entry).
+struct State {
+    /// Readable-at cycle per value (monotone max, like
+    /// `HazardChecker::write_reg`).
+    vready: Vec<u64>,
+    mem_ready: u64,
+    /// Max over every pending window — the settle target.
+    pending: u64,
+}
+
+impl State {
+    fn new(nvals: u32) -> State {
+        State {
+            vready: vec![0; nvals as usize],
+            mem_ready: 0,
+            pending: 0,
+        }
+    }
+
+    fn note_def(&mut self, v: super::ir::V, ready: u64) {
+        let slot = &mut self.vready[v.0 as usize];
+        if ready > *slot {
+            *slot = ready;
+        }
+        self.pending = self.pending.max(ready);
+    }
+
+    fn note_store(&mut self, ready: u64) {
+        self.mem_ready = self.mem_ready.max(ready);
+        self.pending = self.pending.max(ready);
+    }
+}
+
+enum Part {
+    Seg(Vec<usize>),
+    Barrier(usize),
+}
+
+struct Emit {
+    slots: Vec<Slot>,
+    starts: Vec<u64>,
+    cycle: u64,
+    nops: usize,
+}
+
+impl Emit {
+    fn pad_until(&mut self, target: u64) {
+        while self.cycle < target {
+            self.slots.push(Slot::Pad);
+            self.starts.push(self.cycle);
+            self.cycle += 1;
+            self.nops += 1;
+        }
+    }
+
+    fn put(&mut self, idx: usize, cost: u64) {
+        self.slots.push(Slot::Node(idx));
+        self.starts.push(self.cycle);
+        self.cycle += cost;
+    }
+}
+
+/// Schedule the whole program under one strategy.
+pub(crate) fn schedule(flat: &Flat, model: &CostModel, mode: SchedMode) -> Layout {
+    let mut out = Emit {
+        slots: Vec::new(),
+        starts: Vec::new(),
+        cycle: 0,
+        nops: 0,
+    };
+    let mut parts: Vec<Part> = Vec::new();
+    let mut seg: Vec<usize> = Vec::new();
+
+    let flush_chain =
+        |parts: &mut Vec<Part>, seg: &mut Vec<usize>, out: &mut Emit, term: Option<usize>| {
+            if !seg.is_empty() {
+                parts.push(Part::Seg(std::mem::take(seg)));
+            }
+            if parts.is_empty() && term.is_none() {
+                return;
+            }
+            match mode {
+                SchedMode::Fenced | SchedMode::Linear => {
+                    emit_chain(parts, term, flat, model, mode, out);
+                }
+                SchedMode::List => {
+                    // Emit both ways from the same start cycle, keep the
+                    // shorter program (ties go to the readable in-order
+                    // form). List never loses to Linear in the output.
+                    let mut list = Emit {
+                        slots: Vec::new(),
+                        starts: Vec::new(),
+                        cycle: out.cycle,
+                        nops: 0,
+                    };
+                    emit_chain(parts, term, flat, model, SchedMode::List, &mut list);
+                    let mut linear = Emit {
+                        slots: Vec::new(),
+                        starts: Vec::new(),
+                        cycle: out.cycle,
+                        nops: 0,
+                    };
+                    emit_chain(parts, term, flat, model, SchedMode::Linear, &mut linear);
+                    let pick = if list.cycle < linear.cycle { list } else { linear };
+                    out.slots.extend(pick.slots);
+                    out.starts.extend(pick.starts);
+                    out.cycle = pick.cycle;
+                    out.nops += pick.nops;
+                }
+            }
+            parts.clear();
+        };
+
+    for slot in &flat.order {
+        match *slot {
+            Slot::Label(l) => {
+                // Settle straight-line state before the label so loop
+                // bodies re-enter with a clean pipeline and the pads sit
+                // outside the body.
+                flush_chain(&mut parts, &mut seg, &mut out, None);
+                out.slots.push(Slot::Label(l));
+                out.starts.push(out.cycle);
+            }
+            Slot::Node(i) => {
+                let n = &flat.nodes[i];
+                if n.is_terminator() {
+                    flush_chain(&mut parts, &mut seg, &mut out, Some(i));
+                } else if n.is_barrier() {
+                    if !seg.is_empty() {
+                        parts.push(Part::Seg(std::mem::take(&mut seg)));
+                    }
+                    parts.push(Part::Barrier(i));
+                } else {
+                    seg.push(i);
+                }
+            }
+            Slot::Pad => unreachable!("flatten emits no pads"),
+        }
+    }
+    flush_chain(&mut parts, &mut seg, &mut out, None);
+
+    let mut emitted_nodes = 0usize;
+    let mut label_pos = vec![usize::MAX; flat.labels.len()];
+    for (pos, s) in out.slots.iter().enumerate() {
+        match *s {
+            Slot::Node(_) => emitted_nodes += 1,
+            Slot::Label(l) => label_pos[l] = pos,
+            Slot::Pad => {}
+        }
+    }
+    debug_assert_eq!(emitted_nodes, flat.nodes.len(), "every node must be emitted once");
+
+    Layout {
+        end_cycle: out.cycle,
+        nops: out.nops,
+        slots: out.slots,
+        starts: out.starts,
+        label_pos,
+    }
+}
+
+/// Emit one chain: segments and predicate barriers, then the terminator.
+fn emit_chain(
+    parts: &[Part],
+    term: Option<usize>,
+    flat: &Flat,
+    model: &CostModel,
+    mode: SchedMode,
+    out: &mut Emit,
+) {
+    let mut state = State::new(flat.nvals);
+    for part in parts {
+        match part {
+            Part::Seg(idxs) => match mode {
+                SchedMode::List => emit_seg_list(idxs, flat, model, &mut state, out),
+                _ => emit_seg_in_order(idxs, flat, model, &mut state, out, mode),
+            },
+            Part::Barrier(i) => {
+                let n = &flat.nodes[*i];
+                let est = if mode == SchedMode::Fenced {
+                    state.pending
+                } else {
+                    n.hazard_uses()
+                        .iter()
+                        .map(|v| state.vready[v.0 as usize])
+                        .max()
+                        .unwrap_or(0)
+                };
+                out.pad_until(est);
+                out.put(*i, model.cost(n));
+            }
+        }
+    }
+    match term {
+        Some(t) => {
+            let n = &flat.nodes[t];
+            // Settle before every control transfer (the hazard model's
+            // linear-time assumption breaks across one): JMP/JSR/RTS/LOOP.
+            // STOP drains the pipeline by itself — nothing reads after it.
+            if n.op != Opcode::Stop {
+                out.pad_until(state.pending);
+            }
+            out.put(t, model.cost(n));
+        }
+        None => {
+            // Fall-through into a label (or end of program): settle so the
+            // next chain starts clean.
+            out.pad_until(state.pending);
+        }
+    }
+}
+
+/// Original order with per-dependence padding (`Linear`) or a full settle
+/// before every instruction (`Fenced`).
+fn emit_seg_in_order(
+    idxs: &[usize],
+    flat: &Flat,
+    model: &CostModel,
+    state: &mut State,
+    out: &mut Emit,
+    mode: SchedMode,
+) {
+    for &i in idxs {
+        let n = &flat.nodes[i];
+        let est = if mode == SchedMode::Fenced {
+            state.pending
+        } else {
+            let mut est = n
+                .hazard_uses()
+                .iter()
+                .map(|v| state.vready[v.0 as usize])
+                .max()
+                .unwrap_or(0);
+            if n.op == Opcode::Lod {
+                est = est.max(state.mem_ready);
+            }
+            est
+        };
+        out.pad_until(est);
+        apply(n, i, model, state, out);
+    }
+}
+
+/// Emit a node and record its hazard effects.
+fn apply(n: &Node, idx: usize, model: &CostModel, state: &mut State, out: &mut Emit) {
+    let start = out.cycle;
+    let cost = model.cost(n);
+    out.put(idx, cost);
+    if let Some(d) = n.def {
+        state.note_def(d, start + model.def_window(n));
+    }
+    if n.op == Opcode::Sto {
+        state.note_store(start + model.store_latency(n));
+    }
+}
+
+/// Dependence-graph list scheduling of one segment.
+///
+/// Edges carry the latencies the machine enforces:
+/// - register RAW: writer's visibility window,
+/// - memory RAW (store→load): store charge + `MEM_WINDOW`,
+/// - register WAR/WAW, memory WAR/WAW (store↔store, load→store) and
+///   INIT↔INIT sequencer order: pure ordering (latency 0) — sequential
+///   issue makes order sufficient for these,
+/// and carried-in constraints from earlier segments of the chain arrive
+/// through `state` (the machine's windows are monotone maxima across
+/// defs, so the carried value applies even when the segment redefines).
+fn emit_seg_list(
+    idxs: &[usize],
+    flat: &Flat,
+    model: &CostModel,
+    state: &mut State,
+    out: &mut Emit,
+) {
+    use std::collections::HashMap;
+
+    let n = idxs.len();
+    let mut preds: Vec<Vec<(usize, u64)>> = vec![Vec::new(); n];
+    let mut succs: Vec<Vec<(usize, u64)>> = vec![Vec::new(); n];
+    let mut base: Vec<u64> = vec![0; n];
+
+    {
+        fn edge(
+            from: usize,
+            to: usize,
+            lat: u64,
+            preds: &mut [Vec<(usize, u64)>],
+            succs: &mut [Vec<(usize, u64)>],
+        ) {
+            preds[to].push((from, lat));
+            succs[from].push((to, lat));
+        }
+        let mut last_def: HashMap<u32, usize> = HashMap::new();
+        let mut readers: HashMap<u32, Vec<usize>> = HashMap::new();
+        let mut stores: Vec<usize> = Vec::new();
+        let mut loads: Vec<usize> = Vec::new();
+        let mut last_init: Option<usize> = None;
+
+        for (k, &i) in idxs.iter().enumerate() {
+            let node = &flat.nodes[i];
+            for v in node.hazard_uses() {
+                // Carried constraint always applies (monotone windows).
+                base[k] = base[k].max(state.vready[v.0 as usize]);
+                if let Some(&d) = last_def.get(&v.0) {
+                    let lat = model.def_window(&flat.nodes[idxs[d]]);
+                    edge(d, k, lat, &mut preds, &mut succs);
+                }
+                readers.entry(v.0).or_default().push(k);
+            }
+            match node.op {
+                Opcode::Lod => {
+                    base[k] = base[k].max(state.mem_ready);
+                    for &s in &stores {
+                        let lat = model.store_latency(&flat.nodes[idxs[s]]);
+                        edge(s, k, lat, &mut preds, &mut succs);
+                    }
+                }
+                Opcode::Sto => {
+                    for &l in &loads {
+                        edge(l, k, 0, &mut preds, &mut succs);
+                    }
+                    for &s in &stores {
+                        edge(s, k, 0, &mut preds, &mut succs);
+                    }
+                }
+                Opcode::Init => {
+                    if let Some(p) = last_init {
+                        edge(p, k, 0, &mut preds, &mut succs);
+                    }
+                    last_init = Some(k);
+                }
+                _ => {}
+            }
+            if let Some(d) = node.def {
+                if let Some(&pd) = last_def.get(&d.0) {
+                    edge(pd, k, 0, &mut preds, &mut succs); // WAW
+                }
+                if let Some(rs) = readers.remove(&d.0) {
+                    for r in rs {
+                        if r != k {
+                            edge(r, k, 0, &mut preds, &mut succs); // WAR
+                        }
+                    }
+                }
+                last_def.insert(d.0, k);
+            }
+            match node.op {
+                Opcode::Lod => loads.push(k),
+                Opcode::Sto => stores.push(k),
+                _ => {}
+            }
+        }
+    }
+
+    // Critical-path priority (edges only point forward in original order).
+    let mut prio: Vec<u64> = vec![0; n];
+    for k in (0..n).rev() {
+        let down = succs[k].iter().map(|&(j, lat)| lat + prio[j]).max().unwrap_or(0);
+        prio[k] = down.max(model.cost(&flat.nodes[idxs[k]]));
+    }
+
+    let mut unmet: Vec<usize> = preds.iter().map(Vec::len).collect();
+    let mut start_of: Vec<u64> = vec![0; n];
+    let mut emitted = vec![false; n];
+    let mut remaining = n;
+    while remaining > 0 {
+        // Ready = all predecessors emitted; issuable = earliest start has
+        // arrived. Among issuable nodes pick the longest critical path.
+        let mut best: Option<(u64, std::cmp::Reverse<usize>, usize)> = None;
+        for k in 0..n {
+            if emitted[k] || unmet[k] != 0 {
+                continue;
+            }
+            let mut est = base[k];
+            for &(p, lat) in &preds[k] {
+                est = est.max(start_of[p] + lat);
+            }
+            if est <= out.cycle {
+                let key = (prio[k], std::cmp::Reverse(k), k);
+                if best.map(|b| key > (b.0, b.1, b.2)).unwrap_or(true) {
+                    best = Some(key);
+                }
+            }
+        }
+        match best {
+            Some((_, _, k)) => {
+                start_of[k] = out.cycle;
+                apply(&flat.nodes[idxs[k]], idxs[k], model, state, out);
+                emitted[k] = true;
+                remaining -= 1;
+                for &(j, _) in &succs[k] {
+                    if !emitted[j] {
+                        unmet[j] -= 1;
+                    }
+                }
+            }
+            None => {
+                out.slots.push(Slot::Pad);
+                out.starts.push(out.cycle);
+                out.cycle += 1;
+                out.nops += 1;
+            }
+        }
+    }
+}

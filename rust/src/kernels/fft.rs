@@ -14,11 +14,14 @@
 //! One thread per butterfly (n/2 threads). The log₂(n) stages share a
 //! single JSR subroutine parameterized by registers (position mask, half
 //! span, twiddle shift); the bit-reverse permutation uses the BVS
-//! instruction through a staging copy.
+//! instruction through a staging copy. At shallow depths the subroutine is
+//! where the delay slots concentrate — the list scheduler overlaps the
+//! twiddle-address chain and its table loads with the butterfly-index
+//! chain instead of padding each in turn.
 
-use super::sched::Sched;
 use super::Kernel;
 use crate::isa::{WordLayout, WAVEFRONT_WIDTH};
+use crate::kc::{KernelBuilder, SchedMode, V};
 use crate::sim::config::MemoryMode;
 
 pub const MIN_N: usize = 32;
@@ -29,8 +32,14 @@ pub fn fft(n: usize) -> Kernel {
     fft_for(n, MemoryMode::Dp)
 }
 
-/// Memory-mode-aware variant (NOP schedule follows the mode's port costs).
+/// Memory-mode-aware variant (the schedule follows the mode's port costs).
 pub fn fft_for(n: usize, memory: MemoryMode) -> Kernel {
+    fft_mode(n, memory, SchedMode::List)
+}
+
+/// Schedule-mode-aware build (List = default; Fenced = the
+/// schedule-disabled correctness oracle; Linear = in-order padding).
+pub fn fft_mode(n: usize, memory: MemoryMode, mode: SchedMode) -> Kernel {
     assert!(
         n.is_power_of_two() && (MIN_N..=MAX_N).contains(&n),
         "n must be a power of two in [{MIN_N}, {MAX_N}]"
@@ -43,88 +52,87 @@ pub fn fft_for(n: usize, memory: MemoryMode) -> Kernel {
     let sre = 3 * n;
     let sim = 4 * n;
 
-    let mut s = Sched::new(&format!("fft-{n}"), threads, WordLayout::for_regs(32), memory);
-    s.comment("r0 = butterfly index t; r13 = 1; r3 = 32 - log2n (BVS shift)");
-    s.op("tdx r0")
-        .op("ldi r13, #1")
-        .op(format!("ldi r3, #{}", 32 - log2n));
+    let name = format!("fft-{n}");
+    let mut b = KernelBuilder::new(&name, threads, WordLayout::for_regs(32), memory);
+    b.comment("t = butterfly index; one = 1; shv = 32 - log2n (BVS shift)");
+    let t = b.tdx();
+    let one = b.ldi(1);
+    let shv = b.ldi((32 - log2n) as i64);
 
-    s.comment("--- bit-reverse permutation: stage through scratch ---");
-    s.op("lod r1, (r0)+0")
-        .op(format!("lod r2, (r0)+{}", n / 2))
-        .op(format!("lod r4, (r0)+{im}"))
-        .op(format!("lod r5, (r0)+{}", im + n / 2))
-        .op(format!("sto r1, (r0)+{sre}"))
-        .op(format!("sto r2, (r0)+{}", sre + n / 2))
-        .op(format!("sto r4, (r0)+{sim}"))
-        .op(format!("sto r5, (r0)+{}", sim + n / 2));
-    s.comment("gather: x[t] = staged[rev(t)]; rev(t + n/2) = rev(t) + 1");
-    s.op("bvs r6, r0")
-        .op("shr.u32 r6, r6, r3")
-        .op("add.u32 r7, r6, r13")
-        .op(format!("lod r1, (r6)+{sre}"))
-        .op(format!("lod r2, (r7)+{sre}"))
-        .op(format!("lod r4, (r6)+{sim}"))
-        .op(format!("lod r5, (r7)+{sim}"))
-        .op("sto r1, (r0)+0")
-        .op(format!("sto r2, (r0)+{}", n / 2))
-        .op(format!("sto r4, (r0)+{im}"))
-        .op(format!("sto r5, (r0)+{}", im + n / 2));
+    b.comment("--- bit-reverse permutation: stage through scratch ---");
+    let x1 = b.lod(t, 0);
+    let x2 = b.lod(t, n / 2);
+    let y1 = b.lod(t, im);
+    let y2 = b.lod(t, im + n / 2);
+    b.sto(x1, t, sre);
+    b.sto(x2, t, sre + n / 2);
+    b.sto(y1, t, sim);
+    b.sto(y2, t, sim + n / 2);
+    b.comment("gather: x[t] = staged[rev(t)]; rev(t + n/2) = rev(t) + 1");
+    let rv = b.bvs(t);
+    let r6 = b.shr_u(rv, shv);
+    let r7 = b.add_u(r6, one);
+    let g1 = b.lod(r6, sre);
+    let g2 = b.lod(r7, sre);
+    let g3 = b.lod(r6, sim);
+    let g4 = b.lod(r7, sim);
+    b.sto(g1, t, 0);
+    b.sto(g2, t, n / 2);
+    b.sto(g3, t, im);
+    b.sto(g4, t, im + n / 2);
 
-    s.comment("--- butterfly stages, shared subroutine ---");
+    b.comment("--- butterfly stages, shared subroutine ---");
+    let mut p_mask: Option<V> = None;
+    let mut p_half: Option<V> = None;
+    let mut p_shift: Option<V> = None;
     for stage in 0..log2n {
         let half = 1usize << stage;
-        s.comment(&format!("stage {stage}: span {}", 2 * half));
-        s.op(format!("ldi r16, #{}", half - 1))
-            .op(format!("ldi r17, #{half}"))
-            .op(format!("ldi r18, #{}", log2n - 1 - stage));
-        s.fence();
-        s.op("jsr stage");
+        b.comment(&format!("stage {stage}: span {}", 2 * half));
+        b.ldi_reuse(&mut p_mask, (half - 1) as i64);
+        b.ldi_reuse(&mut p_half, half as i64);
+        b.ldi_reuse(&mut p_shift, (log2n - 1 - stage) as i64);
+        b.jsr("stage");
     }
-    s.op("stop");
+    b.stop();
+    let (p_mask, p_half, p_shift) = (p_mask.unwrap(), p_half.unwrap(), p_shift.unwrap());
 
-    // Stage subroutine: params r16 = half-1, r17 = half, r18 = twshift.
-    s.label("stage");
-    s.comment("expand t to u-index (insert 0 at bit log2 half); v = u + half");
-    s.op("and r4, r0, r16")
-        .op("sub.u32 r5, r0, r4")
-        .op("shl.u32 r5, r5, r13")
-        .op("add.u32 r5, r5, r4")
-        .op("add.u32 r6, r5, r17");
-    s.comment("twiddle w = cos - i*sin at index p << twshift");
-    s.op("shl.u32 r7, r4, r18")
-        .op(format!("lod r8, (r7)+{cos}"))
-        .op(format!("lod r9, (r7)+{sin}"))
-        .op("fneg r9, r9");
-    s.comment("u = x[iu], v = x[iv]");
-    s.op("lod r10, (r5)+0")
-        .op(format!("lod r11, (r5)+{im}"))
-        .op("lod r14, (r6)+0")
-        .op(format!("lod r15, (r6)+{im}"));
-    s.comment("p = w*v (complex)");
-    s.op("fmul r19, r14, r8")
-        .op("fmul r20, r15, r9")
-        .op("fsub r19, r19, r20")
-        .op("fmul r20, r14, r9")
-        .op("fmul r21, r15, r8")
-        .op("fadd r20, r20, r21");
-    s.comment("x[iu] = u + p; x[iv] = u - p");
-    s.op("fadd r21, r10, r19")
-        .op("sto r21, (r5)+0")
-        .op("fsub r21, r10, r19")
-        .op("sto r21, (r6)+0")
-        .op("fadd r21, r11, r20")
-        .op(format!("sto r21, (r5)+{im}"))
-        .op("fsub r21, r11, r20")
-        .op(format!("sto r21, (r6)+{im}"));
-    s.op("rts");
+    // Stage subroutine: params p_mask = half-1, p_half = half, p_shift.
+    b.label("stage");
+    b.comment("expand t to u-index (insert 0 at bit log2 half); v = u + half");
+    let p = b.and_i(t, p_mask);
+    let h0 = b.sub_u(t, p);
+    let h1 = b.shl_u(h0, one);
+    let u = b.add_u(h1, p);
+    let v = b.add_u(u, p_half);
+    b.comment("twiddle w = cos - i*sin at index p << twshift");
+    let tw = b.shl_u(p, p_shift);
+    let wr = b.lod(tw, cos);
+    let ws = b.lod(tw, sin);
+    let wi = b.fneg(ws);
+    b.comment("u = x[iu], v = x[iv]");
+    let ur = b.lod(u, 0);
+    let ui = b.lod(u, im);
+    let vr = b.lod(v, 0);
+    let vi = b.lod(v, im);
+    b.comment("p = w*v (complex)");
+    let pr1 = b.fmul(vr, wr);
+    let pr2 = b.fmul(vi, wi);
+    let pr = b.fsub(pr1, pr2);
+    let pi1 = b.fmul(vr, wi);
+    let pi2 = b.fmul(vi, wr);
+    let pi = b.fadd(pi1, pi2);
+    b.comment("x[iu] = u + p; x[iv] = u - p");
+    let o1 = b.fadd(ur, pr);
+    b.sto(o1, u, 0);
+    let o2 = b.fsub(ur, pr);
+    b.sto(o2, v, 0);
+    let o3 = b.fadd(ui, pi);
+    b.sto(o3, u, im);
+    let o4 = b.fsub(ui, pi);
+    b.sto(o4, v, im);
+    b.rts();
 
-    Kernel {
-        name: format!("fft-{n}"),
-        asm: s.into_source(),
-        threads,
-        dim_x: threads,
-    }
+    Kernel::from_compiled(name, b.finish(mode).unwrap(), threads, threads)
 }
 
 /// Host-side twiddle tables: `(cos table, sin table)`, n/2 entries each,
@@ -233,13 +241,14 @@ mod tests {
     }
 
     #[test]
-    fn cycle_counts_in_paper_band() {
+    fn cycle_counts_at_or_below_paper() {
         // Table 8 eGPU-DP: 876 / 1695 / 3463 / 6813 for n = 32..256.
+        // Upper bound only — the list scheduler may beat the paper.
         for (n, paper) in [(32usize, 876u64), (64, 1695), (128, 3463), (256, 6813)] {
             let (stats, _, _) = run_fft(n, MemoryMode::Dp);
             let r = stats.cycles as f64 / paper as f64;
             assert!(
-                (0.4..=2.0).contains(&r),
+                r <= 2.0,
                 "n={n}: {} vs paper {paper} ({r:.2}x)",
                 stats.cycles
             );
@@ -254,7 +263,7 @@ mod tests {
             let (qp, got_r, _) = run_fft(n, MemoryMode::Qp);
             assert!(got_r.iter().all(|x| x.is_finite()));
             let ratio = qp.cycles as f64 / dp.cycles as f64;
-            assert!((0.55..=0.95).contains(&ratio), "n={n}: QP/DP = {ratio:.2}");
+            assert!((0.45..=0.98).contains(&ratio), "n={n}: QP/DP = {ratio:.2}");
         }
     }
 

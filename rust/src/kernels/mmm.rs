@@ -16,11 +16,13 @@
 //! variant and n threads for the DOT variant, whose extension core
 //! replaces the whole tree with one instruction (§7: "If we are using the
 //! dot product operator ... most of the time is spent waiting (NOPs) for
-//! the dot product to write back").
+//! the dot product to write back"). The list scheduler overlaps the two
+//! k-term load/multiply chains and moves the j-advance address arithmetic
+//! into the tree's delay slots.
 
-use super::sched::Sched;
 use super::{depth_for, Kernel};
-use crate::isa::{WordLayout, WAVEFRONT_WIDTH};
+use crate::isa::{DepthSel, ThreadCtrl, WidthSel, WordLayout, WAVEFRONT_WIDTH};
+use crate::kc::{KernelBuilder, SchedMode};
 use crate::sim::config::{EgpuConfig, MemoryMode};
 
 /// Valid problem sizes: 16-bit immediates must encode `3n² + n/2`.
@@ -58,6 +60,12 @@ pub fn mmm(n: usize) -> Kernel {
 /// Memory-mode-aware tree variant (schedule follows the mode's port costs;
 /// the DP schedule is valid on QP, just conservatively padded).
 pub fn mmm_for(n: usize, memory: MemoryMode) -> Kernel {
+    mmm_mode(n, memory, SchedMode::List)
+}
+
+/// Schedule-mode-aware build (List = default; Fenced = the
+/// schedule-disabled correctness oracle; Linear = in-order padding).
+pub fn mmm_mode(n: usize, memory: MemoryMode, mode: SchedMode) -> Kernel {
     check_n(n);
     let threads = (n / 2).max(WAVEFRONT_WIDTH);
     let waves = threads / WAVEFRONT_WIDTH;
@@ -65,129 +73,127 @@ pub fn mmm_for(n: usize, memory: MemoryMode) -> Kernel {
     let scr = 3 * n2;
     let log2n = n.trailing_zeros();
 
-    let mut s = Sched::new(&format!("mmm-{n}"), threads, WordLayout::for_regs(32), memory);
-    s.comment("r0=t (k-lane), r5=A addr i*n+t, r7=B addr t*n+j, r8=C index i*n+j");
-    s.op("tdx r0")
-        .op(format!("ldi r12, #{n}"))
-        .op("ldi r13, #1")
-        .op(format!("ldi r3, #{log2n}"))
-        .op("shl.u32 r7, r0, r3")
-        .op("ldi r8, #0")
-        .op("add.u32 r5, r0, r8");
-    s.op(format!("init #{n}"));
-    s.label("iloop");
-    s.comment("A[i][t] and A[i][t+n/2] stay in registers for the whole row");
-    s.op("lod r1, (r5)+0").op(format!("lod r9, (r5)+{}", n / 2));
-    s.op(format!("init #{n}"));
-    s.fence();
-    s.label("jloop");
-    s.comment("two k-terms per thread, accumulated in-register");
-    s.op(format!("lod r2, (r7)+{n2}"))
-        .op(format!("lod r10, (r7)+{}", n2 + n2 / 2))
-        .op("fmul r4, r1, r2")
-        .op("fmul r11, r9, r10")
-        .op("fadd r4, r4, r11")
-        .op(format!("sto r4, (r0)+{scr}"));
-    // Narrowing tree: fold s partials to 16 through shared scratch.
+    let name = format!("mmm-{n}");
+    let mut b = KernelBuilder::new(&name, threads, WordLayout::for_regs(32), memory);
+    b.comment("t = k-lane, arow = A addr i*n+t, bcol = B addr t*n+j, ci = C index i*n+j");
+    let t = b.tdx();
+    let cn = b.ldi(n as i64);
+    let one = b.ldi(1);
+    let csh = b.ldi(log2n as i64);
+    let bcol = b.shl_u(t, csh);
+    let ci = b.ldi(0);
+    let arow = b.add_u(t, ci);
+    b.init(n);
+    b.label("iloop");
+    b.comment("A[i][t] and A[i][t+n/2] stay in registers for the whole row");
+    let a1 = b.lod(arow, 0);
+    let a2 = b.lod(arow, n / 2);
+    b.init(n);
+    b.label("jloop");
+    b.comment("two k-terms per thread, accumulated in-register");
+    let b1 = b.lod(bcol, n2);
+    let b2 = b.lod(bcol, n2 + n2 / 2);
+    let m1 = b.fmul(a1, b1);
+    let m2 = b.fmul(a2, b2);
+    let acc = b.fadd(m1, m2);
+    b.sto(acc, t, scr);
+    // Narrowing tree: fold partials to 16 through shared scratch.
     let mut fold = n / 4;
     while fold >= WAVEFRONT_WIDTH {
         let d = depth_for(waves, fold / WAVEFRONT_WIDTH)
             .unwrap_or_else(|| panic!("fold {fold} not expressible from {waves} waves"));
-        let sel = format!("[w16,{}]", d.name());
-        s.comment(&format!("fold to {fold} partials"));
-        s.op(format!("{sel} lod r4, (r0)+{scr}"))
-            .op(format!("{sel} lod r11, (r0)+{}", scr + fold))
-            .op(format!("{sel} fadd r4, r4, r11"))
-            .op(format!("{sel} sto r4, (r0)+{scr}"));
+        b.space(ThreadCtrl::new(WidthSel::All16, d));
+        b.comment(&format!("fold to {fold} partials"));
+        let x = b.lod(t, scr);
+        let y = b.lod(t, scr + fold);
+        let z = b.fadd(x, y);
+        b.sto(z, t, scr);
         fold /= 2;
     }
-    s.comment("16 -> 4 -> 1 tail; scalar lands in thread 0");
-    s.op(format!("[w4,d0] lod r4, (r0)+{scr}"))
-        .op(format!("[w4,d0] lod r11, (r0)+{}", scr + 4))
-        .op(format!("[w4,d0] lod r15, (r0)+{}", scr + 8))
-        .op(format!("[w4,d0] lod r16, (r0)+{}", scr + 12))
-        .op("[w4,d0] fadd r4, r4, r11")
-        .op("[w4,d0] fadd r15, r15, r16")
-        .op("[w4,d0] fadd r4, r4, r15")
-        .op(format!("[w4,d0] sto r4, (r0)+{scr}"))
-        .op(format!("[w1,d0] lod r4, (r0)+{scr}"))
-        .op(format!("[w1,d0] lod r11, (r0)+{}", scr + 1))
-        .op(format!("[w1,d0] lod r15, (r0)+{}", scr + 2))
-        .op(format!("[w1,d0] lod r16, (r0)+{}", scr + 3))
-        .op("[w1,d0] fadd r4, r4, r11")
-        .op("[w1,d0] fadd r15, r15, r16")
-        .op("[w1,d0] fadd r4, r4, r15")
-        .op(format!("[w1,d0] sto r4, (r8)+{}", 2 * n2));
-    s.comment("j++: B column and C index advance by one");
-    s.op("add.u32 r7, r7, r13").op("add.u32 r8, r8, r13");
-    s.fence();
-    s.op("loop jloop");
-    s.comment("next row: A advances n, B address rewinds to t*n");
-    s.op("add.u32 r5, r5, r12").op("sub.u32 r7, r7, r12");
-    s.fence();
-    s.op("loop iloop");
-    Kernel {
-        name: format!("mmm-{n}"),
-        asm: s.finish(),
-        threads,
-        dim_x: threads,
-    }
+    b.comment("16 -> 4 -> 1 tail; scalar lands in thread 0");
+    b.space(ThreadCtrl::new(WidthSel::Quarter4, DepthSel::Wave0));
+    let x1 = b.lod(t, scr);
+    let x2 = b.lod(t, scr + 4);
+    let x3 = b.lod(t, scr + 8);
+    let x4 = b.lod(t, scr + 12);
+    let s1 = b.fadd(x1, x2);
+    let s2 = b.fadd(x3, x4);
+    let s3 = b.fadd(s1, s2);
+    b.sto(s3, t, scr);
+    b.space(ThreadCtrl::MCU);
+    let y1 = b.lod(t, scr);
+    let y2 = b.lod(t, scr + 1);
+    let y3 = b.lod(t, scr + 2);
+    let y4 = b.lod(t, scr + 3);
+    let u1 = b.fadd(y1, y2);
+    let u2 = b.fadd(y3, y4);
+    let u3 = b.fadd(u1, u2);
+    b.sto(u3, ci, 2 * n2);
+    b.full();
+    b.comment("j++: B column and C index advance by one");
+    b.add_u_into(bcol, bcol, one);
+    b.add_u_into(ci, ci, one);
+    b.loop_("jloop");
+    b.comment("next row: A advances n, B address rewinds to t*n");
+    b.add_u_into(arow, arow, cn);
+    b.sub_u_into(bcol, bcol, cn);
+    b.loop_("iloop");
+    b.stop();
+    Kernel::from_compiled(name, b.finish(mode).unwrap(), threads, threads)
 }
 
 /// DOT-core MMM: `n` threads; the extension core computes each C[i][j] in
 /// one instruction. The j-loop is software-pipelined two elements deep so
 /// the next B column streams in during the dot-product writeback window.
 pub fn mmm_dot(n: usize) -> Kernel {
+    mmm_dot_mode(n, SchedMode::List)
+}
+
+pub fn mmm_dot_mode(n: usize, mode: SchedMode) -> Kernel {
     check_n(n);
     let threads = n;
     let n2 = n * n;
     let log2n = n.trailing_zeros();
 
-    let mut s = Sched::new(
-        &format!("mmm-dot-{n}"),
-        threads,
-        WordLayout::for_regs(32),
-        MemoryMode::Dp,
-    );
-    s.comment("r0=t (k-lane), r5=A addr, r7=B addr, r8=C index + 1");
-    s.op("tdx r0")
-        .op(format!("ldi r12, #{n}"))
-        .op("ldi r13, #1")
-        .op(format!("ldi r3, #{log2n}"))
-        .op("shl.u32 r7, r0, r3")
-        .op("ldi r8, #0")
-        .op("add.u32 r5, r0, r8");
-    s.op(format!("init #{n}"));
-    s.fence();
-    s.label("iloop");
-    s.comment("row of A in registers; prologue-load B column 0");
-    s.op("lod r1, (r5)+0").op(format!("lod r2, (r7)+{n2}"));
-    s.op(format!("init #{}", n / 2));
-    s.fence();
-    s.label("jloop");
-    s.comment("dot j; prefetch column j+1 inside the writeback window");
-    s.op("dot r4, r1, r2")
-        .op("add.u32 r7, r7, r13")
-        .op(format!("lod r10, (r7)+{n2}"))
-        .op("add.u32 r8, r8, r13")
-        .op(format!("[w1,d0] sto r4, (r8)+{}", 2 * n2 - 1));
-    s.comment("dot j+1; prefetch column j+2");
-    s.op("dot r4, r1, r10")
-        .op("add.u32 r7, r7, r13")
-        .op(format!("lod r2, (r7)+{n2}"))
-        .op("add.u32 r8, r8, r13")
-        .op(format!("[w1,d0] sto r4, (r8)+{}", 2 * n2 - 1));
-    s.fence();
-    s.op("loop jloop");
-    s.op("add.u32 r5, r5, r12").op("sub.u32 r7, r7, r12");
-    s.fence();
-    s.op("loop iloop");
-    Kernel {
-        name: format!("mmm-dot-{n}"),
-        asm: s.finish(),
-        threads,
-        dim_x: threads,
-    }
+    let name = format!("mmm-dot-{n}");
+    let mut b = KernelBuilder::new(&name, threads, WordLayout::for_regs(32), MemoryMode::Dp);
+    b.comment("t = k-lane, arow = A addr, bcol = B addr, ci = C index + 1");
+    let t = b.tdx();
+    let cn = b.ldi(n as i64);
+    let one = b.ldi(1);
+    let csh = b.ldi(log2n as i64);
+    let bcol = b.shl_u(t, csh);
+    let ci = b.ldi(0);
+    let arow = b.add_u(t, ci);
+    b.init(n);
+    b.label("iloop");
+    b.comment("row of A in registers; prologue-load B column 0");
+    let a = b.lod(arow, 0);
+    let b0 = b.lod(bcol, n2);
+    b.init(n / 2);
+    b.label("jloop");
+    b.comment("dot j; prefetch column j+1 inside the writeback window");
+    let d1 = b.dot(a, b0);
+    b.add_u_into(bcol, bcol, one);
+    let b1 = b.lod(bcol, n2);
+    b.add_u_into(ci, ci, one);
+    b.space(ThreadCtrl::MCU);
+    b.sto(d1, ci, 2 * n2 - 1);
+    b.full();
+    b.comment("dot j+1; prefetch column j+2");
+    let d2 = b.dot(a, b1);
+    b.add_u_into(bcol, bcol, one);
+    b.lod_into(b0, bcol, n2);
+    b.add_u_into(ci, ci, one);
+    b.space(ThreadCtrl::MCU);
+    b.sto(d2, ci, 2 * n2 - 1);
+    b.full();
+    b.loop_("jloop");
+    b.add_u_into(arow, arow, cn);
+    b.sub_u_into(bcol, bcol, cn);
+    b.loop_("iloop");
+    b.stop();
+    Kernel::from_compiled(name, b.finish(mode).unwrap(), threads, threads)
 }
 
 /// Oracle: FP32 matmul in the kernel's accumulation order is not bit-exact
@@ -254,18 +260,19 @@ mod tests {
     }
 
     #[test]
-    fn cycle_counts_in_paper_band() {
-        // Table 7 eGPU-DP: 111546 / 451066 / 2342356 for n = 32/64/128;
-        // eGPU-Dot: 19800 / 84425 / 886452.
+    fn cycle_counts_at_or_below_paper() {
+        // Table 7 eGPU-DP: 111546 / 451066 for n = 32/64; eGPU-Dot:
+        // 19800 / 84425. Upper bound only — the list scheduler may beat
+        // the paper's hand schedules.
         for (n, paper) in [(32usize, 111_546u64), (64, 451_066)] {
             let c = check(mmm(n), &config(n, MemoryMode::Dp, false), n);
             let r = c as f64 / paper as f64;
-            assert!((0.4..=2.0).contains(&r), "tree n={n}: {c} vs {paper} ({r:.2}x)");
+            assert!(r <= 2.0, "tree n={n}: {c} vs {paper} ({r:.2}x)");
         }
         for (n, paper) in [(32usize, 19_800u64), (64, 84_425)] {
             let c = check(mmm_dot(n), &config(n, MemoryMode::Dp, true), n);
             let r = c as f64 / paper as f64;
-            assert!((0.4..=2.0).contains(&r), "dot n={n}: {c} vs {paper} ({r:.2}x)");
+            assert!(r <= 2.0, "dot n={n}: {c} vs {paper} ({r:.2}x)");
         }
     }
 

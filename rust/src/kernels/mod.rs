@@ -1,18 +1,25 @@
-//! The paper's benchmark kernels as eGPU assembly generators (§7).
+//! The paper's benchmark kernels as compiled eGPU programs (§7).
 //!
-//! "All benchmarks were written in assembly code (we have not written our
-//! compiler yet)" — these generators emit that assembly, parameterized by
-//! problem size and memory organization, using the paper's techniques:
+//! The paper wrote these by hand: "All benchmarks were written in assembly
+//! code (we have not written our compiler yet)". This repo *has* written
+//! that compiler ([`crate::kc`]): each generator here builds its kernel
+//! through [`crate::kc::KernelBuilder`] — typed IR over virtual registers —
+//! and the compiler derives the NOP schedule from the machine's own hazard
+//! model (`sim::hazard`), list-scheduling independent instructions into
+//! the interlock-free 8-stage pipeline's delay slots instead of padding
+//! them. The paper's techniques survive unchanged:
 //!
 //! - dynamic thread-space narrowing for reduction trees (§3.1),
-//! - NOP scheduling to cover the interlock-free 8-stage pipeline when the
-//!   wavefront depth is too shallow to hide latency (§3, Figure 6),
+//! - delay-slot covering where the wavefront depth is too shallow to hide
+//!   latency (§3, Figure 6) — now filled with useful work where possible,
 //! - predicates only where data-dependent decisions exist (bitonic sort),
 //! - loop constructs in the sequencer everywhere else.
 //!
 //! Each generator also states its runtime thread count and a rust oracle
 //! for correctness; `rust/tests/benchmark_correctness.rs` runs every
-//! kernel against its oracle, and the Table 7/8 benches report cycles.
+//! kernel against its oracle, `rust/tests/kc_schedule.rs` pins every
+//! scheduled kernel bit-identical to its schedule-disabled (fenced) build,
+//! and the Table 7/8 benches report cycles.
 
 pub mod bitonic;
 pub mod fft;
@@ -23,7 +30,8 @@ pub mod sched;
 pub mod transpose;
 
 use crate::asm::{assemble, Program};
-use crate::isa::{DepthSel, WAVEFRONT_WIDTH};
+use crate::isa::DepthSel;
+use crate::kc;
 use crate::sim::config::EgpuConfig;
 use crate::sim::{Machine, RunStats, SimError};
 
@@ -31,17 +39,69 @@ use crate::sim::{Machine, RunStats, SimError};
 #[derive(Debug, Clone)]
 pub struct Kernel {
     pub name: String,
-    /// eGPU assembly source.
+    /// eGPU assembly listing (kc kernels: the compiler's pretty-printed
+    /// form, which reassembles to exactly `program`). **Precedence:**
+    /// when `program` is present and its word layout matches the target
+    /// configuration, [`Kernel::assemble`] and `Gpu::launch` use the
+    /// program and ignore this text — to run modified assembly, build a
+    /// fresh kernel with [`Kernel::from_asm`].
     pub asm: String,
     /// Runtime-initialized threads the kernel expects.
     pub threads: usize,
     /// TDx grid x-dimension.
     pub dim_x: usize,
+    /// Directly lowered program with issue plans attached (kc kernels;
+    /// `None` for hand-written assembly). Takes precedence over `asm` on
+    /// matching layouts — see the `asm` field note.
+    pub program: Option<Program>,
+    /// Static-schedule statistics (kc kernels).
+    pub sched: Option<kc::ScheduleStats>,
 }
 
 impl Kernel {
-    /// Assemble against a configuration's word layout.
+    /// A kernel from raw assembly text (user programs, the CLI).
+    pub fn from_asm(
+        name: impl Into<String>,
+        asm: impl Into<String>,
+        threads: usize,
+        dim_x: usize,
+    ) -> Kernel {
+        Kernel {
+            name: name.into(),
+            asm: asm.into(),
+            threads,
+            dim_x,
+            program: None,
+            sched: None,
+        }
+    }
+
+    /// A kernel from a compiled build (program + listing + stats).
+    pub fn from_compiled(
+        name: impl Into<String>,
+        c: kc::Compiled,
+        threads: usize,
+        dim_x: usize,
+    ) -> Kernel {
+        Kernel {
+            name: name.into(),
+            asm: c.asm,
+            threads,
+            dim_x,
+            program: Some(c.program),
+            sched: Some(c.stats),
+        }
+    }
+
+    /// The program for a configuration: the directly lowered program when
+    /// its word layout matches (no string round-trip), otherwise assembled
+    /// from the listing against the configuration's layout.
     pub fn assemble(&self, cfg: &EgpuConfig) -> Result<Program, String> {
+        if let Some(p) = &self.program {
+            if p.layout == cfg.word_layout() {
+                return Ok(p.clone());
+            }
+        }
         assemble(&self.asm, cfg.word_layout()).map_err(|e| format!("{}: {e}", self.name))
     }
 
@@ -63,87 +123,6 @@ impl Kernel {
         }
         let report = gpu.launch(self).run()?;
         Ok((report.stats, gpu.into_machine()))
-    }
-}
-
-/// Emission helper shared by the generators.
-pub struct AsmWriter {
-    out: String,
-    /// Current wavefront count of full-depth ops (for NOP scheduling).
-    waves: usize,
-}
-
-/// Hazard window the NOP scheduler covers (sim::hazard::REG_WINDOW).
-const WINDOW: usize = 6;
-
-impl AsmWriter {
-    pub fn new(name: &str, threads: usize) -> AsmWriter {
-        AsmWriter {
-            out: format!("; {name} — generated eGPU assembly ({threads} threads)\n"),
-            waves: threads / WAVEFRONT_WIDTH,
-        }
-    }
-
-    /// Emit one instruction line.
-    pub fn op(&mut self, line: impl AsRef<str>) -> &mut Self {
-        self.out.push_str("    ");
-        self.out.push_str(line.as_ref());
-        self.out.push('\n');
-        self
-    }
-
-    pub fn label(&mut self, name: &str) -> &mut Self {
-        self.out.push_str(name);
-        self.out.push_str(":\n");
-        self
-    }
-
-    pub fn comment(&mut self, text: &str) -> &mut Self {
-        self.out.push_str("    ; ");
-        self.out.push_str(text);
-        self.out.push('\n');
-        self
-    }
-
-    /// NOPs to cover a RAW dependency after an op that issued for
-    /// `writer_waves` wavefronts (§3: no hardware interlocks — "hazards
-    /// are hidden for most programs"; shallow subsets need NOPs).
-    pub fn pad(&mut self, writer_waves: usize) -> &mut Self {
-        for _ in 0..WINDOW.saturating_sub(writer_waves.max(1)) {
-            self.op("nop");
-        }
-        self
-    }
-
-    /// NOPs covering a store→load turnaround on the same addresses
-    /// (sim::hazard::MEM_WINDOW: writes land shortly after their last
-    /// arbitration slot regardless of depth).
-    pub fn pad_mem(&mut self) -> &mut Self {
-        for _ in 0..crate::sim::hazard::MEM_WINDOW {
-            self.op("nop");
-        }
-        self
-    }
-
-    /// NOPs after a full-depth op.
-    pub fn pad_full(&mut self) -> &mut Self {
-        let w = self.waves;
-        self.pad(w)
-    }
-
-    /// NOPs covering an extension-core writeback (DOT/SUM latency).
-    pub fn pad_dot(&mut self, writer_waves: usize) -> &mut Self {
-        let need = (crate::sim::hazard::DOT_WINDOW as usize + writer_waves)
-            .saturating_sub(writer_waves.max(1));
-        for _ in 0..need {
-            self.op("nop");
-        }
-        self
-    }
-
-    pub fn finish(mut self) -> String {
-        self.out.push_str("    stop\n");
-        self.out
     }
 }
 
@@ -176,6 +155,7 @@ pub fn i32_bits(v: &[i32]) -> Vec<u32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::isa::WAVEFRONT_WIDTH;
 
     #[test]
     fn depth_selection() {
@@ -187,19 +167,10 @@ mod tests {
     }
 
     #[test]
-    fn writer_emits_and_pads() {
-        let mut w = AsmWriter::new("t", 32); // 2 waves
-        w.op("tdx r0").pad_full().op("lod r1, (r0)+0");
-        let s = w.finish();
-        // 6-2 = 4 nops between the dependent pair.
-        assert_eq!(s.matches("nop").count(), 4);
-        assert!(s.ends_with("stop\n"));
-    }
-
-    #[test]
-    fn deep_machines_need_no_padding() {
-        let mut w = AsmWriter::new("t", 512); // 32 waves
-        w.op("tdx r0").pad_full().op("lod r1, (r0)+0");
-        assert_eq!(w.finish().matches("nop").count(), 0);
+    fn asm_kernels_have_no_program() {
+        let k = Kernel::from_asm("t", "nop\nstop\n", WAVEFRONT_WIDTH, WAVEFRONT_WIDTH);
+        assert!(k.program.is_none() && k.sched.is_none());
+        let cfg = EgpuConfig::default();
+        assert_eq!(k.assemble(&cfg).unwrap().len(), 2);
     }
 }

@@ -1,16 +1,24 @@
-//! Cycle-tracking assembly emitter.
+//! Cycle-tracking assembly emitter (legacy string front-end).
 //!
-//! The eGPU pipeline has no interlocks (§3), so the "compiler" — here, the
-//! kernel generators — must insert the NOPs a hand-assembling programmer
-//! would. [`Sched`] mirrors the machine's issue-cost and hazard-window
-//! model (`sim::machine` / `sim::hazard`) instruction by instruction and
-//! pads automatically, so generated programs are hazard-free by
-//! construction and `estimated_cycles` matches the simulator exactly for
-//! straight-line programs.
+//! The eGPU pipeline has no interlocks (§3), so a program emitter must
+//! insert the NOPs a hand-assembling programmer would. [`Sched`] mirrors
+//! the machine's issue-cost and hazard-window model (`sim::hazard` /
+//! `sim::machine`) instruction by instruction and pads automatically, so
+//! emitted programs are hazard-free by construction and
+//! `estimated_cycles` matches the simulator exactly for straight-line
+//! programs.
 //!
-//! Control flow (JSR/LOOP) breaks the linear cycle model; generators call
-//! [`Sched::fence`] at call sites and loop back-edges, which waits out
-//! every pending window and therefore restores exactness conservatively.
+//! The benchmark kernels no longer use this: they build through the
+//! kernel compiler ([`crate::kc::KernelBuilder`]), which *fills* delay
+//! slots by list scheduling instead of only padding them. `Sched` remains
+//! as the string-level emitter for hand-written/randomized programs (the
+//! property tests in `rust/tests/asm_sim_properties.rs` lean on it).
+//!
+//! Control flow (JMP/JSR/RTS/LOOP) breaks the linear cycle model, so
+//! [`Sched::op`] fences automatically at every control transfer — pending
+//! windows are waited out before the transfer issues. (Historically this
+//! was the caller's job via [`Sched::fence`]; a generator that forgot it
+//! could under-pad a loop back-edge without any test noticing.)
 
 use crate::asm::assemble;
 use crate::isa::opcode::OperandShape;
@@ -24,7 +32,7 @@ pub struct Sched {
     layout: WordLayout,
     /// Initialized wavefronts of the target machine (threads / 16).
     total_waves: usize,
-    write_ports: usize,
+    memory: MemoryMode,
     cycle: u64,
     reg_ready: Vec<u64>,
     /// Coarse store→load turnaround: one global ready cycle (the machine
@@ -40,7 +48,7 @@ impl Sched {
             out: format!("; {name} — generated eGPU assembly ({threads} threads)\n"),
             layout,
             total_waves: threads / 16,
-            write_ports: memory.write_ports(),
+            memory,
             cycle: 0,
             reg_ready: vec![0; layout.max_reg() as usize + 1],
             mem_ready: 0,
@@ -85,6 +93,10 @@ impl Sched {
         // register operands, so handle them without parsing.
         let mnemonic = line.trim_start().split_whitespace().next().unwrap_or("");
         if matches!(mnemonic, "jmp" | "jsr" | "loop") {
+            // Control transfers invalidate the linear hazard model:
+            // settle every pending window first so the destination (a
+            // subroutine, a loop header) starts from a clean pipeline.
+            self.fence();
             self.out.push_str("    ");
             self.out.push_str(line);
             self.out.push('\n');
@@ -92,6 +104,11 @@ impl Sched {
             return self;
         }
         let i = self.parse(line);
+        if i.op.group() == Group::Control && !matches!(i.op, Opcode::Init | Opcode::Stop) {
+            // RTS (and numeric-target branches): same control-transfer
+            // settle as the label-target path above.
+            self.fence();
+        }
         let waves = i.tc.depth.waves(self.total_waves) as u64;
         let lanes = i.tc.width.lanes() as u64;
         let selected = waves * lanes;
@@ -125,14 +142,15 @@ impl Sched {
             self.raw_nop();
         }
 
-        // Issue cost (mirrors Machine's cycle charges).
+        // Issue cost (the machine's own charge formulas — shared, not
+        // mirrored: MemoryMode::load_cycles/store_cycles back SharedMem).
         let cost = match i.op.group() {
             Group::Nop | Group::Control => 1,
             Group::Memory => {
                 if i.op == Opcode::Lod {
-                    selected.div_ceil(4).max(1)
+                    self.memory.load_cycles(selected as usize)
                 } else {
-                    selected.div_ceil(self.write_ports as u64).max(1)
+                    self.memory.store_cycles(selected as usize)
                 }
             }
             _ => waves,
@@ -291,5 +309,50 @@ mod tests {
     fn bad_asm_panics() {
         let mut s = Sched::new("t", 16, layout(), MemoryMode::Dp);
         s.op("frobnicate r1");
+    }
+
+    /// Regression for the control-flow hole: JMP/JSR/LOOP used to bypass
+    /// hazard tracking entirely, so an emitter could under-pad a branch
+    /// target's first read without any test noticing. Control transfers
+    /// now settle automatically.
+    #[test]
+    fn control_ops_auto_fence() {
+        // A 1-cycle writer immediately before a JSR whose subroutine
+        // reads it: the fence must insert the full window.
+        let mut s = Sched::new("t", 16, layout(), MemoryMode::Dp);
+        s.op("[w1,d0] ldi r1, #1");
+        s.op("jsr sub");
+        s.op("stop");
+        s.label("sub");
+        s.op("[w1,d0] add.u32 r2, r1, r1");
+        s.op("rts");
+        let nops = s.nops_inserted();
+        assert!(nops >= 5, "expected an auto-fence before jsr, got {nops} nops");
+        let src = s.into_source();
+        let mut m = Machine::new(EgpuConfig::default()).unwrap();
+        m.set_threads(16).unwrap();
+        m.load_program(assemble(&src, layout()).unwrap()).unwrap();
+        let stats = m.run(100_000).unwrap();
+        assert_eq!(stats.hazards, 0, "{:?}\n{src}", stats.hazard_samples);
+    }
+
+    /// Same for a LOOP back-edge: the body's trailing writer must be
+    /// settled before the branch re-enters the header.
+    #[test]
+    fn loop_back_edge_auto_fences() {
+        let mut s = Sched::new("t", 16, layout(), MemoryMode::Dp);
+        s.op("ldi r1, #0");
+        s.op("init #3");
+        s.label("body");
+        s.op("[w1,d0] add.u32 r1, r1, r1");
+        s.op("loop body");
+        let nops = s.nops_inserted();
+        assert!(nops >= 5, "expected an auto-fence before loop, got {nops} nops");
+        let src = s.finish();
+        let mut m = Machine::new(EgpuConfig::default()).unwrap();
+        m.set_threads(16).unwrap();
+        m.load_program(assemble(&src, layout()).unwrap()).unwrap();
+        let stats = m.run(100_000).unwrap();
+        assert_eq!(stats.hazards, 0, "{:?}\n{src}", stats.hazard_samples);
     }
 }

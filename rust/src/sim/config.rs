@@ -35,6 +35,20 @@ impl MemoryMode {
         4
     }
 
+    /// Issue charge for a LOD over `selected` lanes. The single
+    /// authoritative formula: `SharedMem::load_cycles` (the machine's
+    /// charge) and the kernel compiler's cost model both call this.
+    pub fn load_cycles(self, selected: usize) -> u64 {
+        (selected as u64).div_ceil(self.read_ports() as u64).max(1)
+    }
+
+    /// Issue charge for a STO over `selected` lanes (1 DP / 2 QP write
+    /// ports); shared by the machine and the kernel compiler like
+    /// [`MemoryMode::load_cycles`].
+    pub fn store_cycles(self, selected: usize) -> u64 {
+        (selected as u64).div_ceil(self.write_ports() as u64).max(1)
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             MemoryMode::Dp => "DP",

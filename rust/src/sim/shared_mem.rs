@@ -85,12 +85,12 @@ impl SharedMem {
 
     /// Cycles to read `lanes` values (4 read ports/cycle, both modes).
     pub fn load_cycles(&self, lanes: usize) -> u64 {
-        (lanes as u64).div_ceil(self.mode.read_ports() as u64).max(1)
+        self.mode.load_cycles(lanes)
     }
 
     /// Cycles to write `lanes` values (1 DP / 2 QP write ports).
     pub fn store_cycles(&self, lanes: usize) -> u64 {
-        (lanes as u64).div_ceil(self.mode.write_ports() as u64).max(1)
+        self.mode.store_cycles(lanes)
     }
 
     /// Bulk host access (data is loaded/unloaded externally, §2: "the

@@ -106,9 +106,16 @@ fn queue_of_many_jobs_is_stable() {
 #[test]
 fn failure_injection_bad_kernel_surfaces_error() {
     // A kernel whose program faults (OOB store) must return Err from
-    // run_all, not corrupt the coordinator.
-    let mut k = reduction::reduction(32);
-    k.asm = "ldi r0, #-2\nnop\nnop\nnop\nnop\nnop\nnop\nsto r0, (r0)+0\nstop\n".into();
+    // run_all, not corrupt the coordinator. Built from raw asm: compiled
+    // kernels carry their lowered program, which `assemble` prefers, so
+    // mutating `asm` on one would be ignored.
+    let base = reduction::reduction(32);
+    let k = egpu::kernels::Kernel::from_asm(
+        base.name,
+        "ldi r0, #-2\nnop\nnop\nnop\nnop\nnop\nnop\nsto r0, (r0)+0\nstop\n",
+        base.threads,
+        base.dim_x,
+    );
     let mut c = Coordinator::new(cfg(), 1).unwrap();
     c.submit(Job::new(k));
     let err = c.run_all().unwrap_err();

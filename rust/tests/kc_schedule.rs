@@ -1,0 +1,471 @@
+//! Kernel-compiler correctness pinning, the way PR 2 pinned the
+//! issue-plan engine:
+//!
+//! - For every benchmark kernel, the list-scheduled build and the
+//!   fully-fenced (schedule-disabled) build produce bit-identical
+//!   registers and shared memory through `Machine::run`, report zero
+//!   hazards, and the scheduled build never exceeds the fenced cycle
+//!   count.
+//! - The pretty-printed listing reassembles to exactly the lowered
+//!   program (no string round-trip is needed, but the text form must not
+//!   drift from the binary form).
+//! - A randomized-DAG property sweep (predicated and narrowed `[wN,dN]`
+//!   instructions included) holds the same invariants on generated
+//!   programs.
+//! - At shallow configurations, list scheduling beats in-order padding on
+//!   modeled cycles for several kernels (the delay slots get filled).
+
+use egpu::asm::assemble;
+use egpu::harness::Rng;
+use egpu::isa::{CondCode, DepthSel, TType, ThreadCtrl, WidthSel, WordLayout};
+use egpu::kc::{KernelBuilder, SchedMode};
+use egpu::kernels::{bitonic, f32_bits, fft, fft4, mmm, reduction, transpose, Kernel};
+use egpu::sim::{EgpuConfig, Machine, MemoryMode};
+
+/// Full architectural state: every register of every thread, all of
+/// shared memory.
+fn state(m: &Machine) -> (Vec<u32>, Vec<u32>) {
+    let threads = m.regs().threads();
+    let rpt = m.regs().regs_per_thread();
+    let regs = (0..threads)
+        .flat_map(|t| (0..rpt as u8).map(move |r| (t, r)))
+        .map(|(t, r)| m.regs().read_thread(t, r))
+        .collect();
+    let mem = m.shared().read_block(0, m.shared().len()).to_vec();
+    (regs, mem)
+}
+
+/// Run one kernel build and return (stats, full state).
+fn run(k: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)]) -> (u64, (Vec<u32>, Vec<u32>)) {
+    let (stats, m) = k.run(cfg, init).unwrap_or_else(|e| panic!("{}: {e}", k.name));
+    assert_eq!(
+        stats.hazards, 0,
+        "{}: hazards {:?}\n{}",
+        k.name, stats.hazard_samples, k.asm
+    );
+    (stats.cycles, state(&m))
+}
+
+/// The tentpole invariant for one kernel: scheduled ≡ fenced bit-for-bit,
+/// scheduled cycles ≤ fenced cycles; the listing reassembles to the
+/// lowered program.
+fn assert_schedule_identity(
+    build: impl Fn(SchedMode) -> Kernel,
+    cfg: &EgpuConfig,
+    init: &[(usize, Vec<u32>)],
+) {
+    let list = build(SchedMode::List);
+    let fenced = build(SchedMode::Fenced);
+    let (cy_list, st_list) = run(&list, cfg, init);
+    let (cy_fen, st_fen) = run(&fenced, cfg, init);
+    assert!(
+        cy_list <= cy_fen,
+        "{}: scheduled {cy_list} cycles > fenced {cy_fen}",
+        list.name
+    );
+    assert_eq!(st_list.0, st_fen.0, "{}: register files diverge", list.name);
+    assert_eq!(st_list.1, st_fen.1, "{}: shared memory diverges", list.name);
+
+    let prog = list.program.as_ref().expect("compiled kernel carries its program");
+    let re = assemble(&list.asm, prog.layout).unwrap_or_else(|e| panic!("{}: {e}", list.name));
+    assert_eq!(prog.instrs, re.instrs, "{}: listing drifts from program", list.name);
+    assert_eq!(prog.words, re.words, "{}: encodings drift", list.name);
+}
+
+#[test]
+fn reduction_scheduled_matches_fenced() {
+    let mut rng = Rng::new(0xE1);
+    for n in [32usize, 128] {
+        let d: Vec<f32> = (0..n).map(|_| rng.f32_in(-4.0, 4.0)).collect();
+        let init = vec![(0usize, f32_bits(&d))];
+        assert_schedule_identity(
+            |m| reduction::reduction_mode(n, m),
+            &EgpuConfig::benchmark(MemoryMode::Dp, false),
+            &init,
+        );
+    }
+}
+
+#[test]
+fn reduction_dot_scheduled_matches_fenced() {
+    let mut rng = Rng::new(0xE2);
+    let n = 64;
+    let d: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    let init = vec![(0usize, f32_bits(&d))];
+    assert_schedule_identity(
+        |m| reduction::reduction_dot_mode(n, m),
+        &EgpuConfig::benchmark(MemoryMode::Dp, true),
+        &init,
+    );
+}
+
+#[test]
+fn reduction_predicated_scheduled_matches_fenced() {
+    let mut rng = Rng::new(0xE3);
+    let n = 64;
+    let d: Vec<f32> = (0..n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+    let init = vec![(0usize, f32_bits(&d))];
+    assert_schedule_identity(
+        |m| reduction::reduction_predicated_mode(n, m),
+        &EgpuConfig::benchmark_predicated(MemoryMode::Dp),
+        &init,
+    );
+}
+
+#[test]
+fn transpose_scheduled_matches_fenced() {
+    let mut rng = Rng::new(0xE4);
+    let n = 32;
+    let d: Vec<u32> = (0..n * n).map(|_| rng.next_u32()).collect();
+    let init = vec![(0usize, d)];
+    for memory in [MemoryMode::Dp, MemoryMode::Qp] {
+        assert_schedule_identity(
+            |m| transpose::transpose_mode(n, memory, m),
+            &EgpuConfig::benchmark(memory, false),
+            &init,
+        );
+    }
+}
+
+#[test]
+fn mmm_scheduled_matches_fenced() {
+    let mut rng = Rng::new(0xE5);
+    let n = 32;
+    let a: Vec<f32> = (0..n * n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+    let init = vec![(0usize, f32_bits(&a)), (n * n, f32_bits(&b))];
+    assert_schedule_identity(
+        |m| mmm::mmm_mode(n, MemoryMode::Dp, m),
+        &mmm::config(n, MemoryMode::Dp, false),
+        &init,
+    );
+    assert_schedule_identity(
+        |m| mmm::mmm_dot_mode(n, m),
+        &mmm::config(n, MemoryMode::Dp, true),
+        &init,
+    );
+}
+
+#[test]
+fn bitonic_scheduled_matches_fenced() {
+    let mut rng = Rng::new(0xE6);
+    let n = 64;
+    let d: Vec<u32> = (0..n).map(|_| rng.next_u32() >> 2).collect();
+    let init = vec![(0usize, d)];
+    assert_schedule_identity(
+        |m| bitonic::bitonic_mode(n, MemoryMode::Dp, m),
+        &EgpuConfig::benchmark_predicated(MemoryMode::Dp),
+        &init,
+    );
+}
+
+#[test]
+fn fft_scheduled_matches_fenced() {
+    let mut rng = Rng::new(0xE7);
+    let n = 64;
+    let re: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    let im: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    let init = fft::shared_init(&re, &im);
+    assert_schedule_identity(
+        |m| fft::fft_mode(n, MemoryMode::Dp, m),
+        &EgpuConfig::benchmark(MemoryMode::Dp, false),
+        &init,
+    );
+}
+
+#[test]
+fn fft4_scheduled_matches_fenced() {
+    let mut rng = Rng::new(0xE8);
+    let n = 64;
+    let re: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    let im: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    let init = fft4::shared_init(&re, &im);
+    assert_schedule_identity(
+        |m| fft4::fft4_mode(n, MemoryMode::Dp, m),
+        &EgpuConfig::benchmark(MemoryMode::Dp, false),
+        &init,
+    );
+}
+
+#[test]
+fn shallow_kernels_fill_delay_slots() {
+    // Acceptance: at shallow configurations (16-64 threads) at least two
+    // kernels show a measured modeled-cycle reduction of list scheduling
+    // over in-order padding. (The same numbers land in
+    // BENCH_simulator.json's "static_schedule" section.)
+    fn f32v(rng: &mut Rng, n: usize) -> Vec<u32> {
+        let v: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+        f32_bits(&v)
+    }
+    let mut rng = Rng::new(0xE9);
+    let base = EgpuConfig::benchmark(MemoryMode::Dp, false);
+    let pred = EgpuConfig::benchmark_predicated(MemoryMode::Dp);
+    let v32 = f32v(&mut rng, 32);
+    let m32: Vec<u32> = (0..32 * 32).map(|_| rng.next_u32()).collect();
+    let a32 = f32v(&mut rng, 32 * 32);
+    let b32 = f32v(&mut rng, 32 * 32);
+    let s64: Vec<u32> = (0..64).map(|_| rng.next_u32()).collect();
+    let re64: Vec<f32> = (0..64).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+    let im64 = vec![0f32; 64];
+
+    type BuildFn = Box<dyn Fn(SchedMode) -> Kernel>;
+    let cases: Vec<(BuildFn, EgpuConfig, Vec<(usize, Vec<u32>)>)> = vec![
+        (
+            Box::new(|m| reduction::reduction_mode(32, m)) as BuildFn,
+            base.clone(),
+            vec![(0, v32)],
+        ),
+        (
+            Box::new(|m| transpose::transpose_mode(32, MemoryMode::Dp, m)),
+            base.clone(),
+            vec![(0, m32)],
+        ),
+        (
+            Box::new(|m| mmm::mmm_mode(32, MemoryMode::Dp, m)),
+            mmm::config(32, MemoryMode::Dp, false),
+            vec![(0, a32), (32 * 32, b32)],
+        ),
+        (
+            Box::new(|m| bitonic::bitonic_mode(64, MemoryMode::Dp, m)),
+            pred,
+            vec![(0, s64)],
+        ),
+        (
+            Box::new(|m| fft::fft_mode(64, MemoryMode::Dp, m)),
+            base.clone(),
+            fft::shared_init(&re64, &im64),
+        ),
+        (
+            Box::new(|m| fft4::fft4_mode(64, MemoryMode::Dp, m)),
+            base,
+            fft4::shared_init(&re64, &im64),
+        ),
+    ];
+    let mut wins = 0usize;
+    let mut report = String::new();
+    for (build, cfg, init) in &cases {
+        let list = build(SchedMode::List);
+        let linear = build(SchedMode::Linear);
+        let (cy_list, _) = run(&list, cfg, init);
+        let (cy_lin, _) = run(&linear, cfg, init);
+        assert!(
+            cy_list <= cy_lin,
+            "{}: list {cy_list} > linear {cy_lin}",
+            list.name
+        );
+        report.push_str(&format!("{}: list {cy_list} vs padded {cy_lin}\n", list.name));
+        if cy_list < cy_lin {
+            wins += 1;
+        }
+    }
+    assert!(
+        wins >= 2,
+        "expected >= 2 kernels with a modeled-cycle reduction, got {wins}:\n{report}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Randomized-DAG property sweep (in the style of asm_sim_properties.rs).
+// ---------------------------------------------------------------------
+
+fn random_tc(rng: &mut Rng) -> ThreadCtrl {
+    let w = *rng.choose(&[WidthSel::All16, WidthSel::Quarter4, WidthSel::Sp0]);
+    let d = *rng.choose(&[
+        DepthSel::Wave0,
+        DepthSel::All,
+        DepthSel::Half,
+        DepthSel::Quarter,
+    ]);
+    ThreadCtrl::new(w, d)
+}
+
+/// A generated value plus what it *deterministically* covers: the thread
+/// rectangle its first definition wrote, and the predicate-region path it
+/// was defined under. A read is only deterministic (identical across
+/// schedule modes and register assignments) when every lane it touches
+/// was written by this value — lanes outside the def's coverage hold
+/// whatever previously occupied the physical register, which is an
+/// allocation artifact, not program semantics.
+#[derive(Clone)]
+struct GenVal {
+    v: egpu::kc::V,
+    lanes: usize,
+    waves: usize,
+    /// Predicate-region path at definition (empty = unpredicated).
+    path: Vec<u32>,
+}
+
+/// Random straight-line-with-predicates program built through the
+/// compiler IR: ALU chains, loads/stores, `_into` redefinitions,
+/// IF/ELSE/ENDIF regions, random `[wN,dN]` narrowing. The same seed
+/// yields the same program in every mode. Operand choice respects
+/// coverage (see [`GenVal`]) so results are well-defined — which is also
+/// the discipline the real kernels follow.
+fn random_kernel(seed: u64, threads: usize, len: usize, mode: SchedMode) -> Kernel {
+    let total_waves = threads / 16;
+    let mut rng = Rng::new(seed);
+    let mut b = KernelBuilder::new("prop", threads, WordLayout::for_regs(32), MemoryMode::Dp);
+    let t = b.tdx();
+    let t_val = GenVal {
+        v: t,
+        lanes: 16,
+        waves: total_waves,
+        path: Vec::new(),
+    };
+    // Operands come from a small rolling window so register pressure
+    // stays bounded no matter the program length.
+    let mut recent: Vec<GenVal> = vec![t_val.clone()];
+    let mut path: Vec<u32> = Vec::new();
+    let mut next_region = 0u32;
+    let pick = |rng: &mut Rng,
+                recent: &[GenVal],
+                t_val: &GenVal,
+                lanes: usize,
+                waves: usize,
+                path: &[u32]| {
+        let window = &recent[recent.len().saturating_sub(8)..];
+        let cands: Vec<&GenVal> = window
+            .iter()
+            .filter(|g| g.lanes >= lanes && g.waves >= waves && path.starts_with(&g.path))
+            .collect();
+        if cands.is_empty() {
+            t_val.clone()
+        } else {
+            (*rng.choose(&cands)).clone()
+        }
+    };
+    let mut depth = 0usize;
+    for _ in 0..len {
+        let tc = random_tc(&mut rng);
+        let (lanes, waves) = (tc.width.lanes(), tc.depth.waves(total_waves));
+        b.space(tc);
+        let push = |recent: &mut Vec<GenVal>, v: egpu::kc::V, path: &[u32]| {
+            recent.push(GenVal {
+                v,
+                lanes,
+                waves,
+                path: path.to_vec(),
+            });
+        };
+        match rng.below(14) {
+            0 => {
+                let a = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                let c = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                let v = b.add_u(a.v, c.v);
+                push(&mut recent, v, &path);
+            }
+            1 => {
+                let a = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                let c = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                let v = b.op2(egpu::isa::Opcode::Sub, TType::Uint, a.v, c.v);
+                push(&mut recent, v, &path);
+            }
+            2 => {
+                let a = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                let c = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                let v = b.xor_i(a.v, c.v);
+                push(&mut recent, v, &path);
+            }
+            3 => {
+                let a = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                let c = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                let v = b.fadd(a.v, c.v);
+                push(&mut recent, v, &path);
+            }
+            4 => {
+                let a = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                let c = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                let v = b.fmul(a.v, c.v);
+                push(&mut recent, v, &path);
+            }
+            5 => {
+                let v = b.ldi(rng.range_i64(-200, 200));
+                push(&mut recent, v, &path);
+            }
+            6 => {
+                // Partial redefinition of a live value (WAW/WAR edges).
+                // The target keeps its recorded coverage: lanes the new
+                // def misses retain the value's own older data, which is
+                // still deterministic. Never redefine `t` (the address
+                // anchor).
+                let d = pick(&mut rng, &recent, &t_val, 1, 1, &path);
+                let a = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                let c = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                if d.v != t {
+                    b.add_u_into(d.v, a.v, c.v);
+                } else {
+                    let v = b.add_u(a.v, c.v);
+                    push(&mut recent, v, &path);
+                }
+            }
+            7 | 8 => {
+                let v = b.lod(t, rng.below(64) * 8);
+                push(&mut recent, v, &path);
+            }
+            9 | 10 => {
+                let v = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                b.sto(v.v, t, 2048 + rng.below(64) * 8);
+            }
+            11 if depth < 5 => {
+                // Predicate ops run over the full thread space so pushes
+                // and pops stay balanced for every thread.
+                let a = pick(&mut rng, &recent, &t_val, 16, total_waves, &path);
+                let c = pick(&mut rng, &recent, &t_val, 16, total_waves, &path);
+                let cc = *rng.choose(&CondCode::ALL);
+                b.full().if_cc(cc, TType::Uint, a.v, c.v);
+                depth += 1;
+                next_region += 1;
+                path.push(next_region);
+            }
+            12 if depth > 0 => {
+                b.full().else_();
+                next_region += 1;
+                *path.last_mut().unwrap() = next_region;
+            }
+            13 if depth > 0 => {
+                b.full().endif();
+                depth -= 1;
+                path.pop();
+            }
+            _ => {
+                let a = pick(&mut rng, &recent, &t_val, lanes, waves, &path);
+                let v = b.op1(egpu::isa::Opcode::Neg, TType::Int, a.v);
+                push(&mut recent, v, &path);
+            }
+        }
+    }
+    b.full();
+    for _ in 0..depth {
+        b.endif();
+    }
+    b.stop();
+    Kernel::from_compiled("prop", b.finish(mode).unwrap(), threads, threads)
+}
+
+#[test]
+fn random_dags_scheduled_match_fenced() {
+    let mut rng = Rng::new(0x5C8D);
+    let cfg = EgpuConfig::default(); // 512 threads, predicates configured
+    for case in 0..60 {
+        let seed = rng.next_u64();
+        let threads = *rng.choose(&[16usize, 64, 256, 512]);
+        let len = 10 + rng.below(35);
+        let list = random_kernel(seed, threads, len, SchedMode::List);
+        let linear = random_kernel(seed, threads, len, SchedMode::Linear);
+        let fenced = random_kernel(seed, threads, len, SchedMode::Fenced);
+        let (cy_list, st_list) = run(&list, &cfg, &[]);
+        let (cy_lin, st_lin) = run(&linear, &cfg, &[]);
+        let (cy_fen, st_fen) = run(&fenced, &cfg, &[]);
+        assert!(
+            cy_list <= cy_lin && cy_lin <= cy_fen,
+            "case {case}: cycles not ordered: list {cy_list}, linear {cy_lin}, fenced {cy_fen}\n{}",
+            list.asm
+        );
+        assert_eq!(st_list, st_lin, "case {case}: list vs linear state\n{}", list.asm);
+        assert_eq!(st_list, st_fen, "case {case}: list vs fenced state\n{}", list.asm);
+        // Listing round-trip on the scheduled build.
+        let prog = list.program.as_ref().unwrap();
+        let re = assemble(&list.asm, prog.layout).unwrap();
+        assert_eq!(prog.instrs, re.instrs, "case {case}\n{}", list.asm);
+    }
+}
