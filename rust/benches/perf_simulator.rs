@@ -14,8 +14,8 @@
 //! `EGPU_BENCH_SAMPLES` overrides the per-case sample count (CI smoke
 //! runs use 1).
 
-use egpu::api::Gpu;
-use egpu::harness::{sim_rate, time, Rng, Table, Timing};
+use egpu::api::{FleetBuilder, Gpu, KernelCache};
+use egpu::harness::{demo_job_io, demo_specs, sim_rate, time, Rng, Table, Timing};
 use egpu::kc::SchedMode;
 use egpu::kernels::{bitonic, f32_bits, fft, fft4, mmm, reduction, transpose, Kernel};
 use egpu::sim::{EgpuConfig, MemoryMode};
@@ -249,6 +249,68 @@ fn main() {
     t2.print();
     println!();
 
+    // Heterogeneous fleet: a mixed kernel batch over 2 × 771 MHz DP
+    // (predicates + dot core) + 2 × 600 MHz QP cores — modeled
+    // throughput and per-core utilization of the feature-routed,
+    // wall-clock-aware dispatcher, plus the kernel cache's economics.
+    let fleet_json = {
+        let cache = KernelCache::shared();
+        let mut fleet = FleetBuilder::demo_mixed().kernel_cache(cache.clone()).build().unwrap();
+        let mut rng = Rng::new(0xF1EE7);
+        let specs = demo_specs(64);
+        let jobs = 12usize;
+        for j in 0..jobs {
+            let spec = specs[j % specs.len()];
+            let (loads, unloads) = demo_job_io(&spec, &mut rng);
+            let mut launch = fleet.launch_spec_any(spec).unwrap();
+            for (base, data) in loads {
+                launch = launch.input_words(base, data);
+            }
+            for (base, len) in unloads {
+                launch = launch.output(base, len);
+            }
+            launch.submit();
+        }
+        let reports = fleet.sync().unwrap();
+        let span_us = fleet.makespan_us();
+        let jobs_per_s = reports.len() as f64 / (span_us * 1e-6);
+        let util = fleet.core_utilization();
+        let stats = cache.stats();
+        let core_rows: Vec<String> = (0..fleet.num_cores())
+            .map(|c| {
+                format!(
+                    "      {{\"name\": {}, \"mhz\": {:.0}, \"jobs\": {}, \
+                     \"utilization\": {:.4}}}",
+                    json_str(&fleet.core_configs()[c].name),
+                    fleet.coordinator().core_mhz(c),
+                    reports.iter().filter(|r| r.core == c).count(),
+                    util[c],
+                )
+            })
+            .collect();
+        println!(
+            "heterogeneous fleet (2x771 DP + 2x600 QP, {jobs} mixed jobs): \
+             {jobs_per_s:.0} modeled jobs/s, {} kernel compiles for {} launches",
+            stats.compiles, jobs
+        );
+        assert!(
+            reports
+                .iter()
+                .filter(|r| r.requires.predicate_depth > 0 || r.requires.dot_core)
+                .all(|r| r.core < 2),
+            "feature routing must keep predicated/dot jobs on the DP cores"
+        );
+        format!(
+            "  \"fleet\": {{\"jobs\": {jobs}, \"makespan_cycles\": {}, \
+             \"modeled_jobs_per_s\": {jobs_per_s:.1}, \"cache_compiles\": {}, \
+             \"cache_hits\": {}, \"cores\": [\n{}\n    ]}},\n",
+            fleet.makespan(),
+            stats.compiles,
+            stats.hits,
+            core_rows.join(",\n"),
+        )
+    };
+
     // Multi-core scaling: the same 4-job batch through sequential and
     // parallel dispatch — identical modeled timelines, different
     // wall-clock.
@@ -270,7 +332,7 @@ fn main() {
 
     let json = format!(
         "{{\n  \"samples\": {samples},\n  \"kernels\": [\n{}\n  ],\n  \
-         \"static_schedule\": [\n{}\n  ],\n  \
+         \"static_schedule\": [\n{}\n  ],\n{fleet_json}  \
          \"aggregate_mcyc_per_s_unchecked\": {aggregate:.2},\n  \
          \"multi_core\": {{\"cores\": 4, \"jobs\": 4, \"kernel\": \"fft-256\", \
          \"makespan_cycles\": {seq_span}, \"sequential_ms\": {:.4}, \

@@ -1,10 +1,12 @@
 //! Single-core device handle: immediate-mode launches with uniform bus
 //! accounting.
 
+use std::sync::Arc;
+
 use crate::asm::{assemble, Program};
 use crate::coordinator::{bus_fraction, DataBus, JobResult, DEFAULT_CYCLE_BUDGET};
-use crate::kernels::Kernel;
-use crate::sim::config::EgpuConfig;
+use crate::kernels::{Kernel, KernelCache, KernelSpec};
+use crate::sim::config::{EgpuConfig, FeatureSet};
 use crate::sim::{Machine, RunStats};
 
 use super::buffer::{Buffer, DeviceRepr};
@@ -43,6 +45,15 @@ pub struct LaunchReport {
     pub core: usize,
     /// Stream the launch was submitted on ([`GpuArray`] only).
     pub stream: Option<u64>,
+    /// What the program demanded of the configuration (the axes a
+    /// fleet dispatcher routes on). Stream/fleet launches carry the
+    /// full [`Job::requires`](crate::coordinator::Job::requires) value
+    /// (kernel axes + thread count + DMA footprint); immediate [`Gpu`]
+    /// launches fill the program-derived axes only — their transfers
+    /// are separate calls, not attributes of the launch, so
+    /// `min_shared_words` stays 0 and `min_threads` is 0 unless the
+    /// builder set an explicit thread count.
+    pub requires: FeatureSet,
     /// Kernel cycles (the paper's benchmark metric).
     pub compute_cycles: u64,
     /// Bus cycles attributed to this launch: on a [`Gpu`], all host
@@ -105,6 +116,7 @@ impl From<JobResult> for LaunchReport {
             name: r.name,
             core: r.core,
             stream: r.stream,
+            requires: r.requires,
             compute_cycles: r.compute_cycles,
             bus_cycles: r.bus_cycles,
             start: r.start,
@@ -130,12 +142,20 @@ pub struct Gpu {
     timeline: Vec<BusEvent>,
     /// Bump allocator high-water mark over shared-memory words.
     alloc_top: usize,
+    /// Kernel-specialization cache behind [`Gpu::launch_spec`]
+    /// (shareable across devices via `GpuBuilder::kernel_cache`).
+    cache: Arc<KernelCache>,
 }
 
 impl Gpu {
     /// Start configuring a device (static-scalability knobs).
     pub fn builder() -> GpuBuilder {
         GpuBuilder::new()
+    }
+
+    /// Start configuring a heterogeneous fleet (per-core configs).
+    pub fn fleet() -> super::FleetBuilder {
+        super::FleetBuilder::new()
     }
 
     /// Device with the given configuration on the native datapath.
@@ -156,7 +176,19 @@ impl Gpu {
             pending_bus: 0,
             timeline: Vec::new(),
             alloc_top: 0,
+            cache: KernelCache::shared(),
         }
+    }
+
+    /// Share a kernel-specialization cache with other devices (fleets,
+    /// other `Gpu`s). Replaces the private per-device cache.
+    pub fn set_kernel_cache(&mut self, cache: Arc<KernelCache>) {
+        self.cache = cache;
+    }
+
+    /// This device's kernel-specialization cache.
+    pub fn kernel_cache(&self) -> &Arc<KernelCache> {
+        &self.cache
     }
 
     pub fn config(&self) -> &EgpuConfig {
@@ -318,6 +350,15 @@ impl Gpu {
         b
     }
 
+    /// Launch a kernel by *specification*: compiled-and-scheduled for
+    /// this device's configuration through the kernel cache — once per
+    /// `(spec, fingerprint)` however many times it is launched — rather
+    /// than eagerly rebuilt per call.
+    pub fn launch_spec(&mut self, spec: &KernelSpec) -> Result<LaunchBuilder<'_>, ApiError> {
+        let kernel = self.cache.get(spec, &self.machine.cfg).map_err(ApiError::Assemble)?;
+        Ok(self.launch(&kernel))
+    }
+
     /// Launch eGPU assembly source. Threads/dim_x keep the machine's
     /// current values unless set on the builder.
     pub fn launch_asm(
@@ -437,6 +478,8 @@ impl LaunchBuilder<'_> {
             LaunchSource::Asm(src) => assemble(&src, gpu.machine.cfg.word_layout())
                 .map_err(|e| ApiError::Assemble(format!("{name}: {e}")))?,
         };
+        let mut requires = FeatureSet::required_by(prog.instrs.iter());
+        requires.min_threads = threads.unwrap_or(0);
         gpu.machine.load_program(prog)?;
         if let Some(t) = threads {
             gpu.machine.set_threads(t)?;
@@ -462,6 +505,7 @@ impl LaunchBuilder<'_> {
             name,
             core: 0,
             stream: None,
+            requires,
             compute_cycles: stats.cycles,
             bus_cycles,
             start,

@@ -73,6 +73,8 @@ pub use gpu::{BusDir, BusEvent, Gpu, LaunchBuilder, LaunchReport};
 pub use stream::{GpuArray, Stream, StreamLaunch};
 
 pub use crate::coordinator::DEFAULT_CYCLE_BUDGET;
+pub use crate::kernels::{CacheStats, KernelCache, KernelSpec};
+pub use crate::sim::config::FeatureSet;
 
 /// Unweighted mean of per-launch bus overheads (the [`LaunchReport`]
 /// counterpart of
@@ -83,6 +85,7 @@ pub fn average_bus_overhead(reports: &[LaunchReport]) -> f64 {
 
 use std::fmt;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::datapath::xla::XlaDatapath;
 use crate::sim::config::{ConfigError, EgpuConfig, IntAluClass, MemoryMode};
@@ -291,5 +294,83 @@ impl GpuBuilder {
         }
         self.cfg.validate()?;
         GpuArray::new(self.cfg, cores)
+    }
+}
+
+/// Builder for a *heterogeneous* [`GpuArray`]: a fleet of cores with
+/// per-core static configurations — the paper's deployment story
+/// (Tables 4/5: many differently-configured instances on one fabric,
+/// each closing timing at its own embedded limit). Jobs route onto
+/// cores that satisfy their [`FeatureSet`] requirements, with
+/// wall-clock-aware placement across the mixed 771/600 MHz clocks.
+///
+/// ```no_run
+/// use egpu::api::FleetBuilder;
+/// use egpu::sim::{EgpuConfig, MemoryMode};
+///
+/// # fn main() -> Result<(), egpu::api::ApiError> {
+/// let fleet = FleetBuilder::new()
+///     .cores(EgpuConfig::benchmark_predicated(MemoryMode::Dp), 2)
+///     .cores(EgpuConfig::benchmark(MemoryMode::Qp, false), 2)
+///     .build()?;
+/// assert_eq!(fleet.num_cores(), 4);
+/// # Ok(()) }
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct FleetBuilder {
+    cfgs: Vec<EgpuConfig>,
+    cache: Option<Arc<crate::kernels::KernelCache>>,
+}
+
+impl FleetBuilder {
+    pub fn new() -> FleetBuilder {
+        FleetBuilder::default()
+    }
+
+    /// The reference mixed fleet used by `egpu fleet`, the perf bench's
+    /// `fleet` section and `examples/fleet_serving.rs`: two
+    /// fully-featured 771 MHz DP cores (predicates + dot core) and two
+    /// plain 600 MHz QP cores — one definition so the three surfaces
+    /// cannot drift.
+    pub fn demo_mixed() -> FleetBuilder {
+        let mut dp = EgpuConfig::benchmark(MemoryMode::Dp, true);
+        dp.predicate_levels = 8;
+        dp.name = "DP-771-full".into();
+        let mut qp = EgpuConfig::benchmark(MemoryMode::Qp, false);
+        qp.name = "QP-600-plain".into();
+        FleetBuilder::new().cores(dp, 2).cores(qp, 2)
+    }
+
+    /// Append one core with the given configuration.
+    pub fn core(mut self, cfg: EgpuConfig) -> FleetBuilder {
+        self.cfgs.push(cfg);
+        self
+    }
+
+    /// Append `n` cores sharing one configuration.
+    pub fn cores(mut self, cfg: EgpuConfig, n: usize) -> FleetBuilder {
+        self.cfgs.extend(vec![cfg; n]);
+        self
+    }
+
+    /// Share a kernel-specialization cache with other devices (one
+    /// compile per `(spec, fingerprint)` across all of them).
+    pub fn kernel_cache(mut self, cache: Arc<crate::kernels::KernelCache>) -> FleetBuilder {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// The per-core configurations added so far.
+    pub fn as_configs(&self) -> &[EgpuConfig] {
+        &self.cfgs
+    }
+
+    /// Validate every configuration and build the fleet (at least one
+    /// core required).
+    pub fn build(self) -> Result<GpuArray, ApiError> {
+        for cfg in &self.cfgs {
+            cfg.validate()?;
+        }
+        GpuArray::fleet(self.cfgs, self.cache)
     }
 }

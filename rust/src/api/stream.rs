@@ -9,8 +9,10 @@
 //! different streams spread across cores and overlap, with load/unload
 //! DMA serialized on the single external bus.
 
+use std::sync::Arc;
+
 use crate::coordinator::{Coordinator, Job};
-use crate::kernels::Kernel;
+use crate::kernels::{Kernel, KernelCache, KernelSpec};
 use crate::sim::config::EgpuConfig;
 
 use super::gpu::LaunchReport;
@@ -30,8 +32,10 @@ impl Stream {
 }
 
 /// An array of eGPU cores behind one data bus, with stream-ordered
-/// submission. Built by
-/// [`GpuBuilder::build_array`](super::GpuBuilder::build_array).
+/// submission. Homogeneous arrays come from
+/// [`GpuBuilder::build_array`](super::GpuBuilder::build_array);
+/// heterogeneous fleets (per-core configurations) from
+/// [`FleetBuilder`](super::FleetBuilder).
 pub struct GpuArray {
     coord: Coordinator,
     next_stream: u64,
@@ -45,12 +49,39 @@ impl GpuArray {
         })
     }
 
+    pub(crate) fn fleet(
+        cfgs: Vec<EgpuConfig>,
+        cache: Option<Arc<KernelCache>>,
+    ) -> Result<GpuArray, ApiError> {
+        let mut coord = Coordinator::fleet(cfgs).map_err(ApiError::Sim)?;
+        if let Some(cache) = cache {
+            coord.set_kernel_cache(cache);
+        }
+        Ok(GpuArray {
+            coord,
+            next_stream: 0,
+        })
+    }
+
+    /// First core's configuration (*the* configuration on a homogeneous
+    /// array; see [`GpuArray::core_configs`] for a fleet).
     pub fn config(&self) -> &EgpuConfig {
         self.coord.config()
     }
 
+    /// Every core's configuration, index = core id.
+    pub fn core_configs(&self) -> &[EgpuConfig] {
+        self.coord.configs()
+    }
+
     pub fn num_cores(&self) -> usize {
         self.coord.num_cores()
+    }
+
+    /// The fleet's kernel-specialization cache (shared by
+    /// [`GpuArray::launch_spec`] submissions).
+    pub fn kernel_cache(&self) -> &Arc<KernelCache> {
+        self.coord.kernel_cache()
     }
 
     /// Open a new stream.
@@ -58,6 +89,22 @@ impl GpuArray {
         let id = self.next_stream;
         self.next_stream += 1;
         Stream { id }
+    }
+
+    /// Open a stream pinned to one core — per-stream *config* affinity
+    /// on a heterogeneous fleet: every launch on the stream runs on
+    /// that core's configuration, and a launch the core cannot satisfy
+    /// fails at [`GpuArray::sync`] instead of silently migrating off
+    /// the stream's resident data.
+    pub fn stream_on_core(&mut self, core: usize) -> Result<Stream, ApiError> {
+        let s = self.stream();
+        self.coord.pin_stream(s.id, core).map_err(ApiError::Sim)?;
+        Ok(s)
+    }
+
+    /// Fraction of the makespan each core spent occupied.
+    pub fn core_utilization(&self) -> Vec<f64> {
+        self.coord.core_utilization()
     }
 
     /// Toggle parallel (worker-thread-per-core) dispatch for
@@ -77,12 +124,37 @@ impl GpuArray {
         }
     }
 
-    /// Build an unordered launch (earliest-free-core placement).
+    /// Build an unordered launch (wall-clock earliest-completion
+    /// placement among the cores that satisfy the kernel's
+    /// requirements).
     pub fn launch(&mut self, kernel: Kernel) -> StreamLaunch<'_> {
         StreamLaunch {
             job: Job::new(kernel),
             array: self,
         }
+    }
+
+    /// Build a launch from a kernel *specification* on a stream: the
+    /// kernel is compiled for whatever core the dispatcher places it
+    /// on, through the shared cache — once per `(spec, fingerprint)`
+    /// across all streams and batches.
+    pub fn launch_spec(
+        &mut self,
+        stream: &Stream,
+        spec: KernelSpec,
+    ) -> Result<StreamLaunch<'_>, ApiError> {
+        let job = self.coord.job_from_spec(spec).map_err(ApiError::Sim)?;
+        Ok(StreamLaunch {
+            job: job.on_stream(stream.id),
+            array: self,
+        })
+    }
+
+    /// Unordered [`GpuArray::launch_spec`] (requirement-filtered,
+    /// wall-clock earliest-completion placement).
+    pub fn launch_spec_any(&mut self, spec: KernelSpec) -> Result<StreamLaunch<'_>, ApiError> {
+        let job = self.coord.job_from_spec(spec).map_err(ApiError::Sim)?;
+        Ok(StreamLaunch { job, array: self })
     }
 
     /// Run every submitted launch to completion and return their

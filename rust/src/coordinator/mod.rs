@@ -8,11 +8,35 @@
 //! benchmarks" (§7). And "the eGPU only uses 1%-2% of a current mid-range
 //! device ... even if multiple cores are required" (§8).
 //!
-//! This module is that external manager: a [`Coordinator`] owning N eGPU
-//! cores, dispatching queued [`Job`]s to the earliest-free core, and
-//! serializing shared-memory load/unload DMA over one [`DataBus`]. Chained
-//! jobs (`keep_data`) skip the bus entirely — the paper's "multiple
-//! algorithms to the same data" mode.
+//! This module is that external manager: a [`Coordinator`] owning a
+//! *fleet* of eGPU cores — each with its **own** [`EgpuConfig`], the
+//! paper's static-scalability story deployed (Tables 4/5 describe many
+//! differently-configured instances coexisting on one fabric) —
+//! dispatching queued [`Job`]s and serializing shared-memory
+//! load/unload DMA over one [`DataBus`]. Chained jobs (`keep_data`)
+//! skip the bus entirely — the paper's "multiple algorithms to the same
+//! data" mode.
+//!
+//! # Heterogeneous fleets
+//!
+//! Each job derives a [`FeatureSet`] requirement from its program
+//! ([`Job::requires`]) and is only placed on cores whose configuration
+//! [`satisfies`](EgpuConfig::satisfies) it: a predicated sort never
+//! lands on a `predicate_levels == 0` core, a DOT kernel only on a
+//! dot-core instance. Cores run at different clocks (771 MHz DP vs
+//! 600 MHz QP, §6), so the modeled timeline is kept in cycles of the
+//! shared **bus clock** (the fastest core's clock — identical to the
+//! core clock on a homogeneous fleet, which keeps every homogeneous
+//! timeline bit-identical to the historical single-config coordinator).
+//! A core's compute cycles are converted onto that timeline with exact
+//! integer (kHz-ratio, round-up) arithmetic, and earliest-completion
+//! placement compares *wall-clock* scores — a free 771 MHz DP core
+//! outbids a free 600 MHz QP core for the same kernel.
+//!
+//! Jobs submitted as [`KernelSpec`]s are specialized to their placed
+//! core's configuration through a shared [`KernelCache`]: one
+//! compile-and-schedule per `(generator, dim, fingerprint)` across the
+//! fleet's lifetime, however many streams resubmit the kernel.
 //!
 //! # Parallel dispatch
 //!
@@ -31,11 +55,12 @@
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::asm::Program;
-use crate::kernels::Kernel;
-use crate::sim::config::EgpuConfig;
+use crate::kernels::{Kernel, KernelCache, KernelSpec};
+use crate::model::frequency::modeled_core_khz;
+use crate::sim::config::{EgpuConfig, FeatureSet};
 use crate::sim::{Machine, RunStats, SimError, PIPELINE_DEPTH};
 
 /// Default kernel cycle budget: bounds runaway programs without ever
@@ -47,7 +72,20 @@ pub const DEFAULT_CYCLE_BUDGET: u64 = 10_000_000_000;
 /// Lower bound on any successful job's end-to-end cycles: even an empty
 /// program issues STOP (1 cycle) and drains the pipeline. Used to prove
 /// earliest-free placements before every outstanding job is accounted.
+/// Core cycles; convert per core with [`to_bus_cycles`].
 const MIN_JOB_CYCLES: u64 = 1 + PIPELINE_DEPTH;
+
+/// Convert a core-clock cycle count onto the shared bus timeline
+/// (round-up, exact integer arithmetic over kHz so heterogeneous
+/// accounting is deterministic). Identity when the clocks match — the
+/// homogeneous case stays bit-identical to the historical
+/// single-clock timeline.
+fn to_bus_cycles(cycles: u64, core_khz: u64, bus_khz: u64) -> u64 {
+    if core_khz == bus_khz {
+        return cycles;
+    }
+    (cycles as u128 * bus_khz as u128).div_ceil(core_khz as u128) as u64
+}
 
 /// The external 32-bit data bus: one 32-bit word per bus cycle, clocked at
 /// the core frequency (§7 measures load/unload at the core clock).
@@ -70,7 +108,17 @@ impl DataBus {
 /// One unit of work: a kernel plus its data movement.
 #[derive(Debug, Clone)]
 pub struct Job {
-    pub kernel: Kernel,
+    /// The kernel to run (shared, so cache-served kernels are a
+    /// refcount bump per job, not a deep copy of the compiled program).
+    /// For spec-submitted jobs this is the *reference* build (used for
+    /// naming, thread shape and requirement extraction); the dispatcher
+    /// re-specializes it to the placed core's configuration through the
+    /// [`KernelCache`].
+    pub kernel: Arc<Kernel>,
+    /// Present when the job was submitted as a [`KernelSpec`]: the
+    /// dispatcher then compiles per placed-core fingerprint (cached)
+    /// instead of running the prebuilt kernel everywhere.
+    pub spec: Option<KernelSpec>,
     /// Blocks DMA'd into shared memory before the run.
     pub loads: Vec<(usize, Vec<u32>)>,
     /// `(base, len)` blocks DMA'd out after the run.
@@ -90,14 +138,66 @@ pub struct Job {
 
 impl Job {
     pub fn new(kernel: Kernel) -> Job {
+        Job::new_shared(Arc::new(kernel))
+    }
+
+    /// [`Job::new`] over an already-shared kernel (no copy).
+    pub fn new_shared(kernel: Arc<Kernel>) -> Job {
         Job {
             kernel,
+            spec: None,
             loads: Vec::new(),
             unloads: Vec::new(),
             keep_data: false,
             stream: None,
             max_cycles: DEFAULT_CYCLE_BUDGET,
         }
+    }
+
+    /// A job from a kernel *specification*: a reference build (compiled
+    /// through `cache` against `reference` — dispatchers pass their own
+    /// first core, so the compile is reused, not wasted) supplies the
+    /// name, thread shape, requirements and placement estimate; dispatch
+    /// re-specializes per placed core. This is the entry point that
+    /// makes a mixed DP/QP fleet run per-config schedules.
+    pub fn from_spec(
+        spec: KernelSpec,
+        cache: &KernelCache,
+        reference: &EgpuConfig,
+    ) -> Result<Job, SimError> {
+        let kernel = cache.get(&spec, reference).map_err(|m| SimError::new(0, m))?;
+        let mut job = Job::new_shared(kernel);
+        job.spec = Some(spec);
+        Ok(job)
+    }
+
+    /// What this job demands of a core: the kernel's feature
+    /// requirements plus the DMA footprint (the shared-memory words its
+    /// loads and unloads touch). The dispatcher only places the job on
+    /// cores whose [`EgpuConfig::satisfies`] answers yes; the same
+    /// value is surfaced on [`JobResult::requires`] for observability.
+    pub fn requires(&self) -> FeatureSet {
+        let mut req = self.kernel.requirements();
+        for (base, data) in &self.loads {
+            req.min_shared_words = req.min_shared_words.max(base + data.len());
+        }
+        for &(base, len) in &self.unloads {
+            req.min_shared_words = req.min_shared_words.max(base + len);
+        }
+        req
+    }
+
+    /// Static compute-cycle estimate used for wall-clock-aware
+    /// placement (compiled kernels carry their schedule's straight-line
+    /// cycle count; hand-written assembly estimates 0 and degrades to
+    /// earliest-free placement). Never used for accounting — only for
+    /// choosing among eligible cores.
+    fn est_compute_cycles(&self) -> u64 {
+        self.kernel
+            .sched
+            .as_ref()
+            .map(|s| s.static_cycles_emitted())
+            .unwrap_or(0)
     }
 
     pub fn load(mut self, base: usize, data: Vec<u32>) -> Job {
@@ -147,11 +247,16 @@ pub struct JobResult {
     pub core: usize,
     /// Stream the job was submitted on, if any.
     pub stream: Option<u64>,
-    /// Kernel cycles (the paper's core-performance metric).
+    /// The requirement the dispatcher routed on ([`Job::requires`]).
+    pub requires: FeatureSet,
+    /// Kernel cycles at the *core's* clock (the paper's
+    /// core-performance metric).
     pub compute_cycles: u64,
     /// Bus cycles spent on load + unload DMA.
     pub bus_cycles: u64,
-    /// Timeline: job start (bus acquisition) and end (unload complete).
+    /// Timeline on the shared bus clock: job start (bus acquisition)
+    /// and end (unload complete). On a homogeneous fleet the bus clock
+    /// is the core clock, so these are plain core cycles as before.
     pub start: u64,
     pub end: u64,
     pub stats: RunStats,
@@ -223,6 +328,66 @@ enum Placement {
     NeedAccounting,
 }
 
+/// Immutable per-fleet placement context: each core's configuration,
+/// its modeled clock, and the common bus clock.
+struct FleetCtx<'a> {
+    cfgs: &'a [EgpuConfig],
+    core_khz: &'a [u64],
+    bus_khz: u64,
+}
+
+impl FleetCtx<'_> {
+    /// Wall-clock completion score of placing a job with static
+    /// estimate `est` (core cycles) on core `c`, in bus cycles:
+    /// `free + est·(bus/core)`. On a homogeneous fleet this adds the
+    /// same constant to every core, so the argmin (and its first-index
+    /// tie-break) is exactly the historical earliest-free choice.
+    fn score(&self, c: usize, free: u64, est: u64) -> u64 {
+        free + to_bus_cycles(est, self.core_khz[c], self.bus_khz)
+    }
+
+    /// Lower bound (bus cycles) on one outstanding job's occupancy of
+    /// core `c`.
+    fn min_job_bus(&self, c: usize) -> u64 {
+        to_bus_cycles(MIN_JOB_CYCLES, self.core_khz[c], self.bus_khz)
+    }
+
+    /// The no-eligible-core dispatch error, naming each core's reason.
+    fn no_core_error(&self, job: &Job, req: &FeatureSet) -> SimError {
+        let reasons: Vec<String> = self
+            .cfgs
+            .iter()
+            .enumerate()
+            .map(|(c, cfg)| {
+                let why = cfg.unsatisfied(req).unwrap_or_else(|| "unknown reason".into());
+                format!("core {c} ('{}'): {why}", cfg.name)
+            })
+            .collect();
+        SimError::new(
+            0,
+            format!(
+                "no core can run job '{}' (requires: {req}); {}",
+                job.kernel.name,
+                reasons.join("; ")
+            ),
+        )
+    }
+
+    /// Eligibility error for a core the job is *pinned* to (stream
+    /// affinity or legacy chaining).
+    fn pinned_core_error(&self, job: &Job, req: &FeatureSet, c: usize) -> SimError {
+        let why = self.cfgs[c].unsatisfied(req).unwrap_or_else(|| "unknown reason".into());
+        SimError::new(
+            0,
+            format!(
+                "job '{}' is pinned to core {c} ('{}'), which {why} \
+                 (requires: {req})",
+                job.kernel.name, self.cfgs[c].name
+            ),
+        )
+    }
+}
+
 /// Placement policy shared by the sequential and parallel paths, in
 /// priority order:
 ///
@@ -231,16 +396,23 @@ enum Placement {
 ///    well-defined). A *chained* stream job additionally requires its
 ///    stream's data to still be resident there — if other work has since
 ///    been placed on that core, dispatch errors rather than silently
-///    computing on someone else's data.
+///    computing on someone else's data. The pinned core must satisfy
+///    the job's requirement; a stream whose later jobs outgrow its core
+///    errors rather than silently migrating away from its data.
 /// 2. A chained (`keep_data`) job without an affine core goes to the core
 ///    of the previously dispatched job; if there is no previous job, that
 ///    is an error (there is no resident data to chain onto).
-/// 3. Everything else goes to the earliest-free core (first index on
-///    ties). With `pending` counts (parallel path), the choice is only
+/// 3. Everything else goes to the **eligible** core with the earliest
+///    wall-clock completion score (first index on ties) — on a
+///    homogeneous fleet, exactly the historical earliest-free choice.
+///    With `pending` counts (parallel path), the choice is only
 ///    committed once provable; `pending = None` means every core's free
 ///    time is final.
+#[allow(clippy::too_many_arguments)]
 fn place_job(
     job: &Job,
+    req: &FeatureSet,
+    fleet: &FleetCtx<'_>,
     core_free: &[u64],
     pending: Option<&[usize]>,
     stream_core: &HashMap<u64, usize>,
@@ -265,6 +437,9 @@ fn place_job(
                     ),
                 ));
             }
+            if !fleet.cfgs[c].satisfies(req) {
+                return Err(fleet.pinned_core_error(job, req, c));
+            }
             Ok(Placement::Core(c))
         }
         // Backstop arms: batch pre-validation already rejects these; kept
@@ -279,7 +454,12 @@ fn place_job(
                     job.kernel.name
                 ),
             )),
-            (None, Some(c)) => Ok(Placement::Core(c)),
+            (None, Some(c)) => {
+                if !fleet.cfgs[c].satisfies(req) {
+                    return Err(fleet.pinned_core_error(job, req, c));
+                }
+                Ok(Placement::Core(c))
+            }
             (None, None) => Err(SimError::new(
                 0,
                 format!(
@@ -289,41 +469,61 @@ fn place_job(
                 ),
             )),
         },
-        None => match pending {
-            None => {
-                let c = (0..core_free.len())
-                    .min_by_key(|&c| core_free[c])
-                    .expect("at least one core");
-                Ok(Placement::Core(c))
+        None => {
+            let eligible: Vec<bool> = fleet.cfgs.iter().map(|cfg| cfg.satisfies(req)).collect();
+            if !eligible.iter().any(|&e| e) {
+                return Err(fleet.no_core_error(job, req));
             }
-            Some(pending) => Ok(provable_first_min(core_free, pending)
-                .map_or(Placement::NeedAccounting, Placement::Core)),
-        },
+            let est = job.est_compute_cycles();
+            match pending {
+                None => {
+                    let c = (0..core_free.len())
+                        .filter(|&c| eligible[c])
+                        .min_by_key(|&c| fleet.score(c, core_free[c], est))
+                        .expect("at least one eligible core");
+                    Ok(Placement::Core(c))
+                }
+                Some(pending) => Ok(provable_first_min(fleet, core_free, est, pending, &eligible)
+                    .map_or(Placement::NeedAccounting, Placement::Core)),
+            }
+        }
     }
 }
 
-/// First index minimizing the *eventual* core-free time, or `None` while
-/// outstanding jobs make the winner unprovable. `core_free[c]` is exact
-/// when `pending[c] == 0`; otherwise each outstanding job adds at least
-/// [`MIN_JOB_CYCLES`], giving a lower bound. Tie-breaking matches
-/// `min_by_key`: the first index wins, so a pending core *before* the
-/// candidate must be provably greater, one *after* only provably
-/// not-smaller.
-fn provable_first_min(core_free: &[u64], pending: &[usize]) -> Option<usize> {
+/// First eligible index minimizing the *eventual* completion score, or
+/// `None` while outstanding jobs make the winner unprovable.
+/// `score(c, core_free[c], est)` is exact when `pending[c] == 0`;
+/// otherwise each outstanding job occupies core `c` for at least
+/// [`MIN_JOB_CYCLES`] core cycles (≥ `min_job_bus(c)` bus cycles),
+/// giving a lower bound. Tie-breaking matches `min_by_key`: the first
+/// index wins, so a pending core *before* the candidate must be
+/// provably greater, one *after* only provably not-smaller. Ineligible
+/// cores neither win nor block.
+fn provable_first_min(
+    fleet: &FleetCtx<'_>,
+    core_free: &[u64],
+    est: u64,
+    pending: &[usize],
+    eligible: &[bool],
+) -> Option<usize> {
     let mut best: Option<(usize, u64)> = None;
     for (c, (&free, &p)) in core_free.iter().zip(pending).enumerate() {
+        if !eligible[c] || p != 0 {
+            continue;
+        }
+        let score = fleet.score(c, free, est);
         let beats = match best {
             None => true,
-            Some((_, v)) => free < v,
+            Some((_, v)) => score < v,
         };
-        if p == 0 && beats {
-            best = Some((c, free));
+        if beats {
+            best = Some((c, score));
         }
     }
     let (ir, v) = best?;
     for (c, (&free, &p)) in core_free.iter().zip(pending).enumerate() {
-        if p > 0 {
-            let lb = free + MIN_JOB_CYCLES * p as u64;
+        if eligible[c] && p > 0 {
+            let lb = fleet.score(c, free, est) + fleet.min_job_bus(c) * p as u64;
             if (c < ir && lb <= v) || (c > ir && lb < v) {
                 return None;
             }
@@ -364,6 +564,7 @@ fn exec_assembled(
 struct DispatchMeta {
     name: String,
     stream: Option<u64>,
+    requires: FeatureSet,
     core: usize,
     load_cycles: u64,
     unload_cycles: u64,
@@ -428,15 +629,14 @@ fn account_next_unwinding(
     metas: &[DispatchMeta],
     acct: &mut usize,
     pending: &mut [usize],
-    core_free: &mut [u64],
-    bus_cal: &mut BusCalendar,
+    tl: &mut TimelineState<'_>,
     out: &mut Vec<JobResult>,
     stream_core: &mut HashMap<u64, usize>,
     core_resident: &mut [Option<u64>],
     last_core: &mut Option<usize>,
     undo: &[BookUndo],
 ) -> Result<(), SimError> {
-    match account_next(slots, metas, acct, pending, core_free, bus_cal, out) {
+    match account_next(slots, metas, acct, pending, tl, out) {
         Ok(()) => Ok(()),
         Err(e) => {
             rollback_dispatch(stream_core, core_resident, last_core, undo, *acct + 1);
@@ -445,19 +645,28 @@ fn account_next_unwinding(
     }
 }
 
+/// The mutable timeline state + clock table the accounting replay
+/// writes: per-core free/busy (bus cycles), the bus calendar, and the
+/// kHz table for core→bus conversion.
+struct TimelineState<'a> {
+    core_free: &'a mut [u64],
+    core_busy: &'a mut [u64],
+    bus_cal: &'a mut BusCalendar,
+    core_khz: &'a [u64],
+    bus_khz: u64,
+}
+
 /// Account the next job in submission order: block until its worker
 /// outcome lands, then replay the bus/core timeline exactly as the
-/// sequential path would (load reservation, compute, unload reservation).
-/// On a job error the load reservation persists, matching the sequential
-/// path's early return.
-#[allow(clippy::too_many_arguments)]
+/// sequential path would (load reservation, compute converted onto the
+/// bus clock, unload reservation). On a job error the load reservation
+/// persists, matching the sequential path's early return.
 fn account_next(
     slots: &OutcomeSlots,
     metas: &[DispatchMeta],
     acct: &mut usize,
     pending: &mut [usize],
-    core_free: &mut [u64],
-    bus_cal: &mut BusCalendar,
+    tl: &mut TimelineState<'_>,
     out: &mut Vec<JobResult>,
 ) -> Result<(), SimError> {
     let idx = *acct;
@@ -473,18 +682,21 @@ fn account_next(
         }
     };
     let meta = &metas[idx];
-    let start = bus_cal.reserve(core_free[meta.core], meta.load_cycles);
+    let start = tl.bus_cal.reserve(tl.core_free[meta.core], meta.load_cycles);
     let (stats, outputs) = outcome?;
-    let compute_end = start + meta.load_cycles + stats.cycles;
-    let unload_start = bus_cal.reserve(compute_end, meta.unload_cycles);
+    let compute_bus = to_bus_cycles(stats.cycles, tl.core_khz[meta.core], tl.bus_khz);
+    let compute_end = start + meta.load_cycles + compute_bus;
+    let unload_start = tl.bus_cal.reserve(compute_end, meta.unload_cycles);
     let end = unload_start + meta.unload_cycles;
-    core_free[meta.core] = end;
+    tl.core_free[meta.core] = end;
+    tl.core_busy[meta.core] += end - start;
     pending[meta.core] -= 1;
     *acct += 1;
     out.push(JobResult {
         name: meta.name.clone(),
         core: meta.core,
         stream: meta.stream,
+        requires: meta.requires.clone(),
         compute_cycles: stats.cycles,
         bus_cycles: meta.load_cycles + meta.unload_cycles,
         start,
@@ -495,13 +707,22 @@ fn account_next(
     Ok(())
 }
 
-/// N-core dispatcher with a single shared data bus.
+/// A fleet dispatcher: N eGPU cores, each with its own static
+/// configuration, behind a single shared data bus.
 pub struct Coordinator {
-    cfg: EgpuConfig,
+    /// Per-core static configurations (index = core id).
+    cfgs: Vec<EgpuConfig>,
     bus: DataBus,
+    /// Modeled clock of each core, integer kHz (771 MHz DP → 771_000).
+    core_khz: Vec<u64>,
+    /// Shared bus clock: the fastest core's clock (on a homogeneous
+    /// fleet, *the* core clock — the historical timeline unit).
+    bus_khz: u64,
     cores: Vec<Machine>,
-    /// Cycle at which each core finishes its current work.
+    /// Bus-clock cycle at which each core finishes its current work.
     core_free: Vec<u64>,
+    /// Bus-clock cycles each core has spent occupied (utilization).
+    core_busy: Vec<u64>,
     /// Shared-bus reservation calendar.
     bus_cal: BusCalendar,
     queue: Vec<Job>,
@@ -519,24 +740,57 @@ pub struct Coordinator {
     /// `false` forces the sequential reference path; both produce
     /// bit-identical results and timelines.
     parallel: bool,
+    /// Kernel-specialization cache shared by every spec-submitted job
+    /// (and injectable, so several devices can share one).
+    cache: Arc<KernelCache>,
 }
 
 impl Coordinator {
+    /// A homogeneous fleet: `num_cores` copies of one configuration
+    /// (the historical constructor; behavior-identical to the
+    /// single-config coordinator it replaces).
     pub fn new(cfg: EgpuConfig, num_cores: usize) -> Result<Coordinator, SimError> {
-        assert!(num_cores >= 1);
-        let cores = (0..num_cores)
-            .map(|_| Machine::new(cfg.clone()))
+        if num_cores == 0 {
+            return Err(SimError::new(
+                0,
+                "a Coordinator needs at least one core (num_cores == 0)",
+            ));
+        }
+        Self::fleet(vec![cfg; num_cores])
+    }
+
+    /// A heterogeneous fleet: one core per configuration, in order.
+    /// Core clocks come from the frequency model
+    /// ([`modeled_core_khz`]); the shared bus runs at the fastest
+    /// core's clock.
+    pub fn fleet(cfgs: Vec<EgpuConfig>) -> Result<Coordinator, SimError> {
+        if cfgs.is_empty() {
+            return Err(SimError::new(
+                0,
+                "a Coordinator needs at least one core (empty fleet)",
+            ));
+        }
+        let cores = cfgs
+            .iter()
+            .map(|cfg| Machine::new(cfg.clone()))
             .collect::<Result<Vec<_>, _>>()?;
+        let core_khz: Vec<u64> = cfgs.iter().map(modeled_core_khz).collect();
+        let bus_khz = *core_khz.iter().max().expect("at least one core");
+        let n = cfgs.len();
         Ok(Coordinator {
-            bus: DataBus::new(cfg.core_mhz()),
-            core_free: vec![0; num_cores],
+            bus: DataBus::new(bus_khz as f64 / 1000.0),
+            core_khz,
+            bus_khz,
+            core_free: vec![0; n],
+            core_busy: vec![0; n],
             bus_cal: BusCalendar::default(),
             queue: Vec::new(),
             stream_core: HashMap::new(),
-            core_resident: vec![None; num_cores],
+            core_resident: vec![None; n],
             last_core: None,
             parallel: true,
-            cfg,
+            cache: KernelCache::shared(),
+            cfgs,
             cores,
         })
     }
@@ -545,8 +799,71 @@ impl Coordinator {
         self.cores.len()
     }
 
+    /// First core's configuration — *the* configuration on a
+    /// homogeneous fleet (kept for the wide pre-fleet call base; use
+    /// [`Coordinator::configs`] when cores may differ).
     pub fn config(&self) -> &EgpuConfig {
-        &self.cfg
+        &self.cfgs[0]
+    }
+
+    /// Every core's configuration, index = core id.
+    pub fn configs(&self) -> &[EgpuConfig] {
+        &self.cfgs
+    }
+
+    /// Modeled clock of core `c` in MHz.
+    pub fn core_mhz(&self, c: usize) -> f64 {
+        self.core_khz[c] as f64 / 1000.0
+    }
+
+    /// The shared bus clock in MHz (fastest core).
+    pub fn bus_mhz(&self) -> f64 {
+        self.bus_khz as f64 / 1000.0
+    }
+
+    /// The fleet's kernel-specialization cache.
+    pub fn kernel_cache(&self) -> &Arc<KernelCache> {
+        &self.cache
+    }
+
+    /// Share a kernel cache with other devices (replaces the private
+    /// one; call before submitting spec jobs).
+    pub fn set_kernel_cache(&mut self, cache: Arc<KernelCache>) {
+        self.cache = cache;
+    }
+
+    /// Escape hatch: core `c`'s machine, for architectural-state
+    /// inspection (the heterogeneity property tests compare register
+    /// files and shared memory against solo runs).
+    pub fn core_machine(&self, c: usize) -> &Machine {
+        &self.cores[c]
+    }
+
+    /// Pin a stream to a core before its first job (per-stream config
+    /// affinity): every job on the stream will run there, and jobs
+    /// whose requirements the core cannot satisfy fail at dispatch.
+    pub fn pin_stream(&mut self, stream: u64, core: usize) -> Result<(), SimError> {
+        if core >= self.cores.len() {
+            return Err(SimError::new(
+                0,
+                format!(
+                    "cannot pin stream {stream} to core {core}: fleet has {} cores",
+                    self.cores.len()
+                ),
+            ));
+        }
+        self.stream_core.insert(stream, core);
+        Ok(())
+    }
+
+    /// Fraction of the makespan each core spent occupied (loading,
+    /// computing or unloading); all zeros before any work ran.
+    pub fn core_utilization(&self) -> Vec<f64> {
+        let span = self.makespan();
+        self.core_busy
+            .iter()
+            .map(|&b| if span == 0 { 0.0 } else { b as f64 / span as f64 })
+            .collect()
     }
 
     /// Toggle parallel (worker-thread) dispatch. Defaults to on; the
@@ -563,6 +880,16 @@ impl Coordinator {
     /// Queue a job (FIFO dispatch order).
     pub fn submit(&mut self, job: Job) {
         self.queue.push(job);
+    }
+
+    /// Queue a kernel by specification: compiled through the fleet's
+    /// [`KernelCache`] (reference build against core 0's fingerprint,
+    /// so the compile is shared with that core's dispatches),
+    /// specialized to whatever core it is placed on. Returns the job
+    /// builder-style for chaining loads/unloads via
+    /// [`Coordinator::submit`].
+    pub fn job_from_spec(&self, spec: KernelSpec) -> Result<Job, SimError> {
+        Job::from_spec(spec, &self.cache, &self.cfgs[0])
     }
 
     /// Statically-checkable submission errors fail the whole batch up
@@ -636,8 +963,16 @@ impl Coordinator {
     fn run_all_sequential(&mut self, jobs: Vec<Job>) -> Result<Vec<JobResult>, SimError> {
         let mut results = Vec::with_capacity(jobs.len());
         for job in jobs {
+            let req = job.requires();
+            let fleet = FleetCtx {
+                cfgs: &self.cfgs,
+                core_khz: &self.core_khz,
+                bus_khz: self.bus_khz,
+            };
             let core = match place_job(
                 &job,
+                &req,
+                &fleet,
                 &self.core_free,
                 None,
                 &self.stream_core,
@@ -648,7 +983,7 @@ impl Coordinator {
                 Placement::NeedAccounting => unreachable!("sequential free times are final"),
             };
             self.note_dispatch(&job, core);
-            let r = self.run_on(core, job)?;
+            let r = self.run_on(core, job, req)?;
             results.push(r);
         }
         Ok(results)
@@ -683,15 +1018,38 @@ impl Coordinator {
         let Coordinator {
             cores,
             core_free,
+            core_busy,
             bus_cal,
             stream_core,
             core_resident,
             last_core,
-            cfg,
+            cfgs,
+            core_khz,
+            bus_khz,
+            cache,
             bus,
             ..
         } = self;
         let ncores = cores.len();
+        let (cfgs, core_khz, bus_khz, cache) = (&cfgs[..], &core_khz[..], *bus_khz, &*cache);
+        let fleet = FleetCtx {
+            cfgs,
+            core_khz,
+            bus_khz,
+        };
+        // Each accounting call gets a fresh reborrow of the mutable
+        // timeline state (placement reads `core_free` in between).
+        macro_rules! timeline {
+            () => {
+                &mut TimelineState {
+                    core_free: &mut core_free[..],
+                    core_busy: &mut core_busy[..],
+                    bus_cal: &mut *bus_cal,
+                    core_khz,
+                    bus_khz,
+                }
+            };
+        }
         let slots: OutcomeSlots = (Mutex::new((0..n).map(|_| None).collect()), Condvar::new());
         let slots = &slots;
 
@@ -737,9 +1095,12 @@ impl Coordinator {
 
             let r = (|| -> Result<Vec<JobResult>, SimError> {
                 for (i, job) in jobs.into_iter().enumerate() {
+                    let req = job.requires();
                     let core = loop {
                         match place_job(
                             &job,
+                            &req,
+                            &fleet,
                             core_free,
                             Some(pending.as_slice()),
                             stream_core,
@@ -748,8 +1109,16 @@ impl Coordinator {
                         ) {
                             Ok(Placement::Core(c)) => break c,
                             Ok(Placement::NeedAccounting) => account_next_unwinding(
-                                slots, &metas, &mut acct, &mut pending, core_free, bus_cal,
-                                &mut out, stream_core, core_resident, last_core, &undo,
+                                slots,
+                                &metas,
+                                &mut acct,
+                                &mut pending,
+                                timeline!(),
+                                &mut out,
+                                stream_core,
+                                core_resident,
+                                last_core,
+                                &undo,
                             )?,
                             Err(e) => {
                                 // Sequential parity: every job before this
@@ -757,9 +1126,16 @@ impl Coordinator {
                                 // accounted before the error surfaced.
                                 while acct < metas.len() {
                                     account_next_unwinding(
-                                        slots, &metas, &mut acct, &mut pending, core_free,
-                                        bus_cal, &mut out, stream_core, core_resident,
-                                        last_core, &undo,
+                                        slots,
+                                        &metas,
+                                        &mut acct,
+                                        &mut pending,
+                                        timeline!(),
+                                        &mut out,
+                                        stream_core,
+                                        core_resident,
+                                        last_core,
+                                        &undo,
                                     )?;
                                 }
                                 return Err(e);
@@ -777,21 +1153,39 @@ impl Coordinator {
                     }
                     *last_core = Some(core);
                     core_resident[core] = job.stream;
-                    let prog = match job.kernel.assemble(cfg) {
-                        Ok(p) => p,
-                        Err(msg) => {
+                    // Specialize spec jobs to the placed core's config
+                    // (cache-memoized), then take the program for that
+                    // core. Errors drain accounting first — sequential
+                    // parity for everything before the failing job.
+                    let assembled = specialize_job(job, &cfgs[core], cache)
+                        .and_then(|job| match job.kernel.assemble(&cfgs[core]) {
+                            Ok(p) => Ok((p, job)),
+                            Err(msg) => Err(SimError::new(0, msg)),
+                        });
+                    let (prog, job) = match assembled {
+                        Ok(pj) => pj,
+                        Err(e) => {
                             while acct < metas.len() {
                                 account_next_unwinding(
-                                    slots, &metas, &mut acct, &mut pending, core_free, bus_cal,
-                                    &mut out, stream_core, core_resident, last_core, &undo,
+                                    slots,
+                                    &metas,
+                                    &mut acct,
+                                    &mut pending,
+                                    timeline!(),
+                                    &mut out,
+                                    stream_core,
+                                    core_resident,
+                                    last_core,
+                                    &undo,
                                 )?;
                             }
-                            return Err(SimError::new(0, msg));
+                            return Err(e);
                         }
                     };
                     metas.push(DispatchMeta {
                         name: job.kernel.name.clone(),
                         stream: job.stream,
+                        requires: req,
                         core,
                         load_cycles: bus.transfer_cycles(job.load_words()),
                         unload_cycles: bus.transfer_cycles(job.unload_words()),
@@ -806,8 +1200,16 @@ impl Coordinator {
                 }
                 while acct < metas.len() {
                     account_next_unwinding(
-                        slots, &metas, &mut acct, &mut pending, core_free, bus_cal, &mut out,
-                        stream_core, core_resident, last_core, &undo,
+                        slots,
+                        &metas,
+                        &mut acct,
+                        &mut pending,
+                        timeline!(),
+                        &mut out,
+                        stream_core,
+                        core_resident,
+                        last_core,
+                        &undo,
                     )?;
                 }
                 Ok(out)
@@ -819,10 +1221,11 @@ impl Coordinator {
         })
     }
 
-    fn run_on(&mut self, core: usize, job: Job) -> Result<JobResult, SimError> {
+    fn run_on(&mut self, core: usize, job: Job, req: FeatureSet) -> Result<JobResult, SimError> {
+        let job = specialize_job(job, &self.cfgs[core], &self.cache)?;
         let prog = job
             .kernel
-            .assemble(&self.cfg)
+            .assemble(&self.cfgs[core])
             .map_err(|msg| SimError::new(0, msg))?;
 
         // Bus phase 1: load DMA (a reservation on the shared bus).
@@ -831,17 +1234,21 @@ impl Coordinator {
 
         let (stats, outputs) = exec_assembled(&mut self.cores[core], prog, &job)?;
 
-        // Bus phase 2: unload DMA.
+        // Bus phase 2: unload DMA. Compute occupies the bus timeline for
+        // the core's cycles converted onto the bus clock.
         let unload_cycles = self.bus.transfer_cycles(job.unload_words());
-        let compute_end = start + load_cycles + stats.cycles;
+        let compute_bus = to_bus_cycles(stats.cycles, self.core_khz[core], self.bus_khz);
+        let compute_end = start + load_cycles + compute_bus;
         let unload_start = self.bus_cal.reserve(compute_end, unload_cycles);
         let end = unload_start + unload_cycles;
         self.core_free[core] = end;
+        self.core_busy[core] += end - start;
 
         Ok(JobResult {
             name: job.kernel.name.clone(),
             core,
             stream: job.stream,
+            requires: req,
             compute_cycles: stats.cycles,
             bus_cycles: load_cycles + unload_cycles,
             start,
@@ -851,14 +1258,28 @@ impl Coordinator {
         })
     }
 
-    /// Completion cycle of the last finishing core.
+    /// Completion cycle (bus clock) of the last finishing core.
     pub fn makespan(&self) -> u64 {
         self.core_free.iter().copied().max().unwrap_or(0)
     }
 
-    /// Makespan in microseconds at the configured core clock.
+    /// Makespan in microseconds at the bus clock (on a homogeneous
+    /// fleet, the core clock — the historical definition).
     pub fn makespan_us(&self) -> f64 {
-        self.makespan() as f64 / self.cfg.core_mhz()
+        self.makespan() as f64 / self.bus_mhz()
+    }
+}
+
+/// Re-specialize a spec-submitted job to its placed core's
+/// configuration through the cache (no-op for prebuilt-kernel jobs —
+/// the historical path, byte-identical behavior).
+fn specialize_job(job: Job, cfg: &EgpuConfig, cache: &KernelCache) -> Result<Job, SimError> {
+    match job.spec {
+        Some(spec) => {
+            let kernel = cache.get(&spec, cfg).map_err(|m| SimError::new(0, m))?;
+            Ok(Job { kernel, ..job })
+        }
+        None => Ok(job),
     }
 }
 
@@ -1038,6 +1459,7 @@ mod tests {
             name: "empty".into(),
             core: 0,
             stream: None,
+            requires: FeatureSet::none(),
             compute_cycles: 0,
             bus_cycles: 0,
             start: 0,
@@ -1205,20 +1627,115 @@ mod tests {
         }
     }
 
+    /// Homogeneous 3-core context at one clock, est 0: the historical
+    /// earliest-free semantics, which the tie-breaking contract below
+    /// pins down.
+    fn homog3() -> (Vec<EgpuConfig>, Vec<u64>) {
+        let cfgs = vec![cfg(); 3];
+        let khz = vec![771_000u64; 3];
+        (cfgs, khz)
+    }
+
     #[test]
     fn provable_first_min_respects_tie_breaking() {
+        let (cfgs, khz) = homog3();
+        let fleet = FleetCtx {
+            cfgs: &cfgs,
+            core_khz: &khz,
+            bus_khz: 771_000,
+        };
+        let all = [true, true, true];
+        let pfm = |free: &[u64], pending: &[usize]| {
+            provable_first_min(&fleet, free, 0, pending, &all)
+        };
         // All resolved: plain first-min.
-        assert_eq!(provable_first_min(&[5, 3, 3], &[0, 0, 0]), Some(1));
+        assert_eq!(pfm(&[5, 3, 3], &[0, 0, 0]), Some(1));
         // Pending core 0 could finish anywhere ≥ 9 → core 1 (free=3) wins.
-        assert_eq!(provable_first_min(&[0, 3, 5], &[1, 0, 0]), Some(1));
+        assert_eq!(pfm(&[0, 3, 5], &[1, 0, 0]), Some(1));
         // Pending core 0's bound (0+9=9) could tie with core 1's 9 and
         // core 0 is first → unprovable.
-        assert_eq!(provable_first_min(&[0, 9, 50], &[1, 0, 0]), None);
+        assert_eq!(pfm(&[0, 9, 50], &[1, 0, 0]), None);
         // Pending core AFTER the candidate may tie (first-min wins)...
-        assert_eq!(provable_first_min(&[9, 50, 0], &[0, 0, 1]), Some(0));
+        assert_eq!(pfm(&[9, 50, 0], &[0, 0, 1]), Some(0));
         // ...but one that could finish strictly earlier blocks the call.
-        assert_eq!(provable_first_min(&[10, 50, 0], &[0, 0, 1]), None);
+        assert_eq!(pfm(&[10, 50, 0], &[0, 0, 1]), None);
         // Nothing resolved → wait.
-        assert_eq!(provable_first_min(&[0, 0], &[1, 1]), None);
+        assert_eq!(
+            provable_first_min(&fleet, &[0, 0], 0, &[1, 1], &[true, true]),
+            None
+        );
+        // An ineligible core neither wins nor blocks: core 0 is free at
+        // 0 but can't run the job; pending core 2 can't block core 1.
+        assert_eq!(
+            provable_first_min(&fleet, &[0, 5, 0], 0, &[0, 0, 3], &[false, true, false]),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn wall_clock_scores_prefer_faster_cores() {
+        // A 600 MHz QP core listed first vs a 771 MHz DP core, both
+        // free: with a nonzero estimate the DP core's completion score
+        // is earlier, so it wins despite the first-index tie-break.
+        let cfgs = vec![
+            EgpuConfig::benchmark(MemoryMode::Qp, false),
+            EgpuConfig::benchmark(MemoryMode::Dp, false),
+        ];
+        let khz = vec![600_000u64, 771_000];
+        let fleet = FleetCtx {
+            cfgs: &cfgs,
+            core_khz: &khz,
+            bus_khz: 771_000,
+        };
+        // est=1000 core cycles → 1285 bus cycles on QP, 1000 on DP.
+        assert_eq!(fleet.score(0, 0, 1000), 1285);
+        assert_eq!(fleet.score(1, 0, 1000), 1000);
+        assert_eq!(
+            provable_first_min(&fleet, &[0, 0], 1000, &[0, 0], &[true, true]),
+            Some(1)
+        );
+        // With est 0 (unknown kernel) it degrades to earliest-free.
+        assert_eq!(
+            provable_first_min(&fleet, &[0, 0], 0, &[0, 0], &[true, true]),
+            Some(0)
+        );
+    }
+
+    #[test]
+    fn to_bus_cycles_is_exact_and_monotone() {
+        assert_eq!(to_bus_cycles(600, 600_000, 771_000), 771);
+        assert_eq!(to_bus_cycles(1000, 771_000, 771_000), 1000);
+        assert_eq!(to_bus_cycles(0, 600_000, 771_000), 0);
+        // Round-up: 1 slow-core cycle still occupies ≥ its wall-clock.
+        assert_eq!(to_bus_cycles(1, 600_000, 771_000), 2);
+        let mut last = 0;
+        for c in [1u64, 7, 9, 100, 1_000_000] {
+            let b = to_bus_cycles(c, 600_000, 771_000);
+            assert!(b >= last && b >= c);
+            last = b;
+        }
+    }
+
+    #[test]
+    fn zero_cores_is_a_sim_error_not_a_panic() {
+        let err = Coordinator::new(cfg(), 0).unwrap_err();
+        assert!(err.message.contains("at least one core"), "{err}");
+        let err = Coordinator::fleet(Vec::new()).unwrap_err();
+        assert!(err.message.contains("at least one core"), "{err}");
+    }
+
+    #[test]
+    fn job_results_surface_requirements() {
+        use crate::kernels::bitonic;
+        let pcfg = EgpuConfig::benchmark_predicated(MemoryMode::Dp);
+        let mut c = Coordinator::new(pcfg, 1).unwrap();
+        let data: Vec<u32> = (0..64).map(|i| i as u32).collect();
+        let job = Job::new(bitonic::bitonic(64)).load(0, data).unload(0, 64);
+        let want = job.requires();
+        c.submit(job);
+        let rs = c.run_all().unwrap();
+        assert!(rs[0].requires.predicate_depth >= 1);
+        assert_eq!(rs[0].requires.min_shared_words, 64);
+        assert_eq!(rs[0].requires, want);
     }
 }

@@ -1,0 +1,76 @@
+//! Shared wiring for the mixed-fleet demo batch.
+//!
+//! The `egpu fleet` CLI, the perf bench's `fleet` section,
+//! `examples/fleet_serving.rs` and the heterogeneity integration test
+//! all drive the same kind of batch: a cycle of kernels with mixed
+//! feature requirements over the reference 2×DP + 2×QP fleet
+//! (`api::FleetBuilder::demo_mixed`). This module is the one
+//! definition of that batch's per-kernel data movement, so the four
+//! surfaces cannot drift (the fleet itself is already shared the same
+//! way).
+
+use super::Rng;
+use crate::kernels::{f32_bits, fft, KernelSpec};
+
+/// `(loads, unloads)` for one job: blocks DMA'd in before the run and
+/// `(base, len)` spans DMA'd out after.
+pub type JobIo = (Vec<(usize, Vec<u32>)>, Vec<(usize, usize)>);
+
+/// The demo batch's kernel cycle at dimension `n`: two any-core
+/// kernels (reduction, FFT), two DP-only ones (predicated sort, DOT
+/// reduction), and a wide-DMA transpose.
+pub fn demo_specs(n: usize) -> [KernelSpec; 5] {
+    [
+        KernelSpec::Reduction { n },
+        KernelSpec::Fft { n },
+        KernelSpec::Bitonic { n },
+        KernelSpec::ReductionDot { n },
+        KernelSpec::Transpose { n },
+    ]
+}
+
+/// Seeded input/output wiring for one demo spec. Reductions load `n`
+/// floats at 0 and unload the scalar at `n`; the sort loads and
+/// unloads `[0, n)` in place; the FFT loads `fft::shared_init` and
+/// unloads the full `[0, 2n)` complex result; the transpose loads
+/// `[0, n²)` and unloads `[n², 2n²)`.
+///
+/// # Panics
+/// On specs outside [`demo_specs`]'s repertoire.
+pub fn demo_job_io(spec: &KernelSpec, rng: &mut Rng) -> JobIo {
+    let n = spec.dim();
+    match spec {
+        KernelSpec::Reduction { .. } | KernelSpec::ReductionDot { .. } => {
+            let data: Vec<f32> = (0..n).map(|_| rng.f32_in(-2.0, 2.0)).collect();
+            (vec![(0, f32_bits(&data))], vec![(n, 1)])
+        }
+        KernelSpec::Bitonic { .. } => {
+            let data: Vec<u32> = (0..n).map(|_| rng.next_u32()).collect();
+            (vec![(0, data)], vec![(0, n)])
+        }
+        KernelSpec::Fft { .. } => {
+            let re: Vec<f32> = (0..n).map(|_| rng.f32_in(-1.0, 1.0)).collect();
+            let im = vec![0f32; n];
+            (fft::shared_init(&re, &im), vec![(0, 2 * n)])
+        }
+        KernelSpec::Transpose { .. } => {
+            let mat: Vec<u32> = (0..n * n).map(|_| rng.next_u32()).collect();
+            (vec![(0, mat)], vec![(n * n, n * n)])
+        }
+        other => panic!("no demo IO recipe for {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_demo_spec_has_io() {
+        let mut rng = Rng::new(1);
+        for spec in demo_specs(64) {
+            let (loads, unloads) = demo_job_io(&spec, &mut rng);
+            assert!(!loads.is_empty() && !unloads.is_empty(), "{spec}");
+        }
+    }
+}

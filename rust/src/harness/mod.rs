@@ -12,11 +12,13 @@
 //!   benches, the CLI and `examples/full_eval.rs`
 
 pub mod bench;
+pub mod fleet_demo;
 pub mod rng;
 pub mod suite;
 pub mod table;
 
 pub use bench::{sim_rate, time, Timing};
+pub use fleet_demo::{demo_job_io, demo_specs, JobIo};
 pub use rng::Rng;
 pub use suite::{paper_cycles, run_all, BenchResult, Benchmark, Measurement, Variant};
 pub use table::{vs_paper, within_band, Table};

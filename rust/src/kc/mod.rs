@@ -86,6 +86,17 @@ pub struct ScheduleStats {
 }
 
 impl ScheduleStats {
+    /// Straight-line cycle estimate of the mode the kernel actually
+    /// emitted — the figure wall-clock-aware fleet placement scales by
+    /// a core's clock when choosing among eligible cores.
+    pub fn static_cycles_emitted(&self) -> u64 {
+        match self.mode {
+            SchedMode::List => self.static_cycles_scheduled,
+            SchedMode::Linear => self.static_cycles_linear,
+            SchedMode::Fenced => self.static_cycles_fenced,
+        }
+    }
+
     /// NOPs eliminated by list scheduling relative to in-order padding.
     pub fn nops_filled(&self) -> usize {
         self.nops_linear.saturating_sub(self.nops_scheduled)

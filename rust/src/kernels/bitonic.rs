@@ -39,13 +39,19 @@ pub fn bitonic_for(n: usize, memory: MemoryMode) -> Kernel {
 /// Schedule-mode-aware build (List = default; Fenced = the
 /// schedule-disabled correctness oracle; Linear = in-order padding).
 pub fn bitonic_mode(n: usize, memory: MemoryMode, mode: SchedMode) -> Kernel {
+    bitonic_cfg(n, memory, WordLayout::for_regs(32), mode)
+}
+
+/// Fully specialized build: target memory organization *and* register
+/// layout (the kernel-specialization cache's entry point).
+pub fn bitonic_cfg(n: usize, memory: MemoryMode, layout: WordLayout, mode: SchedMode) -> Kernel {
     assert!(
         n.is_power_of_two() && (MIN_N..=MAX_N).contains(&n),
         "n must be a power of two in [{MIN_N}, {MAX_N}]"
     );
     let threads = (n / 2).max(WAVEFRONT_WIDTH);
     let name = format!("bitonic-{n}");
-    let mut b = KernelBuilder::new(&name, threads, WordLayout::for_regs(32), memory);
+    let mut b = KernelBuilder::new(&name, threads, layout, memory);
     b.comment("t = pair index; constants one, zero");
     let t = b.tdx();
     let one = b.ldi(1);

@@ -1,0 +1,115 @@
+//! The kernel-specialization cache.
+//!
+//! Compiling-and-scheduling a kernel is pure: the output depends only
+//! on the `(generator, dim)` pair — a [`KernelSpec`] — and the two
+//! configuration axes the compiler consumes (memory organization and
+//! register layout), which [`EgpuConfig::fingerprint`] condenses to a
+//! key. So a fleet serving repeated launches should compile each
+//! specialization exactly once, however many streams, batches or cores
+//! replay it. This cache is that memoization point, shared (via `Arc`)
+//! by `Gpu::launch_spec`, `GpuArray`/`Stream` submission and the fleet
+//! dispatcher.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{Kernel, KernelSpec};
+use crate::sim::config::EgpuConfig;
+
+/// Counters proving the compile-once property (asserted by
+/// `rust/tests/fleet_heterogeneous.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    /// Specializations compiled (unique `(spec, fingerprint)` pairs).
+    pub compiles: u64,
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+}
+
+/// Memoizes compiled kernels per `(spec, config fingerprint)`.
+#[derive(Debug, Default)]
+pub struct KernelCache {
+    entries: Mutex<HashMap<(KernelSpec, u64), Arc<Kernel>>>,
+    compiles: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl KernelCache {
+    pub fn new() -> KernelCache {
+        KernelCache::default()
+    }
+
+    /// A fresh cache behind an `Arc`, ready to share across devices.
+    pub fn shared() -> Arc<KernelCache> {
+        Arc::new(KernelCache::new())
+    }
+
+    /// The kernel for `spec` specialized to `cfg`, compiling at most
+    /// once per `(spec, cfg.fingerprint())`. The compile happens under
+    /// the lock — dispatchers are single-threaded, and holding it keeps
+    /// a racing second caller from compiling the same entry twice.
+    pub fn get(&self, spec: &KernelSpec, cfg: &EgpuConfig) -> Result<Arc<Kernel>, String> {
+        let key = (*spec, cfg.fingerprint());
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(k) = entries.get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(k));
+        }
+        let kernel = Arc::new(spec.build(cfg)?);
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        entries.insert(key, Arc::clone(&kernel));
+        Ok(kernel)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            compiles: self.compiles.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            entries: self.entries.lock().unwrap().len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::MemoryMode;
+
+    #[test]
+    fn one_compile_per_spec_and_fingerprint() {
+        let cache = KernelCache::new();
+        let spec = KernelSpec::Reduction { n: 64 };
+        let dp = EgpuConfig::benchmark(MemoryMode::Dp, false);
+        let qp = EgpuConfig::benchmark(MemoryMode::Qp, false);
+
+        let a = cache.get(&spec, &dp).unwrap();
+        let b = cache.get(&spec, &dp).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit");
+        assert_eq!(cache.stats().compiles, 1);
+        assert_eq!(cache.stats().hits, 1);
+
+        // A different fingerprint compiles separately...
+        cache.get(&spec, &qp).unwrap();
+        assert_eq!(cache.stats().compiles, 2);
+        // ...but a config differing only in non-compile axes does not.
+        let mut renamed = dp.clone();
+        renamed.name = "other".into();
+        renamed.predicate_levels = 8;
+        renamed.shared_kb = 256;
+        cache.get(&spec, &renamed).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.compiles, s.hits, s.entries), (2, 2, 2));
+    }
+
+    #[test]
+    fn build_errors_are_not_cached() {
+        let cache = KernelCache::new();
+        let bad = KernelSpec::Bitonic { n: 7 };
+        assert!(cache.get(&bad, &EgpuConfig::default()).is_err());
+        let s = cache.stats();
+        assert_eq!((s.compiles, s.entries), (0, 0));
+    }
+}

@@ -40,6 +40,12 @@ pub fn fft_for(n: usize, memory: MemoryMode) -> Kernel {
 /// Schedule-mode-aware build (List = default; Fenced = the
 /// schedule-disabled correctness oracle; Linear = in-order padding).
 pub fn fft_mode(n: usize, memory: MemoryMode, mode: SchedMode) -> Kernel {
+    fft_cfg(n, memory, WordLayout::for_regs(32), mode)
+}
+
+/// Fully specialized build: target memory organization *and* register
+/// layout (the kernel-specialization cache's entry point).
+pub fn fft_cfg(n: usize, memory: MemoryMode, layout: WordLayout, mode: SchedMode) -> Kernel {
     assert!(
         n.is_power_of_two() && (MIN_N..=MAX_N).contains(&n),
         "n must be a power of two in [{MIN_N}, {MAX_N}]"
@@ -53,7 +59,7 @@ pub fn fft_mode(n: usize, memory: MemoryMode, mode: SchedMode) -> Kernel {
     let sim = 4 * n;
 
     let name = format!("fft-{n}");
-    let mut b = KernelBuilder::new(&name, threads, WordLayout::for_regs(32), memory);
+    let mut b = KernelBuilder::new(&name, threads, layout, memory);
     b.comment("t = butterfly index; one = 1; shv = 32 - log2n (BVS shift)");
     let t = b.tdx();
     let one = b.ldi(1);

@@ -39,6 +39,12 @@ pub fn fft4_for(n: usize, memory: MemoryMode) -> Kernel {
 /// Schedule-mode-aware build (List = default; Fenced = the
 /// schedule-disabled correctness oracle; Linear = in-order padding).
 pub fn fft4_mode(n: usize, memory: MemoryMode, mode: SchedMode) -> Kernel {
+    fft4_cfg(n, memory, WordLayout::for_regs(32), mode)
+}
+
+/// Fully specialized build: target memory organization *and* register
+/// layout (the kernel-specialization cache's entry point).
+pub fn fft4_cfg(n: usize, memory: MemoryMode, layout: WordLayout, mode: SchedMode) -> Kernel {
     assert!(supported(n), "n must be a power of 4 in [64, 1024]");
     let threads = (n / 4).max(WAVEFRONT_WIDTH);
     let log2n = n.trailing_zeros();
@@ -50,7 +56,7 @@ pub fn fft4_mode(n: usize, memory: MemoryMode, mode: SchedMode) -> Kernel {
     let sim = 5 * n;
 
     let name = format!("fft4-{n}");
-    let mut b = KernelBuilder::new(&name, threads, WordLayout::for_regs(32), memory);
+    let mut b = KernelBuilder::new(&name, threads, layout, memory);
     b.comment("t = butterfly index; constants: one, shv = 32-log2n, 0x55555555 mask");
     let t = b.tdx();
     let one = b.ldi(1);

@@ -66,6 +66,12 @@ pub fn mmm_for(n: usize, memory: MemoryMode) -> Kernel {
 /// Schedule-mode-aware build (List = default; Fenced = the
 /// schedule-disabled correctness oracle; Linear = in-order padding).
 pub fn mmm_mode(n: usize, memory: MemoryMode, mode: SchedMode) -> Kernel {
+    mmm_cfg(n, memory, WordLayout::for_regs(32), mode)
+}
+
+/// Fully specialized build: target memory organization *and* register
+/// layout (the kernel-specialization cache's entry point).
+pub fn mmm_cfg(n: usize, memory: MemoryMode, layout: WordLayout, mode: SchedMode) -> Kernel {
     check_n(n);
     let threads = (n / 2).max(WAVEFRONT_WIDTH);
     let waves = threads / WAVEFRONT_WIDTH;
@@ -74,7 +80,7 @@ pub fn mmm_mode(n: usize, memory: MemoryMode, mode: SchedMode) -> Kernel {
     let log2n = n.trailing_zeros();
 
     let name = format!("mmm-{n}");
-    let mut b = KernelBuilder::new(&name, threads, WordLayout::for_regs(32), memory);
+    let mut b = KernelBuilder::new(&name, threads, layout, memory);
     b.comment("t = k-lane, arow = A addr i*n+t, bcol = B addr t*n+j, ci = C index i*n+j");
     let t = b.tdx();
     let cn = b.ldi(n as i64);
@@ -150,13 +156,19 @@ pub fn mmm_dot(n: usize) -> Kernel {
 }
 
 pub fn mmm_dot_mode(n: usize, mode: SchedMode) -> Kernel {
+    mmm_dot_cfg(n, MemoryMode::Dp, WordLayout::for_regs(32), mode)
+}
+
+/// Fully specialized DOT-core build (memory mode drives the scheduler's
+/// port-cost model exactly like the tree variant).
+pub fn mmm_dot_cfg(n: usize, memory: MemoryMode, layout: WordLayout, mode: SchedMode) -> Kernel {
     check_n(n);
     let threads = n;
     let n2 = n * n;
     let log2n = n.trailing_zeros();
 
     let name = format!("mmm-dot-{n}");
-    let mut b = KernelBuilder::new(&name, threads, WordLayout::for_regs(32), MemoryMode::Dp);
+    let mut b = KernelBuilder::new(&name, threads, layout, memory);
     b.comment("t = k-lane, arow = A addr, bcol = B addr, ci = C index + 1");
     let t = b.tdx();
     let cn = b.ldi(n as i64);

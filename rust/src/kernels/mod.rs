@@ -22,17 +22,22 @@
 //! and the Table 7/8 benches report cycles.
 
 pub mod bitonic;
+mod cache;
 pub mod fft;
 pub mod fft4;
 pub mod mmm;
 pub mod reduction;
 pub mod sched;
+mod spec;
 pub mod transpose;
 
+pub use cache::{CacheStats, KernelCache};
+pub use spec::KernelSpec;
+
 use crate::asm::{assemble, Program};
-use crate::isa::DepthSel;
+use crate::isa::{DepthSel, WordLayout};
 use crate::kc;
-use crate::sim::config::EgpuConfig;
+use crate::sim::config::{EgpuConfig, FeatureSet};
 use crate::sim::{Machine, RunStats, SimError};
 
 /// A generated benchmark kernel.
@@ -91,6 +96,26 @@ impl Kernel {
             program: Some(c.program),
             sched: Some(c.stats),
         }
+    }
+
+    /// What this kernel demands of a configuration: the feature axes
+    /// scanned off its instruction stream plus its thread count. Used
+    /// by the fleet dispatcher to route jobs onto capable cores.
+    ///
+    /// Kernels carrying a compiled program are scanned directly; raw
+    /// assembly is parsed against the widest register layout (the most
+    /// permissive read — register usage still surfaces in `min_regs`).
+    /// Unparseable assembly yields the kernel's capacity floors only;
+    /// the real error then surfaces at assemble/load time, as before.
+    pub fn requirements(&self) -> FeatureSet {
+        let mut req = match &self.program {
+            Some(p) => FeatureSet::required_by(p.instrs.iter()),
+            None => assemble(&self.asm, WordLayout::for_regs(64))
+                .map(|p| FeatureSet::required_by(p.instrs.iter()))
+                .unwrap_or_default(),
+        };
+        req.min_threads = self.threads;
+        req
     }
 
     /// The program for a configuration: the directly lowered program when
@@ -164,6 +189,29 @@ mod tests {
         assert_eq!(depth_for(32, 8), Some(DepthSel::Quarter));
         assert_eq!(depth_for(32, 1), Some(DepthSel::Wave0));
         assert_eq!(depth_for(32, 4), None);
+    }
+
+    #[test]
+    fn requirements_reflect_the_instruction_stream() {
+        let pred = bitonic::bitonic(64).requirements();
+        assert!(pred.predicate_depth >= 1, "{pred}");
+        assert!(!pred.dot_core);
+        assert_eq!(pred.min_threads, 32);
+
+        let dot = reduction::reduction_dot(64).requirements();
+        assert!(dot.dot_core, "{dot}");
+        assert_eq!(dot.predicate_depth, 0);
+
+        let plain = reduction::reduction(64).requirements();
+        assert!(EgpuConfig::benchmark(crate::sim::MemoryMode::Dp, false).satisfies(&plain));
+
+        // Raw-asm kernels are scanned through the permissive assembler.
+        let k = Kernel::from_asm("t", "if.lt.u32 r0, r1\nendif\nstop\n", 16, 16);
+        assert_eq!(k.requirements().predicate_depth, 1);
+        // Unparseable asm degrades to capacity floors only.
+        let bad = Kernel::from_asm("t", "not a program\n", 16, 16);
+        assert_eq!(bad.requirements().min_threads, 16);
+        assert_eq!(bad.requirements().predicate_depth, 0);
     }
 
     #[test]

@@ -24,10 +24,17 @@ pub fn reduction(n: usize) -> Kernel {
 /// Schedule-mode-aware build (List = default; Fenced = the
 /// schedule-disabled correctness oracle; Linear = in-order padding).
 pub fn reduction_mode(n: usize, mode: SchedMode) -> Kernel {
+    reduction_cfg(n, MemoryMode::Dp, WordLayout::for_regs(32), mode)
+}
+
+/// Fully specialized build: target memory organization *and* register
+/// layout (the kernel-specialization cache's entry point — under QP the
+/// scheduler sees the doubled store bandwidth).
+pub fn reduction_cfg(n: usize, memory: MemoryMode, layout: WordLayout, mode: SchedMode) -> Kernel {
     assert!(n.is_power_of_two() && n >= 32, "n must be a power of two ≥ 32");
     let total_waves = n / WAVEFRONT_WIDTH;
     let name = format!("reduction-{n}");
-    let mut b = KernelBuilder::new(&name, n, WordLayout::for_regs(32), MemoryMode::Dp);
+    let mut b = KernelBuilder::new(&name, n, layout, memory);
     let t = b.tdx();
 
     b.comment("fold pairs through shared memory until 16 partials remain");
@@ -78,9 +85,19 @@ pub fn reduction_dot(n: usize) -> Kernel {
 }
 
 pub fn reduction_dot_mode(n: usize, mode: SchedMode) -> Kernel {
+    reduction_dot_cfg(n, MemoryMode::Dp, WordLayout::for_regs(32), mode)
+}
+
+/// Fully specialized DOT-core build.
+pub fn reduction_dot_cfg(
+    n: usize,
+    memory: MemoryMode,
+    layout: WordLayout,
+    mode: SchedMode,
+) -> Kernel {
     assert!(n.is_power_of_two() && n >= 32);
     let name = format!("reduction-dot-{n}");
-    let mut b = KernelBuilder::new(&name, n, WordLayout::for_regs(32), MemoryMode::Dp);
+    let mut b = KernelBuilder::new(&name, n, layout, memory);
     let t = b.tdx();
     let x = b.lod(t, 0);
     b.comment("SUM streams all wavefronts into the reduction core");
@@ -105,9 +122,19 @@ pub fn reduction_predicated(n: usize) -> Kernel {
 }
 
 pub fn reduction_predicated_mode(n: usize, mode: SchedMode) -> Kernel {
+    reduction_predicated_cfg(n, MemoryMode::Dp, WordLayout::for_regs(32), mode)
+}
+
+/// Fully specialized predicated-ablation build.
+pub fn reduction_predicated_cfg(
+    n: usize,
+    memory: MemoryMode,
+    layout: WordLayout,
+    mode: SchedMode,
+) -> Kernel {
     assert!(n.is_power_of_two() && n >= 32);
     let name = format!("reduction-pred-{n}");
-    let mut b = KernelBuilder::new(&name, n, WordLayout::for_regs(32), MemoryMode::Dp);
+    let mut b = KernelBuilder::new(&name, n, layout, memory);
     let t = b.tdx();
     let mut span = n / 2;
     while span >= 1 {

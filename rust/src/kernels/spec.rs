@@ -1,0 +1,220 @@
+//! Kernel *specifications*: what to compute, decoupled from the
+//! configuration it is compiled for.
+//!
+//! The generators in this crate ([`reduction`](super::reduction),
+//! [`transpose`](super::transpose), …) eagerly compile for one fixed
+//! target (DP memory, 32-register layout). A [`KernelSpec`] instead
+//! names the `(generator, dim)` pair and defers the compile until a
+//! concrete [`EgpuConfig`] is known — which is what a heterogeneous
+//! fleet needs (the same logical kernel specializes differently per
+//! memory mode and register layout) and what the
+//! [`KernelCache`](super::KernelCache) keys on.
+
+use super::{bitonic, fft, fft4, mmm, reduction, transpose, Kernel};
+use crate::kc::SchedMode;
+use crate::sim::config::EgpuConfig;
+
+/// A `(generator, dim)` pair: the identity of a kernel before it is
+/// specialized to a configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelSpec {
+    Reduction { n: usize },
+    ReductionDot { n: usize },
+    ReductionPredicated { n: usize },
+    Transpose { n: usize },
+    Mmm { n: usize },
+    MmmDot { n: usize },
+    Bitonic { n: usize },
+    Fft { n: usize },
+    Fft4 { n: usize },
+}
+
+impl KernelSpec {
+    /// Parse a CLI-style kernel name ("reduction", "mmm-dot", …) plus a
+    /// dimension. Returns `None` for unknown names.
+    pub fn parse(name: &str, n: usize) -> Option<KernelSpec> {
+        use KernelSpec::*;
+        Some(match name {
+            "reduction" => Reduction { n },
+            "reduction-dot" => ReductionDot { n },
+            "reduction-pred" => ReductionPredicated { n },
+            "transpose" => Transpose { n },
+            "mmm" => Mmm { n },
+            "mmm-dot" => MmmDot { n },
+            "bitonic" => Bitonic { n },
+            "fft" => Fft { n },
+            "fft4" => Fft4 { n },
+            _ => return None,
+        })
+    }
+
+    /// The generator's CLI name.
+    pub fn generator(&self) -> &'static str {
+        use KernelSpec::*;
+        match self {
+            Reduction { .. } => "reduction",
+            ReductionDot { .. } => "reduction-dot",
+            ReductionPredicated { .. } => "reduction-pred",
+            Transpose { .. } => "transpose",
+            Mmm { .. } => "mmm",
+            MmmDot { .. } => "mmm-dot",
+            Bitonic { .. } => "bitonic",
+            Fft { .. } => "fft",
+            Fft4 { .. } => "fft4",
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        use KernelSpec::*;
+        match *self {
+            Reduction { n }
+            | ReductionDot { n }
+            | ReductionPredicated { n }
+            | Transpose { n }
+            | Mmm { n }
+            | MmmDot { n }
+            | Bitonic { n }
+            | Fft { n }
+            | Fft4 { n } => n,
+        }
+    }
+
+    /// Is the dimension inside the generator's supported envelope? The
+    /// generators `assert!` their constraints; this is the checkable
+    /// front door ([`KernelSpec::build`] refuses instead of panicking).
+    pub fn valid_dim(&self) -> bool {
+        use KernelSpec::*;
+        let n = self.dim();
+        match self {
+            // The narrowing tree needs Table 3-expressible prefixes per
+            // level.
+            Reduction { .. } => matches!(n, 32 | 64 | 128),
+            // One thread per element; 512 is the thread-space cap.
+            ReductionDot { .. } | ReductionPredicated { .. } => {
+                n.is_power_of_two() && (32..=512).contains(&n)
+            }
+            Transpose { .. } => n.is_power_of_two() && (32..=transpose::MAX_N).contains(&n),
+            Mmm { .. } | MmmDot { .. } => n.is_power_of_two() && (32..=mmm::MAX_N).contains(&n),
+            Bitonic { .. } => {
+                n.is_power_of_two() && (bitonic::MIN_N..=bitonic::MAX_N).contains(&n)
+            }
+            Fft { .. } => n.is_power_of_two() && (fft::MIN_N..=fft::MAX_N).contains(&n),
+            Fft4 { .. } => fft4::supported(n),
+        }
+    }
+
+    /// Compile-and-schedule this kernel for a configuration: the memory
+    /// mode drives the scheduler's port-cost model, the register-file
+    /// size picks the word layout and the allocator budget. Two configs
+    /// with equal [`EgpuConfig::fingerprint`]s get byte-identical
+    /// results, which is the invariant the [`super::KernelCache`]
+    /// relies on.
+    pub fn build(&self, cfg: &EgpuConfig) -> Result<Kernel, String> {
+        self.build_mode(cfg, SchedMode::List)
+    }
+
+    /// [`KernelSpec::build`] with an explicit schedule mode.
+    pub fn build_mode(&self, cfg: &EgpuConfig, mode: SchedMode) -> Result<Kernel, String> {
+        use KernelSpec::*;
+        if !self.valid_dim() {
+            return Err(format!(
+                "kernel '{}' does not support DIM {}",
+                self.generator(),
+                self.dim()
+            ));
+        }
+        let n = self.dim();
+        let layout = cfg.word_layout();
+        let memory = cfg.memory;
+        Ok(match self {
+            Reduction { .. } => reduction::reduction_cfg(n, memory, layout, mode),
+            ReductionDot { .. } => reduction::reduction_dot_cfg(n, memory, layout, mode),
+            ReductionPredicated { .. } => {
+                reduction::reduction_predicated_cfg(n, memory, layout, mode)
+            }
+            Transpose { .. } => transpose::transpose_cfg(n, memory, layout, mode),
+            Mmm { .. } => mmm::mmm_cfg(n, memory, layout, mode),
+            MmmDot { .. } => mmm::mmm_dot_cfg(n, memory, layout, mode),
+            Bitonic { .. } => bitonic::bitonic_cfg(n, memory, layout, mode),
+            Fft { .. } => fft::fft_cfg(n, memory, layout, mode),
+            Fft4 { .. } => fft4::fft4_cfg(n, memory, layout, mode),
+        })
+    }
+
+    /// A fully-featured reference target (DP memory, 32-register
+    /// layout): the default build configuration for tooling (`egpu
+    /// sched`) and tests. Its fingerprint coincides with the common
+    /// benchmark configurations, so builds against it are shared with
+    /// any (DP, 32-reg) fleet core. Fleet dispatchers derive job
+    /// requirements from their *own* first core's build instead
+    /// (`Coordinator::job_from_spec`), keeping the cache at one compile
+    /// per fingerprint actually present.
+    pub fn canonical_config() -> EgpuConfig {
+        let mut cfg = EgpuConfig::benchmark(crate::sim::config::MemoryMode::Dp, true);
+        cfg.predicate_levels = 8;
+        cfg.name = "spec-canonical".into();
+        cfg
+    }
+}
+
+impl std::fmt::Display for KernelSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}-{}", self.generator(), self.dim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::config::MemoryMode;
+
+    #[test]
+    fn parse_round_trips_generator_names() {
+        for name in [
+            "reduction", "reduction-dot", "reduction-pred", "transpose", "mmm", "mmm-dot",
+            "bitonic", "fft", "fft4",
+        ] {
+            let spec = KernelSpec::parse(name, 64).unwrap();
+            assert_eq!(spec.generator(), name);
+            assert_eq!(spec.dim(), 64);
+        }
+        assert!(KernelSpec::parse("sort", 64).is_none());
+    }
+
+    #[test]
+    fn invalid_dims_refuse_instead_of_panicking() {
+        assert!(!KernelSpec::Reduction { n: 48 }.valid_dim());
+        let err = KernelSpec::Reduction { n: 48 }
+            .build(&KernelSpec::canonical_config())
+            .unwrap_err();
+        assert!(err.contains("DIM 48"), "{err}");
+    }
+
+    #[test]
+    fn builds_specialize_per_memory_mode_and_layout() {
+        let spec = KernelSpec::Fft { n: 64 };
+        let dp = spec.build(&EgpuConfig::benchmark(MemoryMode::Dp, false)).unwrap();
+        let qp = spec.build(&EgpuConfig::benchmark(MemoryMode::Qp, false)).unwrap();
+        // Same logical kernel, same name, same thread shape...
+        assert_eq!(dp.name, qp.name);
+        assert_eq!(dp.threads, qp.threads);
+        assert_eq!(dp.dim_x, qp.dim_x);
+        // ...but the QP schedule sees doubled store bandwidth.
+        let (sd, sq) = (dp.sched.unwrap(), qp.sched.unwrap());
+        assert!(
+            sq.static_cycles_scheduled <= sd.static_cycles_scheduled,
+            "QP {} vs DP {}",
+            sq.static_cycles_scheduled,
+            sd.static_cycles_scheduled
+        );
+        // A 64-register config compiles to a different word layout.
+        let mut wide = EgpuConfig::benchmark(MemoryMode::Dp, false);
+        wide.regs_per_thread = 64;
+        let w = spec.build(&wide).unwrap();
+        assert_eq!(w.program.as_ref().unwrap().layout, wide.word_layout());
+        assert_ne!(
+            w.program.as_ref().unwrap().layout,
+            dp.program.as_ref().unwrap().layout
+        );
+    }
+}

@@ -40,6 +40,13 @@ pub fn transpose_for(n: usize, memory: MemoryMode) -> Kernel {
 /// Schedule-mode-aware build (List = default; Fenced = the
 /// schedule-disabled correctness oracle; Linear = in-order padding).
 pub fn transpose_mode(n: usize, memory: MemoryMode, mode: SchedMode) -> Kernel {
+    transpose_cfg(n, memory, WordLayout::for_regs(32), mode)
+}
+
+/// Fully specialized build: target memory organization *and* register
+/// layout (the kernel-specialization cache's entry point — one compile
+/// per [`crate::sim::EgpuConfig::fingerprint`]).
+pub fn transpose_cfg(n: usize, memory: MemoryMode, layout: WordLayout, mode: SchedMode) -> Kernel {
     assert!(
         n.is_power_of_two() && (32..=MAX_N).contains(&n),
         "n must be a power of two in [32, {MAX_N}]"
@@ -50,7 +57,7 @@ pub fn transpose_mode(n: usize, memory: MemoryMode, mode: SchedMode) -> Kernel {
     let out = n * n;
 
     let name = format!("transpose-{n}");
-    let mut b = KernelBuilder::new(&name, threads, WordLayout::for_regs(32), memory);
+    let mut b = KernelBuilder::new(&name, threads, layout, memory);
     b.comment("g = element index, dest = transposed index col*n + row");
     let g = b.tdx();
     let mask = b.ldi((n - 1) as i64);

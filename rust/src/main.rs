@@ -12,17 +12,18 @@
 
 use std::process::ExitCode;
 
-use egpu::api::{ApiError, Backend, Gpu, DEFAULT_CYCLE_BUDGET};
+use egpu::api::{ApiError, Backend, FleetBuilder, Gpu, KernelSpec, DEFAULT_CYCLE_BUDGET};
 use egpu::asm::assemble;
-use egpu::harness::{suite, Table, Variant};
+use egpu::harness::{demo_job_io, demo_specs, suite, Rng, Table, Variant};
 use egpu::isa::Group;
-use egpu::kernels::{bitonic, fft, fft4, mmm, reduction, transpose, Kernel};
+use egpu::kernels::Kernel;
 use egpu::model::alu_model::TABLE6;
 use egpu::model::cost::{ppa_metric, TABLE1_PUBLISHED};
 use egpu::model::frequency::FrequencyReport;
 use egpu::model::resources::ResourceReport;
 use egpu::place;
 use egpu::runtime::default_artifacts_dir;
+use egpu::sim::config_json;
 use egpu::sim::{EgpuConfig, MemoryMode};
 
 fn main() -> ExitCode {
@@ -35,6 +36,7 @@ fn main() -> ExitCode {
         "profile" => cmd_profile(),
         "place" => cmd_place(rest),
         "run" => cmd_run(rest),
+        "fleet" => cmd_fleet(rest),
         "sched" => cmd_sched(rest),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -64,9 +66,19 @@ COMMANDS:
   profile           print the Figure 6 instruction-mix profiles
   place [PRESET]    place a configuration into an Agilex sector (Figures 4/5)
   run FILE.asm [--threads N] [--qp] [--xla] [--max-cycles N] [--cores N]
+               [--config CFG.json]
                     assemble and run a program, dumping stats;
                     --cores N runs it on every core of an N-core GpuArray
-                    (one stream per core, parallel worker dispatch)
+                    (one stream per core, parallel worker dispatch);
+                    --config loads the device configuration from JSON
+                    (overrides --qp)
+  fleet [--configs a.json,b.json] [--jobs N] [--seq]
+                    dispatch a mixed kernel batch across a heterogeneous
+                    fleet (default: 2 x 771 MHz DP-full + 2 x 600 MHz
+                    QP cores), printing per-job placement, per-core
+                    utilization and kernel-cache statistics; --configs
+                    loads the fleet from JSON files (each holding one
+                    config or an array); --seq uses sequential dispatch
   sched KERNEL [DIM]
                     print a kernel's list-scheduled listing and the
                     static schedule stats (fenced / padded / scheduled)
@@ -252,9 +264,14 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let mut use_xla = false;
     let mut max_cycles = DEFAULT_CYCLE_BUDGET;
     let mut cores = 1usize;
+    let mut config_path: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
+            "--config" => {
+                i += 1;
+                config_path = Some(args.get(i).cloned().ok_or("--config needs a path")?);
+            }
             "--threads" => {
                 i += 1;
                 threads = Some(
@@ -286,12 +303,22 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
         i += 1;
     }
     let file = file.ok_or(
-        "usage: egpu run FILE.asm [--threads N] [--qp] [--xla] [--max-cycles N] [--cores N]",
+        "usage: egpu run FILE.asm [--threads N] [--qp] [--xla] [--max-cycles N] \
+         [--cores N] [--config CFG.json]",
     )?;
     let src = std::fs::read_to_string(&file).map_err(|e| format!("{file}: {e}"))?;
 
-    let mut cfg = EgpuConfig::benchmark(memory, true);
-    cfg.predicate_levels = 8;
+    let cfg = match &config_path {
+        Some(path) => {
+            let json = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            config_json::config_from_json(&json).map_err(|e| format!("{path}: {e}"))?
+        }
+        None => {
+            let mut cfg = EgpuConfig::benchmark(memory, true);
+            cfg.predicate_levels = 8;
+            cfg
+        }
+    };
     let prog = assemble(&src, cfg.word_layout()).map_err(|e| format!("{file}: {e}"))?;
     println!(
         "assembled {} instructions ({} M20Ks of program store)",
@@ -395,6 +422,130 @@ fn run_multi_core(
     Ok(())
 }
 
+/// `egpu fleet`: batch a mixed kernel set across a heterogeneous fleet
+/// and print placement, per-core utilization and cache statistics.
+fn cmd_fleet(args: &[String]) -> Result<(), String> {
+    let mut cfg_paths: Option<String> = None;
+    let mut jobs = 8usize;
+    let mut sequential = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--configs" => {
+                i += 1;
+                cfg_paths = Some(args.get(i).cloned().ok_or("--configs needs path[,path...]")?);
+            }
+            "--jobs" => {
+                i += 1;
+                jobs = args
+                    .get(i)
+                    .and_then(|s| s.parse::<usize>().ok())
+                    .filter(|&j| j >= 1)
+                    .ok_or("--jobs needs a positive number")?;
+            }
+            "--seq" => sequential = true,
+            other => return Err(format!("unknown flag '{other}'")),
+        }
+        i += 1;
+    }
+
+    // Default: the reference 2 × 771 MHz DP-full + 2 × 600 MHz QP mix.
+    let mut builder = FleetBuilder::demo_mixed();
+    if let Some(paths) = cfg_paths {
+        builder = FleetBuilder::new();
+        for path in paths.split(',') {
+            let json = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            let parsed =
+                config_json::configs_from_json(&json).map_err(|e| format!("{path}: {e}"))?;
+            for cfg in parsed {
+                builder = builder.core(cfg);
+            }
+        }
+    }
+    let mut fleet = builder.build().map_err(|e| e.to_string())?;
+    if sequential {
+        fleet.set_parallel(false);
+    }
+
+    // A mixed batch: feature-hungry kernels (predicates, dot core) next
+    // to kernels any core can run — the shared demo wiring, so the CLI,
+    // bench and example stay in lockstep.
+    let n = 64usize;
+    let mut rng = Rng::new(0xF1EE7);
+    let specs = demo_specs(n);
+    for j in 0..jobs {
+        let spec = specs[j % specs.len()];
+        let (loads, unloads) = demo_job_io(&spec, &mut rng);
+        let mut launch = fleet.launch_spec_any(spec).map_err(|e| e.to_string())?;
+        for (base, data) in loads {
+            launch = launch.input_words(base, data);
+        }
+        for (base, len) in unloads {
+            launch = launch.output(base, len);
+        }
+        launch.submit();
+    }
+    let reports = fleet.sync().map_err(|e| e.to_string())?;
+
+    let mut t = Table::new(format!(
+        "Fleet placement — {} jobs over {} cores (bus at {:.0} MHz)",
+        reports.len(),
+        fleet.num_cores(),
+        fleet.coordinator().bus_mhz(),
+    ));
+    t.headers(["job", "core", "config", "MHz", "cycles", "time(us)", "requires"]);
+    for r in &reports {
+        let cfg = &fleet.core_configs()[r.core];
+        let mhz = fleet.coordinator().core_mhz(r.core);
+        t.row([
+            r.name.clone(),
+            r.core.to_string(),
+            cfg.name.clone(),
+            format!("{mhz:.0}"),
+            r.compute_cycles.to_string(),
+            format!("{:.2}", r.compute_cycles as f64 / mhz),
+            r.requires.to_string(),
+        ]);
+    }
+    t.print();
+    println!();
+
+    let util = fleet.core_utilization();
+    let mut t = Table::new("Per-core utilization");
+    t.headers(["core", "config", "MHz", "jobs", "busy", "util"]);
+    for c in 0..fleet.num_cores() {
+        let placed = reports.iter().filter(|r| r.core == c).count();
+        let busy: u64 = reports
+            .iter()
+            .filter(|r| r.core == c)
+            .map(|r| r.end - r.start)
+            .sum();
+        t.row([
+            c.to_string(),
+            fleet.core_configs()[c].name.clone(),
+            format!("{:.0}", fleet.coordinator().core_mhz(c)),
+            placed.to_string(),
+            busy.to_string(),
+            format!("{:.1}%", util[c] * 100.0),
+        ]);
+    }
+    t.print();
+
+    let stats = fleet.kernel_cache().stats();
+    let span_us = fleet.makespan_us();
+    println!(
+        "\nkernel cache: {} compiles, {} hits, {} entries \
+         (one compile per kernel x config fingerprint)",
+        stats.compiles, stats.hits, stats.entries
+    );
+    println!(
+        "makespan: {} bus cycles ({span_us:.2} us) — {:.0} modeled jobs/s",
+        fleet.makespan(),
+        reports.len() as f64 / (span_us * 1e-6)
+    );
+    Ok(())
+}
+
 /// `egpu sched KERNEL [DIM]`: print the compiler's scheduled listing and
 /// the static-schedule statistics for one benchmark kernel.
 fn cmd_sched(args: &[String]) -> Result<(), String> {
@@ -407,35 +558,11 @@ fn cmd_sched(args: &[String]) -> Result<(), String> {
         None => None,
     };
     let n = dim.unwrap_or(64);
-    // Validate against the generators' size constraints up front so a bad
-    // DIM is a usage error, not a panic inside the generator's assert.
-    let dim_ok = match name {
-        // The narrowing tree needs Table 3-expressible prefixes per level.
-        "reduction" => matches!(n, 32 | 64 | 128),
-        // One thread per element; 512 is the benchmark thread-space cap.
-        "reduction-dot" | "reduction-pred" => n.is_power_of_two() && (32..=512).contains(&n),
-        "transpose" => n.is_power_of_two() && (32..=transpose::MAX_N).contains(&n),
-        "mmm" | "mmm-dot" => n.is_power_of_two() && (32..=mmm::MAX_N).contains(&n),
-        "bitonic" => n.is_power_of_two() && (bitonic::MIN_N..=bitonic::MAX_N).contains(&n),
-        "fft" => n.is_power_of_two() && (fft::MIN_N..=fft::MAX_N).contains(&n),
-        "fft4" => fft4::supported(n),
-        other => return Err(format!("unknown kernel '{other}'\n{usage}")),
-    };
-    if !dim_ok {
-        return Err(format!("kernel '{name}' does not support DIM {n}"));
-    }
-    let kernel = match name {
-        "reduction" => reduction::reduction(n),
-        "reduction-dot" => reduction::reduction_dot(n),
-        "reduction-pred" => reduction::reduction_predicated(n),
-        "transpose" => transpose::transpose(n),
-        "mmm" => mmm::mmm(n),
-        "mmm-dot" => mmm::mmm_dot(n),
-        "bitonic" => bitonic::bitonic(n),
-        "fft" => fft::fft(n),
-        "fft4" => fft4::fft4(n),
-        _ => unreachable!("validated above"),
-    };
+    // KernelSpec validates the generators' size constraints up front so
+    // a bad DIM is a usage error, not a panic inside a generator assert.
+    let spec = KernelSpec::parse(name, n)
+        .ok_or_else(|| format!("unknown kernel '{name}'\n{usage}"))?;
+    let kernel = spec.build(&KernelSpec::canonical_config())?;
     let stats = kernel
         .sched
         .as_ref()

@@ -71,6 +71,23 @@ impl FrequencyReport {
             closes_at_embedded_limit: soft >= embedded,
         }
     }
+
+    /// Achieved core clock in integer kHz — the exact-arithmetic form
+    /// the fleet dispatcher uses to convert per-core cycle counts onto
+    /// the shared bus timeline (771 MHz → 771_000). Integer kHz keeps
+    /// heterogeneous wall-clock comparisons deterministic (no float
+    /// accumulation in the modeled timeline).
+    pub fn core_khz(&self) -> u64 {
+        (self.core_mhz * 1000.0).round() as u64
+    }
+}
+
+/// Modeled core clock of a configuration in kHz: the embedded limit
+/// when the soft paths clear it (the §6 repeatable-closure claim, true
+/// of every Table 4/5 instance), otherwise the wireload-modeled soft
+/// Fmax. This is what wall-clock-aware placement runs on.
+pub fn modeled_core_khz(cfg: &EgpuConfig) -> u64 {
+    FrequencyReport::for_config(cfg).core_khz()
 }
 
 #[cfg(test)]
@@ -128,6 +145,14 @@ mod tests {
             );
             assert_eq!(f.embedded_mhz, emb, "{}", cfg.name);
         }
+    }
+
+    #[test]
+    fn khz_conversion_is_exact_for_the_embedded_limits() {
+        let dp = EgpuConfig::table4_presets().remove(0);
+        let qp = EgpuConfig::table5_presets().remove(0);
+        assert_eq!(modeled_core_khz(&dp), 771_000);
+        assert_eq!(modeled_core_khz(&qp), 600_000);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use std::fmt;
 
-use crate::isa::{Group, Opcode, WordLayout, WAVEFRONT_WIDTH};
+use crate::isa::{Group, Instr, Opcode, WordLayout, WAVEFRONT_WIDTH};
 
 /// Shared-memory organization (§3, §5.1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -57,8 +57,10 @@ impl MemoryMode {
     }
 }
 
-/// Integer-ALU feature class (Table 6 rows).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+/// Integer-ALU feature class (Table 6 rows). Ordered by capability:
+/// `Min < Small < Full`, so a requirement can be compared directly
+/// against a configuration's class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub enum IntAluClass {
     /// Adder/subtractor + AND/OR/XOR only (+ single-bit shift).
     Min,
@@ -149,6 +151,170 @@ impl fmt::Display for ConfigError {
 }
 
 impl std::error::Error for ConfigError {}
+
+/// What a program *needs* from a configuration — the static-scalability
+/// axes of §3/§5 read in the requirement direction. A fleet dispatcher
+/// derives one of these per job ([`FeatureSet::required_by`] over the
+/// job's instruction stream, plus capacity floors from its data
+/// movement) and only places the job on cores whose [`EgpuConfig`]
+/// [`satisfies`](EgpuConfig::satisfies) it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FeatureSet {
+    /// Deepest IF nesting in the program (0 = no predicates used).
+    pub predicate_depth: usize,
+    /// Uses DOT/SUM (the dot-product extension core).
+    pub dot_core: bool,
+    /// Uses INVSQR (the SFU extension core).
+    pub sfu: bool,
+    /// Weakest integer-ALU class implementing every integer op used.
+    pub int_alu: IntAluClass,
+    /// Contains SHL/SHR. Shift amounts live in registers, so a program
+    /// with any shift is conservatively routed away from
+    /// `shift_precision == 1` cores (the load-time check cannot reject
+    /// them, but a runtime amount > 1 would be wrong there).
+    pub multi_bit_shift: bool,
+    /// Integer-ALU width the program needs (0 = no integer ops, 16 =
+    /// plain add/logic only, 32 = ops that inherently produce or move
+    /// high bits: multiplies, shifts, bit-reversal). A 16-bit-precision
+    /// core masks every integer lane result, so routing such programs
+    /// there would silently corrupt results — the same conservatism as
+    /// `multi_bit_shift` (plain 16-bit arithmetic is assumed
+    /// width-compatible, matching the permissive load-time check).
+    pub int_width: u8,
+    /// Runtime-initialized threads the job launches with.
+    pub min_threads: usize,
+    /// Highest architectural register named, plus one.
+    pub min_regs: usize,
+    /// Highest shared-memory word touched by the job's DMA, plus one
+    /// (a floor only: the kernel's own addressing is data-dependent).
+    pub min_shared_words: usize,
+}
+
+impl Default for FeatureSet {
+    /// The empty requirement — note `int_alu` defaults to `Min` (nothing
+    /// required), not the configuration-side default of `Full`.
+    fn default() -> FeatureSet {
+        FeatureSet {
+            predicate_depth: 0,
+            dot_core: false,
+            sfu: false,
+            int_alu: IntAluClass::Min,
+            multi_bit_shift: false,
+            int_width: 0,
+            min_threads: 0,
+            min_regs: 0,
+            min_shared_words: 0,
+        }
+    }
+}
+
+impl FeatureSet {
+    /// The empty requirement (placeable on any valid configuration).
+    pub fn none() -> FeatureSet {
+        FeatureSet::default()
+    }
+
+    /// Extract the requirement of an instruction stream: predicates
+    /// (with nesting depth), extension cores, the weakest sufficient
+    /// integer-ALU class, shifts, and register usage. Capacity floors
+    /// (`min_threads`, `min_shared_words`) are the caller's to fill —
+    /// they come from the launch, not the program text.
+    pub fn required_by<'a>(instrs: impl IntoIterator<Item = &'a Instr>) -> FeatureSet {
+        let mut req = FeatureSet::none();
+        let mut depth = 0usize;
+        for i in instrs {
+            req.min_regs = req.min_regs.max(i.rd.max(i.ra).max(i.rb) as usize + 1);
+            match i.op.group() {
+                Group::Conditional => match i.op {
+                    Opcode::If => {
+                        depth += 1;
+                        req.predicate_depth = req.predicate_depth.max(depth);
+                    }
+                    Opcode::EndIf => depth = depth.saturating_sub(1),
+                    _ => {}
+                },
+                Group::Extension => match i.op {
+                    Opcode::Dot | Opcode::Sum => req.dot_core = true,
+                    Opcode::InvSqr => req.sfu = true,
+                    _ => {}
+                },
+                Group::IntShift => {
+                    req.multi_bit_shift = true;
+                    req.int_width = 32;
+                    req.int_alu = req.int_alu.max(weakest_class_for(i.op));
+                }
+                Group::IntMul => {
+                    req.int_width = 32;
+                    req.int_alu = req.int_alu.max(weakest_class_for(i.op));
+                }
+                Group::IntArith | Group::IntLogic | Group::IntOther => {
+                    req.int_width = req.int_width.max(match i.op {
+                        // Bit-reversal slides bits across the full word.
+                        Opcode::Bvs => 32,
+                        _ => 16,
+                    });
+                    req.int_alu = req.int_alu.max(weakest_class_for(i.op));
+                }
+                _ => {}
+            }
+        }
+        req
+    }
+
+    /// True when nothing beyond a base configuration is needed.
+    pub fn is_none(&self) -> bool {
+        *self == FeatureSet::none()
+    }
+}
+
+/// Weakest [`IntAluClass`] implementing `op` (callers pass integer ops
+/// only; anything else answers `Min`, which never constrains).
+fn weakest_class_for(op: Opcode) -> IntAluClass {
+    for class in [IntAluClass::Min, IntAluClass::Small] {
+        if class.supports(op) {
+            return class;
+        }
+    }
+    IntAluClass::Full
+}
+
+impl fmt::Display for FeatureSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut parts: Vec<String> = Vec::new();
+        if self.predicate_depth > 0 {
+            parts.push(format!("pred>={}", self.predicate_depth));
+        }
+        if self.dot_core {
+            parts.push("dot".into());
+        }
+        if self.sfu {
+            parts.push("sfu".into());
+        }
+        if self.int_alu > IntAluClass::Min {
+            parts.push(format!("alu>={}", self.int_alu.name()));
+        }
+        if self.multi_bit_shift {
+            parts.push("shift>1".into());
+        }
+        if self.int_width > 16 {
+            parts.push(format!("int{}b", self.int_width));
+        }
+        if self.min_threads > 0 {
+            parts.push(format!("threads>={}", self.min_threads));
+        }
+        if self.min_regs > 0 {
+            parts.push(format!("regs>={}", self.min_regs));
+        }
+        if self.min_shared_words > 0 {
+            parts.push(format!("shared>={}w", self.min_shared_words));
+        }
+        if parts.is_empty() {
+            write!(f, "none")
+        } else {
+            write!(f, "{}", parts.join(", "))
+        }
+    }
+}
 
 impl EgpuConfig {
     pub fn validate(&self) -> Result<(), ConfigError> {
@@ -263,6 +429,92 @@ impl EgpuConfig {
             }
             _ => Ok(()),
         }
+    }
+
+    /// Kernel-specialization fingerprint: FNV-1a over the axes the
+    /// kernel compiler actually consumes — the memory organization
+    /// (`kc`'s cost model charges LOD/STO per-port, so DP and QP
+    /// produce different schedules) and the register-file size (the
+    /// instruction-word layout and the allocator's budget). Two
+    /// configurations with equal fingerprints run byte-identical
+    /// compiled kernels, which is what lets the kernel-specialization
+    /// cache (`crate::kernels::KernelCache`) share one compile across
+    /// a whole homogeneous fleet.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mem = match self.memory {
+            MemoryMode::Dp => 1u8,
+            MemoryMode::Qp => 2u8,
+        };
+        for b in std::iter::once(mem).chain((self.regs_per_thread as u32).to_le_bytes()) {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        h
+    }
+
+    /// Can this configuration run a job with requirement `req`?
+    pub fn satisfies(&self, req: &FeatureSet) -> bool {
+        self.unsatisfied(req).is_none()
+    }
+
+    /// First reason this configuration cannot run a job with
+    /// requirement `req`, or `None` when it can. The phrasing matches
+    /// [`EgpuConfig::supports`]'s load-time errors where both exist.
+    pub fn unsatisfied(&self, req: &FeatureSet) -> Option<String> {
+        if req.predicate_depth > self.predicate_levels {
+            return Some(format!(
+                "requires {} predicate level(s); configuration has {}",
+                req.predicate_depth, self.predicate_levels
+            ));
+        }
+        if req.dot_core && !self.dot_core {
+            return Some("requires the dot-product extension core".into());
+        }
+        if req.sfu && !self.sfu {
+            return Some("requires the SFU extension core".into());
+        }
+        if req.int_alu > self.int_alu {
+            return Some(format!(
+                "requires the {} integer ALU; configuration has {}",
+                req.int_alu.name(),
+                self.int_alu.name()
+            ));
+        }
+        if req.multi_bit_shift && self.shift_precision == 1 {
+            return Some(
+                "shifts need a multi-bit shifter (shift_precision=1)".into(),
+            );
+        }
+        if req.int_width > self.alu_precision {
+            return Some(format!(
+                "needs a {}-bit integer ALU; configuration has {} bits",
+                req.int_width, self.alu_precision
+            ));
+        }
+        if req.min_threads > self.threads {
+            return Some(format!(
+                "needs {} threads; configuration has {}",
+                req.min_threads, self.threads
+            ));
+        }
+        if req.min_regs > self.regs_per_thread {
+            return Some(format!(
+                "names register r{}; configuration has {} registers/thread",
+                req.min_regs - 1,
+                self.regs_per_thread
+            ));
+        }
+        if req.min_shared_words > self.shared_words() {
+            return Some(format!(
+                "touches shared word {}; configuration has {} words",
+                req.min_shared_words - 1,
+                self.shared_words()
+            ));
+        }
+        None
     }
 
     // ---------------------------------------------------------------
@@ -425,6 +677,85 @@ mod tests {
         assert!(c.supports(Opcode::Add, None).is_ok());
         assert!(c.supports(Opcode::Shl, Some(1)).is_ok());
         assert!(c.supports(Opcode::Shl, Some(4)).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_compile_relevant_axes_only() {
+        let base = EgpuConfig::default();
+        let mut same = base.clone();
+        same.name = "renamed".into();
+        same.shared_kb = 256;
+        same.predicate_levels = 0;
+        same.dot_core = true;
+        assert_eq!(base.fingerprint(), same.fingerprint());
+        let mut qp = base.clone();
+        qp.memory = MemoryMode::Qp;
+        assert_ne!(base.fingerprint(), qp.fingerprint());
+        let mut wide = base.clone();
+        wide.regs_per_thread = 64;
+        assert_ne!(base.fingerprint(), wide.fingerprint());
+    }
+
+    #[test]
+    fn feature_set_extraction_and_satisfaction() {
+        use crate::isa::Instr;
+        let mut ifi = Instr::new(Opcode::If);
+        ifi.ra = 3;
+        let mut sum = Instr::new(Opcode::Sum);
+        sum.rd = 9;
+        let stream = [
+            ifi,
+            Instr::new(Opcode::Pop),
+            ifi,
+            Instr::new(Opcode::EndIf),
+            Instr::new(Opcode::EndIf),
+            sum,
+            Instr::new(Opcode::Shl),
+            Instr::new(Opcode::Stop),
+        ];
+        let req = FeatureSet::required_by(stream.iter());
+        assert_eq!(req.predicate_depth, 2);
+        assert!(req.dot_core && !req.sfu);
+        assert_eq!(req.int_alu, IntAluClass::Full); // POP
+        assert!(req.multi_bit_shift);
+        assert_eq!(req.int_width, 32); // SHL
+        assert_eq!(req.min_regs, 10);
+
+        // A plain-add program is width-compatible with a 16-bit ALU;
+        // bit-reversal is not.
+        let plain = FeatureSet::required_by([Instr::new(Opcode::Add)].iter());
+        assert_eq!(plain.int_width, 16);
+        let mut narrow = EgpuConfig::default();
+        narrow.alu_precision = 16;
+        narrow.shift_precision = 16;
+        assert!(narrow.satisfies(&plain));
+        let bvs = FeatureSet::required_by([Instr::new(Opcode::Bvs)].iter());
+        assert_eq!(bvs.int_width, 32);
+        assert!(narrow.unsatisfied(&bvs).unwrap().contains("16 bits"));
+
+        let mut cfg = EgpuConfig::default();
+        assert!(!cfg.satisfies(&req)); // no dot core
+        assert!(cfg
+            .unsatisfied(&req)
+            .unwrap()
+            .contains("dot-product"));
+        cfg.dot_core = true;
+        assert!(cfg.satisfies(&req));
+        cfg.predicate_levels = 1;
+        assert!(!cfg.satisfies(&req));
+    }
+
+    #[test]
+    fn feature_set_capacity_floors() {
+        let mut req = FeatureSet::none();
+        assert!(req.is_none());
+        req.min_threads = 1024;
+        let cfg = EgpuConfig::default(); // 512 threads
+        assert!(cfg.unsatisfied(&req).unwrap().contains("threads"));
+        req.min_threads = 0;
+        req.min_shared_words = cfg.shared_words() + 1;
+        assert!(cfg.unsatisfied(&req).unwrap().contains("shared"));
+        assert_eq!(format!("{}", FeatureSet::none()), "none");
     }
 
     #[test]

@@ -1,0 +1,458 @@
+//! Configs as data: JSON (de)serialization for [`EgpuConfig`].
+//!
+//! The deployment story of the paper (and of "Soft GPGPU versus IP
+//! cores", arXiv 2406.03227) is many *differently configured* eGPU
+//! instances on one fabric — which means configurations must be
+//! shippable artifacts, not Rust code. `egpu run --config path.json`
+//! and `egpu fleet --configs a.json,b.json` consume this format.
+//!
+//! The codec is hand-rolled: `serde` is not available in the offline
+//! build environment (see DESIGN.md §Substitutions — same story as the
+//! xla-rs stub), so this module carries a ~100-line recursive-descent
+//! JSON parser instead of a derive. The shape is exactly what
+//! `#[derive(Serialize, Deserialize)]` on [`EgpuConfig`] would accept:
+//! one object per config, field names matching the struct, enums as
+//! their `name()` strings ("DP"/"QP", "Min"/"Small"/"Full"). Missing
+//! fields take the [`EgpuConfig::default`] value; unknown fields are
+//! errors (they are always typos).
+//!
+//! ```json
+//! { "name": "edge-qp", "threads": 1024, "memory": "QP",
+//!   "predicate_levels": 8, "dot_core": true }
+//! ```
+//!
+//! A file may also hold an array of such objects (a whole fleet).
+
+use std::collections::BTreeMap;
+
+use super::config::{ConfigError, EgpuConfig, IntAluClass, MemoryMode};
+
+/// Serialize a configuration (stable field order, round-trips through
+/// [`config_from_json`]).
+pub fn config_to_json(cfg: &EgpuConfig) -> String {
+    format!(
+        "{{\n  \"name\": {},\n  \"threads\": {},\n  \"regs_per_thread\": {},\n  \
+         \"shared_kb\": {},\n  \"memory\": \"{}\",\n  \"alu_precision\": {},\n  \
+         \"shift_precision\": {},\n  \"int_alu\": \"{}\",\n  \
+         \"predicate_levels\": {},\n  \"dot_core\": {},\n  \"sfu\": {}\n}}",
+        json_string(&cfg.name),
+        cfg.threads,
+        cfg.regs_per_thread,
+        cfg.shared_kb,
+        cfg.memory.name(),
+        cfg.alu_precision,
+        cfg.shift_precision,
+        cfg.int_alu.name(),
+        cfg.predicate_levels,
+        cfg.dot_core,
+        cfg.sfu,
+    )
+}
+
+/// Serialize a fleet as a JSON array.
+pub fn fleet_to_json(cfgs: &[EgpuConfig]) -> String {
+    let body: Vec<String> = cfgs.iter().map(config_to_json).collect();
+    format!("[\n{}\n]", body.join(",\n"))
+}
+
+/// Parse one configuration object. The result is validated.
+pub fn config_from_json(src: &str) -> Result<EgpuConfig, ConfigError> {
+    match parse_value(src)? {
+        Value::Object(map) => config_from_map(map),
+        _ => Err(ConfigError("expected a JSON object".into())),
+    }
+}
+
+/// Parse a file that holds either one configuration object or an array
+/// of them. The results are validated.
+pub fn configs_from_json(src: &str) -> Result<Vec<EgpuConfig>, ConfigError> {
+    match parse_value(src)? {
+        Value::Object(map) => Ok(vec![config_from_map(map)?]),
+        Value::Array(items) => items
+            .into_iter()
+            .map(|v| match v {
+                Value::Object(map) => config_from_map(map),
+                _ => Err(ConfigError("array elements must be objects".into())),
+            })
+            .collect(),
+        _ => Err(ConfigError("expected a JSON object or array".into())),
+    }
+}
+
+fn config_from_map(map: BTreeMap<String, Value>) -> Result<EgpuConfig, ConfigError> {
+    let mut cfg = EgpuConfig::default();
+    for (key, value) in map {
+        match key.as_str() {
+            "name" => cfg.name = value.string(&key)?,
+            "threads" => cfg.threads = value.usize(&key)?,
+            "regs_per_thread" => cfg.regs_per_thread = value.usize(&key)?,
+            "shared_kb" => cfg.shared_kb = value.usize(&key)?,
+            "memory" => {
+                cfg.memory = match value.string(&key)?.to_ascii_uppercase().as_str() {
+                    "DP" => MemoryMode::Dp,
+                    "QP" => MemoryMode::Qp,
+                    other => {
+                        return Err(ConfigError(format!(
+                            "memory must be \"DP\" or \"QP\", got \"{other}\""
+                        )))
+                    }
+                }
+            }
+            "alu_precision" => cfg.alu_precision = value.u8(&key)?,
+            "shift_precision" => cfg.shift_precision = value.u8(&key)?,
+            "int_alu" => {
+                cfg.int_alu = match value.string(&key)?.to_ascii_lowercase().as_str() {
+                    "min" => IntAluClass::Min,
+                    "small" => IntAluClass::Small,
+                    "full" => IntAluClass::Full,
+                    other => {
+                        return Err(ConfigError(format!(
+                            "int_alu must be \"Min\", \"Small\" or \"Full\", got \"{other}\""
+                        )))
+                    }
+                }
+            }
+            "predicate_levels" => cfg.predicate_levels = value.usize(&key)?,
+            "dot_core" => cfg.dot_core = value.bool(&key)?,
+            "sfu" => cfg.sfu = value.bool(&key)?,
+            other => {
+                return Err(ConfigError(format!(
+                    "unknown configuration field \"{other}\""
+                )))
+            }
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+// ---------------------------------------------------------------------
+// A minimal JSON value model + recursive-descent parser. Covers the
+// full grammar except `\uXXXX` surrogate pairs (config files are ASCII).
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Value {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<Value>),
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    fn string(self, key: &str) -> Result<String, ConfigError> {
+        match self {
+            Value::String(s) => Ok(s),
+            other => Err(ConfigError(format!("{key}: expected a string, got {other:?}"))),
+        }
+    }
+
+    fn bool(self, key: &str) -> Result<bool, ConfigError> {
+        match self {
+            Value::Bool(b) => Ok(b),
+            other => Err(ConfigError(format!("{key}: expected a bool, got {other:?}"))),
+        }
+    }
+
+    fn usize(self, key: &str) -> Result<usize, ConfigError> {
+        match self {
+            Value::Number(n) if n >= 0.0 && n.fract() == 0.0 && n <= u32::MAX as f64 => {
+                Ok(n as usize)
+            }
+            other => Err(ConfigError(format!(
+                "{key}: expected a non-negative integer, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Byte-sized field: rejects out-of-range values instead of letting
+    /// an `as u8` cast wrap them into different-but-valid settings
+    /// (`"shift_precision": 257` must be an error, not a 1-bit shifter).
+    fn u8(self, key: &str) -> Result<u8, ConfigError> {
+        let v = self.usize(key)?;
+        u8::try_from(v).map_err(|_| {
+            ConfigError(format!("{key}: {v} is out of range for a byte-sized field"))
+        })
+    }
+}
+
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+fn parse_value(src: &str) -> Result<Value, ConfigError> {
+    let mut p = Parser {
+        bytes: src.as_bytes(),
+        pos: 0,
+    };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing characters after the JSON value"));
+    }
+    Ok(v)
+}
+
+impl Parser<'_> {
+    fn err(&self, msg: &str) -> ConfigError {
+        ConfigError(format!("JSON parse error at byte {}: {msg}", self.pos))
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.bytes.get(self.pos), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), ConfigError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Value) -> Result<Value, ConfigError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn value(&mut self) -> Result<Value, ConfigError> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Value::String(self.string()?)),
+            Some(b't') => self.literal("true", Value::Bool(true)),
+            Some(b'f') => self.literal("false", Value::Bool(false)),
+            Some(b'n') => self.literal("null", Value::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn object(&mut self) -> Result<Value, ConfigError> {
+        self.eat(b'{')?;
+        let mut map = BTreeMap::new();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Value::Object(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.eat(b':')?;
+            let value = self.value()?;
+            if map.insert(key.clone(), value).is_some() {
+                return Err(self.err(&format!("duplicate key \"{key}\"")));
+            }
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Value::Object(map));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Value, ConfigError> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Value::Array(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Value::Array(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, ConfigError> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bytes.get(self.pos) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let next = self.bytes.get(self.pos).copied();
+                    let esc = next.ok_or_else(|| self.err("unterminated escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                .ok_or_else(|| self.err("bad \\u escape"))?;
+                            self.pos += 4;
+                            out.push(
+                                char::from_u32(hex)
+                                    .ok_or_else(|| self.err("bad \\u code point"))?,
+                            );
+                        }
+                        _ => return Err(self.err("unknown escape")),
+                    }
+                }
+                Some(&b) if b < 0x20 => return Err(self.err("control byte in string")),
+                Some(_) => {
+                    // Consume one UTF-8 scalar (input is a &str, so the
+                    // byte stream is valid UTF-8).
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| self.err("invalid UTF-8"))?;
+                    let c = rest.chars().next().unwrap();
+                    out.push(c);
+                    self.pos += c.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Value, ConfigError> {
+        let start = self.pos;
+        if self.bytes.get(self.pos) == Some(&b'-') {
+            self.pos += 1;
+        }
+        while matches!(
+            self.bytes.get(self.pos),
+            Some(b) if b.is_ascii_digit() || matches!(b, b'.' | b'e' | b'E' | b'+' | b'-')
+        ) {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.bytes[start..self.pos])
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(Value::Number)
+            .ok_or_else(|| self.err("malformed number"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_every_preset() {
+        for cfg in EgpuConfig::table4_presets()
+            .into_iter()
+            .chain(EgpuConfig::table5_presets())
+            .chain([
+                EgpuConfig::benchmark(MemoryMode::Dp, true),
+                EgpuConfig::benchmark_predicated(MemoryMode::Qp),
+            ])
+        {
+            let json = config_to_json(&cfg);
+            let back = config_from_json(&json).unwrap_or_else(|e| panic!("{}: {e}", cfg.name));
+            assert_eq!(cfg, back, "{json}");
+        }
+    }
+
+    #[test]
+    fn fleet_round_trip() {
+        let fleet = vec![
+            EgpuConfig::benchmark(MemoryMode::Dp, true),
+            EgpuConfig::benchmark(MemoryMode::Qp, false),
+        ];
+        let back = configs_from_json(&fleet_to_json(&fleet)).unwrap();
+        assert_eq!(fleet, back);
+        // A single object parses as a one-core fleet too.
+        let one = configs_from_json(&config_to_json(&fleet[0])).unwrap();
+        assert_eq!(one, vec![fleet[0].clone()]);
+    }
+
+    #[test]
+    fn partial_objects_take_defaults() {
+        let cfg = config_from_json(r#"{ "memory": "QP", "threads": 1024 }"#).unwrap();
+        assert_eq!(cfg.memory, MemoryMode::Qp);
+        assert_eq!(cfg.threads, 1024);
+        assert_eq!(cfg.regs_per_thread, EgpuConfig::default().regs_per_thread);
+    }
+
+    #[test]
+    fn bad_inputs_are_rejected_with_reasons() {
+        assert!(config_from_json("[1, 2]").is_err());
+        assert!(config_from_json(r#"{ "memory": "HBM" }"#)
+            .unwrap_err()
+            .to_string()
+            .contains("DP"));
+        assert!(config_from_json(r#"{ "turbo": true }"#)
+            .unwrap_err()
+            .to_string()
+            .contains("unknown configuration field"));
+        // Validation runs: 100 threads is not a wavefront multiple.
+        assert!(config_from_json(r#"{ "threads": 100 }"#).is_err());
+        // Byte-sized fields must not wrap (257 as u8 == 1 would be a
+        // silently valid single-bit shifter).
+        assert!(config_from_json(r#"{ "shift_precision": 257 }"#)
+            .unwrap_err()
+            .to_string()
+            .contains("out of range"));
+        assert!(config_from_json(r#"{ "alu_precision": 272 }"#).is_err());
+        assert!(config_from_json(r#"{ "threads": }"#).is_err());
+        assert!(config_from_json(r#"{ "name": "a", "name": "b" }"#)
+            .unwrap_err()
+            .to_string()
+            .contains("duplicate"));
+    }
+
+    #[test]
+    fn string_escapes_round_trip() {
+        let mut cfg = EgpuConfig::default();
+        cfg.name = "q\"p\\\n".into();
+        let back = config_from_json(&config_to_json(&cfg)).unwrap();
+        assert_eq!(back.name, cfg.name);
+    }
+}

@@ -7,6 +7,7 @@
 //! artifacts.
 
 pub mod config;
+pub mod config_json;
 pub mod hazard;
 pub mod machine;
 pub mod plan;
@@ -16,7 +17,7 @@ pub mod regfile;
 pub mod sequencer;
 pub mod shared_mem;
 
-pub use config::{EgpuConfig, IntAluClass, MemoryMode};
+pub use config::{EgpuConfig, FeatureSet, IntAluClass, MemoryMode};
 pub use machine::{Machine, RunStats, SimError, PIPELINE_DEPTH};
 pub use plan::{IssuePlan, PlanKind};
 pub use profiler::Profile;

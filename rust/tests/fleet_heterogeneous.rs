@@ -1,0 +1,407 @@
+//! Heterogeneous-fleet integration: per-core static configurations,
+//! feature-aware routing, wall-clock-aware placement, and the kernel
+//! specialization cache.
+//!
+//! The load-bearing properties, per ISSUE 4's acceptance criteria:
+//!
+//! 1. A mixed DP/QP fleet produces **bit-identical** registers, shared
+//!    memory, outputs and per-job cycle counts to running each job
+//!    alone on a solo `Gpu` of its placed core's configuration.
+//! 2. A predicated job is never placed on a `predicate_levels == 0`
+//!    core (and a DOT job never on a core without the extension).
+//! 3. Homogeneous fleets stay bit-identical to the legacy
+//!    single-config coordinator, parallel or sequential.
+//! 4. The kernel cache compiles each `(spec, fingerprint)` exactly
+//!    once across repeated stream submissions and batches.
+
+use std::collections::HashMap;
+
+use egpu::api::{FleetBuilder, Gpu, KernelCache, KernelSpec};
+use egpu::coordinator::{Coordinator, Job};
+use egpu::harness::{demo_job_io, demo_specs, Rng};
+use egpu::kernels::{f32_bits, fft, reduction};
+use egpu::sim::{EgpuConfig, MemoryMode};
+
+/// 771 MHz DP core with every feature the batch needs.
+fn dp_full() -> EgpuConfig {
+    let mut cfg = EgpuConfig::benchmark(MemoryMode::Dp, true);
+    cfg.predicate_levels = 8;
+    cfg.name = "DP-full".into();
+    cfg
+}
+
+/// 600 MHz QP core without predicates or extension cores.
+fn qp_plain() -> EgpuConfig {
+    let mut cfg = EgpuConfig::benchmark(MemoryMode::Qp, false);
+    cfg.sfu = false;
+    cfg.name = "QP-plain".into();
+    cfg
+}
+
+/// The property at the heart of the refactor: every job on a mixed
+/// DP/QP fleet is bit-identical — cycles, outputs, and the placed
+/// core's final register file and shared memory — to replaying that
+/// core's job sequence on a solo `Gpu` of the same configuration.
+#[test]
+fn mixed_fleet_matches_solo_execution_bit_for_bit() {
+    for seed in [0xF1EE7u64, 0x5EED2] {
+        let mut rng = Rng::new(seed);
+        let mut fleet = FleetBuilder::new().core(dp_full()).core(qp_plain()).build().unwrap();
+
+        let menu = demo_specs(64);
+        let mut submitted = Vec::new();
+        for j in 0..8 {
+            let spec = menu[(j + (rng.next_u32() as usize % menu.len())) % menu.len()];
+            let (loads, unloads) = demo_job_io(&spec, &mut rng);
+            let mut launch = fleet.launch_spec_any(spec).unwrap();
+            for (base, data) in &loads {
+                launch = launch.input_words(*base, data.clone());
+            }
+            for &(base, len) in &unloads {
+                launch = launch.output(base, len);
+            }
+            launch.submit();
+            submitted.push((spec, loads, unloads));
+        }
+        let reports = fleet.sync().unwrap();
+        assert_eq!(reports.len(), submitted.len());
+
+        // Replay each core's job sequence on a solo Gpu of that core's
+        // configuration, in submission order (= the worker's order).
+        let mut solo: HashMap<usize, Gpu> = HashMap::new();
+        for (r, (spec, loads, unloads)) in reports.iter().zip(&submitted) {
+            let cfg = fleet.core_configs()[r.core].clone();
+            assert!(cfg.satisfies(&r.requires), "routed to an incapable core");
+            let gpu = solo.entry(r.core).or_insert_with(|| Gpu::new(&cfg).unwrap());
+            gpu.clear_shared();
+            for (base, data) in loads {
+                gpu.write_words(*base, data).unwrap();
+            }
+            let solo_report = gpu.launch_spec(spec).unwrap().run().unwrap();
+            assert_eq!(
+                solo_report.compute_cycles, r.compute_cycles,
+                "seed {seed:#x}: '{}' cycles differ on core {}",
+                r.name, r.core
+            );
+            assert_eq!(solo_report.stats.hazards, r.stats.hazards);
+            for (k, &(base, len)) in unloads.iter().enumerate() {
+                let words = gpu.read_words(base, len).unwrap();
+                assert_eq!(
+                    words,
+                    r.outputs[k],
+                    "seed {seed:#x}: '{}' output {k} differs",
+                    r.name
+                );
+            }
+        }
+
+        // Final architectural state per used core: registers and shared
+        // memory bit-identical between the fleet machine and the solo
+        // replay.
+        for (&core, gpu) in &solo {
+            let fleet_m = fleet.coordinator().core_machine(core);
+            let solo_m = gpu.machine();
+            let shared_len = solo_m.shared().len();
+            assert_eq!(
+                fleet_m.shared().read_block(0, shared_len),
+                solo_m.shared().read_block(0, shared_len),
+                "seed {seed:#x}: core {core} shared memory differs"
+            );
+            let (threads, regs) = (solo_m.regs().threads(), solo_m.regs().regs_per_thread());
+            for t in 0..threads {
+                for reg in 0..regs {
+                    assert_eq!(
+                        fleet_m.regs().read_thread(t, reg as u8),
+                        solo_m.regs().read_thread(t, reg as u8),
+                        "seed {seed:#x}: core {core} r{reg} of thread {t} differs"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn predicated_jobs_never_land_on_predicateless_cores() {
+    // Whichever side of the fleet the capable core sits on, the
+    // predicated sort routes to it.
+    for (cfgs, want_core) in [
+        (vec![qp_plain(), dp_full()], 1usize),
+        (vec![dp_full(), qp_plain()], 0),
+    ] {
+        let mut fleet = FleetBuilder::new()
+            .core(cfgs[0].clone())
+            .core(cfgs[1].clone())
+            .build()
+            .unwrap();
+        let mut rng = Rng::new(7);
+        for _ in 0..3 {
+            let spec = KernelSpec::Bitonic { n: 64 };
+            let (loads, unloads) = demo_job_io(&spec, &mut rng);
+            let mut launch = fleet.launch_spec_any(spec).unwrap();
+            for (base, data) in loads {
+                launch = launch.input_words(base, data);
+            }
+            for (base, len) in unloads {
+                launch = launch.output(base, len);
+            }
+            launch.submit();
+        }
+        let reports = fleet.sync().unwrap();
+        for r in &reports {
+            assert_eq!(r.core, want_core, "predicated job on pred-0 core");
+            assert!(fleet.core_configs()[r.core].predicate_levels > 0);
+        }
+    }
+
+    // A DOT kernel routes the same way...
+    let mut fleet = FleetBuilder::new().core(qp_plain()).core(dp_full()).build().unwrap();
+    let spec = KernelSpec::ReductionDot { n: 64 };
+    let mut rng = Rng::new(9);
+    let (loads, unloads) = demo_job_io(&spec, &mut rng);
+    let mut launch = fleet.launch_spec_any(spec).unwrap();
+    for (base, data) in loads {
+        launch = launch.input_words(base, data);
+    }
+    for (base, len) in unloads {
+        launch = launch.output(base, len);
+    }
+    launch.submit();
+    assert_eq!(fleet.sync().unwrap()[0].core, 1);
+
+    // ...and with no capable core anywhere, dispatch errors up front.
+    let mut fleet = FleetBuilder::new().cores(qp_plain(), 2).build().unwrap();
+    fleet.launch_spec_any(KernelSpec::Bitonic { n: 64 }).unwrap().submit();
+    let err = fleet.sync().unwrap_err();
+    assert!(err.to_string().contains("predicate"), "{err}");
+}
+
+#[test]
+fn wall_clock_placement_prefers_the_faster_core() {
+    // Both cores idle; the 600 MHz QP core is listed first. The DP
+    // core's wall-clock completion estimate is earlier, so it wins
+    // despite the first-index tie-break.
+    let mut fleet = FleetBuilder::new().core(qp_plain()).core(dp_full()).build().unwrap();
+    let spec = KernelSpec::Reduction { n: 64 };
+    let mut rng = Rng::new(11);
+    let (loads, unloads) = demo_job_io(&spec, &mut rng);
+    let mut launch = fleet.launch_spec_any(spec).unwrap();
+    for (base, data) in loads {
+        launch = launch.input_words(base, data);
+    }
+    for (base, len) in unloads {
+        launch = launch.output(base, len);
+    }
+    launch.submit();
+    assert_eq!(fleet.sync().unwrap()[0].core, 1, "771 MHz must outbid 600 MHz");
+
+    // On a homogeneous pair the tie-break stays first-index — the
+    // historical earliest-free behavior.
+    let mut fleet = FleetBuilder::new().cores(dp_full(), 2).build().unwrap();
+    let (loads, unloads) = demo_job_io(&spec, &mut rng);
+    let mut launch = fleet.launch_spec_any(spec).unwrap();
+    for (base, data) in loads {
+        launch = launch.input_words(base, data);
+    }
+    for (base, len) in unloads {
+        launch = launch.output(base, len);
+    }
+    launch.submit();
+    assert_eq!(fleet.sync().unwrap()[0].core, 0);
+}
+
+#[test]
+fn homogeneous_fleet_is_bit_identical_to_the_legacy_coordinator() {
+    // Same 6-job batch through (a) the legacy homogeneous constructor
+    // with parallel dispatch, (b) Coordinator::fleet of identical
+    // configs, (c) the sequential reference path: identical placement,
+    // timeline and outputs everywhere.
+    let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+    let run = |mut c: Coordinator| {
+        let mut rng = Rng::new(0xBEEF);
+        for i in 0..6u64 {
+            let n = 64;
+            let data: Vec<f32> = (0..n).map(|_| rng.f32_in(-4.0, 4.0)).collect();
+            c.submit(
+                Job::new(reduction::reduction(n))
+                    .load(0, f32_bits(&data))
+                    .unload(n, 1)
+                    .on_stream(i % 3),
+            );
+        }
+        let rs = c.run_all().unwrap();
+        (rs, c.makespan())
+    };
+    let (legacy, span_a) = run(Coordinator::new(cfg.clone(), 3).unwrap());
+    let (fleet, span_b) = run(Coordinator::fleet(vec![cfg.clone(); 3]).unwrap());
+    let (seq, span_c) = {
+        let mut c = Coordinator::new(cfg, 3).unwrap();
+        c.set_parallel(false);
+        run(c)
+    };
+    assert_eq!(span_a, span_b);
+    assert_eq!(span_a, span_c);
+    for other in [&fleet, &seq] {
+        assert_eq!(legacy.len(), other.len());
+        for (a, b) in legacy.iter().zip(other.iter()) {
+            assert_eq!(a.core, b.core);
+            assert_eq!(a.stream, b.stream);
+            assert_eq!(a.compute_cycles, b.compute_cycles);
+            assert_eq!(a.bus_cycles, b.bus_cycles);
+            assert_eq!((a.start, a.end), (b.start, b.end));
+            assert_eq!(a.outputs, b.outputs);
+            assert_eq!(a.requires, b.requires);
+        }
+    }
+}
+
+#[test]
+fn cache_compiles_each_specialization_exactly_once() {
+    let cache = KernelCache::shared();
+    let mut fleet = FleetBuilder::new()
+        .cores(dp_full(), 2)
+        .cores(qp_plain(), 2)
+        .kernel_cache(cache.clone())
+        .build()
+        .unwrap();
+
+    let spec = KernelSpec::Reduction { n: 64 };
+    let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    // Streams pinned to one DP and one QP core force both fingerprints
+    // into play; two batches of repeated submissions exercise reuse.
+    let s_dp = fleet.stream_on_core(0).unwrap();
+    let s_qp = fleet.stream_on_core(3).unwrap();
+    let mut jobs = 0u64;
+    for _batch in 0..2 {
+        for s in [s_dp, s_qp] {
+            for _ in 0..3 {
+                fleet
+                    .launch_spec(&s, spec)
+                    .unwrap()
+                    .input_f32(0, &data)
+                    .output(64, 1)
+                    .submit();
+                jobs += 1;
+            }
+        }
+        let reports = fleet.sync().unwrap();
+        for r in &reports {
+            match r.stream {
+                Some(id) if id == s_dp.id() => assert_eq!(r.core, 0),
+                Some(id) if id == s_qp.id() => assert_eq!(r.core, 3),
+                other => panic!("unexpected stream {other:?}"),
+            }
+        }
+    }
+
+    let stats = cache.stats();
+    // Exactly two specializations exist: (reduction-64, DP/32-reg) —
+    // which the reference requirement-extraction build (core 0's
+    // fingerprint) shares — and (reduction-64, QP/32-reg). Every
+    // further lookup hit.
+    assert_eq!(stats.compiles, 2, "{stats:?}");
+    assert_eq!(stats.entries, 2, "{stats:?}");
+    // Each job looks up twice (canonical + placed-core specialization).
+    assert_eq!(stats.hits, 2 * jobs - stats.compiles, "{stats:?}");
+
+    // The QP specialization is genuinely different object identity-wise
+    // from the DP one, and both run to the same numeric result.
+    let dp_k = cache.get(&spec, &dp_full()).unwrap();
+    let qp_k = cache.get(&spec, &qp_plain()).unwrap();
+    assert_eq!(cache.stats().compiles, 2, "post-hoc lookups must hit");
+    assert_eq!(dp_k.name, qp_k.name);
+}
+
+#[test]
+fn solo_gpu_launch_spec_reuses_its_cache() {
+    let mut gpu = Gpu::new(&dp_full()).unwrap();
+    let spec = KernelSpec::Fft { n: 64 };
+    let re = vec![0.5f32; 64];
+    let im = vec![0f32; 64];
+    for _ in 0..3 {
+        for (base, words) in fft::shared_init(&re, &im) {
+            gpu.write_words(base, &words).unwrap();
+        }
+        gpu.launch_spec(&spec).unwrap().run().unwrap();
+    }
+    let stats = gpu.kernel_cache().stats();
+    assert_eq!(stats.compiles, 1, "{stats:?}");
+    assert_eq!(stats.hits, 2, "{stats:?}");
+}
+
+#[test]
+fn pinned_stream_rejects_jobs_its_core_cannot_run() {
+    let mut fleet = FleetBuilder::new().core(dp_full()).core(qp_plain()).build().unwrap();
+    let s = fleet.stream_on_core(1).unwrap(); // QP: no predicates
+    fleet
+        .launch_spec(&s, KernelSpec::Bitonic { n: 64 })
+        .unwrap()
+        .input_words(0, vec![3, 1, 2, 0])
+        .output(0, 4)
+        .submit();
+    let err = fleet.sync().unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("pinned") && msg.contains("predicate"), "{msg}");
+
+    // Pinning out of range is refused up front.
+    assert!(fleet.stream_on_core(9).is_err());
+}
+
+#[test]
+fn fleet_configs_round_trip_through_json() {
+    use egpu::sim::config_json::{configs_from_json, fleet_to_json};
+    let fleet = vec![dp_full(), dp_full(), qp_plain()];
+    let parsed = configs_from_json(&fleet_to_json(&fleet)).unwrap();
+    assert_eq!(parsed, fleet);
+    let mut builder = FleetBuilder::new();
+    for cfg in parsed {
+        builder = builder.core(cfg);
+    }
+    let array = builder.build().unwrap();
+    assert_eq!(array.num_cores(), 3);
+    assert_eq!(array.core_configs()[2].name, "QP-plain");
+    assert_eq!(array.coordinator().core_mhz(0), 771.0);
+    assert_eq!(array.coordinator().core_mhz(2), 600.0);
+    assert_eq!(array.coordinator().bus_mhz(), 771.0);
+
+    // An empty fleet is an error, not a panic.
+    assert!(FleetBuilder::new().build().is_err());
+}
+
+#[test]
+fn heterogeneous_timeline_is_wall_clock_consistent() {
+    // A QP job's bus-timeline occupancy must be >= its core cycles
+    // (600 MHz work takes longer on the 771 MHz bus timeline), while a
+    // DP job occupies exactly its cycles plus DMA.
+    let mut fleet = FleetBuilder::new().core(dp_full()).core(qp_plain()).build().unwrap();
+    let s_dp = fleet.stream_on_core(0).unwrap();
+    let s_qp = fleet.stream_on_core(1).unwrap();
+    let data: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+    for s in [s_dp, s_qp] {
+        fleet
+            .launch_spec(&s, KernelSpec::Reduction { n: 64 })
+            .unwrap()
+            .input_f32(0, &data)
+            .output(64, 1)
+            .submit();
+    }
+    let reports = fleet.sync().unwrap();
+    let dp = reports.iter().find(|r| r.core == 0).unwrap();
+    let qp = reports.iter().find(|r| r.core == 1).unwrap();
+    assert_eq!(dp.end - dp.start, dp.compute_cycles + dp.bus_cycles);
+    let qp_span = qp.end - qp.start;
+    assert!(
+        qp_span > qp.compute_cycles + qp.bus_cycles,
+        "QP compute must stretch on the 771 MHz bus timeline: span \
+         {qp_span}, cycles {} + dma {}",
+        qp.compute_cycles,
+        qp.bus_cycles
+    );
+    // Exact conversion: ceil(cycles * 771 / 600) + DMA.
+    let want = (qp.compute_cycles as u128 * 771_000).div_ceil(600_000) as u64 + qp.bus_cycles;
+    assert_eq!(qp_span, want);
+    // Utilization covers both cores and sums sensibly.
+    let util = fleet.core_utilization();
+    assert_eq!(util.len(), 2);
+    assert!(util.iter().all(|&u| u > 0.0 && u <= 1.0), "{util:?}");
+}
