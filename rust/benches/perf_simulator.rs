@@ -14,7 +14,8 @@
 //! `EGPU_BENCH_SAMPLES` overrides the per-case sample count (CI smoke
 //! runs use 1).
 
-use egpu::api::{FleetBuilder, Gpu, KernelCache};
+use egpu::api::{FleetBuilder, Gpu, KernelCache, Server};
+use egpu::harness::loadgen::{demo_requests, LoadSpec};
 use egpu::harness::{demo_job_io, demo_specs, sim_rate, time, Rng, Table, Timing};
 use egpu::kc::SchedMode;
 use egpu::kernels::{bitonic, f32_bits, fft, fft4, mmm, reduction, transpose, Kernel};
@@ -311,6 +312,61 @@ fn main() {
         )
     };
 
+    // Serving: the continuous runtime (bounded admission + deadline
+    // batcher) over the same demo fleet, driven by the reference
+    // seeded trace. Modeled numbers — sustained requests/s, shed rate,
+    // latency percentiles, per-core utilization — are deterministic
+    // (independent of EGPU_BENCH_SAMPLES and of dispatch mode).
+    let serving_json = {
+        let mut server = Server::builder().build().unwrap();
+        let offered = 60usize;
+        let report = server.serve(demo_requests(&LoadSpec::demo(offered))).unwrap();
+        let t = &report.telemetry;
+        let mhz = server.bus_mhz();
+        let rps = t.jobs_per_s(mhz);
+        assert!(t.completed > 0, "the serving bench must serve something");
+        assert_eq!(report.submitted(), offered, "every request served or shed");
+        let util = server.core_utilization();
+        let core_rows: Vec<String> = (0..server.num_cores())
+            .map(|c| {
+                format!(
+                    "      {{\"name\": {}, \"mhz\": {:.0}, \"requests\": {}, \
+                     \"utilization\": {:.4}}}",
+                    json_str(&server.fleet().core_configs()[c].name),
+                    server.fleet().coordinator().core_mhz(c),
+                    report.results.iter().filter(|r| r.core == c).count(),
+                    util[c],
+                )
+            })
+            .collect();
+        println!(
+            "serving ({offered} offered): {} served, {} shed, {} batches, \
+             {rps:.0} requests/s, p99 e2e {:.1} us",
+            t.completed,
+            t.shed,
+            t.batches,
+            t.e2e.p99() as f64 / mhz
+        );
+        format!(
+            "  \"serving\": {{\"offered\": {offered}, \"completed\": {}, \"shed\": {}, \
+             \"batches\": {}, \"requests_per_s\": {rps:.1}, \"shed_rate\": {:.4}, \
+             \"deadline_missed\": {}, \"peak_queue\": {}, \"queue_wait_p50_us\": {:.3}, \
+             \"e2e_p50_us\": {:.3}, \"e2e_p95_us\": {:.3}, \"e2e_p99_us\": {:.3}, \
+             \"cores\": [\n{}\n    ]}},\n",
+            t.completed,
+            t.shed,
+            t.batches,
+            t.shed_rate(),
+            t.deadline_missed,
+            t.peak_queue,
+            t.queue_wait.p50() as f64 / mhz,
+            t.e2e.p50() as f64 / mhz,
+            t.e2e.p95() as f64 / mhz,
+            t.e2e.p99() as f64 / mhz,
+            core_rows.join(",\n"),
+        )
+    };
+
     // Multi-core scaling: the same 4-job batch through sequential and
     // parallel dispatch — identical modeled timelines, different
     // wall-clock.
@@ -332,7 +388,7 @@ fn main() {
 
     let json = format!(
         "{{\n  \"samples\": {samples},\n  \"kernels\": [\n{}\n  ],\n  \
-         \"static_schedule\": [\n{}\n  ],\n{fleet_json}  \
+         \"static_schedule\": [\n{}\n  ],\n{fleet_json}{serving_json}  \
          \"aggregate_mcyc_per_s_unchecked\": {aggregate:.2},\n  \
          \"multi_core\": {{\"cores\": 4, \"jobs\": 4, \"kernel\": \"fft-256\", \
          \"makespan_cycles\": {seq_span}, \"sequential_ms\": {:.4}, \

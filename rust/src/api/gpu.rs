@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use crate::asm::{assemble, Program};
 use crate::coordinator::{bus_fraction, DataBus, JobResult, DEFAULT_CYCLE_BUDGET};
-use crate::kernels::{Kernel, KernelCache, KernelSpec};
+use crate::kernels::{CacheStats, Kernel, KernelCache, KernelSpec};
 use crate::sim::config::{EgpuConfig, FeatureSet};
 use crate::sim::{Machine, RunStats};
 
@@ -189,6 +189,13 @@ impl Gpu {
     /// This device's kernel-specialization cache.
     pub fn kernel_cache(&self) -> &Arc<KernelCache> {
         &self.cache
+    }
+
+    /// Kernel-cache counters (compiles/hits/entries): asserts the
+    /// compile-once property of [`Gpu::launch_spec`] without going
+    /// through the cache handle.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
     }
 
     pub fn config(&self) -> &EgpuConfig {

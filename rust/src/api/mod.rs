@@ -63,6 +63,14 @@
 //! over [`Coordinator`](crate::coordinator::Coordinator). Cycle counts
 //! and results through either path are bit-identical (asserted by
 //! `rust/tests/api_parity.rs`).
+//!
+//! # Continuous serving
+//!
+//! Above batch submission sits the serving runtime
+//! ([`Server`]/[`ServerBuilder`], re-exported from [`crate::serve`]):
+//! a stream of [`Request`]s through a bounded admission queue with
+//! load-shedding, deadline/priority-aware batching, and latency
+//! telemetry over a heterogeneous fleet built with [`Gpu::fleet`].
 
 mod buffer;
 mod gpu;
@@ -74,6 +82,10 @@ pub use stream::{GpuArray, Stream, StreamLaunch};
 
 pub use crate::coordinator::DEFAULT_CYCLE_BUDGET;
 pub use crate::kernels::{CacheStats, KernelCache, KernelSpec};
+pub use crate::serve::{
+    BatchPolicy, Histogram, Request, RequestResult, ServeReport, Server, ServerBuilder,
+    ShedReason, ShedRecord, Telemetry,
+};
 pub use crate::sim::config::FeatureSet;
 
 /// Unweighted mean of per-launch bus overheads (the [`LaunchReport`]

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use crate::coordinator::{Coordinator, Job};
-use crate::kernels::{Kernel, KernelCache, KernelSpec};
+use crate::kernels::{CacheStats, Kernel, KernelCache, KernelSpec};
 use crate::sim::config::EgpuConfig;
 
 use super::gpu::LaunchReport;
@@ -102,9 +102,30 @@ impl GpuArray {
         Ok(s)
     }
 
-    /// Fraction of the makespan each core spent occupied.
+    /// Fraction of the makespan each core spent occupied. Successive
+    /// [`GpuArray::sync`] batches accumulate on one timeline; a fresh
+    /// measurement window is an explicit [`GpuArray::reset_timeline`].
     pub fn core_utilization(&self) -> Vec<f64> {
         self.coord.core_utilization()
+    }
+
+    /// Kernel-cache counters (compiles/hits/entries): the fleet-level
+    /// "compile once, serve forever" property, assertable in tests
+    /// without reaching for the coordinator escape hatch.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.coord.kernel_cache().stats()
+    }
+
+    /// Advance the modeled timeline to `cycle` (an explicit idle gap;
+    /// see [`Coordinator::advance_timeline_to`]).
+    pub fn advance_timeline_to(&mut self, cycle: u64) {
+        self.coord.advance_timeline_to(cycle);
+    }
+
+    /// Start a fresh accounting window at cycle 0 (explicit reset;
+    /// see [`Coordinator::reset_timeline`]).
+    pub fn reset_timeline(&mut self) {
+        self.coord.reset_timeline();
     }
 
     /// Toggle parallel (worker-thread-per-core) dispatch for

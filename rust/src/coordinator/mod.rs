@@ -821,6 +821,13 @@ impl Coordinator {
         self.bus_khz as f64 / 1000.0
     }
 
+    /// The shared bus clock in integer kHz — the exact unit the
+    /// timeline is kept in (the serving layer converts µs deadlines
+    /// and linger windows through it without rounding drift).
+    pub fn bus_khz(&self) -> u64 {
+        self.bus_khz
+    }
+
     /// The fleet's kernel-specialization cache.
     pub fn kernel_cache(&self) -> &Arc<KernelCache> {
         &self.cache
@@ -857,13 +864,47 @@ impl Coordinator {
     }
 
     /// Fraction of the makespan each core spent occupied (loading,
-    /// computing or unloading); all zeros before any work ran.
+    /// computing or unloading). The denominator is guarded: a fleet
+    /// that never ran a job (makespan 0) reports all zeros, never
+    /// NaN — including after [`Coordinator::advance_timeline_to`]
+    /// opened an idle span with no work in it.
+    ///
+    /// Successive [`Coordinator::run_all`] batches **accumulate** on
+    /// one timeline (busy cycles and makespan are cumulative) — that
+    /// is the documented default; a fresh measurement window is an
+    /// explicit [`Coordinator::reset_timeline`] call, never implicit.
     pub fn core_utilization(&self) -> Vec<f64> {
         let span = self.makespan();
         self.core_busy
             .iter()
             .map(|&b| if span == 0 { 0.0 } else { b as f64 / span as f64 })
             .collect()
+    }
+
+    /// Advance every core's free time (and hence the makespan floor)
+    /// to `cycle`: an explicit *idle gap* on the modeled timeline. The
+    /// serving layer uses this to model the fleet sitting idle between
+    /// request batches — jobs dispatched afterwards start no earlier
+    /// than `cycle`, and utilization denominators include the gap.
+    /// Cycles already past `cycle` are unaffected (time never moves
+    /// backwards); the bus stays consistent because every future
+    /// reservation's earliest bound comes from a core free time.
+    pub fn advance_timeline_to(&mut self, cycle: u64) {
+        for free in &mut self.core_free {
+            *free = (*free).max(cycle);
+        }
+    }
+
+    /// Start a fresh measurement window at cycle 0: clears the
+    /// per-core free/busy counters and the bus reservation calendar.
+    /// This is the explicit counterpart to the cumulative default of
+    /// [`Coordinator::run_all`] (see [`Coordinator::core_utilization`]).
+    /// Stream→core affinity and resident-data tracking are untouched:
+    /// they describe machine state, not accounting.
+    pub fn reset_timeline(&mut self) {
+        self.core_free.fill(0);
+        self.core_busy.fill(0);
+        self.bus_cal = BusCalendar::default();
     }
 
     /// Toggle parallel (worker-thread) dispatch. Defaults to on; the
@@ -1714,6 +1755,49 @@ mod tests {
             assert!(b >= last && b >= c);
             last = b;
         }
+    }
+
+    #[test]
+    fn utilization_accumulates_across_batches_until_reset() {
+        let mut c = Coordinator::new(cfg(), 2).unwrap();
+        // Never ran a job: guarded denominator, all zeros (no NaN).
+        assert!(c.core_utilization().iter().all(|&u| u == 0.0));
+        c.submit(job(32));
+        c.run_all().unwrap();
+        let span1 = c.makespan();
+        let busy1: f64 = c.core_utilization().iter().sum();
+        c.submit(job(32));
+        c.run_all().unwrap();
+        // Cumulative by default: the second batch extends one timeline.
+        assert!(c.makespan() > span1, "{} vs {span1}", c.makespan());
+        assert!(busy1 > 0.0);
+        // Explicit reset opens a fresh window...
+        c.reset_timeline();
+        assert_eq!(c.makespan(), 0);
+        assert!(c.core_utilization().iter().all(|&u| u == 0.0));
+        // ...and the fleet stays fully usable on it.
+        c.submit(job(32));
+        let rs = c.run_all().unwrap();
+        assert_eq!(rs[0].start, 0, "fresh window restarts at cycle 0");
+        assert!(c.makespan() > 0);
+    }
+
+    #[test]
+    fn advance_timeline_models_idle_gaps() {
+        let mut c = Coordinator::new(cfg(), 2).unwrap();
+        c.advance_timeline_to(1_000);
+        // Idle span alone: utilization stays zero, never NaN.
+        assert_eq!(c.makespan(), 1_000);
+        assert!(c.core_utilization().iter().all(|&u| u == 0.0));
+        c.submit(job(32));
+        let rs = c.run_all().unwrap();
+        assert!(rs[0].start >= 1_000, "jobs start after the gap, got {}", rs[0].start);
+        let util = c.core_utilization();
+        assert!(util[rs[0].core] > 0.0 && util[rs[0].core] < 1.0, "{util:?}");
+        // Time never moves backwards.
+        let span = c.makespan();
+        c.advance_timeline_to(10);
+        assert_eq!(c.makespan(), span);
     }
 
     #[test]

@@ -10,9 +10,13 @@
 //! - [`table`] — aligned text tables for paper-vs-measured output
 //! - [`suite`] — the §7 benchmark suite runner shared by the Table 7/8
 //!   benches, the CLI and `examples/full_eval.rs`
+//! - [`loadgen`] — seeded request traces for the serving runtime
+//!   (`egpu serve`, the perf bench's `serving` section and
+//!   `rust/tests/serve_runtime.rs`)
 
 pub mod bench;
 pub mod fleet_demo;
+pub mod loadgen;
 pub mod rng;
 pub mod suite;
 pub mod table;

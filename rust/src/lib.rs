@@ -28,6 +28,9 @@
 //!   (reduction, transpose, MMM, bitonic sort, FFT), built through
 //!   [`kc::KernelBuilder`]
 //! - [`coordinator`] — multi-core dispatch and the 32-bit data-bus model
+//! - [`serve`] — the continuous serving runtime over the fleet:
+//!   bounded admission with load-shedding, deadline/priority batching,
+//!   and latency telemetry (`api::Server`)
 //! - [`harness`] — bench/table/property-test scaffolding used by the
 //!   `rust/benches/` binaries (criterion is unavailable offline)
 //!
@@ -46,4 +49,5 @@ pub mod kernels;
 pub mod model;
 pub mod place;
 pub mod runtime;
+pub mod serve;
 pub mod sim;

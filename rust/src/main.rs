@@ -7,13 +7,16 @@
 //! - `egpu profile`           instruction-mix profiles (Figure 6)
 //! - `egpu place [PRESET]`    Agilex sector placement (Figures 4, 5)
 //! - `egpu run FILE.asm`      assemble + run a user program
+//! - `egpu fleet`             batch mixed kernels over a heterogeneous fleet
+//! - `egpu serve`             continuous serving with admission control
 //! - `egpu sched KERNEL`      kernel-compiler schedule listing + stats
 //! - `egpu info`              configuration presets and artifact status
 
 use std::process::ExitCode;
 
-use egpu::api::{ApiError, Backend, FleetBuilder, Gpu, KernelSpec, DEFAULT_CYCLE_BUDGET};
+use egpu::api::{ApiError, Backend, FleetBuilder, Gpu, KernelSpec, Server, DEFAULT_CYCLE_BUDGET};
 use egpu::asm::assemble;
+use egpu::harness::loadgen::{demo_requests, LoadSpec};
 use egpu::harness::{demo_job_io, demo_specs, suite, Rng, Table, Variant};
 use egpu::isa::Group;
 use egpu::kernels::Kernel;
@@ -37,6 +40,7 @@ fn main() -> ExitCode {
         "place" => cmd_place(rest),
         "run" => cmd_run(rest),
         "fleet" => cmd_fleet(rest),
+        "serve" => cmd_serve(rest),
         "sched" => cmd_sched(rest),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -79,6 +83,17 @@ COMMANDS:
                     utilization and kernel-cache statistics; --configs
                     loads the fleet from JSON files (each holding one
                     config or an array); --seq uses sequential dispatch
+  serve [--configs a.json,b.json] [--requests N] [--qdepth N] [--batch N]
+        [--linger-us N] [--deadline-us N] [--gap N] [--seed N] [--seq]
+                    continuously serve a seeded request stream through a
+                    bounded admission queue and deadline/priority batcher
+                    over the fleet (default: the 2xDP + 2xQP mix),
+                    printing throughput, shed rate, latency percentiles
+                    (p50/p95/p99) and per-core utilization; --qdepth
+                    bounds the queue (overflow sheds), --deadline-us
+                    gives half the requests deadlines with that slack,
+                    --gap sets the mean inter-arrival gap in bus cycles,
+                    --seq uses sequential dispatch (bit-identical)
   sched KERNEL [DIM]
                     print a kernel's list-scheduled listing and the
                     static schedule stats (fenced / padded / scheduled)
@@ -86,6 +101,64 @@ COMMANDS:
                     transpose, mmm, mmm-dot, bitonic, fft, fft4)
   info              list presets and artifact status
 ";
+
+/// Flag-parsing helpers shared by `cmd_run`/`cmd_fleet`/`cmd_sched`/
+/// `cmd_serve`: every numeric argument fails with a usage error naming
+/// the flag and the offending value — never a panic and never a
+/// silently-clamped default (`--jobs 0` is an error, not an empty run).
+mod flags {
+    /// The value following `args[*i]` (the flag itself); advances the
+    /// cursor past it.
+    pub fn value<'a>(args: &'a [String], i: &mut usize, flag: &str) -> Result<&'a str, String> {
+        *i += 1;
+        args.get(*i).map(String::as_str).ok_or_else(|| format!("{flag} needs a value"))
+    }
+
+    /// Parse a numeric string, naming what it was for on failure.
+    pub fn parse<T: std::str::FromStr>(what: &str, v: &str) -> Result<T, String> {
+        v.parse::<T>().map_err(|_| format!("{what}: '{v}' is not a valid number"))
+    }
+
+    /// Next value parsed as a number.
+    pub fn num<T: std::str::FromStr>(
+        args: &[String],
+        i: &mut usize,
+        flag: &str,
+    ) -> Result<T, String> {
+        parse(flag, value(args, i, flag)?)
+    }
+
+    /// Next value as a `usize` of at least 1.
+    pub fn positive_usize(args: &[String], i: &mut usize, flag: &str) -> Result<usize, String> {
+        match num::<usize>(args, i, flag)? {
+            0 => Err(format!("{flag} must be at least 1")),
+            n => Ok(n),
+        }
+    }
+
+    /// Next value as a `u64` of at least 1.
+    pub fn positive_u64(args: &[String], i: &mut usize, flag: &str) -> Result<u64, String> {
+        match num::<u64>(args, i, flag)? {
+            0 => Err(format!("{flag} must be at least 1")),
+            n => Ok(n),
+        }
+    }
+}
+
+/// Load a [`FleetBuilder`] from comma-separated JSON config files
+/// (each holding one config object or an array) — the `--configs`
+/// loader shared by `cmd_fleet` and `cmd_serve`.
+fn fleet_from_files(paths: &str) -> Result<FleetBuilder, String> {
+    let mut builder = FleetBuilder::new();
+    for path in paths.split(',') {
+        let json = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let parsed = config_json::configs_from_json(&json).map_err(|e| format!("{path}: {e}"))?;
+        for cfg in parsed {
+            builder = builder.core(cfg);
+        }
+    }
+    Ok(builder)
+}
 
 fn cmd_tables() -> Result<(), String> {
     // Table 1: PPA comparison.
@@ -268,33 +341,10 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
-            "--config" => {
-                i += 1;
-                config_path = Some(args.get(i).cloned().ok_or("--config needs a path")?);
-            }
-            "--threads" => {
-                i += 1;
-                threads = Some(
-                    args.get(i)
-                        .and_then(|s| s.parse::<usize>().ok())
-                        .ok_or("--threads needs a number")?,
-                );
-            }
-            "--max-cycles" => {
-                i += 1;
-                max_cycles = args
-                    .get(i)
-                    .and_then(|s| s.parse::<u64>().ok())
-                    .ok_or("--max-cycles needs a number")?;
-            }
-            "--cores" => {
-                i += 1;
-                cores = args
-                    .get(i)
-                    .and_then(|s| s.parse::<usize>().ok())
-                    .filter(|&c| c >= 1)
-                    .ok_or("--cores needs a positive number")?;
-            }
+            "--config" => config_path = Some(flags::value(args, &mut i, "--config")?.to_string()),
+            "--threads" => threads = Some(flags::num(args, &mut i, "--threads")?),
+            "--max-cycles" => max_cycles = flags::num(args, &mut i, "--max-cycles")?,
+            "--cores" => cores = flags::positive_usize(args, &mut i, "--cores")?,
             "--qp" => memory = MemoryMode::Qp,
             "--xla" => use_xla = true,
             f if !f.starts_with('-') => file = Some(f.to_string()),
@@ -431,18 +481,8 @@ fn cmd_fleet(args: &[String]) -> Result<(), String> {
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
-            "--configs" => {
-                i += 1;
-                cfg_paths = Some(args.get(i).cloned().ok_or("--configs needs path[,path...]")?);
-            }
-            "--jobs" => {
-                i += 1;
-                jobs = args
-                    .get(i)
-                    .and_then(|s| s.parse::<usize>().ok())
-                    .filter(|&j| j >= 1)
-                    .ok_or("--jobs needs a positive number")?;
-            }
+            "--configs" => cfg_paths = Some(flags::value(args, &mut i, "--configs")?.to_string()),
+            "--jobs" => jobs = flags::positive_usize(args, &mut i, "--jobs")?,
             "--seq" => sequential = true,
             other => return Err(format!("unknown flag '{other}'")),
         }
@@ -450,18 +490,10 @@ fn cmd_fleet(args: &[String]) -> Result<(), String> {
     }
 
     // Default: the reference 2 × 771 MHz DP-full + 2 × 600 MHz QP mix.
-    let mut builder = FleetBuilder::demo_mixed();
-    if let Some(paths) = cfg_paths {
-        builder = FleetBuilder::new();
-        for path in paths.split(',') {
-            let json = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-            let parsed =
-                config_json::configs_from_json(&json).map_err(|e| format!("{path}: {e}"))?;
-            for cfg in parsed {
-                builder = builder.core(cfg);
-            }
-        }
-    }
+    let builder = match cfg_paths {
+        Some(paths) => fleet_from_files(&paths)?,
+        None => FleetBuilder::demo_mixed(),
+    };
     let mut fleet = builder.build().map_err(|e| e.to_string())?;
     if sequential {
         fleet.set_parallel(false);
@@ -546,6 +578,129 @@ fn cmd_fleet(args: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `egpu serve`: continuously serve a seeded request stream through
+/// the admission queue + deadline batcher over a heterogeneous fleet,
+/// printing throughput, shed rate and latency percentiles.
+fn cmd_serve(args: &[String]) -> Result<(), String> {
+    let mut cfg_paths: Option<String> = None;
+    let mut requests = 40usize;
+    let mut qdepth = 64usize;
+    let mut batch = 8usize;
+    let mut linger_us = 8u64;
+    let mut deadline_us: Option<u64> = None;
+    let mut gap = 2_000u64;
+    let mut seed = 0x5EEDu64;
+    let mut sequential = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--configs" => cfg_paths = Some(flags::value(args, &mut i, "--configs")?.to_string()),
+            "--requests" => requests = flags::positive_usize(args, &mut i, "--requests")?,
+            "--qdepth" => qdepth = flags::positive_usize(args, &mut i, "--qdepth")?,
+            "--batch" => batch = flags::positive_usize(args, &mut i, "--batch")?,
+            "--linger-us" => linger_us = flags::num(args, &mut i, "--linger-us")?,
+            "--deadline-us" => {
+                deadline_us = Some(flags::positive_u64(args, &mut i, "--deadline-us")?)
+            }
+            "--gap" => gap = flags::num(args, &mut i, "--gap")?,
+            "--seed" => seed = flags::num(args, &mut i, "--seed")?,
+            "--seq" => sequential = true,
+            other => return Err(format!("unknown flag '{other}'")),
+        }
+        i += 1;
+    }
+
+    let mut builder = Server::builder()
+        .qdepth(qdepth)
+        .max_batch(batch)
+        .linger_us(linger_us)
+        .sequential(sequential);
+    if let Some(paths) = cfg_paths {
+        builder = builder.fleet(fleet_from_files(&paths)?);
+    }
+    let mut server = builder.build().map_err(|e| e.to_string())?;
+
+    let trace = demo_requests(&LoadSpec {
+        seed,
+        requests,
+        mean_gap: gap,
+        dim: 64,
+        deadline_slack: deadline_us.map(|us| server.us_to_cycles(us)),
+    });
+    let report = server.serve(trace).map_err(|e| e.to_string())?;
+    let t = &report.telemetry;
+    let mhz = server.bus_mhz();
+
+    let mut lat = Table::new(format!(
+        "Serving telemetry — {} served / {} shed of {} offered, {} batches (bus at {mhz:.0} MHz)",
+        t.completed,
+        t.shed,
+        report.submitted(),
+        t.batches,
+    ));
+    lat.headers(["latency (us)", "p50", "p95", "p99", "mean", "max"]);
+    for (name, h) in [
+        ("queue wait", &t.queue_wait),
+        ("service", &t.service),
+        ("end-to-end", &t.e2e),
+    ] {
+        lat.row([
+            name.to_string(),
+            format!("{:.2}", h.p50() as f64 / mhz),
+            format!("{:.2}", h.p95() as f64 / mhz),
+            format!("{:.2}", h.p99() as f64 / mhz),
+            format!("{:.2}", h.mean() / mhz),
+            format!("{:.2}", h.max() as f64 / mhz),
+        ]);
+    }
+    lat.print();
+    println!();
+
+    let util = server.core_utilization();
+    let mut tu = Table::new("Per-core utilization");
+    tu.headers(["core", "config", "MHz", "requests", "util"]);
+    for c in 0..server.num_cores() {
+        tu.row([
+            c.to_string(),
+            server.fleet().core_configs()[c].name.clone(),
+            format!("{:.0}", server.fleet().coordinator().core_mhz(c)),
+            report.results.iter().filter(|r| r.core == c).count().to_string(),
+            format!("{:.1}%", util[c] * 100.0),
+        ]);
+    }
+    tu.print();
+
+    let stats = server.cache_stats();
+    println!(
+        "\nkernel cache: {} compiles, {} hits ({} entries) — compile once, serve forever",
+        stats.compiles, stats.hits, stats.entries
+    );
+    if t.shed > 0 {
+        let full = report
+            .shed
+            .iter()
+            .filter(|s| s.reason == egpu::serve::ShedReason::QueueFull)
+            .count();
+        println!(
+            "shed: {} ({:.1}% of offered; {} queue-full, {} deadline-expired)",
+            t.shed,
+            100.0 * t.shed_rate(),
+            full,
+            report.shed.len() - full
+        );
+    }
+    println!(
+        "deadline misses among served: {}   peak queue depth: {} (bound {})",
+        t.deadline_missed, t.peak_queue, qdepth
+    );
+    println!(
+        "span: {:.2} us modeled — {:.0} requests/s sustained",
+        server.cycles_to_us(t.span_cycles()),
+        t.jobs_per_s(mhz)
+    );
+    Ok(())
+}
+
 /// `egpu sched KERNEL [DIM]`: print the compiler's scheduled listing and
 /// the static-schedule statistics for one benchmark kernel.
 fn cmd_sched(args: &[String]) -> Result<(), String> {
@@ -554,7 +709,7 @@ fn cmd_sched(args: &[String]) -> Result<(), String> {
                  bitonic, fft, fft4)";
     let name = args.first().map(String::as_str).ok_or(usage)?;
     let dim = match args.get(1) {
-        Some(d) => Some(d.parse::<usize>().map_err(|_| format!("bad DIM '{d}'"))?),
+        Some(d) => Some(flags::parse::<usize>("DIM", d)?),
         None => None,
     };
     let n = dim.unwrap_or(64);

@@ -1,0 +1,168 @@
+//! Deadline/priority-aware batch formation.
+//!
+//! The batcher decides *when* a batch window closes and *which* queued
+//! requests fill it:
+//!
+//! - The window closes when the batch fills ([`BatchPolicy::max_batch`]
+//!   requests) or when the oldest queued request has lingered
+//!   [`BatchPolicy::max_linger`] modeled cycles since its arrival —
+//!   whichever comes first. Lingering trades a little latency for
+//!   fuller batches (more cross-core overlap per dispatch).
+//! - Slots go oldest-deadline-first (requests without a deadline sort
+//!   last), then highest priority, then arrival, then submission
+//!   order. The key is a total order over distinct requests, so batch
+//!   contents and dispatch order are deterministic.
+//! - A request whose deadline has already passed at dispatch time is
+//!   shed ([`ShedReason::DeadlineExpired`]) rather than burning fleet
+//!   time on an answer nobody can use.
+
+use super::queue::{AdmissionQueue, Pending};
+use super::{ShedReason, ShedRecord};
+
+/// Batch-formation knobs (modeled time; see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Maximum requests per dispatched batch.
+    pub max_batch: usize,
+    /// Maximum bus cycles the oldest queued request lingers before the
+    /// window closes regardless of batch fill.
+    pub max_linger: u64,
+}
+
+impl BatchPolicy {
+    /// Latest window close, given the clock and the oldest queued
+    /// arrival: the oldest request never lingers past `max_linger`,
+    /// and a window never closes in the past.
+    pub(crate) fn close_by(&self, now: u64, oldest_arrival: u64) -> u64 {
+        now.max(oldest_arrival.saturating_add(self.max_linger))
+    }
+}
+
+/// The total dispatch order: `(deadline, ¬priority, arrival, id)`.
+fn dispatch_key(p: &Pending) -> (u64, u8, u64, usize) {
+    (
+        p.req.deadline.unwrap_or(u64::MAX),
+        u8::MAX - p.req.priority,
+        p.req.arrival,
+        p.id,
+    )
+}
+
+/// Draw the next batch from the queue at modeled time `now`: expired
+/// deadlines are shed (recorded on the queue), the best
+/// `policy.max_batch` survivors are returned in dispatch order, and
+/// the rest keep their queue slots.
+pub(crate) fn draw_batch(
+    queue: &mut AdmissionQueue,
+    policy: &BatchPolicy,
+    now: u64,
+) -> Vec<Pending> {
+    let mut pending = queue.take_pending();
+    pending.sort_by_key(dispatch_key);
+    let mut batch = Vec::new();
+    let mut rest = Vec::new();
+    for p in pending {
+        if p.req.deadline.is_some_and(|d| d <= now) {
+            queue.shed_record(ShedRecord {
+                id: p.id,
+                spec: p.req.spec,
+                reason: ShedReason::DeadlineExpired,
+                at: now,
+            });
+        } else if batch.len() < policy.max_batch {
+            batch.push(p);
+        } else {
+            rest.push(p);
+        }
+    }
+    queue.restore(rest);
+    batch
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelSpec;
+    use crate::serve::Request;
+
+    fn queued(reqs: Vec<Request>) -> AdmissionQueue {
+        let mut q = AdmissionQueue::new(reqs.len());
+        for (id, r) in reqs.into_iter().enumerate() {
+            let at = r.arrival;
+            q.offer(id, r, at);
+        }
+        q
+    }
+
+    fn spec() -> KernelSpec {
+        KernelSpec::Reduction { n: 64 }
+    }
+
+    #[test]
+    fn deadline_then_priority_then_arrival_orders_the_batch() {
+        let mut q = queued(vec![
+            Request::new(spec()).at(3),             // no deadline, late
+            Request::new(spec()).at(2).due_by(900), // latest deadline
+            Request::new(spec()).at(1).due_by(500), // earliest deadline
+            Request::new(spec()).at(0).priority(3), // no deadline, urgent
+            Request::new(spec()).at(9).due_by(500), // same deadline, later arrival
+        ]);
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_linger: 100,
+        };
+        let batch = draw_batch(&mut q, &policy, 10);
+        let ids: Vec<usize> = batch.iter().map(|p| p.id).collect();
+        assert_eq!(ids, vec![2, 4, 1, 3, 0]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn expired_deadlines_are_shed_not_dispatched() {
+        let mut q = queued(vec![
+            Request::new(spec()).at(0).due_by(5),
+            Request::new(spec()).at(0).due_by(500),
+        ]);
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_linger: 100,
+        };
+        let batch = draw_batch(&mut q, &policy, 10);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 1);
+        assert_eq!(q.shed_count(), 1);
+        let shed = q.into_shed();
+        assert_eq!(shed[0].reason, ShedReason::DeadlineExpired);
+        assert_eq!(shed[0].at, 10);
+    }
+
+    #[test]
+    fn overflow_stays_queued_for_the_next_window() {
+        let mut q = queued(vec![
+            Request::new(spec()).at(0).due_by(100),
+            Request::new(spec()).at(0).due_by(200),
+            Request::new(spec()).at(0).due_by(300),
+        ]);
+        let policy = BatchPolicy {
+            max_batch: 2,
+            max_linger: 100,
+        };
+        let batch = draw_batch(&mut q, &policy, 0);
+        assert_eq!(batch.len(), 2);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.oldest_arrival(), Some(0));
+        let next = draw_batch(&mut q, &policy, 0);
+        assert_eq!(next[0].id, 2);
+    }
+
+    #[test]
+    fn close_by_honors_linger_and_never_rewinds() {
+        let p = BatchPolicy {
+            max_batch: 4,
+            max_linger: 50,
+        };
+        assert_eq!(p.close_by(10, 0), 50);
+        assert_eq!(p.close_by(100, 0), 100);
+        assert_eq!(p.close_by(0, u64::MAX), u64::MAX);
+    }
+}

@@ -1,0 +1,237 @@
+//! `egpu::serve` — continuous job serving over a heterogeneous fleet.
+//!
+//! The paper positions the eGPU as a high-clock-rate offload engine for
+//! *large numbers of small kernels*, and its companion work ("Soft GPGPU
+//! versus IP cores", PAPERS.md) frames the real contest as sustained
+//! throughput under a stream of requests — not one-shot launches. The
+//! fleet layer ([`crate::coordinator`]) dispatches a pre-built batch;
+//! this module adds the missing serving semantics on top of it:
+//!
+//! - **Admission.** Offered [`Request`]s pass through a *bounded*
+//!   [`AdmissionQueue`]; a request that arrives while the queue is full
+//!   is **shed** (recorded as a [`ShedRecord`], never silently dropped)
+//!   instead of growing the backlog without bound.
+//! - **Batching.** A deadline/priority-aware batcher
+//!   ([`BatchPolicy`]) closes a batch window when it fills or when the
+//!   oldest queued request has lingered `max_linger` modeled cycles,
+//!   and dispatches oldest-deadline-first (then priority, arrival,
+//!   submission order — a total order, so dispatch is deterministic).
+//!   Requests whose deadline has already passed at dispatch time are
+//!   shed as [`ShedReason::DeadlineExpired`].
+//! - **Dispatch.** Batches run through the existing fleet placement
+//!   path ([`crate::api::GpuArray`] over [`crate::coordinator`]):
+//!   feature routing, wall-clock-aware placement, the shared
+//!   [`KernelCache`](crate::kernels::KernelCache) — compile once, serve
+//!   forever.
+//! - **Telemetry.** Per-request queue wait, service time and
+//!   end-to-end modeled latency feed hand-rolled log₂ [`Histogram`]s
+//!   (p50/p95/p99 — no registry dependencies exist offline), collected
+//!   in a [`Telemetry`] record alongside shed/deadline-miss counts.
+//!
+//! # The modeled clock
+//!
+//! Everything is measured in **bus cycles** — the coordinator's shared
+//! timeline unit (the fastest core's clock). Request arrivals are bus
+//! cycles; the server advances the fleet's timeline across idle gaps
+//! ([`crate::coordinator::Coordinator::advance_timeline_to`]) so a
+//! job's `start`/`end` are absolute positions on one continuous
+//! timeline and `end - arrival` is a real modeled latency. Batches are
+//! serial on that timeline (the fleet drains a batch before the next
+//! window closes); admission continues throughout, so arrivals during
+//! service accumulate — and shed — exactly as they would against a
+//! busy fleet.
+//!
+//! # Determinism
+//!
+//! With a fixed seed (see [`crate::harness::loadgen`]) the whole
+//! pipeline is reproducible bit-for-bit: admission and batching are
+//! pure integer arithmetic over modeled time, and the fleet's parallel
+//! dispatch is already bit-identical to its sequential reference path
+//! (PR 2/PR 4 discipline) — `rust/tests/serve_runtime.rs` asserts that
+//! sequential and parallel serving produce identical results *and*
+//! identical telemetry.
+
+mod batcher;
+mod queue;
+mod server;
+mod telemetry;
+
+pub use batcher::BatchPolicy;
+pub use queue::AdmissionQueue;
+pub use server::{Server, ServerBuilder};
+pub use telemetry::{Histogram, Telemetry};
+
+use crate::kernels::KernelSpec;
+
+/// One unit of offered load: a kernel specification plus its data
+/// movement, an arrival time on the modeled clock, and optional
+/// service-quality attributes (deadline, priority).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Request {
+    /// What to run (specialized per placed core through the fleet's
+    /// kernel cache).
+    pub spec: KernelSpec,
+    /// Blocks DMA'd into shared memory before the run.
+    pub loads: Vec<(usize, Vec<u32>)>,
+    /// `(base, len)` blocks DMA'd out after the run.
+    pub unloads: Vec<(usize, usize)>,
+    /// Arrival on the modeled clock, in bus cycles.
+    pub arrival: u64,
+    /// Absolute completion deadline (bus cycles). A request whose
+    /// deadline has already passed when its batch window closes is
+    /// shed ([`ShedReason::DeadlineExpired`]); one dispatched in time
+    /// but finishing late is served and counted as a deadline miss.
+    pub deadline: Option<u64>,
+    /// Urgency among equal deadlines: higher wins a batch slot first.
+    pub priority: u8,
+}
+
+impl Request {
+    pub fn new(spec: KernelSpec) -> Request {
+        Request {
+            spec,
+            loads: Vec::new(),
+            unloads: Vec::new(),
+            arrival: 0,
+            deadline: None,
+            priority: 0,
+        }
+    }
+
+    /// DMA `data` into shared memory at `base` before the run.
+    pub fn load(mut self, base: usize, data: Vec<u32>) -> Request {
+        self.loads.push((base, data));
+        self
+    }
+
+    /// DMA `len` words out from `base` after the run.
+    pub fn unload(mut self, base: usize, len: usize) -> Request {
+        self.unloads.push((base, len));
+        self
+    }
+
+    /// Arrival time in bus cycles.
+    pub fn at(mut self, arrival: u64) -> Request {
+        self.arrival = arrival;
+        self
+    }
+
+    /// Absolute completion deadline in bus cycles.
+    pub fn due_by(mut self, deadline: u64) -> Request {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Urgency among equal deadlines (higher = more urgent).
+    pub fn priority(mut self, priority: u8) -> Request {
+        self.priority = priority;
+        self
+    }
+}
+
+/// Why a request was turned away instead of served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The admission queue was at capacity when the request arrived.
+    QueueFull,
+    /// The deadline had already passed at dispatch time.
+    DeadlineExpired,
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedReason::QueueFull => write!(f, "queue full"),
+            ShedReason::DeadlineExpired => write!(f, "deadline expired"),
+        }
+    }
+}
+
+/// One shed request: every rejection is reported, never silent.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShedRecord {
+    /// Index of the request in the submitted workload.
+    pub id: usize,
+    pub spec: KernelSpec,
+    pub reason: ShedReason,
+    /// Modeled bus cycle at which the request was turned away (its
+    /// arrival for [`ShedReason::QueueFull`], the dispatch point for
+    /// [`ShedReason::DeadlineExpired`]).
+    pub at: u64,
+}
+
+/// A served request's full timeline and outputs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RequestResult {
+    /// Index of the request in the submitted workload.
+    pub id: usize,
+    /// Kernel name (from the specialized build).
+    pub name: String,
+    /// Batch the request was dispatched in (0-based, dispatch order).
+    pub batch: usize,
+    /// Core the fleet placed it on.
+    pub core: usize,
+    /// Request arrival (bus cycles).
+    pub arrival: u64,
+    /// Bus cycle at which its batch was dispatched.
+    pub dispatched: u64,
+    /// Bus acquisition (load DMA start) on the shared timeline.
+    pub start: u64,
+    /// Unload-complete cycle on the shared timeline.
+    pub end: u64,
+    /// The deadline the request carried, if any.
+    pub deadline: Option<u64>,
+    /// Kernel cycles at the placed core's clock.
+    pub compute_cycles: u64,
+    /// Load + unload DMA cycles on the shared bus.
+    pub bus_cycles: u64,
+    /// Unloaded blocks, in `unloads` order.
+    pub outputs: Vec<Vec<u32>>,
+}
+
+impl RequestResult {
+    /// Cycles spent queued before the fleet touched the request.
+    pub fn queue_wait(&self) -> u64 {
+        self.start - self.arrival
+    }
+
+    /// Cycles from bus acquisition to unload complete.
+    pub fn service(&self) -> u64 {
+        self.end - self.start
+    }
+
+    /// End-to-end modeled latency: arrival → unload complete.
+    pub fn e2e(&self) -> u64 {
+        self.end - self.arrival
+    }
+
+    /// Did the request finish by its deadline? (No deadline = yes.)
+    pub fn deadline_met(&self) -> bool {
+        self.deadline.is_none_or(|d| self.end <= d)
+    }
+}
+
+/// Everything one [`Server::serve`] call produced: served results in
+/// dispatch order, every shed request, and the aggregate telemetry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeReport {
+    /// Served requests, in dispatch order (batch by batch).
+    pub results: Vec<RequestResult>,
+    /// Shed requests, in the order they were turned away.
+    pub shed: Vec<ShedRecord>,
+    pub telemetry: Telemetry,
+}
+
+impl ServeReport {
+    /// Requests offered = served + shed (the accounting identity the
+    /// serving tests assert).
+    pub fn submitted(&self) -> usize {
+        self.results.len() + self.shed.len()
+    }
+
+    /// Fraction of offered requests shed; 0 on an empty workload
+    /// (delegates to the telemetry counters — one accounting source).
+    pub fn shed_rate(&self) -> f64 {
+        self.telemetry.shed_rate()
+    }
+}

@@ -1,0 +1,147 @@
+//! The bounded admission queue: backpressure by load-shedding.
+//!
+//! A serving system with an unbounded queue does not degrade, it
+//! *explodes* — latency grows without limit while throughput stays
+//! flat. The admission queue therefore has a hard capacity: a request
+//! that arrives while the queue is full is shed immediately and
+//! recorded (reason + modeled time), so the caller can distinguish
+//! "served slowly" from "turned away" — the accounting identity
+//! `served + shed == offered` is asserted by the serving tests.
+
+use super::{Request, ShedReason, ShedRecord};
+
+/// An admitted request waiting for a batch slot.
+#[derive(Debug, Clone)]
+pub(crate) struct Pending {
+    /// Index of the request in the submitted workload.
+    pub id: usize,
+    pub req: Request,
+}
+
+/// Bounded admission queue with shed-recording overflow.
+#[derive(Debug)]
+pub struct AdmissionQueue {
+    capacity: usize,
+    pending: Vec<Pending>,
+    shed: Vec<ShedRecord>,
+    peak: usize,
+}
+
+impl AdmissionQueue {
+    /// A queue admitting at most `capacity` requests at once.
+    pub fn new(capacity: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            capacity,
+            pending: Vec::new(),
+            shed: Vec::new(),
+            peak: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// High-water mark of admitted requests (≤ capacity, by
+    /// construction — the bound the saturation test leans on).
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    /// Requests shed so far.
+    pub fn shed_count(&self) -> usize {
+        self.shed.len()
+    }
+
+    /// Admit the request, or shed it (recorded, reason
+    /// [`ShedReason::QueueFull`]) when the queue is at capacity. `at`
+    /// is the modeled cycle of the admission attempt — the request's
+    /// arrival instant.
+    pub(crate) fn offer(&mut self, id: usize, req: Request, at: u64) {
+        if self.pending.len() >= self.capacity {
+            self.shed.push(ShedRecord {
+                id,
+                spec: req.spec,
+                reason: ShedReason::QueueFull,
+                at,
+            });
+        } else {
+            self.pending.push(Pending { id, req });
+            self.peak = self.peak.max(self.pending.len());
+        }
+    }
+
+    /// Earliest arrival among queued requests.
+    pub(crate) fn oldest_arrival(&self) -> Option<u64> {
+        self.pending.iter().map(|p| p.req.arrival).min()
+    }
+
+    /// Take the queued requests for batch selection.
+    pub(crate) fn take_pending(&mut self) -> Vec<Pending> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Put unselected requests back (they keep their admission).
+    pub(crate) fn restore(&mut self, rest: Vec<Pending>) {
+        debug_assert!(self.pending.is_empty(), "restore after take_pending only");
+        self.pending = rest;
+    }
+
+    /// Record a shed decided outside the queue (deadline expiry at
+    /// batch formation).
+    pub(crate) fn shed_record(&mut self, rec: ShedRecord) {
+        self.shed.push(rec);
+    }
+
+    /// All shed records, in the order the requests were turned away.
+    pub(crate) fn into_shed(self) -> Vec<ShedRecord> {
+        self.shed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::KernelSpec;
+
+    fn req(arrival: u64) -> Request {
+        Request::new(KernelSpec::Reduction { n: 64 }).at(arrival)
+    }
+
+    #[test]
+    fn overflow_sheds_with_reason_and_time() {
+        let mut q = AdmissionQueue::new(2);
+        q.offer(0, req(5), 5);
+        q.offer(1, req(6), 6);
+        q.offer(2, req(7), 7);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peak(), 2);
+        assert_eq!(q.shed_count(), 1);
+        let shed = q.into_shed();
+        assert_eq!(shed[0].id, 2);
+        assert_eq!(shed[0].reason, ShedReason::QueueFull);
+        assert_eq!(shed[0].at, 7);
+    }
+
+    #[test]
+    fn take_and_restore_preserve_admission() {
+        let mut q = AdmissionQueue::new(4);
+        q.offer(0, req(1), 1);
+        q.offer(1, req(2), 2);
+        let taken = q.take_pending();
+        assert!(q.is_empty());
+        q.restore(taken);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.oldest_arrival(), Some(1));
+        // Peak tracks admissions, not restores.
+        assert_eq!(q.peak(), 2);
+    }
+}

@@ -1,0 +1,351 @@
+//! The serving runtime: admission → batcher → fleet, on one modeled
+//! clock.
+//!
+//! [`Server::serve`] is a discrete-event loop over modeled bus cycles.
+//! Each iteration opens a batch window (jumping an idle clock to the
+//! next arrival), admits everything that has arrived (shedding on
+//! overflow), extends the window until the batch fills or the oldest
+//! request's linger expires, draws the batch in deadline/priority
+//! order, aligns the fleet's timeline with the window close
+//! ([`GpuArray::advance_timeline_to`] — the idle gap is modeled, not
+//! ignored), and dispatches through the fleet's feature-routed,
+//! wall-clock-aware placement path. Batches are serial on the modeled
+//! timeline: the next window closes no earlier than the previous
+//! batch's makespan, so arrivals during service queue up (and shed)
+//! exactly as they would against a busy fleet.
+//!
+//! Everything the loop decides is integer arithmetic over modeled
+//! time, and the fleet's parallel dispatch is bit-identical to its
+//! sequential reference — so a fixed workload produces bit-identical
+//! [`ServeReport`]s (results *and* telemetry) in both modes.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::api::{ApiError, FleetBuilder, GpuArray};
+use crate::kernels::{CacheStats, KernelCache};
+use crate::sim::config::ConfigError;
+
+use super::batcher::{draw_batch, BatchPolicy};
+use super::queue::AdmissionQueue;
+use super::telemetry::Telemetry;
+use super::{Request, RequestResult, ServeReport};
+
+/// Builder for a [`Server`]: the fleet plus the serving knobs.
+/// Defaults: the reference mixed fleet
+/// ([`FleetBuilder::demo_mixed`]), queue depth 64, batches of 8, 8 µs
+/// linger, parallel dispatch.
+#[derive(Debug, Clone)]
+pub struct ServerBuilder {
+    fleet: FleetBuilder,
+    qdepth: usize,
+    max_batch: usize,
+    linger_us: u64,
+    sequential: bool,
+}
+
+impl Default for ServerBuilder {
+    fn default() -> ServerBuilder {
+        ServerBuilder::new()
+    }
+}
+
+impl ServerBuilder {
+    pub fn new() -> ServerBuilder {
+        ServerBuilder {
+            fleet: FleetBuilder::demo_mixed(),
+            qdepth: 64,
+            max_batch: 8,
+            linger_us: 8,
+            sequential: false,
+        }
+    }
+
+    /// Serve over this fleet instead of the demo mix.
+    pub fn fleet(mut self, fleet: FleetBuilder) -> ServerBuilder {
+        self.fleet = fleet;
+        self
+    }
+
+    /// Admission-queue capacity (requests beyond it are shed).
+    pub fn qdepth(mut self, qdepth: usize) -> ServerBuilder {
+        self.qdepth = qdepth;
+        self
+    }
+
+    /// Maximum requests per dispatched batch.
+    pub fn max_batch(mut self, max_batch: usize) -> ServerBuilder {
+        self.max_batch = max_batch;
+        self
+    }
+
+    /// Maximum modeled linger of the oldest queued request, in µs
+    /// (converted to bus cycles at build time).
+    pub fn linger_us(mut self, linger_us: u64) -> ServerBuilder {
+        self.linger_us = linger_us;
+        self
+    }
+
+    /// Force the fleet's sequential dispatch path (`--seq`): results
+    /// and telemetry are bit-identical to parallel dispatch, only
+    /// wall-clock time differs.
+    pub fn sequential(mut self, sequential: bool) -> ServerBuilder {
+        self.sequential = sequential;
+        self
+    }
+
+    /// Share a kernel-specialization cache with other devices.
+    pub fn kernel_cache(mut self, cache: Arc<KernelCache>) -> ServerBuilder {
+        self.fleet = self.fleet.kernel_cache(cache);
+        self
+    }
+
+    pub fn build(self) -> Result<Server, ApiError> {
+        if self.qdepth == 0 {
+            return Err(ApiError::Config(ConfigError(
+                "a Server needs an admission queue (qdepth == 0)".into(),
+            )));
+        }
+        if self.max_batch == 0 {
+            return Err(ApiError::Config(ConfigError(
+                "a Server needs a batch size of at least 1 (max_batch == 0)".into(),
+            )));
+        }
+        let mut fleet = self.fleet.build()?;
+        fleet.set_parallel(!self.sequential);
+        let bus_khz = fleet.coordinator().bus_khz();
+        let policy = BatchPolicy {
+            max_batch: self.max_batch,
+            max_linger: self.linger_us.saturating_mul(bus_khz) / 1000,
+        };
+        Ok(Server {
+            fleet,
+            qdepth: self.qdepth,
+            policy,
+        })
+    }
+}
+
+/// A continuous job-serving runtime over a heterogeneous fleet. Build
+/// with [`Server::builder`]; feed workloads with [`Server::serve`].
+/// The fleet's timeline, kernel cache and stream state persist across
+/// `serve` calls — steady-state serving compiles each
+/// `(spec, config fingerprint)` exactly once, however many workloads
+/// replay it (assertable via [`Server::cache_stats`]).
+pub struct Server {
+    fleet: GpuArray,
+    qdepth: usize,
+    policy: BatchPolicy,
+}
+
+impl Server {
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder::new()
+    }
+
+    /// The fleet behind the server.
+    pub fn fleet(&self) -> &GpuArray {
+        &self.fleet
+    }
+
+    pub fn num_cores(&self) -> usize {
+        self.fleet.num_cores()
+    }
+
+    /// Fraction of the modeled timeline each core spent occupied
+    /// (idle gaps between batches count against utilization).
+    pub fn core_utilization(&self) -> Vec<f64> {
+        self.fleet.core_utilization()
+    }
+
+    /// Kernel-cache counters — the "compile once, serve forever"
+    /// property, assertable in tests.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.fleet.cache_stats()
+    }
+
+    /// The batching policy the builder resolved (linger in cycles).
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Admission-queue capacity.
+    pub fn qdepth(&self) -> usize {
+        self.qdepth
+    }
+
+    /// Start a fresh accounting window at cycle 0 (the explicit reset
+    /// of [`GpuArray::reset_timeline`]; by default successive
+    /// [`Server::serve`] calls continue one cumulative timeline). The
+    /// kernel cache is untouched — a reset server still serves from
+    /// warm specializations.
+    pub fn reset_timeline(&mut self) {
+        self.fleet.reset_timeline();
+    }
+
+    /// The shared bus clock in integer kHz.
+    pub fn bus_khz(&self) -> u64 {
+        self.fleet.coordinator().bus_khz()
+    }
+
+    /// The shared bus clock in MHz.
+    pub fn bus_mhz(&self) -> f64 {
+        self.fleet.coordinator().bus_mhz()
+    }
+
+    /// Modeled µs → bus cycles (exact integer arithmetic, floor;
+    /// saturating, so absurd CLI values clamp instead of panicking).
+    pub fn us_to_cycles(&self, us: u64) -> u64 {
+        us.saturating_mul(self.bus_khz()) / 1000
+    }
+
+    /// Bus cycles → modeled µs.
+    pub fn cycles_to_us(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.bus_mhz()
+    }
+
+    /// Serve a workload to drain: admit by arrival time, batch, and
+    /// dispatch until every request is served or shed. Returns the
+    /// per-request results (dispatch order), every shed request, and
+    /// the aggregate telemetry. Deterministic for a fixed workload.
+    pub fn serve(&mut self, requests: Vec<Request>) -> Result<ServeReport, ApiError> {
+        let policy = self.policy;
+        // Feed order: arrival time, ties by submission index.
+        let mut feed: Vec<(usize, Request)> = requests.into_iter().enumerate().collect();
+        feed.sort_by_key(|(id, r)| (r.arrival, *id));
+        // Statically-checkable spec errors fail the whole workload up
+        // front — a mid-batch compile failure would leave submitted
+        // jobs queued on the coordinator.
+        for (id, r) in &feed {
+            if !r.spec.valid_dim() {
+                return Err(ApiError::Assemble(format!(
+                    "request {id}: kernel '{}' does not support DIM {}",
+                    r.spec.generator(),
+                    r.spec.dim()
+                )));
+            }
+        }
+        let mut telemetry = Telemetry {
+            first_arrival: feed.first().map(|(_, r)| r.arrival).unwrap_or(0),
+            ..Telemetry::default()
+        };
+        let mut feed: VecDeque<(usize, Request)> = feed.into();
+
+        let mut queue = AdmissionQueue::new(self.qdepth);
+        let mut results: Vec<RequestResult> = Vec::new();
+        let mut batches = 0usize;
+        // The modeled clock continues the fleet's timeline: a second
+        // workload on one server queues behind the first one's work.
+        let mut now = self.fleet.makespan();
+
+        while !feed.is_empty() || !queue.is_empty() {
+            if queue.is_empty() {
+                // Fleet idle, nothing queued: the window opens at the
+                // next arrival.
+                let head = feed.front().map(|(_, r)| r.arrival).expect("feed is non-empty");
+                now = now.max(head);
+            }
+            admit_up_to(&mut feed, &mut queue, now);
+            let oldest = queue.oldest_arrival().expect("admission filled the queue");
+            // The window closes when the batch fills or the oldest
+            // request's linger expires; arrivals inside the window
+            // join (or shed) as they come.
+            let mut dispatch_at = if queue.len() >= policy.max_batch {
+                now
+            } else {
+                policy.close_by(now, oldest)
+            };
+            while queue.len() < policy.max_batch {
+                let due = feed.front().map(|(_, r)| r.arrival).filter(|&a| a <= dispatch_at);
+                let Some(arrival) = due else { break };
+                let (id, req) = feed.pop_front().expect("front was just inspected");
+                queue.offer(id, req, arrival);
+                if queue.len() >= policy.max_batch {
+                    dispatch_at = arrival; // filled early: close here
+                }
+            }
+            now = now.max(dispatch_at);
+
+            let mut batch = draw_batch(&mut queue, &policy, now);
+            if batch.is_empty() {
+                // Every queued deadline had expired (all shed); reopen
+                // the window at the next arrival.
+                continue;
+            }
+
+            // Model the idle gap, then dispatch through the fleet's
+            // placement path (feature routing + wall-clock scores).
+            // Input blocks move into the launch (the batch entry keeps
+            // only what the result record needs); a launch failure
+            // flushes anything already submitted so the coordinator
+            // queue is never left dirty for a later serve() call.
+            self.fleet.advance_timeline_to(now);
+            let mut launch_err: Option<ApiError> = None;
+            for p in &mut batch {
+                let mut launch = match self.fleet.launch_spec_any(p.req.spec) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        launch_err = Some(e);
+                        break;
+                    }
+                };
+                for (base, data) in std::mem::take(&mut p.req.loads) {
+                    launch = launch.input_words(base, data);
+                }
+                for &(base, len) in &p.req.unloads {
+                    launch = launch.output(base, len);
+                }
+                launch.submit();
+            }
+            if let Some(e) = launch_err {
+                let _ = self.fleet.sync();
+                return Err(e);
+            }
+            let reports = self.fleet.sync()?;
+            assert_eq!(reports.len(), batch.len(), "one report per dispatched request");
+            for (p, r) in batch.into_iter().zip(reports) {
+                let res = RequestResult {
+                    id: p.id,
+                    name: r.name,
+                    batch: batches,
+                    core: r.core,
+                    arrival: p.req.arrival,
+                    dispatched: now,
+                    start: r.start,
+                    end: r.end,
+                    deadline: p.req.deadline,
+                    compute_cycles: r.compute_cycles,
+                    bus_cycles: r.bus_cycles,
+                    outputs: r.outputs,
+                };
+                telemetry.observe(&res);
+                results.push(res);
+            }
+            batches += 1;
+            // Serial batches: the next window closes no earlier than
+            // this batch's drain.
+            now = now.max(self.fleet.makespan());
+        }
+
+        telemetry.batches = batches as u64;
+        telemetry.peak_queue = queue.peak();
+        telemetry.shed = queue.shed_count() as u64;
+        Ok(ServeReport {
+            results,
+            shed: queue.into_shed(),
+            telemetry,
+        })
+    }
+}
+
+/// Admit every request that has arrived by `t`, in arrival order,
+/// shedding on overflow at each request's own arrival instant (queue
+/// occupancy only changes at dispatch points, so lazy admission is
+/// equivalent to admitting eagerly as each request arrives).
+fn admit_up_to(feed: &mut VecDeque<(usize, Request)>, queue: &mut AdmissionQueue, t: u64) {
+    while feed.front().is_some_and(|(_, r)| r.arrival <= t) {
+        let (id, req) = feed.pop_front().expect("front was just inspected");
+        let at = req.arrival;
+        queue.offer(id, req, at);
+    }
+}

@@ -1,0 +1,251 @@
+//! Latency telemetry: hand-rolled log₂ histograms and the aggregate
+//! serving record.
+//!
+//! No metrics crate exists in the offline build (same story as
+//! serde/criterion — DESIGN.md §Substitutions), so percentiles come
+//! from a fixed-size power-of-two-bucketed histogram: integer-only
+//! state, `PartialEq`-comparable, and therefore usable in the
+//! bit-for-bit determinism assertions of `rust/tests/serve_runtime.rs`
+//! (parallel and sequential serving must produce *identical*
+//! telemetry, not merely similar distributions).
+
+use super::RequestResult;
+
+/// Power-of-two-bucketed histogram over `u64` samples (bus cycles).
+///
+/// Bucket 0 holds exact zeros; bucket `i ≥ 1` holds `[2^(i-1), 2^i)`.
+/// Quantiles resolve to the containing bucket's upper bound, clamped
+/// to the observed extrema — a deterministic estimate with ≤ 2×
+/// relative error, which is plenty for p50/p95/p99 reporting and is
+/// exactly reproducible across runs and dispatch modes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Histogram {
+    buckets: [u64; 65],
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: [0; 65],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// Bucket index: 0 for 0, else `1 + floor(log₂ v)`.
+    fn bucket(v: u64) -> usize {
+        (64 - v.leading_zeros()) as usize
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Smallest recorded sample; 0 when empty.
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest recorded sample; 0 when empty.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Exact mean of the recorded samples; 0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile estimate for `p ∈ [0, 1]`: the upper bound of the
+    /// bucket holding the `ceil(p·count)`-th smallest sample, clamped
+    /// to `[min, max]`. Deterministic; 0 when empty.
+    pub fn quantile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let hi = if i >= 64 { u64::MAX } else { (1u64 << i).saturating_sub(1) };
+                return hi.clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
+/// Aggregate serving telemetry for one [`super::Server::serve`] call.
+/// Integer-only (histograms + counters), so two runs can be compared
+/// with `==` — the determinism contract of the serving tests.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Telemetry {
+    /// Requests served to completion.
+    pub completed: u64,
+    /// Requests shed (queue overflow + expired deadlines).
+    pub shed: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Served requests that finished after their deadline.
+    pub deadline_missed: u64,
+    /// High-water mark of the admission queue (≤ its capacity).
+    pub peak_queue: usize,
+    /// Earliest offered arrival (bus cycles).
+    pub first_arrival: u64,
+    /// Latest completion (bus cycles).
+    pub last_end: u64,
+    /// Cycles queued before the fleet touched each request.
+    pub queue_wait: Histogram,
+    /// Bus-acquisition → unload-complete cycles per request.
+    pub service: Histogram,
+    /// Arrival → unload-complete cycles per request.
+    pub e2e: Histogram,
+}
+
+impl Telemetry {
+    pub(crate) fn observe(&mut self, r: &RequestResult) {
+        self.completed += 1;
+        if !r.deadline_met() {
+            self.deadline_missed += 1;
+        }
+        self.queue_wait.record(r.queue_wait());
+        self.service.record(r.service());
+        self.e2e.record(r.e2e());
+        self.last_end = self.last_end.max(r.end);
+    }
+
+    /// Modeled span from first arrival to last completion, in bus
+    /// cycles; 0 before anything completed.
+    pub fn span_cycles(&self) -> u64 {
+        self.last_end.saturating_sub(self.first_arrival)
+    }
+
+    /// Completed requests per modeled second at the given bus clock.
+    pub fn jobs_per_s(&self, bus_mhz: f64) -> f64 {
+        let span = self.span_cycles();
+        if span == 0 {
+            return 0.0;
+        }
+        self.completed as f64 * bus_mhz * 1e6 / span as f64
+    }
+
+    /// Fraction of offered requests shed; 0 on an empty workload.
+    pub fn shed_rate(&self) -> f64 {
+        let offered = self.completed + self.shed;
+        if offered == 0 {
+            0.0
+        } else {
+            self.shed as f64 / offered as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = Histogram::new();
+        assert_eq!((h.count(), h.min(), h.max()), (0, 0, 0));
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!((h.p50(), h.p95(), h.p99()), (0, 0, 0));
+    }
+
+    #[test]
+    fn buckets_are_log2_ranges() {
+        assert_eq!(Histogram::bucket(0), 0);
+        assert_eq!(Histogram::bucket(1), 1);
+        assert_eq!(Histogram::bucket(2), 2);
+        assert_eq!(Histogram::bucket(3), 2);
+        assert_eq!(Histogram::bucket(4), 3);
+        assert_eq!(Histogram::bucket(u64::MAX), 64);
+    }
+
+    #[test]
+    fn quantiles_clamp_to_observed_extrema() {
+        let mut h = Histogram::new();
+        for v in [100u64, 100, 100, 100] {
+            h.record(v);
+        }
+        // All samples share bucket [64, 127]; the estimate clamps to
+        // the exact observed value.
+        assert_eq!(h.p50(), 100);
+        assert_eq!(h.p99(), 100);
+        assert_eq!(h.min(), 100);
+        assert_eq!(h.max(), 100);
+        assert_eq!(h.mean(), 100.0);
+    }
+
+    #[test]
+    fn quantiles_order_across_buckets() {
+        let mut h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let (p50, p95, p99) = (h.p50(), h.p95(), h.p99());
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // p50 of 1..=1000 lands in the bucket holding rank 500
+        // ([512, 1023] upper bound, clamped to max 1000).
+        assert!((500..=1000).contains(&p50), "{p50}");
+        assert_eq!(h.count(), 1000);
+    }
+
+    #[test]
+    fn zero_samples_live_in_bucket_zero() {
+        let mut h = Histogram::new();
+        h.record(0);
+        h.record(0);
+        assert_eq!(h.p50(), 0);
+        assert_eq!(h.max(), 0);
+    }
+
+    #[test]
+    fn jobs_per_s_guards_the_empty_span() {
+        let t = Telemetry::default();
+        assert_eq!(t.jobs_per_s(771.0), 0.0);
+        assert_eq!(t.shed_rate(), 0.0);
+        assert_eq!(t.span_cycles(), 0);
+    }
+}

@@ -449,6 +449,65 @@ mod tests {
     }
 
     #[test]
+    fn random_valid_configs_round_trip_bit_identically() {
+        // Hand-rolled property test (proptest is unavailable offline):
+        // any valid configuration — including u8 fields at their
+        // boundary values (shift_precision 1, the 16/32 precision
+        // edges) and threads at the wavefront-multiple extremes — must
+        // survive encode→decode with every field bit-identical.
+        use crate::harness::Rng;
+        let mut rng = Rng::new(0xC0DEC);
+        for case in 0..500 {
+            let name = format!("prop-{case}-{}", rng.next_u32());
+            let threads = 16 * rng.range_i64(1, 64) as usize;
+            let regs_per_thread = *rng.choose(&[16usize, 32, 64]);
+            let shared_kb = *rng.choose(&[2usize, 4, 32, 128, 512]);
+            let memory = *rng.choose(&[MemoryMode::Dp, MemoryMode::Qp]);
+            let alu_precision = *rng.choose(&[16u8, 32]);
+            let mut shift_precision = *rng.choose(&[1u8, 16, 32]);
+            if shift_precision > alu_precision {
+                shift_precision = alu_precision;
+            }
+            let int_alu = *rng.choose(&[IntAluClass::Min, IntAluClass::Small, IntAluClass::Full]);
+            let predicate_levels = rng.below(33);
+            let dot_core = rng.chance(0.5);
+            let sfu = rng.chance(0.5);
+            let cfg = EgpuConfig {
+                name,
+                threads,
+                regs_per_thread,
+                shared_kb,
+                memory,
+                alu_precision,
+                shift_precision,
+                int_alu,
+                predicate_levels,
+                dot_core,
+                sfu,
+            };
+            cfg.validate().unwrap_or_else(|e| panic!("case {case} generated invalid: {e}"));
+            let json = config_to_json(&cfg);
+            let back = config_from_json(&json).unwrap_or_else(|e| panic!("case {case}: {e}"));
+            assert_eq!(cfg, back, "case {case}: {json}");
+        }
+    }
+
+    #[test]
+    fn every_fleet_demo_config_round_trips() {
+        // The configs the fleet demo can actually put on cores — the
+        // demo_mixed pair plus every Table 4/5 preset the CLI accepts —
+        // must ship through JSON unchanged (fleet files are the
+        // deployment artifact).
+        let mut cfgs: Vec<EgpuConfig> = crate::api::FleetBuilder::demo_mixed()
+            .as_configs()
+            .to_vec();
+        cfgs.extend(EgpuConfig::table4_presets());
+        cfgs.extend(EgpuConfig::table5_presets());
+        let back = configs_from_json(&fleet_to_json(&cfgs)).unwrap();
+        assert_eq!(cfgs, back);
+    }
+
+    #[test]
     fn string_escapes_round_trip() {
         let mut cfg = EgpuConfig::default();
         cfg.name = "q\"p\\\n".into();

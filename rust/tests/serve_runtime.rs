@@ -1,0 +1,319 @@
+//! Integration tests for the serving runtime (`egpu::serve`).
+//!
+//! The acceptance contract of the serving layer:
+//! (a) with a fixed seed, sequential and parallel serving produce
+//!     bit-identical results and identical modeled-latency telemetry;
+//! (b) a saturating arrival rate sheds requests instead of growing the
+//!     queue without bound, and every shed request is reported;
+//! (c) deadline/priority ordering is honored within a batch window;
+//! (d) steady-state serving performs exactly one compile per
+//!     `(spec, config fingerprint)` through the shared `KernelCache`.
+
+use egpu::api::{Gpu, KernelSpec, Server, ShedReason};
+use egpu::harness::loadgen::{demo_requests, LoadSpec};
+use egpu::kernels::f32_bits;
+use egpu::serve::Request;
+
+/// The reference serving workload for these tests: enough traffic to
+/// form several batches on the demo fleet, with deadlines on half the
+/// requests.
+fn trace(seed: u64, requests: usize) -> Vec<Request> {
+    demo_requests(&LoadSpec {
+        seed,
+        requests,
+        mean_gap: 1_500,
+        dim: 64,
+        deadline_slack: Some(80_000),
+    })
+}
+
+// ---------------------------------------------------------------
+// (a) Determinism: sequential and parallel serving are bit-identical.
+// ---------------------------------------------------------------
+
+#[test]
+fn sequential_and_parallel_serving_are_bit_identical() {
+    let run = |sequential: bool| {
+        let mut server = Server::builder().sequential(sequential).build().unwrap();
+        let report = server.serve(trace(0xD15C0, 30)).unwrap();
+        let util = server.core_utilization();
+        (report, util)
+    };
+    let (seq, seq_util) = run(true);
+    let (par, par_util) = run(false);
+    // Results (outputs, cores, every timeline number), shed records
+    // and the full telemetry (histograms included) must be equal —
+    // ServeReport is integer-only, so this is bit-for-bit.
+    assert_eq!(seq, par);
+    assert_eq!(seq_util, par_util);
+    // And the workload actually exercised the fleet.
+    assert!(seq.telemetry.completed > 0);
+    assert!(seq.telemetry.batches > 1, "want several batch windows");
+    assert!(seq.results.iter().any(|r| !r.outputs.is_empty()));
+}
+
+#[test]
+fn serving_is_reproducible_across_runs() {
+    let run = || {
+        let mut server = Server::builder().build().unwrap();
+        server.serve(trace(0xABCD, 25)).unwrap()
+    };
+    assert_eq!(run(), run());
+}
+
+// ---------------------------------------------------------------
+// (b) Saturation: bounded queue, load-shedding, full accounting.
+// ---------------------------------------------------------------
+
+#[test]
+fn saturating_arrivals_shed_instead_of_growing_the_queue() {
+    let offered = 200usize;
+    let qdepth = 16usize;
+    let mut server = Server::builder().qdepth(qdepth).max_batch(8).build().unwrap();
+    // Everything arrives at cycle 0: far beyond the queue bound.
+    let reqs = demo_requests(&LoadSpec {
+        seed: 0xF00D,
+        requests: offered,
+        mean_gap: 0,
+        dim: 64,
+        deadline_slack: None,
+    });
+    let report = server.serve(reqs).unwrap();
+    // Accounting identity: every offered request is served or shed.
+    assert_eq!(report.submitted(), offered);
+    assert_eq!(
+        report.results.len() + report.shed.len(),
+        offered,
+        "no request may vanish"
+    );
+    // The queue never grew past its bound...
+    assert!(
+        report.telemetry.peak_queue <= qdepth,
+        "peak {} exceeds bound {qdepth}",
+        report.telemetry.peak_queue
+    );
+    // ...which forces real shedding at this load, each shed reported
+    // with a reason and a shed time.
+    assert!(!report.shed.is_empty());
+    assert!(report.shed.iter().all(|s| s.reason == ShedReason::QueueFull));
+    let served: Vec<usize> = report.results.iter().map(|r| r.id).collect();
+    for s in &report.shed {
+        assert!(!served.contains(&s.id), "request {} both served and shed", s.id);
+    }
+    assert_eq!(report.telemetry.shed, report.shed.len() as u64);
+}
+
+// ---------------------------------------------------------------
+// (c) Deadline/priority ordering within the batch window.
+// ---------------------------------------------------------------
+
+#[test]
+fn deadline_priority_order_is_honored_within_batch_windows() {
+    let mut server = Server::builder().qdepth(64).max_batch(4).build().unwrap();
+    // 12 requests all arrive at cycle 0 with shuffled deadlines,
+    // priorities breaking ties among the deadline-free tail.
+    let n = 64usize;
+    let data: Vec<u32> = f32_bits(&(0..n).map(|i| i as f32 * 0.5).collect::<Vec<_>>());
+    let deadlines = [
+        Some(900_000u64),
+        None,
+        Some(300_000),
+        Some(1_200_000),
+        None,
+        Some(600_000),
+        Some(150_000),
+        None,
+        Some(450_000),
+        Some(750_000),
+        None,
+        Some(1_050_000),
+    ];
+    let priorities = [0u8, 3, 0, 0, 1, 0, 0, 0, 0, 0, 2, 0];
+    let reqs: Vec<Request> = deadlines
+        .iter()
+        .zip(priorities)
+        .map(|(&d, p)| {
+            let mut r = Request::new(KernelSpec::Reduction { n })
+                .load(0, data.clone())
+                .unload(n, 1)
+                .priority(p);
+            if let Some(d) = d {
+                r = r.due_by(d);
+            }
+            r
+        })
+        .collect();
+    let report = server.serve(reqs).unwrap();
+    assert_eq!(report.results.len(), 12, "nothing sheds at these deadlines");
+    // Dispatch order (across the three 4-request windows drawn from
+    // one time-0 backlog) must follow the total order: oldest deadline
+    // first, no-deadline last, priority breaking ties.
+    let keys: Vec<(u64, u8, usize)> = report
+        .results
+        .iter()
+        .map(|r| (r.deadline.unwrap_or(u64::MAX), u8::MAX - priorities[r.id], r.id))
+        .collect();
+    let mut sorted = keys.clone();
+    sorted.sort();
+    assert_eq!(keys, sorted, "dispatch order violates the deadline/priority key");
+    // Batch indices are non-decreasing along dispatch order and
+    // bounded by the batch size.
+    assert!(report.results.windows(2).all(|w| w[0].batch <= w[1].batch));
+    assert_eq!(report.telemetry.batches, 3);
+    // The most urgent deadline landed in the first batch.
+    let first = report.results.iter().find(|r| r.deadline == Some(150_000)).unwrap();
+    assert_eq!(first.batch, 0);
+}
+
+#[test]
+fn expired_deadlines_are_shed_and_reported() {
+    // A deadline that expires before the fleet can even start the
+    // request (the window must linger for the later arrivals first)
+    // sheds with DeadlineExpired instead of wasting fleet time.
+    let mut server = Server::builder().qdepth(8).max_batch(2).build().unwrap();
+    let n = 64usize;
+    let data: Vec<u32> = f32_bits(&(0..n).map(|i| i as f32).collect::<Vec<_>>());
+    let mk = |arrival: u64| {
+        Request::new(KernelSpec::Reduction { n })
+            .load(0, data.clone())
+            .unload(n, 1)
+            .at(arrival)
+    };
+    let reqs = vec![
+        mk(0),
+        mk(0),
+        mk(0),
+        mk(0),
+        // Arrives while the fleet drains the backlog; its deadline has
+        // passed by the time a batch window could take it.
+        mk(2_000).due_by(2_001),
+    ];
+    let report = server.serve(reqs).unwrap();
+    assert_eq!(report.results.len(), 4);
+    assert_eq!(report.shed.len(), 1);
+    assert_eq!(report.shed[0].id, 4);
+    assert_eq!(report.shed[0].reason, ShedReason::DeadlineExpired);
+    assert!(report.shed[0].at >= 2_001);
+}
+
+// ---------------------------------------------------------------
+// (d) Steady state: one compile per (spec, config fingerprint).
+// ---------------------------------------------------------------
+
+#[test]
+fn steady_state_compiles_once_per_spec_and_fingerprint() {
+    let mut server = Server::builder().build().unwrap();
+    let first = server.serve(trace(0x11, 40)).unwrap();
+    assert!(first.telemetry.completed > 0);
+    let warm = server.cache_stats();
+    assert!(warm.compiles > 0);
+    // Every compile produced a distinct (spec, fingerprint) entry —
+    // nothing was ever compiled twice.
+    assert_eq!(warm.compiles, warm.entries as u64);
+    // The demo fleet has two fingerprints (DP and QP at 32 regs) and
+    // the trace five specs: the compile count is bounded by the grid.
+    assert!(warm.compiles <= 10, "compiles {} exceed the spec grid", warm.compiles);
+
+    // A second round of the same workload on a fresh measurement
+    // window: identical initial state + identical trace = identical
+    // placements, so it is served entirely from the cache — zero new
+    // compiles, only hits.
+    server.reset_timeline();
+    let second = server.serve(trace(0x11, 40)).unwrap();
+    assert!(second.telemetry.completed > 0);
+    assert_eq!(second, first, "a warm replay is bit-identical to the cold round");
+    let steady = server.cache_stats();
+    assert_eq!(
+        steady.compiles, warm.compiles,
+        "steady-state serving must not recompile"
+    );
+    assert_eq!(steady.entries, warm.entries);
+    assert!(steady.hits > warm.hits, "repeat launches must hit the cache");
+}
+
+#[test]
+fn cache_stats_surface_on_gpu_and_array() {
+    // Satellite: the compile-once property is assertable through the
+    // api handles themselves, not just the fleet CLI.
+    let mut gpu = Gpu::builder().build().unwrap();
+    let spec = KernelSpec::Reduction { n: 64 };
+    let data: Vec<f32> = (0..64).map(|i| i as f32).collect();
+    for _ in 0..3 {
+        let buf = gpu.alloc_at::<f32>(0, 64).unwrap();
+        gpu.upload(&buf, &data).unwrap();
+        gpu.launch_spec(&spec).unwrap().run().unwrap();
+    }
+    let s = gpu.cache_stats();
+    assert_eq!(s.compiles, 1, "one compile for three launches");
+    assert_eq!(s.hits, 2);
+    assert_eq!(s.entries, 1);
+
+    let mut array = Gpu::builder().build_array(2).unwrap();
+    for _ in 0..2 {
+        let stream = array.stream();
+        array
+            .launch_spec(&stream, spec)
+            .unwrap()
+            .input_words(0, f32_bits(&data))
+            .output(64, 1)
+            .submit();
+    }
+    array.sync().unwrap();
+    let s = array.cache_stats();
+    assert_eq!(s.compiles, 1, "homogeneous array: one fingerprint, one compile");
+    assert!(s.hits >= 1);
+}
+
+// ---------------------------------------------------------------
+// Serving semantics details.
+// ---------------------------------------------------------------
+
+#[test]
+fn latency_decomposition_is_consistent() {
+    let mut server = Server::builder().build().unwrap();
+    let report = server.serve(trace(0x77, 20)).unwrap();
+    for r in &report.results {
+        assert!(r.start >= r.arrival, "{}: started before arrival", r.id);
+        assert!(r.start >= r.dispatched, "{}: started before dispatch", r.id);
+        assert!(r.end > r.start, "{}: zero-length service", r.id);
+        assert_eq!(r.queue_wait() + r.service(), r.e2e(), "{}", r.id);
+    }
+    let t = &report.telemetry;
+    assert_eq!(t.completed, report.results.len() as u64);
+    assert_eq!(t.e2e.count(), t.completed);
+    assert!(t.e2e.p50() <= t.e2e.p99());
+    assert!(t.jobs_per_s(server.bus_mhz()) > 0.0);
+    // Utilization is finite and the idle gaps keep it below 1.
+    for u in server.core_utilization() {
+        assert!((0.0..=1.0).contains(&u), "{u}");
+    }
+}
+
+#[test]
+fn serve_results_are_correct_not_just_timed() {
+    // Reductions through the serving path produce the same sums a
+    // direct launch would: serving reorders and batches, it must not
+    // corrupt data.
+    let mut server = Server::builder().build().unwrap();
+    let n = 64usize;
+    let reqs: Vec<Request> = (0..6)
+        .map(|i| {
+            let data: Vec<f32> = (0..n).map(|j| (i * n + j) as f32 * 0.25).collect();
+            Request::new(KernelSpec::Reduction { n })
+                .load(0, f32_bits(&data))
+                .unload(n, 1)
+                .at(i as u64 * 500)
+        })
+        .collect();
+    let report = server.serve(reqs).unwrap();
+    assert_eq!(report.results.len(), 6);
+    for r in &report.results {
+        let i = r.id;
+        let want: f32 = (0..n).map(|j| (i * n + j) as f32 * 0.25).sum();
+        let got = f32::from_bits(r.outputs[0][0]);
+        assert!(
+            (got - want).abs() < want.abs() * 1e-3 + 1e-2,
+            "request {i}: {got} vs {want}"
+        );
+    }
+}
