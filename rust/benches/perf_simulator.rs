@@ -14,8 +14,8 @@
 //! `EGPU_BENCH_SAMPLES` overrides the per-case sample count (CI smoke
 //! runs use 1).
 
-use egpu::api::{FleetBuilder, Gpu, KernelCache, Server};
-use egpu::harness::loadgen::{demo_requests, LoadSpec};
+use egpu::api::{synthesize, AreaBudget, FleetBuilder, Gpu, KernelCache, Server, SynthOptions};
+use egpu::harness::loadgen::{demo_requests, heavy_tail_requests, BurstSpec, LoadSpec};
 use egpu::harness::{demo_job_io, demo_specs, sim_rate, time, Rng, Table, Timing};
 use egpu::kc::SchedMode;
 use egpu::kernels::{bitonic, f32_bits, fft, fft4, mmm, reduction, transpose, Kernel};
@@ -367,6 +367,80 @@ fn main() {
         )
     };
 
+    // Fleet synthesis: the full model → place → serve loop under the
+    // demo area budget, scored on the seeded heavy-tail trace. The
+    // whole section is modeled-cycle deterministic (same budget, trace
+    // and options → bit-identical fleet), so it doubles as a perf
+    // trajectory for the search itself via `fleets_scored`.
+    let synthesis_json = {
+        let budget = AreaBudget::demo();
+        let trace = heavy_tail_requests(&BurstSpec::demo(24));
+        let opts = SynthOptions::default();
+        let result = synthesize(&budget, &trace, &opts)
+            .expect("synthesis under the demo budget must find a fleet");
+        assert!(
+            result.score.slo_met > 0,
+            "the synthesized fleet must meet at least one SLO"
+        );
+        for b in &result.baselines {
+            assert!(
+                result.score.slo_met >= b.slo_met,
+                "synthesized fleet ({}) must dominate baseline {} ({})",
+                result.score.slo_met,
+                b.name,
+                b.slo_met
+            );
+        }
+        let fleet_names: Vec<String> =
+            result.fleet.iter().map(|c| json_str(&c.name)).collect();
+        let baseline_rows: Vec<String> = result
+            .baselines
+            .iter()
+            .map(|b| {
+                format!(
+                    "      {{\"name\": {}, \"cores\": {}, \"slo_met\": {}, \"cost\": {}}}",
+                    json_str(&b.name),
+                    b.cores,
+                    b.slo_met,
+                    b.cost,
+                )
+            })
+            .collect();
+        println!(
+            "synthesis (budget {budget}, {} offered): {}-core fleet, {} SLO-met, \
+             cost {} ALM-eq, {} fleets scored",
+            result.offered,
+            result.fleet.len(),
+            result.score.slo_met,
+            result.score.cost,
+            result.evaluated
+        );
+        format!(
+            "  \"synthesis\": {{\"alms_budget\": {}, \"dsps_budget\": {}, \
+             \"m20ks_budget\": {}, \"offered\": {}, \"cores\": {}, \
+             \"slo_met\": {}, \"completed\": {}, \"shed\": {}, \
+             \"deadline_missed\": {}, \"cost_alm_eq\": {}, \
+             \"alms_used\": {}, \"dsps_used\": {}, \"m20ks_used\": {}, \
+             \"fleets_scored\": {}, \"fleet\": [{}], \"baselines\": [\n{}\n    ]}},\n",
+            budget.alms,
+            budget.dsps,
+            budget.m20ks,
+            result.offered,
+            result.fleet.len(),
+            result.score.slo_met,
+            result.completed,
+            result.shed,
+            result.deadline_missed,
+            result.score.cost,
+            result.usage.alms,
+            result.usage.dsps,
+            result.usage.m20ks,
+            result.evaluated,
+            fleet_names.join(", "),
+            baseline_rows.join(",\n"),
+        )
+    };
+
     // Multi-core scaling: the same 4-job batch through sequential and
     // parallel dispatch — identical modeled timelines, different
     // wall-clock.
@@ -388,7 +462,7 @@ fn main() {
 
     let json = format!(
         "{{\n  \"samples\": {samples},\n  \"kernels\": [\n{}\n  ],\n  \
-         \"static_schedule\": [\n{}\n  ],\n{fleet_json}{serving_json}  \
+         \"static_schedule\": [\n{}\n  ],\n{fleet_json}{serving_json}{synthesis_json}  \
          \"aggregate_mcyc_per_s_unchecked\": {aggregate:.2},\n  \
          \"multi_core\": {{\"cores\": 4, \"jobs\": 4, \"kernel\": \"fft-256\", \
          \"makespan_cycles\": {seq_span}, \"sequential_ms\": {:.4}, \

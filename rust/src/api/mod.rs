@@ -71,6 +71,10 @@
 //! a stream of [`Request`]s through a bounded admission queue with
 //! load-shedding, deadline/priority-aware batching, and latency
 //! telemetry over a heterogeneous fleet built with [`Gpu::fleet`].
+//! [`synthesize`] (re-exported from [`crate::synth`]) closes the loop
+//! the other way: given an [`AreaBudget`] and a traffic trace, it
+//! searches the static-configuration space for the fleet that serves
+//! the most requests within their SLOs.
 
 mod buffer;
 mod gpu;
@@ -87,6 +91,9 @@ pub use crate::serve::{
     ShedReason, ShedRecord, Telemetry,
 };
 pub use crate::sim::config::FeatureSet;
+pub use crate::synth::{
+    synthesize, AreaBudget, AreaUsage, BaselineScore, FleetScore, SynthOptions, SynthResult,
+};
 
 /// Unweighted mean of per-launch bus overheads (the [`LaunchReport`]
 /// counterpart of

@@ -93,6 +93,99 @@ pub fn demo_requests(spec: &LoadSpec) -> Vec<Request> {
     out
 }
 
+/// Knobs for a seeded heavy-tail trace: bursty arrivals (runs of
+/// near-simultaneous requests separated by occasionally very long
+/// lulls) over mixed kernel dimensions. This is the traffic shape that
+/// actually differentiates fleet compositions — steady single-dim
+/// arrivals reward whatever core is fastest, while bursts of mixed
+/// sizes reward fleets with enough parallel capacity *and* the right
+/// feature coverage. Used by `egpu synth`, the synthesis bench section
+/// and the synthesis tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BurstSpec {
+    /// PRNG seed (burst lengths, lulls, dims, data, deadlines).
+    pub seed: u64,
+    /// Number of requests to generate.
+    pub requests: usize,
+    /// Mean inter-burst gap in bus cycles; lulls stretch it with a
+    /// heavy-tail multiplier (see [`heavy_tail_requests`]).
+    pub mean_gap: u64,
+    /// Largest burst size (each burst is 1..=max_burst requests).
+    pub max_burst: usize,
+    /// Deadline slack, as in [`LoadSpec::deadline_slack`].
+    pub deadline_slack: Option<u64>,
+}
+
+impl BurstSpec {
+    /// The reference heavy-tail trace for fleet synthesis: bursts of
+    /// up to 5 requests over dims {32, 64, 128}, lulls long enough
+    /// that batching decisions matter, deadlines loose enough that a
+    /// well-shaped fleet can meet most of them.
+    pub fn demo(requests: usize) -> BurstSpec {
+        BurstSpec {
+            seed: 0xB0257,
+            requests,
+            mean_gap: 24_000,
+            max_burst: 5,
+            deadline_slack: Some(120_000),
+        }
+    }
+}
+
+/// Generate a heavy-tail trace: requests arrive in bursts (members a
+/// few hundred cycles apart), bursts are separated by either a short
+/// uniform gap or — with probability 0.2 — a lull of 2–7× the mean
+/// gap. Kernel dims are drawn from a mix weighted toward small
+/// (32, 32, 32, 64, 64, 128) and the kernel itself uniformly from the
+/// demo mix at that dim, so shared-memory demand and feature needs
+/// both vary request to request. Deterministic from the seed; arrivals
+/// are non-decreasing.
+pub fn heavy_tail_requests(spec: &BurstSpec) -> Vec<Request> {
+    const DIMS: [usize; 6] = [32, 32, 32, 64, 64, 128];
+    let mut rng = Rng::new(spec.seed);
+    let max_burst = spec.max_burst.max(1);
+    let mut at = 0u64;
+    let mut burst_left = 0usize;
+    let mut out = Vec::with_capacity(spec.requests);
+    for i in 0..spec.requests {
+        if burst_left == 0 {
+            burst_left = 1 + rng.below(max_burst);
+            if i > 0 {
+                at = at.saturating_add(if rng.chance(0.2) {
+                    // Heavy tail: a lull of 2–7 mean gaps.
+                    spec.mean_gap.saturating_mul(2 + rng.below(6) as u64)
+                } else {
+                    rng.below(spec.mean_gap.saturating_add(1) as usize) as u64
+                });
+            }
+        } else if i > 0 {
+            // Within a burst: near-simultaneous arrivals.
+            at = at.saturating_add(rng.below(256) as u64);
+        }
+        burst_left -= 1;
+        let dim = *rng.choose(&DIMS);
+        let specs = demo_specs(dim);
+        let kspec = specs[rng.below(specs.len())];
+        let (loads, unloads) = demo_job_io(&kspec, &mut rng);
+        let mut req = Request::new(kspec).at(at);
+        for (base, data) in loads {
+            req = req.load(base, data);
+        }
+        for (base, len) in unloads {
+            req = req.unload(base, len);
+        }
+        req = req.priority(rng.below(4) as u8);
+        if let Some(slack) = spec.deadline_slack {
+            if rng.chance(0.5) {
+                let jitter = rng.below(slack.saturating_add(1) as usize) as u64;
+                req = req.due_by(at.saturating_add(slack).saturating_add(jitter));
+            }
+        }
+        out.push(req);
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +225,44 @@ mod tests {
             ..LoadSpec::demo(10)
         });
         assert!(trace.iter().all(|r| r.arrival == 0 && r.deadline.is_none()));
+    }
+
+    #[test]
+    fn heavy_tail_traces_are_reproducible_and_sorted() {
+        let spec = BurstSpec::demo(40);
+        let a = heavy_tail_requests(&spec);
+        let b = heavy_tail_requests(&spec);
+        assert_eq!(a, b, "same seed must yield a bit-identical trace");
+        assert_eq!(a.len(), 40);
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        let c = heavy_tail_requests(&BurstSpec { seed: 7, ..spec });
+        assert_ne!(a, c, "a different seed must perturb the trace");
+    }
+
+    #[test]
+    fn heavy_tail_traces_mix_dims_and_actually_burst() {
+        let trace = heavy_tail_requests(&BurstSpec::demo(60));
+        // Mixed kernel dimensions: more than one dim must appear.
+        let mut dims: Vec<usize> = trace.iter().map(|r| r.spec.dim()).collect();
+        dims.sort_unstable();
+        dims.dedup();
+        assert!(dims.len() > 1, "heavy-tail trace must mix dims, got {dims:?}");
+        // Bursty arrivals: some consecutive gaps are tiny (within a
+        // burst) and some are huge (a lull) — both tails must show up.
+        let gaps: Vec<u64> = trace.windows(2).map(|w| w[1].arrival - w[0].arrival).collect();
+        assert!(gaps.iter().any(|&g| g < 256), "no intra-burst gaps seen");
+        assert!(
+            gaps.iter().any(|&g| g >= 24_000),
+            "no heavy-tail lulls seen (max gap {:?})",
+            gaps.iter().max()
+        );
+        // Requests stay fully formed (I/O attached, deadline after
+        // arrival when present).
+        for r in &trace {
+            assert!(!r.loads.is_empty() && !r.unloads.is_empty());
+            if let Some(d) = r.deadline {
+                assert!(d > r.arrival);
+            }
+        }
     }
 }

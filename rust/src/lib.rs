@@ -31,6 +31,9 @@
 //! - [`serve`] — the continuous serving runtime over the fleet:
 //!   bounded admission with load-shedding, deadline/priority batching,
 //!   and latency telemetry (`api::Server`)
+//! - [`synth`] — workload-driven fleet synthesis: beam search over the
+//!   static-configuration space under an Agilex area budget, scored by
+//!   trace replay through [`serve`] (`egpu synth`)
 //! - [`harness`] — bench/table/property-test scaffolding used by the
 //!   `rust/benches/` binaries (criterion is unavailable offline)
 //!
@@ -51,3 +54,4 @@ pub mod place;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod synth;

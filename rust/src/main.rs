@@ -9,14 +9,18 @@
 //! - `egpu run FILE.asm`      assemble + run a user program
 //! - `egpu fleet`             batch mixed kernels over a heterogeneous fleet
 //! - `egpu serve`             continuous serving with admission control
+//! - `egpu synth`             synthesize a fleet under an Agilex area budget
 //! - `egpu sched KERNEL`      kernel-compiler schedule listing + stats
 //! - `egpu info`              configuration presets and artifact status
 
 use std::process::ExitCode;
 
-use egpu::api::{ApiError, Backend, FleetBuilder, Gpu, KernelSpec, Server, DEFAULT_CYCLE_BUDGET};
+use egpu::api::{
+    synthesize, ApiError, AreaBudget, Backend, FleetBuilder, Gpu, KernelSpec, Server,
+    SynthOptions, DEFAULT_CYCLE_BUDGET,
+};
 use egpu::asm::assemble;
-use egpu::harness::loadgen::{demo_requests, LoadSpec};
+use egpu::harness::loadgen::{demo_requests, heavy_tail_requests, BurstSpec, LoadSpec};
 use egpu::harness::{demo_job_io, demo_specs, suite, Rng, Table, Variant};
 use egpu::isa::Group;
 use egpu::kernels::Kernel;
@@ -41,6 +45,7 @@ fn main() -> ExitCode {
         "run" => cmd_run(rest),
         "fleet" => cmd_fleet(rest),
         "serve" => cmd_serve(rest),
+        "synth" => cmd_synth(rest),
         "sched" => cmd_sched(rest),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -94,6 +99,17 @@ COMMANDS:
                     gives half the requests deadlines with that slack,
                     --gap sets the mean inter-arrival gap in bus cycles,
                     --seq uses sequential dispatch (bit-identical)
+  synth [--alms N] [--dsps N] [--m20ks N] [--requests N] [--seed N]
+        [--beam N] [--out FILE.json]
+                    synthesize the best-serving fleet under an Agilex
+                    area budget: enumerate the static configuration
+                    space, keep what fits and places, then beam-search
+                    fleet compositions scored by replaying a seeded
+                    heavy-tail trace (SLO-met requests, then modeled
+                    cost); prints rejected candidates with the placer's
+                    reasons and the score against the homogeneous demo
+                    baselines; --out writes the winning fleet as JSON
+                    consumable by serve/fleet --configs
   sched KERNEL [DIM]
                     print a kernel's list-scheduled listing and the
                     static schedule stats (fenced / padded / scheduled)
@@ -361,7 +377,14 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let cfg = match &config_path {
         Some(path) => {
             let json = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
-            config_json::config_from_json(&json).map_err(|e| format!("{path}: {e}"))?
+            let cfg =
+                config_json::config_from_json(&json).map_err(|e| format!("{path}: {e}"))?;
+            // A config that validates but cannot be placed into an
+            // Agilex sector is unusable hardware: refuse it with the
+            // placer's reason instead of simulating a fiction.
+            place::place(&cfg)
+                .map_err(|e| format!("{path}: {} is not placeable — {e}", cfg.name))?;
+            cfg
         }
         None => {
             let mut cfg = EgpuConfig::benchmark(memory, true);
@@ -698,6 +721,95 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         server.cycles_to_us(t.span_cycles()),
         t.jobs_per_s(mhz)
     );
+    Ok(())
+}
+
+/// `egpu synth`: synthesize the best-serving fleet under an Agilex
+/// area budget, scored by replaying a seeded heavy-tail trace through
+/// the serving runtime in modeled bus cycles. Deterministic: the same
+/// flags always print the same fleet.
+fn cmd_synth(args: &[String]) -> Result<(), String> {
+    let mut budget = AreaBudget::demo();
+    let mut requests = 24usize;
+    let mut seed: Option<u64> = None;
+    let mut beam = 2usize;
+    let mut out: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--alms" => budget.alms = flags::positive_u64(args, &mut i, "--alms")?,
+            "--dsps" => budget.dsps = flags::positive_u64(args, &mut i, "--dsps")?,
+            "--m20ks" => budget.m20ks = flags::positive_u64(args, &mut i, "--m20ks")?,
+            "--requests" => requests = flags::positive_usize(args, &mut i, "--requests")?,
+            "--seed" => seed = Some(flags::num(args, &mut i, "--seed")?),
+            "--beam" => beam = flags::positive_usize(args, &mut i, "--beam")?,
+            "--out" => out = Some(flags::value(args, &mut i, "--out")?.to_string()),
+            other => return Err(format!("unknown flag '{other}'")),
+        }
+        i += 1;
+    }
+
+    let mut burst = BurstSpec::demo(requests);
+    if let Some(s) = seed {
+        burst.seed = s;
+    }
+    let trace = heavy_tail_requests(&burst);
+    let opts = SynthOptions { beam, ..SynthOptions::default() };
+    let result = synthesize(&budget, &trace, &opts)?;
+
+    if !result.rejected.is_empty() {
+        println!("rejected candidates ({}):", result.rejected.len());
+        for r in &result.rejected {
+            println!("  {} — {}", r.name, r.reason);
+        }
+        println!();
+    }
+
+    let mut tf = Table::new(format!(
+        "Synthesized fleet — {} of {} requests SLO-met, cost {} ALM-eq \
+         ({} fleets scored)",
+        result.score.slo_met, result.offered, result.score.cost, result.evaluated
+    ));
+    tf.headers(["core", "config", "MHz", "ALMs", "DSPs", "M20Ks"]);
+    for (c, cfg) in result.fleet.iter().enumerate() {
+        let r = ResourceReport::for_config(cfg);
+        tf.row([
+            c.to_string(),
+            cfg.name.clone(),
+            format!("{:.0}", cfg.core_mhz()),
+            r.alms.to_string(),
+            r.dsps.to_string(),
+            r.m20ks.to_string(),
+        ]);
+    }
+    tf.print();
+    println!("budget: {}   used: {}", result.budget, result.usage);
+    println!(
+        "served: {} completed, {} shed, {} deadline-missed of {} offered",
+        result.completed, result.shed, result.deadline_missed, result.offered
+    );
+
+    let mut tb = Table::new("Homogeneous demo-fleet baselines (same budget, same trace)");
+    tb.headers(["baseline", "cores", "SLO-met", "cost", "note"]);
+    for b in &result.baselines {
+        tb.row([
+            b.name.clone(),
+            b.cores.to_string(),
+            b.slo_met.to_string(),
+            b.cost.to_string(),
+            b.note.clone().unwrap_or_default(),
+        ]);
+    }
+    tb.print();
+
+    let json = result.fleet_json();
+    match out {
+        Some(path) => {
+            std::fs::write(&path, &json).map_err(|e| format!("{path}: {e}"))?;
+            println!("\nfleet written to {path} — serve it with `egpu serve --configs {path}`");
+        }
+        None => println!("\nfleet JSON (use --out FILE.json to save):\n{json}"),
+    }
     Ok(())
 }
 

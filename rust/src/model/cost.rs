@@ -33,6 +33,24 @@ pub fn config_cost(cfg: &EgpuConfig) -> f64 {
     normalized_cost(r.alms, r.dsps)
 }
 
+/// [`DSP_ALM_EQUIVALENT`] as an integer, for fixed-point comparisons.
+pub const DSP_ALM_EQUIVALENT_U64: u64 = 100;
+
+/// Fixed-point normalized cost in whole ALM-equivalents. Both inputs
+/// are integer resource counts and the DSP weight is a whole number,
+/// so this is exact — fleet scoring compares these instead of the f64
+/// [`normalized_cost`] to keep score ordering bit-reproducible.
+pub fn normalized_cost_fixed(alms: u32, dsps: u32) -> u64 {
+    alms as u64 + dsps as u64 * DSP_ALM_EQUIVALENT_U64
+}
+
+/// Fixed-point normalized cost of a configuration (exact integer twin
+/// of [`config_cost`]).
+pub fn config_cost_fixed(cfg: &EgpuConfig) -> u64 {
+    let r = ResourceReport::for_config(cfg);
+    normalized_cost_fixed(r.alms, r.dsps)
+}
+
 /// The Table 1 power-performance-area metric, normalized so the eGPU row
 /// is 1: cost / Fmax relative to the eGPU's cost / Fmax. Lower is better.
 pub fn ppa_metric(luts: f64, dsps: f64, fmax_mhz: f64) -> f64 {
@@ -124,6 +142,21 @@ mod tests {
             dp / nios
         );
         assert!(dot > dp, "dot core must add cost");
+    }
+
+    #[test]
+    fn fixed_point_cost_is_exactly_the_float_cost() {
+        // Resource counts are far below 2^53, the DSP weight is a
+        // whole number, and u64→f64 is exact in that range — so the
+        // fixed-point cost must equal the f64 cost bit-for-bit on
+        // every configuration we model.
+        for memory in [MemoryMode::Dp, MemoryMode::Qp] {
+            for dot in [false, true] {
+                let cfg = EgpuConfig::benchmark(memory, dot);
+                assert_eq!(config_cost_fixed(&cfg) as f64, config_cost(&cfg));
+            }
+        }
+        assert_eq!(normalized_cost_fixed(1100, 3) as f64, normalized_cost(1100, 3));
     }
 
     #[test]

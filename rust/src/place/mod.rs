@@ -12,5 +12,5 @@ pub mod placer;
 pub mod render;
 pub mod sector;
 
-pub use placer::{place, Placement};
+pub use placer::{place, PlaceError, Placement};
 pub use sector::{ColumnKind, Sector};

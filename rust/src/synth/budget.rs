@@ -1,0 +1,119 @@
+//! Area budgets and fleet-level usage accounting.
+//!
+//! A budget is a pool of Agilex fabric resources — ALMs, DSP blocks,
+//! M20K memories — the synthesized fleet must fit inside. Usage is the
+//! per-resource sum of [`ResourceReport::for_config`] over the fleet's
+//! cores; fitting is checked per resource (a fleet that is under on
+//! ALMs but over on M20Ks does not fit). Geometry feasibility of each
+//! *individual* core is the placer's job ([`crate::place::place`]);
+//! the budget only pools totals, exactly like the paper's Table 4/5
+//! device-level accounting.
+
+use std::fmt;
+
+use crate::model::resources::ResourceReport;
+use crate::sim::EgpuConfig;
+
+/// An Agilex area budget the synthesized fleet must fit inside.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AreaBudget {
+    /// Adaptive logic modules available to the fleet.
+    pub alms: u64,
+    /// DSP blocks available to the fleet.
+    pub dsps: u64,
+    /// M20K memory blocks available to the fleet.
+    pub m20ks: u64,
+}
+
+impl AreaBudget {
+    /// The demo budget `egpu synth` defaults to: roughly two and a half
+    /// Agilex sectors of logic with the matching embedded columns —
+    /// enough for the reference 2×DP + 2×QP demo fleet (~35.4k ALMs,
+    /// 112 DSPs, 1036 M20Ks) plus headroom, so the search has real
+    /// choices to make rather than being forced into one composition.
+    pub fn demo() -> AreaBudget {
+        AreaBudget {
+            alms: 40_000,
+            dsps: 128,
+            m20ks: 1_200,
+        }
+    }
+
+    /// Does `usage` fit this budget on every resource?
+    pub fn admits(&self, usage: &AreaUsage) -> bool {
+        usage.alms <= self.alms && usage.dsps <= self.dsps && usage.m20ks <= self.m20ks
+    }
+}
+
+impl fmt::Display for AreaBudget {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} ALMs / {} DSPs / {} M20Ks", self.alms, self.dsps, self.m20ks)
+    }
+}
+
+/// Per-resource totals of a fleet (the summed [`ResourceReport`]s).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AreaUsage {
+    pub alms: u64,
+    pub dsps: u64,
+    pub m20ks: u64,
+}
+
+impl AreaUsage {
+    /// Sum the modeled resources of a fleet.
+    pub fn of(cfgs: &[EgpuConfig]) -> AreaUsage {
+        let mut u = AreaUsage::default();
+        for cfg in cfgs {
+            u.add(&ResourceReport::for_config(cfg));
+        }
+        u
+    }
+
+    /// Accumulate one core's report.
+    pub fn add(&mut self, r: &ResourceReport) {
+        self.alms += r.alms as u64;
+        self.dsps += r.dsps as u64;
+        self.m20ks += r.m20ks as u64;
+    }
+}
+
+impl fmt::Display for AreaUsage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} ALMs / {} DSPs / {} M20Ks", self.alms, self.dsps, self.m20ks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::FleetBuilder;
+
+    #[test]
+    fn fit_is_checked_per_resource() {
+        let b = AreaBudget { alms: 100, dsps: 10, m20ks: 10 };
+        assert!(b.admits(&AreaUsage { alms: 100, dsps: 10, m20ks: 10 }));
+        assert!(!b.admits(&AreaUsage { alms: 101, dsps: 0, m20ks: 0 }));
+        assert!(!b.admits(&AreaUsage { alms: 0, dsps: 11, m20ks: 0 }));
+        assert!(!b.admits(&AreaUsage { alms: 0, dsps: 0, m20ks: 11 }));
+    }
+
+    #[test]
+    fn demo_budget_admits_the_demo_fleet() {
+        // The reference serving fleet must fit the default budget —
+        // otherwise the homogeneous baselines `egpu synth` reports
+        // against would be vacuous.
+        let usage = AreaUsage::of(FleetBuilder::demo_mixed().as_configs());
+        assert!(AreaBudget::demo().admits(&usage), "demo fleet needs {usage}");
+    }
+
+    #[test]
+    fn usage_sums_reports() {
+        let cfgs = FleetBuilder::demo_mixed().as_configs().to_vec();
+        let total = AreaUsage::of(&cfgs);
+        let by_hand: u64 = cfgs
+            .iter()
+            .map(|c| ResourceReport::for_config(c).alms as u64)
+            .sum();
+        assert_eq!(total.alms, by_hand);
+    }
+}

@@ -1,0 +1,245 @@
+//! Candidate enumeration and feasibility filtering.
+//!
+//! The candidate space walks the paper's static-scalability axes —
+//! memory organization (DP/QP), registers per thread, thread space,
+//! and the feature set (predicates, dot core, shared-memory size) —
+//! as concrete [`EgpuConfig`]s derived from the §7 benchmark
+//! configuration. Every candidate then passes two feasibility gates
+//! before the search may use it:
+//!
+//! 1. **Resource fit** — [`ResourceReport::for_config`] must fit the
+//!    [`AreaBudget`] on every resource (a candidate alone can already
+//!    be too big).
+//! 2. **Placement** — [`crate::place::place`] must produce a legal
+//!    sector placement; a config the placer refuses is rejected with
+//!    the placer's own reason ([`crate::place::PlaceError`]), never
+//!    silently skipped.
+//!
+//! Duplicates are collapsed before filtering. Two candidates are
+//! duplicates when they share a compile fingerprint
+//! ([`EgpuConfig::fingerprint`] — the axes that change compiled code)
+//! *and* every serving-relevant axis (threads, shared size, predicate
+//! depth, dot/SFU, ALU class); the fingerprint alone deliberately
+//! ignores those axes so the [`crate::kernels::KernelCache`] can share
+//! compiles across them.
+
+use std::collections::BTreeSet;
+
+use crate::model::cost::config_cost_fixed;
+use crate::model::resources::ResourceReport;
+use crate::place;
+use crate::serve::Request;
+use crate::sim::{EgpuConfig, MemoryMode};
+
+use super::budget::AreaBudget;
+
+/// One budget- and placement-feasible candidate configuration, with
+/// its modeled resources and fixed-point cost attached so the search
+/// never re-derives them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    pub cfg: EgpuConfig,
+    pub alms: u64,
+    pub dsps: u64,
+    pub m20ks: u64,
+    /// Fixed-point normalized cost ([`config_cost_fixed`]).
+    pub cost: u64,
+}
+
+/// A candidate the feasibility filter refused, with the reason —
+/// validation, budget overflow, or the placer's `placement: …` error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Reject {
+    pub name: String,
+    pub reason: String,
+}
+
+/// Feature tiers layered over the (memory × regs × threads) axes:
+/// shared-memory size plus the predicate/dot extensions. `full128`
+/// reproduces the demo fleet's DP core feature-for-feature; `plain128`
+/// its QP core — so the homogeneous demo baselines are inside the
+/// space by construction.
+const TIERS: [(&str, usize, usize, bool); 5] = [
+    ("plain32", 32, 0, false),
+    ("plain128", 128, 0, false),
+    ("pred32", 32, 8, false),
+    ("dot32", 32, 0, true),
+    ("full128", 128, 8, true),
+];
+
+/// Enumerate the default candidate space: memory {DP, QP} × regs/thread
+/// {16, 32} × threads {256, 512} × the five feature tiers = 40
+/// configurations. 64-register layouts are excluded by default: they
+/// serve the same workloads as 32-register ones at strictly higher
+/// modeled cost, so they only widen the search without adding winners.
+pub fn candidate_space() -> Vec<EgpuConfig> {
+    let mut out = Vec::new();
+    for memory in [MemoryMode::Dp, MemoryMode::Qp] {
+        for regs in [16usize, 32] {
+            for threads in [256usize, 512] {
+                for (key, shared_kb, pred, dot) in TIERS {
+                    let mut cfg = EgpuConfig::benchmark(memory, dot);
+                    cfg.threads = threads;
+                    cfg.regs_per_thread = regs;
+                    cfg.shared_kb = shared_kb;
+                    cfg.predicate_levels = pred;
+                    cfg.name = format!("{}-{threads}t-{regs}r-{key}", memory.name());
+                    out.push(cfg);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The axes that make two candidates interchangeable for both
+/// compilation and serving (see module docs).
+fn dedup_key(cfg: &EgpuConfig) -> String {
+    format!(
+        "{:016x}/{}/{}/{}/{}/{}/{}/{}/{}",
+        cfg.fingerprint(),
+        cfg.threads,
+        cfg.shared_kb,
+        cfg.predicate_levels,
+        cfg.dot_core,
+        cfg.sfu,
+        cfg.alu_precision,
+        cfg.shift_precision,
+        cfg.int_alu.name(),
+    )
+}
+
+/// Validate, dedup, and feasibility-filter a candidate list against the
+/// budget. Returns the surviving candidates in deterministic order
+/// (cheapest first, then fingerprint, then name) plus every rejection
+/// with its reason.
+pub fn filter_candidates(
+    space: Vec<EgpuConfig>,
+    budget: &AreaBudget,
+) -> (Vec<Candidate>, Vec<Reject>) {
+    let mut seen = BTreeSet::new();
+    let mut fit = Vec::new();
+    let mut rejected = Vec::new();
+    for cfg in space {
+        if let Err(e) = cfg.validate() {
+            rejected.push(Reject { name: cfg.name.clone(), reason: e.to_string() });
+            continue;
+        }
+        if !seen.insert(dedup_key(&cfg)) {
+            continue; // true duplicate of an earlier candidate
+        }
+        let r = ResourceReport::for_config(&cfg);
+        let (alms, dsps, m20ks) = (r.alms as u64, r.dsps as u64, r.m20ks as u64);
+        if alms > budget.alms || dsps > budget.dsps || m20ks > budget.m20ks {
+            rejected.push(Reject {
+                name: cfg.name.clone(),
+                reason: format!(
+                    "exceeds the budget: needs {alms} ALMs / {dsps} DSPs / {m20ks} M20Ks \
+                     against {budget}"
+                ),
+            });
+            continue;
+        }
+        if let Err(e) = place::place(&cfg) {
+            // PlaceError displays as "placement: <reason>" — surfaced
+            // verbatim so the CLI reports why the placer refused.
+            rejected.push(Reject { name: cfg.name.clone(), reason: e.to_string() });
+            continue;
+        }
+        let cost = config_cost_fixed(&cfg);
+        fit.push(Candidate { cfg, alms, dsps, m20ks, cost });
+    }
+    fit.sort_by(|a, b| {
+        a.cost
+            .cmp(&b.cost)
+            .then_with(|| a.cfg.fingerprint().cmp(&b.cfg.fingerprint()))
+            .then_with(|| a.cfg.name.cmp(&b.cfg.name))
+    });
+    (fit, rejected)
+}
+
+/// What one request statically demands of a core: enough shared memory
+/// for its loads/unloads, and the predicate/dot extensions its kernel
+/// generator is built on. Used only to *seed* the search with fleets
+/// that can plausibly serve the trace — actual servability is decided
+/// by the serve replay (feature routing knows more than this summary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestNeed {
+    pub words: usize,
+    pub dot: bool,
+    pub pred: bool,
+}
+
+/// Summarize each request in the trace.
+pub(crate) fn request_needs(trace: &[Request]) -> Vec<RequestNeed> {
+    trace
+        .iter()
+        .map(|r| {
+            let loads = r.loads.iter().map(|(b, d)| b + d.len()).max().unwrap_or(0);
+            let unloads = r.unloads.iter().map(|(b, l)| b + l).max().unwrap_or(0);
+            let gen = r.spec.generator();
+            RequestNeed {
+                words: loads.max(unloads),
+                dot: matches!(gen, "reduction-dot" | "mmm-dot"),
+                pred: matches!(gen, "reduction-pred" | "bitonic"),
+            }
+        })
+        .collect()
+}
+
+/// Can this candidate statically accept the request?
+pub(crate) fn candidate_covers(c: &Candidate, n: &RequestNeed) -> bool {
+    (!n.dot || c.cfg.dot_core)
+        && (!n.pred || c.cfg.predicate_levels > 0)
+        && c.cfg.shared_words() >= n.words
+}
+
+/// Does the fleet (as candidate indices) statically cover every request?
+pub(crate) fn covers(needs: &[RequestNeed], cands: &[Candidate], key: &[usize]) -> bool {
+    needs.iter().all(|n| key.iter().any(|&i| candidate_covers(&cands[i], n)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::FleetBuilder;
+
+    #[test]
+    fn space_contains_the_demo_fleet_shapes() {
+        // The demo fleet's cores must exist in the space up to naming —
+        // same fingerprint and same serving-relevant axes — so the
+        // search can always rediscover the homogeneous baselines.
+        let space = candidate_space();
+        for demo in FleetBuilder::demo_mixed().as_configs() {
+            assert!(
+                space.iter().any(|c| dedup_key(c) == dedup_key(demo)),
+                "{} has no equivalent candidate",
+                demo.name
+            );
+        }
+    }
+
+    #[test]
+    fn duplicates_collapse_and_rejects_carry_reasons() {
+        let budget = AreaBudget::demo();
+        let mut space = candidate_space();
+        let n = space.len();
+        space.extend(candidate_space()); // every candidate duplicated
+        let (fit, rejected) = filter_candidates(space, &budget);
+        assert!(fit.len() <= n, "duplicates must collapse");
+        assert!(!fit.is_empty());
+        for r in &rejected {
+            assert!(!r.reason.is_empty(), "{} rejected without a reason", r.name);
+        }
+        // Deterministic order: cost is non-decreasing.
+        assert!(fit.windows(2).all(|w| w[0].cost <= w[1].cost));
+    }
+
+    #[test]
+    fn over_budget_candidates_are_rejected_with_the_shortfall() {
+        let tiny = AreaBudget { alms: 1_000, dsps: 8, m20ks: 16 };
+        let (fit, rejected) = filter_candidates(candidate_space(), &tiny);
+        assert!(fit.is_empty(), "nothing fits a 1k-ALM budget");
+        assert!(rejected.iter().all(|r| r.reason.contains("exceeds the budget")));
+    }
+}

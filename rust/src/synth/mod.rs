@@ -1,0 +1,40 @@
+//! Workload-driven fleet synthesis under an Agilex area budget.
+//!
+//! This module closes the model → place → serve loop: given an
+//! [`AreaBudget`] (ALMs / DSPs / M20Ks) and a `harness::loadgen`
+//! traffic trace, [`synthesize`] picks the fleet of statically-scaled
+//! cores that serves the most requests within their SLOs. It is the
+//! contest the companion paper ("Soft GPGPU versus IP cores") frames:
+//! under a fixed fabric budget, which mix of configurations earns its
+//! area?
+//!
+//! The pipeline:
+//!
+//! 1. **Enumerate** ([`candidate_space`]) — walk the paper's static
+//!    axes (memory mode × regs/thread × thread space × feature tier)
+//!    into concrete `EgpuConfig`s, deduped by compile fingerprint plus
+//!    the serving-relevant axes.
+//! 2. **Filter** ([`candidates`]) — each candidate must fit the budget
+//!    per [`crate::model::resources::ResourceReport`] and place per
+//!    [`crate::place::place`]; refusals carry the placer's reason.
+//! 3. **Search** ([`search`]) — deterministic beam search over fleet
+//!    compositions, each scored by replaying the trace through an
+//!    in-process [`crate::serve::Server`] in modeled bus cycles.
+//! 4. **Emit** — the winner serializes via
+//!    [`crate::sim::config_json::fleet_to_json`], so `egpu serve
+//!    --configs` / `egpu fleet --configs` consume it unchanged.
+//!
+//! Determinism rules: no wall-clock anywhere in the objective (bus
+//! cycles only), no f64 in comparisons ([`FleetScore`] is integers and
+//! fingerprints end-to-end), fixed enumeration order, and memoized
+//! scoring keyed on canonical sorted compositions — so the same
+//! (budget, trace, options) triple is bit-identical across reruns and
+//! under sequential vs parallel serving.
+
+pub mod budget;
+pub mod candidates;
+pub mod search;
+
+pub use budget::{AreaBudget, AreaUsage};
+pub use candidates::{candidate_space, Candidate, Reject};
+pub use search::{synthesize, BaselineScore, FleetScore, SynthOptions, SynthResult};

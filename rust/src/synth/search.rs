@@ -1,0 +1,543 @@
+//! Deterministic beam search over fleet compositions, scored by trace
+//! replay.
+//!
+//! A composition is a multiset of feasible candidates (counts ×
+//! configs). Scoring replays the offered trace through an in-process
+//! [`Server`] over that fleet and reads the integer telemetry: the
+//! objective is SLO-met completions (completed minus deadline misses),
+//! measured in modeled bus cycles — wall-clock never enters the score,
+//! so the search result is a pure function of (budget, trace, options).
+//!
+//! Ties break through [`FleetScore`]'s total order: more SLO-met
+//! requests, then *lower* fixed-point modeled cost
+//! ([`crate::model::cost::config_cost_fixed`]), then the sorted config
+//! fingerprints — all integers, so equal fleets compare `==` and
+//! reruns are bit-identical. A fleet whose serve replay errors (a
+//! kernel no core can accept) scores as unservable and never enters
+//! the beam.
+//!
+//! The search seeds the beam with every covering singleton, a greedy
+//! static-cover multiset, and the homogeneous demo-fleet compositions
+//! (which are also reported as baselines); expansion appends one
+//! candidate at a time, keeping budget fit invariant. The loop stops
+//! the first round that fails to strictly improve the best score —
+//! improvement is strict in the total order and the composition space
+//! is finite, so termination is guaranteed. All candidate fleets share
+//! one [`KernelCache`], so each kernel compiles once per fingerprint
+//! across the whole search.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::api::FleetBuilder;
+use crate::kernels::KernelCache;
+use crate::model::cost::config_cost_fixed;
+use crate::model::resources::ResourceReport;
+use crate::place;
+use crate::serve::{Request, Server};
+use crate::sim::{config_json, EgpuConfig};
+
+use super::budget::{AreaBudget, AreaUsage};
+use super::candidates::{
+    candidate_covers, candidate_space, covers, filter_candidates, request_needs, Candidate, Reject,
+    RequestNeed,
+};
+
+/// Knobs for one synthesis run. The defaults mirror the serving
+/// runtime's ([`Server`] qdepth 64, batch 8, 8 µs linger) so the
+/// score replays the same policy `egpu serve` runs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthOptions {
+    /// Beam width (compositions expanded per round; ≥ 1).
+    pub beam: usize,
+    /// Hard cap on fleet size (cores per composition).
+    pub max_cores: usize,
+    /// Candidate configurations to search over; empty = the default
+    /// [`candidate_space`]. Still deduped and feasibility-filtered.
+    pub candidates: Vec<EgpuConfig>,
+    /// Score with sequential fleet dispatch instead of parallel
+    /// workers. Bit-identical result either way (the serving layer's
+    /// invariant); exists so tests can pin exactly that.
+    pub sequential: bool,
+    /// Admission-queue bound for the scoring server.
+    pub qdepth: usize,
+    /// Maximum batch size for the scoring server.
+    pub max_batch: usize,
+    /// Batch linger window (µs) for the scoring server.
+    pub linger_us: u64,
+}
+
+impl Default for SynthOptions {
+    fn default() -> SynthOptions {
+        SynthOptions {
+            beam: 2,
+            max_cores: 6,
+            candidates: Vec::new(),
+            sequential: false,
+            qdepth: 64,
+            max_batch: 8,
+            linger_us: 8,
+        }
+    }
+}
+
+/// Deterministic fleet score: a total order over integers only —
+/// no f64 anywhere, so equal scores are exactly equal and reruns
+/// cannot drift through rounding or comparison ties.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FleetScore {
+    /// Requests completed within their deadline (no deadline = met).
+    pub slo_met: u64,
+    /// Summed fixed-point normalized cost of the fleet (ALM
+    /// equivalents; lower is better).
+    pub cost: u64,
+    /// Sorted config fingerprints — the final tie-break, so two
+    /// distinct compositions with equal throughput and cost still
+    /// order deterministically.
+    pub fingerprints: Vec<u64>,
+}
+
+impl Ord for FleetScore {
+    fn cmp(&self, other: &FleetScore) -> std::cmp::Ordering {
+        // Greater = better: more SLO-met, then cheaper, then the
+        // lexicographically smaller fingerprint multiset.
+        self.slo_met
+            .cmp(&other.slo_met)
+            .then_with(|| other.cost.cmp(&self.cost))
+            .then_with(|| other.fingerprints.cmp(&self.fingerprints))
+    }
+}
+
+impl PartialOrd for FleetScore {
+    fn partial_cmp(&self, other: &FleetScore) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// One homogeneous demo-fleet baseline the synthesized fleet is
+/// compared against (as many copies of the demo config as the budget
+/// admits, capped at `max_cores`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BaselineScore {
+    pub name: String,
+    pub cores: usize,
+    pub slo_met: u64,
+    pub cost: u64,
+    /// Why the baseline scored zero, when it did ("does not fit the
+    /// budget", or the serve error for a fleet the trace defeats).
+    pub note: Option<String>,
+}
+
+/// The outcome of [`synthesize`]: the winning fleet plus everything
+/// needed to audit the decision. `PartialEq` so reruns can be pinned
+/// bit-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SynthResult {
+    pub budget: AreaBudget,
+    /// The winning fleet, one config per core.
+    pub fleet: Vec<EgpuConfig>,
+    /// Summed modeled resources of the fleet.
+    pub usage: AreaUsage,
+    pub score: FleetScore,
+    /// Requests in the scoring trace.
+    pub offered: usize,
+    pub completed: u64,
+    pub shed: u64,
+    pub deadline_missed: u64,
+    /// Candidates the feasibility filter refused, with reasons.
+    pub rejected: Vec<Reject>,
+    /// The homogeneous demo-fleet baselines and how they scored.
+    pub baselines: Vec<BaselineScore>,
+    /// Serve replays performed (memoized compositions count once).
+    pub evaluated: usize,
+}
+
+impl SynthResult {
+    /// The winning fleet as a `sim::config_json` fleet file —
+    /// consumable by `egpu serve --configs` / `egpu fleet --configs`
+    /// unchanged.
+    pub fn fleet_json(&self) -> String {
+        config_json::fleet_to_json(&self.fleet)
+    }
+}
+
+/// Integer telemetry extracted from one scoring replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ServeCard {
+    slo_met: u64,
+    completed: u64,
+    shed: u64,
+    deadline_missed: u64,
+}
+
+/// Replay the trace through a fresh server over `cfgs`. `Err` means
+/// the fleet cannot serve the trace at all (e.g. no core accepts a
+/// kernel's features) — scored as unservable by the caller.
+fn serve_once(
+    cfgs: &[EgpuConfig],
+    trace: &[Request],
+    opts: &SynthOptions,
+    cache: &Arc<KernelCache>,
+) -> Result<ServeCard, String> {
+    let mut fleet = FleetBuilder::new();
+    for cfg in cfgs {
+        fleet = fleet.core(cfg.clone());
+    }
+    let mut server = Server::builder()
+        .fleet(fleet)
+        .kernel_cache(cache.clone())
+        .qdepth(opts.qdepth)
+        .max_batch(opts.max_batch)
+        .linger_us(opts.linger_us)
+        .sequential(opts.sequential)
+        .build()
+        .map_err(|e| e.to_string())?;
+    let report = server.serve(trace.to_vec()).map_err(|e| e.to_string())?;
+    let t = &report.telemetry;
+    Ok(ServeCard {
+        slo_met: t.completed.saturating_sub(t.deadline_missed),
+        completed: t.completed,
+        shed: t.shed,
+        deadline_missed: t.deadline_missed,
+    })
+}
+
+fn usage_of(key: &[usize], cands: &[Candidate]) -> AreaUsage {
+    let mut u = AreaUsage::default();
+    for &i in key {
+        u.alms += cands[i].alms;
+        u.dsps += cands[i].dsps;
+        u.m20ks += cands[i].m20ks;
+    }
+    u
+}
+
+fn score_of(key: &[usize], cands: &[Candidate], card: ServeCard) -> FleetScore {
+    let mut fps: Vec<u64> = key.iter().map(|&i| cands[i].cfg.fingerprint()).collect();
+    fps.sort_unstable();
+    FleetScore {
+        slo_met: card.slo_met,
+        cost: key.iter().map(|&i| cands[i].cost).sum(),
+        fingerprints: fps,
+    }
+}
+
+/// Score a composition, memoized on the canonical (sorted) index
+/// multiset. `None` = unservable.
+#[allow(clippy::too_many_arguments)]
+fn eval(
+    key: &[usize],
+    cands: &[Candidate],
+    trace: &[Request],
+    opts: &SynthOptions,
+    cache: &Arc<KernelCache>,
+    memo: &mut BTreeMap<Vec<usize>, Option<(FleetScore, ServeCard)>>,
+    evaluated: &mut usize,
+) -> Option<(FleetScore, ServeCard)> {
+    if let Some(hit) = memo.get(key) {
+        return hit.clone();
+    }
+    let cfgs: Vec<EgpuConfig> = key.iter().map(|&i| cands[i].cfg.clone()).collect();
+    *evaluated += 1;
+    let out = serve_once(&cfgs, trace, opts, cache)
+        .ok()
+        .map(|card| (score_of(key, cands, card), card));
+    memo.insert(key.to_vec(), out.clone());
+    out
+}
+
+/// Greedy static cover: repeatedly add the candidate covering the most
+/// still-uncovered requests (candidates are cost-sorted, so ties go to
+/// the cheapest). `None` if no budget-fitting multiset covers the
+/// trace.
+fn greedy_cover(
+    needs: &[RequestNeed],
+    cands: &[Candidate],
+    budget: &AreaBudget,
+    max_cores: usize,
+) -> Option<Vec<usize>> {
+    let mut key: Vec<usize> = Vec::new();
+    let mut covered = vec![false; needs.len()];
+    while key.len() < max_cores && covered.iter().any(|c| !c) {
+        let mut pick: Option<(usize, usize)> = None; // (gain, index)
+        for (i, c) in cands.iter().enumerate() {
+            let mut k2 = key.clone();
+            k2.push(i);
+            if !budget.admits(&usage_of(&k2, cands)) {
+                continue;
+            }
+            let gain = needs
+                .iter()
+                .zip(&covered)
+                .filter(|(n, done)| !**done && candidate_covers(c, n))
+                .count();
+            let better = match pick {
+                None => gain > 0,
+                Some((g, _)) => gain > g,
+            };
+            if better {
+                pick = Some((gain, i));
+            }
+        }
+        let (_, i) = pick?;
+        for (n, done) in needs.iter().zip(covered.iter_mut()) {
+            if candidate_covers(&cands[i], n) {
+                *done = true;
+            }
+        }
+        key.push(i);
+    }
+    if covered.iter().all(|c| *c) {
+        key.sort_unstable();
+        Some(key)
+    } else {
+        None
+    }
+}
+
+/// Order beam entries: best score first, then the smaller index
+/// multiset — fully deterministic.
+fn rank(a: &(Vec<usize>, FleetScore), b: &(Vec<usize>, FleetScore)) -> std::cmp::Ordering {
+    b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0))
+}
+
+/// Synthesize the best fleet for `trace` under `budget`. Deterministic:
+/// the same inputs always return the same [`SynthResult`], including
+/// under sequential vs parallel serving. Errors when no candidate fits
+/// the budget or no feasible fleet can serve the trace.
+pub fn synthesize(
+    budget: &AreaBudget,
+    trace: &[Request],
+    opts: &SynthOptions,
+) -> Result<SynthResult, String> {
+    let beam_width = opts.beam.max(1);
+    let max_cores = opts.max_cores.max(1);
+    let space = if opts.candidates.is_empty() {
+        candidate_space()
+    } else {
+        opts.candidates.clone()
+    };
+    let (cands, rejected) = filter_candidates(space, budget);
+    if cands.is_empty() {
+        return Err(format!(
+            "no candidate configuration fits the budget ({budget}); \
+             {} candidates rejected (see `egpu synth` output for reasons)",
+            rejected.len()
+        ));
+    }
+    let needs = request_needs(trace);
+    let cache = KernelCache::shared();
+    let mut memo: BTreeMap<Vec<usize>, Option<(FleetScore, ServeCard)>> = BTreeMap::new();
+    let mut evaluated = 0usize;
+    let mut best: Option<(Vec<EgpuConfig>, FleetScore, ServeCard)> = None;
+
+    // Strict-improvement replacement: the first composition reaching a
+    // score wins all later ties, and enumeration order is fixed, so
+    // the winner is deterministic.
+    fn offer(
+        best: &mut Option<(Vec<EgpuConfig>, FleetScore, ServeCard)>,
+        fleet: Vec<EgpuConfig>,
+        score: FleetScore,
+        card: ServeCard,
+    ) {
+        let better = match best {
+            None => true,
+            Some((_, incumbent, _)) => score > *incumbent,
+        };
+        if better {
+            *best = Some((fleet, score, card));
+        }
+    }
+
+    // Seed 1: every covering singleton.
+    let mut beam: Vec<(Vec<usize>, FleetScore)> = Vec::new();
+    for i in 0..cands.len() {
+        let key = vec![i];
+        if !covers(&needs, &cands, &key) {
+            continue;
+        }
+        if let Some((score, card)) =
+            eval(&key, &cands, trace, opts, &cache, &mut memo, &mut evaluated)
+        {
+            offer(&mut best, vec![cands[i].cfg.clone()], score.clone(), card);
+            beam.push((key, score));
+        }
+    }
+
+    // Seed 2: the greedy static-cover multiset (covers traces no
+    // single candidate can, e.g. dot-needing plus huge-shared mixes).
+    if let Some(key) = greedy_cover(&needs, &cands, budget, max_cores) {
+        if let Some((score, card)) =
+            eval(&key, &cands, trace, opts, &cache, &mut memo, &mut evaluated)
+        {
+            let fleet = key.iter().map(|&i| cands[i].cfg.clone()).collect();
+            offer(&mut best, fleet, score.clone(), card);
+            beam.push((key, score));
+        }
+    }
+
+    // Seed 3 + reporting: the homogeneous demo-fleet baselines, at the
+    // largest core count the budget admits. Scored with the same
+    // replay and offered into the search, so the winner dominates both
+    // baselines by construction whenever they fit the budget at all.
+    let mut baselines = Vec::new();
+    let mut demo_cfgs: Vec<EgpuConfig> = Vec::new();
+    for cfg in FleetBuilder::demo_mixed().as_configs() {
+        if !demo_cfgs.iter().any(|c: &EgpuConfig| c.name == cfg.name) {
+            demo_cfgs.push(cfg.clone());
+        }
+    }
+    for cfg in demo_cfgs {
+        let r = ResourceReport::for_config(&cfg);
+        let per = (r.alms as u64, r.dsps as u64, r.m20ks as u64);
+        let mut k = 0usize;
+        while k < max_cores {
+            let next = (k + 1) as u64;
+            let fits = per.0 * next <= budget.alms
+                && per.1 * next <= budget.dsps
+                && per.2 * next <= budget.m20ks;
+            if !fits {
+                break;
+            }
+            k += 1;
+        }
+        if k == 0 {
+            baselines.push(BaselineScore {
+                name: cfg.name.clone(),
+                cores: 0,
+                slo_met: 0,
+                cost: 0,
+                note: Some("does not fit the budget".into()),
+            });
+            continue;
+        }
+        let fleet = vec![cfg.clone(); k];
+        let cost = k as u64 * config_cost_fixed(&cfg);
+        evaluated += 1;
+        match serve_once(&fleet, trace, opts, &cache) {
+            Ok(card) => {
+                baselines.push(BaselineScore {
+                    name: cfg.name.clone(),
+                    cores: k,
+                    slo_met: card.slo_met,
+                    cost,
+                    note: None,
+                });
+                // Only a placeable fleet may win (the synthesized
+                // fleet's contract); candidates are pre-filtered, the
+                // demo configs are checked here.
+                if place::place(&cfg).is_ok() {
+                    let score = FleetScore {
+                        slo_met: card.slo_met,
+                        cost,
+                        fingerprints: vec![cfg.fingerprint(); k],
+                    };
+                    offer(&mut best, fleet, score, card);
+                }
+            }
+            Err(e) => baselines.push(BaselineScore {
+                name: cfg.name.clone(),
+                cores: k,
+                slo_met: 0,
+                cost,
+                note: Some(format!("cannot serve the trace: {e}")),
+            }),
+        }
+    }
+
+    // Beam rounds: expand each beam composition by one candidate,
+    // keeping budget fit; stop the first round with no strict
+    // improvement of the global best.
+    beam.sort_by(rank);
+    beam.dedup_by(|a, b| a.0 == b.0);
+    beam.truncate(beam_width);
+    loop {
+        let before = best.as_ref().map(|(_, s, _)| s.clone());
+        let mut round: Vec<(Vec<usize>, FleetScore)> = Vec::new();
+        for (key, _) in &beam {
+            if key.len() >= max_cores {
+                continue;
+            }
+            for i in 0..cands.len() {
+                let mut k2 = key.clone();
+                k2.push(i);
+                k2.sort_unstable();
+                if !budget.admits(&usage_of(&k2, &cands)) {
+                    continue;
+                }
+                if round.iter().any(|(k, _)| *k == k2) {
+                    continue;
+                }
+                if let Some((score, card)) =
+                    eval(&k2, &cands, trace, opts, &cache, &mut memo, &mut evaluated)
+                {
+                    let fleet = k2.iter().map(|&j| cands[j].cfg.clone()).collect();
+                    offer(&mut best, fleet, score.clone(), card);
+                    round.push((k2, score));
+                }
+            }
+        }
+        let improved = match (&before, &best) {
+            (None, Some(_)) => true,
+            (Some(b), Some((_, now, _))) => now > b,
+            _ => false,
+        };
+        if !improved || round.is_empty() {
+            break;
+        }
+        round.sort_by(rank);
+        round.truncate(beam_width);
+        beam = round;
+    }
+
+    let (fleet, score, card) = best.ok_or_else(|| {
+        format!(
+            "no feasible fleet can serve the trace under the budget ({budget}); \
+             {} of {} candidates fit",
+            cands.len(),
+            cands.len() + rejected.len()
+        )
+    })?;
+    let usage = AreaUsage::of(&fleet);
+    Ok(SynthResult {
+        budget: *budget,
+        fleet,
+        usage,
+        score,
+        offered: trace.len(),
+        completed: card.completed,
+        shed: card.shed,
+        deadline_missed: card.deadline_missed,
+        rejected,
+        baselines,
+        evaluated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn score(slo: u64, cost: u64, fps: &[u64]) -> FleetScore {
+        FleetScore { slo_met: slo, cost, fingerprints: fps.to_vec() }
+    }
+
+    #[test]
+    fn score_order_is_total_and_integer_only() {
+        // SLO-met dominates cost.
+        assert!(score(5, 99_999, &[2]) > score(4, 1, &[1]));
+        // Equal SLO: cheaper wins.
+        assert!(score(5, 100, &[2]) > score(5, 101, &[1]));
+        // Equal SLO and cost: smaller fingerprint multiset wins.
+        assert!(score(5, 100, &[1, 2]) > score(5, 100, &[1, 3]));
+        // Exactly equal scores compare equal (first-seen keeps the win).
+        assert_eq!(score(5, 100, &[1, 2]), score(5, 100, &[1, 2]));
+    }
+
+    #[test]
+    fn default_options_mirror_the_serving_defaults() {
+        let o = SynthOptions::default();
+        assert_eq!((o.qdepth, o.max_batch, o.linger_us), (64, 8, 8));
+        assert!(o.beam >= 1 && o.max_cores >= 1);
+    }
+}
