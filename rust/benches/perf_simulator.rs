@@ -19,7 +19,7 @@ use egpu::harness::loadgen::{demo_requests, heavy_tail_requests, BurstSpec, Load
 use egpu::harness::{demo_job_io, demo_specs, sim_rate, time, Rng, Table, Timing};
 use egpu::kc::SchedMode;
 use egpu::kernels::{bitonic, f32_bits, fft, fft4, mmm, reduction, transpose, Kernel};
-use egpu::sim::{EgpuConfig, MemoryMode};
+use egpu::sim::{EgpuConfig, MemoryMode, TraceStats};
 
 fn run_once(kernel: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)], hazards: bool) -> u64 {
     let mut gpu = Gpu::new(cfg).unwrap();
@@ -31,6 +31,18 @@ fn run_once(kernel: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)], hazar
         .run()
         .unwrap()
         .compute_cycles
+}
+
+/// One full run for the superplan coverage numbers: trace count, mean
+/// trace length, and the share of dynamic instructions retired inside
+/// fused traces.
+fn trace_stats_once(kernel: &Kernel, cfg: &EgpuConfig, init: &[(usize, Vec<u32>)]) -> TraceStats {
+    let mut gpu = Gpu::new(cfg).unwrap();
+    for (b, d) in init {
+        gpu.write_words(*b, d).unwrap();
+    }
+    gpu.launch(kernel).run().unwrap();
+    gpu.machine().trace_stats()
 }
 
 /// Wall-clock a 4-job FFT batch through a 4-core `GpuArray`, with the
@@ -113,7 +125,29 @@ fn main() {
     let mut total_cycles = 0u64;
     let mut total_ms = 0f64;
     let mut kernel_rows = Vec::new();
+    let mut superplan_rows = Vec::new();
+    let mut total_traces = 0usize;
+    let (mut fused_dyn, mut total_dyn) = (0u64, 0u64);
     for (kernel, cfg, init) in &cases {
+        let ts = trace_stats_once(kernel, cfg, init);
+        assert!(
+            ts.traces > 0 && ts.fused_retired > 0,
+            "{}: the superplan compiler must fuse straight-line runs",
+            kernel.name
+        );
+        total_traces += ts.traces;
+        fused_dyn += ts.fused_retired;
+        total_dyn += ts.retired;
+        superplan_rows.push(format!(
+            "    {{\"name\": {}, \"traces\": {}, \"fused_pcs\": {}, \"program_pcs\": {}, \
+             \"mean_trace_len\": {:.2}, \"dynamic_fused_pct\": {:.2}}}",
+            json_str(&kernel.name),
+            ts.traces,
+            ts.fused_pcs,
+            ts.program_pcs,
+            ts.mean_trace_len,
+            ts.dynamic_fused_pct(),
+        ));
         let cycles = run_once(kernel, cfg, init, true);
         let checked = time(samples, || run_once(kernel, cfg, init, true));
         let fast = time(samples, || run_once(kernel, cfg, init, false));
@@ -145,6 +179,17 @@ fn main() {
         "\naggregate: {:.1} M simulated cycles/s (fast path) over {} kernels",
         aggregate,
         cases.len()
+    );
+    let fused_pct = 100.0 * fused_dyn as f64 / total_dyn as f64;
+    println!(
+        "superplan coverage: {total_traces} traces across {} kernels, \
+         {fused_dyn}/{total_dyn} dynamic instructions fused ({fused_pct:.1}%)",
+        cases.len()
+    );
+    let superplan_json = format!(
+        "  \"superplan\": {{\"traces\": {total_traces}, \"dynamic_fused_pct\": {fused_pct:.2}, \
+         \"kernels\": [\n{}\n  ]}},\n",
+        superplan_rows.join(",\n"),
     );
 
     // Static-schedule section: the kernel compiler's modeled-cycle win at
@@ -320,10 +365,14 @@ fn main() {
     let serving_json = {
         let mut server = Server::builder().build().unwrap();
         let offered = 60usize;
+        let wall = std::time::Instant::now();
         let report = server.serve(demo_requests(&LoadSpec::demo(offered))).unwrap();
+        let wall_s = wall.elapsed().as_secs_f64().max(1e-9);
         let t = &report.telemetry;
         let mhz = server.bus_mhz();
         let rps = t.jobs_per_s(mhz);
+        let wall_jobs_per_s = t.completed as f64 / wall_s;
+        let reuse = server.reuse_stats();
         assert!(t.completed > 0, "the serving bench must serve something");
         assert_eq!(report.submitted(), offered, "every request served or shed");
         let util = server.core_utilization();
@@ -341,21 +390,28 @@ fn main() {
             .collect();
         println!(
             "serving ({offered} offered): {} served, {} shed, {} batches, \
-             {rps:.0} requests/s, p99 e2e {:.1} us",
+             {rps:.0} requests/s, p99 e2e {:.1} us, wall {wall_jobs_per_s:.0} jobs/s, \
+             machine reuse {}/{} (hits/misses)",
             t.completed,
             t.shed,
             t.batches,
-            t.e2e.p99() as f64 / mhz
+            t.e2e.p99() as f64 / mhz,
+            reuse.hits,
+            reuse.misses
         );
         format!(
             "  \"serving\": {{\"offered\": {offered}, \"completed\": {}, \"shed\": {}, \
-             \"batches\": {}, \"requests_per_s\": {rps:.1}, \"shed_rate\": {:.4}, \
+             \"batches\": {}, \"requests_per_s\": {rps:.1}, \"wall_jobs_per_s\": \
+             {wall_jobs_per_s:.1}, \"reuse_hits\": {}, \"reuse_misses\": {}, \
+             \"shed_rate\": {:.4}, \
              \"deadline_missed\": {}, \"peak_queue\": {}, \"queue_wait_p50_us\": {:.3}, \
              \"e2e_p50_us\": {:.3}, \"e2e_p95_us\": {:.3}, \"e2e_p99_us\": {:.3}, \
              \"cores\": [\n{}\n    ]}},\n",
             t.completed,
             t.shed,
             t.batches,
+            reuse.hits,
+            reuse.misses,
             t.shed_rate(),
             t.deadline_missed,
             t.peak_queue,
@@ -462,7 +518,7 @@ fn main() {
 
     let json = format!(
         "{{\n  \"samples\": {samples},\n  \"kernels\": [\n{}\n  ],\n  \
-         \"static_schedule\": [\n{}\n  ],\n{fleet_json}{serving_json}{synthesis_json}  \
+         \"static_schedule\": [\n{}\n  ],\n{superplan_json}{fleet_json}{serving_json}{synthesis_json}  \
          \"aggregate_mcyc_per_s_unchecked\": {aggregate:.2},\n  \
          \"multi_core\": {{\"cores\": 4, \"jobs\": 4, \"kernel\": \"fft-256\", \
          \"makespan_cycles\": {seq_span}, \"sequential_ms\": {:.4}, \

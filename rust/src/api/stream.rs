@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::{Coordinator, Job};
+use crate::coordinator::{Coordinator, Job, ReuseStats};
 use crate::kernels::{CacheStats, Kernel, KernelCache, KernelSpec};
 use crate::sim::config::EgpuConfig;
 
@@ -114,6 +114,16 @@ impl GpuArray {
     /// without reaching for the coordinator escape hatch.
     pub fn cache_stats(&self) -> CacheStats {
         self.coord.kernel_cache().stats()
+    }
+
+    /// Machine-reuse counters (hits = launches that skipped assembly
+    /// and `load_program` because their core's machine already held
+    /// the kernel's program): the per-core "load once, serve forever"
+    /// property, one level below [`GpuArray::cache_stats`]. In steady
+    /// state every core reaches zero reallocation per kernel — repeat
+    /// batches add only hits.
+    pub fn machine_reuse_stats(&self) -> ReuseStats {
+        self.coord.reuse_stats()
     }
 
     /// Advance the modeled timeline to `cycle` (an explicit idle gap;

@@ -535,15 +535,25 @@ fn provable_first_min(
 /// Run an already-assembled job on one core: the machine half of
 /// dispatch, shared verbatim by the sequential path and the parallel
 /// workers so per-core state evolution is identical in both.
+///
+/// `prog == None` is a machine-reuse hit: the dispatcher proved the
+/// core's machine already holds this exact kernel's program, so the
+/// job skips assembly *and* `load_program` (plan + superplan
+/// recompilation) and just resets architectural state via
+/// [`Machine::reload`]. Register-file and plan allocations survive
+/// across the whole steady-state batch.
 fn exec_assembled(
     m: &mut Machine,
-    prog: Program,
+    prog: Option<Program>,
     job: &Job,
 ) -> Result<(RunStats, Vec<Vec<u32>>), SimError> {
     if !job.keep_data {
         m.shared_mut().fill(0);
     }
-    m.load_program(prog)?;
+    match prog {
+        Some(p) => m.load_program(p)?,
+        None => m.reload()?,
+    }
     m.set_threads(job.kernel.threads)?;
     m.set_dim_x(job.kernel.dim_x)?;
     if !job.keep_data {
@@ -582,6 +592,12 @@ struct BookUndo {
     /// Previous `stream_core` entry for `stream` (restored on unwind).
     prev_affinity: Option<usize>,
     prev_last: Option<usize>,
+    /// Machine-reuse decision made for this job at dispatch time:
+    /// `Some(true)` = reuse hit, `Some(false)` = miss (fresh assembly),
+    /// `None` = assembly never reached (specialize/assemble failed).
+    /// Unwinding decrements the matching counter so reuse stats match
+    /// the sequential path, which never reaches rolled-back jobs.
+    reuse: Option<bool>,
 }
 
 /// Unwind dispatch bookkeeping for `undo[from..]`, newest first.
@@ -589,11 +605,20 @@ struct BookUndo {
 /// *poisoned* (set to `None`) instead of restored — the rolled-back
 /// job's worker may already have overwritten that core's shared
 /// memory, so a later chained job must fail loudly ("resident data is
-/// gone") rather than silently read clobbered data.
+/// gone") rather than silently read clobbered data. `core_loaded` gets
+/// the same treatment for misses: the worker may already have loaded
+/// the rolled-back job's program, so the reuse tracker can no longer
+/// vouch for what the machine holds. A rolled-back *hit* leaves the
+/// tracker alone — `reload` never changes the loaded program, so the
+/// entry is still accurate.
+#[allow(clippy::too_many_arguments)]
 fn rollback_dispatch(
     stream_core: &mut HashMap<u64, usize>,
     core_resident: &mut [Option<u64>],
     last_core: &mut Option<usize>,
+    core_loaded: &mut [Option<Arc<Kernel>>],
+    reuse_hits: &mut u64,
+    reuse_misses: &mut u64,
     undo: &[BookUndo],
     from: usize,
 ) {
@@ -609,6 +634,14 @@ fn rollback_dispatch(
             }
         }
         core_resident[u.core] = None;
+        match u.reuse {
+            Some(true) => *reuse_hits -= 1,
+            Some(false) => {
+                *reuse_misses -= 1;
+                core_loaded[u.core] = None;
+            }
+            None => {}
+        }
         *last_core = u.prev_last;
     }
 }
@@ -634,12 +667,28 @@ fn account_next_unwinding(
     stream_core: &mut HashMap<u64, usize>,
     core_resident: &mut [Option<u64>],
     last_core: &mut Option<usize>,
+    core_loaded: &mut [Option<Arc<Kernel>>],
+    reuse_hits: &mut u64,
+    reuse_misses: &mut u64,
     undo: &[BookUndo],
 ) -> Result<(), SimError> {
     match account_next(slots, metas, acct, pending, tl, out) {
         Ok(()) => Ok(()),
         Err(e) => {
-            rollback_dispatch(stream_core, core_resident, last_core, undo, *acct + 1);
+            // The failing job's own bookkeeping stays (sequential
+            // parity), but its machine may have died mid-`load_program`
+            // — the reuse tracker can no longer vouch for that core.
+            core_loaded[metas[*acct].core] = None;
+            rollback_dispatch(
+                stream_core,
+                core_resident,
+                last_core,
+                core_loaded,
+                reuse_hits,
+                reuse_misses,
+                undo,
+                *acct + 1,
+            );
             Err(e)
         }
     }
@@ -743,6 +792,30 @@ pub struct Coordinator {
     /// Kernel-specialization cache shared by every spec-submitted job
     /// (and injectable, so several devices can share one).
     cache: Arc<KernelCache>,
+    /// Kernel whose program each core's machine currently holds
+    /// (identity-compared via `Arc::ptr_eq`). A match lets dispatch
+    /// skip assembly and `load_program` entirely — the machine resets
+    /// in place ([`Machine::reload`]), reusing its register-file and
+    /// plan allocations. `None` = unknown/poisoned: the next job on
+    /// that core takes the full path.
+    core_loaded: Vec<Option<Arc<Kernel>>>,
+    /// Machine-reuse hits (jobs that skipped `load_program`).
+    reuse_hits: u64,
+    /// Machine-reuse misses (jobs that assembled + loaded fresh).
+    reuse_misses: u64,
+}
+
+/// Machine-reuse counters for steady-state serving assertions: `hits`
+/// jobs skipped assembly + `load_program` because their core's machine
+/// already held the kernel's program; `misses` took the full path.
+/// Bit-identical between sequential and parallel dispatch on
+/// successful batches (the decision is made in submission order either
+/// way, and error-path rollback unwinds counters for jobs the
+/// sequential path never reached).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ReuseStats {
+    pub hits: u64,
+    pub misses: u64,
 }
 
 impl Coordinator {
@@ -790,6 +863,9 @@ impl Coordinator {
             last_core: None,
             parallel: true,
             cache: KernelCache::shared(),
+            core_loaded: vec![None; n],
+            reuse_hits: 0,
+            reuse_misses: 0,
             cfgs,
             cores,
         })
@@ -831,6 +907,15 @@ impl Coordinator {
     /// The fleet's kernel-specialization cache.
     pub fn kernel_cache(&self) -> &Arc<KernelCache> {
         &self.cache
+    }
+
+    /// Machine-reuse counters (see [`ReuseStats`]). Cumulative across
+    /// `run_all` batches, like the timeline.
+    pub fn reuse_stats(&self) -> ReuseStats {
+        ReuseStats {
+            hits: self.reuse_hits,
+            misses: self.reuse_misses,
+        }
     }
 
     /// Share a kernel cache with other devices (replaces the private
@@ -1064,6 +1149,9 @@ impl Coordinator {
             stream_core,
             core_resident,
             last_core,
+            core_loaded,
+            reuse_hits,
+            reuse_misses,
             cfgs,
             core_khz,
             bus_khz,
@@ -1095,9 +1183,9 @@ impl Coordinator {
         let slots = &slots;
 
         std::thread::scope(|scope| {
-            let mut txs: Vec<Sender<(usize, Program, Job)>> = Vec::with_capacity(ncores);
+            let mut txs: Vec<Sender<(usize, Option<Program>, Job)>> = Vec::with_capacity(ncores);
             for m in cores.iter_mut() {
-                let (tx, rx) = channel::<(usize, Program, Job)>();
+                let (tx, rx) = channel::<(usize, Option<Program>, Job)>();
                 txs.push(tx);
                 scope.spawn(move || {
                     // A worker stops at its first failure: the sequential
@@ -1159,6 +1247,9 @@ impl Coordinator {
                                 stream_core,
                                 core_resident,
                                 last_core,
+                                core_loaded,
+                                reuse_hits,
+                                reuse_misses,
                                 &undo,
                             )?,
                             Err(e) => {
@@ -1176,6 +1267,9 @@ impl Coordinator {
                                         stream_core,
                                         core_resident,
                                         last_core,
+                                        core_loaded,
+                                        reuse_hits,
+                                        reuse_misses,
                                         &undo,
                                     )?;
                                 }
@@ -1188,6 +1282,7 @@ impl Coordinator {
                         stream: job.stream,
                         prev_affinity: job.stream.and_then(|s| stream_core.get(&s).copied()),
                         prev_last: *last_core,
+                        reuse: None,
                     });
                     if let Some(s) = job.stream {
                         stream_core.insert(s, core);
@@ -1195,14 +1290,31 @@ impl Coordinator {
                     *last_core = Some(core);
                     core_resident[core] = job.stream;
                     // Specialize spec jobs to the placed core's config
-                    // (cache-memoized), then take the program for that
-                    // core. Errors drain accounting first — sequential
-                    // parity for everything before the failing job.
-                    let assembled = specialize_job(job, &cfgs[core], cache)
-                        .and_then(|job| match job.kernel.assemble(&cfgs[core]) {
-                            Ok(p) => Ok((p, job)),
+                    // (cache-memoized), then decide machine reuse: a
+                    // core whose machine already holds this kernel's
+                    // program skips assembly entirely (`prog = None`;
+                    // the worker `reload`s in place). The decision runs
+                    // in submission order, so the counters match the
+                    // sequential path's. Errors drain accounting
+                    // first — sequential parity for everything before
+                    // the failing job.
+                    let assembled = specialize_job(job, &cfgs[core], cache).and_then(|job| {
+                        if core_loaded[core]
+                            .as_ref()
+                            .is_some_and(|k| Arc::ptr_eq(k, &job.kernel))
+                        {
+                            *reuse_hits += 1;
+                            return Ok((None, job));
+                        }
+                        match job.kernel.assemble(&cfgs[core]) {
+                            Ok(p) => {
+                                *reuse_misses += 1;
+                                core_loaded[core] = Some(job.kernel.clone());
+                                Ok((Some(p), job))
+                            }
                             Err(msg) => Err(SimError::new(0, msg)),
-                        });
+                        }
+                    });
                     let (prog, job) = match assembled {
                         Ok(pj) => pj,
                         Err(e) => {
@@ -1217,12 +1329,18 @@ impl Coordinator {
                                     stream_core,
                                     core_resident,
                                     last_core,
+                                    core_loaded,
+                                    reuse_hits,
+                                    reuse_misses,
                                     &undo,
                                 )?;
                             }
                             return Err(e);
                         }
                     };
+                    undo.last_mut()
+                        .expect("bookkeeping precedes assembly")
+                        .reuse = Some(prog.is_none());
                     metas.push(DispatchMeta {
                         name: job.kernel.name.clone(),
                         stream: job.stream,
@@ -1250,6 +1368,9 @@ impl Coordinator {
                         stream_core,
                         core_resident,
                         last_core,
+                        core_loaded,
+                        reuse_hits,
+                        reuse_misses,
                         &undo,
                     )?;
                 }
@@ -1262,18 +1383,45 @@ impl Coordinator {
         })
     }
 
-    fn run_on(&mut self, core: usize, job: Job, req: FeatureSet) -> Result<JobResult, SimError> {
-        let job = specialize_job(job, &self.cfgs[core], &self.cache)?;
+    /// Decide machine reuse for `job` on `core`: `None` when the
+    /// core's machine already holds this exact kernel's program (a
+    /// hit — `exec_assembled` will `reload` in place), `Some(prog)`
+    /// when it must assemble and load fresh. Counters move here, in
+    /// dispatch order, in both dispatch paths.
+    fn prepare_program(&mut self, core: usize, job: &Job) -> Result<Option<Program>, SimError> {
+        let hit = self.core_loaded[core]
+            .as_ref()
+            .is_some_and(|k| Arc::ptr_eq(k, &job.kernel));
+        if hit {
+            self.reuse_hits += 1;
+            return Ok(None);
+        }
         let prog = job
             .kernel
             .assemble(&self.cfgs[core])
             .map_err(|msg| SimError::new(0, msg))?;
+        self.reuse_misses += 1;
+        self.core_loaded[core] = Some(job.kernel.clone());
+        Ok(Some(prog))
+    }
+
+    fn run_on(&mut self, core: usize, job: Job, req: FeatureSet) -> Result<JobResult, SimError> {
+        let job = specialize_job(job, &self.cfgs[core], &self.cache)?;
+        let prog = self.prepare_program(core, &job)?;
 
         // Bus phase 1: load DMA (a reservation on the shared bus).
         let load_cycles = self.bus.transfer_cycles(job.load_words());
         let start = self.bus_cal.reserve(self.core_free[core], load_cycles);
 
-        let (stats, outputs) = exec_assembled(&mut self.cores[core], prog, &job)?;
+        let (stats, outputs) = match exec_assembled(&mut self.cores[core], prog, &job) {
+            Ok(r) => r,
+            Err(e) => {
+                // The machine may have died mid-`load_program`; stop
+                // vouching for what it holds.
+                self.core_loaded[core] = None;
+                return Err(e);
+            }
+        };
 
         // Bus phase 2: unload DMA. Compute occupies the bus timeline for
         // the core's cycles converted onto the bus clock.

@@ -31,7 +31,7 @@ use egpu::model::resources::ResourceReport;
 use egpu::place;
 use egpu::runtime::default_artifacts_dir;
 use egpu::sim::config_json;
-use egpu::sim::{EgpuConfig, MemoryMode};
+use egpu::sim::{EgpuConfig, MemoryMode, TraceStats};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -75,12 +75,14 @@ COMMANDS:
   profile           print the Figure 6 instruction-mix profiles
   place [PRESET]    place a configuration into an Agilex sector (Figures 4/5)
   run FILE.asm [--threads N] [--qp] [--xla] [--max-cycles N] [--cores N]
-               [--config CFG.json]
+               [--config CFG.json] [--trace-stats]
                     assemble and run a program, dumping stats;
                     --cores N runs it on every core of an N-core GpuArray
                     (one stream per core, parallel worker dispatch);
                     --config loads the device configuration from JSON
-                    (overrides --qp)
+                    (overrides --qp); --trace-stats prints the superplan
+                    compiler's trace coverage (trace count, mean trace
+                    length, % of dynamic instructions executed fused)
   fleet [--configs a.json,b.json] [--jobs N] [--seq]
                     dispatch a mixed kernel batch across a heterogeneous
                     fleet (default: 2 x 771 MHz DP-full + 2 x 600 MHz
@@ -354,6 +356,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     let mut max_cycles = DEFAULT_CYCLE_BUDGET;
     let mut cores = 1usize;
     let mut config_path: Option<String> = None;
+    let mut trace_stats = false;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -363,6 +366,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
             "--cores" => cores = flags::positive_usize(args, &mut i, "--cores")?,
             "--qp" => memory = MemoryMode::Qp,
             "--xla" => use_xla = true,
+            "--trace-stats" => trace_stats = true,
             f if !f.starts_with('-') => file = Some(f.to_string()),
             other => return Err(format!("unknown flag '{other}'")),
         }
@@ -370,7 +374,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     }
     let file = file.ok_or(
         "usage: egpu run FILE.asm [--threads N] [--qp] [--xla] [--max-cycles N] \
-         [--cores N] [--config CFG.json]",
+         [--cores N] [--config CFG.json] [--trace-stats]",
     )?;
     let src = std::fs::read_to_string(&file).map_err(|e| format!("{file}: {e}"))?;
 
@@ -406,7 +410,7 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     };
 
     if cores > 1 {
-        return run_multi_core(&file, &src, &cfg, backend, threads, max_cycles, cores);
+        return run_multi_core(&file, &src, &cfg, backend, threads, max_cycles, cores, trace_stats);
     }
 
     let mut gpu = Gpu::builder()
@@ -447,11 +451,30 @@ fn cmd_run(args: &[String]) -> Result<(), String> {
     );
     println!("\ninstruction mix (cycles):");
     print!("{}", stats.profile.render());
+    if trace_stats {
+        print_trace_stats(&gpu.machine().trace_stats());
+    }
     Ok(())
+}
+
+/// Render [`TraceStats`] for `--trace-stats`.
+fn print_trace_stats(ts: &TraceStats) {
+    println!(
+        "\nsuperplan traces: {}   fused pcs: {}/{}   mean trace length: {:.2}\n\
+         dynamic instructions executed fused: {}/{} ({:.1}%)",
+        ts.traces,
+        ts.fused_pcs,
+        ts.program_pcs,
+        ts.mean_trace_len,
+        ts.fused_retired,
+        ts.retired,
+        ts.dynamic_fused_pct()
+    );
 }
 
 /// `egpu run --cores N`: the same program on every core of an N-core
 /// `GpuArray`, one stream per core, dispatched on parallel workers.
+#[allow(clippy::too_many_arguments)]
 fn run_multi_core(
     file: &str,
     src: &str,
@@ -460,6 +483,7 @@ fn run_multi_core(
     threads: Option<usize>,
     max_cycles: u64,
     cores: usize,
+    trace_stats: bool,
 ) -> Result<(), String> {
     let rt_threads = threads.unwrap_or(cfg.threads);
     let kernel = Kernel::from_asm(file, src, rt_threads, rt_threads);
@@ -492,6 +516,10 @@ fn run_multi_core(
         cfg.core_mhz(),
         wall_ms
     );
+    if trace_stats {
+        // Identical program on every core: core 0 speaks for the fleet.
+        print_trace_stats(&array.coordinator().core_machine(0).trace_stats());
+    }
     Ok(())
 }
 

@@ -23,6 +23,7 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::api::{ApiError, FleetBuilder, GpuArray};
+use crate::coordinator::ReuseStats;
 use crate::kernels::{CacheStats, KernelCache};
 use crate::sim::config::ConfigError;
 
@@ -162,6 +163,16 @@ impl Server {
     /// property, assertable in tests.
     pub fn cache_stats(&self) -> CacheStats {
         self.fleet.cache_stats()
+    }
+
+    /// Machine-reuse counters — one level below [`Server::cache_stats`]:
+    /// hits are dispatched jobs that skipped assembly *and*
+    /// `load_program` because their core's machine already held the
+    /// kernel's program (reset-don't-reallocate). Steady-state serving
+    /// of a fixed request mix reaches zero reallocation per
+    /// (core, fingerprint): repeat workloads add only hits.
+    pub fn reuse_stats(&self) -> ReuseStats {
+        self.fleet.machine_reuse_stats()
     }
 
     /// The batching policy the builder resolved (linger in cycles).

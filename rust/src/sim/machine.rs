@@ -12,12 +12,17 @@
 //! [`IssuePlan`] (see [`super::plan`]) so [`Machine::run`]'s hot loop is
 //! fetch-plan → execute-lanes → charge, with classification, operand
 //! shape, geometry and profiler-slot lookups all resolved ahead of time.
+//! On top of the plans sit *superplans* ([`super::plan::Superplan`]):
+//! straight-line plan runs fused into traces whose per-op charges and
+//! profiler deltas are resolved at compile time, so the hot loop becomes
+//! fetch-superplan → execute-trace → charge, with per-instruction
+//! dispatch surviving only at control flow and budget-tight boundaries.
 //! [`Machine::run_reference`] retains the original per-instruction
 //! re-deriving interpreter as the differential-testing oracle
 //! (`rust/tests/asm_sim_properties.rs`).
 
 use crate::asm::Program;
-use crate::datapath::{classify, native, BlockExec, DpOp};
+use crate::datapath::{classify, native, BlockExec, DpOp, FpOp, IntOp};
 use crate::isa::{CondCode, DepthSel, Group, Instr, Opcode, TType, WAVEFRONT_WIDTH};
 
 use super::config::EgpuConfig;
@@ -99,6 +104,36 @@ impl RunStats {
     }
 }
 
+/// Superplan trace statistics: static trace shape of the loaded program
+/// (at the current thread configuration) plus dynamic fused coverage of
+/// the current run. See [`Machine::trace_stats`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct TraceStats {
+    /// Fused traces compiled over the program.
+    pub traces: usize,
+    /// Static instruction slots inside fused traces.
+    pub fused_pcs: usize,
+    /// Program length in instructions.
+    pub program_pcs: usize,
+    /// Mean fused-trace length (static).
+    pub mean_trace_len: f64,
+    /// Dynamic instructions retired (this run).
+    pub retired: u64,
+    /// Dynamic instructions retired inside fused traces (this run).
+    pub fused_retired: u64,
+}
+
+impl TraceStats {
+    /// Percentage of dynamic instructions executed inside superplans.
+    pub fn dynamic_fused_pct(&self) -> f64 {
+        if self.retired == 0 {
+            0.0
+        } else {
+            100.0 * self.fused_retired as f64 / self.retired as f64
+        }
+    }
+}
+
 enum Exec {
     /// Inlined bit-exact rust lanes (default).
     Native,
@@ -114,6 +149,15 @@ pub struct Machine {
     prog: Option<Program>,
     /// Decode-time issue plans, one per instruction of `prog`.
     plans: Vec<IssuePlan>,
+    /// Fused straight-line traces over `plans`, recompiled whenever the
+    /// plans or the runtime thread count change (charges depend on both).
+    splans: plan::SuperplanProgram,
+    /// Fused-trace dispatch enabled (default). Off = per-instruction
+    /// plan stepping, the second of the three bit-identical exec modes.
+    splans_on: bool,
+    /// Dynamic instructions retired inside fused traces (per-run, like
+    /// `retired`).
+    fused_retired: u64,
     seq: Sequencer,
     regs: RegFile,
     shared: SharedMem,
@@ -172,6 +216,9 @@ impl Machine {
             seq: Sequencer::new(),
             prog: None,
             plans: Vec::new(),
+            splans: plan::SuperplanProgram::default(),
+            splans_on: true,
+            fused_retired: 0,
             cycles: 0,
             retired: 0,
             rt_threads: threads,
@@ -223,7 +270,22 @@ impl Machine {
         // O(n) decode pass, far off the hot path.
         self.plans =
             plan::compile(&prog.instrs).map_err(|e| SimError::new(e.pc, e.message))?;
+        self.rebuild_superplans();
         self.prog = Some(prog);
+        self.reset();
+        Ok(())
+    }
+
+    /// Re-arm the already-loaded program for a fresh run without
+    /// recompiling plans or superplans: the coordinator's machine-reuse
+    /// path calls this when a core re-runs its resident kernel build
+    /// (reset-don't-reallocate — `RegFile`, plan and trace allocations
+    /// all survive). Architectural state is reset exactly as
+    /// `load_program` would leave it.
+    pub fn reload(&mut self) -> Result<(), SimError> {
+        if self.prog.is_none() {
+            return serr(0, "no program loaded to reuse");
+        }
         self.reset();
         Ok(())
     }
@@ -237,9 +299,13 @@ impl Machine {
         self.profile = Profile::new();
         self.cycles = 0;
         self.retired = 0;
+        self.fused_retired = 0;
     }
 
-    /// Set the runtime thread count (≤ configured maximum).
+    /// Set the runtime thread count (≤ configured maximum). A change
+    /// re-resolves the wave table and recompiles the superplan charges;
+    /// re-asserting the current count is free (the steady-state serving
+    /// path calls this per job).
     pub fn set_threads(&mut self, threads: usize) -> Result<(), SimError> {
         if threads == 0 || threads % WAVEFRONT_WIDTH != 0 || threads > self.cfg.threads {
             return serr(
@@ -250,9 +316,37 @@ impl Machine {
                 ),
             );
         }
-        self.rt_threads = threads;
-        self.rebuild_wave_tab();
+        if threads != self.rt_threads {
+            self.rt_threads = threads;
+            self.rebuild_wave_tab();
+            self.rebuild_superplans();
+        }
         Ok(())
+    }
+
+    /// Recompile the fused traces (plan stream or thread count changed).
+    fn rebuild_superplans(&mut self) {
+        self.splans = plan::compile_superplans(&self.plans, &self.wave_tab, &self.shared);
+    }
+
+    /// Toggle fused-trace dispatch (on by default). The per-instruction
+    /// plan path and the superplan path are bit-identical; the toggle
+    /// exists so the parity suites can run both.
+    pub fn set_superplans(&mut self, on: bool) {
+        self.splans_on = on;
+    }
+
+    /// Superplan trace statistics: the static shape of the compiled
+    /// traces plus the dynamic fused coverage of the current run.
+    pub fn trace_stats(&self) -> TraceStats {
+        TraceStats {
+            traces: self.splans.traces.len(),
+            fused_pcs: self.splans.ops.len(),
+            program_pcs: self.plans.len(),
+            mean_trace_len: self.splans.mean_trace_len(),
+            retired: self.retired,
+            fused_retired: self.fused_retired,
+        }
     }
 
     /// Resolve each depth selector against the runtime wavefront count
@@ -330,14 +424,19 @@ impl Machine {
         }
     }
 
-    /// Run to STOP (or error) through the issue-plan hot loop.
-    /// `max_cycles` bounds runaway programs; the budget is enforced
-    /// *before* issue, and the error keeps the partial stats.
+    /// Run to STOP (or error): fetch-superplan → execute-trace → charge,
+    /// falling back to per-instruction plan dispatch at trace boundaries,
+    /// control flow, and budget-tight traces. `max_cycles` bounds runaway
+    /// programs; the budget is enforced *before* issue, and the error
+    /// keeps the partial stats.
     pub fn run(&mut self, max_cycles: u64) -> Result<RunStats, SimError> {
         if self.prog.is_none() {
             return serr(0, "no program loaded");
         }
         let prog_len = self.plans.len();
+        // EGPU_TRACE prints per instruction — superplans are bypassed so
+        // the trace output stays per-op.
+        let fuse = self.splans_on && !self.trace;
         while !self.seq.stopped {
             let pc = self.seq.pc;
             if pc >= prog_len {
@@ -345,6 +444,20 @@ impl Machine {
             }
             if self.cycles >= max_cycles {
                 return Err(self.cycle_limit(pc, max_cycles));
+            }
+            if fuse {
+                if let Some(t) = self.splans.trace_index(pc) {
+                    // Issue offsets are strictly increasing, so the whole
+                    // trace passes the per-op budget check iff its last
+                    // issue slot does. Budget-tight traces fall through to
+                    // per-instruction stepping (mid-trace pcs have no
+                    // leader entry) for an exact partial stop.
+                    let last = self.splans.traces[t].last_offset;
+                    if self.cycles.saturating_add(last) < max_cycles {
+                        self.run_trace(t)?;
+                        continue;
+                    }
+                }
             }
             let p = self.plans[pc];
             if self.trace {
@@ -357,6 +470,84 @@ impl Machine {
         // STOP drains the pipeline.
         self.cycles += PIPELINE_DEPTH;
         Ok(self.stats_snapshot())
+    }
+
+    /// Execute one fused trace. Per-op lane work and hazard bookkeeping
+    /// run with explicit start cycles (identical values to per-op
+    /// stepping); the trace's total charge, profiler delta, retire count
+    /// and pc advance land once at the end. On a mid-trace fault the
+    /// machine is left exactly where per-instruction dispatch would leave
+    /// it: charges/profile/pc of the completed prefix, plus whatever
+    /// partial lane work the faulting op performed before the fault.
+    fn run_trace(&mut self, t: usize) -> Result<(), SimError> {
+        let (first, len, start_pc, total) = {
+            let tr = &self.splans.traces[t];
+            (tr.first_op, tr.len, tr.start_pc, tr.total_cycles)
+        };
+        let base = self.cycles;
+        for k in 0..len {
+            let op = self.splans.ops[first + k];
+            let pc = start_pc + k;
+            if let Err(e) = self.exec_trace_op(pc, &op, base + op.offset) {
+                self.cycles = base + op.offset;
+                self.retired += k as u64;
+                self.fused_retired += k as u64;
+                for j in first..first + k {
+                    let o = self.splans.ops[j];
+                    self.profile.record_slot(o.plan.slot as usize, o.charge);
+                }
+                self.seq.pc = pc;
+                return Err(e);
+            }
+        }
+        self.cycles = base + total;
+        self.retired += len as u64;
+        self.fused_retired += len as u64;
+        self.profile.merge(&self.splans.traces[t].prof);
+        self.seq.pc = start_pc + len;
+        Ok(())
+    }
+
+    /// Dispatch one fused op with an explicit start cycle. Control kinds
+    /// never appear: the superplan compiler ends traces at sequencer ops.
+    #[inline]
+    fn exec_trace_op(
+        &mut self,
+        pc: usize,
+        op: &plan::TraceOp,
+        start: u64,
+    ) -> Result<(), SimError> {
+        let p = &op.plan;
+        match p.kind {
+            PlanKind::Nop => Ok(()),
+            PlanKind::Ldi => {
+                let v = p.imm;
+                self.exec_set_plan(p, start, move |_| v);
+                Ok(())
+            }
+            PlanKind::TdX => {
+                let dx = self.dim_x;
+                self.exec_set_plan(p, start, move |t| (t % dx) as u32);
+                Ok(())
+            }
+            PlanKind::TdY => {
+                let dx = self.dim_x;
+                self.exec_set_plan(p, start, move |t| (t / dx) as u32);
+                Ok(())
+            }
+            PlanKind::Alu(dp) => self.exec_alu_plan(pc, p, dp, start),
+            PlanKind::Load => self.exec_load_plan(pc, p, start, op.charge),
+            PlanKind::Store => self.exec_store_plan(pc, p, start, op.charge),
+            PlanKind::Dot { sum_only } => self.exec_dot_plan(pc, p, sum_only, start),
+            PlanKind::If { cc, ttype } => self.exec_if_plan(pc, p, cc, ttype, start),
+            PlanKind::Else | PlanKind::EndIf => self.exec_else_endif_plan(pc, p),
+            PlanKind::Jmp
+            | PlanKind::Jsr
+            | PlanKind::Rts
+            | PlanKind::Loop
+            | PlanKind::Init
+            | PlanKind::Stop => unreachable!("sequencer ops are never fused"),
+        }
     }
 
     #[inline]
@@ -428,66 +619,157 @@ impl Machine {
         self.profile.record_slot(p.slot as usize, 1);
     }
 
+    /// Charge `charge` cycles to `p`'s profiler slot and advance the pc —
+    /// the per-instruction half of every plan op; fused traces apply the
+    /// same charges in aggregate.
+    #[inline]
+    fn charge_step(&mut self, p: &IssuePlan, charge: u64) {
+        self.cycles += charge;
+        self.profile.record_slot(p.slot as usize, charge);
+        self.seq.step();
+    }
+
     /// LDI / TDX / TDY: per-thread generated values, one wavefront/cycle.
     #[inline]
     fn plan_set(&mut self, p: &IssuePlan, value: impl FnMut(usize) -> u32) {
+        let start = self.cycles;
+        self.exec_set_plan(p, start, value);
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        self.charge_step(p, waves as u64);
+    }
+
+    /// LDI / TDX / TDY lane work — shared by the per-instruction and
+    /// fused-trace paths; never touches cycles, profile or the sequencer.
+    #[inline]
+    fn exec_set_plan(&mut self, p: &IssuePlan, start: u64, value: impl FnMut(usize) -> u32) {
         let waves = self.wave_tab[p.depth.bits() as usize];
         let lanes = p.lanes as usize;
-        let start = self.cycles;
         // Field-level borrow: the gate (self.preds) and the register rows
         // (self.regs) are disjoint.
         let preds = if self.preds.configured() { Some(&self.preds) } else { None };
         self.regs.lane_set(waves, lanes, p.rd, preds, value);
         self.hazards.write_reg(p.rd, start, REG_WINDOW);
-        self.cycles += waves as u64;
-        self.profile.record_slot(p.slot as usize, waves as u64);
-        self.seq.step();
     }
 
     /// FP/INT wavefront ALU ops and INVSQR: one wavefront per cycle.
     fn plan_alu(&mut self, pc: usize, p: &IssuePlan, dp: DpOp) -> Result<(), SimError> {
-        let waves = self.wave_tab[p.depth.bits() as usize];
-        let lanes = p.lanes as usize;
         let start = self.cycles;
+        self.exec_alu_plan(pc, p, dp, start)?;
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        self.charge_step(p, waves as u64);
+        Ok(())
+    }
+
+    /// ALU lane work + hazard bookkeeping at an explicit start cycle.
+    #[inline]
+    fn exec_alu_plan(
+        &mut self,
+        pc: usize,
+        p: &IssuePlan,
+        dp: DpOp,
+        start: u64,
+    ) -> Result<(), SimError> {
         self.hazards.read_reg(pc, p.ra, start);
         if p.uses_rb {
             self.hazards.read_reg(pc, p.rb, start);
         }
-        match (&mut self.exec, dp) {
-            (Exec::Native, DpOp::Fp(op)) => {
-                let preds = if self.preds.configured() { Some(&self.preds) } else { None };
-                self.regs
-                    .lane_apply(waves, lanes, p.rd, p.ra, p.rb, preds, |a, b| {
-                        native::fp_lane(op, a, b)
-                    });
-            }
-            (Exec::Native, DpOp::Int(op)) => {
-                let prec = self.cfg.alu_precision;
-                let preds = if self.preds.configured() { Some(&self.preds) } else { None };
-                self.regs
-                    .lane_apply(waves, lanes, p.rd, p.ra, p.rb, preds, |a, b| {
-                        native::int_lane(op, a, b, prec)
-                    });
-            }
-            (Exec::Block(_), DpOp::Fp(_)) | (Exec::Block(_), DpOp::Int(_)) => {
-                self.exec_alu_block(pc, p.rd, p.ra, p.rb, dp, waves, lanes)?;
-            }
-            (_, DpOp::Dot { .. }) => unreachable!("dot is PlanKind::Dot"),
+        if matches!(self.exec, Exec::Native) {
+            self.native_alu_lanes(p, dp);
+        } else {
+            let waves = self.wave_tab[p.depth.bits() as usize];
+            let lanes = p.lanes as usize;
+            self.exec_alu_block(pc, p.rd, p.ra, p.rb, dp, waves, lanes)?;
         }
         self.hazards.write_reg(p.rd, start, REG_WINDOW);
-        self.cycles += waves as u64;
-        self.profile.record_slot(p.slot as usize, waves as u64);
-        self.seq.step();
         Ok(())
+    }
+
+    /// Monomorphic native ALU dispatch: one `lane_apply` instantiation
+    /// per datapath op, so the op match happens once per instruction —
+    /// not per lane — and each instantiated inner loop is straight-line
+    /// code over contiguous register rows that the autovectorizer can
+    /// chew on (`fp_lane`/`int_lane` fold to the single op's arithmetic).
+    fn native_alu_lanes(&mut self, p: &IssuePlan, dp: DpOp) {
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        let lanes = p.lanes as usize;
+        let prec = self.cfg.alu_precision;
+        let preds = if self.preds.configured() { Some(&self.preds) } else { None };
+        macro_rules! fp {
+            ($op:ident) => {
+                self.regs.lane_apply(waves, lanes, p.rd, p.ra, p.rb, preds, |a, b| {
+                    native::fp_lane(FpOp::$op, a, b)
+                })
+            };
+        }
+        macro_rules! int {
+            ($op:ident) => {
+                self.regs.lane_apply(waves, lanes, p.rd, p.ra, p.rb, preds, |a, b| {
+                    native::int_lane(IntOp::$op, a, b, prec)
+                })
+            };
+        }
+        match dp {
+            DpOp::Fp(op) => match op {
+                FpOp::FAdd => fp!(FAdd),
+                FpOp::FSub => fp!(FSub),
+                FpOp::FNeg => fp!(FNeg),
+                FpOp::FAbs => fp!(FAbs),
+                FpOp::FMul => fp!(FMul),
+                FpOp::FMax => fp!(FMax),
+                FpOp::FMin => fp!(FMin),
+                FpOp::FInvSqrt => fp!(FInvSqrt),
+            },
+            DpOp::Int(op) => match op {
+                IntOp::Add => int!(Add),
+                IntOp::Sub => int!(Sub),
+                IntOp::Neg => int!(Neg),
+                IntOp::Abs => int!(Abs),
+                IntOp::Mul16Lo => int!(Mul16Lo),
+                IntOp::Mul16Hi => int!(Mul16Hi),
+                IntOp::Mul24Lo => int!(Mul24Lo),
+                IntOp::Mul24Hi => int!(Mul24Hi),
+                IntOp::And => int!(And),
+                IntOp::Or => int!(Or),
+                IntOp::Xor => int!(Xor),
+                IntOp::Not => int!(Not),
+                IntOp::CNot => int!(CNot),
+                IntOp::Bvs => int!(Bvs),
+                IntOp::Shl => int!(Shl),
+                IntOp::ShrL => int!(ShrL),
+                IntOp::ShrA => int!(ShrA),
+                IntOp::Pop => int!(Pop),
+                IntOp::MaxS => int!(MaxS),
+                IntOp::MinS => int!(MinS),
+                IntOp::MaxU => int!(MaxU),
+                IntOp::MinU => int!(MinU),
+            },
+            DpOp::Dot { .. } => unreachable!("dot is PlanKind::Dot"),
+        }
     }
 
     /// LOD: 4 lanes per cycle through the shared-memory read ports.
     fn plan_load(&mut self, pc: usize, p: &IssuePlan) -> Result<(), SimError> {
         let waves = self.wave_tab[p.depth.bits() as usize];
-        let lanes = p.lanes as usize;
+        let charge = self.shared.load_cycles(waves * p.lanes as usize);
         let start = self.cycles;
+        self.exec_load_plan(pc, p, start, charge)?;
+        self.charge_step(p, charge);
+        Ok(())
+    }
+
+    /// LOD lane work + hazard bookkeeping at an explicit start cycle;
+    /// `charge` is the pre-resolved port charge for the selected lanes.
+    #[inline]
+    fn exec_load_plan(
+        &mut self,
+        pc: usize,
+        p: &IssuePlan,
+        start: u64,
+        charge: u64,
+    ) -> Result<(), SimError> {
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        let lanes = p.lanes as usize;
         self.hazards.read_reg(pc, p.ra, start);
-        let charge = self.shared.load_cycles(waves * lanes);
         let (ra, rd, imm) = (p.ra as usize, p.rd as usize, p.imm);
         let preds_on = self.preds.configured();
         let check = self.hazards.enabled();
@@ -521,20 +803,33 @@ impl Machine {
         // argument behind the window.
         self.hazards
             .write_reg(p.rd, start, REG_WINDOW + charge.saturating_sub(waves as u64));
-        self.cycles += charge;
-        self.profile.record_slot(p.slot as usize, charge);
-        self.seq.step();
         Ok(())
     }
 
     /// STO: 1 (DP) or 2 (QP) lanes per cycle through the write ports.
     fn plan_store(&mut self, pc: usize, p: &IssuePlan) -> Result<(), SimError> {
         let waves = self.wave_tab[p.depth.bits() as usize];
-        let lanes = p.lanes as usize;
+        let charge = self.shared.store_cycles(waves * p.lanes as usize);
         let start = self.cycles;
+        self.exec_store_plan(pc, p, start, charge)?;
+        self.charge_step(p, charge);
+        Ok(())
+    }
+
+    /// STO lane work + hazard bookkeeping at an explicit start cycle;
+    /// `charge` is the pre-resolved port charge for the selected lanes.
+    #[inline]
+    fn exec_store_plan(
+        &mut self,
+        pc: usize,
+        p: &IssuePlan,
+        start: u64,
+        charge: u64,
+    ) -> Result<(), SimError> {
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        let lanes = p.lanes as usize;
         self.hazards.read_reg(pc, p.ra, start);
         self.hazards.read_reg(pc, p.rd, start);
-        let charge = self.shared.store_cycles(waves * lanes);
         let (ra, rd, imm) = (p.ra as usize, p.rd as usize, p.imm);
         let preds_on = self.preds.configured();
         let ready = start + charge + MEM_WINDOW;
@@ -552,18 +847,30 @@ impl Machine {
                 Ok(())
             })
             .map_err(|f: super::shared_mem::MemFault| SimError::new(pc, f.to_string()))?;
-        self.cycles += charge;
-        self.profile.record_slot(p.slot as usize, charge);
-        self.seq.step();
         Ok(())
     }
 
     /// DOT / SUM extension core: operands stream one wavefront per cycle,
     /// the scalar result writes back to thread 0 after the core latency.
     fn plan_dot(&mut self, pc: usize, p: &IssuePlan, sum_only: bool) -> Result<(), SimError> {
+        let start = self.cycles;
+        self.exec_dot_plan(pc, p, sum_only, start)?;
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        self.charge_step(p, waves as u64);
+        Ok(())
+    }
+
+    /// DOT / SUM lane work + hazard bookkeeping at an explicit start.
+    #[inline]
+    fn exec_dot_plan(
+        &mut self,
+        pc: usize,
+        p: &IssuePlan,
+        sum_only: bool,
+        start: u64,
+    ) -> Result<(), SimError> {
         let waves = self.wave_tab[p.depth.bits() as usize];
         let lanes = p.lanes as usize;
-        let start = self.cycles;
         self.hazards.read_reg(pc, p.ra, start);
         if !sum_only {
             self.hazards.read_reg(pc, p.rb, start);
@@ -578,9 +885,6 @@ impl Machine {
         }
         self.hazards
             .write_reg(p.rd, start, waves as u64 + DOT_WINDOW);
-        self.cycles += waves as u64;
-        self.profile.record_slot(p.slot as usize, waves as u64);
-        self.seq.step();
         Ok(())
     }
 
@@ -592,9 +896,25 @@ impl Machine {
         cc: CondCode,
         ttype: TType,
     ) -> Result<(), SimError> {
+        let start = self.cycles;
+        self.exec_if_plan(pc, p, cc, ttype, start)?;
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        self.charge_step(p, waves as u64);
+        Ok(())
+    }
+
+    /// IF lane work + hazard bookkeeping at an explicit start cycle.
+    #[inline]
+    fn exec_if_plan(
+        &mut self,
+        pc: usize,
+        p: &IssuePlan,
+        cc: CondCode,
+        ttype: TType,
+        start: u64,
+    ) -> Result<(), SimError> {
         let waves = self.wave_tab[p.depth.bits() as usize];
         let lanes = p.lanes as usize;
-        let start = self.cycles;
         self.hazards.read_reg(pc, p.ra, start);
         self.hazards.read_reg(pc, p.rb, start);
         let (ra, rb) = (p.ra as usize, p.rb as usize);
@@ -604,14 +924,20 @@ impl Machine {
                 preds.push(t, cc.eval(ttype, row[ra], row[rb]))
             })
             .map_err(|e| SimError::new(pc, e.to_string()))?;
-        self.cycles += waves as u64;
-        self.profile.record_slot(p.slot as usize, waves as u64);
-        self.seq.step();
         Ok(())
     }
 
     /// ELSE / ENDIF: per-thread predicate-stack updates.
     fn plan_else_endif(&mut self, pc: usize, p: &IssuePlan) -> Result<(), SimError> {
+        self.exec_else_endif_plan(pc, p)?;
+        let waves = self.wave_tab[p.depth.bits() as usize];
+        self.charge_step(p, waves as u64);
+        Ok(())
+    }
+
+    /// ELSE / ENDIF predicate-stack updates (no hazard reads, no charge).
+    #[inline]
+    fn exec_else_endif_plan(&mut self, pc: usize, p: &IssuePlan) -> Result<(), SimError> {
         let waves = self.wave_tab[p.depth.bits() as usize];
         let lanes = p.lanes as usize;
         let invert = p.kind == PlanKind::Else;
@@ -626,9 +952,6 @@ impl Machine {
                 r.map_err(|e| SimError::new(pc, e.to_string()))?;
             }
         }
-        self.cycles += waves as u64;
-        self.profile.record_slot(p.slot as usize, waves as u64);
-        self.seq.step();
         Ok(())
     }
 
@@ -1435,6 +1758,116 @@ mod tests {
         m.load_program(p).unwrap();
         m.run(1_000).unwrap();
         assert_eq!(m.regs().read_thread(0, 1), 9, "stale plan executed");
+    }
+
+    const PARITY_SRC: &str = "
+        tdx r0
+        ldi r1, #8
+        nop
+        nop
+        nop
+        nop
+        nop
+        nop
+        if.lt.i32 r0, r1
+        ldi r2, #1
+        else
+        ldi r2, #2
+        endif
+        [w16,dhalf] add.i32 r3, r0, r1
+        lod r4, (r0)+0
+        sto r4, (r0)+512
+        dot r5, r1, r1
+        stop
+    ";
+
+    fn state(m: &Machine) -> Vec<u32> {
+        (0..512)
+            .flat_map(|t| (0..8u8).map(move |r| (t, r)))
+            .map(|(t, r)| m.regs().read_thread(t, r))
+            .collect()
+    }
+
+    #[test]
+    fn superplan_path_matches_per_instruction_plan_path() {
+        let mut fused = machine();
+        let sf = run_src(&mut fused, PARITY_SRC);
+        assert!(fused.trace_stats().fused_retired > 0, "traces actually ran");
+
+        let mut plain = machine();
+        plain.set_superplans(false);
+        let sp = run_src(&mut plain, PARITY_SRC);
+        assert_eq!(plain.trace_stats().fused_retired, 0);
+
+        assert_eq!(sf, sp);
+        assert_eq!(state(&fused), state(&plain));
+    }
+
+    #[test]
+    fn superplan_trace_stats_cover_the_program() {
+        let mut m = machine();
+        run_src(&mut m, PARITY_SRC);
+        let ts = m.trace_stats();
+        assert!(ts.traces >= 1);
+        assert!(ts.fused_pcs >= 2);
+        assert!(ts.mean_trace_len >= 2.0);
+        assert!(ts.retired > 0);
+        assert!(ts.fused_retired <= ts.retired);
+        assert!(ts.dynamic_fused_pct() > 0.0);
+        // Everything except STOP is one straight-line run here.
+        assert_eq!(ts.fused_pcs, ts.program_pcs - 1);
+    }
+
+    #[test]
+    fn budget_stop_mid_trace_matches_per_instruction_path() {
+        // Sweep budgets across the whole run: every stop point — including
+        // ones that land inside a fused trace — must leave identical
+        // partial stats and architectural state in both modes.
+        let total = {
+            let mut m = machine();
+            run_src(&mut m, PARITY_SRC).cycles
+        };
+        for budget in [1, 33, 64, 65, 100, 170, 200, 300, total - 9] {
+            let mut fused = machine();
+            let pf = assemble(PARITY_SRC, fused.cfg.word_layout()).unwrap();
+            fused.load_program(pf).unwrap();
+            let ef = fused.run(budget).unwrap_err();
+
+            let mut plain = machine();
+            plain.set_superplans(false);
+            let pp = assemble(PARITY_SRC, plain.cfg.word_layout()).unwrap();
+            plain.load_program(pp).unwrap();
+            let ep = plain.run(budget).unwrap_err();
+
+            assert_eq!(ef, ep, "budget {budget}");
+            let partial = ef.partial.expect("budget stop keeps progress");
+            assert_eq!(fused.stats_snapshot(), *partial, "budget {budget}");
+            assert_eq!(state(&fused), state(&plain), "budget {budget}");
+        }
+    }
+
+    #[test]
+    fn reload_keeps_program_and_resets_state() {
+        let mut m = machine();
+        assert!(m.reload().is_err(), "no program loaded yet");
+        let first = run_src(&mut m, "tdx r0\nadd.i32 r1, r0, r0\nstop\n");
+        m.reload().unwrap();
+        assert_eq!(m.cycles(), 0);
+        assert_eq!(m.regs().read_thread(7, 0), 0, "registers reset");
+        let second = m.run(10_000_000).unwrap();
+        assert_eq!(first, second, "reused program replays identically");
+        assert_eq!(m.regs().read_thread(7, 1), 14);
+    }
+
+    #[test]
+    fn set_threads_recompiles_superplan_charges() {
+        let mut m = machine();
+        let p = assemble("tdx r0\nadd.i32 r1, r0, r0\nstop\n", m.cfg.word_layout()).unwrap();
+        m.load_program(p).unwrap();
+        m.set_threads(128).unwrap(); // 8 wavefronts
+        let stats = m.run(1_000).unwrap();
+        assert_eq!(stats.cycles, 8 + 8 + 1 + 8);
+        assert!(m.trace_stats().fused_retired > 0);
     }
 
     #[test]

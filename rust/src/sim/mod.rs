@@ -18,6 +18,6 @@ pub mod sequencer;
 pub mod shared_mem;
 
 pub use config::{EgpuConfig, FeatureSet, IntAluClass, MemoryMode};
-pub use machine::{Machine, RunStats, SimError, PIPELINE_DEPTH};
-pub use plan::{IssuePlan, PlanKind};
+pub use machine::{Machine, RunStats, SimError, TraceStats, PIPELINE_DEPTH};
+pub use plan::{IssuePlan, PlanKind, Superplan, SuperplanProgram, TraceOp};
 pub use profiler::Profile;

@@ -24,6 +24,9 @@ use crate::datapath::{classify, DpOp};
 use crate::isa::opcode::OperandShape;
 use crate::isa::{CondCode, DepthSel, Instr, Opcode, TType};
 
+use super::profiler::Profile;
+use super::shared_mem::SharedMem;
+
 /// What the execute stage does for one instruction, with every decode
 /// decision already made.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -145,6 +148,191 @@ pub fn compile(instrs: &[Instr]) -> Result<Vec<IssuePlan>, PlanError> {
         .collect()
 }
 
+// ---------------------------------------------------------------------
+// Superplans: fused straight-line traces.
+//
+// A trace is a maximal run of fusable plans (everything except the
+// sequencer ops) that no branch lands inside. Its per-op cycle charges —
+// constant once the runtime thread count and memory mode are fixed — are
+// resolved into prefix offsets at compile time, so the machine executes
+// the whole run with per-op lane work and hazard bookkeeping at explicit
+// start cycles, then applies the trace's total charge, profiler delta and
+// retire count once. Per-instruction dispatch survives only at trace
+// boundaries (control flow) and when the cycle budget cannot cover the
+// trace's last issue slot.
+// ---------------------------------------------------------------------
+
+/// Minimum run length worth fusing; a 1-op "trace" is just dispatch.
+pub const MIN_TRACE_LEN: usize = 2;
+
+/// `trace_at` sentinel: no trace leads at this pc.
+const NO_TRACE: u32 = u32::MAX;
+
+/// One fused instruction: the issue plan plus its cycle charge and issue
+/// offset inside the trace, resolved once at superplan-compile time.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceOp {
+    pub plan: IssuePlan,
+    /// Cycle charge at the compiled thread configuration.
+    pub charge: u64,
+    /// Issue offset from the trace start (prefix sum of prior charges;
+    /// strictly increasing because every charge is ≥ 1).
+    pub offset: u64,
+}
+
+/// A fused straight-line trace of [`TraceOp`]s.
+#[derive(Debug, Clone)]
+pub struct Superplan {
+    /// pc of the trace leader.
+    pub start_pc: usize,
+    /// Index of the leader's op in [`SuperplanProgram::ops`].
+    pub first_op: usize,
+    /// Fused instruction count (≥ [`MIN_TRACE_LEN`]).
+    pub len: usize,
+    /// Total cycle charge of the whole trace.
+    pub total_cycles: u64,
+    /// Issue offset of the final op. The per-instruction budget check
+    /// (`cycles >= max` *before* issue) passes for every op in the trace
+    /// iff `cycles + last_offset < max`, so the machine can prove the
+    /// whole trace budget-clean with one comparison and otherwise fall
+    /// back to per-instruction stepping for an exact mid-trace stop.
+    pub last_offset: u64,
+    /// Precomputed profiler delta (slot counts + cycles) for the whole
+    /// trace; merged once on completion, bit-identical to per-op
+    /// `record_slot` calls.
+    pub prof: Profile,
+}
+
+/// All fused traces of one program at one thread configuration.
+#[derive(Debug, Clone, Default)]
+pub struct SuperplanProgram {
+    /// Every trace's ops, flattened (indexed via [`Superplan::first_op`]).
+    pub ops: Vec<TraceOp>,
+    pub traces: Vec<Superplan>,
+    /// pc → trace index for leaders, [`NO_TRACE`] elsewhere. Mid-trace
+    /// pcs deliberately have no entry: entering a run mid-way (branch
+    /// fallback, budget stop resume) uses per-instruction dispatch.
+    trace_at: Vec<u32>,
+}
+
+impl SuperplanProgram {
+    /// Trace led by `pc`, if any.
+    #[inline]
+    pub fn trace_index(&self, pc: usize) -> Option<usize> {
+        match self.trace_at.get(pc) {
+            Some(&t) if t != NO_TRACE => Some(t as usize),
+            _ => None,
+        }
+    }
+
+    /// Mean fused-trace length (static).
+    pub fn mean_trace_len(&self) -> f64 {
+        if self.traces.is_empty() {
+            0.0
+        } else {
+            self.ops.len() as f64 / self.traces.len() as f64
+        }
+    }
+}
+
+/// Can this plan live inside a trace? Sequencer ops (control transfers,
+/// loop bookkeeping, STOP) are trace boundaries; everything else —
+/// including predicate ops, whose gating is per-lane state, and NOP delay
+/// slots, whose hazard-fence role is preserved by the per-op issue
+/// offsets — fuses.
+#[inline]
+fn fusable(kind: PlanKind) -> bool {
+    !matches!(
+        kind,
+        PlanKind::Jmp
+            | PlanKind::Jsr
+            | PlanKind::Rts
+            | PlanKind::Loop
+            | PlanKind::Init
+            | PlanKind::Stop
+    )
+}
+
+/// Cycle charge of one plan at a fixed thread configuration — the same
+/// arithmetic the per-instruction path performs at issue, hoisted to
+/// compile time (`wave_tab` is the machine's depth-selector resolution,
+/// `shared` carries the memory mode's port widths).
+fn charge_of(p: &IssuePlan, wave_tab: &[usize; 4], shared: &SharedMem) -> u64 {
+    let waves = wave_tab[p.depth.bits() as usize];
+    let lanes = p.lanes as usize;
+    match p.kind {
+        PlanKind::Nop => 1,
+        PlanKind::Load => shared.load_cycles(waves * lanes),
+        PlanKind::Store => shared.store_cycles(waves * lanes),
+        _ => waves as u64,
+    }
+}
+
+/// Partition a plan stream into fused traces. Leaders start at pc 0,
+/// after every sequencer op, and at every branch/call/loop target (a
+/// landing pc must begin its own trace so control flow re-enters fused
+/// execution immediately). Runs shorter than [`MIN_TRACE_LEN`] are left
+/// to per-instruction dispatch.
+pub fn compile_superplans(
+    plans: &[IssuePlan],
+    wave_tab: &[usize; 4],
+    shared: &SharedMem,
+) -> SuperplanProgram {
+    let mut is_target = vec![false; plans.len()];
+    for p in plans {
+        if matches!(p.kind, PlanKind::Jmp | PlanKind::Jsr | PlanKind::Loop) {
+            if let Some(t) = is_target.get_mut(p.imm as usize) {
+                *t = true;
+            }
+        }
+    }
+    let mut sp = SuperplanProgram {
+        ops: Vec::new(),
+        traces: Vec::new(),
+        trace_at: vec![NO_TRACE; plans.len()],
+    };
+    let mut pc = 0usize;
+    while pc < plans.len() {
+        if !fusable(plans[pc].kind) {
+            pc += 1;
+            continue;
+        }
+        let start = pc;
+        let mut end = pc + 1;
+        while end < plans.len() && fusable(plans[end].kind) && !is_target[end] {
+            end += 1;
+        }
+        if end - start >= MIN_TRACE_LEN {
+            let first_op = sp.ops.len();
+            let mut offset = 0u64;
+            let mut last_offset = 0u64;
+            let mut prof = Profile::new();
+            for p in &plans[start..end] {
+                let charge = charge_of(p, wave_tab, shared);
+                sp.ops.push(TraceOp {
+                    plan: *p,
+                    charge,
+                    offset,
+                });
+                prof.record_slot(p.slot as usize, charge);
+                last_offset = offset;
+                offset += charge;
+            }
+            sp.trace_at[start] = sp.traces.len() as u32;
+            sp.traces.push(Superplan {
+                start_pc: start,
+                first_op,
+                len: end - start,
+                total_cycles: offset,
+                last_offset,
+                prof,
+            });
+        }
+        pc = end;
+    }
+    sp
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +394,90 @@ mod tests {
         i.imm = 6; // unallocated cc bits
         assert!(compile_one(&i).is_err());
         assert!(compile(&[Instr::nop(), i]).unwrap_err().pc == 1);
+    }
+
+    fn instr(op: Opcode) -> Instr {
+        let mut i = Instr::new(op);
+        if op == Opcode::If {
+            i.imm = CondCode::Lt.bits() as u16;
+        }
+        i
+    }
+
+    #[test]
+    fn superplans_split_at_control_and_branch_targets() {
+        // 0:tdx 1:add 2:add 3:jmp→6 4:nop 5:nop 6:add 7:add 8:stop
+        let mut jmp = instr(Opcode::Jmp);
+        jmp.imm = 6;
+        let instrs = [
+            instr(Opcode::TdX),
+            instr(Opcode::Add),
+            instr(Opcode::Add),
+            jmp,
+            instr(Opcode::Nop),
+            instr(Opcode::Nop),
+            instr(Opcode::Add),
+            instr(Opcode::Add),
+            instr(Opcode::Stop),
+        ];
+        let plans = compile(&instrs).unwrap();
+        let wave_tab = [1usize, 32, 16, 8];
+        let shared = SharedMem::new(4096, crate::sim::MemoryMode::Dp);
+        let sp = compile_superplans(&plans, &wave_tab, &shared);
+        assert_eq!(sp.traces.len(), 3);
+        assert_eq!(sp.ops.len(), 7);
+        assert_eq!(sp.trace_index(0), Some(0));
+        assert_eq!(sp.trace_index(1), None, "mid-trace pc has no leader entry");
+        assert_eq!(sp.trace_index(3), None, "control op never leads a trace");
+        assert_eq!(sp.trace_index(4), Some(1));
+        assert_eq!(sp.trace_index(6), Some(2), "branch target starts its own trace");
+        assert_eq!(sp.traces[0].len, 3);
+        assert_eq!(sp.traces[1].len, 2);
+        assert_eq!(sp.traces[2].len, 2);
+        assert!((sp.mean_trace_len() - 7.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn superplan_offsets_are_prefix_sums_of_charges() {
+        let instrs = [
+            instr(Opcode::Nop),
+            instr(Opcode::Add),
+            instr(Opcode::Lod),
+            instr(Opcode::Sto),
+            instr(Opcode::Stop),
+        ];
+        let plans = compile(&instrs).unwrap();
+        let wave_tab = [1usize, 32, 16, 8];
+        let shared = SharedMem::new(4096, crate::sim::MemoryMode::Dp);
+        let sp = compile_superplans(&plans, &wave_tab, &shared);
+        assert_eq!(sp.traces.len(), 1);
+        let tr = &sp.traces[0];
+        assert_eq!(tr.len, 4);
+        let ops = &sp.ops[tr.first_op..tr.first_op + tr.len];
+        assert_eq!(ops[0].charge, 1, "NOP charges one cycle");
+        let mut offset = 0;
+        for o in ops {
+            assert_eq!(o.offset, offset);
+            assert!(o.charge >= 1);
+            offset += o.charge;
+        }
+        assert_eq!(tr.total_cycles, offset);
+        assert_eq!(tr.last_offset, ops[tr.len - 1].offset);
+        // The profiler delta counts exactly the fused ops and their
+        // charges.
+        assert_eq!(tr.prof.total_instructions(), tr.len as u64);
+        assert_eq!(tr.prof.total_cycles(), tr.total_cycles);
+    }
+
+    #[test]
+    fn short_runs_are_not_fused() {
+        // A lone fusable op between control ops stays per-instruction.
+        let instrs = [instr(Opcode::Add), instr(Opcode::Stop), instr(Opcode::Nop)];
+        let plans = compile(&instrs).unwrap();
+        let shared = SharedMem::new(64, crate::sim::MemoryMode::Dp);
+        let sp = compile_superplans(&plans, &[1, 2, 1, 1], &shared);
+        assert_eq!(sp.traces.len(), 0);
+        assert_eq!(sp.trace_index(0), None);
     }
 
     #[test]

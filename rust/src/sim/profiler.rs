@@ -71,6 +71,17 @@ impl Profile {
         }
     }
 
+    /// Accumulate another profile into this one. Besides cross-run
+    /// aggregation, this is how the superplan fast path charges a whole
+    /// fused trace in one step: `compile_superplans` pre-merges each
+    /// trace's per-group counts/cycles into `Superplan::prof`, and a
+    /// completed trace merges that instead of calling [`record_slot`]
+    /// per op. Addition is commutative and the per-op `record_slot`
+    /// replay on a mid-trace stop charges the identical amounts, so the
+    /// profile stays bit-identical across fused, per-instruction, and
+    /// reference execution (`rust/tests/superplan_parity.rs`).
+    ///
+    /// [`record_slot`]: Profile::record_slot
     pub fn merge(&mut self, other: &Profile) {
         for i in 0..self.counts.len() {
             self.counts[i] += other.counts[i];

@@ -85,6 +85,13 @@ impl RegFile {
     /// (the simulator's dominant cost, see EXPERIMENTS.md §Perf).
     /// `preds` is the write-enable gate; `None` (predicates not
     /// configured) selects an ungated inner loop with no per-lane branch.
+    ///
+    /// The superplan executor (`Machine::native_alu_lanes`) instantiates
+    /// this once per concrete ALU op, so each closure monomorphizes into
+    /// its own branch-free loop over contiguous SoA rows — the shape
+    /// LLVM autovectorizes. Keep `f` free of captures with interior
+    /// indirection (no `dyn`, no per-lane table lookups) or that
+    /// property is lost silently.
     #[inline]
     pub fn lane_apply(
         &mut self,

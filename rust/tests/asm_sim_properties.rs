@@ -12,6 +12,9 @@
 //!    reference interpreter (`Machine::run_reference`) produce
 //!    bit-identical registers/shared memory, identical cycle counts and
 //!    identical hazard totals
+//!  - the superplan (fused-trace) path agrees with both of those on
+//!    predicated, control-heavy and budget-stopped random programs,
+//!    including partial stats when the budget expires mid-trace
 //!  - dynamic narrowing touches exactly the selected thread prefix
 //!  - random configurations either validate and boot, or error cleanly
 
@@ -196,6 +199,154 @@ fn random_mixed_source(rng: &mut Rng, len: usize) -> String {
     }
     src.push_str("stop\n");
     src
+}
+
+/// Random control-heavy source: a counted `init`/`loop` body of random
+/// straight-line ops with embedded `jsr` calls, a `jmp` over dead code,
+/// and a subroutine — every superplan boundary kind (control
+/// transfers, branch targets) in one program.
+fn random_control_source(rng: &mut Rng, len: usize) -> String {
+    let mut src = String::from("tdx r0\nldi r1, #3\n");
+    src.push_str(&format!("init #{}\n", 1 + rng.below(4)));
+    src.push_str("body:\n");
+    for _ in 0..len {
+        let rd = 1 + rng.below(7);
+        let ra = rng.below(8);
+        let rb = rng.below(8);
+        match rng.below(6) {
+            0 => src.push_str(&format!("add.i32 r{rd}, r{ra}, r{rb}\n")),
+            1 => src.push_str(&format!("fadd r{rd}, r{ra}, r{rb}\n")),
+            2 => src.push_str(&format!("ldi r{rd}, #{}\n", rng.range_i64(-64, 64))),
+            3 => src.push_str(&format!("lod r{rd}, (r0)+{}\n", rng.below(16) * 8)),
+            4 => src.push_str(&format!("sto r{rd}, (r0)+{}\n", 1024 + rng.below(16) * 8)),
+            _ => src.push_str("jsr sub\n"),
+        }
+    }
+    src.push_str("loop body\n");
+    src.push_str("jmp end\n");
+    // Dead by fallthrough, but a fusable run the compiler still traces.
+    src.push_str("add.i32 r1, r1, r1\nadd.i32 r2, r2, r2\n");
+    src.push_str("sub:\nadd.i32 r3, r0, r1\nxor r4, r3, r0\nrts\n");
+    src.push_str("end:\nadd.i32 r5, r1, r2\nstop\n");
+    src
+}
+
+#[test]
+fn superplan_path_matches_plan_path_and_reference() {
+    // Three-way parity: the fused superplan path (`run` default), the
+    // per-instruction plan path (`set_superplans(false)`) and the
+    // reference interpreter agree bit-for-bit on registers, shared
+    // memory, cycles, hazards and the whole profile.
+    let mut rng = Rng::new(0x5B9A);
+    let mut cfg = EgpuConfig::default();
+    cfg.dot_core = true;
+    cfg.sfu = true;
+    for case in 0..60 {
+        let src = match case % 3 {
+            0 => random_program_source(&mut rng, 25),
+            1 => random_mixed_source(&mut rng, 30),
+            _ => random_control_source(&mut rng, 12),
+        };
+        let prog = assemble(&src, cfg.word_layout()).unwrap_or_else(|e| panic!("{e}\n{src}"));
+
+        let mut fused = Machine::new(cfg.clone()).unwrap();
+        fused.load_program(prog.clone()).unwrap();
+        let sf = fused
+            .run(10_000_000)
+            .unwrap_or_else(|e| panic!("fused: {e}\n{src}"));
+
+        let mut plan = Machine::new(cfg.clone()).unwrap();
+        plan.load_program(prog.clone()).unwrap();
+        plan.set_superplans(false);
+        let sp = plan
+            .run(10_000_000)
+            .unwrap_or_else(|e| panic!("plan: {e}\n{src}"));
+
+        let mut reference = Machine::new(cfg.clone()).unwrap();
+        reference.load_program(prog).unwrap();
+        let sr = reference
+            .run_reference(10_000_000)
+            .unwrap_or_else(|e| panic!("reference: {e}\n{src}"));
+
+        let f = machine_state(&fused, sf);
+        assert_eq!(
+            f,
+            machine_state(&plan, sp),
+            "case {case}: fused vs per-instruction plan\n{src}"
+        );
+        assert_eq!(
+            f,
+            machine_state(&reference, sr),
+            "case {case}: fused vs reference\n{src}"
+        );
+    }
+}
+
+#[test]
+fn budget_stops_mid_trace_match_plan_path_and_reference() {
+    // A cycle budget can expire in the middle of a fused trace: the
+    // fused path must fall back to per-instruction stepping and stop at
+    // exactly the same pc, with exactly the same partial stats and
+    // architectural state, as the unfused paths.
+    let mut rng = Rng::new(0xB06E7);
+    let mut cfg = EgpuConfig::default();
+    cfg.dot_core = true;
+    cfg.sfu = true;
+    for case in 0..12 {
+        let src = match case % 3 {
+            0 => random_program_source(&mut rng, 20),
+            1 => random_mixed_source(&mut rng, 24),
+            _ => random_control_source(&mut rng, 10),
+        };
+        let prog = assemble(&src, cfg.word_layout()).unwrap_or_else(|e| panic!("{e}\n{src}"));
+        let total = {
+            let mut m = Machine::new(cfg.clone()).unwrap();
+            m.load_program(prog.clone()).unwrap();
+            m.run(u64::MAX).unwrap_or_else(|e| panic!("{e}\n{src}")).cycles
+        };
+        for budget in [
+            1u64,
+            7,
+            total / 5 + 1,
+            total / 2 + 1,
+            total.saturating_sub(PIPELINE_DEPTH + 1).max(1),
+        ] {
+            let run_mode = |mode: u8| {
+                let mut m = Machine::new(cfg.clone()).unwrap();
+                m.load_program(prog.clone()).unwrap();
+                if mode == 1 {
+                    m.set_superplans(false);
+                }
+                let r = if mode == 2 {
+                    m.run_reference(budget)
+                } else {
+                    m.run(budget)
+                };
+                match r {
+                    Ok(stats) => (None, machine_state(&m, stats)),
+                    Err(e) => {
+                        let partial = e
+                            .partial
+                            .as_deref()
+                            .expect("cycle-limit stops carry partial stats")
+                            .clone();
+                        (Some((e.pc, e.message.clone())), machine_state(&m, partial))
+                    }
+                }
+            };
+            let fused = run_mode(0);
+            assert_eq!(
+                fused,
+                run_mode(1),
+                "case {case} budget {budget}: fused vs per-instruction plan\n{src}"
+            );
+            assert_eq!(
+                fused,
+                run_mode(2),
+                "case {case} budget {budget}: fused vs reference\n{src}"
+            );
+        }
+    }
 }
 
 #[test]

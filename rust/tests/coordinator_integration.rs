@@ -104,6 +104,69 @@ fn queue_of_many_jobs_is_stable() {
 }
 
 #[test]
+fn resident_kernel_reuse_skips_reassembly_and_stays_correct() {
+    // The same shared kernel submitted repeatedly to a single core:
+    // only the first dispatch assembles and loads the program; every
+    // later job reuses the resident machine via an in-place reset. The
+    // reset must be complete — each job sees fresh inputs, never a
+    // predecessor's registers or shared memory.
+    let mut c = Coordinator::new(cfg(), 1).unwrap();
+    let n = 64;
+    let kernel = std::sync::Arc::new(reduction::reduction(n));
+    let mut wants = Vec::new();
+    for i in 0..4 {
+        let data: Vec<f32> = (0..n).map(|j| (i * n + j) as f32 * 0.125).collect();
+        wants.push(data.iter().sum::<f32>());
+        c.submit(Job::new_shared(kernel.clone()).load(0, f32_bits(&data)).unload(n, 1));
+    }
+    let rs = c.run_all().unwrap();
+    assert_eq!(rs.len(), 4);
+    for (r, want) in rs.iter().zip(wants) {
+        let got = f32::from_bits(r.outputs[0][0]);
+        assert!(
+            (got - want).abs() < want.abs() * 1e-4 + 1e-2,
+            "stale machine state leaked into a reused run: {got} vs {want}"
+        );
+    }
+    let reuse = c.reuse_stats();
+    assert_eq!(reuse.misses, 1, "one program load for four jobs");
+    assert_eq!(reuse.hits, 3);
+
+    // A different kernel evicts the resident program; returning to the
+    // first one loads again (the tracker keeps one kernel per core).
+    c.submit(Job::new(transpose::transpose(32)).load(0, (0..32 * 32).collect()));
+    c.submit(Job::new_shared(kernel.clone()).load(0, f32_bits(&vec![1.0; n])).unload(n, 1));
+    c.run_all().unwrap();
+    let after = c.reuse_stats();
+    assert_eq!(after.misses, 3, "kernel switch must reload");
+    assert_eq!(after.hits, 3);
+}
+
+#[test]
+fn reuse_counters_are_dispatch_mode_invariant() {
+    // Submission-order reuse decisions make the counters part of the
+    // deterministic observable surface: parallel dispatch must report
+    // exactly the sequential numbers.
+    let run = |parallel: bool| {
+        let mut c = Coordinator::new(cfg(), 2).unwrap();
+        c.set_parallel(parallel);
+        let n = 64;
+        let kernel = std::sync::Arc::new(reduction::reduction(n));
+        for i in 0..6 {
+            let data: Vec<f32> = (0..n).map(|j| (i + j) as f32).collect();
+            c.submit(Job::new_shared(kernel.clone()).load(0, f32_bits(&data)).unload(n, 1));
+        }
+        let rs = c.run_all().unwrap();
+        assert_eq!(rs.len(), 6);
+        c.reuse_stats()
+    };
+    let seq = run(false);
+    assert_eq!(seq, run(true));
+    assert_eq!(seq.hits + seq.misses, 6);
+    assert!(seq.misses <= 2, "at most one load per core");
+}
+
+#[test]
 fn failure_injection_bad_kernel_surfaces_error() {
     // A kernel whose program faults (OOB store) must return Err from
     // run_all, not corrupt the coordinator. Built from raw asm: compiled

@@ -7,7 +7,9 @@
 //!     queue without bound, and every shed request is reported;
 //! (c) deadline/priority ordering is honored within a batch window;
 //! (d) steady-state serving performs exactly one compile per
-//!     `(spec, config fingerprint)` through the shared `KernelCache`.
+//!     `(spec, config fingerprint)` through the shared `KernelCache`;
+//! (e) steady-state serving reuses each core's resident machine — a
+//!     repeat round adds machine-reuse hits only, never reloads.
 
 use egpu::api::{Gpu, KernelSpec, Server, ShedReason};
 use egpu::harness::loadgen::{demo_requests, LoadSpec};
@@ -262,6 +264,72 @@ fn cache_stats_surface_on_gpu_and_array() {
     let s = array.cache_stats();
     assert_eq!(s.compiles, 1, "homogeneous array: one fingerprint, one compile");
     assert!(s.hits >= 1);
+}
+
+// ---------------------------------------------------------------
+// (e) Machine reuse: steady state re-runs resident programs in place.
+// ---------------------------------------------------------------
+
+#[test]
+fn steady_state_reuses_resident_machines() {
+    // A single-spec workload: after each core's first job, every later
+    // job placed on that core finds the program already resident and is
+    // served by an in-place machine reset — no reassembly, no regfile
+    // or shared-memory reallocation.
+    let mut server = Server::builder().build().unwrap();
+    let cores = server.core_utilization().len() as u64;
+    let n = 64usize;
+    let round = |count: usize| -> Vec<Request> {
+        (0..count)
+            .map(|i| {
+                let data: Vec<f32> = (0..n).map(|j| (i + j) as f32 * 0.5).collect();
+                Request::new(KernelSpec::Reduction { n })
+                    .load(0, f32_bits(&data))
+                    .unload(n, 1)
+                    .at(i as u64 * 400)
+            })
+            .collect()
+    };
+
+    let first = server.serve(round(24)).unwrap();
+    assert_eq!(first.results.len(), 24);
+    let warm = server.reuse_stats();
+    // Every served job made exactly one reuse decision...
+    assert_eq!(warm.hits + warm.misses, 24);
+    // ...and only the first job per core could miss.
+    assert!(
+        warm.misses <= cores,
+        "misses {} exceed the core count {cores}",
+        warm.misses
+    );
+    assert!(warm.hits > warm.misses, "reuse must dominate a one-spec workload");
+
+    // A second identical round: every core already holds the kernel, so
+    // steady-state serving adds only hits — zero program reloads per
+    // (core, fingerprint).
+    server.reset_timeline();
+    let second = server.serve(round(24)).unwrap();
+    assert_eq!(second.results.len(), 24);
+    let steady = server.reuse_stats();
+    assert_eq!(
+        steady.misses, warm.misses,
+        "steady state must not reload programs"
+    );
+    assert_eq!(steady.hits, warm.hits + 24);
+}
+
+#[test]
+fn reuse_counters_match_between_sequential_and_parallel() {
+    // The reuse decision is made in submission order in both dispatch
+    // paths, so the counters — like every other observable — are
+    // bit-identical across them.
+    let run = |sequential: bool| {
+        let mut server = Server::builder().sequential(sequential).build().unwrap();
+        let report = server.serve(trace(0xCAFE, 30)).unwrap();
+        assert!(report.telemetry.completed > 0);
+        server.reuse_stats()
+    };
+    assert_eq!(run(true), run(false));
 }
 
 // ---------------------------------------------------------------

@@ -1,0 +1,167 @@
+//! Three-way execution-mode parity on the demo kernel suite.
+//!
+//! Every demo kernel (reduction, transpose, mmm, bitonic, fft, fft4)
+//! runs through all three executors —
+//!
+//! 1. the fused superplan path (`run` with superplans on, the default),
+//! 2. the per-instruction plan path (`run` after `set_superplans(false)`),
+//! 3. the decode-per-issue reference (`run_reference`),
+//!
+//! — on identical inputs, and the results must be bit-for-bit equal:
+//! `RunStats` (modeled cycles, retired instructions, hazard totals, and
+//! the full per-`Group` `Profile`), every architectural register, and
+//! all of shared memory. This is the contract that lets the superplan
+//! compiler fuse basic blocks aggressively: it may change wall-clock
+//! speed, never observable behavior.
+
+use egpu::kernels::{bitonic, f32_bits, fft, fft4, mmm, reduction, transpose, Kernel};
+use egpu::sim::{EgpuConfig, Machine, MemoryMode, Profile, RunStats};
+
+/// Deterministic pseudo-random inputs (no external RNG dependency; the
+/// constants are from the classic LCG in Numerical Recipes).
+struct Lcg(u32);
+
+impl Lcg {
+    fn next_u32(&mut self) -> u32 {
+        self.0 = self.0.wrapping_mul(1664525).wrapping_add(1013904223);
+        self.0
+    }
+
+    fn f32_unit(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 / (1u32 << 24) as f32 * 2.0 - 1.0
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Mode {
+    Fused,
+    Plan,
+    Reference,
+}
+
+/// Run `kernel` under `mode` on a fresh machine with `init` preloaded
+/// into shared memory; return stats + full architectural state.
+fn run_mode(
+    kernel: &Kernel,
+    cfg: &EgpuConfig,
+    init: &[(usize, Vec<u32>)],
+    mode: Mode,
+) -> (RunStats, Vec<u32>, Vec<u32>) {
+    let mut m = Machine::new(cfg.clone()).unwrap();
+    let prog = kernel.assemble(cfg).unwrap();
+    m.load_program(prog).unwrap();
+    m.set_threads(kernel.threads).unwrap();
+    m.set_dim_x(kernel.dim_x).unwrap();
+    for (base, data) in init {
+        m.shared_mut().write_block(*base, data);
+    }
+    let stats = match mode {
+        Mode::Fused => m.run(u64::MAX).unwrap(),
+        Mode::Plan => {
+            m.set_superplans(false);
+            m.run(u64::MAX).unwrap()
+        }
+        Mode::Reference => m.run_reference(u64::MAX).unwrap(),
+    };
+    let regs: Vec<u32> = (0..kernel.threads)
+        .flat_map(|t| (0..16u8).map(move |r| (t, r)))
+        .map(|(t, r)| m.regs().read_thread(t, r))
+        .collect();
+    let mem = m.shared().read_block(0, cfg.shared_words()).to_vec();
+    (stats, regs, mem)
+}
+
+/// The demo suite with per-kernel configs and inputs, sized to keep the
+/// three-way sweep fast while still exercising loops, subroutines,
+/// predication, and both shared-memory port models the kernels use.
+fn demo_cases() -> Vec<(Kernel, EgpuConfig, Vec<(usize, Vec<u32>)>)> {
+    let mut rng = Lcg(0x5EED_7A11);
+    let base = EgpuConfig::benchmark(MemoryMode::Dp, false);
+    let pred = EgpuConfig::benchmark_predicated(MemoryMode::Dp);
+
+    let n = 128usize;
+    let vecd = f32_bits(&(0..n).map(|_| rng.f32_unit()).collect::<Vec<_>>());
+    let mat: Vec<u32> = (0..n * n).map(|_| rng.next_u32()).collect();
+    let m = 64usize;
+    let a = f32_bits(&(0..m * m).map(|_| rng.f32_unit()).collect::<Vec<_>>());
+    let b = f32_bits(&(0..m * m).map(|_| rng.f32_unit()).collect::<Vec<_>>());
+    let sortd: Vec<u32> = (0..256).map(|_| rng.next_u32()).collect();
+    let re: Vec<f32> = (0..256).map(|_| rng.f32_unit()).collect();
+    let im = vec![0f32; 256];
+
+    vec![
+        (reduction::reduction(n), base.clone(), vec![(0, vecd)]),
+        (transpose::transpose(n), base.clone(), vec![(0, mat)]),
+        (
+            mmm::mmm(m),
+            mmm::config(m, MemoryMode::Dp, false),
+            vec![(0, a), (m * m, b)],
+        ),
+        (bitonic::bitonic(256), pred, vec![(0, sortd)]),
+        (fft::fft(256), base.clone(), fft::shared_init(&re, &im)),
+        (fft4::fft4(256), base, fft4::shared_init(&re, &im)),
+    ]
+}
+
+#[test]
+fn demo_kernels_bit_identical_across_all_three_executors() {
+    for (kernel, cfg, init) in demo_cases() {
+        let fused = run_mode(&kernel, &cfg, &init, Mode::Fused);
+        for mode in [Mode::Plan, Mode::Reference] {
+            let other = run_mode(&kernel, &cfg, &init, mode);
+            // Profile first: a per-`Group` count or cycle drift under
+            // fusion is the most likely regression and deserves its own
+            // readable failure.
+            assert_profiles_equal(&kernel.name, mode, &fused.0.profile, &other.0.profile);
+            assert_eq!(
+                fused.0, other.0,
+                "{}: RunStats diverge between fused and {:?}",
+                kernel.name, mode
+            );
+            assert_eq!(
+                fused.1, other.1,
+                "{}: registers diverge between fused and {:?}",
+                kernel.name, mode
+            );
+            assert_eq!(
+                fused.2, other.2,
+                "{}: shared memory diverges between fused and {:?}",
+                kernel.name, mode
+            );
+        }
+    }
+}
+
+fn assert_profiles_equal(kernel: &str, mode: Mode, fused: &Profile, other: &Profile) {
+    assert_eq!(
+        fused, other,
+        "{kernel}: per-group profile diverges between fused and {mode:?}\n\
+         fused:\n{}\nother:\n{}",
+        fused.render(),
+        other.render()
+    );
+}
+
+#[test]
+fn demo_kernels_actually_fuse() {
+    // Guard against the parity test passing vacuously because the
+    // superplan compiler stopped producing traces: every demo kernel
+    // must retire a nonzero share of its dynamic instructions fused.
+    for (kernel, cfg, init) in demo_cases() {
+        let mut m = Machine::new(cfg.clone()).unwrap();
+        m.load_program(kernel.assemble(&cfg).unwrap()).unwrap();
+        m.set_threads(kernel.threads).unwrap();
+        m.set_dim_x(kernel.dim_x).unwrap();
+        for (base, data) in &init {
+            m.shared_mut().write_block(*base, data);
+        }
+        m.run(u64::MAX).unwrap();
+        let ts = m.trace_stats();
+        assert!(
+            ts.traces > 0 && ts.fused_retired > 0,
+            "{}: no fused traces executed ({:?})",
+            kernel.name,
+            ts
+        );
+    }
+}

@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""CI bench-regression gate.
+
+Diffs a freshly produced BENCH_simulator.json against the committed
+BENCH_baseline.json and fails (exit 1) when any gated wall-clock rate
+regresses more than ``max_regression_pct`` below its floor:
+
+- per-kernel ``mcyc_per_s_unchecked`` (the fast-path simulator rate)
+- serving ``wall_jobs_per_s`` (steady-state serving throughput)
+
+Modeled quantities are deliberately *not* gated here — bit-identity of
+modeled cycles is the parity test suites' job; this gate only stops
+silent wall-clock losses.
+
+Usage: check_bench_regression.py BENCH_baseline.json BENCH_simulator.json
+"""
+
+import json
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"bench-regression: FAIL: {msg}")
+    sys.exit(1)
+
+
+def main() -> None:
+    if len(sys.argv) != 3:
+        fail(f"usage: {sys.argv[0]} BENCH_baseline.json BENCH_simulator.json")
+    with open(sys.argv[1]) as f:
+        baseline = json.load(f)
+    with open(sys.argv[2]) as f:
+        bench = json.load(f)
+
+    max_reg = float(baseline.get("max_regression_pct", 20))
+    factor = 1.0 - max_reg / 100.0
+    checked = 0
+    errors = []
+
+    measured = {k["name"]: k for k in bench.get("kernels", [])}
+    for name, floor in baseline.get("kernels_mcyc_per_s_unchecked", {}).items():
+        if name not in measured:
+            errors.append(f"kernel '{name}' is in the baseline but not in the bench output")
+            continue
+        rate = float(measured[name]["mcyc_per_s_unchecked"])
+        limit = float(floor) * factor
+        status = "ok" if rate >= limit else "REGRESSED"
+        print(
+            f"bench-regression: {name}: {rate:.2f} Mcyc/s "
+            f"(floor {floor}, limit {limit:.2f}) {status}"
+        )
+        if rate < limit:
+            errors.append(
+                f"{name}: {rate:.2f} Mcyc/s is more than {max_reg:.0f}% below "
+                f"the committed floor of {floor} Mcyc/s"
+            )
+        checked += 1
+
+    serving_floor = baseline.get("serving", {}).get("wall_jobs_per_s")
+    if serving_floor is not None:
+        serving = bench.get("serving", {})
+        if "wall_jobs_per_s" not in serving:
+            errors.append("serving.wall_jobs_per_s missing from the bench output")
+        else:
+            rate = float(serving["wall_jobs_per_s"])
+            limit = float(serving_floor) * factor
+            status = "ok" if rate >= limit else "REGRESSED"
+            print(
+                f"bench-regression: serving wall_jobs_per_s: {rate:.1f} "
+                f"(floor {serving_floor}, limit {limit:.1f}) {status}"
+            )
+            if rate < limit:
+                errors.append(
+                    f"serving wall_jobs_per_s: {rate:.1f} is more than "
+                    f"{max_reg:.0f}% below the committed floor of {serving_floor}"
+                )
+            checked += 1
+
+    if checked == 0:
+        fail("baseline contains no gated metrics — the gate would pass vacuously")
+    for e in errors:
+        print(f"bench-regression: {e}")
+    if errors:
+        sys.exit(1)
+    print(f"bench-regression: PASS ({checked} metrics within {max_reg:.0f}% of their floors)")
+
+
+if __name__ == "__main__":
+    main()
