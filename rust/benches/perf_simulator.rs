@@ -425,15 +425,23 @@ fn main() {
 
     // Fleet synthesis: the full model → place → serve loop under the
     // demo area budget, scored on the seeded heavy-tail trace. The
-    // whole section is modeled-cycle deterministic (same budget, trace
-    // and options → bit-identical fleet), so it doubles as a perf
-    // trajectory for the search itself via `fleets_scored`.
+    // result is modeled-cycle deterministic (same budget, trace and
+    // options → bit-identical fleet, at any `jobs` value), so the
+    // section doubles as a perf trajectory for the search itself:
+    // `fleets_scored` pins the replay count, `synth_wall_ms` /
+    // `fleets_per_s` gate scoring throughput with 4 frontier workers.
     let synthesis_json = {
         let budget = AreaBudget::demo();
         let trace = heavy_tail_requests(&BurstSpec::demo(24));
-        let opts = SynthOptions::default();
+        let opts = SynthOptions {
+            jobs: 4,
+            ..SynthOptions::default()
+        };
+        let wall = std::time::Instant::now();
         let result = synthesize(&budget, &trace, &opts)
             .expect("synthesis under the demo budget must find a fleet");
+        let synth_wall_ms = wall.elapsed().as_secs_f64() * 1e3;
+        let fleets_per_s = result.evaluated as f64 / (synth_wall_ms / 1e3).max(1e-9);
         assert!(
             result.score.slo_met > 0,
             "the synthesized fleet must meet at least one SLO"
@@ -464,7 +472,8 @@ fn main() {
             .collect();
         println!(
             "synthesis (budget {budget}, {} offered): {}-core fleet, {} SLO-met, \
-             cost {} ALM-eq, {} fleets scored",
+             cost {} ALM-eq, {} fleets scored in {synth_wall_ms:.0}ms \
+             ({fleets_per_s:.1} fleets/s, 4 jobs)",
             result.offered,
             result.fleet.len(),
             result.score.slo_met,
@@ -477,7 +486,10 @@ fn main() {
              \"slo_met\": {}, \"completed\": {}, \"shed\": {}, \
              \"deadline_missed\": {}, \"cost_alm_eq\": {}, \
              \"alms_used\": {}, \"dsps_used\": {}, \"m20ks_used\": {}, \
-             \"fleets_scored\": {}, \"fleet\": [{}], \"baselines\": [\n{}\n    ]}},\n",
+             \"fleets_scored\": {}, \"jobs\": {}, \
+             \"synth_wall_ms\": {synth_wall_ms:.2}, \
+             \"fleets_per_s\": {fleets_per_s:.1}, \
+             \"fleet\": [{}], \"baselines\": [\n{}\n    ]}},\n",
             budget.alms,
             budget.dsps,
             budget.m20ks,
@@ -492,6 +504,7 @@ fn main() {
             result.usage.dsps,
             result.usage.m20ks,
             result.evaluated,
+            opts.jobs,
             fleet_names.join(", "),
             baseline_rows.join(",\n"),
         )

@@ -102,7 +102,7 @@ COMMANDS:
                     --gap sets the mean inter-arrival gap in bus cycles,
                     --seq uses sequential dispatch (bit-identical)
   synth [--alms N] [--dsps N] [--m20ks N] [--requests N] [--seed N]
-        [--beam N] [--out FILE.json]
+        [--beam N] [--jobs N] [--out FILE.json]
                     synthesize the best-serving fleet under an Agilex
                     area budget: enumerate the static configuration
                     space, keep what fits and places, then beam-search
@@ -110,8 +110,10 @@ COMMANDS:
                     heavy-tail trace (SLO-met requests, then modeled
                     cost); prints rejected candidates with the placer's
                     reasons and the score against the homogeneous demo
-                    baselines; --out writes the winning fleet as JSON
-                    consumable by serve/fleet --configs
+                    baselines; --jobs scores each frontier wave on N
+                    worker threads (bit-identical result at any N);
+                    --out writes the winning fleet as JSON consumable
+                    by serve/fleet --configs
   sched KERNEL [DIM]
                     print a kernel's list-scheduled listing and the
                     static schedule stats (fenced / padded / scheduled)
@@ -761,6 +763,7 @@ fn cmd_synth(args: &[String]) -> Result<(), String> {
     let mut requests = 24usize;
     let mut seed: Option<u64> = None;
     let mut beam = 2usize;
+    let mut jobs = 1usize;
     let mut out: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
@@ -771,6 +774,7 @@ fn cmd_synth(args: &[String]) -> Result<(), String> {
             "--requests" => requests = flags::positive_usize(args, &mut i, "--requests")?,
             "--seed" => seed = Some(flags::num(args, &mut i, "--seed")?),
             "--beam" => beam = flags::positive_usize(args, &mut i, "--beam")?,
+            "--jobs" => jobs = flags::positive_usize(args, &mut i, "--jobs")?,
             "--out" => out = Some(flags::value(args, &mut i, "--out")?.to_string()),
             other => return Err(format!("unknown flag '{other}'")),
         }
@@ -782,7 +786,11 @@ fn cmd_synth(args: &[String]) -> Result<(), String> {
         burst.seed = s;
     }
     let trace = heavy_tail_requests(&burst);
-    let opts = SynthOptions { beam, ..SynthOptions::default() };
+    let opts = SynthOptions {
+        beam,
+        jobs,
+        ..SynthOptions::default()
+    };
     let result = synthesize(&budget, &trace, &opts)?;
 
     if !result.rejected.is_empty() {

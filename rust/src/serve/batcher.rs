@@ -15,6 +15,15 @@
 //! - A request whose deadline has already passed at dispatch time is
 //!   shed ([`ShedReason::DeadlineExpired`]) rather than burning fleet
 //!   time on an answer nobody can use.
+//!
+//! The queue keeps its pending set heap-ordered by the dispatch key,
+//! so drawing a batch pops at most `max_batch` entries plus the
+//! expired prefix — O(k log n) per window — instead of re-sorting
+//! everything queued. Expired deadlines *are* a prefix of the dispatch
+//! order: the key leads with the deadline, so every entry with
+//! `deadline ≤ now` sorts strictly before every entry with a later (or
+//! no) deadline, and shedding them head-first is exactly the old
+//! full-sort-then-scan behavior.
 
 use super::queue::{AdmissionQueue, Pending};
 use super::{ShedReason, ShedRecord};
@@ -38,44 +47,32 @@ impl BatchPolicy {
     }
 }
 
-/// The total dispatch order: `(deadline, ¬priority, arrival, id)`.
-fn dispatch_key(p: &Pending) -> (u64, u8, u64, usize) {
-    (
-        p.req.deadline.unwrap_or(u64::MAX),
-        u8::MAX - p.req.priority,
-        p.req.arrival,
-        p.id,
-    )
-}
-
 /// Draw the next batch from the queue at modeled time `now`: expired
 /// deadlines are shed (recorded on the queue), the best
 /// `policy.max_batch` survivors are returned in dispatch order, and
-/// the rest keep their queue slots.
+/// the rest keep their queue slots (and heap positions).
 pub(crate) fn draw_batch(
     queue: &mut AdmissionQueue,
     policy: &BatchPolicy,
     now: u64,
 ) -> Vec<Pending> {
-    let mut pending = queue.take_pending();
-    pending.sort_by_key(dispatch_key);
     let mut batch = Vec::new();
-    let mut rest = Vec::new();
-    for p in pending {
-        if p.req.deadline.is_some_and(|d| d <= now) {
+    while let Some(head) = queue.peek() {
+        if head.deadline.is_some_and(|d| d <= now) {
+            let p = queue.pop().expect("peeked entry pops");
             queue.shed_record(ShedRecord {
                 id: p.id,
-                spec: p.req.spec,
+                spec: p.spec,
                 reason: ShedReason::DeadlineExpired,
                 at: now,
             });
-        } else if batch.len() < policy.max_batch {
-            batch.push(p);
-        } else {
-            rest.push(p);
+            continue;
         }
+        if batch.len() >= policy.max_batch {
+            break;
+        }
+        batch.push(queue.pop().expect("peeked entry pops"));
     }
-    queue.restore(rest);
     batch
 }
 
@@ -88,8 +85,7 @@ mod tests {
     fn queued(reqs: Vec<Request>) -> AdmissionQueue {
         let mut q = AdmissionQueue::new(reqs.len());
         for (id, r) in reqs.into_iter().enumerate() {
-            let at = r.arrival;
-            q.offer(id, r, at);
+            q.offer(id, &r, r.arrival);
         }
         q
     }

@@ -16,8 +16,11 @@
 //!   oldest queued request has lingered `max_linger` modeled cycles,
 //!   and dispatches oldest-deadline-first (then priority, arrival,
 //!   submission order — a total order, so dispatch is deterministic).
-//!   Requests whose deadline has already passed at dispatch time are
-//!   shed as [`ShedReason::DeadlineExpired`].
+//!   The queue keeps its pending set heap-ordered by exactly that key,
+//!   so a window pops its `max_batch` entries in O(k log n) instead of
+//!   re-sorting the backlog. Requests whose deadline has already
+//!   passed at dispatch time are shed as
+//!   [`ShedReason::DeadlineExpired`].
 //! - **Dispatch.** Batches run through the existing fleet placement
 //!   path ([`crate::api::GpuArray`] over [`crate::coordinator`]):
 //!   feature routing, wall-clock-aware placement, the shared

@@ -7,22 +7,79 @@
 //! recorded (reason + modeled time), so the caller can distinguish
 //! "served slowly" from "turned away" — the accounting identity
 //! `served + shed == offered` is asserted by the serving tests.
+//!
+//! The pending set is a binary min-heap on the dispatch key
+//! (`(deadline, ¬priority, arrival, id)`), maintained *as an
+//! invariant* rather than recomputed: admission pushes in O(log n)
+//! and batch formation pops exactly the entries it dispatches
+//! (O(k log n) per window) instead of re-sorting the whole queue
+//! every window. The key is a total order over distinct requests, so
+//! pop order — and therefore batch contents — is deterministic.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::kernels::KernelSpec;
 
 use super::{Request, ShedReason, ShedRecord};
 
-/// An admitted request waiting for a batch slot.
-#[derive(Debug, Clone)]
+/// An admitted request waiting for a batch slot. Deliberately `Copy`:
+/// it carries only what dispatch and the result record need (the
+/// request's payload stays with the caller's trace, looked up by
+/// `id`), so heap maintenance moves a few words, not input blocks.
+#[derive(Debug, Clone, Copy)]
 pub(crate) struct Pending {
     /// Index of the request in the submitted workload.
     pub id: usize,
-    pub req: Request,
+    pub spec: KernelSpec,
+    pub arrival: u64,
+    pub deadline: Option<u64>,
+    pub priority: u8,
+}
+
+impl Pending {
+    /// The total dispatch order: `(deadline, ¬priority, arrival, id)`.
+    /// Requests without a deadline sort last.
+    pub(crate) fn dispatch_key(&self) -> (u64, u8, u64, usize) {
+        (
+            self.deadline.unwrap_or(u64::MAX),
+            u8::MAX - self.priority,
+            self.arrival,
+            self.id,
+        )
+    }
+}
+
+/// Heap adapter: `BinaryHeap` is a max-heap, the queue wants the
+/// *smallest* dispatch key on top, so the ordering is reversed.
+#[derive(Debug)]
+struct ByDispatch(Pending);
+
+impl PartialEq for ByDispatch {
+    fn eq(&self, other: &ByDispatch) -> bool {
+        self.0.dispatch_key() == other.0.dispatch_key()
+    }
+}
+
+impl Eq for ByDispatch {}
+
+impl PartialOrd for ByDispatch {
+    fn partial_cmp(&self, other: &ByDispatch) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for ByDispatch {
+    fn cmp(&self, other: &ByDispatch) -> Ordering {
+        other.0.dispatch_key().cmp(&self.0.dispatch_key())
+    }
 }
 
 /// Bounded admission queue with shed-recording overflow.
 #[derive(Debug)]
 pub struct AdmissionQueue {
     capacity: usize,
-    pending: Vec<Pending>,
+    pending: BinaryHeap<ByDispatch>,
     shed: Vec<ShedRecord>,
     peak: usize,
 }
@@ -32,7 +89,7 @@ impl AdmissionQueue {
     pub fn new(capacity: usize) -> AdmissionQueue {
         AdmissionQueue {
             capacity,
-            pending: Vec::new(),
+            pending: BinaryHeap::new(),
             shed: Vec::new(),
             peak: 0,
         }
@@ -65,7 +122,7 @@ impl AdmissionQueue {
     /// [`ShedReason::QueueFull`]) when the queue is at capacity. `at`
     /// is the modeled cycle of the admission attempt — the request's
     /// arrival instant.
-    pub(crate) fn offer(&mut self, id: usize, req: Request, at: u64) {
+    pub(crate) fn offer(&mut self, id: usize, req: &Request, at: u64) {
         if self.pending.len() >= self.capacity {
             self.shed.push(ShedRecord {
                 id,
@@ -74,25 +131,32 @@ impl AdmissionQueue {
                 at,
             });
         } else {
-            self.pending.push(Pending { id, req });
+            self.pending.push(ByDispatch(Pending {
+                id,
+                spec: req.spec,
+                arrival: req.arrival,
+                deadline: req.deadline,
+                priority: req.priority,
+            }));
             self.peak = self.peak.max(self.pending.len());
         }
     }
 
-    /// Earliest arrival among queued requests.
+    /// Earliest arrival among queued requests. The heap orders by
+    /// dispatch key, not arrival, so this is a linear scan — but over
+    /// at most `qdepth` entries, once per batch window.
     pub(crate) fn oldest_arrival(&self) -> Option<u64> {
-        self.pending.iter().map(|p| p.req.arrival).min()
+        self.pending.iter().map(|p| p.0.arrival).min()
     }
 
-    /// Take the queued requests for batch selection.
-    pub(crate) fn take_pending(&mut self) -> Vec<Pending> {
-        std::mem::take(&mut self.pending)
+    /// The queued request next in dispatch order, if any.
+    pub(crate) fn peek(&self) -> Option<&Pending> {
+        self.pending.peek().map(|p| &p.0)
     }
 
-    /// Put unselected requests back (they keep their admission).
-    pub(crate) fn restore(&mut self, rest: Vec<Pending>) {
-        debug_assert!(self.pending.is_empty(), "restore after take_pending only");
-        self.pending = rest;
+    /// Remove and return the queued request next in dispatch order.
+    pub(crate) fn pop(&mut self) -> Option<Pending> {
+        self.pending.pop().map(|p| p.0)
     }
 
     /// Record a shed decided outside the queue (deadline expiry at
@@ -110,7 +174,6 @@ impl AdmissionQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kernels::KernelSpec;
 
     fn req(arrival: u64) -> Request {
         Request::new(KernelSpec::Reduction { n: 64 }).at(arrival)
@@ -119,9 +182,9 @@ mod tests {
     #[test]
     fn overflow_sheds_with_reason_and_time() {
         let mut q = AdmissionQueue::new(2);
-        q.offer(0, req(5), 5);
-        q.offer(1, req(6), 6);
-        q.offer(2, req(7), 7);
+        q.offer(0, &req(5), 5);
+        q.offer(1, &req(6), 6);
+        q.offer(2, &req(7), 7);
         assert_eq!(q.len(), 2);
         assert_eq!(q.peak(), 2);
         assert_eq!(q.shed_count(), 1);
@@ -132,16 +195,17 @@ mod tests {
     }
 
     #[test]
-    fn take_and_restore_preserve_admission() {
-        let mut q = AdmissionQueue::new(4);
-        q.offer(0, req(1), 1);
-        q.offer(1, req(2), 2);
-        let taken = q.take_pending();
-        assert!(q.is_empty());
-        q.restore(taken);
-        assert_eq!(q.len(), 2);
-        assert_eq!(q.oldest_arrival(), Some(1));
-        // Peak tracks admissions, not restores.
-        assert_eq!(q.peak(), 2);
+    fn pops_follow_the_dispatch_key_order() {
+        let mut q = AdmissionQueue::new(8);
+        q.offer(0, &req(3), 3); // no deadline, late arrival
+        q.offer(1, &req(2).due_by(900), 2); // latest deadline
+        q.offer(2, &req(1).due_by(500), 1); // earliest deadline
+        q.offer(3, &req(0).priority(3), 0); // no deadline, urgent
+        assert_eq!(q.oldest_arrival(), Some(0));
+        assert_eq!(q.peek().map(|p| p.id), Some(2));
+        let order: Vec<usize> = std::iter::from_fn(|| q.pop()).map(|p| p.id).collect();
+        assert_eq!(order, vec![2, 1, 3, 0]);
+        // Popping consumes admission but not the high-water mark.
+        assert_eq!(q.peak(), 4);
     }
 }

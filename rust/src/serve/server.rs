@@ -220,14 +220,27 @@ impl Server {
     /// per-request results (dispatch order), every shed request, and
     /// the aggregate telemetry. Deterministic for a fixed workload.
     pub fn serve(&mut self, requests: Vec<Request>) -> Result<ServeReport, ApiError> {
+        self.serve_slice(&requests)
+    }
+
+    /// Borrowed-workload twin of [`Server::serve`]: replays the trace
+    /// without taking ownership, so a caller scoring the same trace
+    /// against many fleets ([`crate::synth`]) stops cloning it once
+    /// per replay. The serve loop is one and the same — `serve` is a
+    /// thin delegate — so both paths produce identical
+    /// [`ServeReport`]s. Input blocks are copied only for requests
+    /// that actually dispatch, at dispatch time.
+    pub fn serve_slice(&mut self, requests: &[Request]) -> Result<ServeReport, ApiError> {
         let policy = self.policy;
-        // Feed order: arrival time, ties by submission index.
-        let mut feed: Vec<(usize, Request)> = requests.into_iter().enumerate().collect();
-        feed.sort_by_key(|(id, r)| (r.arrival, *id));
+        // Feed order: arrival time, ties by submission index. The feed
+        // holds indices into `requests`; payloads stay in place.
+        let mut feed: Vec<usize> = (0..requests.len()).collect();
+        feed.sort_by_key(|&id| (requests[id].arrival, id));
         // Statically-checkable spec errors fail the whole workload up
         // front — a mid-batch compile failure would leave submitted
         // jobs queued on the coordinator.
-        for (id, r) in &feed {
+        for &id in &feed {
+            let r = &requests[id];
             if !r.spec.valid_dim() {
                 return Err(ApiError::Assemble(format!(
                     "request {id}: kernel '{}' does not support DIM {}",
@@ -237,10 +250,10 @@ impl Server {
             }
         }
         let mut telemetry = Telemetry {
-            first_arrival: feed.first().map(|(_, r)| r.arrival).unwrap_or(0),
+            first_arrival: feed.first().map(|&id| requests[id].arrival).unwrap_or(0),
             ..Telemetry::default()
         };
-        let mut feed: VecDeque<(usize, Request)> = feed.into();
+        let mut feed: VecDeque<usize> = feed.into();
 
         let mut queue = AdmissionQueue::new(self.qdepth);
         let mut results: Vec<RequestResult> = Vec::new();
@@ -253,10 +266,13 @@ impl Server {
             if queue.is_empty() {
                 // Fleet idle, nothing queued: the window opens at the
                 // next arrival.
-                let head = feed.front().map(|(_, r)| r.arrival).expect("feed is non-empty");
+                let head = feed
+                    .front()
+                    .map(|&id| requests[id].arrival)
+                    .expect("feed is non-empty");
                 now = now.max(head);
             }
-            admit_up_to(&mut feed, &mut queue, now);
+            admit_up_to(requests, &mut feed, &mut queue, now);
             let oldest = queue.oldest_arrival().expect("admission filled the queue");
             // The window closes when the batch fills or the oldest
             // request's linger expires; arrivals inside the window
@@ -267,17 +283,20 @@ impl Server {
                 policy.close_by(now, oldest)
             };
             while queue.len() < policy.max_batch {
-                let due = feed.front().map(|(_, r)| r.arrival).filter(|&a| a <= dispatch_at);
+                let due = feed
+                    .front()
+                    .map(|&id| requests[id].arrival)
+                    .filter(|&a| a <= dispatch_at);
                 let Some(arrival) = due else { break };
-                let (id, req) = feed.pop_front().expect("front was just inspected");
-                queue.offer(id, req, arrival);
+                let id = feed.pop_front().expect("front was just inspected");
+                queue.offer(id, &requests[id], arrival);
                 if queue.len() >= policy.max_batch {
                     dispatch_at = arrival; // filled early: close here
                 }
             }
             now = now.max(dispatch_at);
 
-            let mut batch = draw_batch(&mut queue, &policy, now);
+            let batch = draw_batch(&mut queue, &policy, now);
             if batch.is_empty() {
                 // Every queued deadline had expired (all shed); reopen
                 // the window at the next arrival.
@@ -286,24 +305,26 @@ impl Server {
 
             // Model the idle gap, then dispatch through the fleet's
             // placement path (feature routing + wall-clock scores).
-            // Input blocks move into the launch (the batch entry keeps
-            // only what the result record needs); a launch failure
-            // flushes anything already submitted so the coordinator
-            // queue is never left dirty for a later serve() call.
+            // Input blocks are copied out of the borrowed trace at
+            // dispatch time (the batch entry is just the dispatch key
+            // plus the request id); a launch failure flushes anything
+            // already submitted so the coordinator queue is never left
+            // dirty for a later serve() call.
             self.fleet.advance_timeline_to(now);
             let mut launch_err: Option<ApiError> = None;
-            for p in &mut batch {
-                let mut launch = match self.fleet.launch_spec_any(p.req.spec) {
+            for p in &batch {
+                let req = &requests[p.id];
+                let mut launch = match self.fleet.launch_spec_any(p.spec) {
                     Ok(l) => l,
                     Err(e) => {
                         launch_err = Some(e);
                         break;
                     }
                 };
-                for (base, data) in std::mem::take(&mut p.req.loads) {
-                    launch = launch.input_words(base, data);
+                for (base, data) in &req.loads {
+                    launch = launch.input_words(*base, data.clone());
                 }
-                for &(base, len) in &p.req.unloads {
+                for &(base, len) in &req.unloads {
                     launch = launch.output(base, len);
                 }
                 launch.submit();
@@ -320,11 +341,11 @@ impl Server {
                     name: r.name,
                     batch: batches,
                     core: r.core,
-                    arrival: p.req.arrival,
+                    arrival: p.arrival,
                     dispatched: now,
                     start: r.start,
                     end: r.end,
-                    deadline: p.req.deadline,
+                    deadline: p.deadline,
                     compute_cycles: r.compute_cycles,
                     bus_cycles: r.bus_cycles,
                     outputs: r.outputs,
@@ -353,10 +374,15 @@ impl Server {
 /// shedding on overflow at each request's own arrival instant (queue
 /// occupancy only changes at dispatch points, so lazy admission is
 /// equivalent to admitting eagerly as each request arrives).
-fn admit_up_to(feed: &mut VecDeque<(usize, Request)>, queue: &mut AdmissionQueue, t: u64) {
-    while feed.front().is_some_and(|(_, r)| r.arrival <= t) {
-        let (id, req) = feed.pop_front().expect("front was just inspected");
-        let at = req.arrival;
-        queue.offer(id, req, at);
+fn admit_up_to(
+    requests: &[Request],
+    feed: &mut VecDeque<usize>,
+    queue: &mut AdmissionQueue,
+    t: u64,
+) {
+    while feed.front().is_some_and(|&id| requests[id].arrival <= t) {
+        let id = feed.pop_front().expect("front was just inspected");
+        let r = &requests[id];
+        queue.offer(id, r, r.arrival);
     }
 }

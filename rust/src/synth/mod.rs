@@ -18,18 +18,25 @@
 //!    per [`crate::model::resources::ResourceReport`] and place per
 //!    [`crate::place::place`]; refusals carry the placer's reason.
 //! 3. **Search** ([`search`]) — deterministic beam search over fleet
-//!    compositions, each scored by replaying the trace through an
-//!    in-process [`crate::serve::Server`] in modeled bus cycles.
+//!    compositions: each seeding stage and beam round collects its
+//!    frontier of unscored canonical keys, scores all replays in one
+//!    wave ([`SynthOptions::jobs`] scoped workers, each replaying the
+//!    trace through a fresh in-process [`crate::serve::Server`] in
+//!    modeled bus cycles), and merges results in canonical key order.
+//!    Dominance pruning skips replays that provably cannot win once
+//!    the incumbent meets every SLO.
 //! 4. **Emit** — the winner serializes via
 //!    [`crate::sim::config_json::fleet_to_json`], so `egpu serve
 //!    --configs` / `egpu fleet --configs` consume it unchanged.
 //!
 //! Determinism rules: no wall-clock anywhere in the objective (bus
 //! cycles only), no f64 in comparisons ([`FleetScore`] is integers and
-//! fingerprints end-to-end), fixed enumeration order, and memoized
-//! scoring keyed on canonical sorted compositions — so the same
-//! (budget, trace, options) triple is bit-identical across reruns and
-//! under sequential vs parallel serving.
+//! fingerprints end-to-end), fixed enumeration order, memoized
+//! scoring keyed on canonical sorted compositions, and frontier waves
+//! whose merge order never depends on worker scheduling — so the same
+//! (budget, trace, options) triple is bit-identical across reruns,
+//! under sequential vs parallel serving, at any `jobs` value, and
+//! with pruning on or off (pruning only shrinks `evaluated`).
 
 pub mod budget;
 pub mod candidates;

@@ -1,5 +1,5 @@
 //! Deterministic beam search over fleet compositions, scored by trace
-//! replay.
+//! replay — with frontier-batched, parallel scoring.
 //!
 //! A composition is a multiset of feasible candidates (counts ×
 //! configs). Scoring replays the offered trace through an in-process
@@ -16,6 +16,40 @@
 //! kernel no core can accept) scores as unservable and never enters
 //! the beam.
 //!
+//! # Frontier batching and the determinism discipline
+//!
+//! The search does not score as it expands. Each stage — the seeding
+//! wave (covering singletons + the greedy static cover), the baseline
+//! wave, and every beam round — first *collects* its full frontier of
+//! not-yet-memoized canonical keys (deduped, deterministic order),
+//! then scores all replays at once through [`score_fleets`]-style
+//! workers ([`std::thread::scope`], [`SynthOptions::jobs`] of them),
+//! and only then merges the results into the memo in canonical
+//! (sorted-key) order and replays the offers in the stage's fixed
+//! enumeration order. Every replay is independent — fresh [`Server`],
+//! shared [`Arc<KernelCache>`], integer-only [`ServeCard`] — so each
+//! memo entry is a pure function of its key and the result vector
+//! does not depend on worker scheduling: `jobs = 1` and `jobs = N`
+//! produce bit-identical [`SynthResult`]s, including `evaluated`.
+//! When `jobs > 1` the scoring servers force *sequential* fleet
+//! dispatch (bit-identical by the serving layer's invariant), so the
+//! thread count is bounded by `jobs` rather than `jobs × cores`.
+//!
+//! # Dominance pruning
+//!
+//! Once the incumbent achieves a perfect SLO (`slo_met == offered`),
+//! any composition with strictly higher fixed-point cost is a dead
+//! end: `slo_met` is bounded by `offered`, so under the [`FleetScore`]
+//! order it cannot outrank the incumbent — and appending candidates
+//! only adds cost, so neither can anything it expands into. Dead keys
+//! are excluded from the beam in *both* pruning modes (the filter is
+//! decided at round-collection time, before any scoring, from state
+//! identical across `jobs` values); [`SynthOptions::prune`] only
+//! controls whether their replays are skipped. The search trajectory —
+//! beam contents, offers that can win, the final fleet and score — is
+//! therefore identical with pruning on or off; only `evaluated`
+//! shrinks.
+//!
 //! The search seeds the beam with every covering singleton, a greedy
 //! static-cover multiset, and the homogeneous demo-fleet compositions
 //! (which are also reported as baselines); expansion appends one
@@ -23,11 +57,14 @@
 //! the first round that fails to strictly improve the best score —
 //! improvement is strict in the total order and the composition space
 //! is finite, so termination is guaranteed. All candidate fleets share
-//! one [`KernelCache`], so each kernel compiles once per fingerprint
-//! across the whole search.
+//! one [`KernelCache`] (internally locked, so concurrent scoring still
+//! compiles each kernel once per fingerprint across the whole search),
+//! and replays borrow the trace ([`Server::serve_slice`]) instead of
+//! cloning it per composition.
 
-use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::api::FleetBuilder;
 use crate::kernels::KernelCache;
@@ -57,7 +94,8 @@ pub struct SynthOptions {
     pub candidates: Vec<EgpuConfig>,
     /// Score with sequential fleet dispatch instead of parallel
     /// workers. Bit-identical result either way (the serving layer's
-    /// invariant); exists so tests can pin exactly that.
+    /// invariant); exists so tests can pin exactly that. Forced on
+    /// inside the scoring replays whenever `jobs > 1`.
     pub sequential: bool,
     /// Admission-queue bound for the scoring server.
     pub qdepth: usize,
@@ -65,6 +103,14 @@ pub struct SynthOptions {
     pub max_batch: usize,
     /// Batch linger window (µs) for the scoring server.
     pub linger_us: u64,
+    /// Scoring worker threads per frontier wave (≥ 1; clamped up from
+    /// 0). The result is bit-identical at any value — parallelism
+    /// changes wall-clock only (see the module docs).
+    pub jobs: usize,
+    /// Skip replays of dominance-dead expansions (see the module
+    /// docs). Winner-preserving by construction: disabling only adds
+    /// replays (`evaluated` grows), never changes the fleet or score.
+    pub prune: bool,
 }
 
 impl Default for SynthOptions {
@@ -77,6 +123,8 @@ impl Default for SynthOptions {
             qdepth: 64,
             max_batch: 8,
             linger_us: 8,
+            jobs: 1,
+            prune: true,
         }
     }
 }
@@ -148,7 +196,8 @@ pub struct SynthResult {
     pub rejected: Vec<Reject>,
     /// The homogeneous demo-fleet baselines and how they scored.
     pub baselines: Vec<BaselineScore>,
-    /// Serve replays performed (memoized compositions count once).
+    /// Serve replays performed (memoized compositions count once;
+    /// pruning skips dominance-dead replays entirely).
     pub evaluated: usize,
 }
 
@@ -172,7 +221,10 @@ struct ServeCard {
 
 /// Replay the trace through a fresh server over `cfgs`. `Err` means
 /// the fleet cannot serve the trace at all (e.g. no core accepts a
-/// kernel's features) — scored as unservable by the caller.
+/// kernel's features) — scored as unservable by the caller. The trace
+/// is borrowed ([`Server::serve_slice`]): scoring hundreds of
+/// compositions copies input blocks only at their own dispatch
+/// points, never the workload wholesale.
 fn serve_once(
     cfgs: &[EgpuConfig],
     trace: &[Request],
@@ -183,16 +235,20 @@ fn serve_once(
     for cfg in cfgs {
         fleet = fleet.core(cfg.clone());
     }
+    // Bounded nested parallelism: with outer scoring workers the inner
+    // dispatch runs sequentially (bit-identical either way), keeping
+    // the live thread count at `jobs`, not `jobs × cores`.
+    let sequential = opts.sequential || opts.jobs > 1;
     let mut server = Server::builder()
         .fleet(fleet)
         .kernel_cache(cache.clone())
         .qdepth(opts.qdepth)
         .max_batch(opts.max_batch)
         .linger_us(opts.linger_us)
-        .sequential(opts.sequential)
+        .sequential(sequential)
         .build()
         .map_err(|e| e.to_string())?;
-    let report = server.serve(trace.to_vec()).map_err(|e| e.to_string())?;
+    let report = server.serve_slice(trace).map_err(|e| e.to_string())?;
     let t = &report.telemetry;
     Ok(ServeCard {
         slo_met: t.completed.saturating_sub(t.deadline_missed),
@@ -200,6 +256,49 @@ fn serve_once(
         shed: t.shed,
         deadline_missed: t.deadline_missed,
     })
+}
+
+/// Replay every fleet in `fleets`, returning the cards in input
+/// order. `opts.jobs > 1` scores concurrently on scoped workers that
+/// pull indices from a shared counter; each replay is independent and
+/// writes only its own slot, so the output is a pure function of the
+/// inputs regardless of worker count or scheduling.
+fn score_fleets(
+    fleets: &[Vec<EgpuConfig>],
+    trace: &[Request],
+    opts: &SynthOptions,
+    cache: &Arc<KernelCache>,
+) -> Vec<Result<ServeCard, String>> {
+    let jobs = opts.jobs.clamp(1, fleets.len().max(1));
+    if jobs <= 1 {
+        return fleets
+            .iter()
+            .map(|f| serve_once(f, trace, opts, cache))
+            .collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<ServeCard, String>>>> =
+        fleets.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= fleets.len() {
+                    break;
+                }
+                let card = serve_once(&fleets[i], trace, opts, cache);
+                *slots[i].lock().expect("result slot lock") = Some(card);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("result slot lock")
+                .expect("every frontier index was scored")
+        })
+        .collect()
 }
 
 fn usage_of(key: &[usize], cands: &[Candidate]) -> AreaUsage {
@@ -212,38 +311,51 @@ fn usage_of(key: &[usize], cands: &[Candidate]) -> AreaUsage {
     u
 }
 
+fn cost_of(key: &[usize], cands: &[Candidate]) -> u64 {
+    key.iter().map(|&i| cands[i].cost).sum()
+}
+
 fn score_of(key: &[usize], cands: &[Candidate], card: ServeCard) -> FleetScore {
     let mut fps: Vec<u64> = key.iter().map(|&i| cands[i].cfg.fingerprint()).collect();
     fps.sort_unstable();
     FleetScore {
         slo_met: card.slo_met,
-        cost: key.iter().map(|&i| cands[i].cost).sum(),
+        cost: cost_of(key, cands),
         fingerprints: fps,
     }
 }
 
-/// Score a composition, memoized on the canonical (sorted) index
-/// multiset. `None` = unservable.
+/// Score every not-yet-memoized key of `frontier` in one wave and
+/// merge the results into the memo in canonical (sorted) key order.
+/// `evaluated` counts actual replays — memo hits cost nothing. The
+/// merge order is fixed and each entry is a pure function of its key,
+/// so the memo (and every count) is identical at any `jobs` value.
 #[allow(clippy::too_many_arguments)]
-fn eval(
-    key: &[usize],
+fn eval_frontier(
+    frontier: &[Vec<usize>],
     cands: &[Candidate],
     trace: &[Request],
     opts: &SynthOptions,
     cache: &Arc<KernelCache>,
     memo: &mut BTreeMap<Vec<usize>, Option<(FleetScore, ServeCard)>>,
     evaluated: &mut usize,
-) -> Option<(FleetScore, ServeCard)> {
-    if let Some(hit) = memo.get(key) {
-        return hit.clone();
+) {
+    let mut todo: Vec<&Vec<usize>> = frontier
+        .iter()
+        .filter(|k| !memo.contains_key(k.as_slice()))
+        .collect();
+    todo.sort();
+    todo.dedup();
+    let fleets: Vec<Vec<EgpuConfig>> = todo
+        .iter()
+        .map(|key| key.iter().map(|&i| cands[i].cfg.clone()).collect())
+        .collect();
+    let cards = score_fleets(&fleets, trace, opts, cache);
+    for (key, card) in todo.into_iter().zip(cards) {
+        *evaluated += 1;
+        let out = card.ok().map(|c| (score_of(key, cands, c), c));
+        memo.insert(key.clone(), out);
     }
-    let cfgs: Vec<EgpuConfig> = key.iter().map(|&i| cands[i].cfg.clone()).collect();
-    *evaluated += 1;
-    let out = serve_once(&cfgs, trace, opts, cache)
-        .ok()
-        .map(|card| (score_of(key, cands, card), card));
-    memo.insert(key.to_vec(), out.clone());
-    out
 }
 
 /// Greedy static cover: repeatedly add the candidate covering the most
@@ -303,8 +415,10 @@ fn rank(a: &(Vec<usize>, FleetScore), b: &(Vec<usize>, FleetScore)) -> std::cmp:
 
 /// Synthesize the best fleet for `trace` under `budget`. Deterministic:
 /// the same inputs always return the same [`SynthResult`], including
-/// under sequential vs parallel serving. Errors when no candidate fits
-/// the budget or no feasible fleet can serve the trace.
+/// under sequential vs parallel serving, at any [`SynthOptions::jobs`]
+/// value, and with dominance pruning on or off (pruning only shrinks
+/// `evaluated`). Errors when no candidate fits the budget or no
+/// feasible fleet can serve the trace.
 pub fn synthesize(
     budget: &AreaBudget,
     trace: &[Request],
@@ -349,37 +463,51 @@ pub fn synthesize(
         }
     }
 
-    // Seed 1: every covering singleton.
+    // Seeding wave: every covering singleton plus the greedy
+    // static-cover multiset (covers traces no single candidate can,
+    // e.g. dot-needing plus huge-shared mixes), collected first and
+    // scored in one parallel frontier.
+    let greedy = greedy_cover(&needs, &cands, budget, max_cores);
+    let mut seeds: Vec<Vec<usize>> = Vec::new();
+    for i in 0..cands.len() {
+        let key = vec![i];
+        if covers(&needs, &cands, &key) {
+            seeds.push(key);
+        }
+    }
+    if let Some(key) = &greedy {
+        seeds.push(key.clone());
+    }
+    eval_frontier(&seeds, &cands, trace, opts, &cache, &mut memo, &mut evaluated);
+
+    // Offers replay in the fixed enumeration order (singletons by
+    // candidate index, then the greedy cover), exactly as the
+    // sequential scorer visits them.
     let mut beam: Vec<(Vec<usize>, FleetScore)> = Vec::new();
     for i in 0..cands.len() {
         let key = vec![i];
         if !covers(&needs, &cands, &key) {
             continue;
         }
-        if let Some((score, card)) =
-            eval(&key, &cands, trace, opts, &cache, &mut memo, &mut evaluated)
-        {
+        if let Some((score, card)) = memo.get(&key).cloned().flatten() {
             offer(&mut best, vec![cands[i].cfg.clone()], score.clone(), card);
             beam.push((key, score));
         }
     }
-
-    // Seed 2: the greedy static-cover multiset (covers traces no
-    // single candidate can, e.g. dot-needing plus huge-shared mixes).
-    if let Some(key) = greedy_cover(&needs, &cands, budget, max_cores) {
-        if let Some((score, card)) =
-            eval(&key, &cands, trace, opts, &cache, &mut memo, &mut evaluated)
-        {
+    if let Some(key) = greedy {
+        if let Some((score, card)) = memo.get(&key).cloned().flatten() {
             let fleet = key.iter().map(|&i| cands[i].cfg.clone()).collect();
             offer(&mut best, fleet, score.clone(), card);
             beam.push((key, score));
         }
     }
 
-    // Seed 3 + reporting: the homogeneous demo-fleet baselines, at the
-    // largest core count the budget admits. Scored with the same
-    // replay and offered into the search, so the winner dominates both
-    // baselines by construction whenever they fit the budget at all.
+    // Baseline wave + reporting: the homogeneous demo-fleet baselines,
+    // at the largest core count the budget admits, scored as one
+    // parallel frontier with the same replay and offered into the
+    // search — so the winner dominates both baselines by construction
+    // whenever they fit the budget at all. Baselines are scored
+    // unconditionally (never memoized), mirroring their report role.
     let mut baselines = Vec::new();
     let mut demo_cfgs: Vec<EgpuConfig> = Vec::new();
     for cfg in FleetBuilder::demo_mixed().as_configs() {
@@ -387,6 +515,10 @@ pub fn synthesize(
             demo_cfgs.push(cfg.clone());
         }
     }
+    // (config, cores, cost, index into the scored wave — None when the
+    // budget admits zero cores.)
+    let mut cases: Vec<(EgpuConfig, usize, u64, Option<usize>)> = Vec::new();
+    let mut wave: Vec<Vec<EgpuConfig>> = Vec::new();
     for cfg in demo_cfgs {
         let r = ResourceReport::for_config(&cfg);
         let per = (r.alms as u64, r.dsps as u64, r.m20ks as u64);
@@ -401,7 +533,18 @@ pub fn synthesize(
             }
             k += 1;
         }
-        if k == 0 {
+        let wave_idx = if k > 0 {
+            wave.push(vec![cfg.clone(); k]);
+            Some(wave.len() - 1)
+        } else {
+            None
+        };
+        let cost = k as u64 * config_cost_fixed(&cfg);
+        cases.push((cfg, k, cost, wave_idx));
+    }
+    let wave_cards = score_fleets(&wave, trace, opts, &cache);
+    for (cfg, k, cost, wave_idx) in cases {
+        let Some(idx) = wave_idx else {
             baselines.push(BaselineScore {
                 name: cfg.name.clone(),
                 cores: 0,
@@ -410,11 +553,9 @@ pub fn synthesize(
                 note: Some("does not fit the budget".into()),
             });
             continue;
-        }
-        let fleet = vec![cfg.clone(); k];
-        let cost = k as u64 * config_cost_fixed(&cfg);
+        };
         evaluated += 1;
-        match serve_once(&fleet, trace, opts, &cache) {
+        match &wave_cards[idx] {
             Ok(card) => {
                 baselines.push(BaselineScore {
                     name: cfg.name.clone(),
@@ -432,7 +573,7 @@ pub fn synthesize(
                         cost,
                         fingerprints: vec![cfg.fingerprint(); k],
                     };
-                    offer(&mut best, fleet, score, card);
+                    offer(&mut best, vec![cfg.clone(); k], score, *card);
                 }
             }
             Err(e) => baselines.push(BaselineScore {
@@ -445,15 +586,31 @@ pub fn synthesize(
         }
     }
 
-    // Beam rounds: expand each beam composition by one candidate,
-    // keeping budget fit; stop the first round with no strict
-    // improvement of the global best.
+    // Beam rounds: collect the round's frontier (each beam composition
+    // extended by one candidate, budget fit invariant, deduped in
+    // first-appearance order), score it as one wave, then replay the
+    // offers in that same order; stop the first round with no strict
+    // improvement of the global best. The dominance filter is decided
+    // here — before any scoring, from state fixed at round start — so
+    // it is identical across `jobs` values and pruning modes.
     beam.sort_by(rank);
     beam.dedup_by(|a, b| a.0 == b.0);
     beam.truncate(beam_width);
     loop {
         let before = best.as_ref().map(|(_, s, _)| s.clone());
-        let mut round: Vec<(Vec<usize>, FleetScore)> = Vec::new();
+        // A perfect incumbent (every offered request met its SLO)
+        // makes any strictly costlier composition — and, since
+        // expansion only adds cost, its whole subtree — unable to win.
+        let perfect_cost: Option<u64> = best
+            .as_ref()
+            .filter(|(_, s, _)| s.slo_met == trace.len() as u64)
+            .map(|(_, s, _)| s.cost);
+        let mut seen: BTreeSet<Vec<usize>> = BTreeSet::new();
+        // (key, dominated): dominated keys never enter the beam in
+        // either mode; with pruning on they are not even generated
+        // (their replay is skipped), with pruning off they are scored
+        // and offered — harmlessly, they cannot outrank the incumbent.
+        let mut frontier: Vec<(Vec<usize>, bool)> = Vec::new();
         for (key, _) in &beam {
             if key.len() >= max_cores {
                 continue;
@@ -462,19 +619,32 @@ pub fn synthesize(
                 let mut k2 = key.clone();
                 k2.push(i);
                 k2.sort_unstable();
+                if seen.contains(&k2) {
+                    continue;
+                }
                 if !budget.admits(&usage_of(&k2, &cands)) {
                     continue;
                 }
-                if round.iter().any(|(k, _)| *k == k2) {
+                seen.insert(k2.clone());
+                let dominated = perfect_cost.is_some_and(|c| cost_of(&k2, &cands) > c);
+                if dominated && opts.prune {
                     continue;
                 }
-                if let Some((score, card)) =
-                    eval(&k2, &cands, trace, opts, &cache, &mut memo, &mut evaluated)
-                {
-                    let fleet = k2.iter().map(|&j| cands[j].cfg.clone()).collect();
-                    offer(&mut best, fleet, score.clone(), card);
-                    round.push((k2, score));
-                }
+                frontier.push((k2, dominated));
+            }
+        }
+        let keys: Vec<Vec<usize>> = frontier.iter().map(|(k, _)| k.clone()).collect();
+        eval_frontier(&keys, &cands, trace, opts, &cache, &mut memo, &mut evaluated);
+
+        let mut round: Vec<(Vec<usize>, FleetScore)> = Vec::new();
+        for (k2, dominated) in frontier {
+            let Some((score, card)) = memo.get(&k2).cloned().flatten() else {
+                continue;
+            };
+            let fleet = k2.iter().map(|&j| cands[j].cfg.clone()).collect();
+            offer(&mut best, fleet, score.clone(), card);
+            if !dominated {
+                round.push((k2, score));
             }
         }
         let improved = match (&before, &best) {
@@ -539,5 +709,8 @@ mod tests {
         let o = SynthOptions::default();
         assert_eq!((o.qdepth, o.max_batch, o.linger_us), (64, 8, 8));
         assert!(o.beam >= 1 && o.max_cores >= 1);
+        // Sequential scorer + pruning by default: `jobs` is an opt-in
+        // wall-clock knob, never a semantic one.
+        assert_eq!((o.jobs, o.prune), (1, true));
     }
 }

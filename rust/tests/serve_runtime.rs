@@ -63,6 +63,19 @@ fn serving_is_reproducible_across_runs() {
     assert_eq!(run(), run());
 }
 
+#[test]
+fn borrowed_trace_serving_matches_owned() {
+    // `serve_slice` (the synth scorer's zero-copy path) and `serve`
+    // are one serve loop — identical ServeReport, bit-for-bit.
+    let t = trace(0xB0B0, 20);
+    let mut borrowed = Server::builder().build().unwrap();
+    let mut owned = Server::builder().build().unwrap();
+    let a = borrowed.serve_slice(&t).unwrap();
+    let b = owned.serve(t).unwrap();
+    assert_eq!(a, b);
+    assert!(a.telemetry.completed > 0);
+}
+
 // ---------------------------------------------------------------
 // (b) Saturation: bounded queue, load-shedding, full accounting.
 // ---------------------------------------------------------------

@@ -9,6 +9,9 @@
 //!   baselines on the demo trace;
 //! - the search result is bit-identical across reruns and under
 //!   sequential vs parallel serving;
+//! - frontier scoring is bit-identical at any `jobs` value (PR 8), and
+//!   dominance pruning is winner-preserving — same fleet and score,
+//!   never more replays;
 //! - infeasible candidates are rejected with the placer's reason, not
 //!   silently skipped.
 
@@ -18,6 +21,7 @@ use egpu::api::{
     synthesize, AreaBudget, FleetBuilder, KernelCache, Server, SynthOptions, SynthResult,
 };
 use egpu::harness::loadgen::{demo_requests, heavy_tail_requests, BurstSpec, LoadSpec};
+use egpu::harness::Rng;
 use egpu::model::resources::ResourceReport;
 use egpu::place;
 use egpu::serve::Request;
@@ -172,6 +176,83 @@ fn search_is_bit_identical_across_reruns_and_dispatch_modes() {
     assert_eq!(a.score, c.score);
     assert_eq!((a.completed, a.shed, a.deadline_missed), (c.completed, c.shed, c.deadline_missed));
     assert_eq!(a.evaluated, c.evaluated);
+}
+
+#[test]
+fn parallel_scoring_is_bit_identical_across_jobs_and_reruns() {
+    // The full SynthResult — winner, score, usage, baselines, rejects
+    // AND the evaluated count — must not depend on how many scoring
+    // workers replay the frontier, nor on the run.
+    let cands: Vec<EgpuConfig> = candidate_space().into_iter().step_by(3).collect();
+    let budget = budget();
+    let trace = heavy_tail_requests(&BurstSpec::demo(8));
+    let base = SynthOptions { max_cores: 3, candidates: cands, ..SynthOptions::default() };
+
+    let one = synthesize(&budget, &trace, &SynthOptions { jobs: 1, ..base.clone() })
+        .expect("jobs=1 synthesis must succeed");
+    let four = synthesize(&budget, &trace, &SynthOptions { jobs: 4, ..base.clone() })
+        .expect("jobs=4 synthesis must succeed");
+    let again = synthesize(&budget, &trace, &SynthOptions { jobs: 4, ..base })
+        .expect("jobs=4 rerun must succeed");
+    assert_eq!(one, four, "jobs=4 must be bit-identical to the sequential scorer");
+    assert_eq!(four, again, "jobs=4 must be bit-identical across reruns");
+}
+
+#[test]
+fn pruning_preserves_the_winner_on_randomized_budgets_and_seeds() {
+    // Property: across randomized area budgets and trace seeds,
+    // dominance pruning never changes the winning fleet or its
+    // FleetScore — it only skips replays, so `evaluated` can only
+    // shrink (or tie). Feasibility (Err vs Ok) must agree too.
+    let cands: Vec<EgpuConfig> = candidate_space().into_iter().step_by(4).collect();
+    let mut rng = Rng::new(0x5EED_D011);
+    for case in 0..4 {
+        let budget = AreaBudget {
+            alms: 24_000 + rng.below(30_000) as u64,
+            dsps: 64 + rng.below(96) as u64,
+            m20ks: 700 + rng.below(700) as u64,
+        };
+        let trace = heavy_tail_requests(&BurstSpec {
+            seed: rng.next_u64(),
+            ..BurstSpec::demo(6)
+        });
+        let base = SynthOptions {
+            max_cores: 3,
+            candidates: cands.clone(),
+            jobs: 2,
+            ..SynthOptions::default()
+        };
+        let on = synthesize(&budget, &trace, &SynthOptions { prune: true, ..base.clone() });
+        let off = synthesize(&budget, &trace, &SynthOptions { prune: false, ..base });
+        match (on, off) {
+            (Ok(on), Ok(off)) => {
+                assert_eq!(
+                    on.fleet, off.fleet,
+                    "case {case} ({budget}): pruning changed the winner"
+                );
+                assert_eq!(
+                    on.score, off.score,
+                    "case {case} ({budget}): pruning changed the score"
+                );
+                assert_eq!(
+                    (on.completed, on.shed, on.deadline_missed),
+                    (off.completed, off.shed, off.deadline_missed),
+                    "case {case} ({budget}): pruning changed the winner's serve card"
+                );
+                assert!(
+                    on.evaluated <= off.evaluated,
+                    "case {case} ({budget}): pruning performed {} replays, unpruned {}",
+                    on.evaluated,
+                    off.evaluated
+                );
+            }
+            (on, off) => assert_eq!(
+                on.is_err(),
+                off.is_err(),
+                "case {case} ({budget}): pruning changed feasibility"
+            ),
+        }
+    }
 }
 
 #[test]

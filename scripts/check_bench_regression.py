@@ -7,6 +7,7 @@ regresses more than ``max_regression_pct`` below its floor:
 
 - per-kernel ``mcyc_per_s_unchecked`` (the fast-path simulator rate)
 - serving ``wall_jobs_per_s`` (steady-state serving throughput)
+- synthesis ``fleets_per_s`` (frontier-batched fleet-scoring throughput)
 
 Modeled quantities are deliberately *not* gated here — bit-identity of
 modeled cycles is the parity test suites' job; this gate only stops
@@ -73,6 +74,26 @@ def main() -> None:
                 errors.append(
                     f"serving wall_jobs_per_s: {rate:.1f} is more than "
                     f"{max_reg:.0f}% below the committed floor of {serving_floor}"
+                )
+            checked += 1
+
+    synth_floor = baseline.get("synthesis", {}).get("fleets_per_s")
+    if synth_floor is not None:
+        synthesis = bench.get("synthesis", {})
+        if "fleets_per_s" not in synthesis:
+            errors.append("synthesis.fleets_per_s missing from the bench output")
+        else:
+            rate = float(synthesis["fleets_per_s"])
+            limit = float(synth_floor) * factor
+            status = "ok" if rate >= limit else "REGRESSED"
+            print(
+                f"bench-regression: synthesis fleets_per_s: {rate:.1f} "
+                f"(floor {synth_floor}, limit {limit:.1f}) {status}"
+            )
+            if rate < limit:
+                errors.append(
+                    f"synthesis fleets_per_s: {rate:.1f} is more than "
+                    f"{max_reg:.0f}% below the committed floor of {synth_floor}"
                 )
             checked += 1
 
