@@ -423,6 +423,59 @@ fn main() {
         )
     };
 
+    // Dispatch plane: steady-state serve rounds over one warmed server —
+    // the persistent-pool + superplan-cache hot path. After a warmup
+    // round, every round replays the identical trace on a fresh
+    // measurement window; steady-state rounds must spawn no worker
+    // threads and compile nothing (kernels or fused superplans).
+    let dispatch_json = {
+        let mut server = Server::builder().build().unwrap();
+        let trace = demo_requests(&LoadSpec::demo(40));
+        let warm = server.serve_slice(&trace).unwrap();
+        assert!(warm.telemetry.completed > 0, "the warmup round must serve");
+        let warm_superplans = server.superplan_stats().compiles;
+        let warm_kernels = server.cache_stats().compiles;
+        let rounds = samples.max(3);
+        let wall = std::time::Instant::now();
+        for _ in 0..rounds {
+            server.reset_timeline();
+            let r = server.serve_slice(&trace).unwrap();
+            assert_eq!(
+                r.telemetry.completed, warm.telemetry.completed,
+                "steady-state rounds must serve the identical workload"
+            );
+        }
+        let wall_s = wall.elapsed().as_secs_f64().max(1e-9);
+        let steady_batches_per_s = (rounds as u64 * warm.telemetry.batches) as f64 / wall_s;
+        let sp = server.superplan_stats();
+        let steady_superplan_compiles = sp.compiles - warm_superplans;
+        let steady_kernel_compiles = server.cache_stats().compiles - warm_kernels;
+        let pool_spawns = server.pool_spawns();
+        assert_eq!(
+            steady_superplan_compiles, 0,
+            "steady-state rounds must not recompile superplans"
+        );
+        assert_eq!(pool_spawns, 1, "one worker-pool spawn per server lifetime");
+        println!(
+            "dispatch ({rounds} steady rounds): {steady_batches_per_s:.0} batches/s wall, \
+             pool spawns {pool_spawns}, superplan {}/{} (compiles/hits), \
+             0 steady-state recompiles",
+            sp.compiles, sp.hits
+        );
+        format!(
+            "  \"dispatch\": {{\"rounds\": {rounds}, \"steady_batches_per_s\": \
+             {steady_batches_per_s:.1}, \"pool_spawns\": {pool_spawns}, \
+             \"pool_revives\": {}, \"superplan_compiles\": {}, \"superplan_hits\": {}, \
+             \"superplan_entries\": {}, \
+             \"steady_superplan_compiles\": {steady_superplan_compiles}, \
+             \"steady_kernel_compiles\": {steady_kernel_compiles}}},\n",
+            server.pool_revives(),
+            sp.compiles,
+            sp.hits,
+            sp.entries,
+        )
+    };
+
     // Fleet synthesis: the full model → place → serve loop under the
     // demo area budget, scored on the seeded heavy-tail trace. The
     // result is modeled-cycle deterministic (same budget, trace and
@@ -531,7 +584,7 @@ fn main() {
 
     let json = format!(
         "{{\n  \"samples\": {samples},\n  \"kernels\": [\n{}\n  ],\n  \
-         \"static_schedule\": [\n{}\n  ],\n{superplan_json}{fleet_json}{serving_json}{synthesis_json}  \
+         \"static_schedule\": [\n{}\n  ],\n{superplan_json}{fleet_json}{serving_json}{dispatch_json}{synthesis_json}  \
          \"aggregate_mcyc_per_s_unchecked\": {aggregate:.2},\n  \
          \"multi_core\": {{\"cores\": 4, \"jobs\": 4, \"kernel\": \"fft-256\", \
          \"makespan_cycles\": {seq_span}, \"sequential_ms\": {:.4}, \

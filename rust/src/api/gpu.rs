@@ -165,8 +165,10 @@ impl Gpu {
 
     /// Wrap an already-constructed machine (e.g. one with a custom
     /// [`BlockExec`](crate::datapath::BlockExec) backend).
-    pub fn from_machine(machine: Machine) -> Gpu {
+    pub fn from_machine(mut machine: Machine) -> Gpu {
         let bus = DataBus::new(machine.cfg.core_mhz());
+        let cache = KernelCache::shared();
+        machine.set_superplan_cache(Arc::clone(cache.superplans()));
         Gpu {
             machine,
             bus,
@@ -176,14 +178,24 @@ impl Gpu {
             pending_bus: 0,
             timeline: Vec::new(),
             alloc_top: 0,
-            cache: KernelCache::shared(),
+            cache,
         }
     }
 
     /// Share a kernel-specialization cache with other devices (fleets,
-    /// other `Gpu`s). Replaces the private per-device cache.
+    /// other `Gpu`s). Replaces the private per-device cache; the
+    /// machine re-attaches to the new cache's superplan side so
+    /// fused-trace sharing follows the kernel cache.
     pub fn set_kernel_cache(&mut self, cache: Arc<KernelCache>) {
         self.cache = cache;
+        self.machine
+            .set_superplan_cache(Arc::clone(self.cache.superplans()));
+    }
+
+    /// Superplan cache counters for this device's cache handle (shared
+    /// totals when the cache is shared across devices).
+    pub fn superplan_stats(&self) -> crate::sim::SuperplanCacheStats {
+        self.cache.superplans().stats()
     }
 
     /// This device's kernel-specialization cache.

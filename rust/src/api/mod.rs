@@ -91,6 +91,7 @@ pub use crate::serve::{
     ShedReason, ShedRecord, Telemetry,
 };
 pub use crate::sim::config::FeatureSet;
+pub use crate::sim::{SuperplanActivity, SuperplanCacheStats};
 pub use crate::synth::{
     synthesize, AreaBudget, AreaUsage, BaselineScore, FleetScore, SynthOptions, SynthResult,
 };

@@ -14,6 +14,7 @@ use std::sync::Arc;
 use crate::coordinator::{Coordinator, Job, ReuseStats};
 use crate::kernels::{CacheStats, Kernel, KernelCache, KernelSpec};
 use crate::sim::config::EgpuConfig;
+use crate::sim::{SuperplanActivity, SuperplanCacheStats};
 
 use super::gpu::LaunchReport;
 use super::ApiError;
@@ -124,6 +125,31 @@ impl GpuArray {
     /// batches add only hits.
     pub fn machine_reuse_stats(&self) -> ReuseStats {
         self.coord.reuse_stats()
+    }
+
+    /// Fleet-wide superplan cache counters (compiles/hits/entries),
+    /// one level below [`GpuArray::machine_reuse_stats`]: each distinct
+    /// (program, config fingerprint, threads) triple compiles its fused
+    /// traces exactly once across the whole fleet.
+    pub fn superplan_stats(&self) -> SuperplanCacheStats {
+        self.coord.superplan_stats()
+    }
+
+    /// Summed per-core superplan rebuild/fast-skip activity (see
+    /// [`crate::sim::SuperplanActivity`]).
+    pub fn superplan_activity(&self) -> SuperplanActivity {
+        self.coord.superplan_activity()
+    }
+
+    /// Worker pools spawned by the coordinator (0 sequential-only, else
+    /// 1 for its whole lifetime).
+    pub fn pool_spawns(&self) -> u64 {
+        self.coord.pool_spawns()
+    }
+
+    /// Worker threads revived after dying (0 in normal operation).
+    pub fn pool_revives(&self) -> u64 {
+        self.coord.pool_revives()
     }
 
     /// Advance the modeled timeline to `cycle` (an explicit idle gap;

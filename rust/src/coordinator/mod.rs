@@ -41,9 +41,11 @@
 //! # Parallel dispatch
 //!
 //! On a multi-core coordinator the cores *simulate* in parallel: each core
-//! gets a worker thread (`std::thread::scope`) running its job sequence in
-//! dispatch order, while the *modeled* timeline — bus reservations, core
-//! free times, `JobResult` start/end — is replayed sequentially in
+//! has a resident worker thread in a [`pool::CorePool`] — spawned once,
+//! on the coordinator's first parallel batch, and reused by every
+//! subsequent `run_all` call and serve window — running its job sequence
+//! in dispatch order, while the *modeled* timeline — bus reservations,
+//! core free times, `JobResult` start/end — is replayed sequentially in
 //! submission order on the dispatching thread. The simulated-cycle
 //! accounting is therefore bit-identical to the sequential reference path
 //! (`set_parallel(false)`), which `rust/tests/coordinator_integration.rs`
@@ -52,16 +54,18 @@
 //! earliest-free choice once it is provable from accounted jobs plus a
 //! lower bound on outstanding ones, waiting for workers otherwise.
 
+mod pool;
+
 use std::collections::HashMap;
-use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 
 use crate::asm::Program;
 use crate::kernels::{Kernel, KernelCache, KernelSpec};
 use crate::model::frequency::modeled_core_khz;
 use crate::sim::config::{EgpuConfig, FeatureSet};
-use crate::sim::{Machine, RunStats, SimError, PIPELINE_DEPTH};
+use crate::sim::{
+    Machine, RunStats, SimError, SuperplanActivity, SuperplanCacheStats, PIPELINE_DEPTH,
+};
 
 /// Default kernel cycle budget: bounds runaway programs without ever
 /// tripping on a real workload (the largest paper kernel, MMM-128, runs
@@ -134,6 +138,11 @@ pub struct Job {
     pub stream: Option<u64>,
     /// Cycle budget for the kernel run.
     pub max_cycles: u64,
+    /// Test hook: panic inside job execution instead of running it, so
+    /// the poison/revive paths can be exercised without a kernel that
+    /// defeats the validation layers. Never set outside tests.
+    #[doc(hidden)]
+    pub panic_for_test: bool,
 }
 
 impl Job {
@@ -151,6 +160,7 @@ impl Job {
             keep_data: false,
             stream: None,
             max_cycles: DEFAULT_CYCLE_BUDGET,
+            panic_for_test: false,
         }
     }
 
@@ -224,6 +234,14 @@ impl Job {
     /// Override the default kernel cycle budget.
     pub fn budget(mut self, max_cycles: u64) -> Job {
         self.max_cycles = max_cycles;
+        self
+    }
+
+    /// Test hook: make this job panic at execution time (see
+    /// [`Job::panic_for_test`]).
+    #[doc(hidden)]
+    pub fn inject_panic(mut self) -> Job {
+        self.panic_for_test = true;
         self
     }
 
@@ -547,6 +565,9 @@ fn exec_assembled(
     prog: Option<Program>,
     job: &Job,
 ) -> Result<(RunStats, Vec<Vec<u32>>), SimError> {
+    if job.panic_for_test {
+        panic!("injected test panic: job '{}'", job.kernel.name);
+    }
     if !job.keep_data {
         m.shared_mut().fill(0);
     }
@@ -649,16 +670,13 @@ fn rollback_dispatch(
 /// What a worker hands back for one job.
 type JobOutcome = Result<(RunStats, Vec<Vec<u32>>), SimError>;
 
-/// Worker → dispatcher result slots, indexed by submission order.
-type OutcomeSlots = (Mutex<Vec<Option<JobOutcome>>>, Condvar);
-
 /// [`account_next`] plus error-path unwinding: when the job at the
 /// accounting cursor fails, its own bookkeeping stays (the sequential
 /// path applies bookkeeping before running a job) but every job
 /// dispatched after it is rolled back via [`rollback_dispatch`].
 #[allow(clippy::too_many_arguments)]
 fn account_next_unwinding(
-    slots: &OutcomeSlots,
+    slots: &pool::BatchShared,
     metas: &[DispatchMeta],
     acct: &mut usize,
     pending: &mut [usize],
@@ -706,12 +724,14 @@ struct TimelineState<'a> {
 }
 
 /// Account the next job in submission order: block until its worker
-/// outcome lands, then replay the bus/core timeline exactly as the
-/// sequential path would (load reservation, compute converted onto the
-/// bus clock, unload reservation). On a job error the load reservation
-/// persists, matching the sequential path's early return.
+/// outcome lands ([`pool::BatchShared::take`] — the dispatcher is the
+/// board's only waiter, woken only by its own index), then replay the
+/// bus/core timeline exactly as the sequential path would (load
+/// reservation, compute converted onto the bus clock, unload
+/// reservation). On a job error the load reservation persists, matching
+/// the sequential path's early return.
 fn account_next(
-    slots: &OutcomeSlots,
+    slots: &pool::BatchShared,
     metas: &[DispatchMeta],
     acct: &mut usize,
     pending: &mut [usize],
@@ -720,16 +740,7 @@ fn account_next(
 ) -> Result<(), SimError> {
     let idx = *acct;
     assert!(idx < metas.len(), "accounting cursor past dispatched jobs");
-    let outcome = {
-        let (lock, cv) = slots;
-        let mut guard = lock.lock().unwrap();
-        loop {
-            if let Some(o) = guard[idx].take() {
-                break o;
-            }
-            guard = cv.wait(guard).unwrap();
-        }
-    };
+    let outcome = slots.take(idx);
     let meta = &metas[idx];
     let start = tl.bus_cal.reserve(tl.core_free[meta.core], meta.load_cycles);
     let (stats, outputs) = outcome?;
@@ -803,6 +814,24 @@ pub struct Coordinator {
     reuse_hits: u64,
     /// Machine-reuse misses (jobs that assembled + loaded fresh).
     reuse_misses: u64,
+    /// The resident worker pool ([`pool::CorePool`]): `None` until the
+    /// first parallel batch, then alive for the coordinator's lifetime.
+    pool: Option<pool::CorePool>,
+    /// Worker pools spawned — 0 (sequential-only) or 1, asserted by the
+    /// serve-runtime pool-lifecycle tests.
+    pool_spawns: u64,
+    /// Per-batch dispatch scratch, retained across `run_all` calls.
+    scratch: BatchScratch,
+}
+
+/// Dispatch scratch reused across batches: the steady-state serve loop
+/// re-dispatches every window without reallocating metadata, undo or
+/// pending-count buffers (cleared, capacity kept).
+#[derive(Default)]
+struct BatchScratch {
+    metas: Vec<DispatchMeta>,
+    undo: Vec<BookUndo>,
+    pending: Vec<usize>,
 }
 
 /// Machine-reuse counters for steady-state serving assertions: `hits`
@@ -843,10 +872,17 @@ impl Coordinator {
                 "a Coordinator needs at least one core (empty fleet)",
             ));
         }
-        let cores = cfgs
+        let cache = KernelCache::shared();
+        let mut cores = cfgs
             .iter()
             .map(|cfg| Machine::new(cfg.clone()))
             .collect::<Result<Vec<_>, _>>()?;
+        // Every core shares the cache's superplan side: one fused-trace
+        // compile per (program, config fingerprint, threads) triple
+        // across the fleet.
+        for m in &mut cores {
+            m.set_superplan_cache(Arc::clone(cache.superplans()));
+        }
         let core_khz: Vec<u64> = cfgs.iter().map(modeled_core_khz).collect();
         let bus_khz = *core_khz.iter().max().expect("at least one core");
         let n = cfgs.len();
@@ -862,10 +898,13 @@ impl Coordinator {
             core_resident: vec![None; n],
             last_core: None,
             parallel: true,
-            cache: KernelCache::shared(),
+            cache,
             core_loaded: vec![None; n],
             reuse_hits: 0,
             reuse_misses: 0,
+            pool: None,
+            pool_spawns: 0,
+            scratch: BatchScratch::default(),
             cfgs,
             cores,
         })
@@ -919,9 +958,51 @@ impl Coordinator {
     }
 
     /// Share a kernel cache with other devices (replaces the private
-    /// one; call before submitting spec jobs).
+    /// one; call before submitting spec jobs). Every core re-attaches to
+    /// the new cache's superplan side, so fused-trace sharing follows
+    /// the kernel cache.
     pub fn set_kernel_cache(&mut self, cache: Arc<KernelCache>) {
         self.cache = cache;
+        for m in &mut self.cores {
+            m.set_superplan_cache(Arc::clone(self.cache.superplans()));
+        }
+    }
+
+    /// Fleet-wide superplan cache totals (compiles / hits / resident
+    /// entries), the fused-trace analogue of
+    /// [`crate::kernels::CacheStats`]. Lookups happen under the cache
+    /// lock in dispatch order per core, so the totals are deterministic
+    /// between sequential and pooled-parallel dispatch.
+    pub fn superplan_stats(&self) -> SuperplanCacheStats {
+        self.cache.superplans().stats()
+    }
+
+    /// Summed per-core superplan rebuild/fast-skip activity (see
+    /// [`SuperplanActivity`]). Steady-state serving accumulates only
+    /// fast skips after warmup — the zero-recompile property the serve
+    /// tests and the CLI's steady-state replay line assert.
+    pub fn superplan_activity(&self) -> SuperplanActivity {
+        self.cores
+            .iter()
+            .map(Machine::superplan_activity)
+            .fold(SuperplanActivity::default(), |acc, a| SuperplanActivity {
+                rebuilds: acc.rebuilds + a.rebuilds,
+                fast_skips: acc.fast_skips + a.fast_skips,
+            })
+    }
+
+    /// Worker pools spawned over this coordinator's lifetime: 0 while
+    /// dispatch has been sequential-only, 1 from the first parallel
+    /// batch on — never more, however many batches or serve windows run.
+    pub fn pool_spawns(&self) -> u64 {
+        self.pool_spawns
+    }
+
+    /// Worker threads revived after dying (0 in normal operation; job
+    /// failures and panics poison a core for the rest of its batch but
+    /// never kill the thread).
+    pub fn pool_revives(&self) -> u64 {
+        self.pool.as_ref().map_or(0, pool::CorePool::revives)
     }
 
     /// Escape hatch: core `c`'s machine, for architectural-state
@@ -1075,20 +1156,28 @@ impl Coordinator {
     /// multi-core coordinator, in wall-clock too (see the module docs;
     /// results and cycle accounting are identical either way).
     pub fn run_all(&mut self) -> Result<Vec<JobResult>, SimError> {
-        let jobs = std::mem::take(&mut self.queue);
-        self.prevalidate(&jobs)?;
-        if self.parallel && self.cores.len() > 1 && jobs.len() > 1 {
-            self.run_all_parallel(jobs)
-        } else {
-            self.run_all_sequential(jobs)
-        }
+        let mut jobs = std::mem::take(&mut self.queue);
+        let r = (|| {
+            self.prevalidate(&jobs)?;
+            if self.parallel && self.cores.len() > 1 && jobs.len() > 1 {
+                self.run_all_parallel(&mut jobs)
+            } else {
+                self.run_all_sequential(&mut jobs)
+            }
+        })();
+        // Both paths drain `jobs` (errors included — `Drain` empties on
+        // drop); hand the capacity back so steady-state serving submits
+        // every window into one retained queue allocation.
+        jobs.clear();
+        self.queue = jobs;
+        r
     }
 
     /// The sequential reference path: place → run → account, one job at
     /// a time.
-    fn run_all_sequential(&mut self, jobs: Vec<Job>) -> Result<Vec<JobResult>, SimError> {
+    fn run_all_sequential(&mut self, jobs: &mut Vec<Job>) -> Result<Vec<JobResult>, SimError> {
         let mut results = Vec::with_capacity(jobs.len());
-        for job in jobs {
+        for job in jobs.drain(..) {
             let req = job.requires();
             let fleet = FleetCtx {
                 cfgs: &self.cfgs,
@@ -1139,7 +1228,7 @@ impl Coordinator {
     /// simulated before shutdown, so the unwound cores' residency is
     /// poisoned — a later chained launch onto them errors loudly where
     /// the sequential path would have found intact data.
-    fn run_all_parallel(&mut self, jobs: Vec<Job>) -> Result<Vec<JobResult>, SimError> {
+    fn run_all_parallel(&mut self, jobs: &mut Vec<Job>) -> Result<Vec<JobResult>, SimError> {
         let n = jobs.len();
         let Coordinator {
             cores,
@@ -1157,6 +1246,9 @@ impl Coordinator {
             bus_khz,
             cache,
             bus,
+            pool,
+            pool_spawns,
+            scratch,
             ..
         } = self;
         let ncores = cores.len();
@@ -1179,51 +1271,33 @@ impl Coordinator {
                 }
             };
         }
-        let slots: OutcomeSlots = (Mutex::new((0..n).map(|_| None).collect()), Condvar::new());
-        let slots = &slots;
-
-        std::thread::scope(|scope| {
-            let mut txs: Vec<Sender<(usize, Option<Program>, Job)>> = Vec::with_capacity(ncores);
-            for m in cores.iter_mut() {
-                let (tx, rx) = channel::<(usize, Option<Program>, Job)>();
-                txs.push(tx);
-                scope.spawn(move || {
-                    // A worker stops at its first failure: the sequential
-                    // path never runs anything after a failed job, so
-                    // later jobs queued to this core are skipped. Panics
-                    // become errors so the dispatcher can't deadlock.
-                    let mut dead = false;
-                    for (idx, prog, job) in rx {
-                        let outcome = if dead {
-                            Err(SimError::new(
-                                0,
-                                "skipped: an earlier job on this core failed",
-                            ))
-                        } else {
-                            catch_unwind(AssertUnwindSafe(|| exec_assembled(m, prog, &job)))
-                                .unwrap_or_else(|_| {
-                                    Err(SimError::new(
-                                        0,
-                                        format!("job '{}' panicked in its worker", job.kernel.name),
-                                    ))
-                                })
-                        };
-                        dead = dead || outcome.is_err();
-                        let (lock, cv) = slots;
-                        lock.lock().unwrap()[idx] = Some(outcome);
-                        cv.notify_all();
-                    }
-                });
-            }
-
-            let mut metas: Vec<DispatchMeta> = Vec::with_capacity(n);
-            let mut undo: Vec<BookUndo> = Vec::with_capacity(n);
+        // The pool spawns once per coordinator lifetime — every later
+        // batch reuses the resident workers (counted so tests and the
+        // bench harness can assert the spawn-once property).
+        if pool.is_none() {
+            *pool_spawns += 1;
+        }
+        let pool = pool.get_or_insert_with(|| pool::CorePool::new(ncores));
+        let shared = pool.begin_batch(cores, n);
+        let r = {
+            let shared = &*shared;
+            let pool = &*pool;
+            // Dispatch scratch is retained across batches: a steady-state
+            // serve window allocates nothing here.
+            let BatchScratch {
+                metas,
+                undo,
+                pending,
+            } = &mut *scratch;
+            metas.clear();
+            undo.clear();
+            pending.clear();
+            pending.resize(ncores, 0);
             let mut out: Vec<JobResult> = Vec::with_capacity(n);
-            let mut pending = vec![0usize; ncores];
             let mut acct = 0usize;
 
             let r = (|| -> Result<Vec<JobResult>, SimError> {
-                for (i, job) in jobs.into_iter().enumerate() {
+                for (i, job) in jobs.drain(..).enumerate() {
                     let req = job.requires();
                     let core = loop {
                         match place_job(
@@ -1238,10 +1312,10 @@ impl Coordinator {
                         ) {
                             Ok(Placement::Core(c)) => break c,
                             Ok(Placement::NeedAccounting) => account_next_unwinding(
-                                slots,
-                                &metas,
+                                shared,
+                                metas,
                                 &mut acct,
-                                &mut pending,
+                                pending,
                                 timeline!(),
                                 &mut out,
                                 stream_core,
@@ -1250,7 +1324,7 @@ impl Coordinator {
                                 core_loaded,
                                 reuse_hits,
                                 reuse_misses,
-                                &undo,
+                                undo,
                             )?,
                             Err(e) => {
                                 // Sequential parity: every job before this
@@ -1258,10 +1332,10 @@ impl Coordinator {
                                 // accounted before the error surfaced.
                                 while acct < metas.len() {
                                     account_next_unwinding(
-                                        slots,
-                                        &metas,
+                                        shared,
+                                        metas,
                                         &mut acct,
-                                        &mut pending,
+                                        pending,
                                         timeline!(),
                                         &mut out,
                                         stream_core,
@@ -1270,7 +1344,7 @@ impl Coordinator {
                                         core_loaded,
                                         reuse_hits,
                                         reuse_misses,
-                                        &undo,
+                                        undo,
                                     )?;
                                 }
                                 return Err(e);
@@ -1320,10 +1394,10 @@ impl Coordinator {
                         Err(e) => {
                             while acct < metas.len() {
                                 account_next_unwinding(
-                                    slots,
-                                    &metas,
+                                    shared,
+                                    metas,
                                     &mut acct,
-                                    &mut pending,
+                                    pending,
                                     timeline!(),
                                     &mut out,
                                     stream_core,
@@ -1332,7 +1406,7 @@ impl Coordinator {
                                     core_loaded,
                                     reuse_hits,
                                     reuse_misses,
-                                    &undo,
+                                    undo,
                                 )?;
                             }
                             return Err(e);
@@ -1350,19 +1424,14 @@ impl Coordinator {
                         unload_cycles: bus.transfer_cycles(job.unload_words()),
                     });
                     pending[core] += 1;
-                    // Worker threads outlive the dispatch loop (they exit
-                    // when `txs` drops), so a send can only fail if one
-                    // panicked straight through catch_unwind.
-                    txs[core]
-                        .send((i, prog, job))
-                        .expect("coordinator worker hung up");
+                    pool.send(core, i, prog, job);
                 }
                 while acct < metas.len() {
                     account_next_unwinding(
-                        slots,
-                        &metas,
+                        shared,
+                        metas,
                         &mut acct,
-                        &mut pending,
+                        pending,
                         timeline!(),
                         &mut out,
                         stream_core,
@@ -1371,16 +1440,28 @@ impl Coordinator {
                         core_loaded,
                         reuse_hits,
                         reuse_misses,
-                        &undo,
+                        undo,
                     )?;
                 }
                 Ok(out)
             })();
-            // Close the channels on every path so workers drain and the
-            // scope can join them.
-            drop(txs);
             r
-        })
+        };
+        // Reclaim every machine (in core order) on success and failure
+        // alike; a worker that died mid-batch gets its machine rebuilt
+        // and that core's reuse/residency tracking poisoned.
+        pool.end_batch(
+            cores,
+            |c| {
+                let mut m = Machine::new(cfgs[c].clone())
+                    .expect("core config was valid at fleet construction");
+                m.set_superplan_cache(Arc::clone(cache.superplans()));
+                m
+            },
+            core_loaded,
+            core_resident,
+        );
+        r
     }
 
     /// Decide machine reuse for `job` on `core`: `None` when the
@@ -1413,7 +1494,10 @@ impl Coordinator {
         let load_cycles = self.bus.transfer_cycles(job.load_words());
         let start = self.bus_cal.reserve(self.core_free[core], load_cycles);
 
-        let (stats, outputs) = match exec_assembled(&mut self.cores[core], prog, &job) {
+        // Guarded like the pooled path, so a panicking job yields the
+        // same `SimError` in both dispatch modes (report bit-identity
+        // includes error strings).
+        let (stats, outputs) = match pool::run_job_guarded(&mut self.cores[core], prog, &job) {
             Ok(r) => r,
             Err(e) => {
                 // The machine may have died mid-`load_program`; stop

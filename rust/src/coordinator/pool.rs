@@ -1,0 +1,459 @@
+//! The resident core worker pool.
+//!
+//! `Coordinator::run_all` used to build its execution fabric per batch:
+//! `std::thread::scope` spawned one worker per core, fresh channels
+//! carried the jobs, and a batch-scoped mutex/condvar pair carried the
+//! outcomes. In a serving loop that is thread spawn/join plus channel
+//! and buffer allocation on every batch window — infrastructure churn
+//! the modeled hardware never pays, since the paper's whole point is
+//! that the datapath stays resident and is *fed*. This module makes the
+//! host simulator match that discipline: a [`CorePool`] of worker
+//! threads created once (lazily, on the first parallel batch) and owned
+//! by the `Coordinator` for its lifetime.
+//!
+//! # Batch protocol
+//!
+//! Machines live in `Coordinator::cores` between batches (the escape
+//! hatches and the sequential path borrow them directly) and are
+//! *loaned* to the workers for the duration of one batch:
+//!
+//! ```text
+//! begin_batch:  dispatcher --Batch{machine, shared}--> worker c   (all c)
+//! dispatch:     dispatcher --Job{idx, prog, job}-----> worker c   (per job)
+//!               worker c   --shared.complete(idx, outcome)
+//! end_batch:    dispatcher --EndBatch---------------> worker c   (all c)
+//!               worker c   --ret channel------------> machine back
+//! ```
+//!
+//! [`BatchShared`] replaces the old `(Mutex<Vec<Option<..>>>, Condvar)`
+//! + `notify_all` pattern with *targeted* signaling: the dispatcher is
+//! the only waiter and it accounts jobs in submission order, so it
+//! records the one index it is blocked on and a completing worker
+//! notifies only when it fills exactly that slot. A 4-core fleet no
+//! longer wakes every sleeper on every retire — there is one sleeper,
+//! woken once per job it actually waits for. The slot vector itself is
+//! retained across batches (reset in place once the workers' `Arc`
+//! clones return), as is each worker's channel pair.
+//!
+//! # Poison and revive
+//!
+//! A job that fails or panics marks its worker *dead for the rest of
+//! the batch* (later jobs on that core answer "skipped", exactly like
+//! the scoped-thread implementation) — but the thread itself survives,
+//! and the next `begin_batch` clears the flag: poisoned cores drain and
+//! revive between batches instead of killing the fabric. If a worker
+//! thread genuinely dies (only reachable through the test-only poison
+//! message — user panics are caught inside the worker), the pool
+//! rebuilds: a failed loan send returns the machine (`SendError` gives
+//! the message back) and the worker respawns; a failed reclaim rebuilds
+//! the machine from the core's config and poisons the coordinator's
+//! resident-kernel tracking so no stale reuse decision survives.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::asm::Program;
+use crate::kernels::Kernel;
+use crate::sim::{Machine, SimError};
+
+use super::{exec_assembled, Job, JobOutcome};
+
+/// Run one job on a loaned machine with panics contained: both dispatch
+/// paths use this, so a panicking job produces the *same* `SimError`
+/// sequentially and in a pooled worker (serve-report bit-identity
+/// includes error strings).
+pub(super) fn run_job_guarded(m: &mut Machine, prog: Option<Program>, job: &Job) -> JobOutcome {
+    catch_unwind(AssertUnwindSafe(|| exec_assembled(m, prog, job))).unwrap_or_else(|_| {
+        Err(SimError::new(
+            0,
+            format!("job '{}' panicked in its worker", job.kernel.name),
+        ))
+    })
+}
+
+/// Outcome slots for one batch, indexed by submission order.
+struct SlotState {
+    slots: Vec<Option<JobOutcome>>,
+    /// Submission index the dispatcher is currently blocked on, if any.
+    /// The dispatcher is the only waiter, so completions notify only
+    /// when they fill exactly this slot.
+    waiting: Option<usize>,
+}
+
+/// Worker → dispatcher completion board for one batch window. Allocated
+/// once and reset in place between batches (the pool holds the `Arc`
+/// across windows; workers hold clones only while a batch is open).
+pub(super) struct BatchShared {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+impl BatchShared {
+    fn new(n: usize) -> BatchShared {
+        BatchShared {
+            state: Mutex::new(SlotState {
+                slots: (0..n).map(|_| None).collect(),
+                waiting: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Reset for a batch of `n` jobs. Requires exclusive ownership
+    /// (`Arc::get_mut`), which holds once every worker has dropped its
+    /// clone at `EndBatch`; the slot allocation is reused.
+    fn reset(&mut self, n: usize) {
+        let state = self.state.get_mut().unwrap();
+        state.slots.clear();
+        state.slots.resize_with(n, || None);
+        state.waiting = None;
+    }
+
+    /// Deliver job `idx`'s outcome, waking the dispatcher only if it is
+    /// blocked on exactly this index.
+    fn complete(&self, idx: usize, outcome: JobOutcome) {
+        let mut st = self.state.lock().unwrap();
+        st.slots[idx] = Some(outcome);
+        if st.waiting == Some(idx) {
+            self.cv.notify_one();
+        }
+    }
+
+    /// Block until job `idx`'s outcome lands, then take it. Called only
+    /// by the dispatcher, in submission order.
+    pub(super) fn take(&self, idx: usize) -> JobOutcome {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(o) = st.slots[idx].take() {
+                st.waiting = None;
+                return o;
+            }
+            st.waiting = Some(idx);
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// Dispatcher → worker messages (one persistent channel per core).
+enum WorkerMsg {
+    /// Open a batch window: loan the core's machine and the batch's
+    /// completion board. Clears the worker's dead flag.
+    Batch {
+        machine: Box<Machine>,
+        shared: Arc<BatchShared>,
+    },
+    /// One job for the open window.
+    Job {
+        idx: usize,
+        prog: Option<Program>,
+        job: Box<Job>,
+    },
+    /// Close the window: drop the board clone, return the machine.
+    EndBatch,
+    /// Kill the worker thread outright (thread-death recovery tests;
+    /// real job panics are caught and never get here).
+    #[cfg(test)]
+    PoisonForTest,
+}
+
+fn worker_loop(rx: Receiver<WorkerMsg>, ret: Sender<Box<Machine>>) {
+    let mut loan: Option<(Box<Machine>, Arc<BatchShared>)> = None;
+    let mut dead = false;
+    for msg in rx {
+        match msg {
+            WorkerMsg::Batch { machine, shared } => {
+                loan = Some((machine, shared));
+                dead = false;
+            }
+            WorkerMsg::Job { idx, prog, job } => {
+                let (m, shared) = loan.as_mut().expect("job sent outside a batch window");
+                // A worker stops at its first failure: the sequential
+                // path never runs anything after a failed job, so later
+                // jobs queued to this core are skipped until the next
+                // batch revives it.
+                let outcome = if dead {
+                    Err(SimError::new(
+                        0,
+                        "skipped: an earlier job on this core failed",
+                    ))
+                } else {
+                    run_job_guarded(m, prog, &job)
+                };
+                dead = dead || outcome.is_err();
+                shared.complete(idx, outcome);
+            }
+            WorkerMsg::EndBatch => {
+                if let Some((m, shared)) = loan.take() {
+                    // Release the board before returning the machine, so
+                    // the dispatcher's reclaim implies exclusive board
+                    // ownership (`Arc::get_mut` succeeds next batch).
+                    drop(shared);
+                    if ret.send(m).is_err() {
+                        return;
+                    }
+                }
+            }
+            #[cfg(test)]
+            WorkerMsg::PoisonForTest => return,
+        }
+    }
+}
+
+/// One resident worker: its job channel, its machine-return channel and
+/// its join handle (`None` once joined during a revive).
+struct Worker {
+    tx: Sender<WorkerMsg>,
+    ret: Receiver<Box<Machine>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+fn spawn_worker(core: usize) -> Worker {
+    let (tx, rx) = channel::<WorkerMsg>();
+    let (ret_tx, ret) = channel::<Box<Machine>>();
+    let handle = std::thread::Builder::new()
+        .name(format!("egpu-core-{core}"))
+        .spawn(move || worker_loop(rx, ret_tx))
+        .expect("spawn coordinator worker thread");
+    Worker {
+        tx,
+        ret,
+        handle: Some(handle),
+    }
+}
+
+/// The long-lived worker pool: one thread per core, created on the
+/// coordinator's first parallel batch and reused by every subsequent
+/// `run_all` call and serve window until the coordinator drops.
+pub(super) struct CorePool {
+    workers: Vec<Worker>,
+    /// The retained completion board (reset in place per batch).
+    shared: Option<Arc<BatchShared>>,
+    /// Worker threads revived after dying (0 outside thread-death
+    /// recovery; batch-level job failures never kill a thread).
+    revives: u64,
+}
+
+impl CorePool {
+    pub(super) fn new(ncores: usize) -> CorePool {
+        CorePool {
+            workers: (0..ncores).map(spawn_worker).collect(),
+            shared: None,
+            revives: 0,
+        }
+    }
+
+    pub(super) fn revives(&self) -> u64 {
+        self.revives
+    }
+
+    fn respawn(&mut self, core: usize) {
+        let old = std::mem::replace(&mut self.workers[core], spawn_worker(core));
+        drop(old.tx);
+        if let Some(h) = old.handle {
+            let _ = h.join();
+        }
+        self.revives += 1;
+    }
+
+    /// Open a batch window of `n_jobs` submission slots: loan every
+    /// machine in `cores` (drained in core order, buffer retained) to
+    /// its worker. A dead worker is respawned and the machine — handed
+    /// back by the failed send — re-loaned to its replacement.
+    pub(super) fn begin_batch(
+        &mut self,
+        cores: &mut Vec<Machine>,
+        n_jobs: usize,
+    ) -> Arc<BatchShared> {
+        let shared = match self.shared.take() {
+            Some(mut arc) => {
+                match Arc::get_mut(&mut arc) {
+                    Some(b) => b.reset(n_jobs),
+                    // Unreachable in practice (workers drop their clones
+                    // before the machines come back), but a fresh board
+                    // is always correct.
+                    None => arc = Arc::new(BatchShared::new(n_jobs)),
+                }
+                arc
+            }
+            None => Arc::new(BatchShared::new(n_jobs)),
+        };
+        for (c, m) in cores.drain(..).enumerate() {
+            let msg = WorkerMsg::Batch {
+                machine: Box::new(m),
+                shared: Arc::clone(&shared),
+            };
+            if let Err(failed) = self.workers[c].tx.send(msg) {
+                self.respawn(c);
+                self.workers[c]
+                    .tx
+                    .send(failed.0)
+                    .expect("freshly spawned coordinator worker hung up");
+            }
+        }
+        self.shared = Some(Arc::clone(&shared));
+        shared
+    }
+
+    /// Queue one job on `core`'s worker for the open window.
+    pub(super) fn send(&self, core: usize, idx: usize, prog: Option<Program>, job: Job) {
+        self.workers[core]
+            .tx
+            .send(WorkerMsg::Job {
+                idx,
+                prog,
+                job: Box::new(job),
+            })
+            .expect("coordinator worker hung up");
+    }
+
+    /// Close the window: each worker drains its remaining jobs (error
+    /// paths leave unread outcomes behind; the board reset discards
+    /// them) and returns its machine, reclaimed here in core order so
+    /// `cores[c]` stays core `c`'s machine. A worker that died mid-batch
+    /// lost its machine: `rebuild(c)` constructs a replacement, the
+    /// worker respawns, and the caller's resident-kernel/resident-data
+    /// trackers for that core are poisoned — the machine is blank, so no
+    /// reuse or chaining decision may trust it.
+    pub(super) fn end_batch(
+        &mut self,
+        cores: &mut Vec<Machine>,
+        rebuild: impl Fn(usize) -> Machine,
+        core_loaded: &mut [Option<Arc<Kernel>>],
+        core_resident: &mut [Option<u64>],
+    ) {
+        debug_assert!(cores.is_empty(), "machines still resident at end_batch");
+        for c in 0..self.workers.len() {
+            let _ = self.workers[c].tx.send(WorkerMsg::EndBatch);
+            match self.workers[c].ret.recv() {
+                Ok(m) => cores.push(*m),
+                Err(_) => {
+                    cores.push(rebuild(c));
+                    core_loaded[c] = None;
+                    core_resident[c] = None;
+                    self.respawn(c);
+                }
+            }
+        }
+    }
+
+    /// Kill core `c`'s worker thread and wait for it to exit — the
+    /// thread-death recovery paths are otherwise unreachable.
+    #[cfg(test)]
+    fn kill_worker_for_test(&mut self, core: usize) {
+        self.workers[core]
+            .tx
+            .send(WorkerMsg::PoisonForTest)
+            .expect("worker already dead");
+        if let Some(h) = self.workers[core].handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for CorePool {
+    fn drop(&mut self) {
+        for w in self.workers.drain(..) {
+            // Disconnect first so the worker's receive loop ends, then
+            // join — machines still on loan are dropped with the thread
+            // (the coordinator is being torn down with us).
+            drop(w.tx);
+            drop(w.ret);
+            if let Some(h) = w.handle {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::EgpuConfig;
+
+    fn machines(n: usize) -> Vec<Machine> {
+        (0..n)
+            .map(|_| Machine::new(EgpuConfig::default()).unwrap())
+            .collect()
+    }
+
+    fn reclaim(pool: &mut CorePool, cores: &mut Vec<Machine>, n: usize) {
+        let mut loaded: Vec<Option<Arc<Kernel>>> = vec![None; n];
+        let mut resident: Vec<Option<u64>> = vec![None; n];
+        pool.end_batch(
+            cores,
+            |_| Machine::new(EgpuConfig::default()).unwrap(),
+            &mut loaded,
+            &mut resident,
+        );
+    }
+
+    #[test]
+    fn machines_survive_a_loan_round_trip() {
+        let mut pool = CorePool::new(2);
+        let mut cores = machines(2);
+        for _ in 0..3 {
+            pool.begin_batch(&mut cores, 4);
+            assert!(cores.is_empty(), "machines are on loan");
+            reclaim(&mut pool, &mut cores, 2);
+            assert_eq!(cores.len(), 2, "every machine comes back");
+        }
+        assert_eq!(pool.revives(), 0);
+    }
+
+    #[test]
+    fn dead_worker_revives_on_begin_batch_without_losing_its_machine() {
+        let mut pool = CorePool::new(2);
+        let mut cores = machines(2);
+        pool.kill_worker_for_test(0);
+        // The failed loan send hands the machine back; the worker
+        // respawns and the batch proceeds normally.
+        pool.begin_batch(&mut cores, 1);
+        reclaim(&mut pool, &mut cores, 2);
+        assert_eq!(cores.len(), 2);
+        assert_eq!(pool.revives(), 1);
+        // The revived worker keeps working on later batches.
+        pool.begin_batch(&mut cores, 1);
+        reclaim(&mut pool, &mut cores, 2);
+        assert_eq!((cores.len(), pool.revives()), (2, 1));
+    }
+
+    #[test]
+    fn mid_batch_death_rebuilds_the_machine_and_poisons_tracking() {
+        let mut pool = CorePool::new(2);
+        let mut cores = machines(2);
+        pool.begin_batch(&mut cores, 1);
+        // The worker dies holding its loaned machine.
+        pool.kill_worker_for_test(1);
+        let mut loaded: Vec<Option<Arc<Kernel>>> =
+            vec![Some(Arc::new(crate::kernels::reduction::reduction(32))); 2];
+        let mut resident: Vec<Option<u64>> = vec![Some(7); 2];
+        pool.end_batch(
+            &mut cores,
+            |_| Machine::new(EgpuConfig::default()).unwrap(),
+            &mut loaded,
+            &mut resident,
+        );
+        assert_eq!(cores.len(), 2, "the lost machine was rebuilt");
+        assert_eq!(pool.revives(), 1);
+        assert!(loaded[0].is_some() && resident[0].is_some(), "core 0 untouched");
+        assert!(loaded[1].is_none(), "rebuilt core's reuse tracking poisoned");
+        assert!(resident[1].is_none(), "rebuilt core's residency poisoned");
+    }
+
+    #[test]
+    fn take_returns_outcomes_in_dispatch_order_with_targeted_wakeups() {
+        let shared = Arc::new(BatchShared::new(2));
+        let s = Arc::clone(&shared);
+        let t = std::thread::spawn(move || {
+            // Complete out of order: idx 1 lands while the dispatcher
+            // waits on idx 0 (no wakeup), then idx 0 (targeted wakeup).
+            s.complete(1, Err(SimError::new(0, "second")));
+            s.complete(0, Err(SimError::new(0, "first")));
+        });
+        assert_eq!(shared.take(0).unwrap_err().message, "first");
+        assert_eq!(shared.take(1).unwrap_err().message, "second");
+        t.join().unwrap();
+    }
+}

@@ -16,6 +16,7 @@ use std::sync::{Arc, Mutex};
 
 use super::{Kernel, KernelSpec};
 use crate::sim::config::EgpuConfig;
+use crate::sim::SuperplanCache;
 
 /// Counters proving the compile-once property (asserted by
 /// `rust/tests/fleet_heterogeneous.rs`).
@@ -29,12 +30,16 @@ pub struct CacheStats {
     pub entries: usize,
 }
 
-/// Memoizes compiled kernels per `(spec, config fingerprint)`.
+/// Memoizes compiled kernels per `(spec, config fingerprint)`, and
+/// carries the fleet-shared [`SuperplanCache`] so every machine attached
+/// to the same kernel cache also shares one superplan compile per
+/// (program, config fingerprint, thread count) triple.
 #[derive(Debug, Default)]
 pub struct KernelCache {
     entries: Mutex<HashMap<(KernelSpec, u64), Arc<Kernel>>>,
     compiles: AtomicU64,
     hits: AtomicU64,
+    superplans: Arc<SuperplanCache>,
 }
 
 impl KernelCache {
@@ -62,6 +67,12 @@ impl KernelCache {
         self.compiles.fetch_add(1, Ordering::Relaxed);
         entries.insert(key, Arc::clone(&kernel));
         Ok(kernel)
+    }
+
+    /// The fleet-shared superplan cache riding along with this kernel
+    /// cache; attach it to every machine the owning device manages.
+    pub fn superplans(&self) -> &Arc<SuperplanCache> {
+        &self.superplans
     }
 
     pub fn stats(&self) -> CacheStats {

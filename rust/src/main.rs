@@ -680,7 +680,7 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         dim: 64,
         deadline_slack: deadline_us.map(|us| server.us_to_cycles(us)),
     });
-    let report = server.serve(trace).map_err(|e| e.to_string())?;
+    let report = server.serve_slice(&trace).map_err(|e| e.to_string())?;
     let t = &report.telemetry;
     let mhz = server.bus_mhz();
 
@@ -750,6 +750,28 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         "span: {:.2} us modeled — {:.0} requests/s sustained",
         server.cycles_to_us(t.span_cycles()),
         t.jobs_per_s(mhz)
+    );
+
+    let sp = server.superplan_stats();
+    println!(
+        "superplan cache: {} compiles, {} hits ({} entries) — one fused-trace \
+         compile per (kernel, config, threads)",
+        sp.compiles, sp.hits, sp.entries
+    );
+    // Steady-state proof: replay the identical trace on the warmed
+    // server (fresh timeline window, caches kept) and show nothing
+    // recompiles. Every printed quantity here is deterministic between
+    // --seq and parallel dispatch.
+    server.reset_timeline();
+    let kernel_compiles = server.cache_stats().compiles;
+    let superplan_compiles = server.superplan_stats().compiles;
+    let replay = server.serve_slice(&trace).map_err(|e| e.to_string())?;
+    println!(
+        "steady-state replay: {} superplan recompiles, {} kernel recompiles \
+         over {} repeat requests",
+        server.superplan_stats().compiles - superplan_compiles,
+        server.cache_stats().compiles - kernel_compiles,
+        replay.submitted()
     );
     Ok(())
 }

@@ -51,12 +51,27 @@ impl BatchPolicy {
 /// deadlines are shed (recorded on the queue), the best
 /// `policy.max_batch` survivors are returned in dispatch order, and
 /// the rest keep their queue slots (and heap positions).
+#[cfg(test)]
 pub(crate) fn draw_batch(
     queue: &mut AdmissionQueue,
     policy: &BatchPolicy,
     now: u64,
 ) -> Vec<Pending> {
     let mut batch = Vec::new();
+    draw_batch_into(queue, policy, now, &mut batch);
+    batch
+}
+
+/// `draw_batch` into a caller-retained buffer: the serve loop reuses
+/// one `Vec` across every window, so steady-state batch formation
+/// allocates nothing.
+pub(crate) fn draw_batch_into(
+    queue: &mut AdmissionQueue,
+    policy: &BatchPolicy,
+    now: u64,
+    batch: &mut Vec<Pending>,
+) {
+    batch.clear();
     while let Some(head) = queue.peek() {
         if head.deadline.is_some_and(|d| d <= now) {
             let p = queue.pop().expect("peeked entry pops");
@@ -73,7 +88,6 @@ pub(crate) fn draw_batch(
         }
         batch.push(queue.pop().expect("peeked entry pops"));
     }
-    batch
 }
 
 #[cfg(test)]

@@ -26,9 +26,10 @@ use crate::api::{ApiError, FleetBuilder, GpuArray};
 use crate::coordinator::ReuseStats;
 use crate::kernels::{CacheStats, KernelCache};
 use crate::sim::config::ConfigError;
+use crate::sim::{SuperplanActivity, SuperplanCacheStats};
 
-use super::batcher::{draw_batch, BatchPolicy};
-use super::queue::AdmissionQueue;
+use super::batcher::{draw_batch_into, BatchPolicy};
+use super::queue::{AdmissionQueue, Pending};
 use super::telemetry::Telemetry;
 use super::{Request, RequestResult, ServeReport};
 
@@ -123,6 +124,7 @@ impl ServerBuilder {
             fleet,
             qdepth: self.qdepth,
             policy,
+            batch_buf: Vec::new(),
         })
     }
 }
@@ -137,6 +139,9 @@ pub struct Server {
     fleet: GpuArray,
     qdepth: usize,
     policy: BatchPolicy,
+    /// Batch-window scratch, retained across windows and `serve` calls
+    /// so steady-state batch formation allocates nothing.
+    batch_buf: Vec<Pending>,
 }
 
 impl Server {
@@ -173,6 +178,34 @@ impl Server {
     /// (core, fingerprint): repeat workloads add only hits.
     pub fn reuse_stats(&self) -> ReuseStats {
         self.fleet.machine_reuse_stats()
+    }
+
+    /// Fleet-wide superplan cache counters — one level below
+    /// [`Server::reuse_stats`]: each distinct (program, config
+    /// fingerprint, threads) triple compiles its fused traces exactly
+    /// once, shared across every core and serve batch. Deterministic
+    /// between sequential and parallel dispatch.
+    pub fn superplan_stats(&self) -> SuperplanCacheStats {
+        self.fleet.superplan_stats()
+    }
+
+    /// Summed per-core superplan rebuild/fast-skip activity. After
+    /// warmup, steady-state serving of a fixed request mix accumulates
+    /// only fast skips — the zero-recompile property.
+    pub fn superplan_activity(&self) -> SuperplanActivity {
+        self.fleet.superplan_activity()
+    }
+
+    /// Worker pools spawned by the fleet's coordinator: 0 under
+    /// `--seq`, 1 from the first parallel batch on — never more,
+    /// however many serve windows run.
+    pub fn pool_spawns(&self) -> u64 {
+        self.fleet.pool_spawns()
+    }
+
+    /// Worker threads revived after dying (0 in normal operation).
+    pub fn pool_revives(&self) -> u64 {
+        self.fleet.pool_revives()
     }
 
     /// The batching policy the builder resolved (linger in cycles).
@@ -296,8 +329,8 @@ impl Server {
             }
             now = now.max(dispatch_at);
 
-            let batch = draw_batch(&mut queue, &policy, now);
-            if batch.is_empty() {
+            draw_batch_into(&mut queue, &policy, now, &mut self.batch_buf);
+            if self.batch_buf.is_empty() {
                 // Every queued deadline had expired (all shed); reopen
                 // the window at the next arrival.
                 continue;
@@ -312,7 +345,7 @@ impl Server {
             // dirty for a later serve() call.
             self.fleet.advance_timeline_to(now);
             let mut launch_err: Option<ApiError> = None;
-            for p in &batch {
+            for p in &self.batch_buf {
                 let req = &requests[p.id];
                 let mut launch = match self.fleet.launch_spec_any(p.spec) {
                     Ok(l) => l,
@@ -334,8 +367,12 @@ impl Server {
                 return Err(e);
             }
             let reports = self.fleet.sync()?;
-            assert_eq!(reports.len(), batch.len(), "one report per dispatched request");
-            for (p, r) in batch.into_iter().zip(reports) {
+            assert_eq!(
+                reports.len(),
+                self.batch_buf.len(),
+                "one report per dispatched request"
+            );
+            for (p, r) in self.batch_buf.drain(..).zip(reports) {
                 let res = RequestResult {
                     id: p.id,
                     name: r.name,

@@ -21,6 +21,8 @@
 //! re-deriving interpreter as the differential-testing oracle
 //! (`rust/tests/asm_sim_properties.rs`).
 
+use std::sync::Arc;
+
 use crate::asm::Program;
 use crate::datapath::{classify, native, BlockExec, DpOp, FpOp, IntOp};
 use crate::isa::{CondCode, DepthSel, Group, Instr, Opcode, TType, WAVEFRONT_WIDTH};
@@ -134,6 +136,24 @@ impl TraceStats {
     }
 }
 
+/// Lifetime counters for the superplan build path of one machine:
+/// how often the fused traces were actually (re)built versus how often a
+/// rebuild was provably unnecessary and skipped (`reload`, or
+/// `set_threads` re-asserting the current count). Steady-state serving
+/// should accumulate only `fast_skips` after warmup. Deterministic per
+/// core across sequential and pooled-parallel dispatch — the skip/rebuild
+/// decision depends only on the job stream, never on thread timing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SuperplanActivity {
+    /// Superplan (re)builds: program loads plus thread-count changes.
+    /// With a [`plan::SuperplanCache`] attached, each rebuild is a cache
+    /// lookup (compile or hit); without one, each is a local compile.
+    pub rebuilds: u64,
+    /// Rebuilds avoided by the unchanged-program/unchanged-threads fast
+    /// path.
+    pub fast_skips: u64,
+}
+
 enum Exec {
     /// Inlined bit-exact rust lanes (default).
     Native,
@@ -151,7 +171,19 @@ pub struct Machine {
     plans: Vec<IssuePlan>,
     /// Fused straight-line traces over `plans`, recompiled whenever the
     /// plans or the runtime thread count change (charges depend on both).
-    splans: plan::SuperplanProgram,
+    /// Refcounted so a fleet can share one compiled artifact across
+    /// cores through an attached [`plan::SuperplanCache`]; the run loop
+    /// only ever reads through it.
+    splans: Arc<plan::SuperplanProgram>,
+    /// Fleet-shared superplan cache, attached by the owning `Gpu` /
+    /// `Coordinator`. `None` = compile locally (standalone machines).
+    splan_cache: Option<Arc<plan::SuperplanCache>>,
+    /// Encoded words of the loaded program — the cache key's program
+    /// identity. Only maintained while a cache is attached.
+    splan_words: Option<Arc<[u64]>>,
+    /// Lifetime rebuild/fast-skip counters (never reset by `reset`).
+    splan_rebuilds: u64,
+    splan_fast_skips: u64,
     /// Fused-trace dispatch enabled (default). Off = per-instruction
     /// plan stepping, the second of the three bit-identical exec modes.
     splans_on: bool,
@@ -216,7 +248,11 @@ impl Machine {
             seq: Sequencer::new(),
             prog: None,
             plans: Vec::new(),
-            splans: plan::SuperplanProgram::default(),
+            splans: Arc::new(plan::SuperplanProgram::default()),
+            splan_cache: None,
+            splan_words: None,
+            splan_rebuilds: 0,
+            splan_fast_skips: 0,
             splans_on: true,
             fused_retired: 0,
             cycles: 0,
@@ -270,6 +306,16 @@ impl Machine {
         // O(n) decode pass, far off the hot path.
         self.plans =
             plan::compile(&prog.instrs).map_err(|e| SimError::new(e.pc, e.message))?;
+        // The encoded word stream is the superplan cache's program
+        // identity (exact, collision-free); only maintained while a
+        // cache is attached — standalone machines skip the encode pass.
+        self.splan_words = self.splan_cache.as_ref().map(|_| {
+            prog.instrs
+                .iter()
+                .map(|i| prog.layout.encode(i))
+                .collect::<Vec<_>>()
+                .into()
+        });
         self.rebuild_superplans();
         self.prog = Some(prog);
         self.reset();
@@ -286,6 +332,7 @@ impl Machine {
         if self.prog.is_none() {
             return serr(0, "no program loaded to reuse");
         }
+        self.splan_fast_skips += 1;
         self.reset();
         Ok(())
     }
@@ -320,13 +367,51 @@ impl Machine {
             self.rt_threads = threads;
             self.rebuild_wave_tab();
             self.rebuild_superplans();
+        } else {
+            self.splan_fast_skips += 1;
         }
         Ok(())
     }
 
-    /// Recompile the fused traces (plan stream or thread count changed).
+    /// Attach the fleet-shared superplan cache. Subsequent
+    /// `load_program`/`set_threads` rebuilds become cache lookups, so a
+    /// kernel already compiled at this (program, config, threads) triple
+    /// by any core attaches the shared artifact instead of recompiling.
+    pub fn set_superplan_cache(&mut self, cache: Arc<plan::SuperplanCache>) {
+        self.splan_cache = Some(cache);
+        // A program loaded before attachment has no word key; rebuild it
+        // lazily on the next load (resident programs keep their local
+        // compile — correctness is unaffected, only sharing).
+    }
+
+    /// Lifetime superplan rebuild/fast-skip counters for this machine.
+    pub fn superplan_activity(&self) -> SuperplanActivity {
+        SuperplanActivity {
+            rebuilds: self.splan_rebuilds,
+            fast_skips: self.splan_fast_skips,
+        }
+    }
+
+    /// Recompile the fused traces (plan stream or thread count changed) —
+    /// through the shared cache when one is attached and the loaded
+    /// program's word key is known, locally otherwise.
     fn rebuild_superplans(&mut self) {
-        self.splans = plan::compile_superplans(&self.plans, &self.wave_tab, &self.shared);
+        self.splan_rebuilds += 1;
+        self.splans = match (&self.splan_cache, &self.splan_words) {
+            (Some(cache), Some(words)) => {
+                let key = plan::SuperplanKey {
+                    words: Arc::clone(words),
+                    fingerprint: self.cfg.fingerprint(),
+                    threads: self.rt_threads,
+                };
+                cache.get(&key, &self.plans, &self.wave_tab, &self.shared)
+            }
+            _ => Arc::new(plan::compile_superplans(
+                &self.plans,
+                &self.wave_tab,
+                &self.shared,
+            )),
+        };
     }
 
     /// Toggle fused-trace dispatch (on by default). The per-instruction

@@ -18,6 +18,9 @@ pub mod sequencer;
 pub mod shared_mem;
 
 pub use config::{EgpuConfig, FeatureSet, IntAluClass, MemoryMode};
-pub use machine::{Machine, RunStats, SimError, TraceStats, PIPELINE_DEPTH};
-pub use plan::{IssuePlan, PlanKind, Superplan, SuperplanProgram, TraceOp};
+pub use machine::{Machine, RunStats, SimError, SuperplanActivity, TraceStats, PIPELINE_DEPTH};
+pub use plan::{
+    IssuePlan, PlanKind, Superplan, SuperplanCache, SuperplanCacheStats, SuperplanKey,
+    SuperplanProgram, TraceOp,
+};
 pub use profiler::Profile;

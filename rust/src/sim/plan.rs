@@ -20,6 +20,10 @@
 //! architectural state, cycle counts and hazard totals on randomized
 //! programs.
 
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
 use crate::datapath::{classify, DpOp};
 use crate::isa::opcode::OperandShape;
 use crate::isa::{CondCode, DepthSel, Instr, Opcode, TType};
@@ -333,6 +337,95 @@ pub fn compile_superplans(
     sp
 }
 
+// ---------------------------------------------------------------------
+// Superplan cache: fleet-wide sharing of compiled superplan programs.
+//
+// `compile_superplans` is pure — its output depends only on the plan
+// stream (itself a pure function of the encoded instruction words), the
+// wave table (a pure function of the runtime thread count) and the
+// shared-memory port charges (a pure function of the config's memory
+// mode, which `EgpuConfig::fingerprint` covers). So a fleet whose cores
+// replay the same kernels should compile each superplan program exactly
+// once per distinct (program, config fingerprint, thread count) triple
+// and share the `Arc`, the same economics [`crate::kernels::KernelCache`]
+// gives kernel specialization.
+// ---------------------------------------------------------------------
+
+/// Exact identity of one superplan compilation. `words` are the encoded
+/// instruction words (collision-free program identity — the word layout
+/// itself is pinned by the config fingerprint's register axis),
+/// `fingerprint` is [`crate::sim::EgpuConfig::fingerprint`] (covers the
+/// memory mode driving load/store charges), `threads` is the runtime
+/// thread count the wave table derives from.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SuperplanKey {
+    pub words: Arc<[u64]>,
+    pub fingerprint: u64,
+    pub threads: usize,
+}
+
+/// Counters proving the compile-once property for superplans, reported
+/// beside the kernel cache's [`crate::kernels::CacheStats`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SuperplanCacheStats {
+    /// Superplan programs compiled (unique [`SuperplanKey`]s).
+    pub compiles: u64,
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+}
+
+/// Memoizes compiled [`SuperplanProgram`]s per [`SuperplanKey`].
+#[derive(Debug, Default)]
+pub struct SuperplanCache {
+    entries: Mutex<HashMap<SuperplanKey, Arc<SuperplanProgram>>>,
+    compiles: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl SuperplanCache {
+    pub fn new() -> SuperplanCache {
+        SuperplanCache::default()
+    }
+
+    /// A fresh cache behind an `Arc`, ready to share across cores.
+    pub fn shared() -> Arc<SuperplanCache> {
+        Arc::new(SuperplanCache::new())
+    }
+
+    /// The superplan program for `key`, compiling at most once per key.
+    /// The compile happens under the lock, so concurrent lookups of the
+    /// same key from pooled workers still produce exactly one compile —
+    /// which keeps the compile/hit totals deterministic for a fixed
+    /// multiset of lookups, whatever order the workers arrive in.
+    pub fn get(
+        &self,
+        key: &SuperplanKey,
+        plans: &[IssuePlan],
+        wave_tab: &[usize; 4],
+        shared: &SharedMem,
+    ) -> Arc<SuperplanProgram> {
+        let mut entries = self.entries.lock().unwrap();
+        if let Some(sp) = entries.get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(sp);
+        }
+        let sp = Arc::new(compile_superplans(plans, wave_tab, shared));
+        self.compiles.fetch_add(1, Ordering::Relaxed);
+        entries.insert(key.clone(), Arc::clone(&sp));
+        sp
+    }
+
+    pub fn stats(&self) -> SuperplanCacheStats {
+        SuperplanCacheStats {
+            compiles: self.compiles.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            entries: self.entries.lock().unwrap().len(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -491,5 +584,53 @@ mod tests {
         let p = compile_one(&Instr::new(Opcode::Lod)).unwrap();
         assert_eq!(p.kind, PlanKind::Load);
         assert_eq!(p.slot as usize, Group::Memory.index());
+    }
+
+    #[test]
+    fn superplan_cache_compiles_once_per_key() {
+        let instrs = [
+            instr(Opcode::TdX),
+            instr(Opcode::Add),
+            instr(Opcode::Add),
+            instr(Opcode::Stop),
+        ];
+        let plans = compile(&instrs).unwrap();
+        let wave_tab = [1usize, 32, 16, 8];
+        let shared = SharedMem::new(4096, crate::sim::MemoryMode::Dp);
+        let words: Arc<[u64]> = Arc::from(vec![1u64, 2, 3, 4]);
+        let key = SuperplanKey {
+            words: Arc::clone(&words),
+            fingerprint: 0xF00D,
+            threads: 128,
+        };
+
+        let cache = SuperplanCache::new();
+        let a = cache.get(&key, &plans, &wave_tab, &shared);
+        let b = cache.get(&key, &plans, &wave_tab, &shared);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit");
+        let s = cache.stats();
+        assert_eq!((s.compiles, s.hits, s.entries), (1, 1, 1));
+
+        // A different thread count is a different compilation (the wave
+        // table changes), even for the same program and config.
+        let key64 = SuperplanKey {
+            words: Arc::clone(&words),
+            fingerprint: 0xF00D,
+            threads: 64,
+        };
+        let c = cache.get(&key64, &plans, &[1, 16, 8, 4], &shared);
+        assert!(!Arc::ptr_eq(&a, &c));
+        let s = cache.stats();
+        assert_eq!((s.compiles, s.hits, s.entries), (2, 1, 2));
+
+        // Key equality is by word content, not Arc identity.
+        let rewrapped = SuperplanKey {
+            words: Arc::from(vec![1u64, 2, 3, 4]),
+            fingerprint: 0xF00D,
+            threads: 128,
+        };
+        let d = cache.get(&rewrapped, &plans, &wave_tab, &shared);
+        assert!(Arc::ptr_eq(&a, &d));
+        assert_eq!(cache.stats().hits, 2);
     }
 }

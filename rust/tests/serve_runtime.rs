@@ -370,6 +370,123 @@ fn latency_decomposition_is_consistent() {
     }
 }
 
+// ---------------------------------------------------------------
+// (f) Persistent data plane: pool lifecycle + superplan sharing.
+// ---------------------------------------------------------------
+
+#[test]
+fn repeated_serve_rounds_spawn_the_worker_pool_exactly_once() {
+    let mut server = Server::builder().build().unwrap();
+    for round in 0u64..3 {
+        server.reset_timeline();
+        let report = server.serve(trace(0x9001 + round, 20)).unwrap();
+        assert!(report.telemetry.completed > 0);
+        assert_eq!(server.pool_spawns(), 1, "round {round} respawned the pool");
+    }
+    assert_eq!(server.pool_revives(), 0);
+
+    // The sequential reference path never spawns a pool at all.
+    let mut seq = Server::builder().sequential(true).build().unwrap();
+    seq.serve(trace(0x9001, 20)).unwrap();
+    assert_eq!(seq.pool_spawns(), 0);
+}
+
+#[test]
+fn panicking_job_poisons_its_core_for_the_batch_and_revives_after() {
+    use egpu::coordinator::{Coordinator, Job};
+    use egpu::kernels::reduction::reduction;
+    use egpu::sim::config::MemoryMode;
+    use egpu::sim::EgpuConfig;
+
+    let n = 64usize;
+    let data = f32_bits(&(0..n).map(|i| i as f32).collect::<Vec<_>>());
+    let job = |stream: u64| {
+        Job::new(reduction(n))
+            .load(0, data.clone())
+            .unload(n, 1)
+            .on_stream(stream)
+    };
+    let run = |parallel: bool| {
+        let cfg = EgpuConfig::benchmark(MemoryMode::Dp, false);
+        let mut c = Coordinator::new(cfg, 2).unwrap();
+        c.set_parallel(parallel);
+        // Batch 1: the injected panic fails its batch with the
+        // contained worker-panic error.
+        c.submit(job(0));
+        c.submit(job(1).inject_panic());
+        c.submit(job(0));
+        let err = c.run_all().unwrap_err();
+        // Batch 2 on the same coordinator: the poisoned core revives
+        // with the next batch window and everything serves.
+        c.submit(job(0));
+        c.submit(job(1));
+        let rs = c.run_all().unwrap();
+        assert_eq!(rs.len(), 2);
+        (err.message, c.pool_spawns(), c.pool_revives())
+    };
+
+    let (par_msg, spawns, revives) = run(true);
+    assert!(
+        par_msg.contains("panicked in its worker"),
+        "unexpected error: {par_msg}"
+    );
+    // Job panics poison the core for the batch but never kill the
+    // thread: one pool for the coordinator's lifetime, zero revives.
+    assert_eq!((spawns, revives), (1, 0));
+
+    // Sequential parity: the contained panic surfaces as the same
+    // error, with no pool involved.
+    let (seq_msg, seq_spawns, _) = run(false);
+    assert_eq!(seq_msg, par_msg);
+    assert_eq!(seq_spawns, 0);
+}
+
+#[test]
+fn superplan_counters_match_between_sequential_and_parallel() {
+    // Superplan cache lookups happen under the cache lock in dispatch
+    // order, so compiles/hits/entries — and the summed per-core
+    // rebuild/fast-skip activity — are bit-identical across dispatch
+    // modes, like every other serving observable.
+    let run = |sequential: bool| {
+        let mut server = Server::builder().sequential(sequential).build().unwrap();
+        let report = server.serve(trace(0x5EED, 30)).unwrap();
+        assert!(report.telemetry.completed > 0);
+        (server.superplan_stats(), server.superplan_activity())
+    };
+    assert_eq!(run(true), run(false));
+}
+
+#[test]
+fn steady_state_serving_performs_zero_superplan_recompiles() {
+    let mut server = Server::builder().build().unwrap();
+    let first = server.serve(trace(0x1DEA, 40)).unwrap();
+    assert!(first.telemetry.completed > 0);
+    let warm = server.superplan_stats();
+    assert!(warm.compiles > 0);
+    // One fused-trace compile per distinct (kernel, config
+    // fingerprint, threads) triple: every compile is a distinct
+    // resident entry, and repeat attachments within the round hit.
+    assert_eq!(warm.compiles, warm.entries as u64);
+    let warm_act = server.superplan_activity();
+
+    // A second identical round on a fresh measurement window is served
+    // entirely from resident artifacts: zero new superplan compiles.
+    server.reset_timeline();
+    let second = server.serve(trace(0x1DEA, 40)).unwrap();
+    assert_eq!(second, first, "warm replay must be bit-identical");
+    let steady = server.superplan_stats();
+    assert_eq!(
+        steady.compiles, warm.compiles,
+        "steady-state serving must not recompile fused traces"
+    );
+    assert_eq!(steady.entries, warm.entries);
+    let steady_act = server.superplan_activity();
+    assert!(
+        steady_act.fast_skips > warm_act.fast_skips,
+        "warm rounds must reuse resident superplans in place"
+    );
+}
+
 #[test]
 fn serve_results_are_correct_not_just_timed() {
     // Reductions through the serving path produce the same sums a

@@ -7,6 +7,11 @@ regresses more than ``max_regression_pct`` below its floor:
 
 - per-kernel ``mcyc_per_s_unchecked`` (the fast-path simulator rate)
 - serving ``wall_jobs_per_s`` (steady-state serving throughput)
+- dispatch ``steady_batches_per_s`` (warmed-server batch throughput),
+  plus two exact caps with no tolerance: ``pool_spawns_max`` (the
+  worker pool spawns once per server lifetime) and
+  ``steady_superplan_compiles_max`` (steady-state rounds recompile
+  nothing)
 - synthesis ``fleets_per_s`` (frontier-batched fleet-scoring throughput)
 
 Modeled quantities are deliberately *not* gated here — bit-identity of
@@ -76,6 +81,45 @@ def main() -> None:
                     f"{max_reg:.0f}% below the committed floor of {serving_floor}"
                 )
             checked += 1
+
+    dispatch_base = baseline.get("dispatch", {})
+    dispatch = bench.get("dispatch", {})
+    dispatch_floor = dispatch_base.get("steady_batches_per_s")
+    if dispatch_floor is not None:
+        if "steady_batches_per_s" not in dispatch:
+            errors.append("dispatch.steady_batches_per_s missing from the bench output")
+        else:
+            rate = float(dispatch["steady_batches_per_s"])
+            limit = float(dispatch_floor) * factor
+            status = "ok" if rate >= limit else "REGRESSED"
+            print(
+                f"bench-regression: dispatch steady_batches_per_s: {rate:.1f} "
+                f"(floor {dispatch_floor}, limit {limit:.1f}) {status}"
+            )
+            if rate < limit:
+                errors.append(
+                    f"dispatch steady_batches_per_s: {rate:.1f} is more than "
+                    f"{max_reg:.0f}% below the committed floor of {dispatch_floor}"
+                )
+            checked += 1
+    # Exact caps: structural counters, gated with zero tolerance — a
+    # second pool spawn or a steady-state recompile is a bug, not noise.
+    for base_key, bench_key in (
+        ("pool_spawns_max", "pool_spawns"),
+        ("steady_superplan_compiles_max", "steady_superplan_compiles"),
+    ):
+        cap = dispatch_base.get(base_key)
+        if cap is None:
+            continue
+        if bench_key not in dispatch:
+            errors.append(f"dispatch.{bench_key} missing from the bench output")
+            continue
+        value = int(dispatch[bench_key])
+        status = "ok" if value <= int(cap) else "EXCEEDED"
+        print(f"bench-regression: dispatch {bench_key}: {value} (cap {cap}) {status}")
+        if value > int(cap):
+            errors.append(f"dispatch {bench_key}: {value} exceeds the exact cap of {cap}")
+        checked += 1
 
     synth_floor = baseline.get("synthesis", {}).get("fleets_per_s")
     if synth_floor is not None:
