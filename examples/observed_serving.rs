@@ -1,0 +1,112 @@
+//! Serving with the observability layer on: `egpu::obs`.
+//!
+//! The same serving runtime as `examples/serving_runtime.rs`, but with
+//! the event recorder attached. The recorder stamps every request's
+//! lifecycle (admitted → batched → dispatched → exec → retired, or
+//! shed) and every core loan in **modeled bus cycles**, so the
+//! exported Chrome trace and the occupancy report are pure functions
+//! of the model: byte-identical across sequential and parallel
+//! dispatch, and bit-identical to a run with recording off. This
+//! example proves both claims inline, then writes the trace next to
+//! the binary for chrome://tracing / Perfetto.
+//!
+//!     cargo run --release --example observed_serving
+//!
+//! The trace lands in `observed_serving_trace.json`.
+
+use egpu::api::Server;
+use egpu::harness::loadgen::{demo_requests, LoadSpec};
+use egpu::harness::Table;
+use egpu::obs::EventKind;
+
+fn trace_spec(server: &Server) -> LoadSpec {
+    LoadSpec {
+        seed: 0x0B5E,
+        requests: 40,
+        mean_gap: 2_000,
+        dim: 64,
+        deadline_slack: Some(server.us_to_cycles(120)),
+    }
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // The demo fleet behind a recording server. `.recording(true)` is
+    // the only difference from an unobserved server.
+    let mut server = Server::builder().qdepth(48).max_batch(8).recording(true).build()?;
+    let requests = demo_requests(&trace_spec(&server));
+    let offered = requests.len();
+    let report = server.serve(requests)?;
+    let t = &report.telemetry;
+    assert!(t.completed > 0 && t.batches > 1);
+
+    // Claim 1: the recorder observed, it did not participate. A second
+    // server with recording off models the exact same serving run.
+    let mut unobserved = Server::builder().qdepth(48).max_batch(8).build()?;
+    let baseline = unobserved.serve(demo_requests(&trace_spec(&unobserved)))?;
+    assert_eq!(report, baseline, "recording must not move a modeled cycle");
+
+    // Claim 2: the exported artifacts are byte-identical under
+    // sequential dispatch — no wall clock, no thread ids.
+    let recorder = server.recorder().expect("recording server has a recorder");
+    let mut seq = Server::builder()
+        .qdepth(48)
+        .max_batch(8)
+        .recording(true)
+        .sequential(true)
+        .build()?;
+    seq.serve(demo_requests(&trace_spec(&seq)))?;
+    let seq_rec = seq.recorder().unwrap();
+    assert_eq!(recorder.chrome_trace(), seq_rec.chrome_trace());
+    assert_eq!(
+        recorder.occupancy_report(server.num_cores()),
+        seq_rec.occupancy_report(seq.num_cores())
+    );
+
+    // The span stream, summarized per lifecycle stage.
+    let events = recorder.events();
+    let count = |label: &str| events.iter().filter(|e| e.kind.label() == label).count();
+    let mut spans = Table::new(format!(
+        "Observed serving: {offered} offered, {} served, {} shed, {} events recorded",
+        t.completed,
+        t.shed,
+        events.len()
+    ));
+    spans.headers(["lifecycle event", "count"]);
+    for label in ["admitted", "batched", "dispatched", "exec_start", "exec_end", "retired", "shed"]
+    {
+        spans.row([label.to_string(), count(label).to_string()]);
+    }
+    spans.print();
+
+    // Accounting closes: every offered request retired or shed.
+    assert_eq!(count("retired") + count("shed"), offered);
+    assert_eq!(count("exec_start"), count("exec_end"));
+
+    // Exec spans carry the report's own modeled timeline.
+    for r in &report.results {
+        assert!(events.iter().any(|e| {
+            e.cycle == r.end
+                && matches!(&e.kind, EventKind::ExecEnd { req, .. } if *req == r.id)
+        }));
+    }
+
+    // The unified registry view: runtime gauges + serve counters,
+    // including the shed-reason breakdown the telemetry total hides.
+    let metrics = server.metrics();
+    println!(
+        "\nregistry: {} kernel compiles, {} machine-reuse hits, shed {} queue-full / {} expired",
+        metrics.gauge("cache.kernel.compiles"),
+        metrics.gauge("reuse.machine.hits"),
+        metrics.counter("serve.shed.queue_full"),
+        metrics.counter("serve.shed.deadline_expired"),
+    );
+
+    // The per-core occupancy/gap summary (`egpu serve --report`).
+    println!("\n{}", recorder.occupancy_report(server.num_cores()));
+
+    // And the Chrome trace itself (`egpu serve --trace-out`).
+    let path = "observed_serving_trace.json";
+    std::fs::write(path, recorder.chrome_trace())?;
+    println!("trace: {} events -> {path} (open in chrome://tracing)", recorder.len());
+    Ok(())
+}

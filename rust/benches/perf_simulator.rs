@@ -373,6 +373,16 @@ fn main() {
         let rps = t.jobs_per_s(mhz);
         let wall_jobs_per_s = t.completed as f64 / wall_s;
         let reuse = server.reuse_stats();
+        // Shed-reason breakdown from the unified metrics registry (the
+        // aggregate telemetry only carries the total).
+        let metrics = server.metrics();
+        let shed_queue_full = metrics.counter("serve.shed.queue_full");
+        let shed_deadline_expired = metrics.counter("serve.shed.deadline_expired");
+        assert_eq!(
+            shed_queue_full + shed_deadline_expired,
+            t.shed,
+            "shed reasons must add up to the shed total"
+        );
         assert!(t.completed > 0, "the serving bench must serve something");
         assert_eq!(report.submitted(), offered, "every request served or shed");
         let util = server.core_utilization();
@@ -401,6 +411,8 @@ fn main() {
         );
         format!(
             "  \"serving\": {{\"offered\": {offered}, \"completed\": {}, \"shed\": {}, \
+             \"shed_queue_full\": {shed_queue_full}, \
+             \"shed_deadline_expired\": {shed_deadline_expired}, \
              \"batches\": {}, \"requests_per_s\": {rps:.1}, \"wall_jobs_per_s\": \
              {wall_jobs_per_s:.1}, \"reuse_hits\": {}, \"reuse_misses\": {}, \
              \"shed_rate\": {:.4}, \
@@ -473,6 +485,61 @@ fn main() {
             sp.compiles,
             sp.hits,
             sp.entries,
+        )
+    };
+
+    // Observability: the same steady-state replay with the recorder off
+    // vs on. Recording must not move a single modeled cycle (the reports
+    // are asserted identical), so the only cost is wall clock — and that
+    // overhead is capped by check_bench_regression.py against
+    // BENCH_baseline.json.
+    let observability_json = {
+        let trace = demo_requests(&LoadSpec::demo(40));
+        let rounds = samples.max(3);
+
+        let mut plain = Server::builder().build().unwrap();
+        let warm_plain = plain.serve_slice(&trace).unwrap();
+        let wall = std::time::Instant::now();
+        for _ in 0..rounds {
+            plain.reset_timeline();
+            let r = plain.serve_slice(&trace).unwrap();
+            assert_eq!(r, warm_plain, "steady-state rounds replay identically");
+        }
+        let off_s = wall.elapsed().as_secs_f64().max(1e-9);
+
+        let mut traced = Server::builder().recording(true).build().unwrap();
+        let warm_traced = traced.serve_slice(&trace).unwrap();
+        assert_eq!(
+            warm_traced, warm_plain,
+            "recording must not change the modeled serve report"
+        );
+        let rec = traced.recorder().expect("recording server has a recorder");
+        let mut events = 0usize;
+        let wall = std::time::Instant::now();
+        for _ in 0..rounds {
+            traced.reset_timeline();
+            rec.clear();
+            let r = traced.serve_slice(&trace).unwrap();
+            assert_eq!(r, warm_plain, "recording must not change the replay");
+            events = rec.len();
+        }
+        let on_s = wall.elapsed().as_secs_f64().max(1e-9);
+
+        assert!(events > 0, "the traced rounds must record span events");
+        let overhead_pct = (on_s - off_s) / off_s * 100.0;
+        let events_per_s = (rounds * events) as f64 / on_s;
+        println!(
+            "observability ({rounds} rounds): tracing off {:.1} ms, on {:.1} ms \
+             ({overhead_pct:+.1}% wall), {events} events/round, {events_per_s:.0} events/s",
+            off_s * 1e3,
+            on_s * 1e3,
+        );
+        format!(
+            "  \"observability\": {{\"rounds\": {rounds}, \"off_wall_ms\": {:.3}, \
+             \"on_wall_ms\": {:.3}, \"overhead_pct\": {overhead_pct:.2}, \
+             \"events_per_round\": {events}, \"events_per_s\": {events_per_s:.0}}},\n",
+            off_s * 1e3,
+            on_s * 1e3,
         )
     };
 
@@ -584,7 +651,7 @@ fn main() {
 
     let json = format!(
         "{{\n  \"samples\": {samples},\n  \"kernels\": [\n{}\n  ],\n  \
-         \"static_schedule\": [\n{}\n  ],\n{superplan_json}{fleet_json}{serving_json}{dispatch_json}{synthesis_json}  \
+         \"static_schedule\": [\n{}\n  ],\n{superplan_json}{fleet_json}{serving_json}{dispatch_json}{observability_json}{synthesis_json}  \
          \"aggregate_mcyc_per_s_unchecked\": {aggregate:.2},\n  \
          \"multi_core\": {{\"cores\": 4, \"jobs\": 4, \"kernel\": \"fft-256\", \
          \"makespan_cycles\": {seq_span}, \"sequential_ms\": {:.4}, \

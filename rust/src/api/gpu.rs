@@ -6,6 +6,7 @@ use std::sync::Arc;
 use crate::asm::{assemble, Program};
 use crate::coordinator::{bus_fraction, DataBus, JobResult, DEFAULT_CYCLE_BUDGET};
 use crate::kernels::{CacheStats, Kernel, KernelCache, KernelSpec};
+use crate::obs::StatsSnapshot;
 use crate::sim::config::{EgpuConfig, FeatureSet};
 use crate::sim::{Machine, RunStats};
 
@@ -195,7 +196,20 @@ impl Gpu {
     /// Superplan cache counters for this device's cache handle (shared
     /// totals when the cache is shared across devices).
     pub fn superplan_stats(&self) -> crate::sim::SuperplanCacheStats {
-        self.cache.superplans().stats()
+        self.stats_snapshot().superplan
+    }
+
+    /// This device's counters in the unified
+    /// [`crate::obs::StatsSnapshot`] shape. Machine reuse and worker
+    /// pools are fleet concepts, so those axes stay zero on a
+    /// single-core device.
+    pub fn stats_snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            cache: self.cache.stats(),
+            superplan: self.cache.superplans().stats(),
+            superplan_activity: self.machine.superplan_activity(),
+            ..StatsSnapshot::default()
+        }
     }
 
     /// This device's kernel-specialization cache.
@@ -207,7 +221,7 @@ impl Gpu {
     /// compile-once property of [`Gpu::launch_spec`] without going
     /// through the cache handle.
     pub fn cache_stats(&self) -> CacheStats {
-        self.cache.stats()
+        self.stats_snapshot().cache
     }
 
     pub fn config(&self) -> &EgpuConfig {

@@ -86,6 +86,7 @@ pub use stream::{GpuArray, Stream, StreamLaunch};
 
 pub use crate::coordinator::DEFAULT_CYCLE_BUDGET;
 pub use crate::kernels::{CacheStats, KernelCache, KernelSpec};
+pub use crate::obs::{EventKind, MetricsRegistry, Recorder, StatsSnapshot, TraceEvent};
 pub use crate::serve::{
     BatchPolicy, Histogram, Request, RequestResult, ServeReport, Server, ServerBuilder,
     ShedReason, ShedRecord, Telemetry,

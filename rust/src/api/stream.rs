@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use crate::coordinator::{Coordinator, Job, ReuseStats};
 use crate::kernels::{CacheStats, Kernel, KernelCache, KernelSpec};
+use crate::obs::{Recorder, StatsSnapshot};
 use crate::sim::config::EgpuConfig;
 use crate::sim::{SuperplanActivity, SuperplanCacheStats};
 
@@ -114,7 +115,32 @@ impl GpuArray {
     /// "compile once, serve forever" property, assertable in tests
     /// without reaching for the coordinator escape hatch.
     pub fn cache_stats(&self) -> CacheStats {
-        self.coord.kernel_cache().stats()
+        self.stats_snapshot().cache
+    }
+
+    /// Every runtime cache/reuse/pool counter in one struct — the
+    /// unified stats surface ([`crate::obs::StatsSnapshot`]); the
+    /// per-counter getters below delegate to it.
+    pub fn stats_snapshot(&self) -> StatsSnapshot {
+        self.coord.stats_snapshot()
+    }
+
+    /// Attach (or detach) an observability recorder on the fleet's
+    /// coordinator (see [`crate::obs::Recorder`]). Recording changes
+    /// no modeled cycle or result.
+    pub fn set_recorder(&mut self, recorder: Option<Arc<Recorder>>) {
+        self.coord.set_recorder(recorder);
+    }
+
+    /// The attached recorder, if any.
+    pub fn recorder(&self) -> Option<Arc<Recorder>> {
+        self.coord.recorder()
+    }
+
+    /// Attach a fresh recorder if none is attached; returns the shared
+    /// sink. Idempotent.
+    pub fn start_recording(&mut self) -> Arc<Recorder> {
+        self.coord.start_recording()
     }
 
     /// Machine-reuse counters (hits = launches that skipped assembly
@@ -124,7 +150,7 @@ impl GpuArray {
     /// state every core reaches zero reallocation per kernel — repeat
     /// batches add only hits.
     pub fn machine_reuse_stats(&self) -> ReuseStats {
-        self.coord.reuse_stats()
+        self.stats_snapshot().reuse
     }
 
     /// Fleet-wide superplan cache counters (compiles/hits/entries),
@@ -132,24 +158,24 @@ impl GpuArray {
     /// (program, config fingerprint, threads) triple compiles its fused
     /// traces exactly once across the whole fleet.
     pub fn superplan_stats(&self) -> SuperplanCacheStats {
-        self.coord.superplan_stats()
+        self.stats_snapshot().superplan
     }
 
     /// Summed per-core superplan rebuild/fast-skip activity (see
     /// [`crate::sim::SuperplanActivity`]).
     pub fn superplan_activity(&self) -> SuperplanActivity {
-        self.coord.superplan_activity()
+        self.stats_snapshot().superplan_activity
     }
 
     /// Worker pools spawned by the coordinator (0 sequential-only, else
     /// 1 for its whole lifetime).
     pub fn pool_spawns(&self) -> u64 {
-        self.coord.pool_spawns()
+        self.stats_snapshot().pool_spawns
     }
 
     /// Worker threads revived after dying (0 in normal operation).
     pub fn pool_revives(&self) -> u64 {
-        self.coord.pool_revives()
+        self.stats_snapshot().pool_revives
     }
 
     /// Advance the modeled timeline to `cycle` (an explicit idle gap;

@@ -62,6 +62,7 @@ use std::sync::Arc;
 use crate::asm::Program;
 use crate::kernels::{Kernel, KernelCache, KernelSpec};
 use crate::model::frequency::modeled_core_khz;
+use crate::obs::{EventKind, Recorder, StatsSnapshot};
 use crate::sim::config::{EgpuConfig, FeatureSet};
 use crate::sim::{
     Machine, RunStats, SimError, SuperplanActivity, SuperplanCacheStats, PIPELINE_DEPTH,
@@ -822,6 +823,12 @@ pub struct Coordinator {
     pool_spawns: u64,
     /// Per-batch dispatch scratch, retained across `run_all` calls.
     scratch: BatchScratch,
+    /// Optional observability sink ([`crate::obs`]). Events are
+    /// recorded on the dispatching thread only, after a batch's
+    /// accounting is final, from the deterministic `JobResult`s and
+    /// counter deltas — so the recorded trace is bit-identical between
+    /// sequential and parallel dispatch, and `None` costs one branch.
+    recorder: Option<Arc<Recorder>>,
 }
 
 /// Dispatch scratch reused across batches: the steady-state serve loop
@@ -905,6 +912,7 @@ impl Coordinator {
             pool: None,
             pool_spawns: 0,
             scratch: BatchScratch::default(),
+            recorder: None,
             cfgs,
             cores,
         })
@@ -1003,6 +1011,41 @@ impl Coordinator {
     /// never kill the thread).
     pub fn pool_revives(&self) -> u64 {
         self.pool.as_ref().map_or(0, pool::CorePool::revives)
+    }
+
+    /// Every runtime cache/reuse/pool counter in one struct (the
+    /// unified surface `Gpu`/`GpuArray`/`Server` re-expose; the
+    /// per-counter getters above are kept as the assertable veneers).
+    pub fn stats_snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            cache: self.cache.stats(),
+            reuse: self.reuse_stats(),
+            superplan: self.superplan_stats(),
+            superplan_activity: self.superplan_activity(),
+            pool_spawns: self.pool_spawns,
+            pool_revives: self.pool_revives(),
+        }
+    }
+
+    /// Attach (or detach) an observability recorder. Recording changes
+    /// no modeled cycle, placement, or counter — it only keeps a trace
+    /// of values the dispatcher computed anyway.
+    pub fn set_recorder(&mut self, recorder: Option<Arc<Recorder>>) {
+        self.recorder = recorder;
+    }
+
+    /// The attached recorder, if any.
+    pub fn recorder(&self) -> Option<Arc<Recorder>> {
+        self.recorder.clone()
+    }
+
+    /// Attach a fresh recorder if none is attached, and return the
+    /// (shared) sink. Idempotent.
+    pub fn start_recording(&mut self) -> Arc<Recorder> {
+        if self.recorder.is_none() {
+            self.recorder = Some(Arc::new(Recorder::new()));
+        }
+        Arc::clone(self.recorder.as_ref().expect("just attached"))
     }
 
     /// Escape hatch: core `c`'s machine, for architectural-state
@@ -1157,6 +1200,14 @@ impl Coordinator {
     /// results and cycle accounting are identical either way).
     pub fn run_all(&mut self) -> Result<Vec<JobResult>, SimError> {
         let mut jobs = std::mem::take(&mut self.queue);
+        // Snapshot counters before the batch so runtime activity can be
+        // recorded as deltas afterwards — on the dispatching thread,
+        // from totals that are already proven mode-identical, never
+        // per-event from inside workers (which would race).
+        let before = self
+            .recorder
+            .is_some()
+            .then(|| (self.stats_snapshot(), self.makespan()));
         let r = (|| {
             self.prevalidate(&jobs)?;
             if self.parallel && self.cores.len() > 1 && jobs.len() > 1 {
@@ -1170,7 +1221,62 @@ impl Coordinator {
         // every window into one retained queue allocation.
         jobs.clear();
         self.queue = jobs;
+        if let (Some((before, at)), Ok(results)) = (before, &r) {
+            self.record_batch(before, at, results);
+        }
         r
+    }
+
+    /// Record one dispatched batch's observability events: a core
+    /// occupancy span per job (from its final timeline interval) and
+    /// the batch's runtime-counter deltas, stamped at the batch's
+    /// entry makespan (the serving layer aligns that with the window
+    /// close, so deltas land where the dispatch decision was made).
+    /// `pool_spawns` is deliberately **not** recorded: it is the one
+    /// mode-dependent counter (0 sequential, 1 parallel), so it stays
+    /// a snapshot/registry value and never enters the trace.
+    fn record_batch(&self, before: StatsSnapshot, at: u64, results: &[JobResult]) {
+        let rec = self.recorder.as_ref().expect("recording is on");
+        for (i, r) in results.iter().enumerate() {
+            rec.record(
+                r.start,
+                EventKind::PoolLoan {
+                    core: r.core,
+                    job: i,
+                    name: r.name.clone(),
+                },
+            );
+            rec.record(r.end, EventKind::PoolReclaim { core: r.core, job: i });
+        }
+        let after = self.stats_snapshot();
+        let deltas: [(u64, fn(u64) -> EventKind); 7] = [
+            (after.cache.compiles - before.cache.compiles, |n| {
+                EventKind::KernelCompiles { n }
+            }),
+            (after.cache.hits - before.cache.hits, |n| {
+                EventKind::KernelCacheHits { n }
+            }),
+            (after.reuse.hits - before.reuse.hits, |n| {
+                EventKind::MachineReuses { n }
+            }),
+            (after.reuse.misses - before.reuse.misses, |n| {
+                EventKind::MachineReloads { n }
+            }),
+            (after.superplan.compiles - before.superplan.compiles, |n| {
+                EventKind::SuperplanCompiles { n }
+            }),
+            (after.superplan.hits - before.superplan.hits, |n| {
+                EventKind::SuperplanHits { n }
+            }),
+            (after.pool_revives - before.pool_revives, |n| {
+                EventKind::PoolRevives { n }
+            }),
+        ];
+        for (n, make) in deltas {
+            if n != 0 {
+                rec.record(at, make(n));
+            }
+        }
     }
 
     /// The sequential reference path: place → run → account, one job at

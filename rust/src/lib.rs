@@ -31,6 +31,10 @@
 //! - [`serve`] — the continuous serving runtime over the fleet:
 //!   bounded admission with load-shedding, deadline/priority batching,
 //!   and latency telemetry (`api::Server`)
+//! - [`obs`] — deterministic modeled-time observability: typed event
+//!   recording in bus cycles, the unified [`obs::StatsSnapshot`] /
+//!   [`obs::MetricsRegistry`] counter surface, Chrome-trace export and
+//!   per-core occupancy reports (`egpu serve --trace-out`)
 //! - [`synth`] — workload-driven fleet synthesis: beam search over the
 //!   static-configuration space under an Agilex area budget, scored by
 //!   trace replay through [`serve`] (`egpu synth`)
@@ -50,6 +54,7 @@ pub mod isa;
 pub mod kc;
 pub mod kernels;
 pub mod model;
+pub mod obs;
 pub mod place;
 pub mod runtime;
 pub mod serve;

@@ -83,15 +83,18 @@ COMMANDS:
                     (overrides --qp); --trace-stats prints the superplan
                     compiler's trace coverage (trace count, mean trace
                     length, % of dynamic instructions executed fused)
-  fleet [--configs a.json,b.json] [--jobs N] [--seq]
+  fleet [--configs a.json,b.json] [--jobs N] [--seq] [--trace-out FILE]
                     dispatch a mixed kernel batch across a heterogeneous
                     fleet (default: 2 x 771 MHz DP-full + 2 x 600 MHz
                     QP cores), printing per-job placement, per-core
                     utilization and kernel-cache statistics; --configs
                     loads the fleet from JSON files (each holding one
-                    config or an array); --seq uses sequential dispatch
+                    config or an array); --seq uses sequential dispatch;
+                    --trace-out writes a Chrome trace-event JSON of the
+                    batch in modeled bus cycles (chrome://tracing)
   serve [--configs a.json,b.json] [--requests N] [--qdepth N] [--batch N]
         [--linger-us N] [--deadline-us N] [--gap N] [--seed N] [--seq]
+        [--trace-out FILE] [--report]
                     continuously serve a seeded request stream through a
                     bounded admission queue and deadline/priority batcher
                     over the fleet (default: the 2xDP + 2xQP mix),
@@ -100,7 +103,11 @@ COMMANDS:
                     bounds the queue (overflow sheds), --deadline-us
                     gives half the requests deadlines with that slack,
                     --gap sets the mean inter-arrival gap in bus cycles,
-                    --seq uses sequential dispatch (bit-identical)
+                    --seq uses sequential dispatch (bit-identical —
+                    including the recorded trace, byte for byte);
+                    --trace-out writes a Chrome trace-event JSON of the
+                    serving run in modeled bus cycles; --report prints
+                    the per-core occupancy/gap summary
   synth [--alms N] [--dsps N] [--m20ks N] [--requests N] [--seed N]
         [--beam N] [--jobs N] [--out FILE.json]
                     synthesize the best-serving fleet under an Agilex
@@ -531,12 +538,16 @@ fn cmd_fleet(args: &[String]) -> Result<(), String> {
     let mut cfg_paths: Option<String> = None;
     let mut jobs = 8usize;
     let mut sequential = false;
+    let mut trace_out: Option<String> = None;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
             "--configs" => cfg_paths = Some(flags::value(args, &mut i, "--configs")?.to_string()),
             "--jobs" => jobs = flags::positive_usize(args, &mut i, "--jobs")?,
             "--seq" => sequential = true,
+            "--trace-out" => {
+                trace_out = Some(flags::value(args, &mut i, "--trace-out")?.to_string())
+            }
             other => return Err(format!("unknown flag '{other}'")),
         }
         i += 1;
@@ -550,6 +561,9 @@ fn cmd_fleet(args: &[String]) -> Result<(), String> {
     let mut fleet = builder.build().map_err(|e| e.to_string())?;
     if sequential {
         fleet.set_parallel(false);
+    }
+    if trace_out.is_some() {
+        fleet.start_recording();
     }
 
     // A mixed batch: feature-hungry kernels (predicates, dot core) next
@@ -628,6 +642,12 @@ fn cmd_fleet(args: &[String]) -> Result<(), String> {
         fleet.makespan(),
         reports.len() as f64 / (span_us * 1e-6)
     );
+    if let Some(path) = trace_out {
+        let rec = fleet.recorder().expect("recording was started");
+        std::fs::write(&path, rec.chrome_trace())
+            .map_err(|e| format!("cannot write trace to '{path}': {e}"))?;
+        println!("trace: {} events -> {path} (modeled bus cycles)", rec.len());
+    }
     Ok(())
 }
 
@@ -644,6 +664,8 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
     let mut gap = 2_000u64;
     let mut seed = 0x5EEDu64;
     let mut sequential = false;
+    let mut trace_out: Option<String> = None;
+    let mut occupancy = false;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -658,6 +680,10 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
             "--gap" => gap = flags::num(args, &mut i, "--gap")?,
             "--seed" => seed = flags::num(args, &mut i, "--seed")?,
             "--seq" => sequential = true,
+            "--trace-out" => {
+                trace_out = Some(flags::value(args, &mut i, "--trace-out")?.to_string())
+            }
+            "--report" => occupancy = true,
             other => return Err(format!("unknown flag '{other}'")),
         }
         i += 1;
@@ -667,7 +693,8 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
         .qdepth(qdepth)
         .max_batch(batch)
         .linger_us(linger_us)
-        .sequential(sequential);
+        .sequential(sequential)
+        .recording(trace_out.is_some() || occupancy);
     if let Some(paths) = cfg_paths {
         builder = builder.fleet(fleet_from_files(&paths)?);
     }
@@ -758,6 +785,21 @@ fn cmd_serve(args: &[String]) -> Result<(), String> {
          compile per (kernel, config, threads)",
         sp.compiles, sp.hits, sp.entries
     );
+    // Trace export and occupancy cover the primary serving run (the
+    // recorder keeps accumulating through the steady-state replay
+    // below, but the file is written from the events recorded so far).
+    // Both are functions of modeled time only: byte-identical between
+    // --seq and parallel dispatch.
+    if occupancy {
+        let rec = server.recorder().expect("recording was started");
+        println!("\n{}", rec.occupancy_report(server.num_cores()));
+    }
+    if let Some(path) = &trace_out {
+        let rec = server.recorder().expect("recording was started");
+        std::fs::write(path, rec.chrome_trace())
+            .map_err(|e| format!("cannot write trace to '{path}': {e}"))?;
+        println!("trace: {} events -> {path} (modeled bus cycles)", rec.len());
+    }
     // Steady-state proof: replay the identical trace on the warmed
     // server (fresh timeline window, caches kept) and show nothing
     // recompiles. Every printed quantity here is deterministic between

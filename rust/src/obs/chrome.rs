@@ -1,0 +1,277 @@
+//! Chrome trace-event JSON export (hand-rolled — serde is not in the
+//! dependency tree, same discipline as `sim::config_json`).
+//!
+//! Mapping from [`TraceEvent`]s to the Trace Event Format:
+//!
+//! - `ts` is the **modeled bus cycle**, emitted as an integer. Chrome
+//!   renders it as microseconds; since the bus runs in the hundreds of
+//!   MHz the scale reads naturally as "cycles", and what matters is
+//!   that the axis is modeled time, not wall clock.
+//! - `pid` is always 1 ("egpu fleet"). `tid 0` is the runtime track
+//!   (sheds, cache/superplan/reuse instants); `tid core+1` is that
+//!   core's occupancy track.
+//! - A [`PoolLoan`]/[`PoolReclaim`] pair becomes one complete `"X"`
+//!   slice on the core's track, named after the kernel. Cores execute
+//!   their jobs serially in modeled time, so loans pair FIFO per core.
+//! - A request's lifecycle becomes an async span (`cat:"request"`,
+//!   `id` = request id): `"b"` at `Admitted`, `"n"` instants at
+//!   `Batched`/`Dispatched`, a nested `"b"`/`"e"` `exec` span from
+//!   `ExecStart` to `ExecEnd`, and `"e"` at `Retired` — or at
+//!   `Shed` when an admitted request later expires.
+//! - Sheds and runtime counter deltas also land as `"i"` instants on
+//!   the runtime track so they are visible without expanding spans.
+//!
+//! Events are rendered in `(cycle, seq)` order — the recorder's
+//! deterministic total order — so the exported bytes are identical
+//! across sequential and parallel serving and across reruns.
+//!
+//! [`TraceEvent`]: super::TraceEvent
+//! [`PoolLoan`]: super::EventKind::PoolLoan
+//! [`PoolReclaim`]: super::EventKind::PoolReclaim
+
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::fmt::Write as _;
+
+use super::recorder::{EventKind, TraceEvent};
+
+/// JSON string literal with the minimal escapes the trace surface can
+/// produce (kernel names and reason labels are ASCII, but stay safe).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render `events` (already in `(cycle, seq)` order — the recorder's
+/// [`events()`](super::Recorder::events) contract) as a Chrome
+/// trace-event JSON document.
+pub fn chrome_trace(events: &[TraceEvent]) -> String {
+    // Pass 1: pair core loans to reclaims (FIFO per core) so "X"
+    // slices know their duration, and collect the admitted set so a
+    // shed closes its span only if one was opened.
+    let mut open: HashMap<usize, VecDeque<(usize, u64)>> = HashMap::new();
+    let mut durs: HashMap<usize, u64> = HashMap::new();
+    let mut cores: BTreeSet<usize> = BTreeSet::new();
+    let mut admitted: BTreeSet<usize> = BTreeSet::new();
+    for (i, e) in events.iter().enumerate() {
+        match &e.kind {
+            EventKind::PoolLoan { core, .. } => {
+                cores.insert(*core);
+                open.entry(*core).or_default().push_back((i, e.cycle));
+            }
+            EventKind::PoolReclaim { core, .. } => {
+                cores.insert(*core);
+                if let Some((loan, at)) = open.entry(*core).or_default().pop_front() {
+                    durs.insert(loan, e.cycle.saturating_sub(at));
+                }
+            }
+            EventKind::Admitted { req } => {
+                admitted.insert(*req);
+            }
+            EventKind::Dispatched { core, .. }
+            | EventKind::ExecStart { core, .. }
+            | EventKind::ExecEnd { core, .. }
+            | EventKind::Retired { core, .. } => {
+                cores.insert(*core);
+            }
+            _ => {}
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str("{\"traceEvents\":[\n");
+    // Track-name metadata first (ts-less M events).
+    let mut lines: Vec<String> = Vec::new();
+    lines.push(
+        "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\"args\":{\"name\":\"egpu fleet\"}}"
+            .to_string(),
+    );
+    lines.push(
+        "{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\
+         \"args\":{\"name\":\"runtime\"}}"
+            .to_string(),
+    );
+    for core in &cores {
+        lines.push(format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{},\
+             \"args\":{{\"name\":{}}}}}",
+            core + 1,
+            json_str(&format!("core {core}"))
+        ));
+    }
+
+    // Pass 2: one line per event, in the deterministic event order.
+    for (i, e) in events.iter().enumerate() {
+        let ts = e.cycle;
+        match &e.kind {
+            EventKind::Admitted { req } => lines.push(format!(
+                "{{\"name\":\"request\",\"cat\":\"request\",\"ph\":\"b\",\
+                 \"id\":{req},\"pid\":1,\"tid\":0,\"ts\":{ts}}}"
+            )),
+            EventKind::Shed { req, reason } => {
+                if admitted.contains(req) {
+                    lines.push(format!(
+                        "{{\"name\":\"request\",\"cat\":\"request\",\"ph\":\"e\",\
+                         \"id\":{req},\"pid\":1,\"tid\":0,\"ts\":{ts},\
+                         \"args\":{{\"shed\":{}}}}}",
+                        json_str(reason)
+                    ));
+                }
+                lines.push(format!(
+                    "{{\"name\":\"shed\",\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\
+                     \"tid\":0,\"ts\":{ts},\"args\":{{\"req\":{req},\
+                     \"reason\":{}}}}}",
+                    json_str(reason)
+                ));
+            }
+            EventKind::Batched { req, window } => lines.push(format!(
+                "{{\"name\":\"batched\",\"cat\":\"request\",\"ph\":\"n\",\
+                 \"id\":{req},\"pid\":1,\"tid\":0,\"ts\":{ts},\
+                 \"args\":{{\"window\":{window}}}}}"
+            )),
+            EventKind::Dispatched { req, core } => lines.push(format!(
+                "{{\"name\":\"dispatched\",\"cat\":\"request\",\"ph\":\"n\",\
+                 \"id\":{req},\"pid\":1,\"tid\":0,\"ts\":{ts},\
+                 \"args\":{{\"core\":{core}}}}}"
+            )),
+            EventKind::ExecStart { req, core, name } => lines.push(format!(
+                "{{\"name\":\"exec\",\"cat\":\"request\",\"ph\":\"b\",\
+                 \"id\":{req},\"pid\":1,\"tid\":{},\"ts\":{ts},\
+                 \"args\":{{\"kernel\":{}}}}}",
+                core + 1,
+                json_str(name)
+            )),
+            EventKind::ExecEnd {
+                req,
+                core,
+                cycles,
+                instructions,
+            } => lines.push(format!(
+                "{{\"name\":\"exec\",\"cat\":\"request\",\"ph\":\"e\",\
+                 \"id\":{req},\"pid\":1,\"tid\":{},\"ts\":{ts},\
+                 \"args\":{{\"cycles\":{cycles},\"instructions\":{instructions}}}}}",
+                core + 1
+            )),
+            EventKind::Retired { req, core } => lines.push(format!(
+                "{{\"name\":\"request\",\"cat\":\"request\",\"ph\":\"e\",\
+                 \"id\":{req},\"pid\":1,\"tid\":0,\"ts\":{ts},\
+                 \"args\":{{\"core\":{core}}}}}"
+            )),
+            EventKind::PoolLoan { core, job, name } => {
+                let dur = durs.get(&i).copied().unwrap_or(0);
+                lines.push(format!(
+                    "{{\"name\":{},\"cat\":\"core\",\"ph\":\"X\",\"pid\":1,\
+                     \"tid\":{},\"ts\":{ts},\"dur\":{dur},\
+                     \"args\":{{\"job\":{job}}}}}",
+                    json_str(name),
+                    core + 1
+                ));
+            }
+            // Reclaims are consumed by the matching loan's "X" slice.
+            EventKind::PoolReclaim { .. } => {}
+            EventKind::KernelCompiles { n }
+            | EventKind::KernelCacheHits { n }
+            | EventKind::MachineReuses { n }
+            | EventKind::MachineReloads { n }
+            | EventKind::SuperplanCompiles { n }
+            | EventKind::SuperplanHits { n }
+            | EventKind::PoolRevives { n } => lines.push(format!(
+                "{{\"name\":{},\"ph\":\"i\",\"s\":\"t\",\"pid\":1,\"tid\":0,\
+                 \"ts\":{ts},\"args\":{{\"n\":{n}}}}}",
+                json_str(e.kind.label())
+            )),
+        }
+    }
+
+    out.push_str(&lines.join(",\n"));
+    out.push_str("\n]}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cycle: u64, seq: u64, kind: EventKind) -> TraceEvent {
+        TraceEvent { cycle, seq, kind }
+    }
+
+    #[test]
+    fn loan_reclaim_pairs_become_complete_slices() {
+        let events = vec![
+            ev(
+                10,
+                0,
+                EventKind::PoolLoan {
+                    core: 0,
+                    job: 0,
+                    name: "saxpy".into(),
+                },
+            ),
+            ev(90, 1, EventKind::PoolReclaim { core: 0, job: 0 }),
+        ];
+        let json = chrome_trace(&events);
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"dur\":80"));
+        assert!(json.contains("\"name\":\"saxpy\""));
+        assert!(json.contains("\"name\":\"core 0\""));
+    }
+
+    #[test]
+    fn shed_without_admission_emits_only_the_instant() {
+        let events = vec![ev(
+            5,
+            0,
+            EventKind::Shed {
+                req: 3,
+                reason: "queue_full",
+            },
+        )];
+        let json = chrome_trace(&events);
+        assert!(json.contains("\"ph\":\"i\""));
+        assert!(!json.contains("\"ph\":\"e\""));
+    }
+
+    #[test]
+    fn admitted_then_shed_closes_the_span() {
+        let events = vec![
+            ev(5, 0, EventKind::Admitted { req: 3 }),
+            ev(
+                50,
+                1,
+                EventKind::Shed {
+                    req: 3,
+                    reason: "deadline_expired",
+                },
+            ),
+        ];
+        let json = chrome_trace(&events);
+        assert!(json.contains("\"ph\":\"b\""));
+        assert!(json.contains("\"ph\":\"e\""));
+        assert!(json.contains("\"shed\":\"deadline_expired\""));
+    }
+
+    #[test]
+    fn output_is_a_pure_function_of_events() {
+        let events = vec![
+            ev(1, 0, EventKind::Admitted { req: 0 }),
+            ev(2, 1, EventKind::KernelCompiles { n: 2 }),
+            ev(9, 2, EventKind::Retired { req: 0, core: 1 }),
+        ];
+        assert_eq!(chrome_trace(&events), chrome_trace(&events));
+        assert!(chrome_trace(&events).starts_with("{\"traceEvents\":[\n"));
+        assert!(chrome_trace(&events).ends_with("\n]}\n"));
+    }
+}

@@ -1,0 +1,30 @@
+//! `egpu::obs` — deterministic, integer-only observability.
+//!
+//! Three pieces, one discipline:
+//!
+//! - [`Recorder`]: typed [`TraceEvent`]s stamped in **modeled bus
+//!   cycles** with a deterministic sequence key. Recording happens on
+//!   the dispatching thread only, from values the model already
+//!   computed, so sequential and parallel dispatch produce
+//!   byte-identical event logs and enabling recording never moves a
+//!   modeled cycle.
+//! - [`MetricsRegistry`] + [`StatsSnapshot`]: the unified counter
+//!   surface. Every runtime cache/reuse/pool counter that used to be
+//!   surfaced through its own getter chain flows through one
+//!   snapshot; the old getters are thin delegates.
+//! - [`chrome_trace`] / [`occupancy_report`]: exports — hand-rolled
+//!   Chrome trace-event JSON (`egpu serve --trace-out`) and a
+//!   per-core occupancy/gap text summary (`egpu serve --report`).
+//!
+//! The disabled path is an `Option<&Recorder>` check: no locks, no
+//! allocation, no formatting. See DESIGN.md "The observability layer".
+
+pub mod chrome;
+pub mod recorder;
+pub mod registry;
+pub mod report;
+
+pub use chrome::chrome_trace;
+pub use recorder::{EventKind, Recorder, TraceEvent};
+pub use registry::{MetricsRegistry, StatsSnapshot};
+pub use report::occupancy_report;

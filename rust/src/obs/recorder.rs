@@ -1,0 +1,217 @@
+//! The deterministic event recorder.
+//!
+//! A [`Recorder`] collects typed [`TraceEvent`]s stamped in **modeled
+//! bus cycles** — never wall-clock time, never thread ids. Every
+//! record call happens on the dispatching thread, on the deterministic
+//! control path (the serve loop and the coordinator's post-batch
+//! accounting), so the sequence of `record` calls — and therefore the
+//! `seq` key each event receives — is a pure function of the workload.
+//! That is the whole determinism story: sequential and parallel
+//! dispatch make byte-identical record calls, so they produce
+//! byte-identical event logs and byte-identical exported traces.
+//!
+//! Recording never feeds back into the model: a recorder only *reads*
+//! cycles and counters that the runtime already computed. Enabling it
+//! cannot move a modeled cycle (pinned by `rust/tests/obs_trace.rs`).
+
+use std::sync::Mutex;
+
+/// One typed observability event. Serve-layer events describe a
+/// request's lifecycle (`req` is the request's index in the offered
+/// workload); coordinator-layer events describe core occupancy and
+/// runtime-cache activity (`job` is the submission index within its
+/// dispatch batch).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EventKind {
+    /// The request entered the bounded admission queue (at arrival).
+    Admitted { req: usize },
+    /// The request was turned away (`reason` is the
+    /// [`ShedReason`](crate::serve::ShedReason) label).
+    Shed { req: usize, reason: &'static str },
+    /// The request won a slot in batch window `window`.
+    Batched { req: usize, window: u64 },
+    /// The request's batch dispatched; placement chose `core`.
+    Dispatched { req: usize, core: usize },
+    /// Bus acquisition: load DMA for the request began on `core`.
+    ExecStart { req: usize, core: usize, name: String },
+    /// Unload complete; `cycles` is kernel compute at the core's
+    /// clock, `instructions` the dynamic instruction count (the
+    /// run's profile headline).
+    ExecEnd {
+        req: usize,
+        core: usize,
+        cycles: u64,
+        instructions: u64,
+    },
+    /// The request's result was returned to the caller.
+    Retired { req: usize, core: usize },
+    /// A core was loaned to job `job` of its batch (occupancy span
+    /// open — the modeled counterpart of a pool worker taking work).
+    PoolLoan { core: usize, job: usize, name: String },
+    /// The core came back to the pool (occupancy span close).
+    PoolReclaim { core: usize, job: usize },
+    /// Kernel specializations compiled during the batch.
+    KernelCompiles { n: u64 },
+    /// Kernel-cache hits during the batch.
+    KernelCacheHits { n: u64 },
+    /// Jobs that reused their core's resident machine (skipped
+    /// assembly and `load_program`).
+    MachineReuses { n: u64 },
+    /// Jobs that reloaded their core's machine from scratch.
+    MachineReloads { n: u64 },
+    /// Fused-trace superplans compiled during the batch.
+    SuperplanCompiles { n: u64 },
+    /// Superplan-cache hits during the batch.
+    SuperplanHits { n: u64 },
+    /// Worker threads revived after dying (0 in normal operation).
+    PoolRevives { n: u64 },
+}
+
+impl EventKind {
+    /// Stable snake_case label (registry keys, Chrome event names).
+    pub fn label(&self) -> &'static str {
+        match self {
+            EventKind::Admitted { .. } => "admitted",
+            EventKind::Shed { .. } => "shed",
+            EventKind::Batched { .. } => "batched",
+            EventKind::Dispatched { .. } => "dispatched",
+            EventKind::ExecStart { .. } => "exec_start",
+            EventKind::ExecEnd { .. } => "exec_end",
+            EventKind::Retired { .. } => "retired",
+            EventKind::PoolLoan { .. } => "pool_loan",
+            EventKind::PoolReclaim { .. } => "pool_reclaim",
+            EventKind::KernelCompiles { .. } => "kernel_compiles",
+            EventKind::KernelCacheHits { .. } => "kernel_cache_hits",
+            EventKind::MachineReuses { .. } => "machine_reuses",
+            EventKind::MachineReloads { .. } => "machine_reloads",
+            EventKind::SuperplanCompiles { .. } => "superplan_compiles",
+            EventKind::SuperplanHits { .. } => "superplan_hits",
+            EventKind::PoolRevives { .. } => "pool_revives",
+        }
+    }
+}
+
+/// An [`EventKind`] stamped with its modeled bus cycle and the
+/// deterministic sequence key (record order on the dispatching
+/// thread). Export ordering is `(cycle, seq)` — one total order, no
+/// wall-clock tiebreaks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Modeled bus cycle the event is stamped at.
+    pub cycle: u64,
+    /// Record-order sequence key (unique per recorder).
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+/// The trace sink. Shared as an `Arc` between the [`Server`], the
+/// [`GpuArray`] and the [`Coordinator`] it wraps, behind an
+/// `Option` — the disabled path is a `None` check, no locks, no
+/// allocation.
+///
+/// [`Server`]: crate::serve::Server
+/// [`GpuArray`]: crate::api::GpuArray
+/// [`Coordinator`]: crate::coordinator::Coordinator
+///
+/// The mutex exists only to make sharing safe (`Arc<Recorder>` must be
+/// `Sync`); by construction every record call is made from the single
+/// dispatching thread, so it is never contended.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    /// Append one event at modeled `cycle`; the sequence key is the
+    /// record index.
+    pub fn record(&self, cycle: u64, kind: EventKind) {
+        let mut events = self.events.lock().expect("recorder lock");
+        let seq = events.len() as u64;
+        events.push(TraceEvent { cycle, seq, kind });
+    }
+
+    /// Events recorded so far.
+    pub fn len(&self) -> usize {
+        self.events.lock().expect("recorder lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every recorded event (sequence keys restart at 0).
+    pub fn clear(&self) {
+        self.events.lock().expect("recorder lock").clear();
+    }
+
+    /// Snapshot of the event log in export order: sorted by
+    /// `(cycle, seq)`. The sort is needed because modeled stamps are
+    /// not record-ordered — a request admitted at cycle 12 000 may be
+    /// recorded after a batch that retired at cycle 50 000.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut events = self.events.lock().expect("recorder lock").clone();
+        events.sort_by_key(|e| (e.cycle, e.seq));
+        events
+    }
+
+    /// The event log rendered as Chrome trace-event JSON
+    /// (see [`crate::obs::chrome_trace`]).
+    pub fn chrome_trace(&self) -> String {
+        super::chrome::chrome_trace(&self.events())
+    }
+
+    /// Per-core occupancy/gap text summary over the recorded core
+    /// loans (see [`crate::obs::occupancy_report`]).
+    pub fn occupancy_report(&self, num_cores: usize) -> String {
+        super::report::occupancy_report(&self.events(), num_cores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_sort_by_cycle_then_seq() {
+        let rec = Recorder::new();
+        rec.record(50, EventKind::Retired { req: 0, core: 1 });
+        rec.record(10, EventKind::Admitted { req: 1 });
+        rec.record(10, EventKind::Admitted { req: 2 });
+        let ev = rec.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!((ev[0].cycle, ev[0].seq), (10, 1));
+        assert_eq!((ev[1].cycle, ev[1].seq), (10, 2));
+        assert_eq!((ev[2].cycle, ev[2].seq), (50, 0));
+    }
+
+    #[test]
+    fn clear_restarts_sequence_keys() {
+        let rec = Recorder::new();
+        rec.record(1, EventKind::KernelCompiles { n: 2 });
+        assert_eq!(rec.len(), 1);
+        rec.clear();
+        assert!(rec.is_empty());
+        rec.record(2, EventKind::KernelCacheHits { n: 3 });
+        assert_eq!(rec.events()[0].seq, 0);
+    }
+
+    #[test]
+    fn labels_are_stable_snake_case() {
+        assert_eq!(EventKind::Admitted { req: 0 }.label(), "admitted");
+        assert_eq!(
+            EventKind::ExecEnd {
+                req: 0,
+                core: 0,
+                cycles: 1,
+                instructions: 1
+            }
+            .label(),
+            "exec_end"
+        );
+        assert_eq!(EventKind::SuperplanHits { n: 1 }.label(), "superplan_hits");
+    }
+}

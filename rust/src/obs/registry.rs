@@ -1,0 +1,218 @@
+//! Named integer metrics and the unified runtime stats snapshot.
+//!
+//! [`MetricsRegistry`] is the consolidation point for the counters the
+//! runtime used to surface through five bespoke getter chains
+//! (`cache_stats` / `reuse_stats` / `superplan_stats` /
+//! `superplan_activity` / `pool_spawns`): integer counters, gauges,
+//! and log₂ histograms keyed by dotted snake_case names, stored in
+//! `BTreeMap`s so iteration (and the rendered text report) is
+//! deterministic.
+//!
+//! [`StatsSnapshot`] is the one struct that crosses layers: the
+//! `Coordinator` builds it from its internals, `GpuArray`/`Server`
+//! re-expose it verbatim, and `Gpu` fills in the single-core subset.
+//! The legacy getters survive as thin delegates into it.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::coordinator::ReuseStats;
+use crate::kernels::CacheStats;
+use crate::serve::Histogram;
+use crate::sim::{SuperplanActivity, SuperplanCacheStats};
+
+/// Every runtime cache/reuse/pool counter in one place. `Eq` + `Copy`
+/// so tests can pin "recording changed nothing" with a single
+/// comparison, and so delta accounting (`after - before` around a
+/// dispatch batch) is a plain field-wise subtraction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StatsSnapshot {
+    /// Kernel specialization cache (compile-once property).
+    pub cache: CacheStats,
+    /// Resident-machine reuse across dispatches.
+    pub reuse: ReuseStats,
+    /// Fleet-shared superplan cache.
+    pub superplan: SuperplanCacheStats,
+    /// Per-machine superplan rebuild/fast-skip activity, summed.
+    pub superplan_activity: SuperplanActivity,
+    /// Worker pools spawned (0 sequential, 1 parallel — the only
+    /// mode-dependent counter, which is why it lives here and never
+    /// in the event trace).
+    pub pool_spawns: u64,
+    /// Pool workers revived after a panic (0 in normal operation).
+    pub pool_revives: u64,
+}
+
+impl StatsSnapshot {
+    /// Publish the snapshot into `registry` as gauges (current-value
+    /// semantics: snapshots are cumulative already).
+    pub fn export_into(&self, registry: &mut MetricsRegistry) {
+        registry.set_gauge("cache.kernel.compiles", self.cache.compiles);
+        registry.set_gauge("cache.kernel.hits", self.cache.hits);
+        registry.set_gauge("cache.kernel.entries", self.cache.entries as u64);
+        registry.set_gauge("reuse.machine.hits", self.reuse.hits);
+        registry.set_gauge("reuse.machine.misses", self.reuse.misses);
+        registry.set_gauge("cache.superplan.compiles", self.superplan.compiles);
+        registry.set_gauge("cache.superplan.hits", self.superplan.hits);
+        registry.set_gauge("cache.superplan.entries", self.superplan.entries as u64);
+        registry.set_gauge("superplan.rebuilds", self.superplan_activity.rebuilds);
+        registry.set_gauge("superplan.fast_skips", self.superplan_activity.fast_skips);
+        registry.set_gauge("pool.spawns", self.pool_spawns);
+        registry.set_gauge("pool.revives", self.pool_revives);
+    }
+}
+
+/// Named integer counters, gauges, and log₂ histograms.
+///
+/// Counters only go up (`inc`/`inc_by`); gauges are set to the latest
+/// value; histograms reuse the serve layer's log₂ [`Histogram`].
+/// Lookup of an unset name reads as zero / an empty histogram, so
+/// callers never need to pre-register.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, u64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add 1 to counter `name`.
+    pub fn inc(&mut self, name: &str) {
+        self.inc_by(name, 1);
+    }
+
+    /// Add `n` to counter `name` (a no-op for `n == 0` still creates
+    /// the counter, so it renders as an explicit zero).
+    pub fn inc_by(&mut self, name: &str, n: u64) {
+        let c = self.counters.entry(name.to_string()).or_insert(0);
+        *c = c.saturating_add(n);
+    }
+
+    /// Set gauge `name` to its current value.
+    pub fn set_gauge(&mut self, name: &str, v: u64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Record one observation into histogram `name`.
+    pub fn observe(&mut self, name: &str, v: u64) {
+        self.histograms.entry(name.to_string()).or_default().record(v);
+    }
+
+    /// Counter value (0 if never incremented).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value (0 if never set).
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges.get(name).copied().unwrap_or(0)
+    }
+
+    /// Histogram by name (`None` if nothing was observed).
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Deterministic text rendering: one `name value` line per counter
+    /// and gauge (sorted by name — `BTreeMap` order), then one
+    /// `name count/p50/p95/max` line per histogram.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, v) in &self.gauges {
+            let _ = writeln!(out, "{name} {v}");
+        }
+        for (name, h) in &self.histograms {
+            let _ = writeln!(
+                out,
+                "{name} count={} p50={} p95={} max={}",
+                h.count(),
+                h.p50(),
+                h.p95(),
+                h.max()
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unset_names_read_as_zero() {
+        let reg = MetricsRegistry::new();
+        assert_eq!(reg.counter("nope"), 0);
+        assert_eq!(reg.gauge("nope"), 0);
+        assert!(reg.histogram("nope").is_none());
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn counters_accumulate_and_gauges_overwrite() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("a");
+        reg.inc_by("a", 4);
+        reg.set_gauge("g", 7);
+        reg.set_gauge("g", 3);
+        assert_eq!(reg.counter("a"), 5);
+        assert_eq!(reg.gauge("g"), 3);
+    }
+
+    #[test]
+    fn render_is_sorted_and_stable() {
+        let mut reg = MetricsRegistry::new();
+        reg.inc("serve.z");
+        reg.inc("serve.a");
+        reg.observe("lat", 8);
+        reg.observe("lat", 100);
+        let text = reg.render();
+        let a = text.find("serve.a").unwrap();
+        let z = text.find("serve.z").unwrap();
+        assert!(a < z);
+        assert!(text.contains("lat count=2"));
+        assert_eq!(text, reg.clone().render());
+    }
+
+    #[test]
+    fn snapshot_exports_every_surface() {
+        let snap = StatsSnapshot {
+            cache: CacheStats {
+                compiles: 2,
+                hits: 9,
+                entries: 2,
+            },
+            reuse: ReuseStats { hits: 5, misses: 3 },
+            superplan: SuperplanCacheStats {
+                compiles: 1,
+                hits: 4,
+                entries: 1,
+            },
+            superplan_activity: SuperplanActivity {
+                rebuilds: 5,
+                fast_skips: 6,
+            },
+            pool_spawns: 1,
+            pool_revives: 0,
+        };
+        let mut reg = MetricsRegistry::new();
+        snap.export_into(&mut reg);
+        assert_eq!(reg.gauge("cache.kernel.compiles"), 2);
+        assert_eq!(reg.gauge("reuse.machine.misses"), 3);
+        assert_eq!(reg.gauge("cache.superplan.hits"), 4);
+        assert_eq!(reg.gauge("superplan.fast_skips"), 6);
+        assert_eq!(reg.gauge("pool.spawns"), 1);
+    }
+}

@@ -1,0 +1,142 @@
+//! Per-core occupancy/gap text summary (`egpu serve --report`).
+//!
+//! Built purely from the recorded [`PoolLoan`]/[`PoolReclaim`] core
+//! occupancy spans, so it reflects modeled time exactly and is
+//! identical across sequential and parallel serving. The horizon is
+//! the last recorded event cycle; a "gap" is idle modeled time on a
+//! core between consecutive jobs (the dispatch/bus/batching slack the
+//! paper's §7 profiles make visible).
+//!
+//! [`PoolLoan`]: super::EventKind::PoolLoan
+//! [`PoolReclaim`]: super::EventKind::PoolReclaim
+
+use std::fmt::Write as _;
+
+use super::recorder::{EventKind, TraceEvent};
+
+#[derive(Debug, Clone, Copy, Default)]
+struct CoreOcc {
+    busy: u64,
+    jobs: u64,
+    gaps: u64,
+    largest_gap: u64,
+    first_start: Option<u64>,
+    last_end: u64,
+    open_at: Option<u64>,
+}
+
+/// Render the per-core occupancy summary over `events` (in
+/// `(cycle, seq)` order) for a fleet of `num_cores` cores. Cores that
+/// never ran a job still get a line (100% idle), so the report shape
+/// depends only on the fleet, not the workload.
+pub fn occupancy_report(events: &[TraceEvent], num_cores: usize) -> String {
+    let mut cores = vec![CoreOcc::default(); num_cores];
+    let mut horizon = 0u64;
+    for e in events {
+        horizon = horizon.max(e.cycle);
+        match &e.kind {
+            EventKind::PoolLoan { core, .. } if *core < num_cores => {
+                let c = &mut cores[*core];
+                if c.first_start.is_none() {
+                    c.first_start = Some(e.cycle);
+                } else if e.cycle > c.last_end {
+                    c.gaps += 1;
+                    c.largest_gap = c.largest_gap.max(e.cycle - c.last_end);
+                }
+                c.open_at = Some(e.cycle);
+            }
+            EventKind::PoolReclaim { core, .. } if *core < num_cores => {
+                let c = &mut cores[*core];
+                if let Some(at) = c.open_at.take() {
+                    c.busy += e.cycle.saturating_sub(at);
+                    c.jobs += 1;
+                    c.last_end = e.cycle;
+                }
+            }
+            _ => {}
+        }
+    }
+
+    let mut out = String::new();
+    let _ = writeln!(out, "occupancy over {horizon} bus cycles:");
+    let _ = writeln!(
+        out,
+        "  {:<6} {:>6} {:>12} {:>6} {:>6} {:>12}",
+        "core", "jobs", "busy cyc", "busy%", "gaps", "largest gap"
+    );
+    let mut total_busy = 0u64;
+    let mut total_jobs = 0u64;
+    for (i, c) in cores.iter().enumerate() {
+        let pct = if horizon == 0 {
+            0.0
+        } else {
+            100.0 * c.busy as f64 / horizon as f64
+        };
+        let _ = writeln!(
+            out,
+            "  {:<6} {:>6} {:>12} {:>5.1}% {:>6} {:>12}",
+            i, c.jobs, c.busy, pct, c.gaps, c.largest_gap
+        );
+        total_busy += c.busy;
+        total_jobs += c.jobs;
+    }
+    let fleet_pct = if horizon == 0 || num_cores == 0 {
+        0.0
+    } else {
+        100.0 * total_busy as f64 / (horizon.saturating_mul(num_cores as u64)) as f64
+    };
+    let _ = writeln!(
+        out,
+        "  fleet: {total_jobs} jobs, {total_busy} busy cycles, {fleet_pct:.1}% occupancy"
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(cycle: u64, seq: u64, kind: EventKind) -> TraceEvent {
+        TraceEvent { cycle, seq, kind }
+    }
+
+    #[test]
+    fn busy_cycles_and_gaps_accumulate_per_core() {
+        let events = vec![
+            ev(
+                0,
+                0,
+                EventKind::PoolLoan {
+                    core: 0,
+                    job: 0,
+                    name: "a".into(),
+                },
+            ),
+            ev(40, 1, EventKind::PoolReclaim { core: 0, job: 0 }),
+            ev(
+                100,
+                2,
+                EventKind::PoolLoan {
+                    core: 0,
+                    job: 1,
+                    name: "b".into(),
+                },
+            ),
+            ev(160, 3, EventKind::PoolReclaim { core: 0, job: 1 }),
+        ];
+        let text = occupancy_report(&events, 2);
+        assert!(text.contains("occupancy over 160 bus cycles"));
+        // core 0: 2 jobs, 100 busy cycles, one 60-cycle gap.
+        assert!(text.contains("100"));
+        assert!(text.contains("60"));
+        // core 1 gets a line even though it never ran.
+        assert!(text.lines().count() >= 5);
+        assert!(text.contains("fleet: 2 jobs, 100 busy cycles"));
+    }
+
+    #[test]
+    fn empty_trace_reports_zero_horizon() {
+        let text = occupancy_report(&[], 1);
+        assert!(text.contains("occupancy over 0 bus cycles"));
+    }
+}

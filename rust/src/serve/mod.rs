@@ -141,6 +141,18 @@ pub enum ShedReason {
     DeadlineExpired,
 }
 
+impl ShedReason {
+    /// Stable snake_case label: registry counter keys
+    /// (`serve.shed.<label>`), trace-event args, and the BENCH
+    /// `serving` section all use it.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedReason::QueueFull => "queue_full",
+            ShedReason::DeadlineExpired => "deadline_expired",
+        }
+    }
+}
+
 impl std::fmt::Display for ShedReason {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {

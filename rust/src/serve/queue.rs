@@ -121,8 +121,9 @@ impl AdmissionQueue {
     /// Admit the request, or shed it (recorded, reason
     /// [`ShedReason::QueueFull`]) when the queue is at capacity. `at`
     /// is the modeled cycle of the admission attempt — the request's
-    /// arrival instant.
-    pub(crate) fn offer(&mut self, id: usize, req: &Request, at: u64) {
+    /// arrival instant. Returns whether the request was admitted (the
+    /// serve loop records the matching trace event).
+    pub(crate) fn offer(&mut self, id: usize, req: &Request, at: u64) -> bool {
         if self.pending.len() >= self.capacity {
             self.shed.push(ShedRecord {
                 id,
@@ -130,6 +131,7 @@ impl AdmissionQueue {
                 reason: ShedReason::QueueFull,
                 at,
             });
+            false
         } else {
             self.pending.push(ByDispatch(Pending {
                 id,
@@ -139,6 +141,7 @@ impl AdmissionQueue {
                 priority: req.priority,
             }));
             self.peak = self.peak.max(self.pending.len());
+            true
         }
     }
 
@@ -163,6 +166,14 @@ impl AdmissionQueue {
     /// batch formation).
     pub(crate) fn shed_record(&mut self, rec: ShedRecord) {
         self.shed.push(rec);
+    }
+
+    /// Shed records so far, in the order the requests were turned
+    /// away. The serve loop keeps a cursor into this slice to emit
+    /// shed trace events without the queue or batcher knowing about
+    /// recording.
+    pub(crate) fn shed_records(&self) -> &[ShedRecord] {
+        &self.shed
     }
 
     /// All shed records, in the order the requests were turned away.

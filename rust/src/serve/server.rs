@@ -25,6 +25,7 @@ use std::sync::Arc;
 use crate::api::{ApiError, FleetBuilder, GpuArray};
 use crate::coordinator::ReuseStats;
 use crate::kernels::{CacheStats, KernelCache};
+use crate::obs::{EventKind, MetricsRegistry, Recorder, StatsSnapshot};
 use crate::sim::config::ConfigError;
 use crate::sim::{SuperplanActivity, SuperplanCacheStats};
 
@@ -44,6 +45,7 @@ pub struct ServerBuilder {
     max_batch: usize,
     linger_us: u64,
     sequential: bool,
+    recording: bool,
 }
 
 impl Default for ServerBuilder {
@@ -60,6 +62,7 @@ impl ServerBuilder {
             max_batch: 8,
             linger_us: 8,
             sequential: false,
+            recording: false,
         }
     }
 
@@ -102,6 +105,15 @@ impl ServerBuilder {
         self
     }
 
+    /// Attach an event [`Recorder`] from the start (equivalent to
+    /// calling [`Server::start_recording`] on the built server).
+    /// Recording never changes a modeled cycle or result — only
+    /// whether the trace is kept.
+    pub fn recording(mut self, recording: bool) -> ServerBuilder {
+        self.recording = recording;
+        self
+    }
+
     pub fn build(self) -> Result<Server, ApiError> {
         if self.qdepth == 0 {
             return Err(ApiError::Config(ConfigError(
@@ -115,6 +127,9 @@ impl ServerBuilder {
         }
         let mut fleet = self.fleet.build()?;
         fleet.set_parallel(!self.sequential);
+        if self.recording {
+            fleet.start_recording();
+        }
         let bus_khz = fleet.coordinator().bus_khz();
         let policy = BatchPolicy {
             max_batch: self.max_batch,
@@ -125,6 +140,7 @@ impl ServerBuilder {
             qdepth: self.qdepth,
             policy,
             batch_buf: Vec::new(),
+            metrics: MetricsRegistry::new(),
         })
     }
 }
@@ -142,6 +158,10 @@ pub struct Server {
     /// Batch-window scratch, retained across windows and `serve` calls
     /// so steady-state batch formation allocates nothing.
     batch_buf: Vec<Pending>,
+    /// Serving counters (offered/served/shed-by-reason/batches), kept
+    /// out of the modeled timeline; [`Server::metrics`] merges in the
+    /// fleet's [`StatsSnapshot`] gauges.
+    metrics: MetricsRegistry,
 }
 
 impl Server {
@@ -164,10 +184,16 @@ impl Server {
         self.fleet.core_utilization()
     }
 
+    /// Every runtime cache/reuse/pool counter in one struct — the
+    /// unified surface the per-counter getters delegate to.
+    pub fn stats_snapshot(&self) -> StatsSnapshot {
+        self.fleet.stats_snapshot()
+    }
+
     /// Kernel-cache counters — the "compile once, serve forever"
     /// property, assertable in tests.
     pub fn cache_stats(&self) -> CacheStats {
-        self.fleet.cache_stats()
+        self.stats_snapshot().cache
     }
 
     /// Machine-reuse counters — one level below [`Server::cache_stats`]:
@@ -177,7 +203,7 @@ impl Server {
     /// of a fixed request mix reaches zero reallocation per
     /// (core, fingerprint): repeat workloads add only hits.
     pub fn reuse_stats(&self) -> ReuseStats {
-        self.fleet.machine_reuse_stats()
+        self.stats_snapshot().reuse
     }
 
     /// Fleet-wide superplan cache counters — one level below
@@ -186,26 +212,46 @@ impl Server {
     /// once, shared across every core and serve batch. Deterministic
     /// between sequential and parallel dispatch.
     pub fn superplan_stats(&self) -> SuperplanCacheStats {
-        self.fleet.superplan_stats()
+        self.stats_snapshot().superplan
     }
 
     /// Summed per-core superplan rebuild/fast-skip activity. After
     /// warmup, steady-state serving of a fixed request mix accumulates
     /// only fast skips — the zero-recompile property.
     pub fn superplan_activity(&self) -> SuperplanActivity {
-        self.fleet.superplan_activity()
+        self.stats_snapshot().superplan_activity
     }
 
     /// Worker pools spawned by the fleet's coordinator: 0 under
     /// `--seq`, 1 from the first parallel batch on — never more,
     /// however many serve windows run.
     pub fn pool_spawns(&self) -> u64 {
-        self.fleet.pool_spawns()
+        self.stats_snapshot().pool_spawns
     }
 
     /// Worker threads revived after dying (0 in normal operation).
     pub fn pool_revives(&self) -> u64 {
-        self.fleet.pool_revives()
+        self.stats_snapshot().pool_revives
+    }
+
+    /// Start (or fetch) the event recorder shared with the fleet's
+    /// coordinator. Idempotent; recording changes no modeled cycle.
+    pub fn start_recording(&mut self) -> Arc<Recorder> {
+        self.fleet.start_recording()
+    }
+
+    /// The attached recorder, if recording is on.
+    pub fn recorder(&self) -> Option<Arc<Recorder>> {
+        self.fleet.recorder()
+    }
+
+    /// The serving metrics joined with the fleet's
+    /// [`StatsSnapshot`] gauges: one deterministic registry holding
+    /// every counter the server knows.
+    pub fn metrics(&self) -> MetricsRegistry {
+        let mut reg = self.metrics.clone();
+        self.stats_snapshot().export_into(&mut reg);
+        reg
     }
 
     /// The batching policy the builder resolved (linger in cycles).
@@ -265,6 +311,16 @@ impl Server {
     /// that actually dispatch, at dispatch time.
     pub fn serve_slice(&mut self, requests: &[Request]) -> Result<ServeReport, ApiError> {
         let policy = self.policy;
+        // All span recording happens here on the dispatching thread,
+        // from modeled values the loop already computed — the trace is
+        // a pure function of the workload, identical across `--seq`
+        // and parallel dispatch (asserted by `rust/tests/obs_trace.rs`).
+        let recorder = self.fleet.recorder();
+        let rec = recorder.as_deref();
+        // Cursor over the queue's shed log: sheds are recorded by the
+        // queue/batcher (which know nothing about tracing) and turned
+        // into events here, once per batch window.
+        let mut shed_cursor = 0usize;
         // Feed order: arrival time, ties by submission index. The feed
         // holds indices into `requests`; payloads stay in place.
         let mut feed: Vec<usize> = (0..requests.len()).collect();
@@ -305,7 +361,7 @@ impl Server {
                     .expect("feed is non-empty");
                 now = now.max(head);
             }
-            admit_up_to(requests, &mut feed, &mut queue, now);
+            admit_up_to(requests, &mut feed, &mut queue, now, rec);
             let oldest = queue.oldest_arrival().expect("admission filled the queue");
             // The window closes when the batch fills or the oldest
             // request's linger expires; arrivals inside the window
@@ -322,7 +378,11 @@ impl Server {
                     .filter(|&a| a <= dispatch_at);
                 let Some(arrival) = due else { break };
                 let id = feed.pop_front().expect("front was just inspected");
-                queue.offer(id, &requests[id], arrival);
+                if queue.offer(id, &requests[id], arrival) {
+                    if let Some(rec) = rec {
+                        rec.record(arrival, EventKind::Admitted { req: id });
+                    }
+                }
                 if queue.len() >= policy.max_batch {
                     dispatch_at = arrival; // filled early: close here
                 }
@@ -330,6 +390,30 @@ impl Server {
             now = now.max(dispatch_at);
 
             draw_batch_into(&mut queue, &policy, now, &mut self.batch_buf);
+            if let Some(rec) = rec {
+                // Sheds since the last window (queue-full at offer,
+                // deadline expiry at draw), stamped at their own
+                // modeled shed instants.
+                for s in &queue.shed_records()[shed_cursor..] {
+                    rec.record(
+                        s.at,
+                        EventKind::Shed {
+                            req: s.id,
+                            reason: s.reason.label(),
+                        },
+                    );
+                }
+                shed_cursor = queue.shed_records().len();
+                for p in &self.batch_buf {
+                    rec.record(
+                        now,
+                        EventKind::Batched {
+                            req: p.id,
+                            window: batches as u64,
+                        },
+                    );
+                }
+            }
             if self.batch_buf.is_empty() {
                 // Every queued deadline had expired (all shed); reopen
                 // the window at the next arrival.
@@ -372,7 +456,30 @@ impl Server {
                 self.batch_buf.len(),
                 "one report per dispatched request"
             );
+            self.metrics
+                .observe("serve.batch_fill", self.batch_buf.len() as u64);
             for (p, r) in self.batch_buf.drain(..).zip(reports) {
+                if let Some(rec) = rec {
+                    rec.record(now, EventKind::Dispatched { req: p.id, core: r.core });
+                    rec.record(
+                        r.start,
+                        EventKind::ExecStart {
+                            req: p.id,
+                            core: r.core,
+                            name: r.name.clone(),
+                        },
+                    );
+                    rec.record(
+                        r.end,
+                        EventKind::ExecEnd {
+                            req: p.id,
+                            core: r.core,
+                            cycles: r.compute_cycles,
+                            instructions: r.stats.instructions,
+                        },
+                    );
+                    rec.record(r.end, EventKind::Retired { req: p.id, core: r.core });
+                }
                 let res = RequestResult {
                     id: p.id,
                     name: r.name,
@@ -399,6 +506,20 @@ impl Server {
         telemetry.batches = batches as u64;
         telemetry.peak_queue = queue.peak();
         telemetry.shed = queue.shed_count() as u64;
+        // Serving counters accumulate across serve() calls, matching
+        // the fleet's cumulative timeline. Shed reasons are the
+        // breakdown the aggregate telemetry lacks.
+        self.metrics.inc_by("serve.offered", requests.len() as u64);
+        self.metrics.inc_by("serve.served", results.len() as u64);
+        self.metrics.inc_by("serve.batches", batches as u64);
+        self.metrics
+            .inc_by("serve.deadline_missed", telemetry.deadline_missed);
+        self.metrics.inc_by("serve.shed.queue_full", 0);
+        self.metrics.inc_by("serve.shed.deadline_expired", 0);
+        for s in queue.shed_records() {
+            self.metrics
+                .inc(&format!("serve.shed.{}", s.reason.label()));
+        }
         Ok(ServeReport {
             results,
             shed: queue.into_shed(),
@@ -416,10 +537,15 @@ fn admit_up_to(
     feed: &mut VecDeque<usize>,
     queue: &mut AdmissionQueue,
     t: u64,
+    rec: Option<&Recorder>,
 ) {
     while feed.front().is_some_and(|&id| requests[id].arrival <= t) {
         let id = feed.pop_front().expect("front was just inspected");
         let r = &requests[id];
-        queue.offer(id, r, r.arrival);
+        if queue.offer(id, r, r.arrival) {
+            if let Some(rec) = rec {
+                rec.record(r.arrival, EventKind::Admitted { req: id });
+            }
+        }
     }
 }

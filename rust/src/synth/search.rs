@@ -111,6 +111,12 @@ pub struct SynthOptions {
     /// docs). Winner-preserving by construction: disabling only adds
     /// replays (`evaluated` grows), never changes the fleet or score.
     pub prune: bool,
+    /// Run each scoring replay with an event [`crate::obs::Recorder`]
+    /// attached. Scoring reads only the integer telemetry, and
+    /// recording never moves a modeled cycle, so the [`SynthResult`]
+    /// is bit-identical with recording on or off, at any `jobs` —
+    /// pinned by `rust/tests/obs_trace.rs`.
+    pub recording: bool,
 }
 
 impl Default for SynthOptions {
@@ -125,6 +131,7 @@ impl Default for SynthOptions {
             linger_us: 8,
             jobs: 1,
             prune: true,
+            recording: false,
         }
     }
 }
@@ -246,6 +253,7 @@ fn serve_once(
         .max_batch(opts.max_batch)
         .linger_us(opts.linger_us)
         .sequential(sequential)
+        .recording(opts.recording)
         .build()
         .map_err(|e| e.to_string())?;
     let report = server.serve_slice(trace).map_err(|e| e.to_string())?;

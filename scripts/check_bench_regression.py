@@ -13,6 +13,9 @@ regresses more than ``max_regression_pct`` below its floor:
   ``steady_superplan_compiles_max`` (steady-state rounds recompile
   nothing)
 - synthesis ``fleets_per_s`` (frontier-batched fleet-scoring throughput)
+- observability ``overhead_pct`` (wall-clock cost of serving with the
+  event recorder on vs off), gated against an absolute ceiling
+  ``overhead_pct_max`` rather than a relative floor
 
 Modeled quantities are deliberately *not* gated here — bit-identity of
 modeled cycles is the parity test suites' job; this gate only stops
@@ -138,6 +141,28 @@ def main() -> None:
                 errors.append(
                     f"synthesis fleets_per_s: {rate:.1f} is more than "
                     f"{max_reg:.0f}% below the committed floor of {synth_floor}"
+                )
+            checked += 1
+
+    obs_cap = baseline.get("observability", {}).get("overhead_pct_max")
+    if obs_cap is not None:
+        observability = bench.get("observability", {})
+        if "overhead_pct" not in observability:
+            errors.append("observability.overhead_pct missing from the bench output")
+        else:
+            # An absolute ceiling, not a relative floor: tracing must
+            # stay cheap in absolute terms, and negative overhead
+            # (wall-clock noise) is fine.
+            pct = float(observability["overhead_pct"])
+            status = "ok" if pct <= float(obs_cap) else "EXCEEDED"
+            print(
+                f"bench-regression: observability overhead_pct: {pct:.2f}% "
+                f"(cap {obs_cap}%) {status}"
+            )
+            if pct > float(obs_cap):
+                errors.append(
+                    f"observability overhead_pct: {pct:.2f}% exceeds the "
+                    f"tracing-overhead cap of {obs_cap}%"
                 )
             checked += 1
 

@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""CI smoke check for exported Chrome trace files (``--trace-out``).
+
+Validates the structural contract of ``egpu::obs::chrome``, stdlib
+only (no pip deps in CI):
+
+- the document is well-formed JSON with a non-empty ``traceEvents``
+  list and every event carries ``name``/``ph``/``pid``;
+- timestamps are non-negative **integers** (modeled bus cycles — a
+  float would smell of wall clock) and non-decreasing in file order,
+  which is the exporter's deterministic ``(cycle, seq)`` order;
+- async spans balance: every ``"e"`` closes a previously opened
+  ``"b"`` with the same ``(cat, id, name)`` key, and nothing is left
+  open at the end of the file;
+- complete ``"X"`` slices carry a non-negative integer ``dur``;
+- no event leaks wall-clock or host-thread residue (``tts``,
+  ``tdur``, or a ``tid`` that is not a modeled track id) — the same
+  trace must be byte-identical across dispatch modes, which those
+  fields would break.
+
+Usage: check_trace.py TRACE.json
+"""
+
+import json
+import sys
+from collections import defaultdict
+
+KNOWN_PHASES = {"M", "X", "b", "e", "n", "i"}
+WALL_CLOCK_KEYS = {"tts", "tdur", "dts"}
+
+
+def fail(msg: str) -> None:
+    print(f"check-trace: FAIL: {msg}")
+    sys.exit(1)
+
+
+def main() -> None:
+    if len(sys.argv) != 2:
+        fail(f"usage: {sys.argv[0]} TRACE.json")
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+
+    events = doc.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents missing or empty")
+
+    open_spans = defaultdict(int)
+    phases = defaultdict(int)
+    last_ts = None
+    for i, e in enumerate(events):
+        ph = e.get("ph")
+        if ph not in KNOWN_PHASES:
+            fail(f"event {i}: unknown phase {ph!r}")
+        if "name" not in e or "pid" not in e:
+            fail(f"event {i}: missing name/pid")
+        leaked = WALL_CLOCK_KEYS & set(e)
+        if leaked:
+            fail(f"event {i}: wall-clock field(s) {sorted(leaked)} in a modeled trace")
+        phases[ph] += 1
+        if ph == "M":
+            continue  # metadata rows are ts-less
+
+        ts = e.get("ts")
+        if not isinstance(ts, int) or ts < 0:
+            fail(f"event {i}: ts {ts!r} is not a non-negative integer bus cycle")
+        if last_ts is not None and ts < last_ts:
+            fail(f"event {i}: ts {ts} < {last_ts} — file order is not (cycle, seq)")
+        last_ts = ts
+
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, int) or dur < 0:
+                fail(f"event {i}: X slice dur {dur!r} is not a non-negative integer")
+        elif ph == "b":
+            open_spans[(e.get("cat"), e.get("id"), e["name"])] += 1
+        elif ph == "e":
+            key = (e.get("cat"), e.get("id"), e["name"])
+            if open_spans[key] <= 0:
+                fail(f"event {i}: 'e' closes nothing open for {key}")
+            open_spans[key] -= 1
+
+    dangling = sorted(k for k, n in open_spans.items() if n > 0)
+    if dangling:
+        fail(f"{len(dangling)} span(s) never closed, e.g. {dangling[0]}")
+    if phases["b"] + phases["X"] == 0:
+        fail("no spans at all — the trace recorded nothing")
+
+    total = len(events)
+    summary = ", ".join(f"{ph}:{phases[ph]}" for ph in sorted(phases))
+    print(f"check-trace: PASS ({path}: {total} events, {summary})")
+
+
+if __name__ == "__main__":
+    main()
